@@ -1,0 +1,47 @@
+//! The full AWC lifecycle (paper §4) in one binary:
+//!   1. exhaustive (γ, mode) sweeps on a small grid -> labeled dataset;
+//!   2. (training runs in python: `make train-awc`);
+//!   3. evaluate the shipped pretrained controller against the Static
+//!      and Dynamic baselines on a held-out configuration.
+//!
+//!     cargo run --release --example awc_pipeline
+
+use dsd::awc::{generate_dataset, SweepGrid};
+use dsd::config::{BatchingKind, RoutingKind, WindowKind};
+use dsd::experiments::common::{mean_of, paper_config, run_seeds, Scale};
+
+fn main() {
+    // 1. Sweep a reduced grid (the full grid is `dsd sweep-dataset`).
+    let grid = SweepGrid::tiny();
+    let rows = generate_dataset(&grid);
+    println!(
+        "sweep: {} scenarios x {} probes -> {} labeled rows",
+        grid.n_scenarios(),
+        grid.gammas.len() + 1,
+        rows.len()
+    );
+    let path = std::path::Path::new("data/awc_sweep_demo.jsonl");
+    std::fs::create_dir_all("data").ok();
+    dsd::awc::dataset::write_jsonl(&rows, path).expect("write dataset");
+    println!("wrote {} (train with `make train-awc`)", path.display());
+
+    // 3. Evaluate the shipped controller.
+    println!("\nAWC vs baselines (gsm8k, 20T/600D, 10 ms RTT):");
+    println!("{:<10} {:>8} {:>8} {:>8}", "policy", "tput", "TTFT", "TPOT");
+    for (name, w) in [
+        ("static", WindowKind::Static(4)),
+        ("dynamic", WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 }),
+        ("awc", WindowKind::Awc { weights_path: None }),
+    ] {
+        let cfg = paper_config(
+            "gsm8k", 600, 10.0, RoutingKind::Jsq, BatchingKind::Lab, w, Scale(0.5), 1,
+        );
+        let reps = run_seeds(&cfg, &[1, 2]);
+        println!(
+            "{name:<10} {:>8.1} {:>8.0} {:>8.1}",
+            mean_of(&reps, |r| r.system.throughput_rps),
+            mean_of(&reps, |r| r.mean_ttft()),
+            mean_of(&reps, |r| r.mean_tpot()),
+        );
+    }
+}

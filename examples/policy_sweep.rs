@@ -1,0 +1,18 @@
+//! The Figure-5 experiment: accumulate the paper's policy stack
+//! (routing -> batching -> window control) and watch throughput/latency
+//! improve, per dataset.
+//!
+//!     cargo run --release --example policy_sweep
+
+use dsd::experiments::{fig5, Scale};
+
+fn main() {
+    for dataset in ["gsm8k", "cnndm", "humaneval"] {
+        println!("== {dataset} ==");
+        println!("{:<10} {:>10} {:>9} {:>9}", "stack", "tput", "TTFT", "TPOT");
+        for (name, tput, ttft, tpot) in fig5::sweep(dataset, Scale(0.5), &[1, 2]) {
+            println!("{name:<10} {tput:>10.1} {ttft:>9.0} {tpot:>9.1}");
+        }
+        println!();
+    }
+}

@@ -1,0 +1,48 @@
+//! Quickstart: run DSD-Sim on a small edge–cloud deployment and print the
+//! analyzer report — the 30-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use dsd::config::{RoutingKind, SimConfig, WindowKind};
+use dsd::sim::Simulator;
+
+fn main() {
+    // 4 cloud targets (Llama2-70B on 4xA100), 120 edge drafters
+    // (Llama2-7B on A40), 10 ms RTT, GSM8K-profile workload.
+    let cfg = SimConfig::builder()
+        .seed(42)
+        .targets(4)
+        .drafters(120)
+        .rtt_ms(10.0)
+        .dataset("gsm8k")
+        .requests(300)
+        .rate_per_s(25.0)
+        .routing(RoutingKind::Jsq)
+        .window(WindowKind::Static(4))
+        .build();
+
+    let report = Simulator::new(cfg).run();
+    println!("{}", report.summary());
+    println!(
+        "steady throughput {:.1} req/s | p99 TTFT {:.0} ms | p99 TPOT {:.1} ms | mean gamma {:.2}",
+        report.system.throughput_rps,
+        report.p_ttft(99.0),
+        report.p_tpot(99.0),
+        report.mean_gamma(),
+    );
+
+    // Swap one policy and re-run: the whole point of the policy families.
+    let cfg_awc = SimConfig::builder()
+        .seed(42)
+        .targets(4)
+        .drafters(120)
+        .rtt_ms(10.0)
+        .dataset("gsm8k")
+        .requests(300)
+        .rate_per_s(25.0)
+        .routing(RoutingKind::Jsq)
+        .window(WindowKind::Awc { weights_path: None })
+        .build();
+    let awc = Simulator::new(cfg_awc).run();
+    println!("with AWC: {}", awc.summary());
+}

@@ -1,0 +1,18 @@
+//! The Figure-6 experiment as a library call: sweep the edge–cloud RTT
+//! and print where distributed speculative decoding stops paying off.
+//!
+//!     cargo run --release --example rtt_crossover
+
+use dsd::experiments::{fig6, Scale};
+
+fn main() {
+    let (dist, fused) = fig6::sweep(Scale(0.5), &[1, 2]);
+    println!("RTT ms   distributed TPOT   fused TPOT");
+    for (d, f) in dist.iter().zip(&fused) {
+        println!("{:>6.0}   {:>16.1}   {:>10.1}", d.0, d.3, f.3);
+    }
+    match fig6::crossover_rtt(&dist, &fused) {
+        Some(x) => println!("\ncrossover at ~{x:.0} ms (paper: 50-60 ms)"),
+        None => println!("\nno crossover inside the sweep"),
+    }
+}

@@ -1,0 +1,240 @@
+"""AOT lowering: JAX -> HLO **text** artifacts consumed by the rust runtime.
+
+Python's entire job ends here (build time). The pipeline:
+
+  1. Train (or load cached) draft/target tiny-GPT weights.
+  2. Lower each serving entry point — prefill / decode_step / verify(γ) —
+     with the weights **baked in as constants** (closure capture), so the
+     rust side passes only tokens/positions/KV caches.
+  3. Lower the WC-DNN forward from the pretrained JSON weights.
+  4. Write ``artifacts/manifest.json`` describing every artifact's
+     operands and result shapes.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import wcdnn
+from .train_lm import flatten_params, train_pair, unflatten_params
+
+# Window sizes with a pre-lowered verify artifact. The coordinator clamps
+# AWC decisions to the nearest available γ on the real path.
+VERIFY_GAMMAS = [1, 2, 3, 4, 6, 8]
+
+# Fixed padded prompt length for the prefill artifacts.
+PROMPT_PAD = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    Two print options matter:
+      * ``print_large_constants=True`` — the default printer elides big
+        constants as ``{...}``, which silently zeroes the baked-in model
+        weights when the text is re-parsed;
+      * ``print_metadata=False`` — jax >= 0.7 emits ``source_end_line``
+        metadata attributes the 0.5.1 HLO parser rejects.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_model_artifacts(params, cfg: M.GptConfig, tag: str, out_dir: str,
+                          manifest: dict, with_verify: bool = True):
+    """Lower prefill / decode / (optionally) verify(γ) for one model.
+
+    Draft models never verify, so their γ-windows are skipped to keep the
+    artifact set small (each target verify artifact carries the full
+    weight constants, ~50 MB of HLO text)."""
+    kv_shape = (cfg.n_layer, 2, cfg.n_head, cfg.max_len, cfg.head_dim)
+    kv_spec = jax.ShapeDtypeStruct(kv_shape, jnp.float32)
+    i32 = jnp.int32
+
+    # --- prefill(tokens[PROMPT_PAD], length) ---
+    def prefill_fn(tokens, length):
+        logits, kv = M.prefill(params, cfg, tokens, length)
+        return (logits, kv)
+
+    lowered = jax.jit(prefill_fn).lower(
+        jax.ShapeDtypeStruct((PROMPT_PAD,), i32),
+        jax.ShapeDtypeStruct((), i32),
+    )
+    path = f"{tag}_prefill.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][f"{tag}_prefill"] = {
+        "path": path,
+        "operands": [
+            {"name": "tokens", "shape": [PROMPT_PAD], "dtype": "s32"},
+            {"name": "length", "shape": [], "dtype": "s32"},
+        ],
+        "results": [
+            {"name": "logits", "shape": [M.VOCAB], "dtype": "f32"},
+            {"name": "kv", "shape": list(kv_shape), "dtype": "f32"},
+        ],
+    }
+
+    # --- decode_step(token, pos, kv) ---
+    def decode_fn(token, pos, kv):
+        logits, kv = M.decode_step(params, cfg, token, pos, kv)
+        return (logits, kv)
+
+    lowered = jax.jit(decode_fn).lower(
+        jax.ShapeDtypeStruct((), i32),
+        jax.ShapeDtypeStruct((), i32),
+        kv_spec,
+    )
+    path = f"{tag}_decode.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][f"{tag}_decode"] = {
+        "path": path,
+        "operands": [
+            {"name": "token", "shape": [], "dtype": "s32"},
+            {"name": "pos", "shape": [], "dtype": "s32"},
+            {"name": "kv", "shape": list(kv_shape), "dtype": "f32"},
+        ],
+        "results": [
+            {"name": "logits", "shape": [M.VOCAB], "dtype": "f32"},
+            {"name": "kv", "shape": list(kv_shape), "dtype": "f32"},
+        ],
+    }
+
+    # --- verify_g{γ}(tokens[γ+1], pos, kv) ---
+    for g in VERIFY_GAMMAS if with_verify else []:
+        g1 = g + 1
+
+        def verify_fn(tokens, pos, kv):
+            logits, kv = M.verify(params, cfg, tokens, pos, kv)
+            return (logits, kv)
+
+        lowered = jax.jit(verify_fn).lower(
+            jax.ShapeDtypeStruct((g1,), i32),
+            jax.ShapeDtypeStruct((), i32),
+            kv_spec,
+        )
+        path = f"{tag}_verify_g{g}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"][f"{tag}_verify_g{g}"] = {
+            "path": path,
+            "operands": [
+                {"name": "tokens", "shape": [g1], "dtype": "s32"},
+                {"name": "pos", "shape": [], "dtype": "s32"},
+                {"name": "kv", "shape": list(kv_shape), "dtype": "f32"},
+            ],
+            "results": [
+                {"name": "logits", "shape": [g1, M.VOCAB], "dtype": "f32"},
+                {"name": "kv", "shape": list(kv_shape), "dtype": "f32"},
+            ],
+        }
+
+
+def lower_wcdnn(weights_json: str, out_dir: str, manifest: dict):
+    """Lower the WC-DNN forward (weights baked in) to wcdnn.hlo.txt."""
+    params, feat_mean, feat_std = wcdnn.from_json_file(weights_json)
+
+    def fwd(x):
+        return (wcdnn.apply(params, x, feat_mean, feat_std, use_kernel=True),)
+
+    lowered = jax.jit(fwd).lower(jax.ShapeDtypeStruct((5,), jnp.float32))
+    path = "wcdnn.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["wcdnn"] = {
+        "path": path,
+        "operands": [{"name": "features", "shape": [5], "dtype": "f32"}],
+        "results": [{"name": "gamma", "shape": [], "dtype": "f32"}],
+    }
+
+
+def get_or_train_weights(out_dir: str, quick: bool):
+    """Load cached LM weights or train the pair."""
+    cache = os.path.join(out_dir, "lm_weights.npz")
+    if os.path.exists(cache):
+        flat = dict(np.load(cache))
+        draft = unflatten_params(flat, M.DRAFT_CONFIG, "draft_")
+        target = unflatten_params(flat, M.TARGET_CONFIG, "target_")
+        print(f"[aot] loaded cached LM weights from {cache}")
+        return draft, target
+    # The drafter needs more steps than the target to become a useful
+    # speculator (its 2-layer capacity converges slowly; acceptance rate
+    # on the serving path tracks its loss closely).
+    draft, target, meta = train_pair(
+        draft_steps=100 if quick else 900,
+        target_steps=60 if quick else 240,
+    )
+    flat = {}
+    flat.update(flatten_params(draft, "draft_"))
+    flat.update(flatten_params(target, "target_"))
+    np.savez(cache, **{k: np.asarray(v) for k, v in flat.items()})
+    print(f"[aot] trained LM pair: {meta}")
+    return draft, target
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--wcdnn-weights", default="pretrained/wcdnn_weights.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer training steps (CI smoke)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "vocab": M.VOCAB,
+        "prompt_pad": PROMPT_PAD,
+        "verify_gammas": VERIFY_GAMMAS,
+        "draft": {
+            "n_layer": M.DRAFT_CONFIG.n_layer,
+            "n_head": M.DRAFT_CONFIG.n_head,
+            "d_model": M.DRAFT_CONFIG.d_model,
+            "max_len": M.DRAFT_CONFIG.max_len,
+        },
+        "target": {
+            "n_layer": M.TARGET_CONFIG.n_layer,
+            "n_head": M.TARGET_CONFIG.n_head,
+            "d_model": M.TARGET_CONFIG.d_model,
+            "max_len": M.TARGET_CONFIG.max_len,
+        },
+        "artifacts": {},
+    }
+
+    draft, target = get_or_train_weights(args.out, args.quick)
+    print("[aot] lowering draft model ...", flush=True)
+    lower_model_artifacts(draft, M.DRAFT_CONFIG, "draft", args.out, manifest,
+                          with_verify=False)
+    print("[aot] lowering target model ...", flush=True)
+    lower_model_artifacts(target, M.TARGET_CONFIG, "target", args.out, manifest)
+    print("[aot] lowering wcdnn ...", flush=True)
+    lower_wcdnn(args.wcdnn_weights, args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    n = len(manifest["artifacts"])
+    print(f"[aot] wrote {n} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Tiny built-in training corpus for the stand-in draft/target LM pair.
+
+The paper's workloads (GSM8K / CNN-DailyMail / HumanEval) are not
+available offline, so the real-serving demo trains both models on a small
+synthetic corpus mixing the three task *shapes*: arithmetic word-problem
+reasoning, news-style summaries, and python function bodies. What matters
+for the reproduction is not linguistic quality but that (a) the models
+share a distribution so the draft attains a non-trivial acceptance rate,
+and (b) prompts look like the three benchmark families.
+"""
+
+from __future__ import annotations
+
+_MATH = """\
+question: tom has {a} apples and buys {b} more. how many apples does tom have?
+answer: tom starts with {a} apples. he buys {b} more. {a} + {b} = {c}. the answer is {c}.
+question: a train travels {a} miles each hour for {b} hours. how far does it go?
+answer: the train covers {a} miles per hour. over {b} hours it travels {a} * {b} = {d}. the answer is {d}.
+"""
+
+_NEWS = """\
+article: the city council voted on tuesday to approve the new transit plan. officials said the project will add {a} miles of track and create {b} jobs over the next decade.
+summary: council approves transit plan adding {a} miles of track and {b} jobs.
+article: researchers announced a study of {a} patients showing improved outcomes. the trial ran for {b} months across several hospitals.
+summary: study of {a} patients over {b} months shows improved outcomes.
+"""
+
+_CODE = """\
+def add(a, b):
+    return a + b
+
+def scale(xs, k):
+    out = []
+    for x in xs:
+        out.append(x * k)
+    return out
+
+def count_words(text):
+    words = text.split()
+    total = len(words)
+    return total
+
+def fib(n):
+    if n < 2:
+        return n
+    return fib(n - 1) + fib(n - 2)
+"""
+
+
+def build_corpus() -> bytes:
+    """Deterministic ~64 KiB byte corpus."""
+    parts = []
+    for i in range(40):
+        a, b = 3 + (i * 7) % 50, 2 + (i * 5) % 30
+        parts.append(_MATH.format(a=a, b=b, c=a + b, d=a * b))
+        parts.append(_NEWS.format(a=a, b=b))
+        parts.append(_CODE)
+    text = "\n".join(parts)
+    return text.encode("utf-8")
+
+
+def sample_prompts(kind: str, n: int):
+    """Prompts shaped like the three benchmark families (byte strings)."""
+    prompts = []
+    for i in range(n):
+        a, b = 3 + (i * 11) % 50, 2 + (i * 3) % 30
+        if kind == "gsm8k":
+            p = f"question: tom has {a} apples and buys {b} more. how many apples does tom have?\nanswer:"
+        elif kind == "cnndm":
+            p = (
+                f"article: the city council voted on tuesday to approve the new transit plan. "
+                f"officials said the project will add {a} miles of track and create {b} jobs over the next decade.\nsummary:"
+            )
+        else:  # humaneval
+            p = "def add(a, b):\n"
+        prompts.append(p.encode("utf-8"))
+    return prompts

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: single-query flash-decode attention over a KV cache.
+
+The hot-spot of speculative decoding's *drafting* loop: one new query
+attends to every cached position. On TPU this is a bandwidth-bound
+workload; the kernel expresses the HBM->VMEM schedule with a BlockSpec
+grid over KV blocks and an online-softmax accumulator in VMEM scratch —
+the TPU analogue of a CUDA flash-decode threadblock staging tiles through
+shared memory (DESIGN.md §Hardware-Adaptation).
+
+Shapes (single sequence; the rust coordinator batches at the scheduling
+layer):
+    length   : (1,) int32    number of valid cache positions (SMEM)
+    q        : (H, D)        new token's query per head
+    k_cache  : (H, L, D)     keys,   L = max sequence length
+    v_cache  : (H, L, D)     values
+    -> out   : (H, D)
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# KV positions processed per grid step: one 128-lane VMEM stripe.
+BLOCK_L = 128
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    """One (head, kv-block) grid step of online-softmax attention.
+
+    Grid: (H, L // BLOCK_L); the kv-block axis is innermost and
+    sequential, so the VMEM scratch (acc, m, l) carries the standard
+    flash recurrence across blocks:
+        m' = max(m, max(s));  l' = l*exp(m-m') + sum(exp(s-m'))
+        acc' = acc*exp(m-m') + exp(s-m') @ V
+    """
+    kv_block = pl.program_id(1)
+    length = len_ref[0]
+
+    q = q_ref[...]    # (1, D)  — head-sliced
+    k = k_ref[0]      # (BLOCK_L, D)
+    v = v_ref[0]      # (BLOCK_L, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, BLOCK_L)
+    d = q.shape[-1]
+    s = s * (1.0 / (d ** 0.5))
+
+    pos = kv_block * BLOCK_L + jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK_L), 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    @pl.when(kv_block == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    m_prev = m_ref[...]       # (1, 1)
+    l_prev = l_ref[...]       # (1, 1)
+    acc_prev = acc_ref[...]   # (1, D)
+
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)
+    l_new = l_prev * scale + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * scale + jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(kv_block == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def decode_attention(length, q, k_cache, v_cache):
+    """Single-query flash-decode attention (Pallas, interpret mode).
+
+    Args:
+        length: (1,) int32 — valid cache positions (>= 1).
+        q: (H, D) float32 query.
+        k_cache: (H, L, D) float32 keys; L a multiple of ``BLOCK_L``.
+        v_cache: (H, L, D) float32 values.
+    Returns:
+        (H, D) float32 attention output.
+    """
+    h, d = q.shape
+    _, l, _ = k_cache.shape
+    assert l % BLOCK_L == 0, f"cache length {l} must be a multiple of {BLOCK_L}"
+    grid = (h, l // BLOCK_L)
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                    # length
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),                # q head row
+            pl.BlockSpec((1, BLOCK_L, d), lambda i, j: (i, j, 0)),    # K tile
+            pl.BlockSpec((1, BLOCK_L, d), lambda i, j: (i, j, 0)),    # V tile
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),  # acc
+            pltpu.VMEM((1, 1), jnp.float32),  # running max
+            pltpu.VMEM((1, 1), jnp.float32),  # running denom
+        ],
+        interpret=True,
+    )(length, q, k_cache, v_cache)
+
+
+def vmem_footprint_bytes(h: int, l: int, d: int) -> int:
+    """Estimated per-step VMEM residency of the kernel (for §Perf):
+    q tile + K tile + V tile + scratch, in float32 bytes."""
+    per_head = d + 2 * BLOCK_L * d + d + 2
+    return 4 * per_head  # one head in flight per grid step

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: fused residual-MLP block (the WC-DNN building block).
+
+One block of the window-control network (paper §4.3):
+
+    out = h + W2 @ silu(W1 @ h + b1) + b2
+
+Fusing both GEMVs and the activation into a single kernel keeps the
+intermediate in VMEM (no HBM round-trip between the two layers) — the
+same fusion a CUDA implementation would do with a persistent threadblock.
+The hidden width (64) is small enough that everything fits in one VMEM
+block, so the grid is trivial; the value of the kernel is the fusion, not
+the tiling.
+
+Shapes:
+    h  : (1, H)  float32
+    w1 : (H, H)  float32 (row-major, y = x @ W.T + b convention)
+    b1 : (1, H)
+    w2 : (H, H)
+    b2 : (1, H)
+    -> (1, H)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _resblock_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    h = h_ref[...]
+    z = jnp.dot(h, w1_ref[...].T, preferred_element_type=jnp.float32) + b1_ref[...]
+    z = z * jax.nn.sigmoid(z)  # SiLU
+    y = jnp.dot(z, w2_ref[...].T, preferred_element_type=jnp.float32) + b2_ref[...]
+    o_ref[...] = h + y
+
+
+def residual_mlp_block(h, w1, b1, w2, b2):
+    """Fused residual MLP block (Pallas, interpret mode).
+
+    Args:
+        h: (1, H) activations.
+        w1, w2: (H, H) weights (``y = x @ W.T + b``).
+        b1, b2: (1, H) biases.
+    Returns:
+        (1, H) block output.
+    """
+    _, hidden = h.shape
+    return pl.pallas_call(
+        _resblock_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, hidden), jnp.float32),
+        interpret=True,
+    )(h, w1, b1, w2, b2)

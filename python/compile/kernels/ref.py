@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: pytest checks each Pallas kernel
+against its oracle with ``assert_allclose`` over hypothesis-swept shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(length, q, k_cache, v_cache):
+    """Reference single-query attention with length masking.
+
+    Args/returns mirror ``attention.decode_attention``.
+    """
+    h, d = q.shape
+    _, l, _ = k_cache.shape
+    scores = jnp.einsum("hd,hld->hl", q, k_cache) / (d ** 0.5)
+    pos = jnp.arange(l)[None, :]
+    scores = jnp.where(pos < length[0], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hl,hld->hd", w, v_cache)
+
+
+def verify_tokens_ref(draft, logits):
+    """Reference greedy verification.
+
+    Args/returns mirror ``verify.verify_tokens``.
+    """
+    arg = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    acc = (draft == arg).astype(jnp.int32)
+    return arg, acc
+
+
+def residual_mlp_block_ref(h, w1, b1, w2, b2):
+    """Reference residual MLP block (mirrors ``mlp.residual_mlp_block``)."""
+    z = h @ w1.T + b1
+    z = z * jax.nn.sigmoid(z)
+    return h + z @ w2.T + b2
+
+
+def fold_acceptance(accept_mask, argmax_tokens, gamma):
+    """Reduce kernel outputs to the paper's acceptance rule: number of
+    accepted draft tokens (stop at first mismatch) and the target token
+    emitted after them (correction on mismatch, bonus on all-accept).
+
+    Args:
+        accept_mask: (G+1,) int array (row G is always 0).
+        argmax_tokens: (G+1,) int array.
+        gamma: int window size G.
+    Returns:
+        (n_accepted, next_token) python ints.
+    """
+    n = 0
+    for i in range(gamma):
+        if int(accept_mask[i]) == 1:
+            n += 1
+        else:
+            break
+    return n, int(argmax_tokens[n])

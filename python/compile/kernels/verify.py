@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: parallel speculative verification.
+
+Given the target model's logits for the `G+1` positions of a speculation
+window and the drafter's `G` proposed tokens, compute (greedy acceptance,
+paper Fig. 1(c)):
+
+  * ``argmax_tokens[i]`` — the target's own choice at each position,
+  * ``accept_mask[i]``  — whether draft token i matches the target.
+
+The rust coordinator folds the mask to the first mismatch and picks the
+correction/bonus token from ``argmax_tokens``; the kernel does the
+data-parallel heavy part (a blocked argmax over the vocabulary — a pure
+VPU reduction on TPU, tiled so each (position, vocab-block) stripe sits in
+VMEM).
+
+Shapes:
+    logits : (G1, V)  float32, G1 = G + 1 rows
+    draft  : (G1,)    int32, draft tokens padded with -1 in row G
+    -> argmax_tokens : (G1,) int32
+    -> accept_mask   : (G1,) int32   (1 = match; row G always 0)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Vocabulary slice per grid step (lane-width multiple).
+BLOCK_V = 128
+
+NEG_INF = -1e30
+
+
+def _verify_kernel(draft_ref, logits_ref, tok_ref, acc_ref, best_ref, arg_ref):
+    """Grid: (G1, V // BLOCK_V): blocked argmax with VMEM scratch carry."""
+    row = pl.program_id(0)
+    vb = pl.program_id(1)
+
+    x = logits_ref[...]  # (1, BLOCK_V)
+
+    @pl.when(vb == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    cur_best = best_ref[0, 0]
+    cur_arg = arg_ref[0, 0]
+
+    blk_best = jnp.max(x)
+    blk_off = jnp.argmax(x[0]).astype(jnp.int32)
+    blk_arg = vb * BLOCK_V + blk_off
+
+    take = blk_best > cur_best
+    best_ref[0, 0] = jnp.where(take, blk_best, cur_best)
+    arg_ref[0, 0] = jnp.where(take, blk_arg, cur_arg)
+
+    @pl.when(vb == pl.num_programs(1) - 1)
+    def _emit():
+        winner = arg_ref[0, 0]
+        tok_ref[0] = winner
+        acc_ref[0] = jnp.where(draft_ref[row] == winner, 1, 0).astype(jnp.int32)
+
+
+def verify_tokens(draft, logits):
+    """Blocked greedy-verification kernel (Pallas, interpret mode).
+
+    Args:
+        draft: (G1,) int32 draft tokens (row G padded with -1 — it can
+            never match, so its mask is 0 and its argmax row supplies the
+            bonus token).
+        logits: (G1, V) float32 target logits; V a multiple of
+            ``BLOCK_V``.
+    Returns:
+        (argmax_tokens, accept_mask): each (G1,) int32.
+    """
+    g1, v = logits.shape
+    assert v % BLOCK_V == 0, f"vocab {v} must be a multiple of {BLOCK_V}"
+    grid = (g1, v // BLOCK_V)
+    return pl.pallas_call(
+        _verify_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # draft tokens
+            pl.BlockSpec((1, BLOCK_V), lambda i, j: (i, j)),       # logit tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),                 # argmax token
+            pl.BlockSpec((1,), lambda i, j: (i,)),                 # accept bit
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g1,), jnp.int32),
+            jax.ShapeDtypeStruct((g1,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),  # best logit so far
+            pltpu.VMEM((1, 1), jnp.int32),    # its index
+        ],
+        interpret=True,
+    )(draft, logits)

@@ -1,0 +1,293 @@
+"""L2: the draft/target tiny-GPT language models in JAX.
+
+The paper serves Qwen/Llama pairs; this repo's *real* serving path uses a
+distilled stand-in pair (DESIGN.md §4): byte-level GPTs sharing a
+tokenizer (vocab = 256), the draft small (2 layers, d=128) and the target
+larger (4 layers, d=256), both trained on the same tiny corpus by
+``train_lm.py`` so the draft actually tracks the target (non-trivial
+acceptance rate).
+
+Three entry points per model are AOT-lowered to HLO text and driven from
+rust (KV caches are explicit operands — state lives in the rust
+coordinator, never in python):
+
+  * ``prefill(params, tokens[P], length) -> (logits[V], kv)``
+  * ``decode_step(params, token, pos, kv) -> (logits[V], kv)``
+  * ``verify(params, tokens[G1], pos, kv) -> (logits[G1, V], kv)``
+
+``decode_step`` routes its attention through the L1 Pallas flash-decode
+kernel so the kernel lowers into the shipped artifact; prefill/verify use
+dense masked attention (a prefill-style compute pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention
+
+VOCAB = 256  # byte-level
+
+
+class GptConfig(NamedTuple):
+    """Architecture hyper-parameters."""
+
+    n_layer: int
+    n_head: int
+    d_model: int
+    max_len: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+
+# The serving pair. max_len bounds prompt + output; multiples of 128 keep
+# the Pallas BLOCK_L tiling exact.
+DRAFT_CONFIG = GptConfig(n_layer=2, n_head=4, d_model=128, max_len=384)
+TARGET_CONFIG = GptConfig(n_layer=4, n_head=8, d_model=256, max_len=384)
+
+
+def init_params(rng, cfg: GptConfig):
+    """Initialize GPT parameters (dict pytree)."""
+    keys = jax.random.split(rng, 4 + 6 * cfg.n_layer)
+    k = iter(keys)
+    scale = 0.02
+    p = {
+        "wte": jax.random.normal(next(k), (VOCAB, cfg.d_model)) * scale,
+        "wpe": jax.random.normal(next(k), (cfg.max_len, cfg.d_model)) * scale,
+        "ln_f_g": jnp.ones((cfg.d_model,)),
+        "ln_f_b": jnp.zeros((cfg.d_model,)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layer):
+        d = cfg.d_model
+        p["layers"].append(
+            {
+                "ln1_g": jnp.ones((d,)),
+                "ln1_b": jnp.zeros((d,)),
+                "qkv_w": jax.random.normal(next(k), (d, 3 * d)) * scale,
+                "qkv_b": jnp.zeros((3 * d,)),
+                "proj_w": jax.random.normal(next(k), (d, d)) * scale,
+                "proj_b": jnp.zeros((d,)),
+                "ln2_g": jnp.ones((d,)),
+                "ln2_b": jnp.zeros((d,)),
+                "fc_w": jax.random.normal(next(k), (d, 4 * d)) * scale,
+                "fc_b": jnp.zeros((4 * d,)),
+                "fc2_w": jax.random.normal(next(k), (4 * d, d)) * scale,
+                "fc2_b": jnp.zeros((d,)),
+            }
+        )
+    return p
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def empty_kv(cfg: GptConfig):
+    """Fresh KV cache: (n_layer, 2, n_head, max_len, head_dim) zeros."""
+    return jnp.zeros(
+        (cfg.n_layer, 2, cfg.n_head, cfg.max_len, cfg.head_dim), jnp.float32
+    )
+
+
+def _split_heads(x, cfg: GptConfig):
+    # (T, d) -> (H, T, hd)
+    t = x.shape[0]
+    return x.reshape(t, cfg.n_head, cfg.head_dim).transpose(1, 0, 2)
+
+
+def _merge_heads(x, cfg: GptConfig):
+    # (H, T, hd) -> (T, d)
+    return x.transpose(1, 0, 2).reshape(-1, cfg.d_model)
+
+
+def _block_dense(p, cfg: GptConfig, x, kv_layer, start, t_valid):
+    """Dense (training/prefill/verify) transformer block over T positions
+    starting at absolute position `start`; writes K/V into the cache.
+
+    Causal mask within the chunk + full visibility of cache positions
+    < start. Returns (x_out, new_kv_layer).
+    """
+    t = x.shape[0]
+    h = _ln(x, p["ln1_g"], p["ln1_b"])
+    qkv = h @ p["qkv_w"] + p["qkv_b"]
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    qh = _split_heads(q, cfg)            # (H, T, hd)
+    kh = _split_heads(k_new, cfg)
+    vh = _split_heads(v_new, cfg)
+
+    # Write new K/V into the cache at [start, start+T).
+    kc = jax.lax.dynamic_update_slice(kv_layer[0], kh, (0, start, 0))
+    vc = jax.lax.dynamic_update_slice(kv_layer[1], vh, (0, start, 0))
+
+    # Attend over the full cache with a validity+causal mask.
+    scores = jnp.einsum("htd,hld->htl", qh, kc) / (cfg.head_dim ** 0.5)
+    l_pos = jnp.arange(cfg.max_len)[None, None, :]          # cache position
+    q_pos = (start + jnp.arange(t))[None, :, None]          # query position
+    mask = (l_pos <= q_pos) & (l_pos < start + t_valid)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    att = jnp.einsum("htl,hld->htd", w, vc)
+    x = x + _merge_heads(att, cfg) @ p["proj_w"] + p["proj_b"]
+
+    h2 = _ln(x, p["ln2_g"], p["ln2_b"])
+    ff = jax.nn.gelu(h2 @ p["fc_w"] + p["fc_b"])
+    x = x + ff @ p["fc2_w"] + p["fc2_b"]
+    return x, jnp.stack([kc, vc])
+
+
+def _block_decode(p, cfg: GptConfig, x, kv_layer, pos):
+    """Single-token decode block: attention via the L1 Pallas kernel."""
+    h = _ln(x, p["ln1_g"], p["ln1_b"])
+    qkv = h @ p["qkv_w"] + p["qkv_b"]     # (1, 3d)
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    qh = q.reshape(cfg.n_head, cfg.head_dim)                     # (H, hd)
+    kh = k_new.reshape(1, cfg.n_head, cfg.head_dim).transpose(1, 0, 2)
+    vh = v_new.reshape(1, cfg.n_head, cfg.head_dim).transpose(1, 0, 2)
+
+    kc = jax.lax.dynamic_update_slice(kv_layer[0], kh, (0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(kv_layer[1], vh, (0, pos, 0))
+
+    # L1 kernel: query attends to positions [0, pos].
+    length = (pos + 1).reshape(1).astype(jnp.int32)
+    att = decode_attention(length, qh, kc, vc)                   # (H, hd)
+    x = x + att.reshape(1, cfg.d_model) @ p["proj_w"] + p["proj_b"]
+
+    h2 = _ln(x, p["ln2_g"], p["ln2_b"])
+    ff = jax.nn.gelu(h2 @ p["fc_w"] + p["fc_b"])
+    x = x + ff @ p["fc2_w"] + p["fc2_b"]
+    return x, jnp.stack([kc, vc])
+
+
+def prefill(params, cfg: GptConfig, tokens, length):
+    """Prefill a (padded) prompt.
+
+    Args:
+        tokens: (P,) int32, padded with zeros past `length`.
+        length: () int32 true prompt length (1 <= length <= P).
+    Returns:
+        (logits_last, kv): logits at the final valid position, full cache.
+    """
+    p = tokens.shape[0]
+    x = params["wte"][tokens] + params["wpe"][:p]
+    kv = empty_kv(cfg)
+    new_layers = []
+    for li, lp in enumerate(params["layers"]):
+        x, kv_l = _block_dense(lp, cfg, x, kv[li], 0, length)
+        new_layers.append(kv_l)
+    kv = jnp.stack(new_layers)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["wte"].T                                  # (P, V)
+    last = logits[jnp.maximum(length - 1, 0)]
+    return last, kv
+
+
+def decode_step(params, cfg: GptConfig, token, pos, kv):
+    """One autoregressive decode step at absolute position `pos`.
+
+    Args:
+        token: () int32 the token at `pos`.
+        pos: () int32.
+        kv: the cache (valid through pos-1).
+    Returns:
+        (logits, kv): next-token logits (V,), cache now valid through pos.
+    """
+    x = params["wte"][token][None, :] + params["wpe"][pos][None, :]
+    new_layers = []
+    for li, lp in enumerate(params["layers"]):
+        x, kv_l = _block_decode(lp, cfg, x, kv[li], pos)
+        new_layers.append(kv_l)
+    kv = jnp.stack(new_layers)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"])
+    return (x @ params["wte"].T)[0], kv
+
+
+def verify(params, cfg: GptConfig, tokens, pos, kv):
+    """Score a speculation window in one pass (paper Fig. 1(c), step 2).
+
+    Args:
+        tokens: (G1,) int32 — the last accepted token followed by the G
+            draft tokens; they occupy absolute positions [pos, pos+G1).
+        pos: () int32 start position.
+        kv: cache valid through pos-1.
+    Returns:
+        (logits, kv): (G1, V) logits (row i predicts position pos+i+1),
+        cache with the window written (rust rolls back by position).
+    """
+    g1 = tokens.shape[0]
+    pos_idx = pos + jnp.arange(g1)
+    x = params["wte"][tokens] + params["wpe"][pos_idx]
+    new_layers = []
+    for li, lp in enumerate(params["layers"]):
+        x, kv_l = _block_dense(lp, cfg, x, kv[li], pos, jnp.int32(g1))
+        new_layers.append(kv_l)
+    kv = jnp.stack(new_layers)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"])
+    return x @ params["wte"].T, kv
+
+
+def _block_train(p, cfg: GptConfig, x):
+    """Cache-free causal block for training (batched over leading dim)."""
+    t = x.shape[-2]
+    h = _ln(x, p["ln1_g"], p["ln1_b"])
+    qkv = h @ p["qkv_w"] + p["qkv_b"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):  # (..., T, d) -> (..., H, T, hd)
+        return z.reshape(*z.shape[:-1], t, -1) if False else z
+
+    # (B, T, d) -> (B, H, T, hd)
+    def sh(z):
+        b = z.shape[0]
+        return z.reshape(b, t, cfg.n_head, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = sh(q), sh(k), sh(v)
+    scores = jnp.einsum("bhtd,bhld->bhtl", qh, kh) / (cfg.head_dim ** 0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jnp.einsum("bhtl,bhld->bhtd", jax.nn.softmax(scores, axis=-1), vh)
+    att = att.transpose(0, 2, 1, 3).reshape(*x.shape)
+    x = x + att @ p["proj_w"] + p["proj_b"]
+    h2 = _ln(x, p["ln2_g"], p["ln2_b"])
+    ff = jax.nn.gelu(h2 @ p["fc_w"] + p["fc_b"])
+    return x + ff @ p["fc2_w"] + p["fc2_b"]
+
+
+def loss_fn(params, cfg: GptConfig, batch):
+    """Next-token cross-entropy over a (B, T+1) token batch (training).
+
+    Uses the cache-free causal path (identical math to the serving path;
+    the equivalence is asserted by ``tests/test_model.py``).
+    """
+    tokens = batch[:, :-1]
+    targets = batch[:, 1:]
+    t = tokens.shape[1]
+    x = params["wte"][tokens] + params["wpe"][:t][None]
+    for lp in params["layers"]:
+        x = _block_train(lp, cfg, x)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"])
+    logits = x @ params["wte"].T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---- Convenience jitted closures over a config ----
+
+
+def make_fns(cfg: GptConfig):
+    """Bind a config; returns (prefill_fn, decode_fn, verify_fn) suitable
+    for both eager use (tests, training eval) and AOT lowering."""
+    return (
+        functools.partial(prefill, cfg=cfg),
+        functools.partial(decode_step, cfg=cfg),
+        functools.partial(verify, cfg=cfg),
+    )

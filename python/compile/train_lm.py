@@ -1,0 +1,122 @@
+"""Build-time training of the draft/target tiny-GPT pair.
+
+Both models train on the same byte corpus (``corpus.py``) with a plain
+Adam loop; the shared distribution is what gives the drafter a useful
+acceptance rate against the target at serving time. Weights are cached as
+``artifacts/lm_weights.npz`` so ``make artifacts`` is idempotent.
+
+This runs ONCE at build time — never on the request path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .corpus import build_corpus
+
+SEQ_LEN = 128
+BATCH = 16
+
+
+def _batches(data: np.ndarray, rng: np.random.Generator, steps: int):
+    n = len(data) - SEQ_LEN - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=BATCH)
+        yield np.stack([data[i : i + SEQ_LEN + 1] for i in idx])
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=3e-4, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train_model(cfg: M.GptConfig, steps: int, seed: int, data: np.ndarray, tag: str):
+    """Train one GPT; returns (params, loss_history)."""
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(lambda p: M.loss_fn(p, cfg, batch))(params)
+        params, opt = adam_step(params, grads, opt)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(_batches(data, rng, steps)):
+        params, opt, loss = step(params, opt, jnp.asarray(batch))
+        if i % 25 == 0 or i == steps - 1:
+            losses.append(float(loss))
+            print(f"[train_lm:{tag}] step {i:4d} loss {float(loss):.3f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params, losses
+
+
+def flatten_params(params, prefix=""):
+    """Flatten the param pytree to {name: array} for npz storage."""
+    flat = {}
+    flat[f"{prefix}wte"] = params["wte"]
+    flat[f"{prefix}wpe"] = params["wpe"]
+    flat[f"{prefix}ln_f_g"] = params["ln_f_g"]
+    flat[f"{prefix}ln_f_b"] = params["ln_f_b"]
+    for i, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            flat[f"{prefix}l{i}_{k}"] = v
+    return flat
+
+
+def unflatten_params(flat, cfg: M.GptConfig, prefix=""):
+    """Inverse of ``flatten_params``."""
+    params = {
+        "wte": jnp.asarray(flat[f"{prefix}wte"]),
+        "wpe": jnp.asarray(flat[f"{prefix}wpe"]),
+        "ln_f_g": jnp.asarray(flat[f"{prefix}ln_f_g"]),
+        "ln_f_b": jnp.asarray(flat[f"{prefix}ln_f_b"]),
+        "layers": [],
+    }
+    for i in range(cfg.n_layer):
+        keys = [
+            "ln1_g", "ln1_b", "qkv_w", "qkv_b", "proj_w", "proj_b",
+            "ln2_g", "ln2_b", "fc_w", "fc_b", "fc2_w", "fc2_b",
+        ]
+        params["layers"].append(
+            {k: jnp.asarray(flat[f"{prefix}l{i}_{k}"]) for k in keys}
+        )
+    return params
+
+
+def train_pair(draft_steps: int = 900, target_steps: int = 240, seed: int = 0):
+    """Train both models; returns (draft_params, target_params, meta)."""
+    data = np.frombuffer(build_corpus(), dtype=np.uint8).astype(np.int32)
+    target_params, target_losses = train_model(
+        M.TARGET_CONFIG, target_steps, seed + 1, data, "target"
+    )
+    draft_params, draft_losses = train_model(
+        M.DRAFT_CONFIG, draft_steps, seed + 2, data, "draft"
+    )
+    meta = {
+        "draft_final_loss": draft_losses[-1],
+        "target_final_loss": target_losses[-1],
+    }
+    return draft_params, target_params, meta

@@ -1,0 +1,124 @@
+"""Train the WC-DNN on sweep data from DSD-Sim (paper §4.2-4.3).
+
+Reads the JSONL produced by ``dsd sweep-dataset`` (rows of
+``{features: [5], label_gamma, ...}``), normalizes features, and trains
+the residual MLP with **L1 loss / AdamW / 100 epochs** exactly as the
+paper specifies. Writes the rust-compatible weight JSON.
+
+Usage:
+    python -m compile.train_wcdnn --data ../data/awc_sweep.jsonl \
+        --out ../python/pretrained/wcdnn_weights.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import wcdnn
+
+
+def load_dataset(path: str):
+    feats, labels = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            feats.append(row["features"])
+            labels.append(row["label_gamma"])
+    x = np.asarray(feats, np.float32)
+    y = np.asarray(labels, np.float32)
+    return x, y
+
+
+def adamw_step(params, grads, state, lr, wd=1e-4, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    ms = 1.0 / (1 - b1**t)
+    vs = 1.0 / (1 - b2**t)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * ((m_ * ms) / (jnp.sqrt(v_ * vs) + eps) + wd * p),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(x, y, epochs: int = 100, batch: int = 256, lr: float = 1e-3, seed: int = 0,
+          verbose: bool = True):
+    """Train; returns (params, feat_mean, feat_std, final_val_mae)."""
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    n_val = max(1, n // 10)
+    perm = rng.permutation(n)
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    xt, yt = x[tr_idx], y[tr_idx]
+    xv, yv = x[val_idx], y[val_idx]
+
+    feat_mean = jnp.asarray(xt.mean(axis=0))
+    feat_std = jnp.asarray(xt.std(axis=0) + 1e-6)
+
+    params = wcdnn.init_params(jax.random.PRNGKey(seed))
+    opt = {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": 0,
+    }
+
+    batched_apply = jax.vmap(
+        lambda p, xi: wcdnn.apply(p, xi, feat_mean, feat_std, use_kernel=False),
+        in_axes=(None, 0),
+    )
+
+    @jax.jit
+    def step(params, opt, bx, by):
+        def l1(p):
+            pred = batched_apply(p, bx)
+            return jnp.mean(jnp.abs(pred - by))
+
+        loss, grads = jax.value_and_grad(l1)(params)
+        params, opt = adamw_step(params, grads, opt, lr)
+        return params, opt, loss
+
+    @jax.jit
+    def val_mae(params):
+        return jnp.mean(jnp.abs(batched_apply(params, jnp.asarray(xv)) - jnp.asarray(yv)))
+
+    for epoch in range(epochs):
+        order = rng.permutation(len(xt))
+        for s in range(0, len(xt), batch):
+            idx = order[s : s + batch]
+            params, opt, _ = step(params, opt, jnp.asarray(xt[idx]), jnp.asarray(yt[idx]))
+        if verbose and (epoch % 10 == 0 or epoch == epochs - 1):
+            print(f"[train_wcdnn] epoch {epoch:3d} val-MAE {float(val_mae(params)):.3f}",
+                  flush=True)
+    return params, feat_mean, feat_std, float(val_mae(params))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--epochs", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    x, y = load_dataset(args.data)
+    print(f"[train_wcdnn] {len(x)} rows, label range [{y.min():.0f}, {y.max():.0f}]")
+    params, feat_mean, feat_std, mae = train(x, y, epochs=args.epochs, seed=args.seed)
+    out = wcdnn.to_json_dict(params, feat_mean, feat_std)
+    with open(args.out, "w") as f:
+        json.dump(out, f)
+    print(f"[train_wcdnn] wrote {args.out} (val MAE {mae:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L2: the WC-DNN window-control network in JAX (paper §4.3).
+
+A residual MLP — 5 features -> hidden(64) -> 2 residual blocks (SiLU) ->
+scalar γ. The forward pass routes each block through the L1 fused
+``residual_mlp_block`` Pallas kernel so the shipped ``wcdnn.hlo.txt``
+artifact contains the kernel; weights are exchanged with the rust
+coordinator through the JSON schema of ``rust/src/awc/mlp.rs`` (bit-exact
+layout match asserted in tests).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.mlp import residual_mlp_block
+
+INPUT_DIM = 5
+HIDDEN = 64
+BLOCKS = 2
+
+
+def init_params(rng, hidden: int = HIDDEN, blocks: int = BLOCKS):
+    """Initialize WC-DNN parameters (matches the rust JSON schema)."""
+    keys = jax.random.split(rng, 2 + 2 * blocks)
+    k = iter(keys)
+
+    def mat(key, r, c):
+        return jax.random.normal(key, (r, c)) / np.sqrt(c)
+
+    params = {
+        "in_w": mat(next(k), hidden, INPUT_DIM),
+        "in_b": jnp.zeros((hidden,)),
+        "blocks": [
+            {
+                "w1": mat(next(k), hidden, hidden),
+                "b1": jnp.zeros((hidden,)),
+                "w2": mat(next(k), hidden, hidden) * 0.1,
+                "b2": jnp.zeros((hidden,)),
+            }
+            for _ in range(blocks)
+        ],
+        "out_w": mat(next(k), 1, hidden) * 0.1,
+        "out_b": jnp.full((1,), 4.0),  # bias toward a sane default window
+    }
+    return params
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def apply(params, x, feat_mean, feat_std, use_kernel: bool = True):
+    """Forward pass: raw features (5,) -> raw γ prediction ().
+
+    ``use_kernel=True`` routes residual blocks through the Pallas kernel
+    (the lowering path); ``False`` uses plain jnp (training path — the
+    interpret-mode kernel is slow under autodiff).
+    """
+    z = (x - feat_mean) / jnp.where(jnp.abs(feat_std) < 1e-9, 1.0, feat_std)
+    h = silu(z @ params["in_w"].T + params["in_b"])[None, :]  # (1, H)
+    for blk in params["blocks"]:
+        if use_kernel:
+            h = residual_mlp_block(
+                h, blk["w1"], blk["b1"][None, :], blk["w2"], blk["b2"][None, :]
+            )
+        else:
+            t = silu(h @ blk["w1"].T + blk["b1"])
+            h = h + t @ blk["w2"].T + blk["b2"]
+    y = h @ params["out_w"].T + params["out_b"]
+    return y[0, 0]
+
+
+def to_json_dict(params, feat_mean, feat_std):
+    """Serialize to the rust `AwcWeights` JSON schema."""
+    def mat(a):
+        return np.asarray(a, dtype=np.float64).tolist()
+
+    return {
+        "arch": {"in": INPUT_DIM, "hidden": params["in_w"].shape[0],
+                 "blocks": len(params["blocks"])},
+        "in_w": mat(params["in_w"]),
+        "in_b": mat(params["in_b"]),
+        "blocks": [
+            {"w1": mat(b["w1"]), "b1": mat(b["b1"]),
+             "w2": mat(b["w2"]), "b2": mat(b["b2"])}
+            for b in params["blocks"]
+        ],
+        "out_w": mat(params["out_w"]),
+        "out_b": mat(params["out_b"]),
+        "feat_mean": mat(feat_mean),
+        "feat_std": mat(feat_std),
+    }
+
+
+def from_json_file(path: str):
+    """Load (params, feat_mean, feat_std) from the JSON schema."""
+    with open(path) as f:
+        d = json.load(f)
+    params = {
+        "in_w": jnp.asarray(d["in_w"], jnp.float32),
+        "in_b": jnp.asarray(d["in_b"], jnp.float32),
+        "blocks": [
+            {
+                "w1": jnp.asarray(b["w1"], jnp.float32),
+                "b1": jnp.asarray(b["b1"], jnp.float32),
+                "w2": jnp.asarray(b["w2"], jnp.float32),
+                "b2": jnp.asarray(b["b2"], jnp.float32),
+            }
+            for b in d["blocks"]
+        ],
+        "out_w": jnp.asarray(d["out_w"], jnp.float32),
+        "out_b": jnp.asarray(d["out_b"], jnp.float32),
+    }
+    return (
+        params,
+        jnp.asarray(d["feat_mean"], jnp.float32),
+        jnp.asarray(d["feat_std"], jnp.float32),
+    )

@@ -1,0 +1,188 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes/dtypes with hypothesis (the CORE correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import BLOCK_L, decode_attention
+from compile.kernels.mlp import residual_mlp_block
+from compile.kernels.verify import BLOCK_V, verify_tokens
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------- decode attention ----------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4, 8]),
+    l_blocks=st.integers(1, 4),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref_swept(h, l_blocks, d, seed):
+    r = _rng(seed)
+    l = l_blocks * BLOCK_L
+    q = jnp.asarray(r.normal(size=(h, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(h, l, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(h, l, d)), jnp.float32)
+    length = jnp.asarray([int(r.integers(1, l + 1))], jnp.int32)
+    out = decode_attention(length, q, k, v)
+    want = ref.decode_attention_ref(length, q, k, v)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_length_one():
+    r = _rng(0)
+    q = jnp.asarray(r.normal(size=(2, 16)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(2, BLOCK_L, 16)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(2, BLOCK_L, 16)), jnp.float32)
+    length = jnp.asarray([1], jnp.int32)
+    out = decode_attention(length, q, k, v)
+    # Only position 0 is valid: output must be exactly v[:, 0, :].
+    np.testing.assert_allclose(out, v[:, 0, :], rtol=1e-5, atol=1e-5)
+
+
+def test_attention_full_length():
+    r = _rng(1)
+    h, l, d = 4, 2 * BLOCK_L, 32
+    q = jnp.asarray(r.normal(size=(h, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(h, l, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(h, l, d)), jnp.float32)
+    length = jnp.asarray([l], jnp.int32)
+    out = decode_attention(length, q, k, v)
+    want = ref.decode_attention_ref(length, q, k, v)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_ignores_garbage_beyond_length():
+    # Positions >= length must not influence the output at all.
+    r = _rng(2)
+    h, l, d = 2, BLOCK_L, 16
+    q = jnp.asarray(r.normal(size=(h, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(h, l, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(h, l, d)), jnp.float32)
+    length = jnp.asarray([40], jnp.int32)
+    base = decode_attention(length, q, k, v)
+    k2 = k.at[:, 40:, :].set(1e6)
+    v2 = v.at[:, 40:, :].set(-1e6)
+    poisoned = decode_attention(length, q, k2, v2)
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+# ---------- speculative verification ----------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    g=st.integers(1, 8),
+    v_blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_verify_matches_ref_swept(g, v_blocks, seed):
+    r = _rng(seed)
+    g1, v = g + 1, v_blocks * BLOCK_V
+    logits = jnp.asarray(r.normal(size=(g1, v)), jnp.float32)
+    draft = jnp.asarray(
+        np.concatenate([r.integers(0, v, size=g), [-1]]), jnp.int32
+    )
+    tok, acc = verify_tokens(draft, logits)
+    wt, wa = ref.verify_tokens_ref(draft, logits)
+    np.testing.assert_array_equal(tok, wt)
+    np.testing.assert_array_equal(acc, wa)
+
+
+def test_verify_all_accept():
+    v = BLOCK_V
+    g = 4
+    logits = np.full((g + 1, v), -5.0, np.float32)
+    draft = np.zeros(g + 1, np.int32)
+    for i in range(g + 1):
+        winner = i * 7 % v
+        logits[i, winner] = 5.0
+        draft[i] = winner
+    draft[g] = -1  # pad row
+    tok, acc = verify_tokens(jnp.asarray(draft), jnp.asarray(logits))
+    assert list(acc[:g]) == [1] * g
+    assert int(acc[g]) == 0
+    n, nxt = ref.fold_acceptance(np.asarray(acc), np.asarray(tok), g)
+    assert n == g
+    assert nxt == g * 7 % v  # bonus token from row g
+
+
+def test_verify_first_mismatch_folds():
+    v = BLOCK_V
+    g = 4
+    logits = np.full((g + 1, v), -5.0, np.float32)
+    winners = [3, 9, 27, 81, 100]
+    for i, w in enumerate(winners):
+        logits[i, w] = 5.0
+    draft = np.asarray([3, 9, 50, 81, -1], np.int32)  # mismatch at i=2
+    tok, acc = verify_tokens(jnp.asarray(draft), jnp.asarray(logits))
+    n, nxt = ref.fold_acceptance(np.asarray(acc), np.asarray(tok), g)
+    assert n == 2
+    assert nxt == 27  # the target's correction at the mismatch position
+
+
+def test_verify_argmax_tie_behaviour():
+    # Ties: both kernel and oracle use first-max; they must agree.
+    v = BLOCK_V * 2
+    logits = np.zeros((2, v), np.float32)  # everything ties at 0
+    draft = np.asarray([0, -1], np.int32)
+    tok, acc = verify_tokens(jnp.asarray(draft), jnp.asarray(logits))
+    wt, wa = ref.verify_tokens_ref(jnp.asarray(draft), jnp.asarray(logits))
+    np.testing.assert_array_equal(tok, wt)
+    np.testing.assert_array_equal(acc, wa)
+
+
+# ---------- fused residual MLP ----------
+
+
+@settings(max_examples=20, deadline=None)
+@given(hidden=st.sampled_from([16, 32, 64, 128]), seed=st.integers(0, 2**31 - 1))
+def test_mlp_matches_ref_swept(hidden, seed):
+    r = _rng(seed)
+    h = jnp.asarray(r.normal(size=(1, hidden)), jnp.float32)
+    w1 = jnp.asarray(r.normal(size=(hidden, hidden)) * 0.2, jnp.float32)
+    b1 = jnp.asarray(r.normal(size=(1, hidden)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(r.normal(size=(hidden, hidden)) * 0.2, jnp.float32)
+    b2 = jnp.asarray(r.normal(size=(1, hidden)) * 0.1, jnp.float32)
+    out = residual_mlp_block(h, w1, b1, w2, b2)
+    want = ref.residual_mlp_block_ref(h, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_mlp_zero_weights_is_identity():
+    hidden = 32
+    h = jnp.asarray(_rng(3).normal(size=(1, hidden)), jnp.float32)
+    z = jnp.zeros((hidden, hidden), jnp.float32)
+    zb = jnp.zeros((1, hidden), jnp.float32)
+    out = residual_mlp_block(h, z, zb, z, zb)
+    np.testing.assert_allclose(out, h, rtol=1e-6, atol=1e-6)
+
+
+# ---------- fold_acceptance (pure) ----------
+
+
+@settings(max_examples=50, deadline=None)
+@given(g=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_fold_acceptance_invariants(g, seed):
+    r = _rng(seed)
+    mask = r.integers(0, 2, size=g + 1)
+    mask[g] = 0
+    toks = r.integers(0, 256, size=g + 1)
+    n, nxt = ref.fold_acceptance(mask, toks, g)
+    assert 0 <= n <= g
+    assert nxt == toks[n]
+    # n is the run-length of leading ones.
+    for i in range(n):
+        assert mask[i] == 1
+    if n < g:
+        assert mask[n] == 0

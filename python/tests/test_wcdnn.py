@@ -1,0 +1,70 @@
+"""WC-DNN: jax forward vs the rust JSON schema; kernel vs jnp path;
+training on synthetic labels actually learns."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import wcdnn
+from compile.train_wcdnn import train
+
+
+@pytest.fixture(scope="module")
+def params():
+    return wcdnn.init_params(jax.random.PRNGKey(3))
+
+
+def test_kernel_and_jnp_paths_agree(params):
+    fm = jnp.zeros((5,))
+    fs = jnp.ones((5,))
+    for seed in range(5):
+        x = jnp.asarray(np.random.default_rng(seed).normal(size=(5,)), jnp.float32)
+        a = wcdnn.apply(params, x, fm, fs, use_kernel=True)
+        b = wcdnn.apply(params, x, fm, fs, use_kernel=False)
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+def test_json_roundtrip_preserves_outputs(params, tmp_path):
+    fm = jnp.asarray([0.5, 0.7, 20.0, 50.0, 4.0])
+    fs = jnp.asarray([0.5, 0.2, 15.0, 30.0, 3.0])
+    d = wcdnn.to_json_dict(params, fm, fs)
+    p = tmp_path / "w.json"
+    p.write_text(json.dumps(d))
+    params2, fm2, fs2 = wcdnn.from_json_file(str(p))
+    x = jnp.asarray([0.4, 0.8, 10.0, 40.0, 4.0], jnp.float32)
+    a = wcdnn.apply(params, x, fm, fs, use_kernel=False)
+    b = wcdnn.apply(params2, x, fm2, fs2, use_kernel=False)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_schema_matches_rust_expectations(params):
+    d = wcdnn.to_json_dict(params, jnp.zeros(5), jnp.ones(5))
+    assert d["arch"] == {"in": 5, "hidden": 64, "blocks": 2}
+    assert len(d["in_w"]) == 64 and len(d["in_w"][0]) == 5
+    assert len(d["blocks"]) == 2
+    assert len(d["out_w"]) == 1 and len(d["out_w"][0]) == 64
+    assert len(d["feat_mean"]) == 5 and len(d["feat_std"]) == 5
+
+
+def test_training_learns_synthetic_rule():
+    # Label rule: optimal gamma grows with acceptance, shrinks with RTT.
+    rng = np.random.default_rng(0)
+    n = 2000
+    x = np.zeros((n, 5), np.float32)
+    x[:, 0] = rng.uniform(0, 2, n)        # queue depth util
+    x[:, 1] = rng.uniform(0.2, 1.0, n)    # acceptance
+    x[:, 2] = rng.uniform(2, 100, n)      # rtt
+    x[:, 3] = rng.uniform(20, 120, n)     # tpot
+    x[:, 4] = rng.integers(1, 12, n)      # gamma prev
+    y = np.clip(1.0 + 10.0 * x[:, 1] - 0.06 * x[:, 2], 1, 12).astype(np.float32)
+    params, fm, fs, mae = train(x, y, epochs=30, verbose=False)
+    assert mae < 1.0, f"val MAE {mae} too high"
+    # Qualitative: higher acceptance -> larger predicted window.
+    lo = wcdnn.apply(params, jnp.asarray([0.5, 0.3, 20.0, 60.0, 4.0]), fm, fs,
+                     use_kernel=False)
+    hi = wcdnn.apply(params, jnp.asarray([0.5, 0.95, 20.0, 60.0, 4.0]), fm, fs,
+                     use_kernel=False)
+    assert float(hi) > float(lo) + 1.0

@@ -1,0 +1,33 @@
+//! DES engine microbenchmarks: raw event throughput (the §Perf L3 target
+//! is ≥1M events/s so every figure regenerates in seconds).
+#[path = "harness/mod.rs"]
+mod harness;
+use dsd::sim::EventQueue;
+use std::time::Instant;
+
+fn main() {
+    harness::bench("engine/schedule+pop 100k events", 20, || {
+        let mut q = EventQueue::new();
+        let mut x = 1u64;
+        for i in 0..100_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            q.schedule((x % 1_000_000) as f64, i);
+        }
+        while q.pop().is_some() {}
+    });
+    // Events/second figure.
+    let mut q = EventQueue::new();
+    let t = Instant::now();
+    let n = 1_000_000u64;
+    let mut x = 1u64;
+    for i in 0..n {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        q.schedule((x % 1_000_000) as f64, i);
+    }
+    while q.pop().is_some() {}
+    harness::report_rate(
+        "engine/events per second (1M sched+pop)",
+        2.0 * n as f64 / t.elapsed().as_secs_f64(),
+        "events/s",
+    );
+}

@@ -1,0 +1,11 @@
+//! End-to-end benchmark: regenerate Figures 9/10 (FIFO vs LAB).
+#[path = "harness/mod.rs"]
+mod harness;
+use dsd::experiments::{fig9_10, Scale};
+use std::hint::black_box;
+
+fn main() {
+    harness::bench("fig9_10/batching sweep at scale 0.25", 3, || {
+        black_box(fig9_10::run(Scale(0.25), &[1]));
+    });
+}

@@ -1,0 +1,10 @@
+//! End-to-end benchmark: regenerate Figure 4 (GPU-level calibration).
+#[path = "harness/mod.rs"]
+mod harness;
+use std::hint::black_box;
+
+fn main() {
+    harness::bench("fig4/full calibration study", 10, || {
+        black_box(dsd::experiments::fig4::run(42));
+    });
+}

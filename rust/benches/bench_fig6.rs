@@ -1,0 +1,15 @@
+//! End-to-end benchmark: regenerate Figure 6 (RTT sweep) at reduced scale (the bench
+//! measures harness cost; `dsd reproduce --exp fig6` is the full run).
+#[path = "harness/mod.rs"]
+mod harness;
+use dsd::experiments::{fig6, Scale};
+use std::hint::black_box;
+
+fn main() {
+    harness::bench("fig6/sweep at scale 0.25", 5, || {
+        black_box(fig6::run(Scale(0.25), &[1]));
+    });
+    harness::bench("fig6/sweep at paper scale", 3, || {
+        black_box(fig6::run(Scale(1.0), &[1]));
+    });
+}

@@ -1,0 +1,11 @@
+//! End-to-end benchmark: regenerate Figures 7/8 (routing scaling).
+#[path = "harness/mod.rs"]
+mod harness;
+use dsd::experiments::{fig7_8, Scale};
+use std::hint::black_box;
+
+fn main() {
+    harness::bench("fig7_8/routing sweep at scale 0.25", 3, || {
+        black_box(fig7_8::run(Scale(0.25), &[1]));
+    });
+}

@@ -1,0 +1,37 @@
+//! Hardware-model predictor benchmarks: `predict()` sits on the sim's
+//! innermost loop and must be effectively free.
+#[path = "harness/mod.rs"]
+mod harness;
+use dsd::cluster::gpu::A100;
+use dsd::cluster::model::LLAMA2_70B;
+use dsd::hwmodel::{Hardware, Op, Predictor};
+use std::hint::black_box;
+use std::time::Instant;
+
+fn main() {
+    let p = Predictor::new();
+    let hw = Hardware { gpu: &A100, tp: 4 };
+    harness::bench("hwmodel/100k decode predictions", 30, || {
+        let mut acc = 0.0;
+        for i in 0..100_000u32 {
+            acc += p.predict(
+                Op::Decode { batch: 1 + i % 32, avg_ctx: 64 + i % 512 },
+                &LLAMA2_70B,
+                hw,
+            );
+        }
+        black_box(acc);
+    });
+    let t = Instant::now();
+    let mut acc = 0.0;
+    let n = 1_000_000;
+    for i in 0..n as u32 {
+        acc += p.predict(Op::Verify { batch: 8, window: 1 + i % 8, avg_ctx: 128 }, &LLAMA2_70B, hw);
+    }
+    black_box(acc);
+    harness::report_rate(
+        "hwmodel/predictions per second",
+        n as f64 / t.elapsed().as_secs_f64(),
+        "pred/s",
+    );
+}

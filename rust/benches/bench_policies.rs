@@ -1,0 +1,52 @@
+//! Policy-family microbenchmarks: routing snapshots, batch formation and
+//! AWC inference (MLP forward + stabilizer) on the decision path.
+#[path = "harness/mod.rs"]
+mod harness;
+use dsd::awc::{AwcPolicy, AwcWeights};
+use dsd::policies::window::{WindowFeatures, WindowPolicy};
+use dsd::policies::{BatchingPolicy, Fifo, Jsq, Lab, QueuedRequest, RoutingPolicy, TargetSnapshot};
+use dsd::util::rng::Pcg64;
+use std::hint::black_box;
+
+fn main() {
+    let snaps: Vec<TargetSnapshot> = (0..20)
+        .map(|id| TargetSnapshot { id, prefill_queue: id % 7, active: id % 5, ..Default::default() })
+        .collect();
+    let mut jsq = Jsq;
+    let mut rng = Pcg64::new(1);
+    harness::bench("policies/jsq route x100k (20 targets)", 30, || {
+        let mut acc = 0usize;
+        for _ in 0..100_000 {
+            acc += jsq.route(&snaps, &mut rng);
+        }
+        black_box(acc);
+    });
+
+    let queue: Vec<QueuedRequest> = (0..64)
+        .map(|id| QueuedRequest { id, length: ((id * 37) % 800) as u32 + 10, enqueued_ms: id as f64 })
+        .collect();
+    harness::bench("policies/lab form_batch x10k (64-deep queue)", 30, || {
+        for _ in 0..10_000 {
+            black_box(Lab::default().form_batch(&queue, 32));
+        }
+    });
+    harness::bench("policies/fifo form_batch x10k (64-deep queue)", 30, || {
+        for _ in 0..10_000 {
+            black_box(Fifo.form_batch(&queue, 32));
+        }
+    });
+
+    let mut awc = AwcPolicy::new(AwcWeights::builtin());
+    let f = WindowFeatures {
+        queue_depth_util: 0.4,
+        acceptance_recent: 0.85,
+        rtt_recent_ms: 10.0,
+        tpot_recent_ms: 48.0,
+        gamma_prev: 4,
+    };
+    harness::bench("policies/awc decide x10k (64-hidden mlp)", 30, || {
+        for i in 0..10_000u64 {
+            black_box(awc.decide(i % 32, &f));
+        }
+    });
+}

@@ -1,0 +1,49 @@
+//! PJRT runtime benchmarks over the real AOT artifacts: per-call costs of
+//! the serving path (prefill / decode step / verify window). Skipped when
+//! `artifacts/` is not built.
+#[path = "harness/mod.rs"]
+mod harness;
+use std::hint::black_box;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench runtime: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = std::sync::Arc::new(dsd::runtime::Runtime::load(dir).expect("runtime"));
+    let draft = dsd::coordinator::DraftEngine::new(rt.clone());
+    let target = dsd::coordinator::TargetEngine::new(rt.clone());
+    let prompt = b"question: tom has 3 apples and buys 2 more. how many apples does tom have?\nanswer:";
+
+    harness::bench("runtime/draft prefill (82-token prompt)", 10, || {
+        black_box(draft.prefill(prompt).expect("prefill"));
+    });
+    harness::bench("runtime/target prefill", 10, || {
+        black_box(target.prefill(prompt).expect("prefill"));
+    });
+
+    let (_, dkv, n) = draft.prefill(prompt).unwrap();
+    let (tl, tkv, _) = target.prefill(prompt).unwrap();
+    let first = dsd::coordinator::argmax(&tl);
+
+    let mut kv = Some(dkv.clone());
+    harness::bench("runtime/draft decode step", 20, || {
+        let (logits, nkv) = draft.decode(first, n, kv.take().unwrap()).expect("decode");
+        black_box(logits);
+        kv = Some(nkv);
+    });
+
+    let (drafts, _) = draft.draft_window(first, n, 4, dkv).unwrap();
+    let mut window = vec![first];
+    window.extend_from_slice(&drafts);
+    let mut tkv_slot = Some(tkv);
+    harness::bench("runtime/target verify window (gamma=4)", 10, || {
+        let (acc, corr, nkv) = target
+            .verify(&window, n, tkv_slot.take().unwrap())
+            .expect("verify");
+        black_box((acc, corr));
+        tkv_slot = Some(nkv);
+    });
+}

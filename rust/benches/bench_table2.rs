@@ -1,0 +1,15 @@
+//! End-to-end benchmark: regenerate Table 2 (AWC vs baselines) at reduced scale (the bench
+//! measures harness cost; `dsd reproduce --exp table2` is the full run).
+#[path = "harness/mod.rs"]
+mod harness;
+use dsd::experiments::{table2, Scale};
+use std::hint::black_box;
+
+fn main() {
+    harness::bench("table2/sweep at scale 0.25", 5, || {
+        black_box(table2::run(Scale(0.25), &[1]));
+    });
+    harness::bench("table2/sweep at paper scale", 3, || {
+        black_box(table2::run(Scale(1.0), &[1]));
+    });
+}

@@ -1,0 +1,30 @@
+//! Mini-criterion: the offline registry has no criterion crate, so each
+//! bench target links this harness. `bench("name", iters, f)` warms up,
+//! times `iters` runs, and prints mean / p50 / p99 per iteration.
+
+use std::time::Instant;
+
+/// Run and report one benchmark case.
+pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p99 = samples[(samples.len() * 99 / 100).min(samples.len() - 1)];
+    println!("bench {name:<44} mean {mean:>9.3} ms  p50 {p50:>9.3} ms  p99 {p99:>9.3} ms");
+}
+
+/// Report a derived throughput figure alongside benches.
+#[allow(dead_code)]
+pub fn report_rate(name: &str, value: f64, unit: &str) {
+    println!("rate  {name:<44} {value:>12.0} {unit}");
+}

@@ -1,0 +1,337 @@
+//! WC-DNN training-dataset generation (paper §4.2).
+//!
+//! For each scenario — a (dataset, target/drafter counts, RTT, arrival
+//! rate) combination — the simulator runs once per window configuration:
+//! every static γ in [2, 12] plus the fused execution mode. Each run
+//! records its mean observed feature vector and its performance metrics;
+//! the scenario's *label* is the configuration minimizing the weighted
+//! SLO objective `J = w_tpot·TPOT + w_ttft·TTFT − w_tput·throughput`.
+//! One training row is emitted per (scenario, probe-run): the probe's
+//! features mapped to the scenario's optimal γ (fused ⇒ γ = 1), so the
+//! network learns the optimum from any operating point, not just from
+//! near-optimal states.
+
+use crate::config::WindowKind;
+use crate::sim::Simulator;
+use crate::util::json::Json;
+
+/// One labeled training example.
+#[derive(Clone, Debug)]
+pub struct DatasetRow {
+    /// `[q_depth_util, α_recent, RTT_recent, TPOT_recent, γ_prev]`.
+    pub features: [f64; 5],
+    /// Optimal window size for the scenario (1 = fused).
+    pub label_gamma: f64,
+    /// Scenario id (provenance).
+    pub scenario: String,
+    /// Probe window the features were observed under (0 = fused probe).
+    pub probe_gamma: u32,
+    /// Metrics of the probe run (for analysis).
+    pub tpot_ms: f64,
+    /// TTFT of the probe run.
+    pub ttft_ms: f64,
+    /// Throughput of the probe run.
+    pub throughput_rps: f64,
+}
+
+impl DatasetRow {
+    /// JSONL row consumed by `python/compile/train_wcdnn.py`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("features", Json::Arr(self.features.iter().map(|&x| Json::Num(x)).collect()))
+            .with("label_gamma", self.label_gamma.into())
+            .with("scenario", self.scenario.as_str().into())
+            .with("probe_gamma", (self.probe_gamma as u64).into())
+            .with("tpot_ms", self.tpot_ms.into())
+            .with("ttft_ms", self.ttft_ms.into())
+            .with("throughput_rps", self.throughput_rps.into())
+    }
+}
+
+/// The sweep grid defining scenarios.
+///
+/// Sweeps run on the *paper deployment itself* (the heterogeneous
+/// 20-target cloud pool with varying edge-pool sizes, at load multiples
+/// of each dataset's operating point) so the training distribution
+/// matches the regime AWC is evaluated in — a mismatched small-cluster
+/// grid teaches the network the wrong window economics.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// Datasets to sweep.
+    pub datasets: Vec<String>,
+    /// Edge-pool sizes (cloud pool is the fixed 20-target pool).
+    pub drafter_counts: Vec<usize>,
+    /// RTTs, ms.
+    pub rtts: Vec<f64>,
+    /// Arrival-rate multipliers applied to the dataset operating point.
+    pub rate_multipliers: Vec<f64>,
+    /// Request-count scale vs the paper workload (1.0 = full).
+    pub scale: f64,
+    /// Base seed.
+    pub seed: u64,
+    /// Window sizes to probe (paper: 2..=12).
+    pub gammas: Vec<u32>,
+    /// Objective weights (w_tpot, w_ttft, w_tput).
+    pub weights: (f64, f64, f64),
+}
+
+impl Default for SweepGrid {
+    fn default() -> Self {
+        SweepGrid {
+            datasets: vec!["gsm8k".into(), "cnndm".into(), "humaneval".into()],
+            drafter_counts: vec![600, 1000],
+            rtts: vec![5.0, 10.0, 30.0, 60.0, 100.0],
+            rate_multipliers: vec![0.7, 1.0, 1.3],
+            scale: 1.0,
+            seed: 1234,
+            gammas: (2..=12).collect(),
+            // TPOT-led objective: the throughput term breaks ties toward
+            // capacity-friendly windows but must not let its (noisier)
+            // estimate flip labels between near-equivalent windows.
+            weights: (1.0, 0.05, 1.0),
+        }
+    }
+}
+
+impl SweepGrid {
+    /// A reduced grid for tests (runs in seconds).
+    pub fn tiny() -> Self {
+        SweepGrid {
+            datasets: vec!["gsm8k".into()],
+            drafter_counts: vec![600],
+            rtts: vec![10.0, 60.0],
+            rate_multipliers: vec![1.0],
+            scale: 0.08,
+            seed: 7,
+            gammas: vec![2, 4, 8],
+            weights: (1.0, 0.05, 2.0),
+        }
+    }
+
+    /// Number of scenarios in the grid.
+    pub fn n_scenarios(&self) -> usize {
+        self.datasets.len()
+            * self.drafter_counts.len()
+            * self.rtts.len()
+            * self.rate_multipliers.len()
+    }
+}
+
+/// Result of probing one scenario with every window configuration.
+struct ProbeResult {
+    gamma: u32, // 0 = fused
+    features: [f64; 5],
+    tpot: f64,
+    ttft: f64,
+    tput: f64,
+}
+
+/// Run the full sweep; returns all labeled rows.
+pub fn generate_dataset(grid: &SweepGrid) -> Vec<DatasetRow> {
+    let mut rows = Vec::new();
+    let mut scen_idx = 0u64;
+    for ds in &grid.datasets {
+        for &n_d in &grid.drafter_counts {
+            for &rtt in &grid.rtts {
+                for &mult in &grid.rate_multipliers {
+                    let scenario = format!("{ds}-20t{n_d}d-rtt{rtt}-x{mult}");
+                    let probes = probe_scenario(grid, ds, n_d, rtt, mult, scen_idx);
+                    let label = label_from_probes(&probes, grid.weights);
+                    for p in &probes {
+                        rows.push(DatasetRow {
+                            features: p.features,
+                            label_gamma: label,
+                            scenario: scenario.clone(),
+                            probe_gamma: p.gamma,
+                            tpot_ms: p.tpot,
+                            ttft_ms: p.ttft,
+                            throughput_rps: p.tput,
+                        });
+                    }
+                    scen_idx += 1;
+                }
+            }
+        }
+    }
+    rows
+}
+
+fn probe_scenario(
+    grid: &SweepGrid,
+    dataset: &str,
+    n_drafters: usize,
+    rtt: f64,
+    rate_mult: f64,
+    scen_idx: u64,
+) -> Vec<ProbeResult> {
+    use crate::config::{BatchingKind, RoutingKind};
+    use crate::experiments::common::{paper_config, Scale};
+    let mut out = Vec::new();
+    let mut run = |window: WindowKind, gamma_tag: u32| {
+        // Average two seeds per probe: the labeling argmin is sensitive
+        // to run-to-run noise, and a flipped label teaches the network a
+        // wrong optimum for the whole scenario.
+        let mut feat_acc = [0.0f64; 5];
+        let (mut tpot, mut ttft, mut tput) = (0.0, 0.0, 0.0);
+        const PROBE_SEEDS: u64 = 3;
+        for s in 0..PROBE_SEEDS {
+            let mut cfg = paper_config(
+                dataset,
+                n_drafters,
+                rtt,
+                RoutingKind::Jsq,
+                BatchingKind::Lab,
+                window.clone(),
+                Scale(grid.scale),
+                grid.seed.wrapping_add(scen_idx * 977 + s * 31),
+            );
+            cfg.workload.rate_per_s *= rate_mult;
+            let rep = Simulator::new(cfg).run();
+            for (acc, &x) in feat_acc.iter_mut().zip(&rep.system.mean_features) {
+                *acc += x / PROBE_SEEDS as f64;
+            }
+            tpot += rep.mean_tpot() / PROBE_SEEDS as f64;
+            ttft += rep.mean_ttft() / PROBE_SEEDS as f64;
+            tput += rep.system.throughput_rps / PROBE_SEEDS as f64;
+        }
+        let mut features = feat_acc;
+        if gamma_tag == 0 {
+            // Fused probes observe no drafting features; synthesize the
+            // operational point: γ_prev = 1, RTT = configured, and the
+            // acceptance the workload would show if drafted (its true α —
+            // a fused server's pooled estimate converges there).
+            let alpha = crate::trace::dataset_by_name(dataset)
+                .map(|d| d.acceptance_rate)
+                .unwrap_or(0.75);
+            features = [features[0], alpha, rtt, features[3], 1.0];
+        }
+        out.push(ProbeResult {
+            gamma: gamma_tag,
+            features,
+            tpot,
+            ttft,
+            tput,
+        });
+    };
+    for &g in &grid.gammas {
+        run(WindowKind::Static(g), g);
+    }
+    run(WindowKind::FusedOnly, 0);
+    out
+}
+
+/// The labeling rule (paper §4.2): the configuration minimizing
+/// `J = w_tpot·TPOT + w_ttft·TTFT − w_tput·throughput`; fused maps to
+/// γ = 1 (the WC-DNN's "≤1 ⇒ fused" convention).
+pub fn label_scenario(
+    configs: &[(u32, f64, f64, f64)],
+    weights: (f64, f64, f64),
+) -> f64 {
+    let (wt, wf, wp) = weights;
+    let mut best = (f64::INFINITY, 1.0);
+    for &(gamma, tpot, ttft, tput) in configs {
+        let j = wt * tpot + wf * ttft - wp * tput;
+        if j < best.0 {
+            best = (j, if gamma == 0 { 1.0 } else { gamma as f64 });
+        }
+    }
+    best.1
+}
+
+fn label_from_probes(probes: &[ProbeResult], weights: (f64, f64, f64)) -> f64 {
+    let configs: Vec<(u32, f64, f64, f64)> = probes
+        .iter()
+        .map(|p| (p.gamma, p.tpot, p.ttft, p.tput))
+        .collect();
+    label_scenario(&configs, weights)
+}
+
+/// Write rows as JSONL.
+pub fn write_jsonl(rows: &[DatasetRow], path: &std::path::Path) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for r in rows {
+        writeln!(f, "{}", r.to_json().to_string_compact())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labeling_rule_prefers_low_objective() {
+        // (gamma, tpot, ttft, tput)
+        let configs = vec![
+            (2, 50.0, 300.0, 20.0),
+            (4, 40.0, 310.0, 25.0), // best: low tpot, high tput
+            (8, 45.0, 320.0, 24.0),
+            (0, 60.0, 290.0, 15.0), // fused
+        ];
+        let label = label_scenario(&configs, (1.0, 0.05, 2.0));
+        assert_eq!(label, 4.0);
+    }
+
+    #[test]
+    fn fused_label_maps_to_one() {
+        let configs = vec![(4, 100.0, 500.0, 5.0), (0, 30.0, 300.0, 20.0)];
+        assert_eq!(label_scenario(&configs, (1.0, 0.05, 2.0)), 1.0);
+    }
+
+    #[test]
+    fn tiny_sweep_produces_consistent_rows() {
+        let grid = SweepGrid::tiny();
+        let rows = generate_dataset(&grid);
+        // scenarios × (|gammas| + 1 fused probe)
+        assert_eq!(rows.len(), grid.n_scenarios() * (grid.gammas.len() + 1));
+        for r in &rows {
+            assert!(r.label_gamma >= 1.0 && r.label_gamma <= 12.0);
+            assert!(r.features.iter().all(|x| x.is_finite()));
+            assert!(r.tpot_ms > 0.0);
+        }
+        // All rows of one scenario share a label.
+        let first_scenario = &rows[0].scenario;
+        let labels: Vec<f64> = rows
+            .iter()
+            .filter(|r| &r.scenario == first_scenario)
+            .map(|r| r.label_gamma)
+            .collect();
+        assert!(labels.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn high_rtt_scenarios_prefer_smaller_or_fused() {
+        // With the tiny grid, compare labels at rtt=10 vs rtt=60: the
+        // optimum should not grow with RTT (larger windows amortize RTT,
+        // but fused avoids it entirely; sanity: labels stay in range and
+        // the sweep actually differentiates scenarios).
+        let grid = SweepGrid::tiny();
+        let rows = generate_dataset(&grid);
+        let label_at = |rtt: &str| {
+            rows.iter()
+                .find(|r| r.scenario.contains(rtt))
+                .map(|r| r.label_gamma)
+                .unwrap()
+        };
+        let l10 = label_at("rtt10");
+        let l60 = label_at("rtt60");
+        assert!(l10 >= 1.0 && l60 >= 1.0);
+    }
+
+    #[test]
+    fn rows_serialize_to_jsonl_schema() {
+        let row = DatasetRow {
+            features: [0.4, 0.8, 10.0, 40.0, 4.0],
+            label_gamma: 5.0,
+            scenario: "s".into(),
+            probe_gamma: 4,
+            tpot_ms: 40.0,
+            ttft_ms: 300.0,
+            throughput_rps: 20.0,
+        };
+        let j = row.to_json();
+        assert_eq!(j.get("features").unwrap().as_f64_vec().unwrap().len(), 5);
+        assert_eq!(j.get("label_gamma").unwrap().as_f64(), Some(5.0));
+    }
+}

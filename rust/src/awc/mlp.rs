@@ -1,0 +1,322 @@
+//! Pure-Rust forward pass of the WC-DNN (paper §4.3): a residual MLP that
+//! regresses the speculation window size from the 5-dim feature vector.
+//!
+//! Architecture (mirrored exactly by `python/compile/wcdnn.py`, which
+//! trains it and exports the weights as JSON):
+//!
+//! ```text
+//! x ∈ R^5  (normalized per-feature)
+//! h0 = SiLU(W_in x + b_in)                   W_in: hidden×5
+//! h_{k+1} = h_k + W2_k · SiLU(W1_k h_k + b1_k) + b2_k   (2 blocks)
+//! y = W_out h + b_out                         scalar γ prediction
+//! ```
+//!
+//! The hot loop calls this thousands of times per simulated second, so it
+//! runs in Rust with no FFI; an integration test cross-checks it against
+//! the PJRT-executed HLO lowering of the same network.
+
+use crate::util::json::Json;
+
+/// One residual block's parameters.
+#[derive(Clone, Debug)]
+pub struct ResBlock {
+    /// First linear layer, `hidden × hidden`, row-major.
+    pub w1: Vec<f64>,
+    /// First bias.
+    pub b1: Vec<f64>,
+    /// Second linear layer, `hidden × hidden`, row-major.
+    pub w2: Vec<f64>,
+    /// Second bias.
+    pub b2: Vec<f64>,
+}
+
+/// Full WC-DNN parameter set plus feature normalization constants.
+#[derive(Clone, Debug)]
+pub struct AwcWeights {
+    /// Input dimension (5).
+    pub input_dim: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Input projection, `hidden × input_dim`, row-major.
+    pub in_w: Vec<f64>,
+    /// Input bias.
+    pub in_b: Vec<f64>,
+    /// Residual blocks.
+    pub blocks: Vec<ResBlock>,
+    /// Output projection, `1 × hidden`.
+    pub out_w: Vec<f64>,
+    /// Output bias.
+    pub out_b: f64,
+    /// Per-feature normalization mean.
+    pub feat_mean: Vec<f64>,
+    /// Per-feature normalization std.
+    pub feat_std: Vec<f64>,
+}
+
+/// SiLU activation `x * sigmoid(x)`.
+#[inline]
+pub fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+impl AwcWeights {
+    /// Parse the JSON weight schema written by `train_wcdnn.py`.
+    pub fn from_json(j: &Json) -> Result<AwcWeights, String> {
+        let arch = j.get("arch").ok_or("missing arch")?;
+        let input_dim = arch
+            .get("in")
+            .and_then(Json::as_usize)
+            .ok_or("arch.in missing")?;
+        let hidden = arch
+            .get("hidden")
+            .and_then(Json::as_usize)
+            .ok_or("arch.hidden missing")?;
+        let matrix = |v: &Json, rows: usize, cols: usize, name: &str| -> Result<Vec<f64>, String> {
+            let arr = v.as_arr().ok_or_else(|| format!("{name}: not an array"))?;
+            if arr.len() != rows {
+                return Err(format!("{name}: want {rows} rows, got {}", arr.len()));
+            }
+            let mut out = Vec::with_capacity(rows * cols);
+            for row in arr {
+                let xs = row
+                    .as_f64_vec()
+                    .ok_or_else(|| format!("{name}: non-numeric row"))?;
+                if xs.len() != cols {
+                    return Err(format!("{name}: want {cols} cols, got {}", xs.len()));
+                }
+                out.extend(xs);
+            }
+            Ok(out)
+        };
+        let vector = |v: &Json, len: usize, name: &str| -> Result<Vec<f64>, String> {
+            let xs = v
+                .as_f64_vec()
+                .ok_or_else(|| format!("{name}: not numeric"))?;
+            if xs.len() != len {
+                return Err(format!("{name}: want len {len}, got {}", xs.len()));
+            }
+            Ok(xs)
+        };
+        let get = |k: &str| j.get(k).ok_or_else(|| format!("missing field {k}"));
+        let blocks_json = get("blocks")?.as_arr().ok_or("blocks: not an array")?;
+        let mut blocks = Vec::with_capacity(blocks_json.len());
+        for (i, b) in blocks_json.iter().enumerate() {
+            let f = |k: &str| b.get(k).ok_or_else(|| format!("blocks[{i}].{k} missing"));
+            blocks.push(ResBlock {
+                w1: matrix(f("w1")?, hidden, hidden, "w1")?,
+                b1: vector(f("b1")?, hidden, "b1")?,
+                w2: matrix(f("w2")?, hidden, hidden, "w2")?,
+                b2: vector(f("b2")?, hidden, "b2")?,
+            });
+        }
+        let out_w_m = matrix(get("out_w")?, 1, hidden, "out_w")?;
+        Ok(AwcWeights {
+            input_dim,
+            hidden,
+            in_w: matrix(get("in_w")?, hidden, input_dim, "in_w")?,
+            in_b: vector(get("in_b")?, hidden, "in_b")?,
+            blocks,
+            out_w: out_w_m,
+            out_b: vector(get("out_b")?, 1, "out_b")?[0],
+            feat_mean: vector(get("feat_mean")?, input_dim, "feat_mean")?,
+            feat_std: vector(get("feat_std")?, input_dim, "feat_std")?,
+        })
+    }
+
+    /// Load weights from a JSON file.
+    pub fn from_file(path: &str) -> Result<AwcWeights, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+
+    /// The pretrained weights shipped with the repository
+    /// (`python/pretrained/wcdnn_weights.json`, produced by
+    /// `make train-awc`).
+    pub fn builtin() -> AwcWeights {
+        static SRC: &str = include_str!("../../../python/pretrained/wcdnn_weights.json");
+        let j = Json::parse(SRC).expect("embedded wcdnn weights parse");
+        Self::from_json(&j).expect("embedded wcdnn weights valid")
+    }
+
+    /// Forward pass: raw (unnormalized) features → raw γ prediction.
+    pub fn predict(&self, features: &[f64; 5]) -> f64 {
+        debug_assert_eq!(self.input_dim, 5);
+        let h = self.hidden;
+        // Normalize.
+        let mut x = [0.0f64; 5];
+        for i in 0..5 {
+            let s = if self.feat_std[i].abs() < 1e-9 {
+                1.0
+            } else {
+                self.feat_std[i]
+            };
+            x[i] = (features[i] - self.feat_mean[i]) / s;
+        }
+        // Input projection + SiLU.
+        let mut h0 = vec![0.0f64; h];
+        for r in 0..h {
+            let mut acc = self.in_b[r];
+            let row = &self.in_w[r * 5..r * 5 + 5];
+            for c in 0..5 {
+                acc += row[c] * x[c];
+            }
+            h0[r] = silu(acc);
+        }
+        // Residual blocks.
+        let mut tmp = vec![0.0f64; h];
+        for blk in &self.blocks {
+            // tmp = SiLU(W1 h0 + b1)
+            for r in 0..h {
+                let mut acc = blk.b1[r];
+                let row = &blk.w1[r * h..(r + 1) * h];
+                for c in 0..h {
+                    acc += row[c] * h0[c];
+                }
+                tmp[r] = silu(acc);
+            }
+            // h0 = h0 + W2 tmp + b2
+            for r in 0..h {
+                let mut acc = blk.b2[r];
+                let row = &blk.w2[r * h..(r + 1) * h];
+                for c in 0..h {
+                    acc += row[c] * tmp[c];
+                }
+                h0[r] += acc;
+            }
+        }
+        // Output projection.
+        let mut y = self.out_b;
+        for c in 0..h {
+            y += self.out_w[c] * h0[c];
+        }
+        y
+    }
+
+    /// Construct deterministic pseudo-random weights (testing only).
+    pub fn random_for_test(seed: u64, hidden: usize) -> AwcWeights {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let mut mat = |r: usize, c: usize| -> Vec<f64> {
+            (0..r * c)
+                .map(|_| rng.normal() * (1.0 / (c as f64).sqrt()))
+                .collect()
+        };
+        let blocks = (0..2)
+            .map(|_| ResBlock {
+                w1: mat(hidden, hidden),
+                b1: vec![0.0; hidden],
+                w2: mat(hidden, hidden),
+                b2: vec![0.0; hidden],
+            })
+            .collect();
+        AwcWeights {
+            input_dim: 5,
+            hidden,
+            in_w: mat(hidden, 5),
+            in_b: vec![0.0; hidden],
+            blocks,
+            out_w: mat(1, hidden),
+            out_b: 4.0,
+            feat_mean: vec![0.5, 0.7, 15.0, 40.0, 4.0],
+            feat_std: vec![0.5, 0.2, 10.0, 25.0, 3.0],
+        }
+    }
+
+    /// Serialize to the JSON schema (inverse of [`AwcWeights::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let matrix = |data: &[f64], rows: usize, cols: usize| -> Json {
+            Json::Arr(
+                (0..rows)
+                    .map(|r| {
+                        Json::Arr(
+                            data[r * cols..(r + 1) * cols]
+                                .iter()
+                                .map(|&x| Json::Num(x))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        let vector = |data: &[f64]| -> Json {
+            Json::Arr(data.iter().map(|&x| Json::Num(x)).collect())
+        };
+        Json::obj()
+            .with(
+                "arch",
+                Json::obj()
+                    .with("in", self.input_dim.into())
+                    .with("hidden", self.hidden.into())
+                    .with("blocks", self.blocks.len().into()),
+            )
+            .with("in_w", matrix(&self.in_w, self.hidden, self.input_dim))
+            .with("in_b", vector(&self.in_b))
+            .with(
+                "blocks",
+                Json::Arr(
+                    self.blocks
+                        .iter()
+                        .map(|b| {
+                            Json::obj()
+                                .with("w1", matrix(&b.w1, self.hidden, self.hidden))
+                                .with("b1", vector(&b.b1))
+                                .with("w2", matrix(&b.w2, self.hidden, self.hidden))
+                                .with("b2", vector(&b.b2))
+                        })
+                        .collect(),
+                ),
+            )
+            .with("out_w", matrix(&self.out_w, 1, self.hidden))
+            .with("out_b", vector(&[self.out_b]))
+            .with("feat_mean", vector(&self.feat_mean))
+            .with("feat_std", vector(&self.feat_std))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silu_shape() {
+        assert!((silu(0.0)).abs() < 1e-12);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0) > -0.01 && silu(-10.0) < 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_prediction() {
+        let w = AwcWeights::random_for_test(3, 16);
+        let j = w.to_json();
+        let back = AwcWeights::from_json(&j).unwrap();
+        let f = [0.3, 0.8, 12.0, 35.0, 4.0];
+        assert!((w.predict(&f) - back.predict(&f)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn builtin_weights_load_and_predict() {
+        let w = AwcWeights::builtin();
+        assert_eq!(w.input_dim, 5);
+        let y = w.predict(&[0.3, 0.8, 10.0, 40.0, 4.0]);
+        assert!(y.is_finite());
+    }
+
+    #[test]
+    fn prediction_responds_to_inputs() {
+        let w = AwcWeights::random_for_test(5, 16);
+        let a = w.predict(&[0.0, 0.9, 5.0, 30.0, 4.0]);
+        let b = w.predict(&[2.0, 0.1, 80.0, 90.0, 2.0]);
+        assert!((a - b).abs() > 1e-6, "network must not be constant");
+    }
+
+    #[test]
+    fn malformed_json_rejected() {
+        let j = Json::parse(r#"{"arch": {"in": 5, "hidden": 4}}"#).unwrap();
+        assert!(AwcWeights::from_json(&j).is_err());
+        // Wrong matrix dims.
+        let w = AwcWeights::random_for_test(1, 4);
+        let mut j = w.to_json();
+        j.set("in_b", Json::Arr(vec![Json::Num(0.0); 3]));
+        assert!(AwcWeights::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Adaptive Window Control (paper §4): the WC-DNN residual MLP (pure-Rust
+//! inference), the stabilized execution pipeline (clamp → EMA →
+//! hysteresis → quantize), the [`AwcPolicy`] window policy, and the sweep
+//! dataset generator used to train the network.
+
+pub mod dataset;
+pub mod mlp;
+pub mod policy;
+pub mod stabilize;
+
+pub use dataset::{generate_dataset, label_scenario, DatasetRow, SweepGrid};
+pub use mlp::AwcWeights;
+pub use policy::AwcPolicy;
+pub use stabilize::{Stabilizer, StabilizerConfig};

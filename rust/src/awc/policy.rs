@@ -1,0 +1,149 @@
+//! The AWC window policy: WC-DNN inference + per-pair stabilization,
+//! implementing the same [`WindowPolicy`] interface as the baselines.
+
+use super::mlp::AwcWeights;
+use super::stabilize::{Stabilizer, StabilizerConfig};
+use crate::policies::window::{WindowDecision, WindowFeatures, WindowPolicy};
+use std::collections::HashMap;
+
+/// Adaptive Window Control (paper §4): a learned controller that predicts
+/// the optimal speculation window from live system features, stabilized by
+/// clamping, EMA smoothing, and mode-switch hysteresis.
+pub struct AwcPolicy {
+    weights: AwcWeights,
+    stab_cfg: StabilizerConfig,
+    /// Per (drafter,target)-pair stabilizer state.
+    pairs: HashMap<u64, Stabilizer>,
+}
+
+impl AwcPolicy {
+    /// New policy with default stabilizer settings.
+    pub fn new(weights: AwcWeights) -> Self {
+        AwcPolicy {
+            weights,
+            stab_cfg: StabilizerConfig::default(),
+            pairs: HashMap::new(),
+        }
+    }
+
+    /// Override stabilizer settings.
+    pub fn with_stabilizer(mut self, cfg: StabilizerConfig) -> Self {
+        self.stab_cfg = cfg;
+        self
+    }
+
+    /// Raw (unstabilized) network prediction — exposed for dataset
+    /// tooling and tests.
+    pub fn raw_predict(&self, f: &WindowFeatures) -> f64 {
+        self.weights.predict(&f.to_vec())
+    }
+}
+
+impl WindowPolicy for AwcPolicy {
+    fn decide(&mut self, pair_key: u64, features: &WindowFeatures) -> WindowDecision {
+        // Cold-start bootstrap: with no observed TPOT yet (a fresh target
+        // at simulation start) the feature vector is out of the training
+        // distribution; a mispredicted γ≈1 here would flip the request
+        // into fused residency before any signal exists to pull it back.
+        // Use the standard γ=4 distributed window until telemetry flows.
+        if features.tpot_recent_ms <= 0.0 {
+            return WindowDecision {
+                gamma: 4,
+                mode: crate::policies::window::ExecMode::Distributed,
+            };
+        }
+        let raw = self.weights.predict(&features.to_vec());
+        let stab = self
+            .pairs
+            .entry(pair_key)
+            .or_insert_with(|| Stabilizer::new(self.stab_cfg));
+        let decision = stab.process(raw);
+        // Mode gate (paper §4.4: fused "typically arises when the edge
+        // device operates very slowly or when network conditions are
+        // severely congested"): a fused switch must be justified by one
+        // of its two physical drivers — poor speculation quality (low
+        // acceptance) or an expensive link. Otherwise a regression dip
+        // near γ=1 would park a healthy connection in the strictly
+        // lower-capacity fused path.
+        if decision.mode == crate::policies::window::ExecMode::Fused
+            && features.acceptance_recent >= 0.72
+            && features.rtt_recent_ms <= 35.0
+        {
+            return WindowDecision {
+                gamma: 2,
+                mode: crate::policies::window::ExecMode::Distributed,
+            };
+        }
+        decision
+    }
+
+    fn forget(&mut self, pair_key: u64) {
+        self.pairs.remove(&pair_key);
+    }
+
+    fn name(&self) -> &'static str {
+        "awc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::window::ExecMode;
+
+    fn features(acc: f64, rtt: f64) -> WindowFeatures {
+        WindowFeatures {
+            queue_depth_util: 0.4,
+            acceptance_recent: acc,
+            rtt_recent_ms: rtt,
+            tpot_recent_ms: 40.0,
+            gamma_prev: 4,
+        }
+    }
+
+    #[test]
+    fn decisions_are_in_range() {
+        let mut p = AwcPolicy::new(AwcWeights::random_for_test(1, 16));
+        for i in 0..100 {
+            let f = features(i as f64 / 100.0, (i % 50) as f64);
+            let d = p.decide(0, &f);
+            assert!(d.gamma >= 1 && d.gamma <= 12);
+        }
+    }
+
+    #[test]
+    fn per_pair_state_is_isolated() {
+        let mut p = AwcPolicy::new(AwcWeights::random_for_test(2, 16));
+        // Drive pair 0 into fused mode with tiny predictions via extreme
+        // features (may or may not reach fused depending on weights);
+        // instead check isolation directly: decisions for a fresh pair
+        // must equal decisions for pair 0 at its first step.
+        let f = features(0.8, 10.0);
+        let d0_first = p.decide(0, &f);
+        for _ in 0..10 {
+            p.decide(0, &features(0.2, 90.0));
+        }
+        let d1_first = p.decide(1, &f);
+        assert_eq!(d0_first, d1_first, "fresh pair must start fresh");
+    }
+
+    #[test]
+    fn forget_resets_pair() {
+        let mut p = AwcPolicy::new(AwcWeights::random_for_test(3, 16));
+        let f = features(0.9, 5.0);
+        let first = p.decide(7, &f);
+        for _ in 0..5 {
+            p.decide(7, &features(0.1, 100.0));
+        }
+        p.forget(7);
+        assert_eq!(p.decide(7, &f), first);
+    }
+
+    #[test]
+    fn builtin_policy_is_usable() {
+        let mut p = AwcPolicy::new(AwcWeights::builtin());
+        let d = p.decide(0, &features(0.8, 10.0));
+        assert!(d.gamma >= 1 && d.gamma <= 12);
+        assert!(matches!(d.mode, ExecMode::Distributed | ExecMode::Fused));
+    }
+}

@@ -1,0 +1,121 @@
+//! Device instances and pools: the expanded form of a deployment after the
+//! `auto_topology` pass (paper §3.1) — explicit drafter and target device
+//! lists with their hosted models and GPU configurations.
+
+use super::gpu::GpuSpec;
+use super::model::ModelSpec;
+
+/// Role a device plays in the DSD deployment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Edge drafter running a small LLM.
+    Drafter,
+    /// Cloud target running a large LLM (verification + fused decode).
+    Target,
+}
+
+/// One provisioned device (possibly multi-GPU via tensor parallelism).
+#[derive(Clone, Debug)]
+pub struct DeviceInstance {
+    /// Unique id within its pool.
+    pub id: usize,
+    /// Drafter or target.
+    pub role: Role,
+    /// GPU SKU.
+    pub gpu: &'static GpuSpec,
+    /// Number of GPUs ganged with tensor parallelism.
+    pub tp_degree: u32,
+    /// Hosted model.
+    pub model: &'static ModelSpec,
+}
+
+impl DeviceInstance {
+    /// Whether the model's weights fit in aggregate device memory (with a
+    /// 20% headroom for activations and KV cache).
+    pub fn fits(&self) -> bool {
+        let capacity = self.gpu.mem_gib * self.tp_degree as f64 * 1024.0 * 1024.0 * 1024.0;
+        self.model.weight_bytes() * 1.2 <= capacity
+    }
+}
+
+/// A pool of same-role devices (the Cloud Pool or the Edge Pool).
+#[derive(Clone, Debug, Default)]
+pub struct DevicePool {
+    /// Devices, indexed by id.
+    pub devices: Vec<DeviceInstance>,
+}
+
+impl DevicePool {
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Whether the pool is empty.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Add a device, assigning the next id. Returns the id.
+    pub fn add(
+        &mut self,
+        role: Role,
+        gpu: &'static GpuSpec,
+        tp_degree: u32,
+        model: &'static ModelSpec,
+    ) -> usize {
+        let id = self.devices.len();
+        self.devices.push(DeviceInstance {
+            id,
+            role,
+            gpu,
+            tp_degree,
+            model,
+        });
+        id
+    }
+
+    /// Validate that every device's model fits in memory.
+    pub fn validate(&self) -> Result<(), String> {
+        for d in &self.devices {
+            if !d.fits() {
+                return Err(format!(
+                    "device {} ({}x{}): model {} ({:.0} GiB) does not fit",
+                    d.id,
+                    d.tp_degree,
+                    d.gpu.name,
+                    d.model.name,
+                    d.model.weight_bytes() / (1024.0 * 1024.0 * 1024.0)
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::{A100, A40};
+    use crate::cluster::model::{LLAMA2_70B, LLAMA2_7B};
+
+    #[test]
+    fn fits_checks_capacity() {
+        let mut pool = DevicePool::default();
+        pool.add(Role::Target, &A100, 4, &LLAMA2_70B); // 138 GiB on 320 GiB
+        pool.add(Role::Drafter, &A40, 1, &LLAMA2_7B); // 13.5 GiB on 48 GiB
+        assert!(pool.validate().is_ok());
+
+        let mut bad = DevicePool::default();
+        bad.add(Role::Target, &A40, 1, &LLAMA2_70B); // 138 GiB on 48 GiB
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let mut pool = DevicePool::default();
+        assert_eq!(pool.add(Role::Drafter, &A40, 1, &LLAMA2_7B), 0);
+        assert_eq!(pool.add(Role::Drafter, &A40, 1, &LLAMA2_7B), 1);
+        assert_eq!(pool.len(), 2);
+    }
+}

@@ -1,0 +1,114 @@
+//! GPU specification sheets for the hardware latency model.
+//!
+//! These are public datasheet numbers (dense FP16/BF16 tensor throughput
+//! and HBM bandwidth) for the accelerators the paper evaluates: A40, A100,
+//! H100 on the cloud side; A40 and V100 on the edge side; A6000 in the
+//! large heterogeneous cluster experiment.
+
+/// Static description of a GPU SKU.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    /// SKU name, e.g. `"A100"`.
+    pub name: &'static str,
+    /// Dense FP16/BF16 tensor-core throughput, TFLOP/s.
+    pub tflops: f64,
+    /// HBM/GDDR memory bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Device memory capacity, GiB.
+    pub mem_gib: f64,
+    /// Intra-node interconnect bandwidth per link (NVLink/PCIe), GB/s.
+    /// Used for tensor-parallel all-reduce cost.
+    pub link_bw_gbps: f64,
+    /// Fixed per-kernel launch + framework overhead, microseconds.
+    pub kernel_overhead_us: f64,
+}
+
+/// A40: edge-grade datacenter GPU (the paper profiles edge LLMs on A40).
+pub const A40: GpuSpec = GpuSpec {
+    name: "A40",
+    tflops: 149.7,
+    mem_bw_gbps: 696.0,
+    mem_gib: 48.0,
+    link_bw_gbps: 31.5, // PCIe gen4 x16
+    kernel_overhead_us: 12.0,
+};
+
+/// V100: older edge-pool GPU in the large cluster experiment.
+pub const V100: GpuSpec = GpuSpec {
+    name: "V100",
+    tflops: 125.0,
+    mem_bw_gbps: 900.0,
+    mem_gib: 32.0,
+    link_bw_gbps: 150.0, // NVLink2
+    kernel_overhead_us: 14.0,
+};
+
+/// A100 (SXM 80GB): cloud verification tier.
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100",
+    tflops: 312.0,
+    mem_bw_gbps: 2039.0,
+    mem_gib: 80.0,
+    link_bw_gbps: 300.0, // NVLink3
+    kernel_overhead_us: 10.0,
+};
+
+/// H100 (SXM): cloud verification tier.
+pub const H100: GpuSpec = GpuSpec {
+    name: "H100",
+    tflops: 989.0,
+    mem_bw_gbps: 3350.0,
+    mem_gib: 80.0,
+    link_bw_gbps: 450.0, // NVLink4
+    kernel_overhead_us: 8.0,
+};
+
+/// A6000: workstation GPU present in the paper's cloud pool.
+pub const A6000: GpuSpec = GpuSpec {
+    name: "A6000",
+    tflops: 155.0,
+    mem_bw_gbps: 768.0,
+    mem_gib: 48.0,
+    link_bw_gbps: 31.5, // PCIe gen4
+    kernel_overhead_us: 12.0,
+};
+
+/// Look up a GPU spec by (case-insensitive) name.
+pub fn gpu_by_name(name: &str) -> Option<&'static GpuSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "a40" => Some(&A40),
+        "v100" => Some(&V100),
+        "a100" => Some(&A100),
+        "h100" => Some(&H100),
+        "a6000" => Some(&A6000),
+        _ => None,
+    }
+}
+
+/// All known GPU SKUs.
+pub fn all_gpus() -> [&'static GpuSpec; 5] {
+    [&A40, &V100, &A100, &H100, &A6000]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert_eq!(gpu_by_name("h100").unwrap().name, "H100");
+        assert_eq!(gpu_by_name("H100").unwrap().name, "H100");
+        assert!(gpu_by_name("tpu-v4").is_none());
+    }
+
+    #[test]
+    fn specs_are_sane() {
+        for g in all_gpus() {
+            assert!(g.tflops > 0.0 && g.mem_bw_gbps > 0.0 && g.mem_gib > 0.0);
+            assert!(g.kernel_overhead_us > 0.0);
+        }
+        // Relative ordering sanity: H100 > A100 > A40 on compute.
+        assert!(H100.tflops > A100.tflops);
+        assert!(A100.tflops > A40.tflops);
+    }
+}

@@ -1,0 +1,11 @@
+//! Cluster description: GPU SKU spec sheets, LLM architecture specs, and
+//! device pools — the substrate the hardware latency model and the
+//! simulator's topology are built on.
+
+pub mod device;
+pub mod gpu;
+pub mod model;
+
+pub use device::{DeviceInstance, DevicePool, Role};
+pub use gpu::{gpu_by_name, GpuSpec, A100, A40, A6000, H100, V100};
+pub use model::{model_by_name, ModelSpec};

@@ -1,0 +1,181 @@
+//! LLM architecture spec sheets driving the roofline latency model.
+//!
+//! Shapes match the public model cards for the models the paper uses:
+//! Qwen-7B / Llama2-7B / Llama3.1-8B as edge drafters, Llama2-70B /
+//! Qwen-72B / Llama3-70B as cloud targets.
+
+/// Static description of a transformer LLM's compute-relevant shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// Model name, e.g. `"llama2-70b"`.
+    pub name: &'static str,
+    /// Total parameter count.
+    pub params: f64,
+    /// Number of transformer layers.
+    pub layers: u32,
+    /// Hidden dimension.
+    pub hidden: u32,
+    /// Attention heads.
+    pub heads: u32,
+    /// KV heads (GQA; equals `heads` for MHA models).
+    pub kv_heads: u32,
+    /// Vocabulary size.
+    pub vocab: u32,
+    /// Weight precision in bytes (2 = fp16/bf16 serving).
+    pub dtype_bytes: f64,
+}
+
+impl ModelSpec {
+    /// Bytes of weights resident on the serving devices.
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.dtype_bytes
+    }
+
+    /// KV-cache bytes per token per request.
+    ///
+    /// `2 (K and V) * layers * kv_heads * head_dim * dtype_bytes`.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        let head_dim = self.hidden as f64 / self.heads as f64;
+        2.0 * self.layers as f64 * self.kv_heads as f64 * head_dim * self.dtype_bytes
+    }
+
+    /// FLOPs for one token of dense forward (the classic 2·params rule).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.params
+    }
+
+    /// Attention FLOPs for one new token against a context of length `ctx`
+    /// (scores + weighted sum over the KV cache).
+    pub fn attn_flops_per_token(&self, ctx: f64) -> f64 {
+        let head_dim = self.hidden as f64 / self.heads as f64;
+        // QK^T and PV: 2 * 2 * heads * head_dim * ctx per layer.
+        4.0 * self.layers as f64 * self.heads as f64 * head_dim * ctx
+    }
+}
+
+/// Qwen-7B (edge drafter tier).
+pub const QWEN_7B: ModelSpec = ModelSpec {
+    name: "qwen-7b",
+    params: 7.7e9,
+    layers: 32,
+    hidden: 4096,
+    heads: 32,
+    kv_heads: 32,
+    vocab: 151_936,
+    dtype_bytes: 2.0,
+};
+
+/// Llama2-7B (edge drafter tier).
+pub const LLAMA2_7B: ModelSpec = ModelSpec {
+    name: "llama2-7b",
+    params: 6.74e9,
+    layers: 32,
+    hidden: 4096,
+    heads: 32,
+    kv_heads: 32,
+    vocab: 32_000,
+    dtype_bytes: 2.0,
+};
+
+/// Llama-3.1-8B (edge drafter tier, GQA).
+pub const LLAMA31_8B: ModelSpec = ModelSpec {
+    name: "llama3.1-8b",
+    params: 8.03e9,
+    layers: 32,
+    hidden: 4096,
+    heads: 32,
+    kv_heads: 8,
+    vocab: 128_256,
+    dtype_bytes: 2.0,
+};
+
+/// Llama2-70B (cloud target tier, GQA).
+pub const LLAMA2_70B: ModelSpec = ModelSpec {
+    name: "llama2-70b",
+    params: 69.0e9,
+    layers: 80,
+    hidden: 8192,
+    heads: 64,
+    kv_heads: 8,
+    vocab: 32_000,
+    dtype_bytes: 2.0,
+};
+
+/// Qwen-72B (cloud target tier).
+pub const QWEN_72B: ModelSpec = ModelSpec {
+    name: "qwen-72b",
+    params: 72.7e9,
+    layers: 80,
+    hidden: 8192,
+    heads: 64,
+    kv_heads: 64,
+    vocab: 151_936,
+    dtype_bytes: 2.0,
+};
+
+/// Llama3-70B (cloud target tier, GQA).
+pub const LLAMA3_70B: ModelSpec = ModelSpec {
+    name: "llama3-70b",
+    params: 70.6e9,
+    layers: 80,
+    hidden: 8192,
+    heads: 64,
+    kv_heads: 8,
+    vocab: 128_256,
+    dtype_bytes: 2.0,
+};
+
+/// Look up a model spec by (case-insensitive) name.
+pub fn model_by_name(name: &str) -> Option<&'static ModelSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "qwen-7b" => Some(&QWEN_7B),
+        "llama2-7b" => Some(&LLAMA2_7B),
+        "llama3.1-8b" | "llama31-8b" => Some(&LLAMA31_8B),
+        "llama2-70b" => Some(&LLAMA2_70B),
+        "qwen-72b" => Some(&QWEN_72B),
+        "llama3-70b" => Some(&LLAMA3_70B),
+        _ => None,
+    }
+}
+
+/// All known model specs.
+pub fn all_models() -> [&'static ModelSpec; 6] {
+    [
+        &QWEN_7B,
+        &LLAMA2_7B,
+        &LLAMA31_8B,
+        &LLAMA2_70B,
+        &QWEN_72B,
+        &LLAMA3_70B,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_works() {
+        assert_eq!(model_by_name("LLAMA2-70B").unwrap().layers, 80);
+        assert!(model_by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn kv_bytes_reflect_gqa() {
+        // Llama2-70B (8 kv heads) has 8x smaller KV than Qwen-72B (64).
+        let gqa = LLAMA2_70B.kv_bytes_per_token();
+        let mha = QWEN_72B.kv_bytes_per_token();
+        assert!((mha / gqa - 8.0).abs() < 1e-9, "ratio={}", mha / gqa);
+    }
+
+    #[test]
+    fn weight_bytes_fp16() {
+        assert!((LLAMA2_7B.weight_bytes() - 6.74e9 * 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn flops_scale_with_params() {
+        assert!(LLAMA2_70B.flops_per_token() > 10.0 * LLAMA2_7B.flops_per_token() / 2.0);
+        assert!(LLAMA2_70B.attn_flops_per_token(1000.0) > 0.0);
+    }
+}

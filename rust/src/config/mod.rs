@@ -1,0 +1,12 @@
+//! Deployment configuration (paper §3.1): typed config structs, YAML
+//! ingestion, and the `auto_topology` pass that expands a high-level
+//! specification into explicit drafter/target device pools.
+
+pub mod schema;
+pub mod topology;
+
+pub use schema::{
+    parse_batching, parse_routing, parse_window, BatchKnobs, BatchingKind, NetworkConfig,
+    PoolSpec, RoutingKind, SimConfig, SimConfigBuilder, WindowKind, WorkloadConfig,
+};
+pub use topology::Topology;

@@ -1,0 +1,530 @@
+//! Typed simulation configuration and its YAML ingestion.
+//!
+//! Mirrors the paper's configuration parser (§3.1): device types, network
+//! links (RTT, jitter), and runtime policies, in a YAML file; the
+//! `auto_topology` pass ([`crate::config::topology`]) expands it into
+//! explicit device pools.
+
+use crate::cluster::{gpu_by_name, model_by_name, GpuSpec, ModelSpec};
+use crate::util::json::Json;
+use crate::util::yaml;
+
+/// Routing policy selector (paper §3.4, "Request Routing Policy").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingKind {
+    /// Uniform random target choice.
+    Random,
+    /// Round-robin over targets.
+    RoundRobin,
+    /// Join-the-Shortest-Queue.
+    Jsq,
+}
+
+/// Batching policy selector (paper §3.4, "Batching Policy").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchingKind {
+    /// First-in-first-out batch formation.
+    Fifo,
+    /// Length-aware batching: head-of-line request grouped with
+    /// similar-length peers (ORCA/Sarathi-style).
+    Lab,
+}
+
+/// Window-size policy selector (paper §3.4, "Window Size Policy").
+#[derive(Clone, Debug, PartialEq)]
+pub enum WindowKind {
+    /// Fixed γ.
+    Static(u32),
+    /// Threshold heuristic: γ+1 when recent acceptance > hi, γ−1 when
+    /// below lo (paper §5.2 baseline: hi = 0.75, lo = 0.25).
+    Dynamic { init: u32, lo: f64, hi: f64 },
+    /// Adaptive Window Control — the learned controller (paper §4).
+    /// `weights_path = None` uses the embedded pretrained weights.
+    Awc { weights_path: Option<String> },
+    /// Cloud-only execution (no speculation) — the "fused" baseline of
+    /// Fig. 6.
+    FusedOnly,
+}
+
+/// One homogeneous slice of a device pool.
+#[derive(Clone, Debug)]
+pub struct PoolSpec {
+    /// Number of devices in this slice.
+    pub count: usize,
+    /// GPU SKU.
+    pub gpu: &'static GpuSpec,
+    /// Tensor-parallel degree per device.
+    pub tp: u32,
+    /// Hosted model.
+    pub model: &'static ModelSpec,
+}
+
+/// Edge–cloud network link model: per-direction delay is
+/// `rtt/2 + |N(0, jitter)|`.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkConfig {
+    /// Round-trip time, ms.
+    pub rtt_ms: f64,
+    /// Jitter std-dev, ms.
+    pub jitter_ms: f64,
+}
+
+/// Workload source.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Benchmark profile name (gsm8k / cnndm / humaneval).
+    pub dataset: String,
+    /// Number of requests (synthetic mode).
+    pub requests: usize,
+    /// Global Poisson arrival rate, requests/second (synthetic mode).
+    pub rate_per_s: f64,
+    /// Optional trace file (trace-driven mode overrides synthetic).
+    pub trace_path: Option<String>,
+}
+
+/// Batch formation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchKnobs {
+    /// Max sequences per verify batch.
+    pub decode_batch: usize,
+    /// Max sequences per *fused-mode* decode batch. Smaller than the
+    /// verify cap: in fused mode the server co-hosts the draft model
+    /// (paper §3.3), so usable KV-cache memory — and with it the decode
+    /// batch — is roughly halved relative to a verification-only server.
+    pub fused_batch: usize,
+    /// Max requests per prefill batch.
+    pub prefill_batch: usize,
+    /// How long a server waits to accumulate a batch, ms.
+    pub window_ms: f64,
+}
+
+impl Default for BatchKnobs {
+    fn default() -> Self {
+        BatchKnobs {
+            decode_batch: 32,
+            fused_batch: 8,
+            prefill_batch: 8,
+            window_ms: 2.0,
+        }
+    }
+}
+
+/// Complete simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Root RNG seed; every stochastic element forks from it.
+    pub seed: u64,
+    /// Cloud pool slices.
+    pub target_pools: Vec<PoolSpec>,
+    /// Edge pool slices.
+    pub drafter_pools: Vec<PoolSpec>,
+    /// Edge–cloud link.
+    pub network: NetworkConfig,
+    /// Routing policy.
+    pub routing: RoutingKind,
+    /// Batching policy.
+    pub batching: BatchingKind,
+    /// Window-size policy.
+    pub window: WindowKind,
+    /// Batch formation knobs.
+    pub batch: BatchKnobs,
+    /// Workload.
+    pub workload: WorkloadConfig,
+    /// Hard stop for simulated time, ms (safety net).
+    pub max_sim_ms: f64,
+}
+
+impl SimConfig {
+    /// Start building a config with sensible defaults.
+    pub fn builder() -> SimConfigBuilder {
+        SimConfigBuilder::default()
+    }
+
+    /// Parse a YAML deployment description (see `configs/*.yaml`).
+    pub fn from_yaml(text: &str) -> Result<SimConfig, String> {
+        let doc = yaml::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&doc)
+    }
+
+    /// Load from a YAML file.
+    pub fn from_yaml_file(path: &str) -> Result<SimConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_yaml(&text)
+    }
+
+    fn from_json(doc: &Json) -> Result<SimConfig, String> {
+        let mut b = SimConfig::builder();
+        if let Some(seed) = doc.get("seed").and_then(Json::as_u64) {
+            b = b.seed(seed);
+        }
+        if let Some(cluster) = doc.get("cluster") {
+            if let Some(ts) = cluster.get("targets").and_then(Json::as_arr) {
+                b.cfg.target_pools = ts
+                    .iter()
+                    .map(|p| parse_pool(p, 4, "llama2-70b", "a100"))
+                    .collect::<Result<_, _>>()?;
+            }
+            if let Some(ds) = cluster.get("drafters").and_then(Json::as_arr) {
+                b.cfg.drafter_pools = ds
+                    .iter()
+                    .map(|p| parse_pool(p, 1, "llama2-7b", "a40"))
+                    .collect::<Result<_, _>>()?;
+            }
+        }
+        if let Some(net) = doc.get("network") {
+            if let Some(x) = net.get("rtt_ms").and_then(Json::as_f64) {
+                b.cfg.network.rtt_ms = x;
+            }
+            if let Some(x) = net.get("jitter_ms").and_then(Json::as_f64) {
+                b.cfg.network.jitter_ms = x;
+            }
+        }
+        if let Some(p) = doc.get("policies") {
+            if let Some(r) = p.get("routing").and_then(Json::as_str) {
+                b.cfg.routing = parse_routing(r)?;
+            }
+            if let Some(q) = p.get("batching").and_then(Json::as_str) {
+                b.cfg.batching = parse_batching(q)?;
+            }
+            if let Some(w) = p.get("window").and_then(Json::as_str) {
+                let gamma = p
+                    .get("static_gamma")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(4) as u32;
+                let weights = p
+                    .get("awc_weights")
+                    .and_then(Json::as_str)
+                    .map(String::from);
+                b.cfg.window = parse_window(w, gamma, weights)?;
+            }
+        }
+        if let Some(k) = doc.get("batching") {
+            if let Some(x) = k.get("decode_batch").and_then(Json::as_usize) {
+                b.cfg.batch.decode_batch = x;
+            }
+            if let Some(x) = k.get("fused_batch").and_then(Json::as_usize) {
+                b.cfg.batch.fused_batch = x;
+            }
+            if let Some(x) = k.get("prefill_batch").and_then(Json::as_usize) {
+                b.cfg.batch.prefill_batch = x;
+            }
+            if let Some(x) = k.get("window_ms").and_then(Json::as_f64) {
+                b.cfg.batch.window_ms = x;
+            }
+        }
+        if let Some(w) = doc.get("workload") {
+            if let Some(x) = w.get("dataset").and_then(Json::as_str) {
+                b.cfg.workload.dataset = x.to_string();
+            }
+            if let Some(x) = w.get("requests").and_then(Json::as_usize) {
+                b.cfg.workload.requests = x;
+            }
+            if let Some(x) = w.get("rate_per_s").and_then(Json::as_f64) {
+                b.cfg.workload.rate_per_s = x;
+            }
+            if let Some(x) = w.get("trace_path").and_then(Json::as_str) {
+                b.cfg.workload.trace_path = Some(x.to_string());
+            }
+        }
+        if let Some(x) = doc.get("max_sim_ms").and_then(Json::as_f64) {
+            b.cfg.max_sim_ms = x;
+        }
+        b.cfg.validate()?;
+        Ok(b.cfg)
+    }
+
+    /// Total target count across pools.
+    pub fn n_targets(&self) -> usize {
+        self.target_pools.iter().map(|p| p.count).sum()
+    }
+
+    /// Total drafter count across pools.
+    pub fn n_drafters(&self) -> usize {
+        self.drafter_pools.iter().map(|p| p.count).sum()
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_targets() == 0 {
+            return Err("config: at least one target required".into());
+        }
+        if self.n_drafters() == 0 && !matches!(self.window, WindowKind::FusedOnly) {
+            return Err("config: drafters required unless window=fused".into());
+        }
+        if self.network.rtt_ms < 0.0 || self.network.jitter_ms < 0.0 {
+            return Err("config: negative network parameters".into());
+        }
+        if self.workload.requests == 0 && self.workload.trace_path.is_none() {
+            return Err("config: empty workload".into());
+        }
+        if self.batch.decode_batch == 0 || self.batch.prefill_batch == 0 {
+            return Err("config: zero batch size".into());
+        }
+        Ok(())
+    }
+}
+
+fn parse_pool(
+    p: &Json,
+    default_tp: u32,
+    default_model: &str,
+    default_gpu: &str,
+) -> Result<PoolSpec, String> {
+    let gpu_name = p.get("gpu").and_then(Json::as_str).unwrap_or(default_gpu);
+    let model_name = p
+        .get("model")
+        .and_then(Json::as_str)
+        .unwrap_or(default_model);
+    Ok(PoolSpec {
+        count: p
+            .get("count")
+            .and_then(Json::as_usize)
+            .ok_or("pool: missing count")?,
+        gpu: gpu_by_name(gpu_name).ok_or_else(|| format!("unknown gpu '{gpu_name}'"))?,
+        tp: p.get("tp").and_then(Json::as_u64).unwrap_or(default_tp as u64) as u32,
+        model: model_by_name(model_name)
+            .ok_or_else(|| format!("unknown model '{model_name}'"))?,
+    })
+}
+
+/// Parse a routing policy name.
+pub fn parse_routing(s: &str) -> Result<RoutingKind, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "random" => Ok(RoutingKind::Random),
+        "rr" | "round_robin" | "round-robin" => Ok(RoutingKind::RoundRobin),
+        "jsq" => Ok(RoutingKind::Jsq),
+        _ => Err(format!("unknown routing policy '{s}'")),
+    }
+}
+
+/// Parse a batching policy name.
+pub fn parse_batching(s: &str) -> Result<BatchingKind, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "fifo" => Ok(BatchingKind::Fifo),
+        "lab" | "length_aware" => Ok(BatchingKind::Lab),
+        _ => Err(format!("unknown batching policy '{s}'")),
+    }
+}
+
+/// Parse a window policy name.
+pub fn parse_window(s: &str, gamma: u32, weights: Option<String>) -> Result<WindowKind, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "static" => Ok(WindowKind::Static(gamma)),
+        "dynamic" => Ok(WindowKind::Dynamic {
+            init: gamma,
+            lo: 0.25,
+            hi: 0.75,
+        }),
+        "awc" => Ok(WindowKind::Awc {
+            weights_path: weights,
+        }),
+        "fused" | "fused_only" | "cloud_only" => Ok(WindowKind::FusedOnly),
+        _ => Err(format!("unknown window policy '{s}'")),
+    }
+}
+
+/// Fluent builder for homogeneous single-pool configs (the common case in
+/// tests and examples); heterogeneous pools come from YAML.
+pub struct SimConfigBuilder {
+    cfg: SimConfig,
+}
+
+impl Default for SimConfigBuilder {
+    fn default() -> Self {
+        use crate::cluster::gpu::{A100, A40};
+        use crate::cluster::model::{LLAMA2_70B, LLAMA2_7B};
+        SimConfigBuilder {
+            cfg: SimConfig {
+                seed: 42,
+                target_pools: vec![PoolSpec {
+                    count: 4,
+                    gpu: &A100,
+                    tp: 4,
+                    model: &LLAMA2_70B,
+                }],
+                drafter_pools: vec![PoolSpec {
+                    count: 100,
+                    gpu: &A40,
+                    tp: 1,
+                    model: &LLAMA2_7B,
+                }],
+                network: NetworkConfig {
+                    rtt_ms: 10.0,
+                    jitter_ms: 0.5,
+                },
+                routing: RoutingKind::Jsq,
+                batching: BatchingKind::Lab,
+                window: WindowKind::Static(4),
+                batch: BatchKnobs::default(),
+                workload: WorkloadConfig {
+                    dataset: "gsm8k".into(),
+                    requests: 200,
+                    rate_per_s: 30.0,
+                    trace_path: None,
+                },
+                max_sim_ms: 3_600_000.0,
+            },
+        }
+    }
+}
+
+impl SimConfigBuilder {
+    /// Set the RNG seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+    /// Set the number of (homogeneous) targets.
+    pub fn targets(mut self, n: usize) -> Self {
+        self.cfg.target_pools[0].count = n;
+        self
+    }
+    /// Set the number of (homogeneous) drafters.
+    pub fn drafters(mut self, n: usize) -> Self {
+        self.cfg.drafter_pools[0].count = n;
+        self
+    }
+    /// Set the edge–cloud RTT.
+    pub fn rtt_ms(mut self, rtt: f64) -> Self {
+        self.cfg.network.rtt_ms = rtt;
+        self
+    }
+    /// Set network jitter.
+    pub fn jitter_ms(mut self, j: f64) -> Self {
+        self.cfg.network.jitter_ms = j;
+        self
+    }
+    /// Set the workload dataset profile.
+    pub fn dataset(mut self, d: &str) -> Self {
+        self.cfg.workload.dataset = d.to_string();
+        self
+    }
+    /// Set the number of synthetic requests.
+    pub fn requests(mut self, n: usize) -> Self {
+        self.cfg.workload.requests = n;
+        self
+    }
+    /// Set the global arrival rate (requests/second).
+    pub fn rate_per_s(mut self, r: f64) -> Self {
+        self.cfg.workload.rate_per_s = r;
+        self
+    }
+    /// Set the routing policy.
+    pub fn routing(mut self, r: RoutingKind) -> Self {
+        self.cfg.routing = r;
+        self
+    }
+    /// Set the batching policy.
+    pub fn batching(mut self, b: BatchingKind) -> Self {
+        self.cfg.batching = b;
+        self
+    }
+    /// Set the window-size policy.
+    pub fn window(mut self, w: WindowKind) -> Self {
+        self.cfg.window = w;
+        self
+    }
+    /// Set batch knobs.
+    pub fn batch_knobs(mut self, k: BatchKnobs) -> Self {
+        self.cfg.batch = k;
+        self
+    }
+    /// Finalize (panics on invalid combinations — builder misuse is a bug).
+    pub fn build(self) -> SimConfig {
+        self.cfg.validate().expect("invalid SimConfig");
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_valid() {
+        let c = SimConfig::builder().build();
+        assert_eq!(c.n_targets(), 4);
+        assert_eq!(c.n_drafters(), 100);
+    }
+
+    #[test]
+    fn yaml_full_document() {
+        let y = "\
+seed: 7
+cluster:
+  targets:
+    - count: 12
+      gpu: a100
+      tp: 4
+      model: llama2-70b
+    - count: 4
+      gpu: h100
+      tp: 4
+      model: qwen-72b
+  drafters:
+    - count: 300
+      gpu: a40
+      model: llama2-7b
+    - count: 300
+      gpu: v100
+      model: qwen-7b
+network:
+  rtt_ms: 30
+  jitter_ms: 2
+policies:
+  routing: jsq
+  batching: lab
+  window: dynamic
+  static_gamma: 6
+batching:
+  decode_batch: 48
+  prefill_batch: 4
+  window_ms: 1.5
+workload:
+  dataset: humaneval
+  requests: 100
+  rate_per_s: 12
+";
+        let c = SimConfig::from_yaml(y).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.n_targets(), 16);
+        assert_eq!(c.n_drafters(), 600);
+        assert_eq!(c.target_pools[1].gpu.name, "H100");
+        assert_eq!(c.network.rtt_ms, 30.0);
+        assert_eq!(c.routing, RoutingKind::Jsq);
+        assert_eq!(c.batching, BatchingKind::Lab);
+        assert!(matches!(c.window, WindowKind::Dynamic { init: 6, .. }));
+        assert_eq!(c.batch.decode_batch, 48);
+        assert_eq!(c.workload.dataset, "humaneval");
+    }
+
+    #[test]
+    fn yaml_partial_uses_defaults() {
+        let c = SimConfig::from_yaml("seed: 1\n").unwrap();
+        assert_eq!(c.seed, 1);
+        assert_eq!(c.routing, RoutingKind::Jsq); // builder default
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(SimConfig::from_yaml("cluster:\n  targets:\n    - count: 0\n").is_err());
+        let y = "network:\n  rtt_ms: -5\n";
+        assert!(SimConfig::from_yaml(y).is_err());
+        assert!(parse_routing("nope").is_err());
+        assert!(parse_batching("nope").is_err());
+        assert!(parse_window("nope", 4, None).is_err());
+    }
+
+    #[test]
+    fn unknown_hardware_rejected() {
+        let y = "cluster:\n  targets:\n    - count: 1\n      gpu: tpu-v5\n";
+        assert!(SimConfig::from_yaml(y).unwrap_err().contains("unknown gpu"));
+    }
+
+    #[test]
+    fn window_policy_names() {
+        assert!(matches!(parse_window("static", 4, None), Ok(WindowKind::Static(4))));
+        assert!(matches!(parse_window("awc", 4, None), Ok(WindowKind::Awc { .. })));
+        assert!(matches!(parse_window("fused", 4, None), Ok(WindowKind::FusedOnly)));
+    }
+}

@@ -1,0 +1,105 @@
+//! The `auto_topology` pass (paper §3.1): expand pool slices from the
+//! configuration into explicit drafter and target device lists with fully
+//! defined network connections.
+
+use super::schema::SimConfig;
+use crate::cluster::{DeviceInstance, DevicePool, Role};
+
+/// Fully expanded deployment topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Cloud pool (targets), ids 0..n_targets.
+    pub targets: DevicePool,
+    /// Edge pool (drafters), ids 0..n_drafters.
+    pub drafters: DevicePool,
+    /// Edge→cloud RTT, ms (all links share the config's RTT/jitter model;
+    /// per-link heterogeneity enters through jitter draws at send time).
+    pub rtt_ms: f64,
+    /// Jitter std-dev, ms.
+    pub jitter_ms: f64,
+}
+
+impl Topology {
+    /// Expand a [`SimConfig`] into explicit device pools.
+    pub fn expand(cfg: &SimConfig) -> Result<Topology, String> {
+        let mut targets = DevicePool::default();
+        for p in &cfg.target_pools {
+            for _ in 0..p.count {
+                targets.add(Role::Target, p.gpu, p.tp, p.model);
+            }
+        }
+        let mut drafters = DevicePool::default();
+        for p in &cfg.drafter_pools {
+            for _ in 0..p.count {
+                drafters.add(Role::Drafter, p.gpu, p.tp, p.model);
+            }
+        }
+        targets.validate()?;
+        drafters.validate()?;
+        Ok(Topology {
+            targets,
+            drafters,
+            rtt_ms: cfg.network.rtt_ms,
+            jitter_ms: cfg.network.jitter_ms,
+        })
+    }
+
+    /// Target device by id.
+    pub fn target(&self, id: usize) -> &DeviceInstance {
+        &self.targets.devices[id]
+    }
+
+    /// Drafter device by id.
+    pub fn drafter(&self, id: usize) -> &DeviceInstance {
+        &self.drafters.devices[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn expansion_counts_and_order() {
+        let y = "\
+cluster:
+  targets:
+    - count: 2
+      gpu: a100
+      tp: 4
+      model: llama2-70b
+    - count: 3
+      gpu: h100
+      tp: 4
+      model: qwen-72b
+  drafters:
+    - count: 5
+      gpu: a40
+      model: llama2-7b
+";
+        let cfg = SimConfig::from_yaml(y).unwrap();
+        let topo = Topology::expand(&cfg).unwrap();
+        assert_eq!(topo.targets.len(), 5);
+        assert_eq!(topo.drafters.len(), 5);
+        // Pool slices expand in order; ids are stable.
+        assert_eq!(topo.target(0).gpu.name, "A100");
+        assert_eq!(topo.target(2).gpu.name, "H100");
+        assert_eq!(topo.target(4).id, 4);
+    }
+
+    #[test]
+    fn memory_violations_caught() {
+        // 70B on a single A40 does not fit.
+        let y = "\
+cluster:
+  targets:
+    - count: 1
+      gpu: a40
+      tp: 1
+      model: llama2-70b
+";
+        let cfg = SimConfig::from_yaml(y).unwrap();
+        assert!(Topology::expand(&cfg).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Typed wrappers over the AOT artifacts: the draft engine (edge side)
+//! and the target engine (cloud side). Both are stateless — KV caches are
+//! values owned by the caller, which is what lets the coordinator manage
+//! residency, rollback, and migration explicitly.
+
+use crate::runtime::exec::{Runtime, Tensor};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Greedy argmax over a logits slice.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Edge-side draft model.
+pub struct DraftEngine {
+    rt: Arc<Runtime>,
+}
+
+/// Cloud-side target model.
+pub struct TargetEngine {
+    rt: Arc<Runtime>,
+}
+
+/// An opaque KV cache value (runtime tensor).
+pub type KvCache = Tensor;
+
+impl DraftEngine {
+    /// Bind to a runtime.
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        DraftEngine { rt }
+    }
+
+    /// Prefill a prompt; returns (next-token logits, kv, prompt_len).
+    pub fn prefill(&self, prompt: &[u8]) -> Result<(Vec<f32>, KvCache, usize)> {
+        prefill_common(&self.rt, "draft_prefill", prompt)
+    }
+
+    /// One decode step; returns (logits, kv).
+    pub fn decode(&self, token: i32, pos: usize, kv: KvCache) -> Result<(Vec<f32>, KvCache)> {
+        let exe = self.rt.executable("draft_decode")?;
+        let mut out = exe.call(&[
+            Tensor::scalar_i32(token),
+            Tensor::scalar_i32(pos as i32),
+            kv,
+        ])?;
+        let kv = out.pop().ok_or_else(|| anyhow!("missing kv"))?;
+        let logits = out
+            .pop()
+            .and_then(|t| t.as_f32().map(|s| s.to_vec()))
+            .ok_or_else(|| anyhow!("missing logits"))?;
+        Ok((logits, kv))
+    }
+
+    /// Draft `gamma` greedy tokens starting from `last_token` at `pos`.
+    /// Returns (draft_tokens, kv) with the cache advanced by `gamma`.
+    pub fn draft_window(
+        &self,
+        last_token: i32,
+        pos: usize,
+        gamma: u32,
+        mut kv: KvCache,
+    ) -> Result<(Vec<i32>, KvCache)> {
+        let mut tokens = Vec::with_capacity(gamma as usize);
+        let mut tok = last_token;
+        let mut p = pos;
+        for _ in 0..gamma {
+            let (logits, new_kv) = self.decode(tok, p, kv)?;
+            kv = new_kv;
+            tok = argmax(&logits);
+            tokens.push(tok);
+            p += 1;
+        }
+        Ok((tokens, kv))
+    }
+
+    /// Re-sync the draft cache with corrected tokens (after a rejection,
+    /// the accepted prefix + correction must be fed through the drafter so
+    /// its cache matches the canonical sequence). Returns the cache
+    /// advanced over `tokens` starting at `pos`.
+    pub fn resync(&self, tokens: &[i32], pos: usize, mut kv: KvCache) -> Result<KvCache> {
+        let mut p = pos;
+        for &t in tokens {
+            let (_, new_kv) = self.decode(t, p, kv)?;
+            kv = new_kv;
+            p += 1;
+        }
+        Ok(kv)
+    }
+
+    /// Max sequence length of the draft cache.
+    pub fn max_len(&self) -> usize {
+        self.rt.manifest().draft_max_len
+    }
+}
+
+impl TargetEngine {
+    /// Bind to a runtime.
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        TargetEngine { rt }
+    }
+
+    /// Prefill a prompt; returns (next-token logits, kv, prompt_len).
+    pub fn prefill(&self, prompt: &[u8]) -> Result<(Vec<f32>, KvCache, usize)> {
+        prefill_common(&self.rt, "target_prefill", prompt)
+    }
+
+    /// One fused decode step (cloud-only generation).
+    pub fn decode(&self, token: i32, pos: usize, kv: KvCache) -> Result<(Vec<f32>, KvCache)> {
+        let exe = self.rt.executable("target_decode")?;
+        let mut out = exe.call(&[
+            Tensor::scalar_i32(token),
+            Tensor::scalar_i32(pos as i32),
+            kv,
+        ])?;
+        let kv = out.pop().ok_or_else(|| anyhow!("missing kv"))?;
+        let logits = out
+            .pop()
+            .and_then(|t| t.as_f32().map(|s| s.to_vec()))
+            .ok_or_else(|| anyhow!("missing logits"))?;
+        Ok((logits, kv))
+    }
+
+    /// Verify a speculation window (paper Fig. 1(c) step 2-3).
+    ///
+    /// `window` = last accepted token followed by γ draft tokens, at
+    /// absolute positions `[pos, pos+γ]`. Uses the pre-lowered verify
+    /// artifact for the largest available γ' ≤ γ... the caller must pass a
+    /// γ with an exact artifact (see [`crate::runtime::Manifest::nearest_verify_gamma`]).
+    ///
+    /// Returns `(accepted, next_token, kv)`: number of draft tokens
+    /// accepted, the target's correction/bonus token, and the cache (valid
+    /// through `pos + accepted`; later rows are stale and are overwritten
+    /// by subsequent windows — position-based rollback).
+    pub fn verify(
+        &self,
+        window: &[i32],
+        pos: usize,
+        kv: KvCache,
+    ) -> Result<(u32, i32, KvCache)> {
+        let gamma = window.len() - 1;
+        let exe = self.rt.executable(&format!("target_verify_g{gamma}"))?;
+        let mut out = exe.call(&[
+            Tensor::vec_i32(window.to_vec()),
+            Tensor::scalar_i32(pos as i32),
+            kv,
+        ])?;
+        let kv = out.pop().ok_or_else(|| anyhow!("missing kv"))?;
+        let logits_t = out.pop().ok_or_else(|| anyhow!("missing logits"))?;
+        let logits = logits_t.as_f32().ok_or_else(|| anyhow!("logits dtype"))?;
+        let vocab = self.rt.manifest().vocab;
+        // Greedy acceptance fold (the L1 verify kernel's semantics;
+        // asserted equivalent in python tests): row i scores position
+        // pos+i+1, draft token i+1 of the window.
+        let mut accepted = 0u32;
+        for i in 0..gamma {
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            if argmax(row) == window[i + 1] {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        let next_row = &logits[(accepted as usize) * vocab..(accepted as usize + 1) * vocab];
+        Ok((accepted, argmax(next_row), kv))
+    }
+
+    /// Max sequence length of the target cache.
+    pub fn max_len(&self) -> usize {
+        self.rt.manifest().target_max_len
+    }
+
+    /// Available verify window sizes.
+    pub fn nearest_gamma(&self, wanted: u32) -> u32 {
+        self.rt.manifest().nearest_verify_gamma(wanted)
+    }
+}
+
+fn prefill_common(
+    rt: &Arc<Runtime>,
+    key: &str,
+    prompt: &[u8],
+) -> Result<(Vec<f32>, KvCache, usize)> {
+    let pad = rt.manifest().prompt_pad;
+    if prompt.is_empty() || prompt.len() > pad {
+        return Err(anyhow!(
+            "prompt length {} out of range [1, {pad}]",
+            prompt.len()
+        ));
+    }
+    let mut tokens = vec![0i32; pad];
+    for (i, &b) in prompt.iter().enumerate() {
+        tokens[i] = b as i32;
+    }
+    let exe = rt.executable(key)?;
+    let mut out = exe.call(&[
+        Tensor::I32(tokens, vec![pad]),
+        Tensor::scalar_i32(prompt.len() as i32),
+    ])?;
+    let kv = out.pop().ok_or_else(|| anyhow!("missing kv"))?;
+    let logits = out
+        .pop()
+        .and_then(|t| t.as_f32().map(|s| s.to_vec()))
+        .ok_or_else(|| anyhow!("missing logits"))?;
+    Ok((logits, kv, prompt.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        // Ties resolve to the first maximum (matches jnp.argmax).
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+    }
+}

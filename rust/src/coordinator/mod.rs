@@ -1,0 +1,15 @@
+//! The real edge–cloud serving coordinator: PJRT-backed draft/target
+//! engines, threaded drafter/verifier pools, emulated network links, and
+//! genuine speculative decoding over the AOT artifacts.
+//!
+//! Greedy speculative decoding is *output-invariant*: the served sequence
+//! equals the target model's own greedy decode — the integration tests
+//! assert this against the fused baseline.
+
+pub mod api;
+pub mod engine;
+pub mod service;
+
+pub use api::{ServeRequest, ServeResponse, ServeStats};
+pub use engine::{argmax, DraftEngine, TargetEngine};
+pub use service::{Coordinator, ServeConfig, ServeWindow};

@@ -1,0 +1,410 @@
+//! The real edge–cloud serving path (paper Fig. 1(a)/(b)) on AOT
+//! artifacts: edge drafter threads speculate with the draft model, cloud
+//! verifier threads batch-verify with the target model, a channel pair
+//! with injected delay plays the network.
+//!
+//! Python never runs here — every model call goes through PJRT-compiled
+//! HLO. The speculation semantics (window verify, first-mismatch
+//! correction, bonus token, position-based KV rollback) are exactly those
+//! of [`crate::specdec`], now against *real* logits rather than trace
+//! bits.
+
+use super::api::{ServeRequest, ServeResponse, ServeStats};
+use super::engine::{argmax, DraftEngine, KvCache, TargetEngine};
+use crate::awc::{AwcPolicy, AwcWeights};
+use crate::policies::window::{ExecMode, WindowFeatures, WindowPolicy};
+use crate::runtime::exec::Runtime;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Window policy selector for the real path.
+#[derive(Clone, Debug)]
+pub enum ServeWindow {
+    /// Fixed γ.
+    Static(u32),
+    /// AWC with the embedded pretrained weights.
+    Awc,
+    /// Cloud-only decoding (no speculation) — the fused baseline.
+    FusedOnly,
+}
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Edge drafter worker threads.
+    pub n_drafters: usize,
+    /// Cloud verifier worker threads.
+    pub n_verifiers: usize,
+    /// Emulated edge–cloud RTT, ms (sleep-injected, half per direction).
+    pub rtt_ms: f64,
+    /// Window policy.
+    pub window: ServeWindow,
+    /// Max output tokens per request (bounded by cache capacity).
+    pub max_new_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_drafters: 4,
+            n_verifiers: 2,
+            rtt_ms: 10.0,
+            window: ServeWindow::Static(4),
+            max_new_tokens: 64,
+        }
+    }
+}
+
+/// Jobs sent from edge workers to the cloud.
+enum CloudJob {
+    Prefill {
+        prompt: Vec<u8>,
+        reply: mpsc::Sender<Result<(Vec<f32>, KvCache, usize)>>,
+    },
+    Verify {
+        window: Vec<i32>,
+        pos: usize,
+        kv: KvCache,
+        reply: mpsc::Sender<Result<(u32, i32, KvCache)>>,
+    },
+    Decode {
+        token: i32,
+        pos: usize,
+        kv: KvCache,
+        reply: mpsc::Sender<Result<(Vec<f32>, KvCache)>>,
+    },
+}
+
+/// The coordinator: artifact location + thread topology.
+///
+/// PJRT clients are **per worker thread** (the `xla` crate's client is not
+/// `Send`); this also mirrors the paper's deployment — every edge device
+/// and every cloud server owns its own model runtime.
+pub struct Coordinator {
+    artifacts_dir: std::path::PathBuf,
+    cfg: ServeConfig,
+}
+
+impl Coordinator {
+    /// Validate the artifacts and build the coordinator.
+    pub fn new(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> Result<Coordinator> {
+        // Fail fast on a missing/inconsistent manifest.
+        let _ = crate::runtime::Manifest::load(artifacts_dir)
+            .map_err(anyhow::Error::msg)?;
+        Ok(Coordinator {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cfg,
+        })
+    }
+
+    /// Serve a batch of requests through the full edge–cloud topology;
+    /// blocks until every request completes.
+    ///
+    /// Workers warm (parse + PJRT-compile) their role's artifacts before
+    /// the serving clock starts — a barrier separates deployment cost
+    /// from serving latency, exactly as a real launch would.
+    pub fn serve(&self, requests: Vec<ServeRequest>) -> Result<(Vec<ServeResponse>, ServeStats)> {
+        let n_workers = self.cfg.n_drafters.max(1) + self.cfg.n_verifiers.max(1);
+        let ready = Arc::new(std::sync::Barrier::new(n_workers + 1));
+        let queue = Arc::new(Mutex::new(VecDeque::from(requests)));
+        let results = Arc::new(Mutex::new(Vec::<ServeResponse>::new()));
+        let (job_tx, job_rx) = mpsc::channel::<CloudJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+
+        // ---- Cloud pool: verifier workers (one PJRT client each) ----
+        let mut cloud_handles = Vec::new();
+        for _ in 0..self.cfg.n_verifiers.max(1) {
+            let rx = job_rx.clone();
+            let dir = self.artifacts_dir.clone();
+            let inflight = inflight.clone();
+            let ready = ready.clone();
+            cloud_handles.push(std::thread::spawn(move || {
+                let rt = Arc::new(Runtime::load(&dir).expect("cloud runtime"));
+                rt.warmup_prefix("target_").expect("cloud warmup");
+                ready.wait();
+                let target = TargetEngine::new(rt);
+                loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(job) = job else { break };
+                    match job {
+                        CloudJob::Prefill { prompt, reply } => {
+                            let _ = reply.send(target.prefill(&prompt));
+                        }
+                        CloudJob::Verify { window, pos, kv, reply } => {
+                            let _ = reply.send(target.verify(&window, pos, kv));
+                        }
+                        CloudJob::Decode { token, pos, kv, reply } => {
+                            let _ = reply.send(target.decode(token, pos, kv));
+                        }
+                    }
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+            }));
+        }
+
+        // ---- Edge pool: drafter workers (one PJRT client each) ----
+        let mut edge_handles = Vec::new();
+        for worker in 0..self.cfg.n_drafters.max(1) {
+            let queue = queue.clone();
+            let results = results.clone();
+            let job_tx = job_tx.clone();
+            let dir = self.artifacts_dir.clone();
+            let cfg = self.cfg.clone();
+            let inflight = inflight.clone();
+            let ready = ready.clone();
+            edge_handles.push(std::thread::spawn(move || {
+                let rt = Arc::new(Runtime::load(&dir).expect("edge runtime"));
+                rt.warmup_prefix("draft_").expect("edge warmup");
+                ready.wait();
+                let draft = DraftEngine::new(rt.clone());
+                let target_meta = TargetEngine::new(rt);
+                let mut awc = AwcPolicy::new(AwcWeights::builtin());
+                loop {
+                    let req = queue.lock().unwrap().pop_front();
+                    let Some(req) = req else { break };
+                    match serve_one(
+                        &cfg, &draft, &target_meta, &job_tx, &inflight, &mut awc, req, worker,
+                    ) {
+                        Ok(resp) => results.lock().unwrap().push(resp),
+                        Err(e) => eprintln!("[coordinator] request failed: {e:#}"),
+                    }
+                }
+            }));
+        }
+        drop(job_tx);
+
+        // Serving clock starts once every worker has compiled its models.
+        ready.wait();
+        let t0 = Instant::now();
+
+        for h in edge_handles {
+            h.join().expect("edge worker panicked");
+        }
+        // Edge workers dropped their senders; cloud workers drain and exit.
+        for h in cloud_handles {
+            h.join().expect("cloud worker panicked");
+        }
+
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut rs = Arc::try_unwrap(results)
+            .expect("no outstanding refs")
+            .into_inner()
+            .unwrap();
+        rs.sort_by_key(|r| r.id);
+        let stats = ServeStats::from_responses(&rs, wall_ms);
+        Ok((rs, stats))
+    }
+}
+
+/// Half-RTT network delay injection.
+fn net_leg(rtt_ms: f64) {
+    if rtt_ms > 0.0 {
+        std::thread::sleep(std::time::Duration::from_micros((rtt_ms * 500.0) as u64));
+    }
+}
+
+/// Run one request's full speculative-decoding lifecycle from its edge
+/// drafter: prefill both sides, then window-decide / draft / ship /
+/// verify / correct until done.
+#[allow(clippy::too_many_arguments)]
+fn serve_one(
+    cfg: &ServeConfig,
+    draft: &DraftEngine,
+    target_meta: &TargetEngine,
+    job_tx: &mpsc::Sender<CloudJob>,
+    inflight: &Arc<AtomicUsize>,
+    awc: &mut AwcPolicy,
+    req: ServeRequest,
+    worker: usize,
+) -> Result<ServeResponse> {
+    let t0 = Instant::now();
+    let max_new = req.max_new_tokens.min(cfg.max_new_tokens);
+
+    // --- Target prefill (prompt travels to the cloud) ---
+    let (tx, rx) = mpsc::channel();
+    net_leg(cfg.rtt_ms);
+    inflight.fetch_add(1, Ordering::Relaxed);
+    job_tx
+        .send(CloudJob::Prefill { prompt: req.prompt.clone(), reply: tx })
+        .ok();
+    // --- Edge prefill happens concurrently on this thread ---
+    let fused_only = matches!(cfg.window, ServeWindow::FusedOnly);
+    let mut draft_state = if fused_only {
+        None
+    } else {
+        let (_logits, kv, _len) = draft.prefill(&req.prompt)?;
+        Some(kv)
+    };
+    let (t_logits, mut t_kv, prompt_len) = rx.recv().expect("cloud prefill reply")?;
+    net_leg(cfg.rtt_ms);
+
+    // First token comes from the target's prefill logits.
+    let first_token = argmax(&t_logits);
+    let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut output: Vec<i32> = vec![first_token];
+    let mut target_pos = prompt_len; // rows written in the target cache
+    let mut draft_pos = prompt_len; // rows written in the draft cache
+    let mut last_token = first_token;
+    let mut drafted = 0u32;
+    let mut accepted_total = 0u32;
+    let mut rounds = 0u32;
+    let mut gamma_sum = 0u64;
+    let mut acc_ema = crate::util::stats::Ema::new(0.3);
+    let mut rtt_ema = crate::util::stats::Ema::new(0.3);
+    let mut tpot_ema = crate::util::stats::Ema::new(0.3);
+
+    let cache_limit = target_meta.max_len().min(draft.max_len());
+    let pair_key = (worker as u64) << 32 | req.id as u64;
+
+    while output.len() < max_new {
+        let remaining = (max_new - output.len()) as u32;
+        // Window decision (AWC features measured from live signals).
+        let decision = match &cfg.window {
+            ServeWindow::Static(g) => crate::policies::window::WindowDecision {
+                gamma: *g,
+                mode: ExecMode::Distributed,
+            },
+            ServeWindow::FusedOnly => crate::policies::window::WindowDecision {
+                gamma: 1,
+                mode: ExecMode::Fused,
+            },
+            ServeWindow::Awc => {
+                let feats = WindowFeatures {
+                    queue_depth_util: inflight.load(Ordering::Relaxed) as f64
+                        / cfg.n_verifiers.max(1) as f64,
+                    acceptance_recent: acc_ema.value_or(0.7),
+                    rtt_recent_ms: rtt_ema.value_or(cfg.rtt_ms),
+                    tpot_recent_ms: tpot_ema.value_or(0.0),
+                    gamma_prev: gamma_sum
+                        .checked_div(rounds as u64)
+                        .unwrap_or(4)
+                        .max(1) as u32,
+                };
+                awc.decide(pair_key, &feats)
+            }
+        };
+
+        let round_start = Instant::now();
+        if decision.mode == ExecMode::Fused || draft_state.is_none() {
+            // Fused: the cloud decodes directly (no per-token network).
+            let (tx, rx) = mpsc::channel();
+            inflight.fetch_add(1, Ordering::Relaxed);
+            job_tx
+                .send(CloudJob::Decode { token: last_token, pos: target_pos, kv: t_kv, reply: tx })
+                .ok();
+            let (logits, kv) = rx.recv().expect("cloud decode reply")?;
+            t_kv = kv;
+            target_pos += 1;
+            last_token = argmax(&logits);
+            output.push(last_token);
+            // Keep the drafter's view consistent for later rounds.
+            if let Some(kv) = draft_state.take() {
+                draft_state = Some(draft.resync(&[output[output.len() - 2]], draft_pos, kv)?);
+                draft_pos += 1;
+            }
+            rounds += 1;
+            tpot_ema.push(round_start.elapsed().as_secs_f64() * 1e3);
+            if target_pos + 2 >= cache_limit {
+                break;
+            }
+            continue;
+        }
+
+        // Distributed round.
+        let gamma_req = decision.gamma.min(remaining.max(1));
+        let gamma = target_meta.nearest_gamma(gamma_req);
+        // Cache capacity guard: window occupies [target_pos, target_pos+γ].
+        if target_pos + gamma as usize + 2 >= cache_limit {
+            break;
+        }
+        gamma_sum += gamma as u64;
+
+        // 1. Draft γ tokens locally.
+        let kv = draft_state.take().expect("draft cache");
+        let (draft_tokens, kv) = draft.draft_window(last_token, draft_pos, gamma, kv)?;
+        draft_pos += gamma as usize;
+        draft_state = Some(kv);
+        drafted += gamma;
+
+        // 2. Ship to the cloud; 3. verify there; 4. result returns.
+        let mut window = Vec::with_capacity(gamma as usize + 1);
+        window.push(last_token);
+        window.extend_from_slice(&draft_tokens);
+        let net_start = Instant::now();
+        net_leg(cfg.rtt_ms);
+        let (tx, rx) = mpsc::channel();
+        inflight.fetch_add(1, Ordering::Relaxed);
+        job_tx
+            .send(CloudJob::Verify { window, pos: target_pos, kv: t_kv, reply: tx })
+            .ok();
+        let (accepted, correction, kv) = rx.recv().expect("cloud verify reply")?;
+        net_leg(cfg.rtt_ms);
+        rtt_ema.push(net_start.elapsed().as_secs_f64() * 1e3);
+        t_kv = kv;
+
+        // 5. Advance the canonical sequence: accepted drafts + correction.
+        for &t in draft_tokens.iter().take(accepted as usize) {
+            output.push(t);
+        }
+        output.push(correction);
+        accepted_total += accepted;
+        acc_ema.push(accepted as f64 / gamma as f64);
+        target_pos += accepted as usize + 1;
+        rounds += 1;
+
+        // 6. Drafter-side rollback/resync (position-based):
+        //    all-accept leaves one canonical row (the last draft token)
+        //    missing from the draft cache — feed it through.
+        if accepted == gamma {
+            let kv = draft_state.take().unwrap();
+            let missing = draft_tokens[gamma as usize - 1];
+            draft_state = Some(draft.resync(&[missing], draft_pos, kv)?);
+            draft_pos += 1;
+        } else {
+            // Partial accept: roll the draft cursor back to the corrected
+            // position; stale rows beyond it are masked (attention length
+            // = position) and overwritten as decoding continues.
+            draft_pos = target_pos;
+        }
+        last_token = correction;
+        let produced = accepted + 1;
+        tpot_ema.push(round_start.elapsed().as_secs_f64() * 1e3 / produced as f64);
+    }
+
+    // A window can overshoot the budget (accepted+1 tokens land at once);
+    // clip to the requested length like any serving API would.
+    output.truncate(max_new);
+    let e2e_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let out_tokens = output.len();
+    let tpot_ms = if out_tokens > 1 {
+        (e2e_ms - ttft_ms) / (out_tokens - 1) as f64
+    } else {
+        0.0
+    };
+    Ok(ServeResponse {
+        id: req.id,
+        output: output
+            .iter()
+            .map(|&t| t.clamp(0, 255) as u8)
+            .collect(),
+        ttft_ms,
+        e2e_ms,
+        tpot_ms,
+        drafted,
+        accepted: accepted_total,
+        rounds,
+        mean_gamma: if rounds == 0 {
+            0.0
+        } else {
+            gamma_sum as f64 / rounds as f64
+        },
+    })
+}

@@ -1,0 +1,200 @@
+//! Shared infrastructure for the paper-reproduction experiments: the
+//! paper's cluster definitions (§5.2), per-dataset workload operating
+//! points, and result-row plumbing.
+
+use crate::config::{
+    BatchingKind, PoolSpec, RoutingKind, SimConfig, WindowKind,
+};
+use crate::metrics::SimReport;
+use crate::sim::Simulator;
+use crate::util::json::Json;
+
+/// Scale factor applied to request counts (1.0 = paper scale). Tests use
+/// small factors so experiments still finish in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    /// Paper scale.
+    pub fn full() -> Scale {
+        Scale(1.0)
+    }
+    /// Reduced scale for CI/tests.
+    pub fn tiny() -> Scale {
+        Scale(0.08)
+    }
+    /// Scale a request count.
+    pub fn n(&self, full: usize) -> usize {
+        ((full as f64 * self.0).round() as usize).max(8)
+    }
+}
+
+/// The heterogeneous Cloud Pool of §5.2: 20 servers hosting Llama2-70B,
+/// Llama3-70B and Qwen-72B across 4×A100, 4×H100 and 4×A6000 gangs.
+pub fn cloud_pool_20() -> Vec<PoolSpec> {
+    use crate::cluster::gpu::{A100, A6000, H100};
+    use crate::cluster::model::{LLAMA2_70B, LLAMA3_70B, QWEN_72B};
+    vec![
+        PoolSpec { count: 8, gpu: &A100, tp: 4, model: &LLAMA2_70B },
+        PoolSpec { count: 6, gpu: &H100, tp: 4, model: &QWEN_72B },
+        PoolSpec { count: 6, gpu: &A6000, tp: 4, model: &LLAMA3_70B },
+    ]
+}
+
+/// The Edge Pool of §5.2: `n` GPUs split evenly between A40s and V100s,
+/// serving Llama2-7B, Qwen-7B and Llama3.1-8B draft models evenly.
+pub fn edge_pool(n: usize) -> Vec<PoolSpec> {
+    use crate::cluster::gpu::{A40, V100};
+    use crate::cluster::model::{LLAMA2_7B, LLAMA31_8B, QWEN_7B};
+    let per = (n / 6).max(1);
+    let rem = n.saturating_sub(per * 5);
+    vec![
+        PoolSpec { count: per, gpu: &A40, tp: 1, model: &LLAMA2_7B },
+        PoolSpec { count: per, gpu: &A40, tp: 1, model: &QWEN_7B },
+        PoolSpec { count: per, gpu: &A40, tp: 1, model: &LLAMA31_8B },
+        PoolSpec { count: per, gpu: &V100, tp: 1, model: &LLAMA2_7B },
+        PoolSpec { count: per, gpu: &V100, tp: 1, model: &QWEN_7B },
+        PoolSpec { count: rem, gpu: &V100, tp: 1, model: &LLAMA31_8B },
+    ]
+}
+
+/// Per-dataset operating point: request count from §5.2 (400 GSM8K,
+/// 400 CNN/DailyMail, 100 HumanEval prompts) and an arrival rate placing
+/// the default cluster near its capacity knee, where policy quality is
+/// visible (the paper's throughput regime).
+pub fn workload_point(dataset: &str) -> (usize, f64) {
+    // Rates are chosen so the default cluster operates at/near target
+    // saturation — the paper's regime (its CNN/DM TTFTs of 1.6–3.0 s and
+    // HumanEval TTFTs of 0.8–2.6 s only arise with queueing).
+    match dataset {
+        "gsm8k" => (400, 60.0),
+        "cnndm" => (400, 16.0),
+        "humaneval" => (100, 32.0),
+        _ => (200, 20.0),
+    }
+}
+
+/// Build the paper's default large-cluster config.
+pub fn paper_config(
+    dataset: &str,
+    n_drafters: usize,
+    rtt_ms: f64,
+    routing: RoutingKind,
+    batching: BatchingKind,
+    window: WindowKind,
+    scale: Scale,
+    seed: u64,
+) -> SimConfig {
+    // Scaling shrinks the request *count* (wall-clock) but never the
+    // arrival rate: the operating point (offered load vs capacity) is
+    // what produces the paper's shapes.
+    let (req_full, rate) = workload_point(dataset);
+    let mut cfg = SimConfig::builder()
+        .seed(seed)
+        .dataset(dataset)
+        .requests(scale.n(req_full))
+        .rate_per_s(rate)
+        .rtt_ms(rtt_ms)
+        .routing(routing)
+        .batching(batching)
+        .window(window)
+        .build();
+    cfg.target_pools = cloud_pool_20();
+    cfg.drafter_pools = edge_pool(n_drafters);
+    cfg
+}
+
+/// Run a config with several seeds; returns per-seed reports (the paper
+/// averages over random seeds, §5).
+pub fn run_seeds(cfg: &SimConfig, seeds: &[u64]) -> Vec<SimReport> {
+    seeds
+        .iter()
+        .map(|&s| {
+            let mut c = cfg.clone();
+            c.seed = s;
+            Simulator::new(c).run()
+        })
+        .collect()
+}
+
+/// Mean of a metric across reports.
+pub fn mean_of(reports: &[SimReport], f: impl Fn(&SimReport) -> f64) -> f64 {
+    crate::util::stats::mean(&reports.iter().map(f).collect::<Vec<_>>())
+}
+
+/// A generic experiment result row for JSON export.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Experiment id (e.g. `"fig5"`).
+    pub exp: String,
+    /// Row labels (dataset, policy, x-value...).
+    pub labels: Vec<(String, String)>,
+    /// Metric values.
+    pub values: Vec<(String, f64)>,
+}
+
+impl Row {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj().with("exp", self.exp.as_str().into());
+        for (k, v) in &self.labels {
+            j.set(k, v.as_str().into());
+        }
+        for (k, v) in &self.values {
+            j.set(k, (*v).into());
+        }
+        j
+    }
+}
+
+/// Write rows to `data/results/<exp>.jsonl` (best effort).
+pub fn save_rows(exp: &str, rows: &[Row]) {
+    let dir = std::path::Path::new("data/results");
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let path = dir.join(format!("{exp}.jsonl"));
+    let mut out = String::new();
+    for r in rows {
+        out.push_str(&r.to_json().to_string_compact());
+        out.push('\n');
+    }
+    let _ = std::fs::write(path, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_match_paper_counts() {
+        let cloud: usize = cloud_pool_20().iter().map(|p| p.count).sum();
+        assert_eq!(cloud, 20);
+        let edge: usize = edge_pool(600).iter().map(|p| p.count).sum();
+        assert_eq!(edge, 600);
+        let edge: usize = edge_pool(1000).iter().map(|p| p.count).sum();
+        assert_eq!(edge, 1000);
+    }
+
+    #[test]
+    fn paper_config_builds_and_runs_tiny() {
+        let cfg = paper_config(
+            "gsm8k",
+            60,
+            10.0,
+            RoutingKind::Jsq,
+            BatchingKind::Lab,
+            WindowKind::Static(4),
+            Scale(0.05),
+            1,
+        );
+        let rep = Simulator::new(cfg).run();
+        assert!(rep.system.completed > 0);
+    }
+
+    #[test]
+    fn scale_floors_request_count() {
+        assert_eq!(Scale(0.001).n(400), 8);
+        assert_eq!(Scale::full().n(400), 400);
+    }
+}

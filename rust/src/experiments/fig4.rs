@@ -1,0 +1,146 @@
+//! Figure 4 — GPU-level calibration: DSD-Sim's predicted prefill/decode
+//! latencies vs "real hardware" measurements for Qwen-7B, Qwen-72B,
+//! Llama2-7B, Llama2-70B on A40/A100/H100, over GSM8K-like prompts with
+//! error bars across 100 requests.
+//!
+//! Paper result: prefill MAE ≈ 7.4%, decode MAE ≈ 5.2%, predictions
+//! systematically *below* measurements (VIDUR omits NCCL + non-kernel
+//! time).
+
+use super::common::{save_rows, Row};
+use crate::cluster::gpu::{A100, A40, H100};
+use crate::cluster::model::{LLAMA2_70B, LLAMA2_7B, QWEN_72B, QWEN_7B};
+use crate::cluster::{GpuSpec, ModelSpec};
+use crate::hwmodel::{Hardware, HardwareOracle, Op, Predictor};
+use crate::trace::GSM8K;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fnum, Table};
+
+/// The model/GPU pairs of Fig. 4 (each model on its natural tier).
+fn configurations() -> Vec<(&'static ModelSpec, &'static GpuSpec, u32)> {
+    vec![
+        (&QWEN_7B, &A40, 1),
+        (&LLAMA2_7B, &A40, 1),
+        (&QWEN_7B, &A100, 1),
+        (&LLAMA2_7B, &A100, 1),
+        (&QWEN_72B, &A100, 4),
+        (&LLAMA2_70B, &A100, 4),
+        (&QWEN_72B, &H100, 4),
+        (&LLAMA2_70B, &H100, 4),
+    ]
+}
+
+/// Run the calibration; returns (table text, prefill MAE %, decode MAE %).
+pub fn run(seed: u64) -> (String, f64, f64) {
+    let predictor = Predictor::new();
+    let mut oracle = HardwareOracle::new(seed);
+    let mut rng = Pcg64::new(seed ^ 0xF16_4);
+    let mut table = Table::new(&[
+        "model/gpu",
+        "op",
+        "predicted ms",
+        "measured ms",
+        "±std",
+        "err %",
+    ])
+    .with_title("Fig 4 — GPU-level calibration (predicted vs measured)");
+    let mut rows = Vec::new();
+    let mut prefill_errs = Vec::new();
+    let mut decode_errs = Vec::new();
+
+    for (model, gpu, tp) in configurations() {
+        let hw = Hardware { gpu, tp };
+        // GSM8K-like prompt lengths drive the op shapes (paper: all
+        // models benchmarked on GSM8K prompts).
+        let mut lens = Vec::new();
+        for _ in 0..100 {
+            let l = rng
+                .lognormal(GSM8K.prompt_mu_sigma.0, GSM8K.prompt_mu_sigma.1)
+                .round()
+                .clamp(GSM8K.prompt_range.0 as f64, GSM8K.prompt_range.1 as f64);
+            lens.push(l as u32);
+        }
+        let mean_len = (lens.iter().sum::<u32>() / lens.len() as u32).max(1);
+
+        for (op_name, op) in [
+            ("prefill", Op::Prefill { tokens: mean_len * 8, batch: 8 }),
+            ("decode", Op::Decode { batch: 8, avg_ctx: mean_len + 64 }),
+        ] {
+            let predicted = predictor.predict(op, model, hw);
+            let (measured, std) = oracle.measure_stats(op, model, hw, 100);
+            let err = (measured - predicted).abs() / measured * 100.0;
+            if op_name == "prefill" {
+                prefill_errs.push(err);
+            } else {
+                decode_errs.push(err);
+            }
+            let label = format!("{}/{}x{}", model.name, tp, gpu.name);
+            table.row(vec![
+                label.clone(),
+                op_name.into(),
+                fnum(predicted, 2),
+                fnum(measured, 2),
+                fnum(std, 2),
+                fnum(err, 1),
+            ]);
+            rows.push(Row {
+                exp: "fig4".into(),
+                labels: vec![
+                    ("model".into(), model.name.into()),
+                    ("gpu".into(), gpu.name.into()),
+                    ("op".into(), op_name.into()),
+                ],
+                values: vec![
+                    ("predicted_ms".into(), predicted),
+                    ("measured_ms".into(), measured),
+                    ("std_ms".into(), std),
+                    ("err_pct".into(), err),
+                ],
+            });
+        }
+    }
+    let mae_prefill = crate::util::stats::mean(&prefill_errs);
+    let mae_decode = crate::util::stats::mean(&decode_errs);
+    save_rows("fig4", &rows);
+    let mut out = table.render();
+    out.push_str(&format!(
+        "\nMAE: prefill {:.1}% (paper ≈7.4%), decode {:.1}% (paper ≈5.2%); \
+         predictions are systematically below measurements (omitted NCCL/non-kernel time)\n",
+        mae_prefill, mae_decode
+    ));
+    (out, mae_prefill, mae_decode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_paper_shape() {
+        let (text, mae_prefill, mae_decode) = run(42);
+        assert!(text.contains("llama2-70b"));
+        // Paper band: single-digit MAE, decode tighter than ~15%.
+        assert!(mae_prefill > 0.5 && mae_prefill < 15.0, "prefill MAE {mae_prefill}");
+        assert!(mae_decode > 0.5 && mae_decode < 15.0, "decode MAE {mae_decode}");
+    }
+
+    #[test]
+    fn predictions_systematically_low() {
+        // Re-run and check sign of the bias, the paper's key observation.
+        let predictor = Predictor::new();
+        let mut oracle = HardwareOracle::new(7);
+        let mut low = 0;
+        let mut total = 0;
+        for (model, gpu, tp) in configurations() {
+            let hw = Hardware { gpu, tp };
+            let op = Op::Decode { batch: 8, avg_ctx: 128 };
+            let p = predictor.predict(op, model, hw);
+            let (m, _) = oracle.measure_stats(op, model, hw, 50);
+            total += 1;
+            if p < m {
+                low += 1;
+            }
+        }
+        assert_eq!(low, total, "every prediction should undershoot");
+    }
+}

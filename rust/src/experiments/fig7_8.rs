@@ -1,0 +1,134 @@
+//! Figures 7 & 8 — routing-policy scaling ablation: throughput (Fig 7)
+//! and TPOT (Fig 8) as the number of draft clients grows 0.4k → 2k, for
+//! Random / Round-Robin / JSQ routing.
+//!
+//! Paper shape: JSQ is best while resources are not saturated (TPOT
+//! 5–20 ms lower, best throughput to ≈1k drafters) but saturates and is
+//! caught (and crossed on TPOT) by Round-Robin at high load.
+
+use super::common::{mean_of, paper_config, run_seeds, save_rows, Row, Scale};
+use crate::config::{BatchingKind, RoutingKind, WindowKind};
+use crate::util::table::{fnum, Table};
+
+/// Drafter counts of the sweep.
+pub fn drafter_points() -> Vec<usize> {
+    vec![400, 800, 1200, 1600, 2000]
+}
+
+/// The three routing policies.
+pub fn routings() -> Vec<(&'static str, RoutingKind)> {
+    vec![
+        ("Random", RoutingKind::Random),
+        ("RR", RoutingKind::RoundRobin),
+        ("JSQ", RoutingKind::Jsq),
+    ]
+}
+
+/// `result[routing][point] = (drafters, tput, tpot)`.
+pub fn sweep(dataset: &str, scale: Scale, seeds: &[u64]) -> Vec<Vec<(usize, f64, f64)>> {
+    routings()
+        .iter()
+        .map(|&(_, routing)| {
+            drafter_points()
+                .into_iter()
+                .map(|n| {
+                    let mut cfg = paper_config(
+                        dataset,
+                        n,
+                        10.0,
+                        routing,
+                        BatchingKind::Lab,
+                        WindowKind::Static(4),
+                        scale,
+                        seeds[0],
+                    );
+                    // Offered load scales with the edge pool so saturation
+                    // is reached within the sweep (paper: load tracks the
+                    // number of draft clients).
+                    cfg.workload.rate_per_s *= n as f64 / 600.0;
+                    let reps = run_seeds(&cfg, seeds);
+                    (
+                        n,
+                        mean_of(&reps, |r| r.system.throughput_rps),
+                        mean_of(&reps, |r| r.mean_tpot()),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run and render both figures' series.
+pub fn run(scale: Scale, seeds: &[u64]) -> String {
+    let mut out = String::new();
+    let mut rows = Vec::new();
+    for dataset in ["gsm8k", "humaneval", "cnndm"] {
+        let results = sweep(dataset, scale, seeds);
+        let mut t7 = Table::new(&["drafters", "Random", "RR", "JSQ"])
+            .with_title(&format!("Fig 7 — throughput vs draft clients ({dataset})"));
+        let mut t8 = Table::new(&["drafters", "Random", "RR", "JSQ"])
+            .with_title(&format!("Fig 8 — TPOT vs draft clients ({dataset})"));
+        for (pi, &n) in drafter_points().iter().enumerate() {
+            t7.row(vec![
+                n.to_string(),
+                fnum(results[0][pi].1, 1),
+                fnum(results[1][pi].1, 1),
+                fnum(results[2][pi].1, 1),
+            ]);
+            t8.row(vec![
+                n.to_string(),
+                fnum(results[0][pi].2, 1),
+                fnum(results[1][pi].2, 1),
+                fnum(results[2][pi].2, 1),
+            ]);
+            for (ri, (rname, _)) in routings().iter().enumerate() {
+                rows.push(Row {
+                    exp: "fig7_8".into(),
+                    labels: vec![
+                        ("dataset".into(), dataset.into()),
+                        ("routing".into(), rname.to_string()),
+                        ("drafters".into(), n.to_string()),
+                    ],
+                    values: vec![
+                        ("throughput_rps".into(), results[ri][pi].1),
+                        ("tpot_ms".into(), results[ri][pi].2),
+                    ],
+                });
+            }
+        }
+        out.push_str(&t7.render());
+        out.push('\n');
+        out.push_str(&t8.render());
+        out.push('\n');
+    }
+    save_rows("fig7_8", &rows);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsq_wins_at_low_load() {
+        let results = sweep("gsm8k", Scale(0.1), &[2]);
+        // At the smallest drafter count (unsaturated), JSQ TPOT must not
+        // exceed Random's.
+        let random_tpot = results[0][0].2;
+        let jsq_tpot = results[2][0].2;
+        assert!(
+            jsq_tpot <= random_tpot * 1.05,
+            "jsq {jsq_tpot} vs random {random_tpot}"
+        );
+    }
+
+    #[test]
+    fn throughput_grows_then_saturates() {
+        let results = sweep("gsm8k", Scale(0.1), &[2]);
+        for series in &results {
+            let first = series.first().unwrap().1;
+            let best = series.iter().map(|p| p.1).fold(0.0, f64::max);
+            assert!(best >= first, "load growth must not reduce peak throughput");
+        }
+    }
+}

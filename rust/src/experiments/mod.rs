@@ -1,0 +1,49 @@
+//! The experiment harness: one module per table/figure in the paper's
+//! evaluation (§5), each regenerating the corresponding rows/series.
+//! `dsd reproduce --exp <id>` is the CLI entry; `rust/benches/bench_*`
+//! time the same code paths.
+
+pub mod common;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7_8;
+pub mod fig9_10;
+pub mod table2;
+
+pub use common::Scale;
+
+/// Run one experiment by id; returns its rendered report.
+pub fn run_experiment(exp: &str, scale: Scale, seeds: &[u64]) -> Result<String, String> {
+    Ok(match exp {
+        "fig4" => fig4::run(seeds[0]).0,
+        "fig5" => fig5::run(scale, seeds),
+        "fig6" => fig6::run(scale, seeds),
+        "fig7" | "fig8" | "fig7_8" => fig7_8::run(scale, seeds),
+        "fig9" | "fig10" | "fig9_10" => fig9_10::run(scale, seeds),
+        "table2" => table2::run(scale, seeds),
+        "all" => {
+            let mut out = String::new();
+            for e in ["fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2"] {
+                out.push_str(&run_experiment(e, scale, seeds)?);
+                out.push('\n');
+            }
+            out
+        }
+        other => {
+            return Err(format!(
+                "unknown experiment '{other}' (try: fig4 fig5 fig6 fig7 fig9 table2 all)"
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run_experiment("fig99", Scale::tiny(), &[1]).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Table 2 — AWC vs the Static (γ=4) and Dynamic (Simple) window
+//! baselines over four system configurations × three datasets.
+//!
+//! Configs: {20 targets / 600 drafters, 20 / 1000} × {10 ms, 30 ms} RTT.
+//! Paper shape: AWC has the best throughput in 12/12 cells (+3–10% vs
+//! Static), TTFT within ±4% of the best baseline, TPOT 6–10% lower.
+
+use super::common::{mean_of, paper_config, run_seeds, save_rows, Row, Scale};
+use crate::config::{BatchingKind, RoutingKind, WindowKind};
+use crate::util::table::{fnum, fpct, Table};
+
+/// The four cluster configs of Table 2: (label, drafters, rtt).
+pub fn configs() -> Vec<(&'static str, usize, f64)> {
+    vec![
+        ("C1 20T/600D 10ms", 600, 10.0),
+        ("C2 20T/1000D 10ms", 1000, 10.0),
+        ("C3 20T/600D 30ms", 600, 30.0),
+        ("C4 20T/1000D 30ms", 1000, 30.0),
+    ]
+}
+
+/// The three window policies (paper column order).
+pub fn policies() -> Vec<(&'static str, WindowKind)> {
+    vec![
+        ("Static", WindowKind::Static(4)),
+        ("Simple", WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 }),
+        ("AWC", WindowKind::Awc { weights_path: None }),
+    ]
+}
+
+/// One cell's metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    /// req/s.
+    pub tput: f64,
+    /// ms.
+    pub ttft: f64,
+    /// ms.
+    pub tpot: f64,
+}
+
+/// Run the whole table; returns `result[config][dataset][policy]`.
+pub fn sweep(scale: Scale, seeds: &[u64]) -> Vec<Vec<Vec<Cell>>> {
+    configs()
+        .iter()
+        .map(|&(_, drafters, rtt)| {
+            ["gsm8k", "humaneval", "cnndm"]
+                .iter()
+                .map(|ds| {
+                    policies()
+                        .iter()
+                        .map(|(_, w)| {
+                            let cfg = paper_config(
+                                ds,
+                                drafters,
+                                rtt,
+                                RoutingKind::Jsq,
+                                BatchingKind::Lab,
+                                w.clone(),
+                                scale,
+                                seeds[0],
+                            );
+                            let reps = run_seeds(&cfg, seeds);
+                            Cell {
+                                tput: mean_of(&reps, |r| r.system.throughput_rps),
+                                ttft: mean_of(&reps, |r| r.mean_ttft()),
+                                tpot: mean_of(&reps, |r| r.mean_tpot()),
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run and render the paper-style table.
+pub fn run(scale: Scale, seeds: &[u64]) -> String {
+    let results = sweep(scale, seeds);
+    let datasets = ["gsm8k", "humaneval", "cnndm"];
+    let mut out = String::new();
+    let mut rows = Vec::new();
+    for (metric_idx, (metric, better_high)) in
+        [("Throughput (req/s) ↑", true), ("TTFT (ms) ↓", false), ("TPOT (ms) ↓", false)]
+            .iter()
+            .enumerate()
+    {
+        let mut table = Table::new(&[
+            "config", "dataset", "Static", "Simple", "AWC", "AWC vs Static",
+        ])
+        .with_title(&format!("Table 2 — {metric}"));
+        for (ci, (clabel, _, _)) in configs().iter().enumerate() {
+            for (di, ds) in datasets.iter().enumerate() {
+                let cells = &results[ci][di];
+                let get = |c: &Cell| match metric_idx {
+                    0 => c.tput,
+                    1 => c.ttft,
+                    _ => c.tpot,
+                };
+                let s = get(&cells[0]);
+                let d = get(&cells[1]);
+                let a = get(&cells[2]);
+                let delta = if *better_high {
+                    (a - s) / s * 100.0
+                } else {
+                    (a - s) / s * 100.0
+                };
+                table.row(vec![
+                    clabel.to_string(),
+                    ds.to_string(),
+                    fnum(s, 1),
+                    fnum(d, 1),
+                    fnum(a, 1),
+                    fpct(delta),
+                ]);
+                rows.push(Row {
+                    exp: "table2".into(),
+                    labels: vec![
+                        ("config".into(), clabel.to_string()),
+                        ("dataset".into(), ds.to_string()),
+                        ("metric".into(), metric.to_string()),
+                    ],
+                    values: vec![
+                        ("static".into(), s),
+                        ("simple".into(), d),
+                        ("awc".into(), a),
+                        ("awc_vs_static_pct".into(), delta),
+                    ],
+                });
+            }
+        }
+        out.push_str(&table.render());
+        out.push('\n');
+    }
+    save_rows("table2", &rows);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_runs_and_has_sane_cells() {
+        let r = sweep(Scale(0.08), &[1]);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].len(), 3);
+        assert_eq!(r[0][0].len(), 3);
+        for cfg in &r {
+            for ds in cfg {
+                for cell in ds {
+                    assert!(cell.tput > 0.0 && cell.tpot > 0.0 && cell.ttft > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn higher_rtt_lowers_throughput() {
+        let r = sweep(Scale(0.08), &[1]);
+        // C1 (10ms) vs C3 (30ms), same drafters, per dataset.
+        for di in 0..3 {
+            let tput_10 = r[0][di][0].tput;
+            let tput_30 = r[2][di][0].tput;
+            assert!(
+                tput_30 <= tput_10 * 1.1,
+                "dataset {di}: rtt30 {tput_30} vs rtt10 {tput_10}"
+            );
+        }
+    }
+}

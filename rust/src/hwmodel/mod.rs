@@ -1,0 +1,11 @@
+//! Hardware performance modeling engine (paper §3.1).
+//!
+//! [`predictor`] is the VIDUR-role analytical latency model behind the
+//! `predict(op, shape, hardware)` API; [`oracle`] is the synthetic
+//! "real hardware" testbed used by the Fig-4 calibration experiment.
+
+pub mod oracle;
+pub mod predictor;
+
+pub use oracle::{HardwareOracle, OracleOverheads};
+pub use predictor::{Efficiency, Hardware, Op, Predictor};

@@ -1,0 +1,137 @@
+//! The "real hardware" oracle used for the Fig-4 calibration study.
+//!
+//! The paper validates VIDUR's predictions against measurements on real
+//! A40/A100/H100 machines and reports: prefill MAE ≈ 7.4%, decode MAE
+//! ≈ 5.2%, with the simulator *systematically under-predicting* because
+//! VIDUR models only MLP/Attention kernel time and omits NCCL collectives
+//! and non-kernel work (§5.1).
+//!
+//! We have no GPUs in this environment, so the oracle plays the role of
+//! the testbed: it is the same roofline surface *plus* the terms VIDUR
+//! omits — an NCCL communication overhead for multi-GPU models, a
+//! non-kernel (scheduler/python/framework) time slice, and run-to-run
+//! measurement noise. The calibration experiment then measures exactly
+//! what the paper measures: how far the predictor lands from the oracle.
+
+use super::predictor::{Hardware, Op, Predictor};
+use crate::cluster::ModelSpec;
+use crate::util::rng::Pcg64;
+
+/// Overheads the predictor knowingly omits (present only on "hardware").
+#[derive(Clone, Debug)]
+pub struct OracleOverheads {
+    /// Extra fraction of kernel time spent in NCCL collectives per
+    /// tensor-parallel degree beyond 1 (e.g. 0.025 ⇒ +7.5% at TP=4).
+    pub nccl_frac_per_tp: f64,
+    /// Non-kernel time as a fraction of kernel time (CPU-side scheduling,
+    /// tokenization, framework glue).
+    pub nonkernel_frac: f64,
+    /// Fixed per-invocation host overhead, ms.
+    pub host_ms: f64,
+    /// Std-dev of multiplicative measurement noise.
+    pub noise_std: f64,
+}
+
+impl Default for OracleOverheads {
+    fn default() -> Self {
+        OracleOverheads {
+            nccl_frac_per_tp: 0.018,
+            nonkernel_frac: 0.035,
+            host_ms: 0.35,
+            noise_std: 0.025,
+        }
+    }
+}
+
+/// Synthetic testbed: predictor surface + omitted overheads + noise.
+pub struct HardwareOracle {
+    predictor: Predictor,
+    over: OracleOverheads,
+    rng: Pcg64,
+}
+
+impl HardwareOracle {
+    /// Oracle with default overheads, seeded for reproducible "runs".
+    pub fn new(seed: u64) -> Self {
+        HardwareOracle {
+            predictor: Predictor::new(),
+            over: OracleOverheads::default(),
+            rng: Pcg64::new(seed),
+        }
+    }
+
+    /// Oracle with explicit overheads.
+    pub fn with_overheads(seed: u64, over: OracleOverheads) -> Self {
+        HardwareOracle {
+            predictor: Predictor::new(),
+            over,
+            rng: Pcg64::new(seed),
+        }
+    }
+
+    /// One "measured" execution of `op` on the synthetic testbed (ms).
+    pub fn measure(&mut self, op: Op, model: &ModelSpec, hw: Hardware) -> f64 {
+        let kernel_ms = self.predictor.predict(op, model, hw);
+        let nccl = self.over.nccl_frac_per_tp * (hw.tp.saturating_sub(1)) as f64;
+        let systematic = kernel_ms * (1.0 + nccl + self.over.nonkernel_frac) + self.over.host_ms;
+        let noise = 1.0 + self.over.noise_std * self.rng.normal();
+        systematic * noise.max(0.5)
+    }
+
+    /// Mean and std of `n` measurements (the error bars in Fig. 4).
+    pub fn measure_stats(
+        &mut self,
+        op: Op,
+        model: &ModelSpec,
+        hw: Hardware,
+        n: usize,
+    ) -> (f64, f64) {
+        let xs: Vec<f64> = (0..n).map(|_| self.measure(op, model, hw)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        (mean, var.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::{A100, A40};
+    use crate::cluster::model::{LLAMA2_70B, LLAMA2_7B};
+
+    #[test]
+    fn oracle_exceeds_prediction_systematically() {
+        // The paper's key calibration observation: VIDUR's predictions are
+        // consistently *below* hardware measurements.
+        let p = Predictor::new();
+        let mut o = HardwareOracle::new(1);
+        let hw = Hardware { gpu: &A100, tp: 4 };
+        let op = Op::Decode { batch: 8, avg_ctx: 512 };
+        let predicted = p.predict(op, &LLAMA2_70B, hw);
+        let (measured, _) = o.measure_stats(op, &LLAMA2_70B, hw, 100);
+        assert!(measured > predicted, "measured={measured} predicted={predicted}");
+        // And within a plausible calibration band (paper: 5-8% MAE).
+        let err = (measured - predicted) / measured;
+        assert!(err > 0.01 && err < 0.20, "err={err}");
+    }
+
+    #[test]
+    fn single_gpu_has_no_nccl_term() {
+        let mut o1 = HardwareOracle::new(2);
+        let mut o2 = HardwareOracle::new(2);
+        let op = Op::Decode { batch: 1, avg_ctx: 128 };
+        let hw1 = Hardware { gpu: &A40, tp: 1 };
+        // Same seed, same op: only deterministic path differences matter.
+        let a = o1.measure(op, &LLAMA2_7B, hw1);
+        let b = o2.measure(op, &LLAMA2_7B, hw1);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_have_small_spread() {
+        let mut o = HardwareOracle::new(3);
+        let hw = Hardware { gpu: &A40, tp: 1 };
+        let (mean, std) = o.measure_stats(Op::Prefill { tokens: 512, batch: 4 }, &LLAMA2_7B, hw, 100);
+        assert!(std / mean < 0.05, "noise should be a few percent");
+    }
+}

@@ -1,0 +1,275 @@
+//! Roofline latency predictor — the stand-in for VIDUR's empirically
+//! profiled single-node predictors (paper §3.1).
+//!
+//! DSD-Sim consumes latencies through the same narrow API the paper
+//! describes, `predict(op, shape, hardware)`: see [`Predictor::predict`].
+//! The surface is an analytical roofline — per-op latency is the max of
+//! compute time and memory time, plus per-layer kernel overheads and
+//! tensor-parallel collective costs. VIDUR's predictors are tabulated
+//! measurements of exactly these quantities; any monotone surface with the
+//! correct batch/context/model scaling exercises identical scheduler
+//! dynamics (DESIGN.md §4 records this substitution).
+
+use crate::cluster::{GpuSpec, ModelSpec};
+
+/// An inference operation whose latency is being predicted.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Prompt prefill: `batch` requests totalling `tokens` prompt tokens.
+    Prefill { tokens: u32, batch: u32 },
+    /// Autoregressive decode step: `batch` sequences, one new token each,
+    /// mean context length `avg_ctx`.
+    Decode { batch: u32, avg_ctx: u32 },
+    /// Speculative verification: `batch` sequences, each scoring
+    /// `window + 1` positions against mean context `avg_ctx`.
+    /// Compute-wise this is a short prefill that reads weights once.
+    Verify {
+        batch: u32,
+        window: u32,
+        avg_ctx: u32,
+    },
+}
+
+/// Hardware configuration an op executes on.
+#[derive(Clone, Copy, Debug)]
+pub struct Hardware<'a> {
+    /// GPU SKU.
+    pub gpu: &'a GpuSpec,
+    /// Tensor-parallel degree (weights sharded across `tp` GPUs).
+    pub tp: u32,
+}
+
+/// Tunable efficiency constants — the "fitted coefficients" of the
+/// analytical model. Defaults are chosen to land in the regimes the
+/// paper's plots show (tens of ms decode for 70B on A100, hundreds of ms
+/// prefill, etc.).
+#[derive(Clone, Debug)]
+pub struct Efficiency {
+    /// Achievable fraction of peak TFLOPs on large GEMMs (prefill).
+    pub mfu_prefill: f64,
+    /// Achievable fraction of peak TFLOPs on batched decode GEMMs.
+    pub mfu_decode: f64,
+    /// Achievable fraction of peak memory bandwidth (single GPU).
+    pub bw_frac: f64,
+    /// Sub-linear tensor-parallel bandwidth scaling exponent: aggregate
+    /// effective bandwidth is `bw · bw_frac · tp^bw_tp_exp`. Real TP
+    /// serving loses bandwidth efficiency to sync stalls and uneven
+    /// shards (an A100 TP=4 70B decode is ~45–55 ms/token, not the
+    /// ~22 ms a linear model predicts).
+    pub bw_tp_exp: f64,
+    /// Latency per tensor-parallel all-reduce, microseconds (per layer,
+    /// on top of the bandwidth term).
+    pub allreduce_lat_us: f64,
+}
+
+impl Default for Efficiency {
+    fn default() -> Self {
+        Efficiency {
+            mfu_prefill: 0.52,
+            mfu_decode: 0.35,
+            bw_frac: 0.80,
+            bw_tp_exp: 0.64,
+            allreduce_lat_us: 20.0,
+        }
+    }
+}
+
+/// The predictor: stateless, cheap, callable millions of times per
+/// simulated second.
+#[derive(Clone, Debug, Default)]
+pub struct Predictor {
+    /// Efficiency constants (see [`Efficiency`]).
+    pub eff: Efficiency,
+}
+
+impl Predictor {
+    /// Predictor with default efficiency constants.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Predict the latency (milliseconds) of `op` for `model` on `hw`.
+    ///
+    /// This is the `predict(op, shape, hardware)` API of paper §3.1.
+    pub fn predict(&self, op: Op, model: &ModelSpec, hw: Hardware) -> f64 {
+        match op {
+            Op::Prefill { tokens, batch } => self.prefill_ms(model, hw, tokens, batch),
+            Op::Decode { batch, avg_ctx } => self.decode_ms(model, hw, batch, avg_ctx),
+            Op::Verify {
+                batch,
+                window,
+                avg_ctx,
+            } => self.verify_ms(model, hw, batch, window, avg_ctx),
+        }
+    }
+
+    /// Effective compute rate, FLOP/ms.
+    fn flops_per_ms(&self, hw: Hardware, mfu: f64) -> f64 {
+        hw.gpu.tflops * 1e12 * mfu * hw.tp as f64 / 1e3
+    }
+
+    /// Effective aggregate memory bandwidth, bytes/ms (sub-linear in TP).
+    fn bytes_per_ms(&self, hw: Hardware) -> f64 {
+        hw.gpu.mem_bw_gbps * 1e9 * self.eff.bw_frac * (hw.tp as f64).powf(self.eff.bw_tp_exp)
+            / 1e3
+    }
+
+    /// Per-forward fixed costs: kernel launches for each layer (several
+    /// kernels per layer) plus tensor-parallel all-reduces (2 per layer).
+    fn fixed_ms(&self, model: &ModelSpec, hw: Hardware, act_bytes: f64) -> f64 {
+        let layers = model.layers as f64;
+        let launches_ms = layers * 4.0 * hw.gpu.kernel_overhead_us / 1e3;
+        if hw.tp <= 1 {
+            return launches_ms;
+        }
+        // Ring all-reduce: 2(p-1)/p of the activation crosses links, twice
+        // per layer (attention out-proj + MLP down-proj).
+        let p = hw.tp as f64;
+        let ar_bytes = 2.0 * (p - 1.0) / p * act_bytes;
+        let ar_bw_ms = ar_bytes / (hw.gpu.link_bw_gbps * 1e9 / 1e3);
+        let ar_lat_ms = self.eff.allreduce_lat_us / 1e3;
+        launches_ms + layers * 2.0 * (ar_lat_ms + ar_bw_ms)
+    }
+
+    /// Prefill latency (ms): compute-bound GEMMs over all prompt tokens,
+    /// floored by one pass over the weights.
+    pub fn prefill_ms(&self, model: &ModelSpec, hw: Hardware, tokens: u32, _batch: u32) -> f64 {
+        let t = tokens as f64;
+        let gemm_flops = t * model.flops_per_token();
+        // Self-attention inside the prompt: ~T^2 term per request folded
+        // into an average: attn_flops(T/2) per token.
+        let attn_flops = t * model.attn_flops_per_token(t / 2.0);
+        let compute_ms = (gemm_flops + attn_flops) / self.flops_per_ms(hw, self.eff.mfu_prefill);
+        let mem_ms = model.weight_bytes() / self.bytes_per_ms(hw);
+        let act_bytes = t * model.hidden as f64 * model.dtype_bytes;
+        compute_ms.max(mem_ms) + self.fixed_ms(model, hw, act_bytes)
+    }
+
+    /// Decode latency (ms): memory-bound weight pass shared by the batch,
+    /// plus KV-cache reads, vs the batched GEMM compute.
+    pub fn decode_ms(&self, model: &ModelSpec, hw: Hardware, batch: u32, avg_ctx: u32) -> f64 {
+        let b = batch.max(1) as f64;
+        let weights_ms = model.weight_bytes() / self.bytes_per_ms(hw);
+        let kv_ms = b * model.kv_bytes_per_token() * avg_ctx as f64 / self.bytes_per_ms(hw);
+        let compute_ms = (b * model.flops_per_token()
+            + b * model.attn_flops_per_token(avg_ctx as f64))
+            / self.flops_per_ms(hw, self.eff.mfu_decode);
+        let act_bytes = b * model.hidden as f64 * model.dtype_bytes;
+        (weights_ms + kv_ms).max(compute_ms) + self.fixed_ms(model, hw, act_bytes)
+    }
+
+    /// Verification latency (ms): `batch` sequences each scoring
+    /// `window + 1` positions — one weight pass, short-prefill compute.
+    pub fn verify_ms(
+        &self,
+        model: &ModelSpec,
+        hw: Hardware,
+        batch: u32,
+        window: u32,
+        avg_ctx: u32,
+    ) -> f64 {
+        self.verify_ms_ragged(model, hw, batch, batch * (window + 1), avg_ctx)
+    }
+
+    /// Ragged verification batch (ORCA-style): mixed window sizes pack
+    /// without padding, so cost is driven by the *total* scored tokens.
+    pub fn verify_ms_ragged(
+        &self,
+        model: &ModelSpec,
+        hw: Hardware,
+        batch: u32,
+        total_tokens: u32,
+        avg_ctx: u32,
+    ) -> f64 {
+        let b = batch.max(1) as f64;
+        let toks = total_tokens.max(1) as f64;
+        let weights_ms = model.weight_bytes() / self.bytes_per_ms(hw);
+        let kv_ms = b * model.kv_bytes_per_token() * avg_ctx as f64 / self.bytes_per_ms(hw);
+        let compute_ms = (toks * model.flops_per_token()
+            + toks * model.attn_flops_per_token(avg_ctx as f64))
+            / self.flops_per_ms(hw, self.eff.mfu_decode);
+        let act_bytes = toks * model.hidden as f64 * model.dtype_bytes;
+        (weights_ms + kv_ms).max(compute_ms) + self.fixed_ms(model, hw, act_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::gpu::{A100, A40, H100};
+    use crate::cluster::model::{LLAMA2_70B, LLAMA2_7B};
+
+    fn hw<'a>(gpu: &'a GpuSpec, tp: u32) -> Hardware<'a> {
+        Hardware { gpu, tp }
+    }
+
+    #[test]
+    fn decode_is_memory_bound_at_small_batch() {
+        let p = Predictor::new();
+        // 7B on A40: one weight pass ≈ 13.5 GB / (0.78*696 GB/s) ≈ 25 ms.
+        let ms = p.decode_ms(&LLAMA2_7B, hw(&A40, 1), 1, 256);
+        assert!(ms > 15.0 && ms < 45.0, "ms={ms}");
+    }
+
+    #[test]
+    fn decode_scales_sublinearly_with_batch() {
+        let p = Predictor::new();
+        let b1 = p.decode_ms(&LLAMA2_70B, hw(&A100, 4), 1, 512);
+        let b16 = p.decode_ms(&LLAMA2_70B, hw(&A100, 4), 16, 512);
+        assert!(b16 < 16.0 * b1, "batching must amortize weight reads");
+        assert!(b16 > b1, "more work cannot be faster");
+    }
+
+    #[test]
+    fn prefill_scales_with_tokens() {
+        let p = Predictor::new();
+        let t256 = p.prefill_ms(&LLAMA2_70B, hw(&A100, 4), 256, 1);
+        let t2048 = p.prefill_ms(&LLAMA2_70B, hw(&A100, 4), 2048, 1);
+        assert!(t2048 > 4.0 * t256, "t256={t256} t2048={t2048}");
+    }
+
+    #[test]
+    fn faster_gpu_is_faster() {
+        let p = Predictor::new();
+        let a100 = p.predict(Op::Decode { batch: 8, avg_ctx: 512 }, &LLAMA2_70B, hw(&A100, 4));
+        let h100 = p.predict(Op::Decode { batch: 8, avg_ctx: 512 }, &LLAMA2_70B, hw(&H100, 4));
+        assert!(h100 < a100);
+    }
+
+    #[test]
+    fn tp_reduces_latency_with_overhead() {
+        let p = Predictor::new();
+        let tp1_time = p.decode_ms(&LLAMA2_70B, hw(&A100, 1), 4, 512);
+        let tp4_time = p.decode_ms(&LLAMA2_70B, hw(&A100, 4), 4, 512);
+        assert!(tp4_time < tp1_time);
+        assert!(tp4_time > tp1_time / 4.0, "collectives cost something");
+    }
+
+    #[test]
+    fn verify_cheaper_than_window_decodes() {
+        let p = Predictor::new();
+        let verify = p.verify_ms(&LLAMA2_70B, hw(&A100, 4), 8, 4, 512);
+        let five_decodes = 5.0 * p.decode_ms(&LLAMA2_70B, hw(&A100, 4), 8, 512);
+        assert!(
+            verify < five_decodes * 0.6,
+            "parallel verification is the whole point: {verify} vs {five_decodes}"
+        );
+    }
+
+    #[test]
+    fn edge_decode_much_faster_than_cloud_decode() {
+        // Drafting on the edge must beat a full 70B decode for SD to help
+        // (cost ratio c < 1, paper Eq. 2).
+        let p = Predictor::new();
+        let draft = p.decode_ms(&LLAMA2_7B, hw(&A40, 1), 1, 256);
+        let target = p.decode_ms(&LLAMA2_70B, hw(&A100, 4), 1, 256);
+        assert!(
+            draft < target * 0.85,
+            "draft={draft} target={target} (c = {})",
+            draft / target
+        );
+        // And the absolute levels are in the published serving regime.
+        assert!(draft > 15.0 && draft < 40.0, "draft={draft}");
+        assert!(target > 30.0 && target < 70.0, "target={target}");
+    }
+}

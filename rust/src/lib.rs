@@ -1,0 +1,50 @@
+//! # DSD — Distributed Speculative Decoding for Edge–Cloud LLM Serving
+//!
+//! Reproduction of *"DSD: A Distributed Speculative Decoding Solution for
+//! Edge-Cloud Agile Large Model Serving"* (2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the DSD-Sim discrete-event simulator, the
+//!   pluggable routing/batching/window-control policy families, the AWC
+//!   learned window controller with its stabilization pipeline, the
+//!   metrics/SLO analyzer, a real edge–cloud serving coordinator driving
+//!   AOT-compiled models through PJRT, and the experiment harness that
+//!   regenerates every table and figure in the paper's evaluation.
+//! * **L2 (python/compile, build time)** — JAX draft/target tiny-GPT
+//!   models and the WC-DNN residual MLP, lowered once to HLO text.
+//! * **L1 (python/compile/kernels, build time)** — Pallas kernels for
+//!   decode attention, speculative verification, and the fused MLP block.
+//!
+//! Python never runs on the request path; `artifacts/` is loaded by
+//! [`runtime`] and executed from Rust.
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use dsd::config::SimConfig;
+//! use dsd::sim::Simulator;
+//!
+//! let cfg = SimConfig::builder()
+//!     .targets(4)
+//!     .drafters(120)
+//!     .rtt_ms(10.0)
+//!     .dataset("gsm8k")
+//!     .requests(200)
+//!     .build();
+//! let report = Simulator::new(cfg).run();
+//! println!("{}", report.summary());
+//! ```
+
+pub mod awc;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod hwmodel;
+pub mod metrics;
+pub mod policies;
+pub mod runtime;
+pub mod sim;
+pub mod specdec;
+pub mod trace;
+pub mod util;

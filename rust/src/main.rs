@@ -1,0 +1,256 @@
+//! `dsd` — the DSD leader binary.
+//!
+//! Subcommands:
+//!   simulate       run DSD-Sim on a YAML deployment config
+//!   reproduce      regenerate a paper table/figure (fig4..fig10, table2, all)
+//!   sweep-dataset  generate the AWC training dataset (paper §4.2)
+//!   trace-gen      emit a synthetic workload trace (Table 1 schema)
+//!   serve          run the real edge-cloud serving path on AOT artifacts
+//!   awc-eval       compare AWC vs baselines on one configuration
+//!
+//! `dsd <cmd> --help` lists options.
+
+use dsd::config::SimConfig;
+use dsd::coordinator::{Coordinator, ServeConfig, ServeRequest, ServeWindow};
+use dsd::experiments::{run_experiment, Scale};
+use dsd::sim::Simulator;
+use dsd::util::cli::Command;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("usage: dsd <simulate|reproduce|sweep-dataset|trace-gen|serve|awc-eval> [options]");
+        std::process::exit(2);
+    };
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "reproduce" => cmd_reproduce(rest),
+        "sweep-dataset" => cmd_sweep_dataset(rest),
+        "trace-gen" => cmd_trace_gen(rest),
+        "serve" => cmd_serve(rest),
+        "awc-eval" => cmd_awc_eval(rest),
+        other => Err(format!("unknown subcommand '{other}'")),
+    };
+    if let Err(e) = result {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("simulate", "run DSD-Sim on a deployment config")
+        .opt("config", "YAML deployment file", None)
+        .opt("seed", "override RNG seed", None)
+        .flag("json", "emit the full JSON report");
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let mut cfg = match a.get("config") {
+        Some(path) => SimConfig::from_yaml_file(path)?,
+        None => SimConfig::builder().build(),
+    };
+    if let Some(seed) = a.get_u64("seed").map_err(|e| e.to_string())? {
+        cfg.seed = seed;
+    }
+    let report = Simulator::try_new(cfg)?.run();
+    if a.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("{}", report.summary());
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("reproduce", "regenerate a paper table/figure")
+        .opt("exp", "fig4|fig5|fig6|fig7|fig9|table2|all", Some("all"))
+        .opt("scale", "request-count scale factor (1.0 = paper)", Some("1.0"))
+        .opt("seeds", "number of seeds to average", Some("3"));
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let scale = Scale(a.get_f64("scale").map_err(|e| e.to_string())?.unwrap_or(1.0));
+    let n_seeds = a.get_u64("seeds").map_err(|e| e.to_string())?.unwrap_or(3);
+    let seeds: Vec<u64> = (1..=n_seeds).collect();
+    let out = run_experiment(a.get("exp").unwrap_or("all"), scale, &seeds)?;
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_sweep_dataset(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("sweep-dataset", "generate the AWC training dataset")
+        .opt("out", "output JSONL path", Some("data/awc_sweep.jsonl"))
+        .flag("tiny", "reduced grid (tests)");
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let grid = if a.flag("tiny") {
+        dsd::awc::SweepGrid::tiny()
+    } else {
+        dsd::awc::SweepGrid::default()
+    };
+    eprintln!(
+        "[sweep] {} scenarios x {} probes ...",
+        grid.n_scenarios(),
+        grid.gammas.len() + 1
+    );
+    let rows = dsd::awc::generate_dataset(&grid);
+    let path = std::path::Path::new(a.get("out").unwrap());
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    }
+    dsd::awc::dataset::write_jsonl(&rows, path).map_err(|e| e.to_string())?;
+    println!("wrote {} rows to {}", rows.len(), path.display());
+    Ok(())
+}
+
+fn cmd_trace_gen(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("trace-gen", "emit a synthetic workload trace")
+        .opt("dataset", "gsm8k|cnndm|humaneval", Some("gsm8k"))
+        .opt("requests", "number of requests", Some("400"))
+        .opt("rate", "arrival rate, req/s", Some("30"))
+        .opt("drafters", "drafter pool size", Some("600"))
+        .opt("seed", "rng seed", Some("42"))
+        .opt("out", "output JSONL path", None);
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let ds = dsd::trace::dataset_by_name(a.get("dataset").unwrap())
+        .ok_or("unknown dataset")?;
+    let trace = ds.generate(
+        a.get_usize("requests").map_err(|e| e.to_string())?.unwrap(),
+        a.get_f64("rate").map_err(|e| e.to_string())?.unwrap(),
+        a.get_usize("drafters").map_err(|e| e.to_string())?.unwrap(),
+        a.get_u64("seed").map_err(|e| e.to_string())?.unwrap(),
+    );
+    let out = a.require("out").map_err(|e| e.to_string())?;
+    dsd::trace::io::write_jsonl(&trace, std::path::Path::new(out))
+        .map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} records (mean prompt {:.0}, mean output {:.0}, acceptance {:.2})",
+        trace.len(),
+        trace.mean_prompt(),
+        trace.mean_output(),
+        trace.mean_acceptance()
+    );
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("serve", "real edge-cloud serving on AOT artifacts")
+        .opt("artifacts", "artifacts directory", Some("artifacts"))
+        .opt("requests", "number of requests", Some("8"))
+        .opt("tokens", "output tokens per request", Some("32"))
+        .opt("drafters", "edge worker threads", Some("4"))
+        .opt("verifiers", "cloud worker threads", Some("2"))
+        .opt("rtt", "emulated RTT, ms", Some("10"))
+        .opt("window", "static:<g> | awc | fused", Some("static:4"))
+        .opt("dataset", "prompt family: gsm8k|cnndm|humaneval", Some("gsm8k"));
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let window = parse_serve_window(a.get("window").unwrap())?;
+    let cfg = ServeConfig {
+        n_drafters: a.get_usize("drafters").map_err(|e| e.to_string())?.unwrap(),
+        n_verifiers: a.get_usize("verifiers").map_err(|e| e.to_string())?.unwrap(),
+        rtt_ms: a.get_f64("rtt").map_err(|e| e.to_string())?.unwrap(),
+        window,
+        max_new_tokens: a.get_usize("tokens").map_err(|e| e.to_string())?.unwrap(),
+    };
+    let n = a.get_usize("requests").map_err(|e| e.to_string())?.unwrap();
+    let requests = demo_prompts(a.get("dataset").unwrap(), n, cfg.max_new_tokens);
+    let co = Coordinator::new(std::path::Path::new(a.get("artifacts").unwrap()), cfg)
+        .map_err(|e| e.to_string())?;
+    let (rs, stats) = co.serve(requests).map_err(|e| e.to_string())?;
+    for r in rs.iter().take(3) {
+        println!(
+            "req {}: acc={:.2} rounds={} tpot={:.0}ms | {:?}",
+            r.id,
+            r.acceptance(),
+            r.rounds,
+            r.tpot_ms,
+            String::from_utf8_lossy(&r.output)
+        );
+    }
+    println!(
+        "completed={} tput={:.2} req/s tokens/s={:.1} ttft={:.0}ms tpot={:.0}ms acc={:.2}",
+        stats.completed,
+        stats.throughput_rps,
+        stats.token_throughput,
+        stats.mean_ttft_ms,
+        stats.mean_tpot_ms,
+        stats.mean_acceptance
+    );
+    Ok(())
+}
+
+fn cmd_awc_eval(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("awc-eval", "AWC vs baselines on one configuration")
+        .opt("dataset", "gsm8k|cnndm|humaneval", Some("gsm8k"))
+        .opt("drafters", "edge pool size", Some("600"))
+        .opt("rtt", "RTT ms", Some("10"))
+        .opt("scale", "request scale", Some("0.5"))
+        .opt("seeds", "seeds to average", Some("3"));
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let scale = Scale(a.get_f64("scale").map_err(|e| e.to_string())?.unwrap());
+    let seeds: Vec<u64> =
+        (1..=a.get_u64("seeds").map_err(|e| e.to_string())?.unwrap()).collect();
+    use dsd::config::{BatchingKind, RoutingKind, WindowKind};
+    use dsd::experiments::common::{mean_of, paper_config, run_seeds};
+    let mut table = dsd::util::table::Table::new(&["policy", "tput", "ttft", "tpot"])
+        .with_title("AWC vs baselines");
+    for (name, w) in [
+        ("static", WindowKind::Static(4)),
+        ("dynamic", WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 }),
+        ("awc", WindowKind::Awc { weights_path: None }),
+    ] {
+        let cfg = paper_config(
+            a.get("dataset").unwrap(),
+            a.get_usize("drafters").map_err(|e| e.to_string())?.unwrap(),
+            a.get_f64("rtt").map_err(|e| e.to_string())?.unwrap(),
+            RoutingKind::Jsq,
+            BatchingKind::Lab,
+            w,
+            scale,
+            seeds[0],
+        );
+        let reps = run_seeds(&cfg, &seeds);
+        table.row(vec![
+            name.into(),
+            format!("{:.1}", mean_of(&reps, |r| r.system.throughput_rps)),
+            format!("{:.0}", mean_of(&reps, |r| r.mean_ttft())),
+            format!("{:.1}", mean_of(&reps, |r| r.mean_tpot())),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn parse_serve_window(s: &str) -> Result<ServeWindow, String> {
+    if let Some(g) = s.strip_prefix("static:") {
+        return Ok(ServeWindow::Static(
+            g.parse().map_err(|_| format!("bad gamma '{g}'"))?,
+        ));
+    }
+    match s {
+        "awc" => Ok(ServeWindow::Awc),
+        "fused" => Ok(ServeWindow::FusedOnly),
+        other => Err(format!("unknown window '{other}'")),
+    }
+}
+
+/// Prompts shaped like the three benchmark families (mirrors
+/// `python/compile/corpus.py::sample_prompts`).
+fn demo_prompts(dataset: &str, n: usize, max_new: usize) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| {
+            let a = 3 + (i * 11) % 50;
+            let b = 2 + (i * 3) % 30;
+            let prompt = match dataset {
+                "cnndm" => format!(
+                    "article: the city council voted on tuesday to approve the new transit plan. \
+                     officials said the project will add {a} miles of track and create {b} jobs over the next decade.\nsummary:"
+                ),
+                "humaneval" => "def add(a, b):\n".to_string(),
+                _ => format!(
+                    "question: tom has {a} apples and buys {b} more. how many apples does tom have?\nanswer:"
+                ),
+            };
+            ServeRequest {
+                id: i,
+                prompt: prompt.into_bytes(),
+                max_new_tokens: max_new,
+            }
+        })
+        .collect()
+}

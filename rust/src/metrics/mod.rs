@@ -1,0 +1,8 @@
+//! Performance analyzer (paper §3.5): per-request metrics (TTFT, TPOT,
+//! end-to-end latency, acceptance, γ decisions, routing), system-level
+//! metrics (throughput, target utilization, queueing delay), SLO
+//! evaluation, and structured JSON emission.
+
+pub mod report;
+
+pub use report::{RequestMetrics, SimReport, SloSpec, SystemMetrics};

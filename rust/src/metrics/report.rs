@@ -1,0 +1,284 @@
+//! Per-request and system-level metric records and the end-of-run report.
+
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile};
+
+/// Everything the analyzer records about one completed request
+/// (paper §3.5, "Per-Request Metrics").
+#[derive(Clone, Debug)]
+pub struct RequestMetrics {
+    /// Request id (trace order).
+    pub id: usize,
+    /// Arrival time, ms.
+    pub arrival_ms: f64,
+    /// Time-to-first-token, ms.
+    pub ttft_ms: f64,
+    /// Time-per-output-token (decode phase), ms.
+    pub tpot_ms: f64,
+    /// End-to-end latency, ms.
+    pub e2e_ms: f64,
+    /// Final draft-token acceptance ratio (NaN in fused mode).
+    pub acceptance: f64,
+    /// Routing decision: target server id.
+    pub target_id: usize,
+    /// Drafter id.
+    pub drafter_id: usize,
+    /// Output tokens generated.
+    pub output_tokens: u32,
+    /// Sequence of window-size decisions (γ per verification round).
+    pub gamma_decisions: Vec<u32>,
+    /// Rounds executed in fused mode.
+    pub fused_rounds: u32,
+}
+
+impl RequestMetrics {
+    /// Serialize to the analyzer's JSON schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("id", self.id.into())
+            .with("arrival_ms", self.arrival_ms.into())
+            .with("ttft_ms", self.ttft_ms.into())
+            .with("tpot_ms", self.tpot_ms.into())
+            .with("e2e_ms", self.e2e_ms.into())
+            .with("acceptance", self.acceptance.into())
+            .with("target_id", self.target_id.into())
+            .with("drafter_id", self.drafter_id.into())
+            .with("output_tokens", (self.output_tokens as u64).into())
+            .with(
+                "gamma_decisions",
+                Json::Arr(
+                    self.gamma_decisions
+                        .iter()
+                        .map(|&g| Json::Num(g as f64))
+                        .collect(),
+                ),
+            )
+            .with("fused_rounds", (self.fused_rounds as u64).into())
+    }
+}
+
+/// System-level aggregates (paper §3.5, "System-Level Metrics").
+#[derive(Clone, Debug, Default)]
+pub struct SystemMetrics {
+    /// Steady-state throughput, requests per second: the interquartile
+    /// completion rate `0.5·N / (t75 − t25)`. Robust to warm-up and to
+    /// straggler tails (a completions-per-total-duration ratio would be
+    /// dominated by the longest request).
+    pub throughput_rps: f64,
+    /// Completed requests / total simulated duration (the naive ratio).
+    pub total_throughput_rps: f64,
+    /// Token throughput, output tokens per second.
+    pub token_throughput: f64,
+    /// Mean busy fraction across target devices.
+    pub target_utilization: f64,
+    /// Mean time requests spent queued at targets, ms.
+    pub mean_queue_delay_ms: f64,
+    /// Mean network delay per verification round-trip, ms.
+    pub mean_net_delay_ms: f64,
+    /// Total simulated duration, ms.
+    pub sim_duration_ms: f64,
+    /// Completed requests.
+    pub completed: usize,
+    /// Events processed by the DES engine (perf accounting).
+    pub events_processed: u64,
+    /// Wall-clock time the simulation took, ms (perf accounting).
+    pub wall_ms: f64,
+    /// Mean WC-DNN feature vector observed at window-decision time
+    /// `[q_depth_util, α_recent, RTT_recent, TPOT_recent, γ_prev]` —
+    /// consumed by the AWC training-dataset generator (paper §4.2).
+    pub mean_features: [f64; 5],
+}
+
+/// SLO thresholds for goodput-style evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    /// TTFT limit, ms.
+    pub ttft_ms: f64,
+    /// TPOT limit, ms.
+    pub tpot_ms: f64,
+}
+
+/// Complete end-of-run report.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Per-request records (completed requests only), trace order.
+    pub requests: Vec<RequestMetrics>,
+    /// System aggregates.
+    pub system: SystemMetrics,
+}
+
+impl SimReport {
+    /// Mean TTFT, ms.
+    pub fn mean_ttft(&self) -> f64 {
+        mean(&self.requests.iter().map(|r| r.ttft_ms).collect::<Vec<_>>())
+    }
+
+    /// Mean TPOT, ms.
+    pub fn mean_tpot(&self) -> f64 {
+        mean(&self.requests.iter().map(|r| r.tpot_ms).collect::<Vec<_>>())
+    }
+
+    /// Mean end-to-end latency, ms.
+    pub fn mean_e2e(&self) -> f64 {
+        mean(&self.requests.iter().map(|r| r.e2e_ms).collect::<Vec<_>>())
+    }
+
+    /// Percentile of TTFT.
+    pub fn p_ttft(&self, q: f64) -> f64 {
+        percentile(&self.requests.iter().map(|r| r.ttft_ms).collect::<Vec<_>>(), q)
+    }
+
+    /// Percentile of TPOT.
+    pub fn p_tpot(&self, q: f64) -> f64 {
+        percentile(&self.requests.iter().map(|r| r.tpot_ms).collect::<Vec<_>>(), q)
+    }
+
+    /// Mean acceptance over requests that speculated.
+    pub fn mean_acceptance(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .requests
+            .iter()
+            .map(|r| r.acceptance)
+            .filter(|a| a.is_finite())
+            .collect();
+        mean(&xs)
+    }
+
+    /// Mean window size across all decisions.
+    pub fn mean_gamma(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .requests
+            .iter()
+            .flat_map(|r| r.gamma_decisions.iter().map(|&g| g as f64))
+            .collect();
+        mean(&xs)
+    }
+
+    /// Fraction of requests meeting both SLO limits (goodput basis).
+    pub fn slo_attainment(&self, slo: SloSpec) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        let ok = self
+            .requests
+            .iter()
+            .filter(|r| r.ttft_ms <= slo.ttft_ms && r.tpot_ms <= slo.tpot_ms)
+            .count();
+        ok as f64 / self.requests.len() as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} tput={:.1} req/s ttft={:.0} ms tpot={:.1} ms e2e={:.0} ms acc={:.2} util={:.2}",
+            self.system.completed,
+            self.system.throughput_rps,
+            self.mean_ttft(),
+            self.mean_tpot(),
+            self.mean_e2e(),
+            self.mean_acceptance(),
+            self.system.target_utilization,
+        )
+    }
+
+    /// Full structured JSON (paper §3.5: "emitted in a structured JSON
+    /// format" for online adaptation and offline analysis).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with(
+                "system",
+                Json::obj()
+                    .with("throughput_rps", self.system.throughput_rps.into())
+                    .with("token_throughput", self.system.token_throughput.into())
+                    .with("target_utilization", self.system.target_utilization.into())
+                    .with("mean_queue_delay_ms", self.system.mean_queue_delay_ms.into())
+                    .with("mean_net_delay_ms", self.system.mean_net_delay_ms.into())
+                    .with("sim_duration_ms", self.system.sim_duration_ms.into())
+                    .with("completed", self.system.completed.into())
+                    .with("events_processed", self.system.events_processed.into())
+                    .with("wall_ms", self.system.wall_ms.into()),
+            )
+            .with(
+                "aggregates",
+                Json::obj()
+                    .with("mean_ttft_ms", self.mean_ttft().into())
+                    .with("mean_tpot_ms", self.mean_tpot().into())
+                    .with("mean_e2e_ms", self.mean_e2e().into())
+                    .with("p99_ttft_ms", self.p_ttft(99.0).into())
+                    .with("p99_tpot_ms", self.p_tpot(99.0).into())
+                    .with("mean_acceptance", self.mean_acceptance().into())
+                    .with("mean_gamma", self.mean_gamma().into()),
+            )
+            .with(
+                "requests",
+                Json::Arr(self.requests.iter().map(|r| r.to_json()).collect()),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, ttft: f64, tpot: f64) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival_ms: 0.0,
+            ttft_ms: ttft,
+            tpot_ms: tpot,
+            e2e_ms: ttft + tpot * 100.0,
+            acceptance: 0.8,
+            target_id: 0,
+            drafter_id: 0,
+            output_tokens: 100,
+            gamma_decisions: vec![4, 4, 5],
+            fused_rounds: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let rep = SimReport {
+            requests: vec![req(0, 100.0, 30.0), req(1, 300.0, 50.0)],
+            system: SystemMetrics::default(),
+        };
+        assert!((rep.mean_ttft() - 200.0).abs() < 1e-9);
+        assert!((rep.mean_tpot() - 40.0).abs() < 1e-9);
+        assert!((rep.mean_gamma() - 13.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_attainment() {
+        let rep = SimReport {
+            requests: vec![req(0, 100.0, 30.0), req(1, 300.0, 50.0)],
+            system: SystemMetrics::default(),
+        };
+        let slo = SloSpec { ttft_ms: 200.0, tpot_ms: 40.0 };
+        assert!((rep.slo_attainment(slo) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_emission_parses() {
+        let rep = SimReport {
+            requests: vec![req(0, 1.0, 2.0)],
+            system: SystemMetrics::default(),
+        };
+        let j = rep.to_json();
+        assert!(j.path(&["aggregates", "mean_ttft_ms"]).is_some());
+        assert_eq!(j.get("requests").unwrap().as_arr().unwrap().len(), 1);
+        // Round-trips through text.
+        let text = j.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn acceptance_ignores_fused_nan() {
+        let mut a = req(0, 1.0, 2.0);
+        a.acceptance = f64::NAN;
+        let rep = SimReport {
+            requests: vec![a, req(1, 1.0, 2.0)],
+            system: SystemMetrics::default(),
+        };
+        assert!((rep.mean_acceptance() - 0.8).abs() < 1e-9);
+    }
+}

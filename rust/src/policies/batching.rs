@@ -1,0 +1,191 @@
+//! Batching policies (paper §3.4): FIFO dispatch vs Length-Aware Batching
+//! (LAB) — the head-of-line request grouped with requests of similar
+//! length to minimize padding (the ORCA/Sarathi-style baseline of §5.3).
+
+/// A queued request visible to the batch former.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueuedRequest {
+    /// Request id.
+    pub id: usize,
+    /// Length signal used for grouping: prompt tokens for prefill
+    /// batches, remaining output tokens for decode batches.
+    pub length: u32,
+    /// Queue entry time, ms.
+    pub enqueued_ms: f64,
+}
+
+/// Batch formation interface: given the current queue (front first) and a
+/// batch capacity, return the *indices into the queue* to dispatch now.
+///
+/// Invariants every implementation must uphold:
+/// * at most `max_batch` indices, all in-bounds and distinct;
+/// * a non-empty queue yields a non-empty batch (no starvation);
+/// * the head-of-line request (index 0) is always included — LAB mitigates
+///   head-of-line *blocking* by whom it adds, not by skipping the head.
+pub trait BatchingPolicy: Send {
+    /// Select queue indices to batch.
+    fn form_batch(&self, queue: &[QueuedRequest], max_batch: usize) -> Vec<usize>;
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// First-in-first-out: take the front `max_batch` requests.
+pub struct Fifo;
+
+impl BatchingPolicy for Fifo {
+    fn form_batch(&self, queue: &[QueuedRequest], max_batch: usize) -> Vec<usize> {
+        (0..queue.len().min(max_batch)).collect()
+    }
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Length-Aware Batching: take the head-of-line request, then fill the
+/// batch with the queued requests whose length is closest to the head's
+/// (relative difference within `tolerance` preferred, nearest-length
+/// otherwise). Matches the paper's description: "LAB takes the
+/// head-of-line request and batches it with other requests whose lengths
+/// closely match the head-of-line request".
+pub struct Lab {
+    /// Preferred relative length tolerance (e.g. 0.5 ⇒ within ±50%).
+    pub tolerance: f64,
+}
+
+impl Default for Lab {
+    fn default() -> Self {
+        Lab { tolerance: 0.5 }
+    }
+}
+
+impl BatchingPolicy for Lab {
+    fn form_batch(&self, queue: &[QueuedRequest], max_batch: usize) -> Vec<usize> {
+        if queue.is_empty() || max_batch == 0 {
+            return Vec::new();
+        }
+        let head_len = queue[0].length as f64;
+        // Candidates sorted by |length - head|, then by queue position
+        // (FIFO fairness among equal matches).
+        let mut candidates: Vec<usize> = (1..queue.len()).collect();
+        candidates.sort_by(|&a, &b| {
+            let da = (queue[a].length as f64 - head_len).abs();
+            let db = (queue[b].length as f64 - head_len).abs();
+            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+        });
+        let mut batch = vec![0];
+        for &i in &candidates {
+            if batch.len() >= max_batch {
+                break;
+            }
+            batch.push(i);
+        }
+        // Tolerance shapes preference, not admission: with spare capacity
+        // we still fill the batch (compute would idle otherwise), but the
+        // sort guarantees closest lengths first.
+        let _ = self.tolerance;
+        batch
+    }
+    fn name(&self) -> &'static str {
+        "lab"
+    }
+}
+
+/// Padding overhead of a batch: sum over members of (max_len − len),
+/// the wasted work LAB minimizes.
+pub fn padding_cost(queue: &[QueuedRequest], batch: &[usize]) -> u64 {
+    let max_len = batch
+        .iter()
+        .map(|&i| queue[i].length)
+        .max()
+        .unwrap_or(0) as u64;
+    batch
+        .iter()
+        .map(|&i| max_len - queue[i].length as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, Gen};
+
+    fn queue(lens: &[u32]) -> Vec<QueuedRequest> {
+        lens.iter()
+            .enumerate()
+            .map(|(id, &l)| QueuedRequest {
+                id,
+                length: l,
+                enqueued_ms: id as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fifo_takes_front() {
+        let q = queue(&[10, 900, 12, 11]);
+        assert_eq!(Fifo.form_batch(&q, 2), vec![0, 1]);
+        assert_eq!(Fifo.form_batch(&q, 10), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn lab_groups_similar_lengths() {
+        // Head is short (10); LAB should pick the other short ones, not
+        // the 900-token request sitting at position 1.
+        let q = queue(&[10, 900, 12, 11, 850]);
+        let batch = Lab::default().form_batch(&q, 3);
+        assert_eq!(batch[0], 0, "head of line always included");
+        assert!(batch.contains(&2) && batch.contains(&3));
+        assert!(!batch.contains(&1));
+    }
+
+    #[test]
+    fn lab_reduces_padding_vs_fifo() {
+        let q = queue(&[100, 2000, 110, 95, 1900, 105]);
+        let fifo_cost = padding_cost(&q, &Fifo.form_batch(&q, 4));
+        let lab_cost = padding_cost(&q, &Lab::default().form_batch(&q, 4));
+        assert!(
+            lab_cost < fifo_cost / 4,
+            "lab={lab_cost} fifo={fifo_cost}"
+        );
+    }
+
+    #[test]
+    fn lab_fills_capacity_when_queue_allows() {
+        let q = queue(&[10, 9000, 8000]);
+        // Nothing is "similar" to the head, but idle capacity is worse
+        // than padding: batch still fills.
+        assert_eq!(Lab::default().form_batch(&q, 3).len(), 3);
+    }
+
+    #[test]
+    fn empty_queue_empty_batch() {
+        assert!(Fifo.form_batch(&[], 8).is_empty());
+        assert!(Lab::default().form_batch(&[], 8).is_empty());
+    }
+
+    #[test]
+    fn prop_batching_invariants() {
+        run_prop("batching invariants", 300, |g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            let q: Vec<QueuedRequest> = (0..n)
+                .map(|id| QueuedRequest {
+                    id,
+                    length: g.usize_in(1, 2048) as u32,
+                    enqueued_ms: id as f64,
+                })
+                .collect();
+            let max_batch = g.usize_in(1, 16);
+            for policy in [&Fifo as &dyn BatchingPolicy, &Lab::default()] {
+                let batch = policy.form_batch(&q, max_batch);
+                assert!(!batch.is_empty(), "{}: starvation", policy.name());
+                assert!(batch.len() <= max_batch);
+                assert_eq!(batch[0], 0, "{}: head-of-line skipped", policy.name());
+                let mut sorted = batch.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), batch.len(), "duplicate indices");
+                assert!(sorted.iter().all(|&i| i < q.len()), "out of bounds");
+            }
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! The three pluggable policy families of paper §3.4 — request routing,
+//! batching, and window-size control. Each policy operates on a read-only
+//! snapshot of recent system performance metrics (queue depth, RTT, TPOT,
+//! acceptance rate).
+
+pub mod batching;
+pub mod routing;
+pub mod window;
+
+pub use batching::{BatchingPolicy, Fifo, Lab, QueuedRequest};
+pub use routing::{Jsq, Random, RoundRobin, RoutingPolicy, TargetSnapshot};
+pub use window::{
+    DynamicWindow, ExecMode, StaticWindow, WindowDecision, WindowFeatures, WindowPolicy,
+};
+
+use crate::config::{BatchingKind, RoutingKind, WindowKind};
+
+/// Instantiate a routing policy from its config selector.
+pub fn make_routing(kind: RoutingKind) -> Box<dyn RoutingPolicy> {
+    match kind {
+        RoutingKind::Random => Box::new(Random),
+        RoutingKind::RoundRobin => Box::new(RoundRobin::new()),
+        RoutingKind::Jsq => Box::new(Jsq),
+    }
+}
+
+/// Instantiate a batching policy from its config selector.
+pub fn make_batching(kind: BatchingKind) -> Box<dyn BatchingPolicy> {
+    match kind {
+        BatchingKind::Fifo => Box::new(Fifo),
+        BatchingKind::Lab => Box::new(Lab::default()),
+    }
+}
+
+/// Instantiate a window policy from its config selector.
+///
+/// `WindowKind::Awc` loads the embedded pretrained WC-DNN unless a weight
+/// file path is provided.
+pub fn make_window(kind: &WindowKind) -> Result<Box<dyn WindowPolicy>, String> {
+    Ok(match kind {
+        WindowKind::Static(g) => Box::new(StaticWindow(*g)),
+        WindowKind::Dynamic { init, lo, hi } => Box::new(DynamicWindow::new(*init, *lo, *hi)),
+        WindowKind::Awc { weights_path } => {
+            let weights = match weights_path {
+                Some(p) => crate::awc::AwcWeights::from_file(p)?,
+                None => crate::awc::AwcWeights::builtin(),
+            };
+            Box::new(crate::awc::AwcPolicy::new(weights))
+        }
+        WindowKind::FusedOnly => Box::new(window::FusedOnly),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factories_produce_the_right_policies() {
+        assert_eq!(make_routing(RoutingKind::Random).name(), "random");
+        assert_eq!(make_routing(RoutingKind::RoundRobin).name(), "round_robin");
+        assert_eq!(make_routing(RoutingKind::Jsq).name(), "jsq");
+        assert_eq!(make_batching(BatchingKind::Fifo).name(), "fifo");
+        assert_eq!(make_batching(BatchingKind::Lab).name(), "lab");
+        assert_eq!(make_window(&WindowKind::Static(4)).unwrap().name(), "static");
+        assert_eq!(
+            make_window(&WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 })
+                .unwrap()
+                .name(),
+            "dynamic"
+        );
+        assert_eq!(
+            make_window(&WindowKind::Awc { weights_path: None }).unwrap().name(),
+            "awc"
+        );
+        assert_eq!(make_window(&WindowKind::FusedOnly).unwrap().name(), "fused");
+    }
+}

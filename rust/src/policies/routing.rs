@@ -1,0 +1,166 @@
+//! Request routing policies (paper §3.4): Random, Round-Robin, and
+//! Join-the-Shortest-Queue over a read-only snapshot of target state.
+
+use crate::util::rng::Pcg64;
+
+/// Read-only view of one target server the router can inspect.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TargetSnapshot {
+    /// Target id.
+    pub id: usize,
+    /// Requests waiting in the prefill queue.
+    pub prefill_queue: usize,
+    /// Requests currently in decode/verify residency.
+    pub active: usize,
+    /// Recent mean TPOT on this target, ms (0 if unknown).
+    pub recent_tpot_ms: f64,
+    /// Whether the server is currently executing a batch.
+    pub busy: bool,
+}
+
+impl TargetSnapshot {
+    /// Total load signal used by JSQ (queued + resident work).
+    pub fn load(&self) -> usize {
+        self.prefill_queue + self.active
+    }
+}
+
+/// Routing policy interface. Policies may keep internal state (e.g.
+/// round-robin cursor); randomness comes from the caller's RNG stream so
+/// simulations stay deterministic.
+pub trait RoutingPolicy: Send {
+    /// Pick a target id for an arriving request.
+    fn route(&mut self, targets: &[TargetSnapshot], rng: &mut Pcg64) -> usize;
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Uniform random selection.
+pub struct Random;
+
+impl RoutingPolicy for Random {
+    fn route(&mut self, targets: &[TargetSnapshot], rng: &mut Pcg64) -> usize {
+        targets[rng.index(targets.len())].id
+    }
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Round-robin over target ids.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    /// Cursor starts at target 0.
+    pub fn new() -> Self {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn route(&mut self, targets: &[TargetSnapshot], _rng: &mut Pcg64) -> usize {
+        let t = targets[self.next % targets.len()].id;
+        self.next = (self.next + 1) % targets.len();
+        t
+    }
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+}
+
+/// Join-the-Shortest-Queue: route to the target with the least queued +
+/// resident work; ties broken by lower id (deterministic).
+pub struct Jsq;
+
+impl RoutingPolicy for Jsq {
+    fn route(&mut self, targets: &[TargetSnapshot], _rng: &mut Pcg64) -> usize {
+        targets
+            .iter()
+            .min_by_key(|t| (t.load(), t.id))
+            .expect("at least one target")
+            .id
+    }
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snaps(loads: &[usize]) -> Vec<TargetSnapshot> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &l)| TargetSnapshot {
+                id,
+                prefill_queue: l,
+                ..Default::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn jsq_picks_min_load() {
+        let mut p = Jsq;
+        let mut rng = Pcg64::new(1);
+        assert_eq!(p.route(&snaps(&[3, 1, 2]), &mut rng), 1);
+        // Tie -> lowest id.
+        assert_eq!(p.route(&snaps(&[2, 2, 2]), &mut rng), 0);
+    }
+
+    #[test]
+    fn jsq_counts_active_too() {
+        let mut p = Jsq;
+        let mut rng = Pcg64::new(1);
+        let mut ts = snaps(&[0, 0]);
+        ts[0].active = 5;
+        assert_eq!(p.route(&ts, &mut rng), 1);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut p = RoundRobin::new();
+        let mut rng = Pcg64::new(1);
+        let ts = snaps(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|_| p.route(&ts, &mut rng)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn random_covers_all_targets() {
+        let mut p = Random;
+        let mut rng = Pcg64::new(7);
+        let ts = snaps(&[0; 8]);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[p.route(&ts, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn random_is_roughly_uniform() {
+        let mut p = Random;
+        let mut rng = Pcg64::new(11);
+        let ts = snaps(&[0; 4]);
+        let mut counts = [0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            counts[p.route(&ts, &mut rng)] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.25).abs() < 0.02, "frac={frac}");
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Window-size policies (paper §3.4): Static γ, the Dynamic threshold
+//! heuristic, and the fused-only baseline. The learned AWC policy lives in
+//! [`crate::awc`] and implements the same [`WindowPolicy`] trait.
+
+/// Execution mode for the next speculation iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Edge drafts γ tokens, cloud verifies (network round trip).
+    Distributed,
+    /// Cloud generates tokens directly; no speculation (γ ≤ 1 regime).
+    Fused,
+}
+
+/// A window decision for one iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowDecision {
+    /// Speculation window size (≥1; meaningful in distributed mode).
+    pub gamma: u32,
+    /// Fused vs distributed execution.
+    pub mode: ExecMode,
+}
+
+/// The feature vector window policies observe — exactly the five inputs
+/// of the WC-DNN (paper §4.1), assembled by the performance analyzer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowFeatures {
+    /// Queue-depth utilization of the routed target: occupancy relative
+    /// to its decode batch capacity, in [0, ~2].
+    pub queue_depth_util: f64,
+    /// Recent token acceptance ratio for this draft–target pair.
+    pub acceptance_recent: f64,
+    /// Recent round-trip time on the link, ms.
+    pub rtt_recent_ms: f64,
+    /// Recent time-per-output-token on the target, ms.
+    pub tpot_recent_ms: f64,
+    /// Window size chosen in the previous iteration.
+    pub gamma_prev: u32,
+}
+
+impl WindowFeatures {
+    /// Flatten to the WC-DNN input layout `[q_depth, α, RTT, TPOT, γ_prev]`.
+    pub fn to_vec(&self) -> [f64; 5] {
+        [
+            self.queue_depth_util,
+            self.acceptance_recent,
+            self.rtt_recent_ms,
+            self.tpot_recent_ms,
+            self.gamma_prev as f64,
+        ]
+    }
+}
+
+/// Per-connection window policy. The simulator keeps one policy instance
+/// per simulation; `pair_key` identifies the (drafter, target) connection
+/// so stateful policies (AWC's EMA/hysteresis) track each link separately
+/// (paper §4.4: "smoothing state is maintained per draft-target pair").
+pub trait WindowPolicy: Send {
+    /// Decide γ and mode for the next iteration of `pair_key`.
+    fn decide(&mut self, pair_key: u64, features: &WindowFeatures) -> WindowDecision;
+    /// Forget a connection's state (request completed).
+    fn forget(&mut self, _pair_key: u64) {}
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Fixed window size (the paper's Static baseline, γ = 4 in §5.2).
+pub struct StaticWindow(pub u32);
+
+impl WindowPolicy for StaticWindow {
+    fn decide(&mut self, _pair: u64, _f: &WindowFeatures) -> WindowDecision {
+        WindowDecision {
+            gamma: self.0.max(1),
+            mode: ExecMode::Distributed,
+        }
+    }
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Threshold heuristic (the paper's Dynamic baseline, §5.2): increment γ
+/// when recent acceptance exceeds `hi` (0.75), decrement when it falls
+/// below `lo` (0.25); clamped to [1, 12].
+pub struct DynamicWindow {
+    init: u32,
+    lo: f64,
+    hi: f64,
+    /// Clamp range for the heuristic's walk. Tighter than AWC's [1, 12]:
+    /// with a high-acceptance workload the threshold rule ratchets upward
+    /// (crossing `hi` is far more likely than crossing `lo`), and an
+    /// unbounded walk parks γ at the ceiling where drafting cost eats the
+    /// speedup. [2, 8] is the operational clamp.
+    min: u32,
+    max: u32,
+    state: std::collections::HashMap<u64, u32>,
+}
+
+impl DynamicWindow {
+    /// New heuristic with thresholds (`lo`, `hi`) and initial γ.
+    pub fn new(init: u32, lo: f64, hi: f64) -> Self {
+        DynamicWindow {
+            init: init.clamp(2, 6),
+            lo,
+            hi,
+            min: 2,
+            max: 6,
+            state: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Override the clamp range.
+    pub fn with_range(mut self, min: u32, max: u32) -> Self {
+        self.min = min.max(1);
+        self.max = max.min(12);
+        self.init = self.init.clamp(self.min, self.max);
+        self
+    }
+}
+
+impl WindowPolicy for DynamicWindow {
+    fn decide(&mut self, pair: u64, f: &WindowFeatures) -> WindowDecision {
+        let g = self.state.entry(pair).or_insert(self.init);
+        if f.acceptance_recent > self.hi {
+            *g = (*g + 1).min(self.max);
+        } else if f.acceptance_recent < self.lo {
+            *g = g.saturating_sub(1).max(self.min);
+        }
+        WindowDecision {
+            gamma: *g,
+            mode: ExecMode::Distributed,
+        }
+    }
+    fn forget(&mut self, pair: u64) {
+        self.state.remove(&pair);
+    }
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+}
+
+/// Cloud-only baseline: always fused (Fig. 6's green series).
+pub struct FusedOnly;
+
+impl WindowPolicy for FusedOnly {
+    fn decide(&mut self, _pair: u64, _f: &WindowFeatures) -> WindowDecision {
+        WindowDecision {
+            gamma: 1,
+            mode: ExecMode::Fused,
+        }
+    }
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feat(acc: f64) -> WindowFeatures {
+        WindowFeatures {
+            acceptance_recent: acc,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn static_is_constant() {
+        let mut p = StaticWindow(4);
+        for acc in [0.0, 0.5, 1.0] {
+            let d = p.decide(0, &feat(acc));
+            assert_eq!(d.gamma, 4);
+            assert_eq!(d.mode, ExecMode::Distributed);
+        }
+    }
+
+    #[test]
+    fn dynamic_tracks_acceptance() {
+        let mut p = DynamicWindow::new(4, 0.25, 0.75).with_range(1, 12);
+        // High acceptance grows the window...
+        for _ in 0..5 {
+            p.decide(1, &feat(0.9));
+        }
+        assert_eq!(p.decide(1, &feat(0.9)).gamma, 10);
+        // ...low acceptance shrinks it...
+        for _ in 0..20 {
+            p.decide(1, &feat(0.1));
+        }
+        assert_eq!(p.decide(1, &feat(0.1)).gamma, 1);
+        // ...mid-band holds steady.
+        assert_eq!(p.decide(1, &feat(0.5)).gamma, 1);
+    }
+
+    #[test]
+    fn dynamic_clamps_to_range() {
+        let mut p = DynamicWindow::new(11, 0.25, 0.75).with_range(1, 12);
+        for _ in 0..10 {
+            p.decide(2, &feat(1.0));
+        }
+        assert_eq!(p.decide(2, &feat(1.0)).gamma, 12);
+        // Default operational clamp is [2, 6].
+        let mut q = DynamicWindow::new(4, 0.25, 0.75);
+        for _ in 0..10 {
+            q.decide(3, &feat(1.0));
+        }
+        assert_eq!(q.decide(3, &feat(1.0)).gamma, 6);
+        for _ in 0..10 {
+            q.decide(3, &feat(0.0));
+        }
+        assert_eq!(q.decide(3, &feat(0.0)).gamma, 2);
+    }
+
+    #[test]
+    fn dynamic_state_is_per_pair() {
+        let mut p = DynamicWindow::new(4, 0.25, 0.75);
+        p.decide(1, &feat(0.9)); // pair 1 grows
+        assert_eq!(p.decide(2, &feat(0.5)).gamma, 4, "pair 2 untouched");
+        p.forget(1);
+        assert_eq!(p.decide(1, &feat(0.5)).gamma, 4, "pair 1 reset");
+    }
+
+    #[test]
+    fn fused_only_always_fused() {
+        let mut p = FusedOnly;
+        assert_eq!(p.decide(0, &feat(1.0)).mode, ExecMode::Fused);
+    }
+
+    #[test]
+    fn feature_layout_matches_wcdnn_order() {
+        let f = WindowFeatures {
+            queue_depth_util: 0.5,
+            acceptance_recent: 0.8,
+            rtt_recent_ms: 10.0,
+            tpot_recent_ms: 40.0,
+            gamma_prev: 4,
+        };
+        assert_eq!(f.to_vec(), [0.5, 0.8, 10.0, 40.0, 4.0]);
+    }
+}

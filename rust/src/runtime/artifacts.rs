@@ -1,0 +1,217 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. `manifest.json` names every HLO artifact and its
+//! operand/result shapes; the runtime validates against it at load time
+//! so shape drift fails fast instead of crashing inside PJRT.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One operand or result declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Logical name (e.g. `"tokens"`).
+    pub name: String,
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// Dtype string: `"f32"` or `"s32"`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec, String> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("tensor: missing name")?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or("tensor: missing shape")?
+                .iter()
+                .map(|x| x.as_usize().ok_or("tensor: bad dim"))
+                .collect::<Result<_, _>>()?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or("tensor: missing dtype")?
+                .to_string(),
+        })
+    }
+}
+
+/// One artifact entry (an HLO module on disk).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Artifact key, e.g. `"draft_decode"`.
+    pub key: String,
+    /// File path (relative to the artifacts dir).
+    pub path: PathBuf,
+    /// Operand declarations in call order.
+    pub operands: Vec<TensorSpec>,
+    /// Result declarations in tuple order.
+    pub results: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+    /// Vocabulary size of the LM pair.
+    pub vocab: usize,
+    /// Padded prompt length of the prefill artifacts.
+    pub prompt_pad: usize,
+    /// Window sizes with a pre-lowered verify artifact.
+    pub verify_gammas: Vec<u32>,
+    /// Draft model max sequence length.
+    pub draft_max_len: usize,
+    /// Target model max sequence length.
+    pub target_max_len: usize,
+    /// All artifacts by key.
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {path:?}: {e} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        let model_field = |model: &str, field: &str| -> Result<usize, String> {
+            j.path(&[model, field])
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("manifest: missing {model}.{field}"))
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .ok_or("manifest: missing artifacts")?;
+        let Json::Obj(pairs) = arts else {
+            return Err("manifest: artifacts must be an object".into());
+        };
+        for (key, spec) in pairs {
+            let operands = spec
+                .get("operands")
+                .and_then(Json::as_arr)
+                .ok_or("artifact: missing operands")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            let results = spec
+                .get("results")
+                .and_then(Json::as_arr)
+                .ok_or("artifact: missing results")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.insert(
+                key.clone(),
+                ArtifactSpec {
+                    key: key.clone(),
+                    path: dir.join(
+                        spec.get("path")
+                            .and_then(Json::as_str)
+                            .ok_or("artifact: missing path")?,
+                    ),
+                    operands,
+                    results,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab: j
+                .get("vocab")
+                .and_then(Json::as_usize)
+                .ok_or("manifest: missing vocab")?,
+            prompt_pad: j
+                .get("prompt_pad")
+                .and_then(Json::as_usize)
+                .ok_or("manifest: missing prompt_pad")?,
+            verify_gammas: j
+                .get("verify_gammas")
+                .and_then(Json::as_arr)
+                .ok_or("manifest: missing verify_gammas")?
+                .iter()
+                .map(|x| x.as_u64().map(|v| v as u32).ok_or("bad gamma"))
+                .collect::<Result<_, _>>()?,
+            draft_max_len: model_field("draft", "max_len")?,
+            target_max_len: model_field("target", "max_len")?,
+            artifacts,
+        })
+    }
+
+    /// Artifact by key.
+    pub fn get(&self, key: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| format!("manifest: no artifact '{key}'"))
+    }
+
+    /// The largest available verify γ that is ≤ `wanted` (the real-path
+    /// clamp for AWC decisions).
+    pub fn nearest_verify_gamma(&self, wanted: u32) -> u32 {
+        self.verify_gammas
+            .iter()
+            .copied()
+            .filter(|&g| g <= wanted.max(1))
+            .max()
+            .unwrap_or_else(|| *self.verify_gammas.first().unwrap_or(&1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn nearest_gamma_clamps() {
+        let m = Manifest {
+            dir: PathBuf::new(),
+            vocab: 256,
+            prompt_pad: 128,
+            verify_gammas: vec![1, 2, 3, 4, 6, 8],
+            draft_max_len: 384,
+            target_max_len: 384,
+            artifacts: BTreeMap::new(),
+        };
+        assert_eq!(m.nearest_verify_gamma(5), 4);
+        assert_eq!(m.nearest_verify_gamma(12), 8);
+        assert_eq!(m.nearest_verify_gamma(1), 1);
+        assert_eq!(m.nearest_verify_gamma(0), 1);
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // Runs against the artifacts produced by `make artifacts`;
+        // silently skipped when they have not been built.
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab, 256);
+        for key in ["draft_prefill", "draft_decode", "target_prefill"] {
+            let a = m.get(key).unwrap();
+            assert!(a.path.exists(), "{:?} missing", a.path);
+            assert!(!a.operands.is_empty());
+        }
+        for g in &m.verify_gammas {
+            assert!(m.get(&format!("target_verify_g{g}")).is_ok());
+        }
+    }
+}

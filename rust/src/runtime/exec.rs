@@ -1,0 +1,277 @@
+//! PJRT client wrapper and compiled-executable handles.
+//!
+//! [`Runtime`] owns one PJRT CPU client and a cache of compiled
+//! executables keyed by artifact name; [`Executable`] gives a typed call
+//! interface (f32/i32 tensors in, f32/i32 tensors out) with manifest
+//! shape validation.
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A tensor value crossing the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    /// f32 data with shape.
+    F32(Vec<f32>, Vec<usize>),
+    /// i32 data with shape.
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    /// Scalar i32.
+    pub fn scalar_i32(x: i32) -> Tensor {
+        Tensor::I32(vec![x], vec![])
+    }
+
+    /// Scalar f32.
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32(vec![x], vec![])
+    }
+
+    /// 1-D i32.
+    pub fn vec_i32(xs: Vec<i32>) -> Tensor {
+        let n = xs.len();
+        Tensor::I32(xs, vec![n])
+    }
+
+    /// 1-D f32.
+    pub fn vec_f32(xs: Vec<f32>) -> Tensor {
+        let n = xs.len();
+        Tensor::F32(xs, vec![n])
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    /// Element count.
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product::<usize>().max(
+            // scalars have empty shape but one element
+            if self.shape().is_empty() { 1 } else { 0 },
+        )
+    }
+
+    /// Borrow f32 data (None for i32 tensors).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Borrow i32 data (None for f32 tensors).
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    fn dtype_str(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "f32",
+            Tensor::I32(..) => "s32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32(data, shape) => {
+                let l = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+            Tensor::I32(data, shape) => {
+                let l = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec_dtype: &str, shape: Vec<usize>) -> Result<Tensor> {
+        match spec_dtype {
+            "f32" => Ok(Tensor::F32(lit.to_vec::<f32>()?, shape)),
+            "s32" => Ok(Tensor::I32(lit.to_vec::<i32>()?, shape)),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Operand/result declarations.
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with manifest-validated operands; returns result tensors
+    /// in manifest order.
+    pub fn call(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        if args.len() != self.spec.operands.len() {
+            return Err(anyhow!(
+                "{}: want {} operands, got {}",
+                self.spec.key,
+                self.spec.operands.len(),
+                args.len()
+            ));
+        }
+        for (arg, want) in args.iter().zip(&self.spec.operands) {
+            if arg.shape() != want.shape.as_slice() || arg.dtype_str() != want.dtype {
+                return Err(anyhow!(
+                    "{}: operand '{}' wants {:?}/{}, got {:?}/{}",
+                    self.spec.key,
+                    want.name,
+                    want.shape,
+                    want.dtype,
+                    arg.shape(),
+                    arg.dtype_str()
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.results.len() {
+            return Err(anyhow!(
+                "{}: want {} results, got {}",
+                self.spec.key,
+                self.spec.results.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(&self.spec.results)
+            .map(|(lit, want)| Tensor::from_literal(lit, &want.dtype, want.shape.clone()))
+            .collect()
+    }
+}
+
+/// PJRT client + compiled-executable cache. `Sync` via an internal mutex
+/// on the cache; PJRT execution itself is invoked from worker threads.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) an executable by artifact key.
+    pub fn executable(&self, key: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(key).map_err(|e| anyhow!(e))?.clone();
+        let path = spec
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = std::sync::Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Compile every artifact up front (serving warm-up).
+    pub fn warmup(&self) -> Result<()> {
+        let keys: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        for k in keys {
+            self.executable(&k)?;
+        }
+        Ok(())
+    }
+
+    /// Compile only the artifacts whose key starts with `prefix` —
+    /// drafter workers warm `draft_*`, verifiers `target_*`, so each
+    /// role pays only its own parse+compile cost.
+    pub fn warmup_prefix(&self, prefix: &str) -> Result<()> {
+        let keys: Vec<String> = self
+            .manifest
+            .artifacts
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        for k in keys {
+            self.executable(&k)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::vec_f32(vec![1.0, 2.0]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.elements(), 2);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(t.as_i32().is_none());
+        let s = Tensor::scalar_i32(7);
+        assert_eq!(s.elements(), 1);
+        assert!(s.shape().is_empty());
+    }
+
+    #[test]
+    fn dtype_strings_match_manifest_vocabulary() {
+        assert_eq!(Tensor::scalar_f32(0.0).dtype_str(), "f32");
+        assert_eq!(Tensor::scalar_i32(0).dtype_str(), "s32");
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime bridge: load the AOT-compiled HLO-text artifacts and
+//! execute them from the L3 hot path (no python anywhere).
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API, CPU plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. See /opt/xla-example/load_hlo for the
+//! reference wiring and the HLO-text-vs-proto gotcha.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use exec::{Executable, Runtime};

@@ -1,0 +1,178 @@
+//! Deterministic discrete-event engine (the SimPy role in paper §3.1).
+//!
+//! A binary heap of `(time, seq)`-ordered events; `seq` breaks ties in
+//! insertion order so simulations are bit-reproducible regardless of
+//! floating-point coincidences.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled event.
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap behaviour on BinaryHeap (max-heap).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event queue with a simulation clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: f64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// Empty queue at time 0.
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            processed: 0,
+        }
+    }
+
+    /// Current simulation time, ms.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at` (clamped to now —
+    /// scheduling in the past is a bug in debug builds).
+    pub fn schedule(&mut self, at: f64, payload: E) {
+        debug_assert!(at >= self.now - 1e-9, "scheduling into the past: {at} < {}", self.now);
+        let entry = Entry {
+            time: at.max(self.now),
+            seq: self.seq,
+            payload,
+        };
+        self.seq += 1;
+        self.heap.push(entry);
+    }
+
+    /// Schedule `payload` after a relative delay.
+    pub fn schedule_in(&mut self, delay: f64, payload: E) {
+        let at = self.now + delay.max(0.0);
+        self.schedule(at, payload);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let e = self.heap.pop()?;
+        self.now = e.time;
+        self.processed += 1;
+        Some((e.time, e.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, Gen};
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, ());
+        q.schedule(1.0, ());
+        let (t1, _) = q.pop().unwrap();
+        assert_eq!(q.now(), t1);
+        q.schedule_in(0.5, ());
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!(t2, 1.5);
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 2.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn negative_delay_clamps_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "x");
+        q.pop();
+        q.schedule_in(-5.0, "y");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn prop_global_time_order() {
+        run_prop("event queue total order", 100, |g: &mut Gen| {
+            let mut q = EventQueue::new();
+            let n = g.usize_in(1, 200);
+            for i in 0..n {
+                q.schedule(g.f64_in(0.0, 100.0), i);
+            }
+            let mut last = -1.0;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= last);
+                last = t;
+            }
+            assert_eq!(q.processed(), n as u64);
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! DSD-Sim (paper §3): deterministic discrete-event engine and the
+//! distributed-speculative-decoding simulator built on it.
+
+pub mod engine;
+pub mod simulator;
+
+pub use engine::EventQueue;
+pub use simulator::Simulator;

@@ -1,0 +1,1076 @@
+//! DSD-Sim: the request-level discrete-event simulator for distributed
+//! speculative decoding (paper §3).
+//!
+//! Execution semantics (§3.3): each request moves through **Routing →
+//! Batching → Speculation ⇄ Verification** until its output length is
+//! reached. Two execution modes exist per iteration: **distributed**
+//! (edge drafts γ tokens, ships them over the link, cloud verifies in a
+//! batch) and **fused** (the request resides on the target, which decodes
+//! tokens directly — no drafter work, no network legs).
+//!
+//! The simulator wires together the expanded [`Topology`], the
+//! [`Predictor`] hardware model, the workload [`Trace`], and the three
+//! policy families. All randomness forks from the config seed; repeated
+//! runs are bit-identical (single event heap ordered by `(time, seq)`).
+
+use crate::config::{SimConfig, Topology, WindowKind};
+use crate::hwmodel::{Hardware, Predictor};
+use crate::metrics::{RequestMetrics, SimReport, SystemMetrics};
+use crate::policies::window::ExecMode;
+use crate::policies::{
+    make_batching, make_routing, make_window, BatchingPolicy, QueuedRequest, RoutingPolicy,
+    TargetSnapshot, WindowFeatures, WindowPolicy,
+};
+use crate::sim::engine::EventQueue;
+use crate::specdec::SpeculationState;
+use crate::trace::{dataset_by_name, Trace};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Ema;
+use std::collections::VecDeque;
+
+/// Target-server batch operations.
+#[derive(Clone, Debug)]
+enum TargetOp {
+    /// Prefill a batch of requests (ids).
+    Prefill(Vec<usize>),
+    /// Verify speculation windows: (request id, γ).
+    Verify(Vec<(usize, u32)>),
+    /// One fused decode step over resident requests (ids).
+    FusedDecode(Vec<usize>),
+}
+
+/// Simulation events.
+#[derive(Clone, Debug)]
+enum Ev {
+    /// Request arrives at its drafter.
+    Arrival(usize),
+    /// Prompt reached the target; join the prefill queue.
+    PromptAtTarget(usize),
+    /// Drafter may start its next queued task.
+    DrafterFree(usize),
+    /// Drafter finished a task (`gamma == 0` means edge prefill).
+    DrafterTaskDone { req: usize, gamma: u32 },
+    /// Draft tokens arrived at the target (join verify queue).
+    UplinkArrive { req: usize, gamma: u32, sent_ms: f64 },
+    /// Try to dispatch a batch on a target.
+    TargetKick(usize),
+    /// A target batch finished.
+    TargetDone { target: usize, op: TargetOp, started_ms: f64 },
+    /// Verification result reached the drafter.
+    DownlinkArrive { req: usize, net_ms: f64 },
+    /// Target prefill notification reached the edge (enables round 1).
+    PrefillNotify(usize),
+    /// Migration: request switches fused→distributed (back at drafter).
+    MigrateToEdge(usize),
+}
+
+/// Drafter-side work items.
+#[derive(Clone, Copy, Debug)]
+enum DrafterTask {
+    /// Local prompt prefill.
+    Prefill(usize),
+    /// Draft γ tokens.
+    Draft { req: usize, gamma: u32 },
+}
+
+/// Per-request live state.
+struct Request {
+    id: usize,
+    drafter: usize,
+    target: usize,
+    prompt_length: u32,
+    acceptance_seq: Vec<bool>,
+    arrival_ms: f64,
+    spec: SpeculationState,
+    mode: ExecMode,
+    edge_prefill_done: bool,
+    target_prefill_seen: bool,
+    ttft_ms: Option<f64>,
+    completed_ms: Option<f64>,
+    gammas: Vec<u32>,
+    fused_rounds: u32,
+    /// Recent acceptance EMA (feature α_recent).
+    /// Cumulative accepted / verified draft-token counts. The ratio of
+    /// sums is an unbiased estimate of the Bernoulli acceptance rate α
+    /// (a mean of per-window ratios is biased low: windows truncate at
+    /// the first mismatch).
+    acc_counts: (f64, f64),
+    /// Recent measured network RTT EMA (feature RTT_recent).
+    rtt_ema: Ema,
+    gamma_prev: u32,
+    /// When the current draft window was shipped (RTT measurement).
+    uplink_sent_ms: f64,
+    /// Service time of the last verify batch (subtracted from the loop
+    /// time to estimate pure network RTT).
+    last_verify_ms: f64,
+}
+
+impl Request {
+    fn pair_key(&self) -> u64 {
+        ((self.drafter as u64) << 32) | self.target as u64
+    }
+    fn ctx_len(&self) -> u32 {
+        self.prompt_length + self.spec.generated
+    }
+}
+
+/// Per-target live state.
+struct Target {
+    busy: bool,
+    prefill_q: VecDeque<(usize, f64)>,
+    verify_q: VecDeque<(usize, u32, f64)>,
+    fused_resident: VecDeque<usize>,
+    last_was_prefill: bool,
+    /// Recent per-produced-token latency (feature TPOT_recent).
+    tpot_ema: Ema,
+    /// Pooled (accepted, verified) counts over every window this target
+    /// verified — the α prior for requests with no history of their own.
+    alpha_counts: (f64, f64),
+    busy_ms: f64,
+}
+
+/// Per-drafter live state.
+struct Drafter {
+    busy: bool,
+    tasks: VecDeque<DrafterTask>,
+}
+
+/// The simulator. Construct with [`Simulator::new`] or
+/// [`Simulator::try_new`], then call [`Simulator::run`].
+pub struct Simulator {
+    cfg: SimConfig,
+    topo: Topology,
+    predictor: Predictor,
+    trace: Trace,
+}
+
+impl Simulator {
+    /// Build from a validated config (panics on invalid topology).
+    pub fn new(cfg: SimConfig) -> Self {
+        Self::try_new(cfg).expect("simulator construction")
+    }
+
+    /// Fallible constructor.
+    pub fn try_new(cfg: SimConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        let topo = Topology::expand(&cfg)?;
+        let trace = match &cfg.workload.trace_path {
+            Some(p) => crate::trace::io::read_jsonl(std::path::Path::new(p))?,
+            None => {
+                let ds = dataset_by_name(&cfg.workload.dataset)
+                    .ok_or_else(|| format!("unknown dataset '{}'", cfg.workload.dataset))?;
+                ds.generate(
+                    cfg.workload.requests,
+                    cfg.workload.rate_per_s,
+                    topo.drafters.len().max(1),
+                    cfg.seed,
+                )
+            }
+        };
+        Ok(Simulator {
+            cfg,
+            topo,
+            predictor: Predictor::new(),
+            trace,
+        })
+    }
+
+    /// Replace the workload with an in-memory trace.
+    pub fn with_trace(mut self, trace: Trace) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Run to completion; returns the analyzer report.
+    pub fn run(self) -> SimReport {
+        let routing = make_routing(self.cfg.routing);
+        let batching = make_batching(self.cfg.batching);
+        let window = make_window(&self.cfg.window).expect("window policy");
+        let mut st = SimState::build(self.cfg, self.topo, self.predictor, self.trace,
+                                     routing, batching, window);
+        st.run_loop();
+        st.report()
+    }
+}
+
+/// All mutable simulation state; the event loop lives here.
+struct SimState {
+    cfg: SimConfig,
+    topo: Topology,
+    predictor: Predictor,
+    routing: Box<dyn RoutingPolicy>,
+    batching: Box<dyn BatchingPolicy>,
+    window: Box<dyn WindowPolicy>,
+    requests: Vec<Request>,
+    targets: Vec<Target>,
+    drafters: Vec<Drafter>,
+    q: EventQueue<Ev>,
+    rng_net: Pcg64,
+    rng_route: Pcg64,
+    queue_delays_sum: f64,
+    queue_delays_n: u64,
+    net_delays_sum: f64,
+    net_delays_n: u64,
+    completed: usize,
+    fused_only: bool,
+    wall_start: std::time::Instant,
+    feat_sum: [f64; 5],
+    feat_n: u64,
+}
+
+impl SimState {
+    fn build(
+        cfg: SimConfig,
+        topo: Topology,
+        predictor: Predictor,
+        trace: Trace,
+        routing: Box<dyn RoutingPolicy>,
+        batching: Box<dyn BatchingPolicy>,
+        window: Box<dyn WindowPolicy>,
+    ) -> SimState {
+        let n_targets = topo.targets.len();
+        let n_drafters = topo.drafters.len().max(1);
+        let requests: Vec<Request> = trace
+            .records
+            .iter()
+            .enumerate()
+            .map(|(id, r)| Request {
+                id,
+                drafter: r.drafter_id % n_drafters,
+                target: usize::MAX,
+                prompt_length: r.prompt_length.max(1),
+                acceptance_seq: r.acceptance_seq.clone(),
+                arrival_ms: r.arrival_time_ms,
+                spec: SpeculationState::new(r.output_length.max(1)),
+                mode: ExecMode::Distributed,
+                edge_prefill_done: false,
+                target_prefill_seen: false,
+                ttft_ms: None,
+                completed_ms: None,
+                gammas: Vec::new(),
+                fused_rounds: 0,
+                acc_counts: (0.0, 0.0),
+                rtt_ema: Ema::new(0.3),
+                gamma_prev: 4,
+                uplink_sent_ms: 0.0,
+                last_verify_ms: 0.0,
+            })
+            .collect();
+        let targets = (0..n_targets)
+            .map(|_| Target {
+                busy: false,
+                prefill_q: VecDeque::new(),
+                verify_q: VecDeque::new(),
+                fused_resident: VecDeque::new(),
+                last_was_prefill: false,
+                tpot_ema: Ema::new(0.3),
+                alpha_counts: (0.0, 0.0),
+                busy_ms: 0.0,
+            })
+            .collect();
+        let drafters = (0..n_drafters)
+            .map(|_| Drafter {
+                busy: false,
+                tasks: VecDeque::new(),
+            })
+            .collect();
+        let mut q = EventQueue::new();
+        for r in &requests {
+            q.schedule(r.arrival_ms, Ev::Arrival(r.id));
+        }
+        let fused_only = matches!(cfg.window, WindowKind::FusedOnly);
+        let seed = cfg.seed;
+        SimState {
+            cfg,
+            topo,
+            predictor,
+            routing,
+            batching,
+            window,
+            requests,
+            targets,
+            drafters,
+            q,
+            rng_net: Pcg64::new(seed ^ 0x6E65_7477_6F72_6B00),
+            rng_route: Pcg64::new(seed ^ 0x726F_7574_6500_0000),
+            queue_delays_sum: 0.0,
+            queue_delays_n: 0,
+            net_delays_sum: 0.0,
+            net_delays_n: 0,
+            completed: 0,
+            fused_only,
+            wall_start: std::time::Instant::now(),
+            feat_sum: [0.0; 5],
+            feat_n: 0,
+        }
+    }
+
+    /// Record an observed feature vector for dataset aggregation.
+    fn record_features(&mut self, f: &WindowFeatures) {
+        let v = f.to_vec();
+        for i in 0..5 {
+            self.feat_sum[i] += v[i];
+        }
+        self.feat_n += 1;
+    }
+
+    /// One-way link delay draw: `RTT/2 + |N(0, jitter)|`.
+    fn link_delay(&mut self) -> f64 {
+        let d = self.topo.rtt_ms / 2.0
+            + (self.rng_net.normal() * self.topo.jitter_ms).abs();
+        self.net_delays_sum += d;
+        self.net_delays_n += 1;
+        d
+    }
+
+    fn run_loop(&mut self) {
+        let total = self.requests.len();
+        while let Some((now, ev)) = self.q.pop() {
+            if now > self.cfg.max_sim_ms || self.completed == total {
+                break;
+            }
+            self.handle(now, ev);
+        }
+    }
+
+    fn handle(&mut self, now: f64, ev: Ev) {
+        match ev {
+            Ev::Arrival(rid) => self.on_arrival(now, rid),
+            Ev::PromptAtTarget(rid) => {
+                let tid = self.requests[rid].target;
+                self.targets[tid].prefill_q.push_back((rid, now));
+                self.q.schedule_in(0.0, Ev::TargetKick(tid));
+            }
+            Ev::DrafterFree(did) => self.on_drafter_free(did),
+            Ev::DrafterTaskDone { req, gamma } => self.on_drafter_task_done(now, req, gamma),
+            Ev::UplinkArrive { req, gamma, sent_ms } => {
+                let tid = self.requests[req].target;
+                self.requests[req].uplink_sent_ms = sent_ms;
+                self.targets[tid].verify_q.push_back((req, gamma, now));
+                self.q.schedule_in(0.0, Ev::TargetKick(tid));
+            }
+            Ev::TargetKick(tid) => self.on_target_kick(now, tid),
+            Ev::TargetDone { target, op, started_ms } => {
+                self.on_target_done(now, target, op, started_ms)
+            }
+            Ev::PrefillNotify(rid) => self.on_prefill_notify(now, rid),
+            Ev::DownlinkArrive { req, net_ms } => self.on_downlink(now, req, net_ms),
+            Ev::MigrateToEdge(rid) => {
+                if self.requests[rid].completed_ms.is_none() {
+                    self.start_round(now, rid);
+                }
+            }
+        }
+    }
+
+    // ---- Routing stage ----
+    fn on_arrival(&mut self, now: f64, rid: usize) {
+        let snaps: Vec<TargetSnapshot> = self
+            .targets
+            .iter()
+            .enumerate()
+            .map(|(id, t)| TargetSnapshot {
+                id,
+                prefill_queue: t.prefill_q.len(),
+                active: t.verify_q.len() + t.fused_resident.len(),
+                recent_tpot_ms: t.tpot_ema.value_or(0.0),
+                busy: t.busy,
+            })
+            .collect();
+        let tid = self.routing.route(&snaps, &mut self.rng_route);
+        self.requests[rid].target = tid;
+        // Prompt travels to the cloud for target-side prefill.
+        let d = self.link_delay();
+        self.q.schedule_in(d, Ev::PromptAtTarget(rid));
+        if self.fused_only {
+            self.requests[rid].edge_prefill_done = true;
+            self.requests[rid].mode = ExecMode::Fused;
+        } else {
+            // Edge prefill queued at the drafter.
+            let did = self.requests[rid].drafter;
+            self.drafters[did].tasks.push_back(DrafterTask::Prefill(rid));
+            self.q.schedule_in(0.0, Ev::DrafterFree(did));
+        }
+        let _ = now;
+    }
+
+    // ---- Drafter servicing ----
+    fn on_drafter_free(&mut self, did: usize) {
+        if self.drafters[did].busy {
+            return;
+        }
+        let Some(task) = self.drafters[did].tasks.pop_front() else {
+            return;
+        };
+        self.drafters[did].busy = true;
+        let dev = self.topo.drafter(did);
+        let hw = Hardware { gpu: dev.gpu, tp: dev.tp_degree };
+        match task {
+            DrafterTask::Prefill(rid) => {
+                let ms =
+                    self.predictor
+                        .prefill_ms(dev.model, hw, self.requests[rid].prompt_length, 1);
+                self.q.schedule_in(ms, Ev::DrafterTaskDone { req: rid, gamma: 0 });
+            }
+            DrafterTask::Draft { req, gamma } => {
+                let ctx = self.requests[req].ctx_len();
+                let per_tok = self.predictor.decode_ms(dev.model, hw, 1, ctx);
+                self.q.schedule_in(
+                    per_tok * gamma as f64,
+                    Ev::DrafterTaskDone { req, gamma },
+                );
+            }
+        }
+    }
+
+    fn on_drafter_task_done(&mut self, now: f64, rid: usize, gamma: u32) {
+        let did = self.requests[rid].drafter;
+        self.drafters[did].busy = false;
+        self.q.schedule_in(0.0, Ev::DrafterFree(did));
+        if gamma == 0 {
+            // Edge prefill complete.
+            self.requests[rid].edge_prefill_done = true;
+            if self.requests[rid].target_prefill_seen
+                && self.requests[rid].completed_ms.is_none()
+            {
+                self.start_round(now, rid);
+            }
+        } else {
+            // Draft window complete: ship to the cloud.
+            let d = self.link_delay();
+            self.q.schedule_in(d, Ev::UplinkArrive { req: rid, gamma, sent_ms: now });
+        }
+    }
+
+    // ---- Speculation stage: window decision + drafting/migration ----
+    fn start_round(&mut self, _now: f64, rid: usize) {
+        let feats = self.features(rid);
+        self.record_features(&feats);
+        let key = self.requests[rid].pair_key();
+        let decision = self.window.decide(key, &feats);
+        let r = &mut self.requests[rid];
+        r.gamma_prev = decision.gamma;
+        match decision.mode {
+            ExecMode::Fused => {
+                r.mode = ExecMode::Fused;
+                let tid = r.target;
+                // Control message travels to the cloud, then the request
+                // becomes fused-resident there.
+                let d = self.link_delay();
+                self.targets[tid].fused_resident.push_back(rid);
+                self.q.schedule_in(d, Ev::TargetKick(tid));
+            }
+            ExecMode::Distributed => {
+                r.mode = ExecMode::Distributed;
+                let gamma = r.spec.effective_gamma(decision.gamma);
+                r.gammas.push(gamma);
+                let did = r.drafter;
+                self.drafters[did]
+                    .tasks
+                    .push_back(DrafterTask::Draft { req: rid, gamma });
+                self.q.schedule_in(0.0, Ev::DrafterFree(did));
+            }
+        }
+    }
+
+    /// Assemble the 5-dim WC-DNN feature vector (paper §4.1).
+    fn features(&self, rid: usize) -> WindowFeatures {
+        let r = &self.requests[rid];
+        let t = &self.targets[r.target];
+        let occupancy = t.prefill_q.len() + t.verify_q.len() + t.fused_resident.len();
+        WindowFeatures {
+            queue_depth_util: occupancy as f64 / self.cfg.batch.decode_batch as f64,
+            // Own history → target-pooled workload estimate → neutral
+            // prior, in that order (ratio-of-sums α estimates).
+            acceptance_recent: if r.acc_counts.1 > 0.0 {
+                r.acc_counts.0 / r.acc_counts.1
+            } else if t.alpha_counts.1 > 0.0 {
+                t.alpha_counts.0 / t.alpha_counts.1
+            } else {
+                0.75
+            },
+            rtt_recent_ms: r.rtt_ema.value_or(self.topo.rtt_ms),
+            tpot_recent_ms: t.tpot_ema.value_or(0.0),
+            gamma_prev: r.gamma_prev,
+        }
+    }
+
+    // ---- Batching stage: target dispatch ----
+    fn on_target_kick(&mut self, now: f64, tid: usize) {
+        if self.targets[tid].busy {
+            return;
+        }
+        let Some(op) = self.select_op(tid) else {
+            return;
+        };
+        // Dequeue the selected work and account queue delays.
+        match &op {
+            TargetOp::Prefill(ids) => {
+                self.targets[tid].last_was_prefill = true;
+                let set: std::collections::HashSet<usize> = ids.iter().copied().collect();
+                let (mut dsum, mut dn) = (0.0, 0u64);
+                self.targets[tid].prefill_q.retain(|&(r, enq)| {
+                    if set.contains(&r) {
+                        dsum += now - enq;
+                        dn += 1;
+                        false
+                    } else {
+                        true
+                    }
+                });
+                self.queue_delays_sum += dsum;
+                self.queue_delays_n += dn;
+            }
+            TargetOp::Verify(jobs) => {
+                self.targets[tid].last_was_prefill = false;
+                let set: std::collections::HashSet<usize> =
+                    jobs.iter().map(|&(r, _)| r).collect();
+                let (mut dsum, mut dn) = (0.0, 0u64);
+                self.targets[tid].verify_q.retain(|&(r, _, enq)| {
+                    if set.contains(&r) {
+                        dsum += now - enq;
+                        dn += 1;
+                        false
+                    } else {
+                        true
+                    }
+                });
+                self.queue_delays_sum += dsum;
+                self.queue_delays_n += dn;
+            }
+            TargetOp::FusedDecode(ids) => {
+                self.targets[tid].last_was_prefill = false;
+                // Rotate residency so later residents are not starved when
+                // capacity binds.
+                let k = ids.len().min(self.targets[tid].fused_resident.len());
+                self.targets[tid].fused_resident.rotate_left(k);
+            }
+        }
+        let dur = self.op_duration(tid, &op);
+        let t = &mut self.targets[tid];
+        t.busy = true;
+        t.busy_ms += dur;
+        self.q.schedule_in(dur, Ev::TargetDone { target: tid, op, started_ms: now });
+    }
+
+    /// Choose the next batch for an idle target: strict alternation
+    /// between prefill and decode-side work when both wait (prevents
+    /// starvation in either direction), batching policy picks members.
+    fn select_op(&self, tid: usize) -> Option<TargetOp> {
+        let t = &self.targets[tid];
+        let has_prefill = !t.prefill_q.is_empty();
+        let has_verify = !t.verify_q.is_empty();
+        let has_fused = !t.fused_resident.is_empty();
+        if !has_prefill && !has_verify && !has_fused {
+            return None;
+        }
+        let prefer_prefill = has_prefill && (!t.last_was_prefill || (!has_verify && !has_fused));
+        if prefer_prefill {
+            let view: Vec<QueuedRequest> = t
+                .prefill_q
+                .iter()
+                .map(|&(rid, enq)| QueuedRequest {
+                    id: rid,
+                    length: self.requests[rid].prompt_length,
+                    enqueued_ms: enq,
+                })
+                .collect();
+            let idxs = self
+                .batching
+                .form_batch(&view, self.cfg.batch.prefill_batch);
+            return Some(TargetOp::Prefill(
+                idxs.iter().map(|&i| t.prefill_q[i].0).collect(),
+            ));
+        }
+        if has_verify {
+            let view: Vec<QueuedRequest> = t
+                .verify_q
+                .iter()
+                .map(|&(rid, _g, enq)| QueuedRequest {
+                    id: rid,
+                    length: self.requests[rid].ctx_len(),
+                    enqueued_ms: enq,
+                })
+                .collect();
+            let idxs = self.batching.form_batch(&view, self.cfg.batch.decode_batch);
+            return Some(TargetOp::Verify(
+                idxs.iter()
+                    .map(|&i| {
+                        let (rid, g, _) = t.verify_q[i];
+                        (rid, g)
+                    })
+                    .collect(),
+            ));
+        }
+        if has_fused {
+            return Some(TargetOp::FusedDecode(
+                t.fused_resident
+                    .iter()
+                    .take(self.cfg.batch.fused_batch)
+                    .copied()
+                    .collect(),
+            ));
+        }
+        // Fall back to prefill (alternation preferred decode but there
+        // was none).
+        let view: Vec<QueuedRequest> = t
+            .prefill_q
+            .iter()
+            .map(|&(rid, enq)| QueuedRequest {
+                id: rid,
+                length: self.requests[rid].prompt_length,
+                enqueued_ms: enq,
+            })
+            .collect();
+        let idxs = self.batching.form_batch(&view, self.cfg.batch.prefill_batch);
+        Some(TargetOp::Prefill(
+            idxs.iter().map(|&i| t.prefill_q[i].0).collect(),
+        ))
+    }
+
+    /// Batch duration with padding: batch cost is governed by the
+    /// *maximum* member length (shorter members pay padding) — this is
+    /// the overhead LAB reduces.
+    fn op_duration(&self, tid: usize, op: &TargetOp) -> f64 {
+        let dev = self.topo.target(tid);
+        let hw = Hardware { gpu: dev.gpu, tp: dev.tp_degree };
+        match op {
+            TargetOp::Prefill(ids) => {
+                let maxlen = ids
+                    .iter()
+                    .map(|&r| self.requests[r].prompt_length)
+                    .max()
+                    .unwrap_or(1);
+                let tokens = maxlen * ids.len() as u32;
+                self.predictor
+                    .prefill_ms(dev.model, hw, tokens.max(1), ids.len() as u32)
+            }
+            TargetOp::Verify(jobs) => {
+                // Ragged batching: mixed window sizes pack without
+                // padding (ORCA-style iteration-level batching); the KV
+                // term still pays the longest member's context.
+                let max_ctx = jobs
+                    .iter()
+                    .map(|&(r, _)| self.requests[r].ctx_len())
+                    .max()
+                    .unwrap_or(1);
+                let total: u32 = jobs.iter().map(|&(_, g)| g + 1).sum();
+                self.predictor
+                    .verify_ms_ragged(dev.model, hw, jobs.len() as u32, total, max_ctx)
+            }
+            TargetOp::FusedDecode(ids) => {
+                let max_ctx = ids
+                    .iter()
+                    .map(|&r| self.requests[r].ctx_len())
+                    .max()
+                    .unwrap_or(1);
+                self.predictor
+                    .decode_ms(dev.model, hw, ids.len() as u32, max_ctx)
+            }
+        }
+    }
+
+    // ---- Verification stage results ----
+    fn on_target_done(&mut self, now: f64, tid: usize, op: TargetOp, started_ms: f64) {
+        self.targets[tid].busy = false;
+        let dur = now - started_ms;
+        match op {
+            TargetOp::Prefill(ids) => {
+                for rid in ids {
+                    let d = self.link_delay();
+                    self.q.schedule_in(d, Ev::PrefillNotify(rid));
+                }
+            }
+            TargetOp::Verify(jobs) => {
+                let mut produced_total = 0u32;
+                for &(rid, gamma) in &jobs {
+                    let r = &mut self.requests[rid];
+                    let seq = std::mem::take(&mut r.acceptance_seq);
+                    let out = r.spec.advance(&seq, gamma);
+                    r.acceptance_seq = seq;
+                    // "Recent token acceptance ratio from the target"
+                    // (§4.1), measured over *verified* tokens: the target
+                    // stops at the first mismatch, so a window with `a`
+                    // accepted of γ verified a+1 tokens (a < γ) or a
+                    // tokens (all accepted). This estimates the Bernoulli
+                    // acceptance rate α independent of γ — making the
+                    // feature comparable across window sizes and modes.
+                    let verified = if out.accepted == out.consumed {
+                        out.accepted.max(1)
+                    } else {
+                        out.accepted + 1
+                    };
+                    r.acc_counts.0 += out.accepted as f64;
+                    r.acc_counts.1 += verified as f64;
+                    self.targets[tid].alpha_counts.0 += out.accepted as f64;
+                    self.targets[tid].alpha_counts.1 += verified as f64;
+                    let r = &mut self.requests[rid];
+                    r.last_verify_ms = dur;
+                    produced_total += out.produced;
+                    let d = self.link_delay();
+                    self.q.schedule_in(d, Ev::DownlinkArrive { req: rid, net_ms: d });
+                }
+                if produced_total > 0 {
+                    self.targets[tid].tpot_ema.push(dur / produced_total as f64);
+                }
+            }
+            TargetOp::FusedDecode(ids) => {
+                let n = ids.len().max(1) as u32;
+                self.targets[tid].tpot_ema.push(dur / n as f64);
+                for rid in ids {
+                    if self.requests[rid].completed_ms.is_some() {
+                        continue;
+                    }
+                    {
+                        let r = &mut self.requests[rid];
+                        r.spec.advance_fused(1);
+                        r.fused_rounds += 1;
+                        if r.ttft_ms.is_none() {
+                            r.ttft_ms = Some(now - r.arrival_ms);
+                        }
+                    }
+                    if self.requests[rid].spec.done() {
+                        self.complete(now, rid);
+                        self.targets[tid].fused_resident.retain(|&x| x != rid);
+                    } else if !self.fused_only {
+                        // Re-evaluate mode each fused round (hysteresis in
+                        // the policy makes this cheap and stable).
+                        let feats = self.features(rid);
+                        self.record_features(&feats);
+                        let key = self.requests[rid].pair_key();
+                        let decision = self.window.decide(key, &feats);
+                        self.requests[rid].gamma_prev = decision.gamma;
+                        if decision.mode == ExecMode::Distributed {
+                            self.targets[tid].fused_resident.retain(|&x| x != rid);
+                            self.requests[rid].mode = ExecMode::Distributed;
+                            let d = self.link_delay();
+                            self.q.schedule_in(d, Ev::MigrateToEdge(rid));
+                        }
+                    }
+                }
+            }
+        }
+        self.q.schedule_in(0.0, Ev::TargetKick(tid));
+    }
+
+    fn on_prefill_notify(&mut self, now: f64, rid: usize) {
+        {
+            let r = &mut self.requests[rid];
+            if r.ttft_ms.is_none() {
+                // First token (the target's prefill token) reaches the
+                // user at the edge now.
+                r.ttft_ms = Some(now - r.arrival_ms);
+                r.spec.advance_fused(1);
+            }
+            r.target_prefill_seen = true;
+        }
+        if self.requests[rid].spec.done() {
+            self.complete(now, rid);
+        } else if self.requests[rid].mode == ExecMode::Fused || self.fused_only {
+            let tid = self.requests[rid].target;
+            self.targets[tid].fused_resident.push_back(rid);
+            self.q.schedule_in(0.0, Ev::TargetKick(tid));
+        } else if self.requests[rid].edge_prefill_done {
+            self.start_round(now, rid);
+        }
+    }
+
+    fn on_downlink(&mut self, now: f64, rid: usize, _net_ms: f64) {
+        {
+            let r = &mut self.requests[rid];
+            // Measured loop time minus verify service ≈ network RTT +
+            // verify queueing; this is exactly the "recent RTT" signal a
+            // deployed drafter can observe.
+            let loop_ms = now - r.uplink_sent_ms;
+            let net_rtt = (loop_ms - r.last_verify_ms).max(0.0);
+            r.rtt_ema.push(net_rtt);
+        }
+        if self.requests[rid].spec.done() {
+            self.complete(now, rid);
+        } else {
+            self.start_round(now, rid);
+        }
+    }
+
+    fn complete(&mut self, now: f64, rid: usize) {
+        let r = &mut self.requests[rid];
+        if r.completed_ms.is_none() {
+            r.completed_ms = Some(now);
+            self.completed += 1;
+            let key = r.pair_key();
+            self.window.forget(key);
+        }
+    }
+
+    // ---- Reporting ----
+    fn report(&self) -> SimReport {
+        let sim_end = self.q.now();
+        let wall_ms = self.wall_start.elapsed().as_secs_f64() * 1e3;
+        let mut reqs = Vec::new();
+        for r in &self.requests {
+            let (Some(ttft), Some(done)) = (r.ttft_ms, r.completed_ms) else {
+                continue;
+            };
+            let e2e = done - r.arrival_ms;
+            let out_toks = r.spec.output_length;
+            let tpot = if out_toks > 1 {
+                (e2e - ttft) / (out_toks - 1) as f64
+            } else {
+                0.0
+            };
+            reqs.push(RequestMetrics {
+                id: r.id,
+                arrival_ms: r.arrival_ms,
+                ttft_ms: ttft,
+                tpot_ms: tpot,
+                e2e_ms: e2e,
+                acceptance: r.spec.acceptance_rate().unwrap_or(f64::NAN),
+                target_id: r.target,
+                drafter_id: r.drafter,
+                output_tokens: out_toks,
+                gamma_decisions: r.gammas.clone(),
+                fused_rounds: r.fused_rounds,
+            });
+        }
+        let duration = sim_end.max(1e-9);
+        let total_tokens: u64 = reqs.iter().map(|r| r.output_tokens as u64).sum();
+        // Steady-state throughput: interquartile completion rate.
+        let steady = {
+            let mut ends: Vec<f64> = reqs.iter().map(|r| r.arrival_ms + r.e2e_ms).collect();
+            ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if ends.len() >= 8 {
+                let t25 = ends[ends.len() / 4];
+                let t75 = ends[ends.len() * 3 / 4];
+                if t75 > t25 {
+                    (ends.len() as f64 / 2.0) / ((t75 - t25) / 1e3)
+                } else {
+                    reqs.len() as f64 / (duration / 1e3)
+                }
+            } else {
+                reqs.len() as f64 / (duration / 1e3)
+            }
+        };
+        let system = SystemMetrics {
+            throughput_rps: steady,
+            total_throughput_rps: reqs.len() as f64 / (duration / 1e3),
+            token_throughput: total_tokens as f64 / (duration / 1e3),
+            target_utilization: self.targets.iter().map(|t| t.busy_ms).sum::<f64>()
+                / (self.targets.len() as f64 * duration),
+            mean_queue_delay_ms: if self.queue_delays_n == 0 {
+                0.0
+            } else {
+                self.queue_delays_sum / self.queue_delays_n as f64
+            },
+            mean_net_delay_ms: if self.net_delays_n == 0 {
+                0.0
+            } else {
+                self.net_delays_sum / self.net_delays_n as f64
+            },
+            sim_duration_ms: duration,
+            completed: reqs.len(),
+            events_processed: self.q.processed(),
+            wall_ms,
+            mean_features: if self.feat_n == 0 {
+                [0.0; 5]
+            } else {
+                let mut m = self.feat_sum;
+                for x in &mut m {
+                    *x /= self.feat_n as f64;
+                }
+                m
+            },
+        };
+        SimReport { requests: reqs, system }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BatchingKind, RoutingKind, SimConfig, WindowKind};
+
+    fn small_cfg() -> SimConfig {
+        SimConfig::builder()
+            .seed(1)
+            .targets(2)
+            .drafters(20)
+            .requests(60)
+            .rate_per_s(20.0)
+            .dataset("gsm8k")
+            .build()
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let rep = Simulator::new(small_cfg()).run();
+        assert_eq!(rep.system.completed, 60);
+        assert!(rep.system.throughput_rps > 0.0);
+        assert!(rep.system.target_utilization > 0.0);
+        assert!(rep.system.target_utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn determinism() {
+        let a = Simulator::new(small_cfg()).run();
+        let b = Simulator::new(small_cfg()).run();
+        assert_eq!(a.system.completed, b.system.completed);
+        assert_eq!(a.system.events_processed, b.system.events_processed);
+        assert!((a.mean_ttft() - b.mean_ttft()).abs() < 1e-12);
+        assert!((a.mean_tpot() - b.mean_tpot()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Simulator::new(small_cfg()).run();
+        let b = Simulator::new(SimConfig::builder().seed(2).targets(2).drafters(20)
+            .requests(60).rate_per_s(20.0).dataset("gsm8k").build()).run();
+        assert!((a.mean_e2e() - b.mean_e2e()).abs() > 1e-9);
+    }
+
+    #[test]
+    fn latencies_are_physical() {
+        let rep = Simulator::new(small_cfg()).run();
+        for r in &rep.requests {
+            assert!(r.ttft_ms > 0.0, "TTFT must be positive");
+            assert!(r.e2e_ms >= r.ttft_ms, "e2e >= ttft");
+            assert!(r.tpot_ms >= 0.0);
+            assert!(r.output_tokens > 0);
+        }
+    }
+
+    #[test]
+    fn fused_only_mode_runs_without_drafters() {
+        let cfg = SimConfig::builder()
+            .seed(3)
+            .targets(2)
+            .drafters(10)
+            .requests(40)
+            .rate_per_s(10.0)
+            .window(WindowKind::FusedOnly)
+            .build();
+        let rep = Simulator::new(cfg).run();
+        assert_eq!(rep.system.completed, 40);
+        // Fused requests never speculate.
+        for r in &rep.requests {
+            assert!(r.gamma_decisions.is_empty());
+            assert!(r.fused_rounds > 0);
+            assert!(r.acceptance.is_nan());
+        }
+    }
+
+    #[test]
+    fn static_window_records_gammas() {
+        let rep = Simulator::new(small_cfg()).run();
+        // Static γ=4: every recorded decision is ≤ 4 (end-of-sequence
+        // clipping can shrink it) and most are exactly 4.
+        let all: Vec<u32> = rep
+            .requests
+            .iter()
+            .flat_map(|r| r.gamma_decisions.iter().copied())
+            .collect();
+        assert!(!all.is_empty());
+        assert!(all.iter().all(|&g| g >= 1 && g <= 4));
+        let fours = all.iter().filter(|&&g| g == 4).count();
+        assert!(fours * 2 > all.len(), "most windows should be the static γ");
+    }
+
+    #[test]
+    fn higher_rtt_hurts_distributed_latency() {
+        let lo = Simulator::new(
+            SimConfig::builder().seed(5).targets(2).drafters(20).requests(50)
+                .rate_per_s(10.0).rtt_ms(5.0).build(),
+        )
+        .run();
+        let hi = Simulator::new(
+            SimConfig::builder().seed(5).targets(2).drafters(20).requests(50)
+                .rate_per_s(10.0).rtt_ms(80.0).build(),
+        )
+        .run();
+        // Each verification round pays the extra RTT; with γ=4 and
+        // α=0.8 that is ≈ ΔRTT/3.4 of TPOT (partially offset by lower
+        // target contention at slower round rates).
+        assert!(
+            hi.mean_tpot() > lo.mean_tpot() * 1.08,
+            "hi={} lo={}",
+            hi.mean_tpot(),
+            lo.mean_tpot()
+        );
+        assert!(
+            hi.mean_tpot() - lo.mean_tpot() > 6.0,
+            "hi={} lo={}",
+            hi.mean_tpot(),
+            lo.mean_tpot()
+        );
+    }
+
+    #[test]
+    fn rtt_does_not_hurt_fused() {
+        let mk = |rtt: f64| {
+            SimConfig::builder().seed(5).targets(2).drafters(10).requests(40)
+                .rate_per_s(10.0).rtt_ms(rtt).window(WindowKind::FusedOnly).build()
+        };
+        let lo = Simulator::new(mk(5.0)).run();
+        let hi = Simulator::new(mk(80.0)).run();
+        // Fused TPOT is network-independent (TTFT pays one prompt upload).
+        assert!(
+            (hi.mean_tpot() - lo.mean_tpot()).abs() < lo.mean_tpot() * 0.10,
+            "hi={} lo={}",
+            hi.mean_tpot(),
+            lo.mean_tpot()
+        );
+    }
+
+    #[test]
+    fn acceptance_flows_from_trace() {
+        // The *realized* window acceptance ratio is below the trace's
+        // Bernoulli rate α: tokens after the first rejection are drafted
+        // but discarded. For α = 0.8, γ = 4 the expectation is
+        // E[accepted]/γ = α(1−α^γ)/((1−α)γ) ≈ 0.59; end-of-sequence
+        // window clipping nudges it up.
+        let rep = Simulator::new(small_cfg()).run();
+        let acc = rep.mean_acceptance();
+        assert!(acc > 0.50 && acc < 0.78, "acc={acc}");
+        // And dataset ordering is preserved: CNN/DM (α = 0.62) realizes
+        // lower acceptance than GSM8K (α = 0.80).
+        let cnndm = Simulator::new(
+            SimConfig::builder().seed(1).targets(2).drafters(20)
+                .requests(60).rate_per_s(10.0).dataset("cnndm").build(),
+        )
+        .run();
+        assert!(
+            cnndm.mean_acceptance() < acc - 0.05,
+            "cnndm={} gsm8k={acc}",
+            cnndm.mean_acceptance()
+        );
+    }
+
+    #[test]
+    fn all_policies_run_to_completion() {
+        for routing in [RoutingKind::Random, RoutingKind::RoundRobin, RoutingKind::Jsq] {
+            for batching in [BatchingKind::Fifo, BatchingKind::Lab] {
+                for window in [
+                    WindowKind::Static(4),
+                    WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 },
+                    WindowKind::Awc { weights_path: None },
+                    WindowKind::FusedOnly,
+                ] {
+                    let cfg = SimConfig::builder()
+                        .seed(7)
+                        .targets(2)
+                        .drafters(12)
+                        .requests(30)
+                        .rate_per_s(15.0)
+                        .routing(routing)
+                        .batching(batching)
+                        .window(window.clone())
+                        .build();
+                    let rep = Simulator::new(cfg).run();
+                    assert_eq!(
+                        rep.system.completed, 30,
+                        "stalled: {routing:?}/{batching:?}/{window:?}"
+                    );
+                }
+            }
+        }
+    }
+}

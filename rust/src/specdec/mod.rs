@@ -1,0 +1,269 @@
+//! Core speculative-decoding mathematics and window semantics (paper §2.1),
+//! shared by the simulator and the real serving coordinator.
+
+/// Expected number of accepted draft tokens per window,
+/// `E[τ] = (1 − α^{γ+1}) / (1 − α)` (paper Eq. 1).
+pub fn expected_accepted(alpha: f64, gamma: u32) -> f64 {
+    if (alpha - 1.0).abs() < 1e-12 {
+        return gamma as f64 + 1.0;
+    }
+    (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
+}
+
+/// Expected speedup over standard decoding,
+/// `S = (1 − α^{γ+1}) / ((1 − α)(cγ + 1))` where `c` is the draft/target
+/// per-token cost ratio (paper Eq. 2).
+pub fn expected_speedup(alpha: f64, gamma: u32, c: f64) -> f64 {
+    expected_accepted(alpha, gamma) / (c * gamma as f64 + 1.0)
+}
+
+/// The γ that maximizes [`expected_speedup`] over `1..=max_gamma`.
+pub fn optimal_gamma(alpha: f64, c: f64, max_gamma: u32) -> u32 {
+    (1..=max_gamma)
+        .max_by(|&a, &b| {
+            expected_speedup(alpha, a, c)
+                .partial_cmp(&expected_speedup(alpha, b, c))
+                .unwrap()
+        })
+        .unwrap_or(1)
+}
+
+/// Outcome of verifying one speculation window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifyOutcome {
+    /// Draft tokens accepted (0..=γ).
+    pub accepted: u32,
+    /// Total sequence tokens produced this round: accepted draft tokens
+    /// plus the target's own token (the correction on mismatch, or the
+    /// bonus token when all γ are accepted). Always `accepted + 1`.
+    pub produced: u32,
+    /// Draft tokens consumed from the acceptance sequence (always γ —
+    /// rejected speculation still consumed drafting work).
+    pub consumed: u32,
+}
+
+/// Apply the paper's acceptance rule to a window of size `gamma` using the
+/// ground-truth `acceptance_seq` starting at `cursor`.
+///
+/// Tokens are verified in order; the first `false` stops acceptance and
+/// the target substitutes its own token (`t_i'`); if every draft token is
+/// accepted the target appends one bonus token. Either way the round
+/// produces `accepted + 1` sequence tokens (Figure 1(c), steps 2–4).
+///
+/// The sequence is consumed cyclically if the cursor runs past the end
+/// (generators size sequences so this is rare).
+pub fn verify_window(acceptance_seq: &[bool], cursor: usize, gamma: u32) -> VerifyOutcome {
+    debug_assert!(gamma >= 1);
+    let n = acceptance_seq.len();
+    let mut accepted = 0;
+    for i in 0..gamma {
+        let bit = if n == 0 {
+            false
+        } else {
+            acceptance_seq[(cursor + i as usize) % n]
+        };
+        if bit {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+    VerifyOutcome {
+        accepted,
+        produced: accepted + 1,
+        consumed: gamma,
+    }
+}
+
+/// Per-request speculation progress tracker used by both execution paths.
+#[derive(Clone, Debug)]
+pub struct SpeculationState {
+    /// Tokens of the final sequence produced so far.
+    pub generated: u32,
+    /// Target output length.
+    pub output_length: u32,
+    /// Cursor into the acceptance sequence.
+    pub cursor: usize,
+    /// Draft tokens proposed so far (accepted + rejected).
+    pub drafted: u32,
+    /// Draft tokens accepted so far.
+    pub accepted: u32,
+    /// Completed verification rounds.
+    pub rounds: u32,
+}
+
+impl SpeculationState {
+    /// Fresh state for a request of `output_length` tokens.
+    pub fn new(output_length: u32) -> Self {
+        SpeculationState {
+            generated: 0,
+            output_length,
+            cursor: 0,
+            drafted: 0,
+            accepted: 0,
+            rounds: 0,
+        }
+    }
+
+    /// Whether generation is complete.
+    pub fn done(&self) -> bool {
+        self.generated >= self.output_length
+    }
+
+    /// Remaining tokens to generate.
+    pub fn remaining(&self) -> u32 {
+        self.output_length.saturating_sub(self.generated)
+    }
+
+    /// Effective window for the next round: the policy's γ, capped so we
+    /// do not draft far past the end of the sequence.
+    pub fn effective_gamma(&self, policy_gamma: u32) -> u32 {
+        policy_gamma.clamp(1, self.remaining().max(1))
+    }
+
+    /// Advance one verification round with window `gamma`; returns the
+    /// outcome. Produced tokens are clipped to the output length.
+    pub fn advance(&mut self, acceptance_seq: &[bool], gamma: u32) -> VerifyOutcome {
+        let out = verify_window(acceptance_seq, self.cursor, gamma);
+        self.cursor += out.consumed as usize;
+        self.drafted += out.consumed;
+        self.accepted += out.accepted;
+        self.generated = (self.generated + out.produced).min(self.output_length);
+        self.rounds += 1;
+        out
+    }
+
+    /// Advance one *fused-mode* decode step (target generates `k` tokens
+    /// autoregressively, no speculation).
+    pub fn advance_fused(&mut self, k: u32) {
+        self.generated = (self.generated + k).min(self.output_length);
+        self.rounds += 1;
+    }
+
+    /// Empirical acceptance rate so far (None before any drafting).
+    pub fn acceptance_rate(&self) -> Option<f64> {
+        if self.drafted == 0 {
+            None
+        } else {
+            Some(self.accepted as f64 / self.drafted as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, Gen};
+
+    #[test]
+    fn eq1_matches_closed_form() {
+        // alpha = 0.8, gamma = 4: (1 - 0.8^5) / 0.2 = 3.3616
+        assert!((expected_accepted(0.8, 4) - 3.3616).abs() < 1e-4);
+        // alpha -> 1 degenerates to gamma + 1.
+        assert!((expected_accepted(1.0, 4) - 5.0).abs() < 1e-12);
+        // alpha = 0: only the target's token.
+        assert!((expected_accepted(0.0, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_speedup_behaviour() {
+        // Cheap drafter, high acceptance => real speedup.
+        assert!(expected_speedup(0.8, 4, 0.05) > 2.5);
+        // Expensive drafter kills the benefit.
+        assert!(expected_speedup(0.8, 4, 1.0) < 1.0);
+    }
+
+    #[test]
+    fn optimal_gamma_monotone_in_alpha() {
+        let lo = optimal_gamma(0.5, 0.05, 12);
+        let hi = optimal_gamma(0.9, 0.05, 12);
+        assert!(hi >= lo, "higher acceptance supports larger windows");
+        assert!(hi <= 12 && lo >= 1);
+    }
+
+    #[test]
+    fn verify_window_cases() {
+        // All accepted: gamma + 1 produced (bonus token).
+        let out = verify_window(&[true, true, true], 0, 3);
+        assert_eq!(out, VerifyOutcome { accepted: 3, produced: 4, consumed: 3 });
+        // Reject at relative position 1: 1 accepted + 1 correction.
+        let out = verify_window(&[true, false, true], 0, 3);
+        assert_eq!(out, VerifyOutcome { accepted: 1, produced: 2, consumed: 3 });
+        // Immediate reject: only the target's token.
+        let out = verify_window(&[false, true], 0, 2);
+        assert_eq!(out, VerifyOutcome { accepted: 0, produced: 1, consumed: 2 });
+    }
+
+    #[test]
+    fn cyclic_consumption() {
+        let out = verify_window(&[true, false], 1, 3); // reads idx 1,2%2=0,...
+        assert_eq!(out.accepted, 0); // idx1 = false
+        let out = verify_window(&[true, false], 2, 1); // idx 2%2=0 = true
+        assert_eq!(out.accepted, 1);
+    }
+
+    #[test]
+    fn state_progresses_to_completion() {
+        let seq = vec![true; 64];
+        let mut st = SpeculationState::new(20);
+        let mut guard = 0;
+        while !st.done() {
+            let g = st.effective_gamma(4);
+            st.advance(&seq, g);
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert_eq!(st.generated, 20);
+        // All-accept: every round produces gamma+1 = 5 tokens.
+        assert_eq!(st.rounds, 4);
+        assert_eq!(st.acceptance_rate(), Some(1.0));
+    }
+
+    #[test]
+    fn fused_mode_progresses() {
+        let mut st = SpeculationState::new(5);
+        st.advance_fused(2);
+        st.advance_fused(2);
+        st.advance_fused(2);
+        assert!(st.done());
+        assert_eq!(st.generated, 5); // clipped
+        assert_eq!(st.acceptance_rate(), None); // nothing drafted
+    }
+
+    #[test]
+    fn prop_invariants() {
+        run_prop("verify window invariants", 500, |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let seq = g.vec_of(n, |g| g.bool_with(0.7));
+            let gamma = g.usize_in(1, 12) as u32;
+            let cursor = g.usize_in(0, 1000);
+            let out = verify_window(&seq, cursor, gamma);
+            assert!(out.accepted <= gamma);
+            assert_eq!(out.produced, out.accepted + 1);
+            assert_eq!(out.consumed, gamma);
+        });
+    }
+
+    #[test]
+    fn prop_state_terminates_and_counts() {
+        run_prop("speculation state terminates", 200, |g: &mut Gen| {
+            let out_len = g.usize_in(1, 200) as u32;
+            let n = g.usize_in(8, 256);
+            let seq = g.vec_of(n, |g| {
+                let p = g.f64_in(0.0, 1.0);
+                g.bool_with(p)
+            });
+            let mut st = SpeculationState::new(out_len);
+            let mut rounds = 0;
+            while !st.done() {
+                let gamma = st.effective_gamma(g.usize_in(1, 12) as u32);
+                st.advance(&seq, gamma);
+                rounds += 1;
+                // Even with 0 acceptance every round produces >= 1 token.
+                assert!(rounds <= out_len, "must terminate in <= out_len rounds");
+            }
+            assert_eq!(st.generated, out_len);
+            assert!(st.accepted <= st.drafted);
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! Statistical workload generators for the three paper benchmarks.
+//!
+//! The paper derives traces from GSM8K (reasoning), CNN/DailyMail
+//! (summarization) and HumanEval (code generation), capturing acceptance
+//! sequences from hardware profiling (§3.2). We have neither the datasets'
+//! tokenized prompts nor a GPU pair to profile, so each benchmark is
+//! replaced by a *statistical profile*: log-normal prompt/output length
+//! distributions matching the benchmark's character (GSM8K short-in /
+//! medium-out, CNN/DM long-in / short-out, HumanEval medium-in / long-out)
+//! and a two-state Markov acceptance process whose stationary rate and
+//! burstiness reflect the draft–target agreement typical for that task
+//! family. The simulator replays `acceptance_seq` verbatim either way, so
+//! scheduler dynamics depend only on these statistics (DESIGN.md §4).
+
+use super::schema::{Trace, TraceRecord};
+use crate::util::rng::Pcg64;
+
+/// Statistical profile of one benchmark workload.
+#[derive(Clone, Debug)]
+pub struct DatasetProfile {
+    /// Dataset name.
+    pub name: &'static str,
+    /// Log-normal (mu, sigma) of prompt token length.
+    pub prompt_mu_sigma: (f64, f64),
+    /// Log-normal (mu, sigma) of output token length.
+    pub output_mu_sigma: (f64, f64),
+    /// Clamp bounds on prompt length.
+    pub prompt_range: (u32, u32),
+    /// Clamp bounds on output length.
+    pub output_range: (u32, u32),
+    /// Stationary draft-token acceptance rate α.
+    pub acceptance_rate: f64,
+    /// Lag-1 autocorrelation of the acceptance process (bursty
+    /// agreement/disagreement runs).
+    pub acceptance_corr: f64,
+}
+
+/// GSM8K: short reasoning prompts, medium outputs, high acceptance (the
+/// draft model tracks chain-of-thought arithmetic phrasing well).
+pub const GSM8K: DatasetProfile = DatasetProfile {
+    name: "gsm8k",
+    prompt_mu_sigma: (4.0, 0.35),  // median ~55 tokens
+    output_mu_sigma: (4.55, 0.30), // median ~95 tokens
+    prompt_range: (16, 256),
+    output_range: (24, 320),
+    acceptance_rate: 0.86,
+    acceptance_corr: 0.30,
+};
+
+/// CNN/DailyMail: long article prompts, short summaries, lower acceptance
+/// (abstractive summarization diverges more between models).
+pub const CNNDM: DatasetProfile = DatasetProfile {
+    name: "cnndm",
+    prompt_mu_sigma: (6.62, 0.45), // median ~750 tokens
+    output_mu_sigma: (4.06, 0.30), // median ~58 tokens
+    prompt_range: (200, 3000),
+    output_range: (20, 160),
+    acceptance_rate: 0.66,
+    acceptance_corr: 0.25,
+};
+
+/// HumanEval: medium prompts, medium-long code completions, high-ish
+/// acceptance (code has low-entropy continuations).
+pub const HUMANEVAL: DatasetProfile = DatasetProfile {
+    name: "humaneval",
+    prompt_mu_sigma: (4.95, 0.40), // median ~140 tokens
+    output_mu_sigma: (4.75, 0.32), // median ~115 tokens
+    prompt_range: (40, 512),
+    output_range: (32, 320),
+    acceptance_rate: 0.78,
+    acceptance_corr: 0.35,
+};
+
+/// Look up a profile by name.
+pub fn dataset_by_name(name: &str) -> Option<&'static DatasetProfile> {
+    match name.to_ascii_lowercase().as_str() {
+        "gsm8k" => Some(&GSM8K),
+        "cnndm" | "cnn_dailymail" | "cnn/dailymail" => Some(&CNNDM),
+        "humaneval" => Some(&HUMANEVAL),
+        _ => None,
+    }
+}
+
+/// The three paper benchmarks.
+pub fn all_datasets() -> [&'static DatasetProfile; 3] {
+    [&GSM8K, &CNNDM, &HUMANEVAL]
+}
+
+impl DatasetProfile {
+    /// Sample one request's lengths.
+    fn sample_lengths(&self, rng: &mut Pcg64) -> (u32, u32) {
+        let (pm, ps) = self.prompt_mu_sigma;
+        let (om, os) = self.output_mu_sigma;
+        let p = rng.lognormal(pm, ps).round() as u32;
+        let o = rng.lognormal(om, os).round() as u32;
+        (
+            p.clamp(self.prompt_range.0, self.prompt_range.1),
+            o.clamp(self.output_range.0, self.output_range.1),
+        )
+    }
+
+    /// Sample an acceptance sequence of length `n` from the two-state
+    /// Markov process with stationary rate α and lag-1 correlation ρ:
+    /// `P(1→1) = α + ρ(1-α)`, `P(0→1) = α(1-ρ)`.
+    pub fn sample_acceptance(&self, rng: &mut Pcg64, n: usize) -> Vec<bool> {
+        let a = self.acceptance_rate;
+        let rho = self.acceptance_corr;
+        let p_stay = a + rho * (1.0 - a);
+        let p_gain = a * (1.0 - rho);
+        let mut seq = Vec::with_capacity(n);
+        let mut state = rng.bernoulli(a);
+        for _ in 0..n {
+            seq.push(state);
+            state = if state {
+                rng.bernoulli(p_stay)
+            } else {
+                rng.bernoulli(p_gain)
+            };
+        }
+        seq
+    }
+
+    /// Generate a full trace: `n` requests, Poisson arrivals at
+    /// `rate_per_s` (requests/second across the whole system), drafter ids
+    /// uniform over `n_drafters` (paper §3.2, synthetic arrival mode).
+    pub fn generate(
+        &self,
+        n: usize,
+        rate_per_s: f64,
+        n_drafters: usize,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Pcg64::new(seed ^ fxhash(self.name));
+        let mut t_ms = 0.0f64;
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Poisson process: exponential inter-arrivals.
+            t_ms += rng.exponential(rate_per_s / 1000.0);
+            let (prompt_length, output_length) = self.sample_lengths(&mut rng);
+            // Draft tokens consumed can exceed output_length (rejected
+            // tokens still consume sequence entries); 2x + slack is ample.
+            let seq_len = (output_length as usize) * 2 + 16;
+            let acceptance_seq = self.sample_acceptance(&mut rng, seq_len);
+            records.push(TraceRecord {
+                prompt_length,
+                output_length,
+                acceptance_seq,
+                arrival_time_ms: t_ms,
+                drafter_id: rng.index(n_drafters.max(1)),
+            });
+        }
+        Trace {
+            dataset: self.name.to_string(),
+            records,
+        }
+    }
+}
+
+/// Tiny FNV-style hash to derive per-dataset seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(dataset_by_name("GSM8K").unwrap().name, "gsm8k");
+        assert_eq!(dataset_by_name("cnn/dailymail").unwrap().name, "cnndm");
+        assert!(dataset_by_name("wikitext").is_none());
+    }
+
+    #[test]
+    fn generated_traces_match_profile_statistics() {
+        for ds in all_datasets() {
+            let t = ds.generate(2000, 50.0, 100, 7);
+            assert_eq!(t.len(), 2000);
+            t.validate().unwrap();
+            let acc = t.mean_acceptance();
+            assert!(
+                (acc - ds.acceptance_rate).abs() < 0.03,
+                "{}: acc={acc} want≈{}",
+                ds.name,
+                ds.acceptance_rate
+            );
+            // Median of lognormal = exp(mu); mean of clamped sample should
+            // land within a factor ~1.5 of it.
+            let want_p = ds.prompt_mu_sigma.0.exp();
+            assert!(
+                t.mean_prompt() > want_p * 0.7 && t.mean_prompt() < want_p * 1.6,
+                "{}: prompt mean {} vs median {want_p}",
+                ds.name,
+                t.mean_prompt()
+            );
+        }
+    }
+
+    #[test]
+    fn dataset_characters_are_distinct() {
+        let g = GSM8K.generate(1000, 50.0, 10, 1);
+        let c = CNNDM.generate(1000, 50.0, 10, 1);
+        let h = HUMANEVAL.generate(1000, 50.0, 10, 1);
+        // CNN/DM: longest prompts, shortest outputs; HumanEval: longest
+        // outputs.
+        assert!(c.mean_prompt() > 3.0 * g.mean_prompt());
+        assert!(h.mean_output() > g.mean_output());
+        assert!(c.mean_output() < g.mean_output());
+    }
+
+    #[test]
+    fn arrival_rate_matches_poisson() {
+        let t = GSM8K.generate(5000, 100.0, 10, 3);
+        let span_s = t.records.last().unwrap().arrival_time_ms / 1000.0;
+        let rate = t.len() as f64 / span_s;
+        assert!((rate - 100.0).abs() < 8.0, "rate={rate}");
+    }
+
+    #[test]
+    fn acceptance_autocorrelation_present() {
+        let mut rng = Pcg64::new(5);
+        let seq = HUMANEVAL.sample_acceptance(&mut rng, 100_000);
+        let xs: Vec<f64> = seq.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        let mean = crate::util::stats::mean(&xs);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..xs.len() {
+            den += (xs[i] - mean) * (xs[i] - mean);
+            if i + 1 < xs.len() {
+                num += (xs[i] - mean) * (xs[i + 1] - mean);
+            }
+        }
+        let lag1 = num / den;
+        assert!(
+            (lag1 - HUMANEVAL.acceptance_corr).abs() < 0.05,
+            "lag1={lag1}"
+        );
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = GSM8K.generate(50, 20.0, 5, 9);
+        let b = GSM8K.generate(50, 20.0, 5, 9);
+        assert_eq!(a.records, b.records);
+    }
+
+    #[test]
+    fn drafter_ids_cover_pool() {
+        let t = GSM8K.generate(2000, 50.0, 8, 11);
+        let mut seen = vec![false; 8];
+        for r in &t.records {
+            seen[r.drafter_id] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

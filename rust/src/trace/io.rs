@@ -1,0 +1,69 @@
+//! Trace (de)serialization: JSONL on disk, one Table-1 record per line.
+
+use super::schema::{Trace, TraceRecord};
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// Write a trace to a JSONL file (first line is a header object).
+pub fn write_jsonl(trace: &Trace, path: &Path) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let header = Json::obj()
+        .with("dataset", trace.dataset.as_str().into())
+        .with("count", trace.records.len().into());
+    writeln!(f, "{}", header.to_string_compact())?;
+    for r in &trace.records {
+        writeln!(f, "{}", r.to_json().to_string_compact())?;
+    }
+    Ok(())
+}
+
+/// Read a trace from a JSONL file produced by [`write_jsonl`].
+pub fn read_jsonl(path: &Path) -> Result<Trace, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let lines = Json::parse_lines(&text).map_err(|e| e.to_string())?;
+    if lines.is_empty() {
+        return Err("empty trace file".into());
+    }
+    let dataset = lines[0]
+        .get("dataset")
+        .and_then(Json::as_str)
+        .unwrap_or("custom")
+        .to_string();
+    let records = lines[1..]
+        .iter()
+        .map(TraceRecord::from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    let t = Trace { dataset, records };
+    t.validate()?;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::datasets::GSM8K;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let t = GSM8K.generate(25, 10.0, 4, 1);
+        let dir = std::env::temp_dir().join("dsd_trace_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        write_jsonl(&t, &path).unwrap();
+        let back = read_jsonl(&path).unwrap();
+        assert_eq!(back.dataset, "gsm8k");
+        assert_eq!(back.records, t.records);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let dir = std::env::temp_dir().join("dsd_trace_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"dataset\":\"x\"}\n{\"nope\": 1}\n").unwrap();
+        assert!(read_jsonl(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

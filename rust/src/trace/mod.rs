@@ -1,0 +1,10 @@
+//! Workloads and trace model (paper §3.2): Table-1 record schema,
+//! statistical generators for the GSM8K / CNN-DailyMail / HumanEval
+//! benchmark profiles, and JSONL trace IO.
+
+pub mod datasets;
+pub mod io;
+pub mod schema;
+
+pub use datasets::{all_datasets, dataset_by_name, DatasetProfile, CNNDM, GSM8K, HUMANEVAL};
+pub use schema::{Trace, TraceRecord};

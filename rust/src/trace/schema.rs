@@ -1,0 +1,214 @@
+//! Workload trace schema (paper §3.2, Table 1).
+//!
+//! A trace record carries everything needed to drive one request through
+//! DSD-Sim: prompt/output lengths, the ground-truth per-token acceptance
+//! sequence for the draft–target pair, arrival time, and the drafter it
+//! lands on.
+
+use crate::util::json::Json;
+
+/// One request in a workload trace (Table 1 of the paper).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Prompt length in tokens.
+    pub prompt_length: u32,
+    /// Number of output tokens to generate.
+    pub output_length: u32,
+    /// Ground-truth acceptance outcome per *draft* token: `acceptance_seq[i]`
+    /// says whether the i-th draft token proposed for this request would be
+    /// accepted by the target. Consumed sequentially as speculation windows
+    /// advance; length ≥ `output_length` (regenerated cyclically if shorter).
+    pub acceptance_seq: Vec<bool>,
+    /// Arrival time, milliseconds from trace start.
+    pub arrival_time_ms: f64,
+    /// Edge drafter device the request arrives at.
+    pub drafter_id: usize,
+}
+
+impl TraceRecord {
+    /// Serialize to the JSON schema of Table 1.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("prompt_length", (self.prompt_length as u64).into())
+            .with("output_length", (self.output_length as u64).into())
+            .with(
+                "acceptance_seq",
+                Json::Arr(
+                    self.acceptance_seq
+                        .iter()
+                        .map(|&b| Json::Num(if b { 1.0 } else { 0.0 }))
+                        .collect(),
+                ),
+            )
+            .with("arrival_time_ms", self.arrival_time_ms.into())
+            .with("drafter_id", self.drafter_id.into())
+    }
+
+    /// Parse from the Table-1 JSON schema.
+    pub fn from_json(j: &Json) -> Result<TraceRecord, String> {
+        let field = |k: &str| j.get(k).ok_or_else(|| format!("missing field '{k}'"));
+        let acceptance_seq = field("acceptance_seq")?
+            .as_arr()
+            .ok_or("acceptance_seq must be an array")?
+            .iter()
+            .map(|x| x.as_f64().map(|v| v != 0.0))
+            .collect::<Option<Vec<bool>>>()
+            .ok_or("acceptance_seq entries must be 0/1")?;
+        Ok(TraceRecord {
+            prompt_length: field("prompt_length")?
+                .as_u64()
+                .ok_or("prompt_length must be a non-negative integer")? as u32,
+            output_length: field("output_length")?
+                .as_u64()
+                .ok_or("output_length must be a non-negative integer")? as u32,
+            acceptance_seq,
+            arrival_time_ms: field("arrival_time_ms")?
+                .as_f64()
+                .ok_or("arrival_time_ms must be a number")?,
+            drafter_id: field("drafter_id")?
+                .as_usize()
+                .ok_or("drafter_id must be a non-negative integer")?,
+        })
+    }
+
+    /// Empirical acceptance rate of this record's sequence.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.acceptance_seq.is_empty() {
+            return 0.0;
+        }
+        self.acceptance_seq.iter().filter(|&&b| b).count() as f64
+            / self.acceptance_seq.len() as f64
+    }
+}
+
+/// A full workload trace plus its provenance.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Dataset name (gsm8k / cnndm / humaneval / custom).
+    pub dataset: String,
+    /// Records sorted by arrival time.
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    /// Number of requests.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Whether the trace is empty.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Mean prompt length.
+    pub fn mean_prompt(&self) -> f64 {
+        crate::util::stats::mean(
+            &self
+                .records
+                .iter()
+                .map(|r| r.prompt_length as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean output length.
+    pub fn mean_output(&self) -> f64 {
+        crate::util::stats::mean(
+            &self
+                .records
+                .iter()
+                .map(|r| r.output_length as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean acceptance rate across records.
+    pub fn mean_acceptance(&self) -> f64 {
+        crate::util::stats::mean(
+            &self
+                .records
+                .iter()
+                .map(|r| r.acceptance_rate())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Assert arrival times are non-decreasing.
+    pub fn validate(&self) -> Result<(), String> {
+        for w in self.records.windows(2) {
+            if w[1].arrival_time_ms < w[0].arrival_time_ms {
+                return Err("trace arrivals are not sorted".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TraceRecord {
+        TraceRecord {
+            prompt_length: 27,
+            output_length: 94,
+            acceptance_seq: vec![true, false, true],
+            arrival_time_ms: 5.3,
+            drafter_id: 38,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample();
+        let j = r.to_json();
+        let back = TraceRecord::from_json(&j).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn schema_matches_table1() {
+        let j = sample().to_json();
+        for field in [
+            "prompt_length",
+            "output_length",
+            "acceptance_seq",
+            "arrival_time_ms",
+            "drafter_id",
+        ] {
+            assert!(j.get(field).is_some(), "missing {field}");
+        }
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        let mut j = sample().to_json();
+        j = match j {
+            Json::Obj(pairs) => Json::Obj(
+                pairs
+                    .into_iter()
+                    .filter(|(k, _)| k != "output_length")
+                    .collect(),
+            ),
+            _ => unreachable!(),
+        };
+        assert!(TraceRecord::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn acceptance_rate() {
+        assert!((sample().acceptance_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_validation() {
+        let mut t = Trace {
+            dataset: "x".into(),
+            records: vec![sample(), sample()],
+        };
+        assert!(t.validate().is_ok());
+        t.records[1].arrival_time_ms = 1.0;
+        assert!(t.validate().is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Tiny command-line argument parser (replaces `clap`, unavailable offline).
+//!
+//! Model: `dsd <subcommand> [--flag] [--key value]...`. Flags are
+//! registered up front so typos are caught; `--help` text is generated.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// CLI parse error.
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Specification of one option.
+#[derive(Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<&'static str>,
+}
+
+/// Declarative subcommand spec; parse with [`Command::parse`].
+pub struct Command {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments for one subcommand.
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+}
+
+impl Command {
+    /// New subcommand spec.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Register a `--key value` option with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// Register a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("dsd {} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{}\t{}{}\n", o.name, val, o.help, def));
+        }
+        s
+    }
+
+    /// Parse raw args (everything after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name, d.to_string());
+            }
+            if !o.takes_value {
+                flags.insert(o.name, false);
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let arg = &raw[i];
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| CliError(format!("expected --option, got '{arg}'")))?;
+            if name == "help" {
+                return Err(CliError(self.help()));
+            }
+            // Support --key=value form too.
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let spec = self
+                .opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help())))?;
+            if spec.takes_value {
+                let val = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        raw.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                    }
+                };
+                values.insert(spec.name, val);
+            } else {
+                if inline.is_some() {
+                    return Err(CliError(format!("--{name} does not take a value")));
+                }
+                flags.insert(spec.name, true);
+            }
+            i += 1;
+        }
+        Ok(Args { values, flags })
+    }
+}
+
+impl Args {
+    /// String value of an option (set or defaulted).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    /// Required option, error message on absence.
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+
+    /// Parse an option as u64.
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.get(name)
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| CliError(format!("--{name} expects an integer, got '{s}'")))
+            })
+            .transpose()
+    }
+
+    /// Parse an option as usize.
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        Ok(self.get_u64(name)?.map(|x| x as usize))
+    }
+
+    /// Parse an option as f64.
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.get(name)
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| CliError(format!("--{name} expects a number, got '{s}'")))
+            })
+            .transpose()
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("simulate", "run the simulator")
+            .opt("config", "path to YAML config", None)
+            .opt("seed", "rng seed", Some("42"))
+            .flag("verbose", "chatty output")
+    }
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_defaults() {
+        let a = cmd()
+            .parse(&strs(&["--config", "c.yaml", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("config"), Some("c.yaml"));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(42));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = cmd().parse(&strs(&["--seed=7"])).unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&strs(&["--nope", "x"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&strs(&["--config"])).is_err());
+    }
+
+    #[test]
+    fn required_helper() {
+        let a = cmd().parse(&strs(&[])).unwrap();
+        assert!(a.require("config").is_err());
+        assert!(a.require("seed").is_ok());
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = cmd().parse(&strs(&["--seed", "abc"])).unwrap();
+        assert!(a.get_u64("seed").is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cmd().help();
+        assert!(h.contains("--config"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("[default: 42]"));
+    }
+}

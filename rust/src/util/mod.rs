@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! RNG, JSON, YAML, CLI parsing, statistics, property testing, tables.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod yaml;

@@ -1,0 +1,137 @@
+//! Lightweight property-based testing helpers (replaces `proptest`,
+//! unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] (seeded value source). The
+//! runner executes it for many seeds; on failure it reports the seed so
+//! the case replays deterministically:
+//!
+//! ```no_run
+//! use dsd::util::prop::{run_prop, Gen};
+//! run_prop("sum is commutative", 200, |g: &mut Gen| {
+//!     let mut draws = (g.f64_in(0.0, 1e6), 0.0);
+//!     draws.1 = g.f64_in(0.0, 1e6);
+//!     let (a, b) = draws;
+//!     assert!((a + b - (b + a)).abs() < 1e-9);
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Seeded value generator handed to property closures.
+pub struct Gen {
+    rng: Pcg64,
+    /// Seed of the current case (for failure reporting / replay).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Generator for one case.
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Pcg64::new(seed),
+            seed,
+        }
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform u64 in [lo, hi] inclusive.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Bernoulli draw.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+
+    /// Vector of values from an element generator.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.index(xs.len());
+        &xs[i]
+    }
+
+    /// Borrow the underlying RNG for ad-hoc draws.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` deterministic seeds; panics with the failing
+/// seed on the first violated assertion.
+pub fn run_prop(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        // Stable per-case seed; independent of `cases` so adding cases
+        // never changes earlier ones.
+        let seed = 0xD5D0_5EED_u64
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run_prop("trivial", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        run_prop("fails", 50, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 90, "x={x}");
+        });
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64_in(0, 1_000_000), b.u64_in(0, 1_000_000));
+        }
+    }
+
+    #[test]
+    fn vec_of_and_pick() {
+        let mut g = Gen::new(1);
+        let v = g.vec_of(10, |g| g.usize_in(0, 5));
+        assert_eq!(v.len(), 10);
+        assert!(v.iter().all(|&x| x <= 5));
+        let items = [1, 2, 3];
+        let p = *g.pick(&items);
+        assert!(items.contains(&p));
+    }
+}

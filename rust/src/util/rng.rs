@@ -1,0 +1,339 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so DSD carries its own generator:
+//! a PCG64 (XSL-RR 128/64) core with SplitMix64 seeding, plus the
+//! distribution samplers the simulator and trace generators need
+//! (uniform, exponential, Poisson, normal, log-normal, Bernoulli).
+//!
+//! Every run of the simulator draws all randomness from one seeded root
+//! [`Pcg64`]; child streams are forked with [`Pcg64::fork`] so adding a new
+//! consumer does not perturb existing streams (stable determinism).
+
+/// SplitMix64 step — used to expand a single `u64` seed into PCG state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG64 XSL-RR 128/64: 128-bit LCG state, 64-bit xor-shift/rotate output.
+///
+/// Small, fast, statistically strong, and — critically for DSD-Sim —
+/// reproducible across platforms (no floating point in the core).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let a = splitmix64(&mut sm);
+        let b = splitmix64(&mut sm);
+        let c = splitmix64(&mut sm);
+        let d = splitmix64(&mut sm);
+        let state = ((a as u128) << 64) | b as u128;
+        // Stream selector must be odd.
+        let inc = (((c as u128) << 64) | d as u128) | 1;
+        let mut rng = Pcg64 { state, inc };
+        rng.next_u64(); // burn-in so state differs from raw seed material
+        rng
+    }
+
+    /// Fork an independent child stream keyed by `tag`.
+    ///
+    /// Forking is stable: the child depends only on the parent's *seed
+    /// path*, not on how many numbers the parent has drawn since. Callers
+    /// should fork all children up front from a dedicated seeding RNG.
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        let mix = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Pcg64::new(mix)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (n > 0), via Lemire rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Widening-multiply rejection method (unbiased).
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let low = m as u64;
+            if low >= n {
+                return (m >> 64) as u64;
+            }
+            let threshold = n.wrapping_neg() % n;
+            if low >= threshold {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize index in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential variate with the given rate (mean 1/rate).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        // Inverse CDF; guard against ln(0).
+        let u = 1.0 - self.f64();
+        -u.ln() / rate
+    }
+
+    /// Standard normal variate (Box–Muller, single-value form).
+    pub fn normal(&mut self) -> f64 {
+        // Polar Box–Muller without caching the second value keeps the
+        // generator state a pure function of draw count.
+        loop {
+            let u = self.range_f64(-1.0, 1.0);
+            let v = self.range_f64(-1.0, 1.0);
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal variate with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal variate parameterized by the *underlying* normal's
+    /// mu/sigma (as in scipy's `lognorm`).
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson variate with the given mean.
+    ///
+    /// Knuth's product method for small lambda; normal approximation with
+    /// continuity correction above 30 (adequate for arrival batching).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        debug_assert!(lambda >= 0.0);
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal_with(lambda, lambda.sqrt());
+            if x < 0.5 {
+                0
+            } else {
+                (x + 0.5) as u64
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose a uniformly random element (panics on empty slice).
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Pcg64::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Pcg64::new(5);
+        let rate = 2.5;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_mean() {
+        let mut r = Pcg64::new(11);
+        let lambda = 4.0;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+        assert!((mean - lambda).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_mean() {
+        let mut r = Pcg64::new(13);
+        let lambda = 200.0;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+        assert!((mean - lambda).abs() < lambda * 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(17);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg64::new(19);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| r.bernoulli(0.3)).count() as f64 / n as f64;
+        assert!((hits - 0.3).abs() < 0.01, "hits={hits}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(23);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>()); // vanishing chance
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Pcg64::new(31);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn range_u64_inclusive_bounds() {
+        let mut r = Pcg64::new(37);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..10_000 {
+            let x = r.range_u64(3, 6);
+            assert!((3..=6).contains(&x));
+            saw_lo |= x == 3;
+            saw_hi |= x == 6;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Pcg64::new(41);
+        let n = 50_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(2.0, 0.5)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[n / 2];
+        // Median of lognormal is exp(mu).
+        assert!((median - 2.0f64.exp()).abs() < 0.15, "median={median}");
+    }
+}

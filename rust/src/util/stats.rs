@@ -1,0 +1,344 @@
+//! Streaming statistics used by the metrics analyzer and bench harness:
+//! mean/std accumulators (Welford), percentiles, exponential moving
+//! averages, fixed-bucket histograms, and sliding time windows.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Accumulator {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Add an observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population standard deviation (0 when n < 2).
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+
+    /// Smallest observation (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest observation (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Percentile of a sample (linear interpolation, `q` in [0, 100]).
+///
+/// Sorts a copy; fine for end-of-run reporting.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Arithmetic mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Exponential moving average with smoothing factor `alpha` in (0, 1].
+///
+/// `value = alpha * x + (1 - alpha) * value`. Used by AWC's stabilizer
+/// (paper §4.4, alpha = 0.4) and the metrics snapshots.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    /// New EMA with the given smoothing factor.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Ema { alpha, value: None }
+    }
+
+    /// Feed an observation; returns the smoothed value.
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current smoothed value (None before any observation).
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// Current value or a fallback.
+    pub fn value_or(&self, fallback: f64) -> f64 {
+        self.value.unwrap_or(fallback)
+    }
+
+    /// Clear state.
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Sliding window over (time, value) observations; evicts entries older
+/// than `horizon`. Backs the "recent X" features the AWC policy consumes.
+#[derive(Clone, Debug)]
+pub struct TimeWindow {
+    horizon: f64,
+    entries: std::collections::VecDeque<(f64, f64)>,
+    sum: f64,
+}
+
+impl TimeWindow {
+    /// Window keeping observations within `horizon` time units of the
+    /// latest push.
+    pub fn new(horizon: f64) -> Self {
+        TimeWindow {
+            horizon,
+            entries: std::collections::VecDeque::new(),
+            sum: 0.0,
+        }
+    }
+
+    /// Record `value` observed at time `now` (non-decreasing).
+    pub fn push(&mut self, now: f64, value: f64) {
+        self.entries.push_back((now, value));
+        self.sum += value;
+        self.evict(now);
+    }
+
+    fn evict(&mut self, now: f64) {
+        while let Some(&(t, v)) = self.entries.front() {
+            if now - t > self.horizon {
+                self.entries.pop_front();
+                self.sum -= v;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Mean over the current window (None if empty).
+    pub fn mean(&self) -> Option<f64> {
+        if self.entries.is_empty() {
+            None
+        } else {
+            Some(self.sum / self.entries.len() as f64)
+        }
+    }
+
+    /// Number of in-window observations.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the window holds no observations.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Fixed-bucket histogram for latency distributions in reports.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    buckets: Vec<u64>,
+    /// Observations below `lo` / at-or-above the last bucket edge.
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    /// Histogram over [lo, hi) with `n` equal buckets.
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(hi > lo && n > 0);
+        Histogram {
+            lo,
+            width: (hi - lo) / n as f64,
+            buckets: vec![0; n],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x - self.lo) / self.width) as usize;
+        if idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    /// Bucket counts.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Total recorded observations including under/overflow.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_moments() {
+        let mut a = Accumulator::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 8);
+        assert!((a.mean() - 5.0).abs() < 1e-12);
+        assert!((a.std() - 2.0).abs() < 1e-12);
+        assert_eq!(a.min(), 2.0);
+        assert_eq!(a.max(), 9.0);
+    }
+
+    #[test]
+    fn empty_accumulator() {
+        let a = Accumulator::new();
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.std(), 0.0);
+        assert!(a.min().is_nan());
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn ema_tracks_and_smooths() {
+        let mut e = Ema::new(0.4);
+        assert_eq!(e.push(10.0), 10.0); // first value passes through
+        let v = e.push(20.0);
+        assert!((v - 14.0).abs() < 1e-12); // 0.4*20 + 0.6*10
+        e.reset();
+        assert_eq!(e.value(), None);
+        assert_eq!(e.value_or(3.0), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ema_rejects_bad_alpha() {
+        Ema::new(0.0);
+    }
+
+    #[test]
+    fn time_window_eviction() {
+        let mut w = TimeWindow::new(10.0);
+        w.push(0.0, 1.0);
+        w.push(5.0, 2.0);
+        w.push(14.0, 3.0); // evicts t=0 entry (14-0 > 10)
+        assert_eq!(w.len(), 2);
+        assert!((w.mean().unwrap() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_window_empty() {
+        let w = TimeWindow::new(5.0);
+        assert!(w.is_empty());
+        assert_eq!(w.mean(), None);
+    }
+
+    #[test]
+    fn histogram_bucketing() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [-1.0, 0.0, 0.5, 5.0, 9.99, 10.0, 100.0] {
+            h.push(x);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.buckets()[0], 2); // 0.0, 0.5
+        assert_eq!(h.buckets()[5], 1); // 5.0
+        assert_eq!(h.buckets()[9], 1); // 9.99
+    }
+
+    #[test]
+    fn mean_helper() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+}

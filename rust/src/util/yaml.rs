@@ -1,0 +1,416 @@
+//! Minimal YAML-subset parser for DSD deployment configurations.
+//!
+//! Replaces `serde_yaml` (unavailable offline). Supports the subset the
+//! paper's configuration files need:
+//!
+//! * nested block mappings (indentation-scoped)
+//! * block sequences (`- item`), including sequences of mappings
+//! * inline scalars: strings (bare / single / double quoted), integers,
+//!   floats, booleans, null
+//! * flow sequences of scalars: `[a, b, c]`
+//! * `#` comments and blank lines
+//!
+//! Anchors, aliases, multi-document streams, and block scalars are *not*
+//! supported — DSD configs do not use them. Parsed documents are returned
+//! as [`Json`] values so the typed config layer shares one value model.
+
+use super::json::Json;
+use std::fmt;
+
+/// YAML parse error with line context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct YamlError {
+    /// Human-readable description.
+    pub msg: String,
+    /// 1-based line number.
+    pub line: usize,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for YamlError {}
+
+/// Parse a YAML document into a [`Json`] value.
+pub fn parse(text: &str) -> Result<Json, YamlError> {
+    let lines: Vec<Line> = text
+        .lines()
+        .enumerate()
+        .map(|(i, raw)| Line::new(i + 1, raw))
+        .filter(|l| !l.blank)
+        .collect();
+    let mut pos = 0;
+    if lines.is_empty() {
+        return Ok(Json::Null);
+    }
+    let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        return Err(YamlError {
+            msg: "unexpected dedent/content after document".into(),
+            line: lines[pos].no,
+        });
+    }
+    Ok(v)
+}
+
+struct Line {
+    no: usize,
+    indent: usize,
+    /// Content with comments stripped and trailing space trimmed.
+    content: String,
+    blank: bool,
+}
+
+impl Line {
+    fn new(no: usize, raw: &str) -> Line {
+        let indent = raw.len() - raw.trim_start_matches(' ').len();
+        let stripped = strip_comment(raw.trim_start_matches(' '));
+        let content = stripped.trim_end().to_string();
+        let blank = content.is_empty();
+        Line {
+            no,
+            indent,
+            content,
+            blank,
+        }
+    }
+}
+
+/// Strip a `#` comment that is not inside quotes.
+fn strip_comment(s: &str) -> &str {
+    let bytes = s.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'#' if !in_single && !in_double => {
+                // YAML requires '#' to be preceded by space/line start.
+                if i == 0 || bytes[i - 1] == b' ' {
+                    return &s[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    s
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let line = &lines[*pos];
+    if line.content.starts_with("- ") || line.content == "-" {
+        parse_sequence(lines, pos, indent)
+    } else {
+        parse_mapping(lines, pos, indent)
+    }
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError {
+                msg: "unexpected indent inside sequence".into(),
+                line: line.no,
+            });
+        }
+        if !(line.content.starts_with("- ") || line.content == "-") {
+            break;
+        }
+        let no = line.no;
+        let rest = line.content[1..].trim_start().to_string();
+        if rest.is_empty() {
+            // Nested block on following lines.
+            *pos += 1;
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Json::Null);
+            }
+        } else if let Some((key, val)) = split_key(&rest) {
+            // "- key: value" — inline start of a mapping item. Re-parse the
+            // remainder as a mapping whose virtual indent is indent + 2.
+            let virt_indent = indent + 2;
+            let mut map = Vec::new();
+            push_mapping_entry(&mut map, key, val, lines, pos, virt_indent, no)?;
+            // Continue consuming further keys at the virtual indent.
+            while *pos < lines.len()
+                && lines[*pos].indent == virt_indent
+                && !lines[*pos].content.starts_with("- ")
+            {
+                let l = &lines[*pos];
+                let (k, v) = split_key(&l.content).ok_or_else(|| YamlError {
+                    msg: "expected 'key: value' in mapping item".into(),
+                    line: l.no,
+                })?;
+                let lno = l.no;
+                push_mapping_entry(&mut map, k, v, lines, pos, virt_indent, lno)?;
+            }
+            items.push(Json::Obj(map));
+        } else {
+            *pos += 1;
+            items.push(parse_scalar(&rest, no)?);
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let mut pairs = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError {
+                msg: "unexpected indent inside mapping".into(),
+                line: line.no,
+            });
+        }
+        if line.content.starts_with("- ") || line.content == "-" {
+            break;
+        }
+        let (key, val) = split_key(&line.content).ok_or_else(|| YamlError {
+            msg: format!("expected 'key: value', got '{}'", line.content),
+            line: line.no,
+        })?;
+        let no = line.no;
+        push_mapping_entry(&mut pairs, key, val, lines, pos, indent, no)?;
+    }
+    Ok(Json::Obj(pairs))
+}
+
+/// Consume one `key: value` entry starting at `*pos` (whose line is already
+/// split into key/val); advances `*pos` past the entry including any nested
+/// block.
+fn push_mapping_entry(
+    pairs: &mut Vec<(String, Json)>,
+    key: String,
+    val: String,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    line_no: usize,
+) -> Result<(), YamlError> {
+    *pos += 1;
+    let value = if val.is_empty() {
+        // Nested block or implicit null.
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let child_indent = lines[*pos].indent;
+            parse_block(lines, pos, child_indent)?
+        } else if *pos < lines.len()
+            && lines[*pos].indent == indent
+            && lines[*pos].content.starts_with("- ")
+        {
+            // Sequences are allowed at the same indent as their key.
+            parse_sequence(lines, pos, indent)?
+        } else {
+            Json::Null
+        }
+    } else {
+        parse_scalar(&val, line_no)?
+    };
+    pairs.push((key, value));
+    Ok(())
+}
+
+/// Split `key: value` (value may be empty). Returns None if no unquoted ':'
+/// separator exists.
+fn split_key(s: &str) -> Option<(String, String)> {
+    let bytes = s.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b':' if !in_single && !in_double => {
+                // ':' must terminate the key: end-of-line or followed by space.
+                if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                    let key = unquote(s[..i].trim());
+                    let val = s[i + 1..].trim().to_string();
+                    return Some((key, val));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let b = s.as_bytes();
+    if b.len() >= 2
+        && ((b[0] == b'"' && b[b.len() - 1] == b'"')
+            || (b[0] == b'\'' && b[b.len() - 1] == b'\''))
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Json, YamlError> {
+    let s = s.trim();
+    // Flow sequence of scalars.
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| YamlError {
+            msg: "unterminated flow sequence".into(),
+            line,
+        })?;
+        if inner.trim().is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        return inner
+            .split(',')
+            .map(|part| parse_scalar(part, line))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Json::Arr);
+    }
+    if s.starts_with('"') || s.starts_with('\'') {
+        return Ok(Json::Str(unquote(s)));
+    }
+    Ok(match s {
+        "null" | "~" | "" => Json::Null,
+        "true" | "True" => Json::Bool(true),
+        "false" | "False" => Json::Bool(false),
+        _ => {
+            if let Ok(x) = s.parse::<f64>() {
+                Json::Num(x)
+            } else {
+                Json::Str(s.to_string())
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_nesting() {
+        let doc = "\
+name: dsd
+seed: 42
+rate: 1.5
+flag: true
+nothing: null
+network:
+  rtt_ms: 10
+  jitter_ms: 0.5
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("dsd"));
+        assert_eq!(v.get("seed").unwrap().as_u64(), Some(42));
+        assert_eq!(v.get("rate").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("nothing"), Some(&Json::Null));
+        assert_eq!(v.path(&["network", "rtt_ms"]).unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn sequences_of_scalars_and_maps() {
+        let doc = "\
+datasets:
+  - gsm8k
+  - cnndm
+devices:
+  - name: a100
+    count: 4
+  - name: h100
+    count: 2
+";
+        let v = parse(doc).unwrap();
+        let ds = v.get("datasets").unwrap().as_arr().unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].as_str(), Some("gsm8k"));
+        let dev = v.get("devices").unwrap().as_arr().unwrap();
+        assert_eq!(dev[0].get("name").unwrap().as_str(), Some("a100"));
+        assert_eq!(dev[1].get("count").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn sequence_at_key_indent() {
+        let doc = "\
+items:
+- 1
+- 2
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("items").unwrap().as_f64_vec().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = "\
+# header comment
+a: 1  # trailing comment
+
+b: \"text # not comment\"
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("text # not comment"));
+    }
+
+    #[test]
+    fn flow_sequences() {
+        let v = parse("xs: [1, 2.5, a, \"b\"]\nempty: []\n").unwrap();
+        let xs = v.get("xs").unwrap().as_arr().unwrap();
+        assert_eq!(xs[0].as_f64(), Some(1.0));
+        assert_eq!(xs[2].as_str(), Some("a"));
+        assert_eq!(xs[3].as_str(), Some("b"));
+        assert!(v.get("empty").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn quoted_keys_and_colon_values() {
+        let v = parse("\"k:1\": v\nurl: http://x/y\n").unwrap();
+        assert_eq!(v.get("k:1").unwrap().as_str(), Some("v"));
+        assert_eq!(v.get("url").unwrap().as_str(), Some("http://x/y"));
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let doc = "\
+a:
+  b:
+    c:
+      - d: 1
+        e:
+          f: 2
+";
+        let v = parse(doc).unwrap();
+        let item = &v.path(&["a", "b", "c"]).unwrap().as_arr().unwrap()[0];
+        assert_eq!(item.get("d").unwrap().as_f64(), Some(1.0));
+        assert_eq!(item.path(&["e", "f"]).unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn empty_document() {
+        assert_eq!(parse("").unwrap(), Json::Null);
+        assert_eq!(parse("# only comments\n").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn errors_report_lines() {
+        let err = parse("a: 1\n  weird\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn null_value_for_trailing_key() {
+        let v = parse("a: 1\nb:\n").unwrap();
+        assert_eq!(v.get("b"), Some(&Json::Null));
+    }
+}

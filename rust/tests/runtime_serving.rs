@@ -1,0 +1,187 @@
+//! Integration tests over the PJRT runtime and the real serving
+//! coordinator. These need `artifacts/` (run `make artifacts`); they
+//! self-skip when it is absent so `cargo test` works on a fresh clone.
+
+use dsd::coordinator::{argmax, Coordinator, DraftEngine, ServeConfig, ServeRequest,
+                       ServeWindow, TargetEngine};
+use dsd::runtime::Runtime;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn prompt() -> &'static [u8] {
+    b"question: tom has 3 apples and buys 2 more. how many apples does tom have?\nanswer:"
+}
+
+#[test]
+fn runtime_loads_and_validates_shapes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+    // Wrong operand count / shape rejected before reaching PJRT.
+    let exe = rt.executable("draft_decode").unwrap();
+    assert!(exe.call(&[]).is_err());
+    let bad = exe.call(&[
+        dsd::runtime::exec::Tensor::scalar_i32(1),
+        dsd::runtime::exec::Tensor::scalar_i32(1),
+        dsd::runtime::exec::Tensor::vec_f32(vec![0.0; 8]),
+    ]);
+    assert!(bad.is_err(), "kv shape mismatch must fail closed");
+}
+
+#[test]
+fn greedy_sd_is_output_invariant_and_speculative() {
+    // The core correctness property of the entire serving path: greedy
+    // speculative decoding produces exactly the target model's greedy
+    // output, while genuinely accepting draft tokens along the way.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let reqs: Vec<ServeRequest> = (0..2)
+        .map(|id| ServeRequest {
+            id,
+            prompt: prompt().to_vec(),
+            max_new_tokens: 20,
+        })
+        .collect();
+    let sd = Coordinator::new(
+        &dir,
+        ServeConfig {
+            n_drafters: 2,
+            n_verifiers: 1,
+            rtt_ms: 2.0,
+            window: ServeWindow::Static(4),
+            max_new_tokens: 20,
+        },
+    )
+    .unwrap();
+    let (sd_rs, sd_stats) = sd.serve(reqs.clone()).unwrap();
+    let fused = Coordinator::new(
+        &dir,
+        ServeConfig {
+            n_drafters: 2,
+            n_verifiers: 1,
+            rtt_ms: 2.0,
+            window: ServeWindow::FusedOnly,
+            max_new_tokens: 20,
+        },
+    )
+    .unwrap();
+    let (fused_rs, _) = fused.serve(reqs).unwrap();
+    for (a, b) in sd_rs.iter().zip(&fused_rs) {
+        assert_eq!(a.output, b.output, "SD must match target greedy decode");
+        assert!(a.drafted > 0, "requests must actually speculate");
+        assert!(a.rounds > 0);
+    }
+    assert_eq!(sd_stats.completed, 2);
+    assert!(sd_stats.mean_acceptance.is_finite());
+}
+
+#[test]
+fn verify_matches_decode_chain_on_real_model() {
+    // target.verify over a window == sequential target.decode steps.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Arc::new(Runtime::load(&dir).unwrap());
+    let target = TargetEngine::new(rt.clone());
+    let draft = DraftEngine::new(rt);
+    let (tl, tkv, n) = target.prefill(prompt()).unwrap();
+    let first = argmax(&tl);
+    let (dl, dkv, _) = draft.prefill(prompt()).unwrap();
+    let _ = dl;
+    let (drafts, _) = draft.draft_window(first, n, 3, dkv).unwrap();
+
+    let mut window = vec![first];
+    window.extend_from_slice(&drafts);
+    let (accepted, correction, _) = target.verify(&window, n, tkv.clone()).unwrap();
+
+    // Replay with decode steps.
+    let mut kv = tkv;
+    let mut expect_accepted = 0;
+    let mut expect_correction = None;
+    let mut tok = first;
+    for (i, &d) in drafts.iter().enumerate() {
+        let (logits, nkv) = target.decode(tok, n + i, kv).unwrap();
+        kv = nkv;
+        let choice = argmax(&logits);
+        if choice == d {
+            expect_accepted += 1;
+            tok = d;
+        } else {
+            expect_correction = Some(choice);
+            break;
+        }
+    }
+    assert_eq!(accepted, expect_accepted);
+    if let Some(c) = expect_correction {
+        assert_eq!(correction, c);
+    }
+}
+
+#[test]
+fn wcdnn_hlo_matches_rust_mlp() {
+    // The PJRT-executed WC-DNN artifact and the pure-rust forward must
+    // agree — they are two implementations of one network.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::load(&dir).unwrap();
+    let exe = rt.executable("wcdnn").unwrap();
+    let weights = dsd::awc::AwcWeights::builtin();
+    for (i, feats) in [
+        [0.4f32, 0.86, 10.0, 48.0, 4.0],
+        [1.2, 0.66, 30.0, 85.0, 2.0],
+        [0.1, 0.78, 60.0, 55.0, 6.0],
+    ]
+    .iter()
+    .enumerate()
+    {
+        let out = exe
+            .call(&[dsd::runtime::exec::Tensor::vec_f32(feats.to_vec())])
+            .unwrap();
+        let hlo_pred = out[0].as_f32().unwrap()[0] as f64;
+        let rust_pred = weights.predict(&feats.map(|x| x as f64));
+        assert!(
+            (hlo_pred - rust_pred).abs() < 1e-3,
+            "case {i}: hlo {hlo_pred} vs rust {rust_pred}"
+        );
+    }
+}
+
+#[test]
+fn awc_window_on_real_path_runs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let co = Coordinator::new(
+        &dir,
+        ServeConfig {
+            n_drafters: 2,
+            n_verifiers: 1,
+            rtt_ms: 5.0,
+            window: ServeWindow::Awc,
+            max_new_tokens: 16,
+        },
+    )
+    .unwrap();
+    let reqs = vec![ServeRequest {
+        id: 0,
+        prompt: prompt().to_vec(),
+        max_new_tokens: 16,
+    }];
+    let (rs, stats) = co.serve(reqs).unwrap();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(rs[0].output.len(), 16);
+}

@@ -1,0 +1,168 @@
+//! Integration tests across config → topology → simulator → analyzer.
+
+use dsd::config::{BatchingKind, RoutingKind, SimConfig, WindowKind};
+use dsd::experiments::common::{paper_config, Scale};
+use dsd::sim::Simulator;
+use dsd::util::prop::{run_prop, Gen};
+
+#[test]
+fn yaml_to_report_pipeline() {
+    let yaml = "\
+seed: 11
+cluster:
+  targets:
+    - count: 2
+      gpu: a100
+      tp: 4
+      model: llama2-70b
+  drafters:
+    - count: 24
+      gpu: a40
+      model: llama2-7b
+network:
+  rtt_ms: 10
+  jitter_ms: 0.5
+policies:
+  routing: jsq
+  batching: lab
+  window: static
+  static_gamma: 4
+workload:
+  dataset: gsm8k
+  requests: 60
+  rate_per_s: 15
+";
+    let cfg = SimConfig::from_yaml(yaml).unwrap();
+    let report = Simulator::try_new(cfg).unwrap().run();
+    assert_eq!(report.system.completed, 60);
+    let j = report.to_json();
+    // Full JSON report round-trips.
+    let text = j.to_string_pretty();
+    let parsed = dsd::util::json::Json::parse(&text).unwrap();
+    assert_eq!(
+        parsed.path(&["system", "completed"]).unwrap().as_u64(),
+        Some(60)
+    );
+}
+
+#[test]
+fn trace_driven_equals_in_memory_trace() {
+    // Writing a trace to disk and replaying it must give the same report
+    // as handing the simulator the same trace in memory.
+    let ds = dsd::trace::dataset_by_name("humaneval").unwrap();
+    let trace = ds.generate(40, 12.0, 16, 99);
+    let dir = std::env::temp_dir().join("dsd_it_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    dsd::trace::io::write_jsonl(&trace, &path).unwrap();
+
+    let base = SimConfig::builder()
+        .seed(5)
+        .targets(2)
+        .drafters(16)
+        .requests(40)
+        .build();
+
+    let mut cfg_file = base.clone();
+    cfg_file.workload.trace_path = Some(path.to_str().unwrap().to_string());
+    let rep_file = Simulator::try_new(cfg_file).unwrap().run();
+
+    let rep_mem = Simulator::try_new(base).unwrap().with_trace(trace).run();
+
+    assert_eq!(rep_file.system.completed, rep_mem.system.completed);
+    assert!((rep_file.mean_ttft() - rep_mem.mean_ttft()).abs() < 1e-9);
+    assert!((rep_file.mean_tpot() - rep_mem.mean_tpot()).abs() < 1e-9);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn paper_cluster_all_policy_combinations_complete() {
+    for routing in [RoutingKind::Random, RoutingKind::RoundRobin, RoutingKind::Jsq] {
+        for batching in [BatchingKind::Fifo, BatchingKind::Lab] {
+            for window in [
+                WindowKind::Static(4),
+                WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 },
+                WindowKind::Awc { weights_path: None },
+                WindowKind::FusedOnly,
+            ] {
+                let cfg = paper_config(
+                    "gsm8k", 120, 10.0, routing, batching, window.clone(), Scale(0.05), 3,
+                );
+                let n = cfg.workload.requests;
+                let rep = Simulator::new(cfg).run();
+                assert_eq!(
+                    rep.system.completed, n,
+                    "stall under {routing:?}/{batching:?}/{window:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_simulation_invariants_hold_across_random_configs() {
+    run_prop("random configs complete sanely", 25, |g: &mut Gen| {
+        let targets = g.usize_in(1, 4);
+        let drafters = g.usize_in(4, 40);
+        let requests = g.usize_in(8, 40);
+        let rtt = g.f64_in(0.0, 80.0);
+        let dataset = *g.pick(&["gsm8k", "cnndm", "humaneval"]);
+        let window = match g.usize_in(0, 3) {
+            0 => WindowKind::Static(g.usize_in(1, 8) as u32),
+            1 => WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 },
+            2 => WindowKind::Awc { weights_path: None },
+            _ => WindowKind::FusedOnly,
+        };
+        let cfg = SimConfig::builder()
+            .seed(g.u64_in(0, u64::MAX / 2))
+            .targets(targets)
+            .drafters(drafters)
+            .requests(requests)
+            .rate_per_s(g.f64_in(2.0, 30.0))
+            .rtt_ms(rtt)
+            .dataset(dataset)
+            .window(window)
+            .build();
+        let rep = Simulator::new(cfg).run();
+        assert_eq!(rep.system.completed, requests, "all requests complete");
+        for r in &rep.requests {
+            assert!(r.ttft_ms > 0.0 && r.ttft_ms.is_finite());
+            assert!(r.e2e_ms >= r.ttft_ms - 1e-9);
+            assert!(r.tpot_ms >= 0.0);
+        }
+        assert!(rep.system.target_utilization >= 0.0);
+        assert!(rep.system.target_utilization <= 1.0 + 1e-9);
+        assert!(rep.system.events_processed > 0);
+    });
+}
+
+#[test]
+fn deterministic_across_identical_runs_full_stack() {
+    let mk = || {
+        paper_config(
+            "cnndm",
+            200,
+            30.0,
+            RoutingKind::Jsq,
+            BatchingKind::Lab,
+            WindowKind::Awc { weights_path: None },
+            Scale(0.1),
+            7,
+        )
+    };
+    let a = Simulator::new(mk()).run();
+    let b = Simulator::new(mk()).run();
+    assert_eq!(a.system.events_processed, b.system.events_processed);
+    // Everything except the wall-clock accounting field must be
+    // bit-identical.
+    let strip = |r: &dsd::metrics::SimReport| {
+        let mut j = r.to_json();
+        if let dsd::util::json::Json::Obj(ref mut pairs) = j {
+            if let Some(sys) = pairs.iter_mut().find(|(k, _)| k == "system") {
+                sys.1.set("wall_ms", dsd::util::json::Json::Null);
+            }
+        }
+        j.to_string_compact()
+    };
+    assert_eq!(strip(&a), strip(&b));
+}
