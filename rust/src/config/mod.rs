@@ -6,7 +6,8 @@ pub mod schema;
 pub mod topology;
 
 pub use schema::{
-    parse_batching, parse_routing, parse_window, BatchKnobs, BatchingKind, NetworkConfig,
-    PoolSpec, RoutingKind, SimConfig, SimConfigBuilder, WindowKind, WorkloadConfig,
+    parse_batching, parse_routing, parse_window, BatchKnobs, BatchingKind, LinkOverride,
+    NetworkConfig, PoolSpec, RoutingKind, SimConfig, SimConfigBuilder, WindowKind,
+    WorkloadConfig,
 };
-pub use topology::Topology;
+pub use topology::{LinkSpec, Topology};

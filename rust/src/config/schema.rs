@@ -46,6 +46,28 @@ pub enum WindowKind {
     FusedOnly,
 }
 
+/// Per-pool network link override. Drafter pools may sit behind very
+/// different access networks (fiber-attached edge racks vs cellular
+/// devices); any field left `None` inherits the global [`NetworkConfig`].
+/// Overrides on target pools are accepted but unused: targets share the
+/// cloud fabric, links are modelled drafter-side.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkOverride {
+    /// Round-trip time to the cloud, ms.
+    pub rtt_ms: Option<f64>,
+    /// Jitter std-dev, ms.
+    pub jitter_ms: Option<f64>,
+    /// Link bandwidth, Mbit/s (serialization delay of shipped payloads).
+    pub bandwidth_mbps: Option<f64>,
+}
+
+impl LinkOverride {
+    /// Whether every field is unset.
+    pub fn is_empty(&self) -> bool {
+        self.rtt_ms.is_none() && self.jitter_ms.is_none() && self.bandwidth_mbps.is_none()
+    }
+}
+
 /// One homogeneous slice of a device pool.
 #[derive(Clone, Debug)]
 pub struct PoolSpec {
@@ -57,16 +79,21 @@ pub struct PoolSpec {
     pub tp: u32,
     /// Hosted model.
     pub model: &'static ModelSpec,
+    /// Optional per-pool link override (heterogeneous edge networks).
+    pub link: Option<LinkOverride>,
 }
 
 /// Edge–cloud network link model: per-direction delay is
-/// `rtt/2 + |N(0, jitter)|`.
+/// `rtt/2 + |N(0, jitter)| + payload_bits / bandwidth`.
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkConfig {
     /// Round-trip time, ms.
     pub rtt_ms: f64,
     /// Jitter std-dev, ms.
     pub jitter_ms: f64,
+    /// Link bandwidth, Mbit/s. Non-finite (the default) disables the
+    /// serialization-delay term, matching the pre-bandwidth model.
+    pub bandwidth_mbps: f64,
 }
 
 /// Workload source.
@@ -152,7 +179,9 @@ impl SimConfig {
         Self::from_yaml(&text)
     }
 
-    fn from_json(doc: &Json) -> Result<SimConfig, String> {
+    /// Parse from an already-decoded document (the sweep grid embeds a
+    /// `base:` section with this schema).
+    pub fn from_json(doc: &Json) -> Result<SimConfig, String> {
         let mut b = SimConfig::builder();
         if let Some(seed) = doc.get("seed").and_then(Json::as_u64) {
             b = b.seed(seed);
@@ -177,6 +206,9 @@ impl SimConfig {
             }
             if let Some(x) = net.get("jitter_ms").and_then(Json::as_f64) {
                 b.cfg.network.jitter_ms = x;
+            }
+            if let Some(x) = net.get("bandwidth_mbps").and_then(Json::as_f64) {
+                b.cfg.network.bandwidth_mbps = x;
             }
         }
         if let Some(p) = doc.get("policies") {
@@ -251,8 +283,28 @@ impl SimConfig {
         if self.n_drafters() == 0 && !matches!(self.window, WindowKind::FusedOnly) {
             return Err("config: drafters required unless window=fused".into());
         }
-        if self.network.rtt_ms < 0.0 || self.network.jitter_ms < 0.0 {
-            return Err("config: negative network parameters".into());
+        // rtt/jitter feed event times directly, so NaN/∞ must be caught
+        // here (NaN also slips through a plain `< 0.0` comparison).
+        let bad_delay = |x: f64| !x.is_finite() || x < 0.0;
+        if bad_delay(self.network.rtt_ms) || bad_delay(self.network.jitter_ms) {
+            return Err("config: rtt_ms/jitter_ms must be finite and non-negative".into());
+        }
+        if self.network.bandwidth_mbps <= 0.0 || self.network.bandwidth_mbps.is_nan() {
+            return Err("config: bandwidth_mbps must be positive".into());
+        }
+        for p in self.target_pools.iter().chain(&self.drafter_pools) {
+            if let Some(l) = &p.link {
+                if l.rtt_ms.is_some_and(bad_delay) || l.jitter_ms.is_some_and(bad_delay) {
+                    return Err(
+                        "config: per-pool link rtt_ms/jitter_ms must be finite and \
+                         non-negative"
+                            .into(),
+                    );
+                }
+                if l.bandwidth_mbps.is_some_and(|x| x <= 0.0 || x.is_nan()) {
+                    return Err("config: per-pool bandwidth_mbps must be positive".into());
+                }
+            }
         }
         if self.workload.requests == 0 && self.workload.trace_path.is_none() {
             return Err("config: empty workload".into());
@@ -275,6 +327,11 @@ fn parse_pool(
         .get("model")
         .and_then(Json::as_str)
         .unwrap_or(default_model);
+    let link = LinkOverride {
+        rtt_ms: p.get("rtt_ms").and_then(Json::as_f64),
+        jitter_ms: p.get("jitter_ms").and_then(Json::as_f64),
+        bandwidth_mbps: p.get("bandwidth_mbps").and_then(Json::as_f64),
+    };
     Ok(PoolSpec {
         count: p
             .get("count")
@@ -284,6 +341,7 @@ fn parse_pool(
         tp: p.get("tp").and_then(Json::as_u64).unwrap_or(default_tp as u64) as u32,
         model: model_by_name(model_name)
             .ok_or_else(|| format!("unknown model '{model_name}'"))?,
+        link: (!link.is_empty()).then_some(link),
     })
 }
 
@@ -341,16 +399,19 @@ impl Default for SimConfigBuilder {
                     gpu: &A100,
                     tp: 4,
                     model: &LLAMA2_70B,
+                    link: None,
                 }],
                 drafter_pools: vec![PoolSpec {
                     count: 100,
                     gpu: &A40,
                     tp: 1,
                     model: &LLAMA2_7B,
+                    link: None,
                 }],
                 network: NetworkConfig {
                     rtt_ms: 10.0,
                     jitter_ms: 0.5,
+                    bandwidth_mbps: f64::INFINITY,
                 },
                 routing: RoutingKind::Jsq,
                 batching: BatchingKind::Lab,
@@ -392,6 +453,11 @@ impl SimConfigBuilder {
     /// Set network jitter.
     pub fn jitter_ms(mut self, j: f64) -> Self {
         self.cfg.network.jitter_ms = j;
+        self
+    }
+    /// Set the edge–cloud link bandwidth (Mbit/s).
+    pub fn bandwidth_mbps(mut self, b: f64) -> Self {
+        self.cfg.network.bandwidth_mbps = b;
         self
     }
     /// Set the workload dataset profile.
@@ -516,9 +582,74 @@ workload:
     }
 
     #[test]
+    fn non_finite_network_parameters_rejected() {
+        // `str::parse::<f64>` accepts "nan"/"inf", so the YAML path can
+        // produce them; they would poison event times downstream.
+        assert!(SimConfig::from_yaml("network:\n  rtt_ms: nan\n").is_err());
+        assert!(SimConfig::from_yaml("network:\n  jitter_ms: inf\n").is_err());
+        let y = "\
+cluster:
+  targets:
+    - count: 1
+  drafters:
+    - count: 1
+      rtt_ms: nan
+";
+        assert!(SimConfig::from_yaml(y).unwrap_err().contains("link"));
+    }
+
+    #[test]
     fn unknown_hardware_rejected() {
         let y = "cluster:\n  targets:\n    - count: 1\n      gpu: tpu-v5\n";
         assert!(SimConfig::from_yaml(y).unwrap_err().contains("unknown gpu"));
+    }
+
+    #[test]
+    fn per_pool_link_overrides_parse() {
+        let y = "\
+cluster:
+  targets:
+    - count: 1
+      gpu: a100
+      tp: 4
+      model: llama2-70b
+  drafters:
+    - count: 2
+      gpu: a40
+      model: llama2-7b
+      rtt_ms: 80
+      jitter_ms: 6
+      bandwidth_mbps: 20
+    - count: 3
+      gpu: v100
+      model: qwen-7b
+network:
+  rtt_ms: 10
+  jitter_ms: 0.5
+  bandwidth_mbps: 1000
+";
+        let c = SimConfig::from_yaml(y).unwrap();
+        assert_eq!(c.network.bandwidth_mbps, 1000.0);
+        let l = c.drafter_pools[0].link.expect("override present");
+        assert_eq!(l.rtt_ms, Some(80.0));
+        assert_eq!(l.jitter_ms, Some(6.0));
+        assert_eq!(l.bandwidth_mbps, Some(20.0));
+        assert!(c.drafter_pools[1].link.is_none(), "no keys -> no override");
+    }
+
+    #[test]
+    fn bad_link_overrides_rejected() {
+        let y = "\
+cluster:
+  targets:
+    - count: 1
+  drafters:
+    - count: 1
+      rtt_ms: -3
+";
+        assert!(SimConfig::from_yaml(y).unwrap_err().contains("link"));
+        let y2 = "network:\n  bandwidth_mbps: 0\n";
+        assert!(SimConfig::from_yaml(y2).unwrap_err().contains("bandwidth"));
     }
 
     #[test]

@@ -1,9 +1,28 @@
 //! The `auto_topology` pass (paper §3.1): expand pool slices from the
 //! configuration into explicit drafter and target device lists with fully
-//! defined network connections.
+//! defined network connections — including per-drafter link parameters
+//! when drafter pools carry [`LinkOverride`]s (heterogeneous edge
+//! networks: fiber racks next to cellular devices in one deployment).
 
-use super::schema::SimConfig;
+use super::schema::{LinkOverride, NetworkConfig, SimConfig};
 use crate::cluster::{DeviceInstance, DevicePool, Role};
+
+/// Fully resolved edge→cloud link parameters for one drafter — the same
+/// shape (and serialization semantics) as the global [`NetworkConfig`],
+/// just resolved per pool.
+pub type LinkSpec = NetworkConfig;
+
+/// Resolve an optional per-pool override against the global network
+/// config.
+fn resolve_link(net: &NetworkConfig, ov: Option<&LinkOverride>) -> LinkSpec {
+    LinkSpec {
+        rtt_ms: ov.and_then(|o| o.rtt_ms).unwrap_or(net.rtt_ms),
+        jitter_ms: ov.and_then(|o| o.jitter_ms).unwrap_or(net.jitter_ms),
+        bandwidth_mbps: ov
+            .and_then(|o| o.bandwidth_mbps)
+            .unwrap_or(net.bandwidth_mbps),
+    }
+}
 
 /// Fully expanded deployment topology.
 #[derive(Clone, Debug)]
@@ -12,11 +31,12 @@ pub struct Topology {
     pub targets: DevicePool,
     /// Edge pool (drafters), ids 0..n_drafters.
     pub drafters: DevicePool,
-    /// Edge→cloud RTT, ms (all links share the config's RTT/jitter model;
-    /// per-link heterogeneity enters through jitter draws at send time).
-    pub rtt_ms: f64,
-    /// Jitter std-dev, ms.
-    pub jitter_ms: f64,
+    /// Per-drafter resolved links, parallel to `drafters.devices`.
+    pub links: Vec<LinkSpec>,
+    /// Global network defaults: the fallback for synthetic drafter ids
+    /// (fused-only deployments with zero drafters) and the cold-start
+    /// RTT prior for window-policy features.
+    default_link: LinkSpec,
 }
 
 impl Topology {
@@ -29,9 +49,12 @@ impl Topology {
             }
         }
         let mut drafters = DevicePool::default();
+        let mut links = Vec::new();
         for p in &cfg.drafter_pools {
+            let link = resolve_link(&cfg.network, p.link.as_ref());
             for _ in 0..p.count {
                 drafters.add(Role::Drafter, p.gpu, p.tp, p.model);
+                links.push(link);
             }
         }
         targets.validate()?;
@@ -39,8 +62,8 @@ impl Topology {
         Ok(Topology {
             targets,
             drafters,
-            rtt_ms: cfg.network.rtt_ms,
-            jitter_ms: cfg.network.jitter_ms,
+            links,
+            default_link: cfg.network,
         })
     }
 
@@ -52,6 +75,12 @@ impl Topology {
     /// Drafter device by id.
     pub fn drafter(&self, id: usize) -> &DeviceInstance {
         &self.drafters.devices[id]
+    }
+
+    /// Resolved link for a drafter id (global defaults when the id is
+    /// synthetic, e.g. fused-only runs with an empty edge pool).
+    pub fn link(&self, drafter_id: usize) -> &LinkSpec {
+        self.links.get(drafter_id).unwrap_or(&self.default_link)
     }
 }
 
@@ -101,5 +130,55 @@ cluster:
 ";
         let cfg = SimConfig::from_yaml(y).unwrap();
         assert!(Topology::expand(&cfg).is_err());
+    }
+
+    #[test]
+    fn per_pool_links_expand_in_order() {
+        let y = "\
+cluster:
+  targets:
+    - count: 1
+      gpu: a100
+      tp: 4
+      model: llama2-70b
+  drafters:
+    - count: 2
+      gpu: a40
+      model: llama2-7b
+      rtt_ms: 80
+      bandwidth_mbps: 20
+    - count: 3
+      gpu: v100
+      model: qwen-7b
+network:
+  rtt_ms: 10
+  jitter_ms: 0.5
+";
+        let cfg = SimConfig::from_yaml(y).unwrap();
+        let topo = Topology::expand(&cfg).unwrap();
+        assert_eq!(topo.links.len(), 5);
+        // Overridden slice: RTT and bandwidth from the pool, jitter
+        // inherited from the global network section.
+        assert_eq!(topo.link(0).rtt_ms, 80.0);
+        assert_eq!(topo.link(1).bandwidth_mbps, 20.0);
+        assert_eq!(topo.link(0).jitter_ms, 0.5);
+        // Plain slice inherits everything.
+        assert_eq!(topo.link(2).rtt_ms, 10.0);
+        assert!(topo.link(4).bandwidth_mbps.is_infinite());
+        // Out-of-range id falls back to the global defaults.
+        assert_eq!(topo.link(99).rtt_ms, 10.0);
+    }
+
+    #[test]
+    fn fused_only_zero_drafters_has_default_link() {
+        use crate::config::WindowKind;
+        let cfg = SimConfig::builder()
+            .drafters(0)
+            .window(WindowKind::FusedOnly)
+            .rtt_ms(25.0)
+            .build();
+        let topo = Topology::expand(&cfg).unwrap();
+        assert!(topo.links.is_empty());
+        assert_eq!(topo.link(0).rtt_ms, 25.0);
     }
 }

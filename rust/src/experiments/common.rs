@@ -35,9 +35,9 @@ pub fn cloud_pool_20() -> Vec<PoolSpec> {
     use crate::cluster::gpu::{A100, A6000, H100};
     use crate::cluster::model::{LLAMA2_70B, LLAMA3_70B, QWEN_72B};
     vec![
-        PoolSpec { count: 8, gpu: &A100, tp: 4, model: &LLAMA2_70B },
-        PoolSpec { count: 6, gpu: &H100, tp: 4, model: &QWEN_72B },
-        PoolSpec { count: 6, gpu: &A6000, tp: 4, model: &LLAMA3_70B },
+        PoolSpec { count: 8, gpu: &A100, tp: 4, model: &LLAMA2_70B, link: None },
+        PoolSpec { count: 6, gpu: &H100, tp: 4, model: &QWEN_72B, link: None },
+        PoolSpec { count: 6, gpu: &A6000, tp: 4, model: &LLAMA3_70B, link: None },
     ]
 }
 
@@ -49,12 +49,12 @@ pub fn edge_pool(n: usize) -> Vec<PoolSpec> {
     let per = (n / 6).max(1);
     let rem = n.saturating_sub(per * 5);
     vec![
-        PoolSpec { count: per, gpu: &A40, tp: 1, model: &LLAMA2_7B },
-        PoolSpec { count: per, gpu: &A40, tp: 1, model: &QWEN_7B },
-        PoolSpec { count: per, gpu: &A40, tp: 1, model: &LLAMA31_8B },
-        PoolSpec { count: per, gpu: &V100, tp: 1, model: &LLAMA2_7B },
-        PoolSpec { count: per, gpu: &V100, tp: 1, model: &QWEN_7B },
-        PoolSpec { count: rem, gpu: &V100, tp: 1, model: &LLAMA31_8B },
+        PoolSpec { count: per, gpu: &A40, tp: 1, model: &LLAMA2_7B, link: None },
+        PoolSpec { count: per, gpu: &A40, tp: 1, model: &QWEN_7B, link: None },
+        PoolSpec { count: per, gpu: &A40, tp: 1, model: &LLAMA31_8B, link: None },
+        PoolSpec { count: per, gpu: &V100, tp: 1, model: &LLAMA2_7B, link: None },
+        PoolSpec { count: per, gpu: &V100, tp: 1, model: &QWEN_7B, link: None },
+        PoolSpec { count: rem, gpu: &V100, tp: 1, model: &LLAMA31_8B, link: None },
     ]
 }
 

@@ -4,9 +4,16 @@
 //! concurrently with cloud verification and each verify covers several
 //! tokens), degrades linearly as every speculation round pays the link;
 //! fused is flat (work stays local). The curves cross around 50–60 ms.
+//!
+//! The RTT × mode × seed grid runs on the parallel sweep runner
+//! ([`crate::sweep`]); cell ordering is deterministic, so the figure is
+//! bit-identical across thread counts.
 
-use super::common::{mean_of, paper_config, run_seeds, save_rows, Row, Scale};
+use super::common::{paper_config, save_rows, Row, Scale};
 use crate::config::{BatchingKind, RoutingKind, WindowKind};
+use crate::sweep::grid::window_label;
+use crate::sweep::{default_threads, run_grid, CellResult, SweepGrid};
+use crate::util::stats::mean;
 use crate::util::table::{fnum, Table};
 
 /// RTT sweep values, ms.
@@ -17,39 +24,58 @@ pub fn rtt_points() -> Vec<f64> {
 /// Series produced per mode: (rtt, throughput, ttft, tpot).
 pub type Series = Vec<(f64, f64, f64, f64)>;
 
-/// Run both modes over the sweep.
+/// Run both modes over the sweep (cells execute in parallel on the
+/// sweep runner; results are selected back by their axis labels).
 pub fn sweep(scale: Scale, seeds: &[u64]) -> (Series, Series) {
-    let run_mode = |window: WindowKind| -> Series {
+    let mut base = paper_config(
+        "gsm8k",
+        600,
+        0.0,
+        RoutingKind::Jsq,
+        BatchingKind::Lab,
+        WindowKind::Static(4),
+        scale,
+        seeds[0],
+    );
+    // Controlled operating point for this figure: an offered load
+    // between the fused and distributed capacities, so the trade-off
+    // (not pure saturation) is what's measured.
+    base.workload.rate_per_s = 45.0;
+    let mut grid = SweepGrid::new(base);
+    grid.windows = vec![WindowKind::Static(4), WindowKind::FusedOnly];
+    grid.rtt_ms = rtt_points();
+    grid.seeds = seeds.to_vec();
+    let cells = run_grid(&grid, default_threads().min(8)).expect("fig6 grid");
+    // Select cells by their axis labels (robust to any change in the
+    // grid's expansion order) and average the seed replicas.
+    let series = |wname: &str| -> Series {
         rtt_points()
             .into_iter()
             .map(|rtt| {
-                let mut cfg = paper_config(
-                    "gsm8k",
-                    600,
-                    rtt,
-                    RoutingKind::Jsq,
-                    BatchingKind::Lab,
-                    window.clone(),
-                    scale,
-                    seeds[0],
-                );
-                // Controlled operating point for this figure: an offered
-                // load between the fused and distributed capacities, so
-                // the trade-off (not pure saturation) is what's measured.
-                cfg.workload.rate_per_s = 45.0;
-                let reps = run_seeds(&cfg, seeds);
+                let rtt_s = format!("{rtt}");
+                let chunk: Vec<&CellResult> = cells
+                    .iter()
+                    .filter(|c| {
+                        c.label("window") == Some(wname) && c.label("rtt_ms") == Some(&rtt_s)
+                    })
+                    .collect();
+                assert_eq!(chunk.len(), seeds.len(), "fig6: missing cells for {wname}@{rtt_s}");
+                let avg = |f: &dyn Fn(&CellResult) -> f64| {
+                    mean(&chunk.iter().map(|c| f(c)).collect::<Vec<_>>())
+                };
                 (
                     rtt,
-                    mean_of(&reps, |r| r.system.throughput_rps),
-                    mean_of(&reps, |r| r.mean_ttft()),
-                    mean_of(&reps, |r| r.mean_tpot()),
+                    avg(&|c| c.metrics().throughput_rps),
+                    avg(&|c| c.metrics().mean_ttft_ms),
+                    avg(&|c| c.metrics().mean_tpot_ms),
                 )
             })
             .collect()
     };
-    let distributed = run_mode(WindowKind::Static(4));
-    let fused = run_mode(WindowKind::FusedOnly);
-    (distributed, fused)
+    (
+        series(&window_label(&WindowKind::Static(4))),
+        series(&window_label(&WindowKind::FusedOnly)),
+    )
 }
 
 /// The RTT (midpoint) where distributed TPOT first exceeds fused TPOT,

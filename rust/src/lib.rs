@@ -46,5 +46,6 @@ pub mod policies;
 pub mod runtime;
 pub mod sim;
 pub mod specdec;
+pub mod sweep;
 pub mod trace;
 pub mod util;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   simulate       run DSD-Sim on a YAML deployment config
+//!   sweep          expand a scenario grid and run every cell in parallel
 //!   reproduce      regenerate a paper table/figure (fig4..fig10, table2, all)
 //!   sweep-dataset  generate the AWC training dataset (paper §4.2)
 //!   trace-gen      emit a synthetic workload trace (Table 1 schema)
@@ -19,11 +20,14 @@ use dsd::util::cli::Command;
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = args.split_first() else {
-        eprintln!("usage: dsd <simulate|reproduce|sweep-dataset|trace-gen|serve|awc-eval> [options]");
+        eprintln!(
+            "usage: dsd <simulate|sweep|reproduce|sweep-dataset|trace-gen|serve|awc-eval> [options]"
+        );
         std::process::exit(2);
     };
     let result = match cmd.as_str() {
         "simulate" => cmd_simulate(rest),
+        "sweep" => cmd_sweep(rest),
         "reproduce" => cmd_reproduce(rest),
         "sweep-dataset" => cmd_sweep_dataset(rest),
         "trace-gen" => cmd_trace_gen(rest),
@@ -55,6 +59,51 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         println!("{}", report.to_json().to_string_pretty());
     } else {
         println!("{}", report.summary());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("sweep", "expand a scenario grid and run every cell in parallel")
+        .opt("grid", "sweep grid YAML file (base config + axes)", None)
+        .opt("threads", "worker threads (0 = one per core)", Some("0"))
+        .opt("out", "also write the JSON summary to this path", None)
+        .flag("table", "print an ASCII table instead of JSON")
+        .flag("streaming", "force streaming metrics regardless of the grid file");
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let mut grid = dsd::sweep::SweepGrid::from_yaml_file(a.require("grid").map_err(|e| e.to_string())?)?;
+    if a.flag("streaming") {
+        grid.streaming = true;
+    }
+    let mut threads = a.get_usize("threads").map_err(|e| e.to_string())?.unwrap();
+    if threads == 0 {
+        threads = dsd::sweep::default_threads();
+    }
+    eprintln!(
+        "[sweep] {} cells on {} threads{} ...",
+        grid.n_cells(),
+        threads.clamp(1, grid.n_cells().max(1)),
+        if grid.streaming { " (streaming)" } else { "" }
+    );
+    let cells = dsd::sweep::run_grid(&grid, threads)?;
+    let summary = dsd::sweep::SweepSummary::new(cells, grid.streaming);
+    let json = summary.to_json().to_string_pretty();
+    if let Some(path) = a.get("out") {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        std::fs::write(path, format!("{json}\n")).map_err(|e| e.to_string())?;
+        eprintln!("[sweep] wrote {path}");
+    }
+    if a.flag("table") {
+        println!("{}", summary.render_table());
+    } else {
+        println!("{json}");
+    }
+    if summary.n_failed() > 0 {
+        return Err(format!("{} of {} cells failed", summary.n_failed(), summary.cells.len()));
     }
     Ok(())
 }

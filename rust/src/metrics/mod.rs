@@ -4,5 +4,10 @@
 //! evaluation, and structured JSON emission.
 
 pub mod report;
+pub mod sink;
 
 pub use report::{RequestMetrics, SimReport, SloSpec, SystemMetrics};
+pub use sink::{
+    FullSink, MetricSummary, MetricsSink, StreamingConfig, StreamingReport, StreamingSink,
+    StreamingSummary,
+};

@@ -1,0 +1,355 @@
+//! Metric sinks — where completed-request records flow during a run.
+//!
+//! The simulator pushes one [`RequestMetrics`] per completed request into
+//! a [`MetricsSink`]. Two implementations exist:
+//!
+//! * [`FullSink`] (the default behind [`crate::sim::Simulator::run`])
+//!   retains every record, giving the classic [`super::SimReport`] with
+//!   exact percentiles and the per-request JSON dump.
+//! * [`StreamingSink`] folds each record into Welford [`Accumulator`]s
+//!   and fixed-bucket [`Histogram`]s at completion time and drops it.
+//!   Memory is O(buckets), independent of request count, so a single
+//!   cell can simulate millions of requests; percentiles are accurate to
+//!   one histogram bucket width.
+
+use super::report::{RequestMetrics, SystemMetrics};
+use crate::util::json::Json;
+use crate::util::stats::{Accumulator, Histogram};
+
+/// Destination for completed-request records.
+pub trait MetricsSink: Send {
+    /// Record one completed request.
+    fn record(&mut self, m: &RequestMetrics);
+
+    /// Whether the simulator should retain per-request γ-decision
+    /// vectors. The full sink reports them; the streaming sink returns
+    /// `false` so live-request state stays bounded too.
+    fn keep_gamma_history(&self) -> bool {
+        true
+    }
+}
+
+/// Retains every per-request record (exact statistics, O(requests) memory).
+#[derive(Default)]
+pub struct FullSink {
+    requests: Vec<RequestMetrics>,
+}
+
+impl FullSink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        FullSink::default()
+    }
+
+    /// Consume the sink, yielding records in completion order.
+    pub fn into_requests(self) -> Vec<RequestMetrics> {
+        self.requests
+    }
+}
+
+impl MetricsSink for FullSink {
+    fn record(&mut self, m: &RequestMetrics) {
+        self.requests.push(m.clone());
+    }
+}
+
+/// Histogram geometry for the streaming sink.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamingConfig {
+    /// Upper edge of the TTFT histogram, ms.
+    pub ttft_hi_ms: f64,
+    /// Upper edge of the TPOT histogram, ms.
+    pub tpot_hi_ms: f64,
+    /// Upper edge of the end-to-end latency histogram, ms.
+    pub e2e_hi_ms: f64,
+    /// Buckets per histogram (resolution = hi / buckets).
+    pub buckets: usize,
+}
+
+impl Default for StreamingConfig {
+    fn default() -> Self {
+        // Generous edges: latencies beyond these land in the overflow
+        // counter (reported, and clamped by the percentile estimator).
+        StreamingConfig {
+            ttft_hi_ms: 120_000.0,
+            tpot_hi_ms: 2_000.0,
+            e2e_hi_ms: 1_200_000.0,
+            buckets: 8192,
+        }
+    }
+}
+
+/// Constant-memory sink: moment accumulators + histogram percentiles.
+pub struct StreamingSink {
+    ttft: Accumulator,
+    tpot: Accumulator,
+    e2e: Accumulator,
+    /// Finite (speculating) acceptance ratios only; fused NaNs skipped.
+    acceptance: Accumulator,
+    ttft_hist: Histogram,
+    tpot_hist: Histogram,
+    e2e_hist: Histogram,
+    output_tokens: u64,
+    completed: u64,
+}
+
+impl Default for StreamingSink {
+    fn default() -> Self {
+        Self::new(StreamingConfig::default())
+    }
+}
+
+impl StreamingSink {
+    /// Sink with the given histogram geometry.
+    pub fn new(cfg: StreamingConfig) -> Self {
+        StreamingSink {
+            ttft: Accumulator::new(),
+            tpot: Accumulator::new(),
+            e2e: Accumulator::new(),
+            acceptance: Accumulator::new(),
+            ttft_hist: Histogram::new(0.0, cfg.ttft_hi_ms, cfg.buckets),
+            tpot_hist: Histogram::new(0.0, cfg.tpot_hi_ms, cfg.buckets),
+            e2e_hist: Histogram::new(0.0, cfg.e2e_hi_ms, cfg.buckets),
+            output_tokens: 0,
+            completed: 0,
+        }
+    }
+
+    /// Snapshot the folded statistics.
+    pub fn summary(&self) -> StreamingSummary {
+        StreamingSummary {
+            completed: self.completed,
+            output_tokens: self.output_tokens,
+            ttft_ms: MetricSummary::from_parts(&self.ttft, &self.ttft_hist),
+            tpot_ms: MetricSummary::from_parts(&self.tpot, &self.tpot_hist),
+            e2e_ms: MetricSummary::from_parts(&self.e2e, &self.e2e_hist),
+            mean_acceptance: if self.acceptance.count() == 0 {
+                f64::NAN
+            } else {
+                self.acceptance.mean()
+            },
+        }
+    }
+}
+
+impl MetricsSink for StreamingSink {
+    fn record(&mut self, m: &RequestMetrics) {
+        self.ttft.push(m.ttft_ms);
+        self.tpot.push(m.tpot_ms);
+        self.e2e.push(m.e2e_ms);
+        self.ttft_hist.push(m.ttft_ms);
+        self.tpot_hist.push(m.tpot_ms);
+        self.e2e_hist.push(m.e2e_ms);
+        if m.acceptance.is_finite() {
+            self.acceptance.push(m.acceptance);
+        }
+        self.output_tokens += m.output_tokens as u64;
+        self.completed += 1;
+    }
+
+    fn keep_gamma_history(&self) -> bool {
+        false
+    }
+}
+
+/// Folded distribution of one latency metric.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricSummary {
+    /// Sample mean, ms (exact — Welford, not histogram-derived).
+    pub mean: f64,
+    /// Population standard deviation, ms.
+    pub std: f64,
+    /// Smallest observation, ms.
+    pub min: f64,
+    /// Largest observation, ms.
+    pub max: f64,
+    /// Median estimate, ms (histogram, ± one bucket).
+    pub p50: f64,
+    /// 90th percentile estimate, ms.
+    pub p90: f64,
+    /// 99th percentile estimate, ms.
+    pub p99: f64,
+    /// Bucket width backing the percentile estimates, ms.
+    pub resolution: f64,
+    /// Observations beyond the histogram's upper edge.
+    pub overflow: u64,
+}
+
+impl MetricSummary {
+    fn from_parts(acc: &Accumulator, hist: &Histogram) -> MetricSummary {
+        MetricSummary {
+            mean: acc.mean(),
+            std: acc.std(),
+            min: acc.min(),
+            max: acc.max(),
+            p50: hist.percentile(50.0),
+            p90: hist.percentile(90.0),
+            p99: hist.percentile(99.0),
+            resolution: hist.bucket_width(),
+            overflow: hist.overflow(),
+        }
+    }
+
+    /// JSON encoding (insertion-ordered keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("mean", self.mean.into())
+            .with("std", self.std.into())
+            .with("min", self.min.into())
+            .with("max", self.max.into())
+            .with("p50", self.p50.into())
+            .with("p90", self.p90.into())
+            .with("p99", self.p99.into())
+            .with("resolution", self.resolution.into())
+            .with("overflow", self.overflow.into())
+    }
+}
+
+/// End-of-run snapshot from a [`StreamingSink`].
+#[derive(Clone, Copy, Debug)]
+pub struct StreamingSummary {
+    /// Completed requests.
+    pub completed: u64,
+    /// Output tokens across completed requests.
+    pub output_tokens: u64,
+    /// Time-to-first-token distribution.
+    pub ttft_ms: MetricSummary,
+    /// Time-per-output-token distribution.
+    pub tpot_ms: MetricSummary,
+    /// End-to-end latency distribution.
+    pub e2e_ms: MetricSummary,
+    /// Mean acceptance over speculating requests (NaN if none).
+    pub mean_acceptance: f64,
+}
+
+impl StreamingSummary {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("completed", self.completed.into())
+            .with("output_tokens", self.output_tokens.into())
+            .with("ttft_ms", self.ttft_ms.to_json())
+            .with("tpot_ms", self.tpot_ms.to_json())
+            .with("e2e_ms", self.e2e_ms.to_json())
+            .with("mean_acceptance", self.mean_acceptance.into())
+    }
+}
+
+/// Complete result of a streaming-mode run: folded per-request stats plus
+/// the usual system aggregates (which were always O(1) memory).
+#[derive(Clone, Debug)]
+pub struct StreamingReport {
+    /// Folded per-request statistics.
+    pub stream: StreamingSummary,
+    /// System-level aggregates. `throughput_rps` equals the naive
+    /// completions/duration ratio here: the interquartile steady-state
+    /// estimator needs the full completion-time sample, which a
+    /// streaming run does not retain.
+    pub system: SystemMetrics,
+}
+
+impl StreamingReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} tput={:.1} req/s ttft={:.0} ms (p99 {:.0}) tpot={:.1} ms (p99 {:.1}) acc={:.2}",
+            self.stream.completed,
+            self.system.throughput_rps,
+            self.stream.ttft_ms.mean,
+            self.stream.ttft_ms.p99,
+            self.stream.tpot_ms.mean,
+            self.stream.tpot_ms.p99,
+            self.stream.mean_acceptance,
+        )
+    }
+
+    /// Full structured JSON (wall-clock excluded so output is
+    /// bit-reproducible across runs).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with(
+                "system",
+                Json::obj()
+                    .with("throughput_rps", self.system.throughput_rps.into())
+                    .with("token_throughput", self.system.token_throughput.into())
+                    .with("target_utilization", self.system.target_utilization.into())
+                    .with("mean_queue_delay_ms", self.system.mean_queue_delay_ms.into())
+                    .with("mean_net_delay_ms", self.system.mean_net_delay_ms.into())
+                    .with("sim_duration_ms", self.system.sim_duration_ms.into())
+                    .with("completed", self.system.completed.into())
+                    .with("events_processed", self.system.events_processed.into()),
+            )
+            .with("stream", self.stream.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, ttft: f64, tpot: f64, acc: f64) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival_ms: 0.0,
+            ttft_ms: ttft,
+            tpot_ms: tpot,
+            e2e_ms: ttft + tpot * 10.0,
+            acceptance: acc,
+            target_id: 0,
+            drafter_id: 0,
+            output_tokens: 11,
+            gamma_decisions: Vec::new(),
+            fused_rounds: 0,
+        }
+    }
+
+    #[test]
+    fn full_sink_retains_records() {
+        let mut s = FullSink::new();
+        s.record(&req(0, 10.0, 1.0, 0.8));
+        s.record(&req(1, 20.0, 2.0, 0.8));
+        assert!(s.keep_gamma_history());
+        let rs = s.into_requests();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[1].id, 1);
+    }
+
+    #[test]
+    fn streaming_sink_folds_means_exactly() {
+        let mut s = StreamingSink::default();
+        for i in 0..100 {
+            s.record(&req(i, 100.0 + i as f64, 10.0, 0.8));
+        }
+        assert!(!s.keep_gamma_history());
+        let sum = s.summary();
+        assert_eq!(sum.completed, 100);
+        assert_eq!(sum.output_tokens, 1100);
+        assert!((sum.ttft_ms.mean - 149.5).abs() < 1e-9);
+        assert!((sum.tpot_ms.mean - 10.0).abs() < 1e-12);
+        assert!((sum.mean_acceptance - 0.8).abs() < 1e-12);
+        assert_eq!(sum.ttft_ms.min, 100.0);
+        assert_eq!(sum.ttft_ms.max, 199.0);
+        // p50 within one bucket of the exact median 149.5.
+        assert!((sum.ttft_ms.p50 - 149.5).abs() <= sum.ttft_ms.resolution + 1e-9);
+    }
+
+    #[test]
+    fn streaming_sink_skips_fused_nan_acceptance() {
+        let mut s = StreamingSink::default();
+        s.record(&req(0, 10.0, 1.0, f64::NAN));
+        s.record(&req(1, 10.0, 1.0, 0.6));
+        assert!((s.summary().mean_acceptance - 0.6).abs() < 1e-12);
+        let empty = StreamingSink::default();
+        assert!(empty.summary().mean_acceptance.is_nan());
+    }
+
+    #[test]
+    fn streaming_json_is_deterministic() {
+        let mut s = StreamingSink::default();
+        s.record(&req(0, 10.0, 1.0, 0.5));
+        let a = s.summary().to_json().to_string_compact();
+        let b = s.summary().to_json().to_string_compact();
+        assert_eq!(a, b);
+        assert!(a.contains("\"p99\""));
+    }
+}

@@ -166,7 +166,7 @@ mod tests {
     #[test]
     fn prop_batching_invariants() {
         run_prop("batching invariants", 300, |g: &mut Gen| {
-            let n = g.usize_in(1, 40);
+            let n = g.usize_in(1, 60);
             let q: Vec<QueuedRequest> = (0..n)
                 .map(|id| QueuedRequest {
                     id,
@@ -174,17 +174,30 @@ mod tests {
                     enqueued_ms: id as f64,
                 })
                 .collect();
-            let max_batch = g.usize_in(1, 16);
-            for policy in [&Fifo as &dyn BatchingPolicy, &Lab::default()] {
+            // Exercise capacities both below and above the queue length.
+            // LAB's `tolerance` is a preference-only knob today (it never
+            // filters admission — see Lab::form_batch); randomizing it
+            // pins that contract so a future tolerance-based admission
+            // change trips these invariants instead of shipping silently.
+            let max_batch = g.usize_in(1, 80);
+            let lab = Lab { tolerance: g.f64_in(0.0, 4.0) };
+            for policy in [&Fifo as &dyn BatchingPolicy, &lab, &Lab::default()] {
                 let batch = policy.form_batch(&q, max_batch);
                 assert!(!batch.is_empty(), "{}: starvation", policy.name());
-                assert!(batch.len() <= max_batch);
+                assert!(batch.len() <= max_batch, "{}: over capacity", policy.name());
                 assert_eq!(batch[0], 0, "{}: head-of-line skipped", policy.name());
                 let mut sorted = batch.clone();
                 sorted.sort_unstable();
                 sorted.dedup();
                 assert_eq!(sorted.len(), batch.len(), "duplicate indices");
                 assert!(sorted.iter().all(|&i| i < q.len()), "out of bounds");
+                // With spare capacity no policy may leave work idle.
+                assert_eq!(
+                    batch.len(),
+                    q.len().min(max_batch),
+                    "{}: under-filled batch",
+                    policy.name()
+                );
             }
         });
     }

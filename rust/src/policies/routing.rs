@@ -149,6 +149,61 @@ mod tests {
     }
 
     #[test]
+    fn prop_routing_invariants() {
+        use crate::util::prop::{run_prop, Gen};
+        run_prop("routing invariants", 300, |g: &mut Gen| {
+            let n = g.usize_in(1, 12);
+            // Non-contiguous ids (offset) so membership is a real check,
+            // not an accident of 0..n indexing.
+            let offset = g.usize_in(0, 5);
+            let ts: Vec<TargetSnapshot> = (0..n)
+                .map(|i| TargetSnapshot {
+                    id: offset + i,
+                    prefill_queue: g.usize_in(0, 20),
+                    active: g.usize_in(0, 20),
+                    recent_tpot_ms: g.f64_in(0.0, 100.0),
+                    busy: g.bool_with(0.5),
+                })
+                .collect();
+            let seed = g.u64_in(0, u64::MAX - 1);
+            let policies: Vec<Box<dyn RoutingPolicy>> = vec![
+                Box::new(Random),
+                Box::new(RoundRobin::new()),
+                Box::new(Jsq),
+            ];
+            for mut p in policies {
+                let mut rng = Pcg64::new(seed);
+                for _ in 0..3 {
+                    let picked = p.route(&ts, &mut rng);
+                    // Returned id must be a *member* target id.
+                    assert!(
+                        ts.iter().any(|t| t.id == picked),
+                        "{}: id {picked} not in snapshot",
+                        p.name()
+                    );
+                }
+            }
+            // JSQ must pick a minimum-load target, ties to lowest id.
+            let mut rng = Pcg64::new(seed);
+            let picked = Jsq.route(&ts, &mut rng);
+            let min_load = ts.iter().map(|t| t.load()).min().unwrap();
+            let expect = ts
+                .iter()
+                .filter(|t| t.load() == min_load)
+                .map(|t| t.id)
+                .min()
+                .unwrap();
+            assert_eq!(picked, expect, "jsq must take the least-loaded target");
+            // Round-robin covers every target exactly once per cycle.
+            let mut rr = RoundRobin::new();
+            let mut seen: Vec<usize> = (0..n).map(|_| rr.route(&ts, &mut rng)).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), n, "round robin must cover all targets");
+        });
+    }
+
+    #[test]
     fn random_is_roughly_uniform() {
         let mut p = Random;
         let mut rng = Pcg64::new(11);

@@ -83,10 +83,22 @@ impl<E> EventQueue<E> {
 
     /// Schedule `payload` at absolute time `at` (clamped to now —
     /// scheduling in the past is a bug in debug builds).
+    ///
+    /// Non-finite times are rejected: a NaN `at` would fall through the
+    /// `partial_cmp` fallback in `Entry::cmp` as `Ordering::Equal` and
+    /// silently corrupt heap order, and ±∞ would freeze or teleport the
+    /// clock. Debug builds assert; release builds clamp to `now` so one
+    /// bad arithmetic result cannot poison the whole simulation.
     pub fn schedule(&mut self, at: f64, payload: E) {
-        debug_assert!(at >= self.now - 1e-9, "scheduling into the past: {at} < {}", self.now);
+        debug_assert!(at.is_finite(), "non-finite event time: {at}");
+        debug_assert!(
+            !(at < self.now - 1e-9),
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        let time = if at.is_finite() { at.max(self.now) } else { self.now };
         let entry = Entry {
-            time: at.max(self.now),
+            time,
             seq: self.seq,
             payload,
         };
@@ -157,6 +169,46 @@ mod tests {
         q.schedule_in(-5.0, "y");
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 1.0);
+    }
+
+    // Regression tests for non-finite schedule times: the NaN path used
+    // to rely on `f64::max` quietly discarding the NaN while the debug
+    // assertion fired with a misleading "scheduling into the past"
+    // message. Debug builds now reject non-finite times explicitly;
+    // release builds clamp them to `now` and keep the heap ordered.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_time_rejected_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, ());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_time_rejected_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::INFINITY, ());
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn non_finite_times_clamp_in_release() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "later");
+        q.pop(); // now = 2.0
+        q.schedule(f64::NAN, "nan");
+        q.schedule(f64::INFINITY, "inf");
+        q.schedule(f64::NEG_INFINITY, "ninf");
+        q.schedule(3.0, "fine");
+        // All non-finite events clamp to now (2.0) and pop, in insertion
+        // order, before the finite 3.0 event; total order stays intact.
+        let order: Vec<(f64, &str)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            order,
+            vec![(2.0, "nan"), (2.0, "inf"), (2.0, "ninf"), (3.0, "fine")]
+        );
     }
 
     #[test]

@@ -15,7 +15,10 @@
 
 use crate::config::{SimConfig, Topology, WindowKind};
 use crate::hwmodel::{Hardware, Predictor};
-use crate::metrics::{RequestMetrics, SimReport, SystemMetrics};
+use crate::metrics::{
+    FullSink, MetricsSink, RequestMetrics, SimReport, StreamingReport, StreamingSink,
+    SystemMetrics,
+};
 use crate::policies::window::ExecMode;
 use crate::policies::{
     make_batching, make_routing, make_window, BatchingPolicy, QueuedRequest, RoutingPolicy,
@@ -27,6 +30,11 @@ use crate::trace::{dataset_by_name, Trace};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Ema;
 use std::collections::VecDeque;
+
+/// Wire size of one token id shipped over the link (ids, not text).
+const TOKEN_BYTES: f64 = 2.0;
+/// Wire size of a control message (notifications, migrations).
+const CTRL_BYTES: f64 = 64.0;
 
 /// Target-server batch operations.
 #[derive(Clone, Debug)]
@@ -181,20 +189,79 @@ impl Simulator {
         self
     }
 
-    /// Run to completion; returns the analyzer report.
+    /// Run to completion; returns the analyzer report (full per-request
+    /// records, exact percentiles — O(requests) memory). Panics if the
+    /// window policy cannot be constructed (e.g. a bad AWC weights
+    /// path); use [`Simulator::try_run`] to handle that fallibly.
     pub fn run(self) -> SimReport {
+        self.try_run().expect("window policy")
+    }
+
+    /// Fallible form of [`Simulator::run`].
+    pub fn try_run(self) -> Result<SimReport, String> {
+        let (sink, mut system) = self.run_with(FullSink::new())?;
+        let mut requests = sink.into_requests();
+        // Records arrive in completion order; the report contract is
+        // trace order.
+        requests.sort_by_key(|r| r.id);
+        system.throughput_rps = steady_throughput(&requests, system.sim_duration_ms);
+        Ok(SimReport { requests, system })
+    }
+
+    /// Run in streaming-metrics mode: per-request records fold into
+    /// accumulators and histograms at completion time and are dropped,
+    /// so memory stays bounded regardless of request count (1M+ request
+    /// cells). Percentiles are accurate to one histogram bucket.
+    pub fn run_streaming(self) -> StreamingReport {
+        self.try_run_streaming().expect("window policy")
+    }
+
+    /// Fallible form of [`Simulator::run_streaming`].
+    pub fn try_run_streaming(self) -> Result<StreamingReport, String> {
+        let (sink, system) = self.run_with(StreamingSink::default())?;
+        Ok(StreamingReport {
+            stream: sink.summary(),
+            system,
+        })
+    }
+
+    /// Run with a caller-provided metrics sink; returns the sink and the
+    /// system aggregates (`throughput_rps` left at the naive
+    /// completions/duration ratio — [`Simulator::try_run`] refines it
+    /// from the full completion-time sample). Errs when the window
+    /// policy cannot be constructed.
+    pub fn run_with<S: MetricsSink>(self, sink: S) -> Result<(S, SystemMetrics), String> {
         let routing = make_routing(self.cfg.routing);
         let batching = make_batching(self.cfg.batching);
-        let window = make_window(&self.cfg.window).expect("window policy");
+        let window = make_window(&self.cfg.window)?;
         let mut st = SimState::build(self.cfg, self.topo, self.predictor, self.trace,
-                                     routing, batching, window);
+                                     routing, batching, window, sink);
         st.run_loop();
-        st.report()
+        let system = st.system_metrics();
+        Ok((st.sink, system))
     }
 }
 
-/// All mutable simulation state; the event loop lives here.
-struct SimState {
+/// Steady-state throughput: interquartile completion rate (robust to
+/// warm-up and straggler tails); falls back to the naive ratio for small
+/// samples or degenerate spreads.
+fn steady_throughput(reqs: &[RequestMetrics], duration_ms: f64) -> f64 {
+    let duration = duration_ms.max(1e-9);
+    let mut ends: Vec<f64> = reqs.iter().map(|r| r.arrival_ms + r.e2e_ms).collect();
+    ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if ends.len() >= 8 {
+        let t25 = ends[ends.len() / 4];
+        let t75 = ends[ends.len() * 3 / 4];
+        if t75 > t25 {
+            return (ends.len() as f64 / 2.0) / ((t75 - t25) / 1e3);
+        }
+    }
+    reqs.len() as f64 / (duration / 1e3)
+}
+
+/// All mutable simulation state; the event loop lives here. Generic over
+/// the metrics sink so full-record and streaming runs share one loop.
+struct SimState<S: MetricsSink> {
     cfg: SimConfig,
     topo: Topology,
     predictor: Predictor,
@@ -212,13 +279,18 @@ struct SimState {
     net_delays_sum: f64,
     net_delays_n: u64,
     completed: usize,
+    completed_tokens: u64,
     fused_only: bool,
     wall_start: std::time::Instant,
     feat_sum: [f64; 5],
     feat_n: u64,
+    sink: S,
+    /// Whether the sink wants per-request γ-decision vectors retained.
+    keep_gammas: bool,
 }
 
-impl SimState {
+impl<S: MetricsSink> SimState<S> {
+    #[allow(clippy::too_many_arguments)]
     fn build(
         cfg: SimConfig,
         topo: Topology,
@@ -227,7 +299,8 @@ impl SimState {
         routing: Box<dyn RoutingPolicy>,
         batching: Box<dyn BatchingPolicy>,
         window: Box<dyn WindowPolicy>,
-    ) -> SimState {
+        sink: S,
+    ) -> SimState<S> {
         let n_targets = topo.targets.len();
         let n_drafters = topo.drafters.len().max(1);
         let requests: Vec<Request> = trace
@@ -280,6 +353,7 @@ impl SimState {
         }
         let fused_only = matches!(cfg.window, WindowKind::FusedOnly);
         let seed = cfg.seed;
+        let keep_gammas = sink.keep_gamma_history();
         SimState {
             cfg,
             topo,
@@ -298,10 +372,13 @@ impl SimState {
             net_delays_sum: 0.0,
             net_delays_n: 0,
             completed: 0,
+            completed_tokens: 0,
             fused_only,
             wall_start: std::time::Instant::now(),
             feat_sum: [0.0; 5],
             feat_n: 0,
+            sink,
+            keep_gammas,
         }
     }
 
@@ -314,10 +391,22 @@ impl SimState {
         self.feat_n += 1;
     }
 
-    /// One-way link delay draw: `RTT/2 + |N(0, jitter)|`.
-    fn link_delay(&mut self) -> f64 {
-        let d = self.topo.rtt_ms / 2.0
-            + (self.rng_net.normal() * self.topo.jitter_ms).abs();
+    /// One-way delay draw on a drafter's link:
+    /// `RTT/2 + |N(0, jitter)| + payload_bits / bandwidth`.
+    ///
+    /// Links are per drafter (heterogeneous edge networks come from
+    /// per-pool overrides); the serialization term vanishes on the
+    /// default infinite-bandwidth link, matching the legacy model
+    /// bit-for-bit.
+    fn link_delay(&mut self, drafter_id: usize, payload_bytes: f64) -> f64 {
+        let l = *self.topo.link(drafter_id);
+        let ser = if l.bandwidth_mbps.is_finite() {
+            // Mbit/s = 1000 bits/ms.
+            payload_bytes * 8.0 / (l.bandwidth_mbps * 1000.0)
+        } else {
+            0.0
+        };
+        let d = l.rtt_ms / 2.0 + (self.rng_net.normal() * l.jitter_ms).abs() + ser;
         self.net_delays_sum += d;
         self.net_delays_n += 1;
         d
@@ -380,7 +469,9 @@ impl SimState {
         let tid = self.routing.route(&snaps, &mut self.rng_route);
         self.requests[rid].target = tid;
         // Prompt travels to the cloud for target-side prefill.
-        let d = self.link_delay();
+        let did = self.requests[rid].drafter;
+        let prompt_bytes = self.requests[rid].prompt_length as f64 * TOKEN_BYTES;
+        let d = self.link_delay(did, prompt_bytes);
         self.q.schedule_in(d, Ev::PromptAtTarget(rid));
         if self.fused_only {
             self.requests[rid].edge_prefill_done = true;
@@ -437,7 +528,7 @@ impl SimState {
             }
         } else {
             // Draft window complete: ship to the cloud.
-            let d = self.link_delay();
+            let d = self.link_delay(did, gamma as f64 * TOKEN_BYTES);
             self.q.schedule_in(d, Ev::UplinkArrive { req: rid, gamma, sent_ms: now });
         }
     }
@@ -454,16 +545,19 @@ impl SimState {
             ExecMode::Fused => {
                 r.mode = ExecMode::Fused;
                 let tid = r.target;
+                let did = r.drafter;
                 // Control message travels to the cloud, then the request
                 // becomes fused-resident there.
-                let d = self.link_delay();
+                let d = self.link_delay(did, CTRL_BYTES);
                 self.targets[tid].fused_resident.push_back(rid);
                 self.q.schedule_in(d, Ev::TargetKick(tid));
             }
             ExecMode::Distributed => {
                 r.mode = ExecMode::Distributed;
                 let gamma = r.spec.effective_gamma(decision.gamma);
-                r.gammas.push(gamma);
+                if self.keep_gammas {
+                    r.gammas.push(gamma);
+                }
                 let did = r.drafter;
                 self.drafters[did]
                     .tasks
@@ -489,7 +583,7 @@ impl SimState {
             } else {
                 0.75
             },
-            rtt_recent_ms: r.rtt_ema.value_or(self.topo.rtt_ms),
+            rtt_recent_ms: r.rtt_ema.value_or(self.topo.link(r.drafter).rtt_ms),
             tpot_recent_ms: t.tpot_ema.value_or(0.0),
             gamma_prev: r.gamma_prev,
         }
@@ -677,7 +771,8 @@ impl SimState {
         match op {
             TargetOp::Prefill(ids) => {
                 for rid in ids {
-                    let d = self.link_delay();
+                    let did = self.requests[rid].drafter;
+                    let d = self.link_delay(did, CTRL_BYTES);
                     self.q.schedule_in(d, Ev::PrefillNotify(rid));
                 }
             }
@@ -706,8 +801,10 @@ impl SimState {
                     self.targets[tid].alpha_counts.1 += verified as f64;
                     let r = &mut self.requests[rid];
                     r.last_verify_ms = dur;
+                    let did = r.drafter;
                     produced_total += out.produced;
-                    let d = self.link_delay();
+                    // Verify result: acceptance outcome + bonus token.
+                    let d = self.link_delay(did, (gamma + 1) as f64 * TOKEN_BYTES);
                     self.q.schedule_in(d, Ev::DownlinkArrive { req: rid, net_ms: d });
                 }
                 if produced_total > 0 {
@@ -743,7 +840,8 @@ impl SimState {
                         if decision.mode == ExecMode::Distributed {
                             self.targets[tid].fused_resident.retain(|&x| x != rid);
                             self.requests[rid].mode = ExecMode::Distributed;
-                            let d = self.link_delay();
+                            let did = self.requests[rid].drafter;
+                            let d = self.link_delay(did, CTRL_BYTES);
                             self.q.schedule_in(d, Ev::MigrateToEdge(rid));
                         }
                     }
@@ -794,31 +892,24 @@ impl SimState {
 
     fn complete(&mut self, now: f64, rid: usize) {
         let r = &mut self.requests[rid];
-        if r.completed_ms.is_none() {
-            r.completed_ms = Some(now);
-            self.completed += 1;
-            let key = r.pair_key();
-            self.window.forget(key);
+        if r.completed_ms.is_some() {
+            return;
         }
-    }
-
-    // ---- Reporting ----
-    fn report(&self) -> SimReport {
-        let sim_end = self.q.now();
-        let wall_ms = self.wall_start.elapsed().as_secs_f64() * 1e3;
-        let mut reqs = Vec::new();
-        for r in &self.requests {
-            let (Some(ttft), Some(done)) = (r.ttft_ms, r.completed_ms) else {
-                continue;
-            };
-            let e2e = done - r.arrival_ms;
+        r.completed_ms = Some(now);
+        self.completed += 1;
+        let key = r.pair_key();
+        // Fold the finished request into the metrics sink right here —
+        // streaming sinks drop the record immediately, which is what
+        // bounds memory on million-request runs.
+        if let Some(ttft) = r.ttft_ms {
+            let e2e = now - r.arrival_ms;
             let out_toks = r.spec.output_length;
             let tpot = if out_toks > 1 {
                 (e2e - ttft) / (out_toks - 1) as f64
             } else {
                 0.0
             };
-            reqs.push(RequestMetrics {
+            let m = RequestMetrics {
                 id: r.id,
                 arrival_ms: r.arrival_ms,
                 ttft_ms: ttft,
@@ -828,32 +919,25 @@ impl SimState {
                 target_id: r.target,
                 drafter_id: r.drafter,
                 output_tokens: out_toks,
-                gamma_decisions: r.gammas.clone(),
+                gamma_decisions: std::mem::take(&mut r.gammas),
                 fused_rounds: r.fused_rounds,
-            });
+            };
+            self.completed_tokens += out_toks as u64;
+            self.sink.record(&m);
         }
+        self.window.forget(key);
+    }
+
+    // ---- Reporting ----
+    fn system_metrics(&self) -> SystemMetrics {
+        let sim_end = self.q.now();
+        let wall_ms = self.wall_start.elapsed().as_secs_f64() * 1e3;
         let duration = sim_end.max(1e-9);
-        let total_tokens: u64 = reqs.iter().map(|r| r.output_tokens as u64).sum();
-        // Steady-state throughput: interquartile completion rate.
-        let steady = {
-            let mut ends: Vec<f64> = reqs.iter().map(|r| r.arrival_ms + r.e2e_ms).collect();
-            ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            if ends.len() >= 8 {
-                let t25 = ends[ends.len() / 4];
-                let t75 = ends[ends.len() * 3 / 4];
-                if t75 > t25 {
-                    (ends.len() as f64 / 2.0) / ((t75 - t25) / 1e3)
-                } else {
-                    reqs.len() as f64 / (duration / 1e3)
-                }
-            } else {
-                reqs.len() as f64 / (duration / 1e3)
-            }
-        };
-        let system = SystemMetrics {
-            throughput_rps: steady,
-            total_throughput_rps: reqs.len() as f64 / (duration / 1e3),
-            token_throughput: total_tokens as f64 / (duration / 1e3),
+        let naive_rps = self.completed as f64 / (duration / 1e3);
+        SystemMetrics {
+            throughput_rps: naive_rps,
+            total_throughput_rps: naive_rps,
+            token_throughput: self.completed_tokens as f64 / (duration / 1e3),
             target_utilization: self.targets.iter().map(|t| t.busy_ms).sum::<f64>()
                 / (self.targets.len() as f64 * duration),
             mean_queue_delay_ms: if self.queue_delays_n == 0 {
@@ -867,7 +951,7 @@ impl SimState {
                 self.net_delays_sum / self.net_delays_n as f64
             },
             sim_duration_ms: duration,
-            completed: reqs.len(),
+            completed: self.completed,
             events_processed: self.q.processed(),
             wall_ms,
             mean_features: if self.feat_n == 0 {
@@ -879,8 +963,7 @@ impl SimState {
                 }
                 m
             },
-        };
-        SimReport { requests: reqs, system }
+        }
     }
 }
 
@@ -1041,6 +1124,83 @@ mod tests {
             cnndm.mean_acceptance() < acc - 0.05,
             "cnndm={} gsm8k={acc}",
             cnndm.mean_acceptance()
+        );
+    }
+
+    #[test]
+    fn streaming_mode_matches_full_mode() {
+        let full = Simulator::new(small_cfg()).run();
+        let stream = Simulator::new(small_cfg()).run_streaming();
+        assert_eq!(stream.stream.completed as usize, full.system.completed);
+        assert_eq!(stream.system.events_processed, full.system.events_processed);
+        // Means are exact in both modes (Welford vs arithmetic).
+        assert!((stream.stream.ttft_ms.mean - full.mean_ttft()).abs() < 1e-9);
+        assert!((stream.stream.tpot_ms.mean - full.mean_tpot()).abs() < 1e-9);
+        assert!((stream.stream.e2e_ms.mean - full.mean_e2e()).abs() < 1e-9);
+        assert!((stream.stream.mean_acceptance - full.mean_acceptance()).abs() < 1e-9);
+        // Percentile sanity at small n: with 60 samples one order
+        // statistic of rank slack separates the estimators, so assert a
+        // band rather than a bucket (the tight cross-check lives in the
+        // 10k-request integration test).
+        let tol = stream.stream.ttft_ms.resolution + 1e-9;
+        assert!(stream.stream.ttft_ms.p99 >= full.p_ttft(95.0) - tol);
+        assert!(stream.stream.ttft_ms.p99 <= full.p_ttft(100.0) + tol);
+    }
+
+    #[test]
+    fn heterogeneous_drafter_links_shift_net_delay() {
+        use crate::cluster::gpu::A40;
+        use crate::cluster::model::LLAMA2_7B;
+        use crate::config::{LinkOverride, PoolSpec};
+        let mk = |a: f64, b: f64| {
+            let mut cfg = SimConfig::builder()
+                .seed(4)
+                .targets(2)
+                .drafters(20)
+                .requests(60)
+                .rate_per_s(20.0)
+                .build();
+            cfg.drafter_pools = vec![
+                PoolSpec {
+                    count: 10,
+                    gpu: &A40,
+                    tp: 1,
+                    model: &LLAMA2_7B,
+                    link: Some(LinkOverride { rtt_ms: Some(a), ..Default::default() }),
+                },
+                PoolSpec {
+                    count: 10,
+                    gpu: &A40,
+                    tp: 1,
+                    model: &LLAMA2_7B,
+                    link: Some(LinkOverride { rtt_ms: Some(b), ..Default::default() }),
+                },
+            ];
+            Simulator::new(cfg).run()
+        };
+        let lo = mk(5.0, 5.0);
+        let het = mk(5.0, 80.0);
+        let hi = mk(80.0, 80.0);
+        assert_eq!(lo.system.completed, 60);
+        assert_eq!(het.system.completed, 60);
+        // A mixed fleet sits strictly between the homogeneous extremes.
+        assert!(lo.system.mean_net_delay_ms < het.system.mean_net_delay_ms);
+        assert!(het.system.mean_net_delay_ms < hi.system.mean_net_delay_ms);
+    }
+
+    #[test]
+    fn finite_bandwidth_adds_serialization_delay() {
+        let inf = Simulator::new(small_cfg()).run();
+        let mut cfg = small_cfg();
+        // 1 Mbit/s: a 300-token prompt pays ≈4.8 ms extra on upload.
+        cfg.network.bandwidth_mbps = 1.0;
+        let slow = Simulator::new(cfg).run();
+        assert_eq!(slow.system.completed, 60);
+        assert!(
+            slow.system.mean_net_delay_ms > inf.system.mean_net_delay_ms,
+            "serialization delay must show up: {} vs {}",
+            slow.system.mean_net_delay_ms,
+            inf.system.mean_net_delay_ms
         );
     }
 

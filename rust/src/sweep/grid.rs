@@ -1,0 +1,538 @@
+//! Declarative sweep grids: a base [`SimConfig`] plus one value list per
+//! swept axis, expanded into the cross product of concrete cell configs.
+//!
+//! Axes (all optional; an absent axis pins the base value):
+//! RTT, jitter, arrival rate, dataset, routing / batching / window
+//! policy, cluster scale (target and drafter counts), and seed.
+//!
+//! Expansion order is fixed and documented — outermost to innermost:
+//! `dataset → routing → batching → window → targets → drafters → rtt →
+//! jitter → rate → seed` — so cell indices are stable and seed replicas
+//! of one configuration are adjacent.
+
+use crate::config::{
+    parse_batching, parse_routing, BatchingKind, RoutingKind, SimConfig, WindowKind,
+};
+use crate::util::json::Json;
+use crate::util::yaml;
+
+/// One expanded grid cell: a concrete config plus its axis labels.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in expansion order (result ordering key).
+    pub index: usize,
+    /// `(axis, value)` pairs in expansion order.
+    pub labels: Vec<(String, String)>,
+    /// Fully resolved simulator configuration.
+    pub cfg: SimConfig,
+}
+
+/// A declarative parameter grid over [`SimConfig`]s.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// Defaults for every knob the axes do not touch.
+    pub base: SimConfig,
+    /// Edge–cloud RTT axis, ms.
+    pub rtt_ms: Vec<f64>,
+    /// Jitter axis, ms.
+    pub jitter_ms: Vec<f64>,
+    /// Arrival-rate axis, requests/s.
+    pub rate_per_s: Vec<f64>,
+    /// Dataset axis (gsm8k / cnndm / humaneval).
+    pub datasets: Vec<String>,
+    /// Routing-policy axis.
+    pub routing: Vec<RoutingKind>,
+    /// Batching-policy axis.
+    pub batching: Vec<BatchingKind>,
+    /// Window-policy axis.
+    pub windows: Vec<WindowKind>,
+    /// Target-count axis (cluster scale).
+    pub targets: Vec<usize>,
+    /// Drafter-count axis (cluster scale).
+    pub drafters: Vec<usize>,
+    /// Seed axis (innermost: replicas of one config are adjacent).
+    pub seeds: Vec<u64>,
+    /// Run cells in streaming-metrics mode (bounded memory).
+    pub streaming: bool,
+}
+
+impl SweepGrid {
+    /// Grid with every axis pinned to the base config's value.
+    pub fn new(base: SimConfig) -> SweepGrid {
+        SweepGrid {
+            rtt_ms: vec![base.network.rtt_ms],
+            jitter_ms: vec![base.network.jitter_ms],
+            rate_per_s: vec![base.workload.rate_per_s],
+            datasets: vec![base.workload.dataset.clone()],
+            routing: vec![base.routing],
+            batching: vec![base.batching],
+            windows: vec![base.window.clone()],
+            targets: vec![base.n_targets()],
+            drafters: vec![base.n_drafters()],
+            seeds: vec![base.seed],
+            streaming: false,
+            base,
+        }
+    }
+
+    /// Number of cells the grid expands to.
+    pub fn n_cells(&self) -> usize {
+        self.datasets.len()
+            * self.routing.len()
+            * self.batching.len()
+            * self.windows.len()
+            * self.targets.len()
+            * self.drafters.len()
+            * self.rtt_ms.len()
+            * self.jitter_ms.len()
+            * self.rate_per_s.len()
+            * self.seeds.len()
+    }
+
+    /// Parse a grid document (see `examples/sweep_grid.yaml`):
+    ///
+    /// ```yaml
+    /// base:            # optional; same schema as `dsd simulate` configs
+    ///   workload:
+    ///     requests: 2000
+    /// sweep:
+    ///   rtt_ms: [5, 20, 80]
+    ///   rate_per_s: [20, 40]
+    ///   window: [static, static:6, fused]
+    ///   seeds: [1, 2]
+    /// streaming: true  # optional, default false
+    /// ```
+    pub fn from_yaml(text: &str) -> Result<SweepGrid, String> {
+        let doc = yaml::parse(text).map_err(|e| e.to_string())?;
+        // Strict at the document level too: a misspelled `sweep:` would
+        // otherwise silently collapse the grid to one cell.
+        match &doc {
+            Json::Obj(pairs) => {
+                for (k, _) in pairs {
+                    if !["base", "sweep", "streaming"].contains(&k.as_str()) {
+                        return Err(format!(
+                            "sweep grid: unknown top-level key '{k}' \
+                             (known: base, sweep, streaming)"
+                        ));
+                    }
+                }
+            }
+            Json::Null => {}
+            _ => return Err("sweep grid: expected a mapping document".into()),
+        }
+        let base = match doc.get("base") {
+            Some(b) => SimConfig::from_json(b)?,
+            None => SimConfig::builder().build(),
+        };
+        let mut grid = SweepGrid::new(base);
+        if let Some(x) = doc.get("streaming") {
+            grid.streaming = x
+                .as_bool()
+                .ok_or_else(|| "sweep grid: 'streaming' must be a boolean".to_string())?;
+        }
+        let Some(sweep) = doc.get("sweep") else {
+            return Ok(grid);
+        };
+        const KNOWN: &[&str] = &[
+            "rtt_ms", "jitter_ms", "rate_per_s", "dataset", "routing", "batching",
+            "window", "targets", "drafters", "seeds",
+        ];
+        if let Json::Obj(pairs) = sweep {
+            for (k, _) in pairs {
+                if !KNOWN.contains(&k.as_str()) {
+                    return Err(format!(
+                        "sweep: unknown axis '{k}' (known: {})",
+                        KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("sweep: expected a mapping of axes".into());
+        }
+        if let Some(v) = sweep.get("rtt_ms") {
+            grid.rtt_ms = f64_axis("rtt_ms", v)?;
+        }
+        if let Some(v) = sweep.get("jitter_ms") {
+            grid.jitter_ms = f64_axis("jitter_ms", v)?;
+        }
+        if let Some(v) = sweep.get("rate_per_s") {
+            grid.rate_per_s = f64_axis("rate_per_s", v)?;
+        }
+        if let Some(v) = sweep.get("dataset") {
+            grid.datasets = str_axis("dataset", v)?;
+        }
+        if let Some(v) = sweep.get("routing") {
+            grid.routing = str_axis("routing", v)?
+                .iter()
+                .map(|s| parse_routing(s))
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = sweep.get("batching") {
+            grid.batching = str_axis("batching", v)?
+                .iter()
+                .map(|s| parse_batching(s))
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = sweep.get("window") {
+            grid.windows = str_axis("window", v)?
+                .iter()
+                .map(|s| parse_window_axis(s))
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = sweep.get("targets") {
+            grid.targets = usize_axis("targets", v)?;
+        }
+        if let Some(v) = sweep.get("drafters") {
+            grid.drafters = usize_axis("drafters", v)?;
+        }
+        if let Some(v) = sweep.get("seeds") {
+            grid.seeds = u64_axis("seeds", v)?;
+        }
+        Ok(grid)
+    }
+
+    /// Load a grid from a YAML file.
+    pub fn from_yaml_file(path: &str) -> Result<SweepGrid, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_yaml(&text)
+    }
+
+    /// Expand into concrete cells, validating every config.
+    pub fn expand(&self) -> Result<Vec<SweepCell>, String> {
+        if self.n_cells() == 0 {
+            return Err("sweep: a swept axis is empty".into());
+        }
+        let mut cells = Vec::with_capacity(self.n_cells());
+        for ds in &self.datasets {
+            for &routing in &self.routing {
+                for &batching in &self.batching {
+                    for window in &self.windows {
+                        for &n_targets in &self.targets {
+                            for &n_drafters in &self.drafters {
+                                for &rtt in &self.rtt_ms {
+                                    for &jitter in &self.jitter_ms {
+                                        for &rate in &self.rate_per_s {
+                                            for &seed in &self.seeds {
+                                                let cfg = self.cell_config(
+                                                    ds, routing, batching, window,
+                                                    n_targets, n_drafters, rtt, jitter,
+                                                    rate, seed,
+                                                )?;
+                                                cells.push(SweepCell {
+                                                    index: cells.len(),
+                                                    labels: labels_for(
+                                                        ds, routing, batching, window,
+                                                        n_targets, n_drafters, rtt,
+                                                        jitter, rate, seed,
+                                                    ),
+                                                    cfg,
+                                                });
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn cell_config(
+        &self,
+        dataset: &str,
+        routing: RoutingKind,
+        batching: BatchingKind,
+        window: &WindowKind,
+        n_targets: usize,
+        n_drafters: usize,
+        rtt: f64,
+        jitter: f64,
+        rate: f64,
+        seed: u64,
+    ) -> Result<SimConfig, String> {
+        let mut cfg = self.base.clone();
+        cfg.seed = seed;
+        cfg.workload.dataset = dataset.to_string();
+        cfg.workload.rate_per_s = rate;
+        cfg.routing = routing;
+        cfg.batching = batching;
+        cfg.window = window.clone();
+        cfg.network.rtt_ms = rtt;
+        cfg.network.jitter_ms = jitter;
+        scale_pools(&mut cfg.target_pools, n_targets, "targets")?;
+        scale_pools(&mut cfg.drafter_pools, n_drafters, "drafters")?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Resize a pool list to `want` devices by adjusting the first slice
+/// (later slices — and their link overrides — are preserved). A no-op
+/// when the total already matches, so heterogeneous base pools survive
+/// single-valued scale axes untouched.
+fn scale_pools(
+    pools: &mut [crate::config::PoolSpec],
+    want: usize,
+    what: &str,
+) -> Result<(), String> {
+    let total: usize = pools.iter().map(|p| p.count).sum();
+    if total == want {
+        return Ok(());
+    }
+    let Some(first) = pools.first_mut() else {
+        return Err(format!("sweep: cannot scale empty {what} pools"));
+    };
+    let rest = total - first.count;
+    if want < rest {
+        return Err(format!(
+            "sweep: {what}={want} smaller than the {rest} devices in trailing pool slices"
+        ));
+    }
+    first.count = want - rest;
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn labels_for(
+    dataset: &str,
+    routing: RoutingKind,
+    batching: BatchingKind,
+    window: &WindowKind,
+    n_targets: usize,
+    n_drafters: usize,
+    rtt: f64,
+    jitter: f64,
+    rate: f64,
+    seed: u64,
+) -> Vec<(String, String)> {
+    vec![
+        ("dataset".into(), dataset.to_string()),
+        ("routing".into(), routing_label(routing).into()),
+        ("batching".into(), batching_label(batching).into()),
+        ("window".into(), window_label(window)),
+        ("targets".into(), n_targets.to_string()),
+        ("drafters".into(), n_drafters.to_string()),
+        ("rtt_ms".into(), format!("{rtt}")),
+        ("jitter_ms".into(), format!("{jitter}")),
+        ("rate_per_s".into(), format!("{rate}")),
+        ("seed".into(), seed.to_string()),
+    ]
+}
+
+/// Stable label for a routing kind.
+pub fn routing_label(k: RoutingKind) -> &'static str {
+    match k {
+        RoutingKind::Random => "random",
+        RoutingKind::RoundRobin => "round_robin",
+        RoutingKind::Jsq => "jsq",
+    }
+}
+
+/// Stable label for a batching kind.
+pub fn batching_label(k: BatchingKind) -> &'static str {
+    match k {
+        BatchingKind::Fifo => "fifo",
+        BatchingKind::Lab => "lab",
+    }
+}
+
+/// Stable label for a window kind.
+pub fn window_label(w: &WindowKind) -> String {
+    match w {
+        WindowKind::Static(g) => format!("static{g}"),
+        WindowKind::Dynamic { .. } => "dynamic".into(),
+        WindowKind::Awc { .. } => "awc".into(),
+        WindowKind::FusedOnly => "fused".into(),
+    }
+}
+
+/// Window axis entry: `static`, `static:<γ>`, `dynamic`, `awc`, `fused`.
+pub fn parse_window_axis(s: &str) -> Result<WindowKind, String> {
+    if let Some(g) = s.strip_prefix("static:") {
+        let g: u32 = g.parse().map_err(|_| format!("window: bad gamma '{g}'"))?;
+        return Ok(WindowKind::Static(g.max(1)));
+    }
+    crate::config::parse_window(s, 4, None)
+}
+
+fn axis_items<'j>(name: &str, v: &'j Json) -> Result<Vec<&'j Json>, String> {
+    match v {
+        Json::Arr(xs) if xs.is_empty() => Err(format!("sweep: axis '{name}' is empty")),
+        Json::Arr(xs) => Ok(xs.iter().collect()),
+        // A bare scalar pins the axis to one value.
+        other => Ok(vec![other]),
+    }
+}
+
+fn f64_axis(name: &str, v: &Json) -> Result<Vec<f64>, String> {
+    axis_items(name, v)?
+        .into_iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| format!("sweep: axis '{name}' expects numbers"))
+        })
+        .collect()
+}
+
+fn usize_axis(name: &str, v: &Json) -> Result<Vec<usize>, String> {
+    axis_items(name, v)?
+        .into_iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| format!("sweep: axis '{name}' expects non-negative integers"))
+        })
+        .collect()
+}
+
+fn u64_axis(name: &str, v: &Json) -> Result<Vec<u64>, String> {
+    axis_items(name, v)?
+        .into_iter()
+        .map(|x| {
+            x.as_u64()
+                .ok_or_else(|| format!("sweep: axis '{name}' expects non-negative integers"))
+        })
+        .collect()
+}
+
+fn str_axis(name: &str, v: &Json) -> Result<Vec<String>, String> {
+    axis_items(name, v)?
+        .into_iter()
+        .map(|x| {
+            x.as_str()
+                .map(String::from)
+                .ok_or_else(|| format!("sweep: axis '{name}' expects strings"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_yaml() -> &'static str {
+        "\
+base:
+  workload:
+    requests: 16
+    rate_per_s: 10
+  cluster:
+    targets:
+      - count: 2
+        gpu: a100
+        tp: 4
+        model: llama2-70b
+    drafters:
+      - count: 8
+        gpu: a40
+        model: llama2-7b
+sweep:
+  rtt_ms: [5, 40]
+  rate_per_s: [10, 20]
+  window: [static, fused]
+  seeds: [1, 2]
+streaming: true
+"
+    }
+
+    #[test]
+    fn yaml_grid_expands_cross_product() {
+        let grid = SweepGrid::from_yaml(small_yaml()).unwrap();
+        assert!(grid.streaming);
+        assert_eq!(grid.n_cells(), 16);
+        let cells = grid.expand().unwrap();
+        assert_eq!(cells.len(), 16);
+        // Indices are positional and labels track expansion order:
+        // window is outer relative to rtt, seeds are innermost.
+        assert_eq!(cells[0].index, 0);
+        assert_eq!(cells[0].cfg.seed, 1);
+        assert_eq!(cells[1].cfg.seed, 2);
+        assert_eq!(cells[0].cfg.network.rtt_ms, 5.0);
+        assert_eq!(cells[4].cfg.network.rtt_ms, 40.0);
+        assert!(matches!(cells[0].cfg.window, WindowKind::Static(4)));
+        assert!(matches!(cells[8].cfg.window, WindowKind::FusedOnly));
+        let label = |c: &SweepCell, k: &str| {
+            c.labels
+                .iter()
+                .find(|(lk, _)| lk == k)
+                .map(|(_, v)| v.clone())
+                .unwrap()
+        };
+        assert_eq!(label(&cells[0], "window"), "static4");
+        assert_eq!(label(&cells[8], "window"), "fused");
+        assert_eq!(label(&cells[2], "rate_per_s"), "20");
+    }
+
+    #[test]
+    fn scalar_axis_and_defaults() {
+        let grid = SweepGrid::from_yaml("sweep:\n  rtt_ms: 30\n").unwrap();
+        assert_eq!(grid.rtt_ms, vec![30.0]);
+        assert!(!grid.streaming);
+        // Unswept axes pin the base values.
+        assert_eq!(grid.seeds, vec![42]);
+        assert_eq!(grid.n_cells(), 1);
+    }
+
+    #[test]
+    fn unknown_axis_rejected() {
+        let err = SweepGrid::from_yaml("sweep:\n  rttms: [1]\n").unwrap_err();
+        assert!(err.contains("unknown axis"), "{err}");
+    }
+
+    #[test]
+    fn unknown_top_level_key_rejected() {
+        // A misspelled `sweep:` must not silently become a 1-cell grid.
+        let err = SweepGrid::from_yaml("sweeps:\n  rtt_ms: [1, 2]\n").unwrap_err();
+        assert!(err.contains("unknown top-level key"), "{err}");
+    }
+
+    #[test]
+    fn non_bool_streaming_rejected() {
+        let err = SweepGrid::from_yaml("streaming: 1\n").unwrap_err();
+        assert!(err.contains("streaming"), "{err}");
+        // Empty document is still a valid 1-cell grid.
+        assert_eq!(SweepGrid::from_yaml("").unwrap().n_cells(), 1);
+    }
+
+    #[test]
+    fn bad_axis_values_rejected() {
+        assert!(SweepGrid::from_yaml("sweep:\n  rtt_ms: [a]\n").is_err());
+        assert!(SweepGrid::from_yaml("sweep:\n  window: [nope]\n").is_err());
+        assert!(SweepGrid::from_yaml("sweep:\n  routing: [nope]\n").is_err());
+    }
+
+    #[test]
+    fn window_axis_syntax() {
+        assert!(matches!(parse_window_axis("static:6"), Ok(WindowKind::Static(6))));
+        assert!(matches!(parse_window_axis("static"), Ok(WindowKind::Static(4))));
+        assert!(matches!(parse_window_axis("fused"), Ok(WindowKind::FusedOnly)));
+        assert!(parse_window_axis("static:x").is_err());
+    }
+
+    #[test]
+    fn cluster_scale_axis_resizes_first_slice() {
+        let mut grid = SweepGrid::new(SimConfig::builder().requests(8).build());
+        grid.targets = vec![2, 6];
+        grid.seeds = vec![1];
+        let cells = grid.expand().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].cfg.n_targets(), 2);
+        assert_eq!(cells[1].cfg.n_targets(), 6);
+        // Drafter pools untouched (single-valued axis, same total).
+        assert_eq!(cells[0].cfg.n_drafters(), 100);
+    }
+
+    #[test]
+    fn scale_below_trailing_slices_rejected() {
+        use crate::experiments::common::cloud_pool_20;
+        let mut base = SimConfig::builder().requests(8).build();
+        base.target_pools = cloud_pool_20();
+        let mut grid = SweepGrid::new(base);
+        // cloud_pool_20 = slices of 8 + 6 + 6; scaling to 5 < 12 trailing.
+        grid.targets = vec![5];
+        assert!(grid.expand().is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! Fleet-scale scenario sweeps (ROADMAP: "as many scenarios as you can
+//! imagine", paper §5's figure grids generalized).
+//!
+//! A [`SweepGrid`] declares value lists over RTT, jitter, arrival rate,
+//! dataset, the three policy families, and cluster scale; [`run_grid`]
+//! expands the cross product and executes one seeded simulator per cell
+//! on a `std::thread` pool. Results are keyed by cell index, so output
+//! is bit-stable regardless of thread count or scheduling; pairing a
+//! grid with streaming metrics (`streaming: true`) bounds per-cell
+//! memory so individual cells can simulate millions of requests.
+//!
+//! Entry points: `dsd sweep --grid <grid.yaml>` on the CLI,
+//! [`SweepGrid`] + [`run_grid`] from library code (see
+//! `examples/fleet_sweep.rs`), and [`crate::experiments::fig6`] which
+//! runs its RTT sweep through this runner.
+
+pub mod grid;
+pub mod runner;
+pub mod summary;
+
+pub use grid::{SweepCell, SweepGrid};
+pub use runner::{default_threads, run_cells, run_grid, CellMetrics, CellResult};
+pub use summary::SweepSummary;

@@ -1,0 +1,274 @@
+//! Deterministic parallel execution of sweep grids.
+//!
+//! Cells run on a pool of `std::thread` workers pulling indices from an
+//! atomic counter; every cell owns a fully seeded simulator, and results
+//! land in a slot vector addressed by cell index. Output order therefore
+//! depends only on the grid — never on thread scheduling — so repeated
+//! runs (at any thread count) produce byte-identical summaries.
+
+use super::grid::{SweepCell, SweepGrid};
+use crate::config::SimConfig;
+use crate::metrics::{SimReport, StreamingReport};
+use crate::sim::Simulator;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Flat per-cell metric snapshot, common to both metric modes.
+#[derive(Clone, Copy, Debug)]
+pub struct CellMetrics {
+    /// Completed requests.
+    pub completed: u64,
+    /// Steady-state throughput, req/s (naive ratio in streaming mode).
+    pub throughput_rps: f64,
+    /// Output-token throughput, tokens/s.
+    pub token_throughput: f64,
+    /// Mean busy fraction across targets.
+    pub target_utilization: f64,
+    /// Mean TTFT, ms.
+    pub mean_ttft_ms: f64,
+    /// p99 TTFT, ms (exact in full mode, ±bucket in streaming mode).
+    pub p99_ttft_ms: f64,
+    /// Mean TPOT, ms.
+    pub mean_tpot_ms: f64,
+    /// p99 TPOT, ms.
+    pub p99_tpot_ms: f64,
+    /// Mean end-to-end latency, ms.
+    pub mean_e2e_ms: f64,
+    /// Mean acceptance over speculating requests (NaN if none).
+    pub mean_acceptance: f64,
+    /// Mean target queueing delay, ms.
+    pub mean_queue_delay_ms: f64,
+    /// Mean one-way network delay, ms.
+    pub mean_net_delay_ms: f64,
+    /// Simulated duration, ms.
+    pub sim_duration_ms: f64,
+    /// DES events processed.
+    pub events_processed: u64,
+}
+
+impl CellMetrics {
+    /// Snapshot a full-record report.
+    pub fn from_report(rep: &SimReport) -> CellMetrics {
+        CellMetrics {
+            completed: rep.system.completed as u64,
+            throughput_rps: rep.system.throughput_rps,
+            token_throughput: rep.system.token_throughput,
+            target_utilization: rep.system.target_utilization,
+            mean_ttft_ms: rep.mean_ttft(),
+            p99_ttft_ms: rep.p_ttft(99.0),
+            mean_tpot_ms: rep.mean_tpot(),
+            p99_tpot_ms: rep.p_tpot(99.0),
+            mean_e2e_ms: rep.mean_e2e(),
+            mean_acceptance: rep.mean_acceptance(),
+            mean_queue_delay_ms: rep.system.mean_queue_delay_ms,
+            mean_net_delay_ms: rep.system.mean_net_delay_ms,
+            sim_duration_ms: rep.system.sim_duration_ms,
+            events_processed: rep.system.events_processed,
+        }
+    }
+
+    /// Snapshot a streaming report.
+    pub fn from_streaming(rep: &StreamingReport) -> CellMetrics {
+        CellMetrics {
+            completed: rep.stream.completed,
+            throughput_rps: rep.system.throughput_rps,
+            token_throughput: rep.system.token_throughput,
+            target_utilization: rep.system.target_utilization,
+            mean_ttft_ms: rep.stream.ttft_ms.mean,
+            p99_ttft_ms: rep.stream.ttft_ms.p99,
+            mean_tpot_ms: rep.stream.tpot_ms.mean,
+            p99_tpot_ms: rep.stream.tpot_ms.p99,
+            mean_e2e_ms: rep.stream.e2e_ms.mean,
+            mean_acceptance: rep.stream.mean_acceptance,
+            mean_queue_delay_ms: rep.system.mean_queue_delay_ms,
+            mean_net_delay_ms: rep.system.mean_net_delay_ms,
+            sim_duration_ms: rep.system.sim_duration_ms,
+            events_processed: rep.system.events_processed,
+        }
+    }
+
+    /// JSON encoding (wall-clock fields deliberately absent: summaries
+    /// must be byte-reproducible).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("completed", self.completed.into())
+            .with("throughput_rps", self.throughput_rps.into())
+            .with("token_throughput", self.token_throughput.into())
+            .with("target_utilization", self.target_utilization.into())
+            .with("mean_ttft_ms", self.mean_ttft_ms.into())
+            .with("p99_ttft_ms", self.p99_ttft_ms.into())
+            .with("mean_tpot_ms", self.mean_tpot_ms.into())
+            .with("p99_tpot_ms", self.p99_tpot_ms.into())
+            .with("mean_e2e_ms", self.mean_e2e_ms.into())
+            .with("mean_acceptance", self.mean_acceptance.into())
+            .with("mean_queue_delay_ms", self.mean_queue_delay_ms.into())
+            .with("mean_net_delay_ms", self.mean_net_delay_ms.into())
+            .with("sim_duration_ms", self.sim_duration_ms.into())
+            .with("events_processed", self.events_processed.into())
+    }
+}
+
+/// Outcome of one executed cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Cell index in grid expansion order.
+    pub index: usize,
+    /// `(axis, value)` labels from the grid.
+    pub labels: Vec<(String, String)>,
+    /// Metrics, or the error that kept the cell from running.
+    pub outcome: Result<CellMetrics, String>,
+}
+
+impl CellResult {
+    /// Metrics of a successful cell (panics on failed cells — use in
+    /// experiment code where the grid is known valid).
+    pub fn metrics(&self) -> &CellMetrics {
+        self.outcome.as_ref().expect("sweep cell failed")
+    }
+
+    /// Value of one axis label (None for an unknown axis name).
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Reasonable worker count for this host.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Expand and execute a grid on `threads` workers. Results are ordered
+/// by cell index regardless of scheduling.
+pub fn run_grid(grid: &SweepGrid, threads: usize) -> Result<Vec<CellResult>, String> {
+    let cells = grid.expand()?;
+    Ok(run_cells(&cells, grid.streaming, threads))
+}
+
+/// Execute pre-expanded cells on `threads` workers (clamped to the cell
+/// count; 0 is treated as 1).
+pub fn run_cells(cells: &[SweepCell], streaming: bool, threads: usize) -> Vec<CellResult> {
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, cells.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<CellResult>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let cell = &cells[i];
+                let result = CellResult {
+                    index: cell.index,
+                    labels: cell.labels.clone(),
+                    outcome: run_cell(&cell.cfg, streaming),
+                };
+                *slots[i].lock().expect("slot lock") = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("slot lock").expect("cell executed"))
+        .collect()
+}
+
+fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
+    // Fallible run variants: a window-policy construction failure (e.g.
+    // a bad AWC weights path) must become a per-cell error, not a panic
+    // on a scoped worker thread that would abort the whole sweep.
+    let sim = Simulator::try_new(cfg.clone())?;
+    Ok(if streaming {
+        CellMetrics::from_streaming(&sim.try_run_streaming()?)
+    } else {
+        CellMetrics::from_report(&sim.try_run()?)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn tiny_grid() -> SweepGrid {
+        let base = SimConfig::builder()
+            .seed(1)
+            .targets(2)
+            .drafters(8)
+            .requests(12)
+            .rate_per_s(20.0)
+            .build();
+        let mut g = SweepGrid::new(base);
+        g.rtt_ms = vec![5.0, 40.0];
+        g.seeds = vec![1, 2];
+        g
+    }
+
+    #[test]
+    fn results_ordered_by_cell_index() {
+        let grid = tiny_grid();
+        let rs = run_grid(&grid, 3).unwrap();
+        assert_eq!(rs.len(), 4);
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert!(r.metrics().completed > 0);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let grid = tiny_grid();
+        let a = run_grid(&grid, 1).unwrap();
+        let b = run_grid(&grid, 4).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+            let (mx, my) = (x.metrics(), y.metrics());
+            assert_eq!(mx.events_processed, my.events_processed);
+            assert!((mx.mean_ttft_ms - my.mean_ttft_ms).abs() < 1e-12);
+            assert!((mx.throughput_rps - my.throughput_rps).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn streaming_grid_runs() {
+        let mut grid = tiny_grid();
+        grid.streaming = true;
+        let rs = run_grid(&grid, 2).unwrap();
+        assert_eq!(rs.len(), 4);
+        assert!(rs[0].metrics().mean_ttft_ms > 0.0);
+    }
+
+    #[test]
+    fn invalid_cell_reports_error_not_panic() {
+        let mut grid = tiny_grid();
+        // Unknown dataset passes config validation but fails simulator
+        // construction — the cell must carry the error.
+        grid.datasets = vec!["nope".into()];
+        let rs = run_grid(&grid, 2).unwrap();
+        assert!(rs.iter().all(|r| r.outcome.is_err()));
+    }
+
+    #[test]
+    fn unloadable_window_policy_reports_error_not_panic() {
+        use crate::config::WindowKind;
+        let mut grid = tiny_grid();
+        // Passes validate() and try_new(); policy construction is what
+        // fails. Must become a per-cell error, not a worker panic.
+        grid.windows = vec![WindowKind::Awc {
+            weights_path: Some("/nonexistent/awc_weights.json".into()),
+        }];
+        let rs = run_grid(&grid, 2).unwrap();
+        assert!(rs.iter().all(|r| r.outcome.is_err()));
+    }
+}

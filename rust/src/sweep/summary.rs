@@ -1,0 +1,192 @@
+//! Sweep result aggregation: deterministic JSON emission and an ASCII
+//! table for terminals.
+
+use super::runner::CellResult;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Ordered collection of executed cells plus run metadata.
+#[derive(Clone, Debug)]
+pub struct SweepSummary {
+    /// Cell results in grid expansion order.
+    pub cells: Vec<CellResult>,
+    /// Whether cells ran in streaming-metrics mode.
+    pub streaming: bool,
+}
+
+impl SweepSummary {
+    /// Wrap runner output.
+    pub fn new(cells: Vec<CellResult>, streaming: bool) -> SweepSummary {
+        SweepSummary { cells, streaming }
+    }
+
+    /// Cells that failed to run.
+    pub fn n_failed(&self) -> usize {
+        self.cells.iter().filter(|c| c.outcome.is_err()).count()
+    }
+
+    /// Axis keys whose value varies across cells (the interesting
+    /// columns; single-cell summaries report every axis).
+    pub fn varying_axes(&self) -> Vec<String> {
+        let Some(first) = self.cells.first() else {
+            return Vec::new();
+        };
+        if self.cells.len() == 1 {
+            return first.labels.iter().map(|(k, _)| k.clone()).collect();
+        }
+        first
+            .labels
+            .iter()
+            .filter(|(k, v)| {
+                self.cells
+                    .iter()
+                    .any(|c| c.label(k).is_some_and(|cv| cv != v))
+            })
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Deterministic JSON: cells in index order, insertion-ordered keys,
+    /// no wall-clock fields — repeated runs emit identical bytes
+    /// regardless of thread count.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("streaming", self.streaming.into())
+            .with("cells", (self.cells.len() as u64).into())
+            .with("failed", (self.n_failed() as u64).into())
+            .with(
+                "results",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            let mut labels = Json::obj();
+                            for (k, v) in &c.labels {
+                                labels.set(k, v.as_str().into());
+                            }
+                            let row = Json::obj()
+                                .with("index", (c.index as u64).into())
+                                .with("labels", labels);
+                            match &c.outcome {
+                                Ok(m) => row.with("metrics", m.to_json()),
+                                Err(e) => row.with("error", e.as_str().into()),
+                            }
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Render an ASCII table of the varying axes plus headline metrics.
+    pub fn render_table(&self) -> String {
+        let axes = self.varying_axes();
+        let mut headers: Vec<&str> = vec!["cell"];
+        headers.extend(axes.iter().map(String::as_str));
+        headers.extend([
+            "done", "tput r/s", "ttft ms", "p99 ttft", "tpot ms", "p99 tpot", "acc", "util",
+        ]);
+        let mut table = Table::new(&headers).with_title(&format!(
+            "sweep — {} cells{}",
+            self.cells.len(),
+            if self.streaming { " (streaming)" } else { "" }
+        ));
+        for c in &self.cells {
+            let mut row = vec![c.index.to_string()];
+            for a in &axes {
+                row.push(c.label(a).unwrap_or_default().to_string());
+            }
+            match &c.outcome {
+                Ok(m) => row.extend([
+                    m.completed.to_string(),
+                    fnum(m.throughput_rps, 1),
+                    fnum(m.mean_ttft_ms, 0),
+                    fnum(m.p99_ttft_ms, 0),
+                    fnum(m.mean_tpot_ms, 1),
+                    fnum(m.p99_tpot_ms, 1),
+                    fnum(m.mean_acceptance, 2),
+                    fnum(m.target_utilization, 2),
+                ]),
+                Err(e) => {
+                    row.push(format!("error: {e}"));
+                    while row.len() < headers.len() {
+                        row.push(String::new());
+                    }
+                }
+            }
+            table.row(row);
+        }
+        table.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::runner::CellMetrics;
+
+    fn metrics(x: f64) -> CellMetrics {
+        CellMetrics {
+            completed: 10,
+            throughput_rps: x,
+            token_throughput: 100.0,
+            target_utilization: 0.5,
+            mean_ttft_ms: 100.0,
+            p99_ttft_ms: 200.0,
+            mean_tpot_ms: 20.0,
+            p99_tpot_ms: 40.0,
+            mean_e2e_ms: 500.0,
+            mean_acceptance: 0.8,
+            mean_queue_delay_ms: 1.0,
+            mean_net_delay_ms: 5.0,
+            sim_duration_ms: 1000.0,
+            events_processed: 1234,
+        }
+    }
+
+    fn cell(i: usize, rtt: &str, ok: bool) -> CellResult {
+        CellResult {
+            index: i,
+            labels: vec![
+                ("dataset".into(), "gsm8k".into()),
+                ("rtt_ms".into(), rtt.into()),
+            ],
+            outcome: if ok {
+                Ok(metrics(10.0 + i as f64))
+            } else {
+                Err("boom".into())
+            },
+        }
+    }
+
+    #[test]
+    fn varying_axes_detected() {
+        let s = SweepSummary::new(vec![cell(0, "5", true), cell(1, "40", true)], false);
+        assert_eq!(s.varying_axes(), vec!["rtt_ms".to_string()]);
+        let single = SweepSummary::new(vec![cell(0, "5", true)], false);
+        assert_eq!(single.varying_axes().len(), 2);
+    }
+
+    #[test]
+    fn json_shape_and_determinism() {
+        let s = SweepSummary::new(vec![cell(0, "5", true), cell(1, "40", false)], true);
+        let j = s.to_json();
+        assert_eq!(j.get("cells").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("failed").unwrap().as_u64(), Some(1));
+        let rows = j.get("results").unwrap().as_arr().unwrap();
+        assert!(rows[0].get("metrics").is_some());
+        assert!(rows[1].get("error").is_some());
+        assert_eq!(
+            s.to_json().to_string_pretty(),
+            j.to_string_pretty(),
+            "emission is deterministic"
+        );
+    }
+
+    #[test]
+    fn table_renders_errors_inline() {
+        let s = SweepSummary::new(vec![cell(0, "5", true), cell(1, "40", false)], false);
+        let t = s.render_table();
+        assert!(t.contains("error: boom"));
+        assert!(t.contains("rtt_ms"));
+    }
+}

@@ -54,6 +54,28 @@ impl Json {
         }
     }
 
+    /// Mutable access to a field of an object.
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Remove a key from an object, returning its value (None when the
+    /// key is absent or `self` is not an object). Remaining keys keep
+    /// their insertion order, so serialized output stays deterministic —
+    /// the golden-report tests use this to drop wall-clock fields.
+    pub fn remove(&mut self, key: &str) -> Option<Json> {
+        match self {
+            Json::Obj(pairs) => {
+                let idx = pairs.iter().position(|(k, _)| k == key)?;
+                Some(pairs.remove(idx).1)
+            }
+            _ => None,
+        }
+    }
+
     /// Get by path, e.g. `j.path(&["network", "rtt_ms"])`.
     pub fn path(&self, keys: &[&str]) -> Option<&Json> {
         let mut cur = self;
@@ -546,6 +568,21 @@ mod tests {
         let mut v = Json::obj().with("k", 1.0.into());
         v.set("k", 2.0.into());
         assert_eq!(v.get("k").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn remove_and_get_mut() {
+        let mut v = Json::obj()
+            .with("a", 1.0.into())
+            .with("b", 2.0.into())
+            .with("c", 3.0.into());
+        assert_eq!(v.remove("b"), Some(Json::Num(2.0)));
+        assert_eq!(v.remove("b"), None);
+        // Remaining keys keep insertion order.
+        assert_eq!(v.to_string_compact(), r#"{"a":1,"c":3}"#);
+        *v.get_mut("a").unwrap() = Json::Num(9.0);
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(9.0));
+        assert_eq!(Json::Num(1.0).remove("x"), None);
     }
 
     #[test]

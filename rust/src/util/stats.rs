@@ -253,6 +253,60 @@ impl Histogram {
     pub fn count(&self) -> u64 {
         self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
     }
+
+    /// Observations below the lower edge.
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    /// Observations at or above the upper edge.
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// Width of one bucket — the resolution of [`Histogram::percentile`].
+    pub fn bucket_width(&self) -> f64 {
+        self.width
+    }
+
+    /// Lower edge of the histogram range.
+    pub fn lo(&self) -> f64 {
+        self.lo
+    }
+
+    /// Upper edge of the histogram range.
+    pub fn hi(&self) -> f64 {
+        self.lo + self.width * self.buckets.len() as f64
+    }
+
+    /// Percentile estimate (`q` in [0, 100]) from bucket counts, with
+    /// linear interpolation inside the selected bucket. Accurate to one
+    /// bucket width; this is what lets a streaming sink report p50/p99
+    /// without retaining per-observation samples. Underflow clamps to the
+    /// lower edge, overflow to the upper edge; NaN when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 100.0) / 100.0) * total as f64;
+        let mut cum = self.underflow as f64;
+        if rank <= cum && self.underflow > 0 {
+            return self.lo;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c as f64;
+            if rank <= next {
+                let frac = ((rank - cum) / c as f64).clamp(0.0, 1.0);
+                return self.lo + self.width * (i as f64 + frac);
+            }
+            cum = next;
+        }
+        self.hi()
+    }
 }
 
 #[cfg(test)]
@@ -334,6 +388,41 @@ mod tests {
         assert_eq!(h.buckets()[0], 2); // 0.0, 0.5
         assert_eq!(h.buckets()[5], 1); // 5.0
         assert_eq!(h.buckets()[9], 1); // 9.99
+    }
+
+    #[test]
+    fn histogram_percentiles_track_exact_within_bucket() {
+        // 1..=1000 in [0, 1000) with 100 buckets of width 10: the
+        // histogram percentile must agree with the exact one to within a
+        // bucket width everywhere.
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let mut h = Histogram::new(0.0, 1000.0, 100);
+        for &x in &xs {
+            h.push(x);
+        }
+        for q in [0.0, 1.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let exact = percentile(&xs, q);
+            let approx = h.percentile(q);
+            assert!(
+                (approx - exact).abs() <= h.bucket_width() + 1e-9,
+                "q={q}: approx {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_percentile_edge_cases() {
+        let h = Histogram::new(0.0, 10.0, 10);
+        assert!(h.percentile(50.0).is_nan(), "empty histogram");
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0); // underflow
+        h.push(50.0); // overflow
+        assert_eq!(h.percentile(0.0), 0.0);
+        assert_eq!(h.percentile(100.0), 10.0);
+        assert_eq!(h.lo(), 0.0);
+        assert_eq!(h.hi(), 10.0);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
     }
 
     #[test]

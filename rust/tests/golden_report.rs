@@ -1,0 +1,136 @@
+//! Golden-report regression tests: a canonical `SimReport` JSON snapshot
+//! for one fixed seed/config must stay bit-identical (wall-clock
+//! excluded), so refactors cannot silently change simulation semantics —
+//! plus the streaming-vs-full sink equivalence cross-checks.
+//!
+//! The snapshot self-bootstraps: on a machine where
+//! `tests/golden/sim_report_seed9.json` does not exist yet (or when
+//! `DSD_UPDATE_GOLDEN=1`), the test writes it and passes; once the file
+//! is committed, any byte drift is a failure. Regenerate deliberately
+//! with `DSD_UPDATE_GOLDEN=1 cargo test -q golden`.
+
+use dsd::config::SimConfig;
+use dsd::sim::Simulator;
+use dsd::util::json::Json;
+use std::path::PathBuf;
+
+fn canonical_cfg() -> SimConfig {
+    SimConfig::builder()
+        .seed(9)
+        .targets(2)
+        .drafters(16)
+        .requests(40)
+        .rate_per_s(20.0)
+        .dataset("gsm8k")
+        .build()
+}
+
+/// Canonical JSON: full report with the wall-clock field removed (the
+/// only nondeterministic value in the report).
+fn canonical_json(cfg: SimConfig) -> String {
+    let mut j = Simulator::new(cfg).run().to_json();
+    j.get_mut("system")
+        .expect("system section")
+        .remove("wall_ms")
+        .expect("wall_ms present");
+    let mut text = j.to_string_pretty();
+    text.push('\n');
+    text
+}
+
+#[test]
+fn golden_report_snapshot() {
+    let text = canonical_json(canonical_cfg());
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/sim_report_seed9.json");
+    let update = std::env::var_os("DSD_UPDATE_GOLDEN").is_some();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &text).unwrap();
+        eprintln!("golden: wrote snapshot {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        text,
+        want,
+        "SimReport JSON drifted from the committed snapshot. If the change \
+         is intentional, regenerate with DSD_UPDATE_GOLDEN=1 cargo test."
+    );
+}
+
+#[test]
+fn golden_json_is_reproducible_in_process() {
+    // Two runs in one process must serialize identically — the cheap
+    // invariant the snapshot file extends across commits.
+    assert_eq!(canonical_json(canonical_cfg()), canonical_json(canonical_cfg()));
+}
+
+/// Streaming ≡ full cross-check at 10k requests: means must agree to
+/// floating-point noise, percentiles to one histogram bucket.
+#[test]
+fn streaming_sink_matches_full_sink_10k() {
+    let cfg = SimConfig::builder()
+        .seed(3)
+        .targets(4)
+        .drafters(64)
+        .requests(10_000)
+        .rate_per_s(10.0)
+        .dataset("gsm8k")
+        .build();
+    let full = Simulator::new(cfg.clone()).run();
+    let stream = Simulator::new(cfg).run_streaming();
+    assert_eq!(stream.stream.completed as usize, full.system.completed);
+    assert_eq!(stream.system.events_processed, full.system.events_processed);
+
+    // Means: both modes fold the same per-request values; Welford vs
+    // arithmetic mean differ only by rounding.
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel(stream.stream.ttft_ms.mean, full.mean_ttft()) < 1e-9);
+    assert!(rel(stream.stream.tpot_ms.mean, full.mean_tpot()) < 1e-9);
+    assert!(rel(stream.stream.e2e_ms.mean, full.mean_e2e()) < 1e-9);
+    assert!(rel(stream.stream.mean_acceptance, full.mean_acceptance()) < 1e-9);
+
+    // Percentiles: histogram estimates carry one bucket of quantization
+    // error plus up to one order statistic of rank slack (the exact
+    // estimator interpolates at rank q(n−1)/100, the histogram walks to
+    // rank qn/100), so allow a bucket plus a small relative margin.
+    let cases = [
+        (stream.stream.ttft_ms, full.p_ttft(50.0), full.p_ttft(99.0)),
+        (stream.stream.tpot_ms, full.p_tpot(50.0), full.p_tpot(99.0)),
+    ];
+    for (m, exact_p50, exact_p99) in cases {
+        let tol = |exact: f64| m.resolution + exact.abs() * 0.02 + 1e-9;
+        assert!(
+            (m.p50 - exact_p50).abs() <= tol(exact_p50),
+            "p50 {} vs exact {exact_p50} (resolution {})",
+            m.p50,
+            m.resolution
+        );
+        assert!(
+            (m.p99 - exact_p99).abs() <= tol(exact_p99),
+            "p99 {} vs exact {exact_p99} (resolution {})",
+            m.p99,
+            m.resolution
+        );
+    }
+}
+
+/// Acceptance-criteria scale demo: a 1M-request cell in streaming mode.
+/// Memory stays bounded (no per-request record vector); runtime is
+/// minutes in release mode, which is why the test is opt-in.
+#[test]
+#[ignore = "long-running scale demo (~1M requests); run with: cargo test --release -- --ignored"]
+fn streaming_one_million_requests() {
+    let cfg = SimConfig::builder()
+        .seed(1)
+        .targets(8)
+        .drafters(256)
+        .requests(1_000_000)
+        .rate_per_s(4000.0)
+        .dataset("gsm8k")
+        .build();
+    let rep = Simulator::new(cfg).run_streaming();
+    assert_eq!(rep.stream.completed, 1_000_000);
+    assert!(rep.stream.ttft_ms.mean > 0.0);
+    assert!(rep.stream.tpot_ms.p99 >= rep.stream.tpot_ms.p50);
+}

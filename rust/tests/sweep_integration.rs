@@ -1,0 +1,137 @@
+//! Integration tests for the sweep subsystem: YAML grid → parallel
+//! runner → summary JSON, with the acceptance-criteria determinism check
+//! (≥12 cells, ≥2 worker threads, byte-identical summaries).
+
+use dsd::sweep::{run_grid, SweepGrid, SweepSummary};
+
+/// 16-cell grid over RTT × rate × window × seed on a tiny cluster.
+fn grid_yaml() -> &'static str {
+    "\
+base:
+  workload:
+    requests: 24
+    rate_per_s: 20
+  cluster:
+    targets:
+      - count: 2
+        gpu: a100
+        tp: 4
+        model: llama2-70b
+    drafters:
+      - count: 10
+        gpu: a40
+        model: llama2-7b
+sweep:
+  rtt_ms: [5, 40]
+  rate_per_s: [15, 30]
+  window: [static, fused]
+  seeds: [1, 2]
+"
+}
+
+fn summary_json(threads: usize) -> String {
+    let grid = SweepGrid::from_yaml(grid_yaml()).unwrap();
+    assert!(grid.n_cells() >= 12, "grid must satisfy the ≥12-cell bar");
+    let cells = run_grid(&grid, threads).unwrap();
+    let summary = SweepSummary::new(cells, grid.streaming);
+    assert_eq!(summary.n_failed(), 0);
+    summary.to_json().to_string_pretty()
+}
+
+#[test]
+fn sweep_summary_bytes_identical_across_threads_and_runs() {
+    let serial = summary_json(1);
+    let par_a = summary_json(4);
+    let par_b = summary_json(4);
+    assert_eq!(par_a, par_b, "repeated parallel runs must emit identical bytes");
+    assert_eq!(serial, par_a, "thread count must not change the summary");
+}
+
+#[test]
+fn sweep_cells_reflect_their_axes() {
+    let grid = SweepGrid::from_yaml(grid_yaml()).unwrap();
+    let cells = run_grid(&grid, 3).unwrap();
+    assert_eq!(cells.len(), 16);
+    // Higher RTT hurts distributed TPOT when everything else is fixed:
+    // compare (rtt=5) vs (rtt=40) for the static-window, rate=15, seed=1
+    // cells. Expansion order: window → rtt → rate → seed.
+    let find = |window: &str, rtt: &str, rate: &str, seed: &str| {
+        cells
+            .iter()
+            .find(|c| {
+                c.label("window") == Some(window)
+                    && c.label("rtt_ms") == Some(rtt)
+                    && c.label("rate_per_s") == Some(rate)
+                    && c.label("seed") == Some(seed)
+            })
+            .expect("cell present")
+    };
+    let lo = find("static4", "5", "15", "1");
+    let hi = find("static4", "40", "15", "1");
+    assert!(
+        hi.metrics().mean_tpot_ms > lo.metrics().mean_tpot_ms,
+        "rtt 40 tpot {} must exceed rtt 5 tpot {}",
+        hi.metrics().mean_tpot_ms,
+        lo.metrics().mean_tpot_ms
+    );
+    // Fused cells never speculate.
+    let fused = find("fused", "5", "15", "1");
+    assert!(fused.metrics().mean_acceptance.is_nan());
+    assert_eq!(fused.metrics().completed, 24);
+}
+
+#[test]
+fn streaming_sweep_matches_full_sweep_counts_and_means() {
+    let mut grid = SweepGrid::from_yaml(grid_yaml()).unwrap();
+    let full = run_grid(&grid, 2).unwrap();
+    grid.streaming = true;
+    let stream = run_grid(&grid, 2).unwrap();
+    for (f, s) in full.iter().zip(&stream) {
+        let (fm, sm) = (f.metrics(), s.metrics());
+        assert_eq!(fm.completed, sm.completed);
+        assert_eq!(fm.events_processed, sm.events_processed);
+        assert!((fm.mean_ttft_ms - sm.mean_ttft_ms).abs() < 1e-9);
+        assert!((fm.mean_tpot_ms - sm.mean_tpot_ms).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn heterogeneous_link_grid_runs() {
+    // Two drafter groups behind very different links in one deployment;
+    // the grid sweeps RTT *around* the overrides (overrides win for
+    // their pool — the global axis applies to the plain pool only).
+    let yaml = "\
+base:
+  workload:
+    requests: 20
+    rate_per_s: 15
+  cluster:
+    targets:
+      - count: 2
+        gpu: a100
+        tp: 4
+        model: llama2-70b
+    drafters:
+      - count: 5
+        gpu: a40
+        model: llama2-7b
+        rtt_ms: 120
+        bandwidth_mbps: 20
+      - count: 5
+        gpu: v100
+        model: qwen-7b
+sweep:
+  rtt_ms: [5, 10]
+  seeds: [1]
+streaming: true
+";
+    let grid = SweepGrid::from_yaml(yaml).unwrap();
+    let cells = run_grid(&grid, 2).unwrap();
+    assert_eq!(cells.len(), 2);
+    for c in &cells {
+        assert_eq!(c.metrics().completed, 20);
+        // Half the fleet pays a 120 ms RTT, so mean one-way delay must
+        // exceed what the global 5/10 ms RTT alone would produce.
+        assert!(c.metrics().mean_net_delay_ms > 10.0);
+    }
+}
