@@ -10,9 +10,19 @@
 //! features mapped to the scenario's optimal γ (fused ⇒ γ = 1), so the
 //! network learns the optimum from any operating point, not just from
 //! near-optimal states.
+//!
+//! Execution rides the generic sweep subsystem: every scenario expands
+//! to a [`crate::sweep::SweepGrid`] over the (window × probe-seed) axes
+//! and runs on the parallel cached runner, so dataset generation
+//! inherits per-cell result caching and kill-resume for free
+//! (`dsd sweep-dataset --cache-dir <dir>`). Probe configs, seeds, and
+//! the averaging arithmetic are unchanged from the direct implementation
+//! — `rust/tests/awc_dataset_equiv.rs` pins bit-for-bit row equality
+//! against an independent reference.
 
 use crate::config::WindowKind;
-use crate::sim::Simulator;
+use crate::sweep::cache::CellCache;
+use crate::sweep::runner::{run_cells_cached, RunStats};
 use crate::util::json::Json;
 
 /// One labeled training example.
@@ -117,6 +127,11 @@ impl SweepGrid {
     }
 }
 
+/// Seeds averaged per probe: the labeling argmin is sensitive to
+/// run-to-run noise, and a flipped label teaches the network a wrong
+/// optimum for the whole scenario.
+const PROBE_SEEDS: u64 = 3;
+
 /// Result of probing one scenario with every window configuration.
 struct ProbeResult {
     gamma: u32, // 0 = fused
@@ -128,14 +143,31 @@ struct ProbeResult {
 
 /// Run the full sweep; returns all labeled rows.
 pub fn generate_dataset(grid: &SweepGrid) -> Vec<DatasetRow> {
+    generate_dataset_cached(grid, None, crate::sweep::default_threads()).0
+}
+
+/// [`generate_dataset`] with explicit threading and an optional cell
+/// cache: each probe run persists as it completes, so a killed dataset
+/// sweep resumes from its cell directory exactly like `dsd sweep` runs.
+pub fn generate_dataset_cached(
+    grid: &SweepGrid,
+    cache: Option<&CellCache>,
+    threads: usize,
+) -> (Vec<DatasetRow>, RunStats) {
     let mut rows = Vec::new();
+    let mut stats = RunStats::default();
     let mut scen_idx = 0u64;
     for ds in &grid.datasets {
         for &n_d in &grid.drafter_counts {
             for &rtt in &grid.rtts {
                 for &mult in &grid.rate_multipliers {
                     let scenario = format!("{ds}-20t{n_d}d-rtt{rtt}-x{mult}");
-                    let probes = probe_scenario(grid, ds, n_d, rtt, mult, scen_idx);
+                    let (probes, s) =
+                        probe_scenario(grid, ds, n_d, rtt, mult, scen_idx, cache, threads);
+                    stats.total += s.total;
+                    stats.executed += s.executed;
+                    stats.cache_hits += s.cache_hits;
+                    stats.corrupt_entries += s.corrupt_entries;
                     let label = label_from_probes(&probes, grid.weights);
                     for p in &probes {
                         rows.push(DatasetRow {
@@ -153,9 +185,49 @@ pub fn generate_dataset(grid: &SweepGrid) -> Vec<DatasetRow> {
             }
         }
     }
-    rows
+    (rows, stats)
 }
 
+/// Expand one scenario into a generic sweep grid over the
+/// (window × probe-seed) axes. The base is the paper deployment config
+/// the direct implementation built per probe; the grid's cell configs
+/// are field-for-field identical to it, which is what keeps the cached
+/// path bit-compatible (and lets cells hash/persist like any sweep).
+fn scenario_grid(
+    grid: &SweepGrid,
+    dataset: &str,
+    n_drafters: usize,
+    rtt: f64,
+    rate_mult: f64,
+    scen_idx: u64,
+) -> crate::sweep::SweepGrid {
+    use crate::config::{BatchingKind, RoutingKind};
+    use crate::experiments::common::{paper_config, Scale};
+    let mut base = paper_config(
+        dataset,
+        n_drafters,
+        rtt,
+        RoutingKind::Jsq,
+        BatchingKind::Lab,
+        WindowKind::Static(4),
+        Scale(grid.scale),
+        grid.seed,
+    );
+    base.workload.rate_per_s *= rate_mult;
+    let mut g = crate::sweep::SweepGrid::new(base);
+    g.windows = grid
+        .gammas
+        .iter()
+        .map(|&gamma| WindowKind::Static(gamma))
+        .chain(std::iter::once(WindowKind::FusedOnly))
+        .collect();
+    g.seeds = (0..PROBE_SEEDS)
+        .map(|s| grid.seed.wrapping_add(scen_idx * 977 + s * 31))
+        .collect();
+    g
+}
+
+#[allow(clippy::too_many_arguments)]
 fn probe_scenario(
     grid: &SweepGrid,
     dataset: &str,
@@ -163,36 +235,33 @@ fn probe_scenario(
     rtt: f64,
     rate_mult: f64,
     scen_idx: u64,
-) -> Vec<ProbeResult> {
-    use crate::config::{BatchingKind, RoutingKind};
-    use crate::experiments::common::{paper_config, Scale};
-    let mut out = Vec::new();
-    let mut run = |window: WindowKind, gamma_tag: u32| {
-        // Average two seeds per probe: the labeling argmin is sensitive
-        // to run-to-run noise, and a flipped label teaches the network a
-        // wrong optimum for the whole scenario.
+    cache: Option<&CellCache>,
+    threads: usize,
+) -> (Vec<ProbeResult>, RunStats) {
+    let g = scenario_grid(grid, dataset, n_drafters, rtt, rate_mult, scen_idx);
+    let cells = g.expand().expect("awc scenario grid expands");
+    let (results, stats) = run_cells_cached(&cells, g.streaming, threads, cache);
+    // Cells arrive in (window outer, seed inner) order — the same order
+    // the direct implementation probed in. Seed replicas of one window
+    // are adjacent; fold them with the exact arithmetic (`+= x / N`, in
+    // seed order) the direct code used, so averaged values carry
+    // identical floating-point rounding.
+    let n_windows = grid.gammas.len() + 1;
+    let per = PROBE_SEEDS as usize;
+    assert_eq!(results.len(), n_windows * per, "awc probe cell count");
+    let mut out = Vec::with_capacity(n_windows);
+    for w_idx in 0..n_windows {
+        let gamma_tag = if w_idx < grid.gammas.len() { grid.gammas[w_idx] } else { 0 };
         let mut feat_acc = [0.0f64; 5];
         let (mut tpot, mut ttft, mut tput) = (0.0, 0.0, 0.0);
-        const PROBE_SEEDS: u64 = 3;
-        for s in 0..PROBE_SEEDS {
-            let mut cfg = paper_config(
-                dataset,
-                n_drafters,
-                rtt,
-                RoutingKind::Jsq,
-                BatchingKind::Lab,
-                window.clone(),
-                Scale(grid.scale),
-                grid.seed.wrapping_add(scen_idx * 977 + s * 31),
-            );
-            cfg.workload.rate_per_s *= rate_mult;
-            let rep = Simulator::new(cfg).run();
-            for (acc, &x) in feat_acc.iter_mut().zip(&rep.system.mean_features) {
+        for s in 0..per {
+            let m = results[w_idx * per + s].metrics();
+            for (acc, &x) in feat_acc.iter_mut().zip(&m.mean_features) {
                 *acc += x / PROBE_SEEDS as f64;
             }
-            tpot += rep.mean_tpot() / PROBE_SEEDS as f64;
-            ttft += rep.mean_ttft() / PROBE_SEEDS as f64;
-            tput += rep.system.throughput_rps / PROBE_SEEDS as f64;
+            tpot += m.mean_tpot_ms / PROBE_SEEDS as f64;
+            ttft += m.mean_ttft_ms / PROBE_SEEDS as f64;
+            tput += m.throughput_rps / PROBE_SEEDS as f64;
         }
         let mut features = feat_acc;
         if gamma_tag == 0 {
@@ -212,12 +281,8 @@ fn probe_scenario(
             ttft,
             tput,
         });
-    };
-    for &g in &grid.gammas {
-        run(WindowKind::Static(g), g);
     }
-    run(WindowKind::FusedOnly, 0);
-    out
+    (out, stats)
 }
 
 /// The labeling rule (paper §4.2): the configuration minimizing
@@ -317,6 +382,36 @@ mod tests {
         let l10 = label_at("rtt10");
         let l60 = label_at("rtt60");
         assert!(l10 >= 1.0 && l60 >= 1.0);
+    }
+
+    #[test]
+    fn cached_dataset_generation_resumes_without_rework() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-awc-dataset-cache-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let mut grid = SweepGrid::tiny();
+        // Shrink further: one rtt, two gammas — enough to exercise the
+        // cache plumbing.
+        grid.rtts = vec![10.0];
+        grid.gammas = vec![2, 4];
+        let (cold_rows, cold) = generate_dataset_cached(&grid, Some(&cache), 2);
+        assert_eq!(cold.executed, cold.total);
+        assert_eq!(cold.cache_hits, 0);
+        let (warm_rows, warm) = generate_dataset_cached(&grid, Some(&cache), 2);
+        assert_eq!(warm.executed, 0, "warm dataset sweep must execute nothing");
+        assert_eq!(warm.cache_hits, warm.total);
+        assert_eq!(cold_rows.len(), warm_rows.len());
+        for (a, b) in cold_rows.iter().zip(&warm_rows) {
+            assert_eq!(
+                a.to_json().to_string_compact(),
+                b.to_json().to_string_compact(),
+                "cached rows must be byte-identical"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

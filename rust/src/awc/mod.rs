@@ -8,7 +8,9 @@ pub mod mlp;
 pub mod policy;
 pub mod stabilize;
 
-pub use dataset::{generate_dataset, label_scenario, DatasetRow, SweepGrid};
+pub use dataset::{
+    generate_dataset, generate_dataset_cached, label_scenario, DatasetRow, SweepGrid,
+};
 pub use mlp::AwcWeights;
 pub use policy::AwcPolicy;
 pub use stabilize::{Stabilizer, StabilizerConfig};

@@ -265,6 +265,120 @@ impl SimConfig {
         Ok(b.cfg)
     }
 
+    /// Canonical JSON of the fully *resolved* configuration: every knob,
+    /// including values that came from defaults, in a fixed structure.
+    /// Two configs that would drive the simulator identically serialize
+    /// to identical bytes (via [`Json::to_string_canonical`]) regardless
+    /// of how they were built — YAML key order, builder calls, or sweep
+    /// expansion. This is the content-hash basis for sweep cell caching
+    /// ([`crate::sweep::cache`]).
+    pub fn to_canonical_json(&self) -> Json {
+        fn pool_json(p: &PoolSpec) -> Json {
+            let mut j = Json::obj()
+                .with("count", p.count.into())
+                .with("gpu", p.gpu.name.into())
+                .with("tp", p.tp.into())
+                .with("model", p.model.name.into());
+            if let Some(l) = &p.link {
+                let mut lj = Json::obj();
+                if let Some(x) = l.rtt_ms {
+                    lj.set("rtt_ms", x.into());
+                }
+                if let Some(x) = l.jitter_ms {
+                    lj.set("jitter_ms", x.into());
+                }
+                if let Some(x) = l.bandwidth_mbps {
+                    lj.set("bandwidth_mbps", x.into());
+                }
+                j.set("link", lj);
+            }
+            j
+        }
+        fn window_json(w: &WindowKind) -> Json {
+            match w {
+                WindowKind::Static(g) => {
+                    Json::obj().with("kind", "static".into()).with("gamma", (*g).into())
+                }
+                WindowKind::Dynamic { init, lo, hi } => Json::obj()
+                    .with("kind", "dynamic".into())
+                    .with("init", (*init).into())
+                    .with("lo", (*lo).into())
+                    .with("hi", (*hi).into()),
+                WindowKind::Awc { weights_path } => {
+                    let mut j = Json::obj().with("kind", "awc".into());
+                    match weights_path {
+                        Some(p) => j.set("weights", p.as_str().into()),
+                        None => j.set("weights", Json::Null),
+                    };
+                    j
+                }
+                WindowKind::FusedOnly => Json::obj().with("kind", "fused".into()),
+            }
+        }
+        let routing = match self.routing {
+            RoutingKind::Random => "random",
+            RoutingKind::RoundRobin => "round_robin",
+            RoutingKind::Jsq => "jsq",
+        };
+        let batching = match self.batching {
+            BatchingKind::Fifo => "fifo",
+            BatchingKind::Lab => "lab",
+        };
+        let mut workload = Json::obj()
+            .with("dataset", self.workload.dataset.as_str().into())
+            .with("requests", self.workload.requests.into())
+            .with("rate_per_s", self.workload.rate_per_s.into());
+        if let Some(p) = &self.workload.trace_path {
+            workload.set("trace_path", p.as_str().into());
+        }
+        // Non-finite bandwidth (the "disabled" default) serializes to
+        // null — distinct from every finite setting, which is all the
+        // hash needs; NaN never reaches here (validate() rejects it).
+        //
+        // The seed is emitted as a decimal *string*: JSON numbers here
+        // are f64, and distinct u64 seeds ≥ 2^53 (plausible with
+        // hash-derived or wrapping-arithmetic seeds) would collide to
+        // one f64 — and therefore one cache key — if emitted as Num.
+        Json::obj()
+            .with("seed", self.seed.to_string().into())
+            .with(
+                "cluster",
+                Json::obj()
+                    .with(
+                        "targets",
+                        Json::Arr(self.target_pools.iter().map(pool_json).collect()),
+                    )
+                    .with(
+                        "drafters",
+                        Json::Arr(self.drafter_pools.iter().map(pool_json).collect()),
+                    ),
+            )
+            .with(
+                "network",
+                Json::obj()
+                    .with("rtt_ms", self.network.rtt_ms.into())
+                    .with("jitter_ms", self.network.jitter_ms.into())
+                    .with("bandwidth_mbps", self.network.bandwidth_mbps.into()),
+            )
+            .with(
+                "policies",
+                Json::obj()
+                    .with("routing", routing.into())
+                    .with("batching", batching.into())
+                    .with("window", window_json(&self.window)),
+            )
+            .with(
+                "batch",
+                Json::obj()
+                    .with("decode_batch", self.batch.decode_batch.into())
+                    .with("fused_batch", self.batch.fused_batch.into())
+                    .with("prefill_batch", self.batch.prefill_batch.into())
+                    .with("window_ms", self.batch.window_ms.into()),
+            )
+            .with("workload", workload)
+            .with("max_sim_ms", self.max_sim_ms.into())
+    }
+
     /// Total target count across pools.
     pub fn n_targets(&self) -> usize {
         self.target_pools.iter().map(|p| p.count).sum()
@@ -650,6 +764,78 @@ cluster:
         assert!(SimConfig::from_yaml(y).unwrap_err().contains("link"));
         let y2 = "network:\n  bandwidth_mbps: 0\n";
         assert!(SimConfig::from_yaml(y2).unwrap_err().contains("bandwidth"));
+    }
+
+    #[test]
+    fn canonical_json_is_total_and_stable() {
+        let cfg = SimConfig::builder().build();
+        let a = cfg.to_canonical_json().to_string_canonical();
+        let b = cfg.clone().to_canonical_json().to_string_canonical();
+        assert_eq!(a, b);
+        // Every section present, including defaulted knobs.
+        let j = cfg.to_canonical_json();
+        assert!(j.path(&["network", "rtt_ms"]).is_some());
+        assert!(j.path(&["policies", "window", "kind"]).is_some());
+        assert!(j.path(&["batch", "decode_batch"]).is_some());
+        assert_eq!(j.get("seed").unwrap().as_str(), Some("42"));
+    }
+
+    #[test]
+    fn canonical_json_distinguishes_seeds_beyond_f64_precision() {
+        // 2^60 and 2^60 + 1 are the same f64; as canonical strings they
+        // must stay distinct or two cells would share a cache key.
+        let a = SimConfig::builder().seed(1u64 << 60).build();
+        let b = SimConfig::builder().seed((1u64 << 60) + 1).build();
+        assert_ne!(
+            a.to_canonical_json().to_string_canonical(),
+            b.to_canonical_json().to_string_canonical()
+        );
+    }
+
+    #[test]
+    fn canonical_json_distinguishes_every_window_kind() {
+        let mut texts = Vec::new();
+        for w in [
+            WindowKind::Static(4),
+            WindowKind::Static(6),
+            WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 },
+            WindowKind::Awc { weights_path: None },
+            WindowKind::Awc { weights_path: Some("w.json".into()) },
+            WindowKind::FusedOnly,
+        ] {
+            let cfg = SimConfig::builder().window(w).build();
+            texts.push(cfg.to_canonical_json().to_string_canonical());
+        }
+        for i in 0..texts.len() {
+            for j in (i + 1)..texts.len() {
+                assert_ne!(texts[i], texts[j], "windows {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_json_covers_link_overrides() {
+        let y = "\
+cluster:
+  targets:
+    - count: 1
+  drafters:
+    - count: 2
+      rtt_ms: 80
+";
+        let cfg = SimConfig::from_yaml(y).unwrap();
+        let j = cfg.to_canonical_json();
+        let drafters = j.path(&["cluster", "drafters"]).unwrap().as_arr().unwrap();
+        assert_eq!(
+            drafters[0].path(&["link", "rtt_ms"]).unwrap().as_f64(),
+            Some(80.0)
+        );
+        // Dropping the override changes the canonical bytes.
+        let plain = SimConfig::from_yaml("cluster:\n  targets:\n    - count: 1\n  drafters:\n    - count: 2\n").unwrap();
+        assert_ne!(
+            cfg.to_canonical_json().to_string_canonical(),
+            plain.to_canonical_json().to_string_canonical()
+        );
     }
 
     #[test]

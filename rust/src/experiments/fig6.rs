@@ -11,8 +11,9 @@
 
 use super::common::{paper_config, save_rows, Row, Scale};
 use crate::config::{BatchingKind, RoutingKind, WindowKind};
+use crate::sweep::cache::CellCache;
 use crate::sweep::grid::window_label;
-use crate::sweep::{default_threads, run_grid, CellResult, SweepGrid};
+use crate::sweep::{default_threads, run_grid_cached, CellResult, SweepGrid};
 use crate::util::stats::mean;
 use crate::util::table::{fnum, Table};
 
@@ -27,6 +28,16 @@ pub type Series = Vec<(f64, f64, f64, f64)>;
 /// Run both modes over the sweep (cells execute in parallel on the
 /// sweep runner; results are selected back by their axis labels).
 pub fn sweep(scale: Scale, seeds: &[u64]) -> (Series, Series) {
+    sweep_cached(scale, seeds, None)
+}
+
+/// [`sweep`] against an optional cell cache: re-running the figure (or
+/// widening its seed list) only executes cells the cache has not seen.
+pub fn sweep_cached(
+    scale: Scale,
+    seeds: &[u64],
+    cache: Option<&CellCache>,
+) -> (Series, Series) {
     let mut base = paper_config(
         "gsm8k",
         600,
@@ -45,7 +56,11 @@ pub fn sweep(scale: Scale, seeds: &[u64]) -> (Series, Series) {
     grid.windows = vec![WindowKind::Static(4), WindowKind::FusedOnly];
     grid.rtt_ms = rtt_points();
     grid.seeds = seeds.to_vec();
-    let cells = run_grid(&grid, default_threads().min(8)).expect("fig6 grid");
+    let (cells, stats) =
+        run_grid_cached(&grid, default_threads().min(8), cache).expect("fig6 grid");
+    if cache.is_some() {
+        eprintln!("[fig6] {}", stats.describe());
+    }
     // Select cells by their axis labels (robust to any change in the
     // grid's expansion order) and average the seed replicas.
     let series = |wname: &str| -> Series {
@@ -91,7 +106,12 @@ pub fn crossover_rtt(distributed: &Series, fused: &Series) -> Option<f64> {
 
 /// Run and render.
 pub fn run(scale: Scale, seeds: &[u64]) -> String {
-    let (dist, fused) = sweep(scale, seeds);
+    run_cached(scale, seeds, None)
+}
+
+/// [`run`] with an optional cell cache (`dsd reproduce --cache-dir`).
+pub fn run_cached(scale: Scale, seeds: &[u64], cache: Option<&CellCache>) -> String {
+    let (dist, fused) = sweep_cached(scale, seeds, cache);
     let mut table = Table::new(&[
         "RTT ms",
         "dist tput",

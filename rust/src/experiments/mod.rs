@@ -15,17 +15,37 @@ pub use common::Scale;
 
 /// Run one experiment by id; returns its rendered report.
 pub fn run_experiment(exp: &str, scale: Scale, seeds: &[u64]) -> Result<String, String> {
+    run_experiment_cached(exp, scale, seeds, None)
+}
+
+/// [`run_experiment`] with an optional sweep cell-cache directory
+/// (`dsd reproduce --cache-dir <dir>`). Experiments that execute on the
+/// sweep runner (currently fig6) persist their cells under
+/// `<dir>/<exp>/` and skip anything already computed — re-rendering a
+/// figure after a crash, or with more seeds, only runs the delta.
+pub fn run_experiment_cached(
+    exp: &str,
+    scale: Scale,
+    seeds: &[u64],
+    cache_dir: Option<&std::path::Path>,
+) -> Result<String, String> {
     Ok(match exp {
         "fig4" => fig4::run(seeds[0]).0,
         "fig5" => fig5::run(scale, seeds),
-        "fig6" => fig6::run(scale, seeds),
+        "fig6" => {
+            let cache = match cache_dir {
+                Some(dir) => Some(crate::sweep::CellCache::open(&dir.join("fig6"))?),
+                None => None,
+            };
+            fig6::run_cached(scale, seeds, cache.as_ref())
+        }
         "fig7" | "fig8" | "fig7_8" => fig7_8::run(scale, seeds),
         "fig9" | "fig10" | "fig9_10" => fig9_10::run(scale, seeds),
         "table2" => table2::run(scale, seeds),
         "all" => {
             let mut out = String::new();
             for e in ["fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2"] {
-                out.push_str(&run_experiment(e, scale, seeds)?);
+                out.push_str(&run_experiment_cached(e, scale, seeds, cache_dir)?);
                 out.push('\n');
             }
             out

@@ -13,7 +13,7 @@
 
 use dsd::config::SimConfig;
 use dsd::coordinator::{Coordinator, ServeConfig, ServeRequest, ServeWindow};
-use dsd::experiments::{run_experiment, Scale};
+use dsd::experiments::Scale;
 use dsd::sim::Simulator;
 use dsd::util::cli::Command;
 
@@ -68,34 +68,140 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
         .opt("grid", "sweep grid YAML file (base config + axes)", None)
         .opt("threads", "worker threads (0 = one per core)", Some("0"))
         .opt("out", "also write the JSON summary to this path", None)
+        .opt(
+            "out-dir",
+            "cached run directory: cells persist to <dir>/cells as they finish, \
+             summary to <dir>/summary.json, grid copy to <dir>/grid.yaml",
+            None,
+        )
+        .opt(
+            "resume",
+            "continue a killed --out-dir run from its cell directory \
+             (reads <dir>/grid.yaml unless --grid is also given)",
+            None,
+        )
+        .opt(
+            "filter",
+            "axis selection key=value[,key=value] (e.g. rtt_ms=5,window=static4); \
+             summary is labeled partial",
+            None,
+        )
         .flag("table", "print an ASCII table instead of JSON")
         .flag("streaming", "force streaming metrics regardless of the grid file");
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
-    let mut grid = dsd::sweep::SweepGrid::from_yaml_file(a.require("grid").map_err(|e| e.to_string())?)?;
-    if a.flag("streaming") {
+    // A cached run directory comes from --out-dir (fresh) or --resume
+    // (continue); both mean the same layout, and cells are
+    // content-addressed so resuming is just re-running against the
+    // directory.
+    let run_dir: Option<std::path::PathBuf> = match (a.get("out-dir"), a.get("resume")) {
+        (Some(_), Some(_)) => {
+            return Err("sweep: --out-dir and --resume are mutually exclusive".into())
+        }
+        (Some(d), None) => Some(d.into()),
+        (None, Some(d)) => Some(d.into()),
+        (None, None) => None,
+    };
+    let grid_text = match a.get("grid") {
+        Some(path) => {
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?
+        }
+        None => match (a.get("resume"), &run_dir) {
+            (Some(_), Some(dir)) => {
+                let p = dir.join("grid.yaml");
+                std::fs::read_to_string(&p).map_err(|e| {
+                    format!("resume: cannot read {} ({e}); pass --grid explicitly", p.display())
+                })?
+            }
+            _ => return Err("missing required option --grid".into()),
+        },
+    };
+    let mut grid = dsd::sweep::SweepGrid::from_yaml(&grid_text)?;
+    // The run dir remembers a `--streaming` override (the grid copy is
+    // raw text, and mode is part of every cell key): a resumed sweep
+    // must run in the same mode it was killed in, or every cached cell
+    // would silently miss.
+    let forced_marker = run_dir.as_ref().map(|d| d.join("streaming-forced"));
+    if a.flag("streaming")
+        || forced_marker.as_ref().is_some_and(|m| a.get("resume").is_some() && m.exists())
+    {
         grid.streaming = true;
     }
     let mut threads = a.get_usize("threads").map_err(|e| e.to_string())?.unwrap();
     if threads == 0 {
         threads = dsd::sweep::default_threads();
     }
+    let cache = match &run_dir {
+        Some(dir) => {
+            std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+            // Atomic (tmp + rename) and skipped when unchanged: resume
+            // depends on this file, and a kill mid-`fs::write` (which
+            // truncates first) could otherwise leave a grid copy that
+            // parses as the wrong — e.g. 1-cell — grid.
+            let grid_copy = dir.join("grid.yaml");
+            if std::fs::read_to_string(&grid_copy).ok().as_deref() != Some(&grid_text) {
+                let tmp = dir.join(format!("grid.yaml.tmp.{}", std::process::id()));
+                std::fs::write(&tmp, &grid_text)
+                    .map_err(|e| format!("write grid copy: {e}"))?;
+                std::fs::rename(&tmp, &grid_copy)
+                    .map_err(|e| format!("write grid copy: {e}"))?;
+            }
+            if a.flag("streaming") {
+                std::fs::write(forced_marker.as_ref().unwrap(), "")
+                    .map_err(|e| format!("write streaming marker: {e}"))?;
+            } else if a.get("out-dir").is_some() {
+                // Fresh --out-dir without the flag: clear any stale
+                // marker from a previous run of this directory.
+                let _ = std::fs::remove_file(forced_marker.as_ref().unwrap());
+            }
+            Some(dsd::sweep::CellCache::open(&dir.join("cells"))?)
+        }
+        None => None,
+    };
+    let mut cells = grid.expand()?;
+    let filter = match a.get("filter") {
+        Some(f) => {
+            let pairs = dsd::sweep::parse_filter(f)?;
+            cells = dsd::sweep::filter_cells(cells, &pairs)?;
+            Some(dsd::sweep::filter_label(&pairs))
+        }
+        None => None,
+    };
     eprintln!(
-        "[sweep] {} cells on {} threads{} ...",
-        grid.n_cells(),
-        threads.clamp(1, grid.n_cells().max(1)),
-        if grid.streaming { " (streaming)" } else { "" }
+        "[sweep] {} cells on {} threads{}{} ...",
+        cells.len(),
+        threads.clamp(1, cells.len().max(1)),
+        if grid.streaming { " (streaming)" } else { "" },
+        match &filter {
+            Some(f) => format!(" (filter: {f})"),
+            None => String::new(),
+        }
     );
-    let cells = dsd::sweep::run_grid(&grid, threads)?;
-    let summary = dsd::sweep::SweepSummary::new(cells, grid.streaming);
+    let (results, stats) =
+        dsd::sweep::run_cells_cached(&cells, grid.streaming, threads, cache.as_ref());
+    if cache.is_some() {
+        eprintln!("[sweep] {}", stats.describe());
+    }
+    let summary =
+        dsd::sweep::SweepSummary::new(results, grid.streaming).with_filter(filter.clone());
     let json = summary.to_json().to_string_pretty();
-    if let Some(path) = a.get("out") {
-        if let Some(dir) = std::path::Path::new(path).parent() {
+    let write_to = |path: &std::path::Path| -> Result<(), String> {
+        if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
             }
         }
         std::fs::write(path, format!("{json}\n")).map_err(|e| e.to_string())?;
-        eprintln!("[sweep] wrote {path}");
+        eprintln!("[sweep] wrote {}", path.display());
+        Ok(())
+    };
+    if let Some(path) = a.get("out") {
+        write_to(std::path::Path::new(path))?;
+    }
+    if let Some(dir) = &run_dir {
+        // Filtered runs land beside the full summary, never over it: a
+        // partial result must not clobber a complete one.
+        let name = if filter.is_some() { "summary-partial.json" } else { "summary.json" };
+        write_to(&dir.join(name))?;
     }
     if a.flag("table") {
         println!("{}", summary.render_table());
@@ -112,12 +218,23 @@ fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("reproduce", "regenerate a paper table/figure")
         .opt("exp", "fig4|fig5|fig6|fig7|fig9|table2|all", Some("all"))
         .opt("scale", "request-count scale factor (1.0 = paper)", Some("1.0"))
-        .opt("seeds", "number of seeds to average", Some("3"));
+        .opt("seeds", "number of seeds to average", Some("3"))
+        .opt(
+            "cache-dir",
+            "sweep cell-cache directory: runner-backed figures resume/skip cached cells",
+            None,
+        );
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
     let scale = Scale(a.get_f64("scale").map_err(|e| e.to_string())?.unwrap_or(1.0));
     let n_seeds = a.get_u64("seeds").map_err(|e| e.to_string())?.unwrap_or(3);
     let seeds: Vec<u64> = (1..=n_seeds).collect();
-    let out = run_experiment(a.get("exp").unwrap_or("all"), scale, &seeds)?;
+    let cache_dir = a.get("cache-dir").map(std::path::PathBuf::from);
+    let out = dsd::experiments::run_experiment_cached(
+        a.get("exp").unwrap_or("all"),
+        scale,
+        &seeds,
+        cache_dir.as_deref(),
+    )?;
     println!("{out}");
     Ok(())
 }
@@ -125,6 +242,13 @@ fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
 fn cmd_sweep_dataset(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("sweep-dataset", "generate the AWC training dataset")
         .opt("out", "output JSONL path", Some("data/awc_sweep.jsonl"))
+        .opt("threads", "worker threads (0 = one per core)", Some("0"))
+        .opt(
+            "cache-dir",
+            "cell-cache directory: probe runs persist as they finish and a \
+             re-invocation resumes from them",
+            None,
+        )
         .flag("tiny", "reduced grid (tests)");
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
     let grid = if a.flag("tiny") {
@@ -132,12 +256,23 @@ fn cmd_sweep_dataset(rest: &[String]) -> Result<(), String> {
     } else {
         dsd::awc::SweepGrid::default()
     };
+    let mut threads = a.get_usize("threads").map_err(|e| e.to_string())?.unwrap();
+    if threads == 0 {
+        threads = dsd::sweep::default_threads();
+    }
+    let cache = match a.get("cache-dir") {
+        Some(dir) => Some(dsd::sweep::CellCache::open(std::path::Path::new(dir))?),
+        None => None,
+    };
     eprintln!(
         "[sweep] {} scenarios x {} probes ...",
         grid.n_scenarios(),
         grid.gammas.len() + 1
     );
-    let rows = dsd::awc::generate_dataset(&grid);
+    let (rows, stats) = dsd::awc::generate_dataset_cached(&grid, cache.as_ref(), threads);
+    if cache.is_some() {
+        eprintln!("[sweep] {}", stats.describe());
+    }
     let path = std::path::Path::new(a.get("out").unwrap());
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;

@@ -1,0 +1,372 @@
+//! Per-cell result caching for resumable sweeps.
+//!
+//! Every sweep cell gets a stable **content key**: the 128-bit FNV hash
+//! of the canonical JSON of its fully resolved [`SimConfig`], the metric
+//! mode (streaming or full), and the simulator version tag. Finished
+//! cells persist as `<cells_dir>/<key>.json` the moment they complete,
+//! so a killed sweep loses at most the in-flight cells; re-invoking the
+//! same grid loads hits from disk, executes only the misses, and splices
+//! both into a byte-identical summary.
+//!
+//! Because keys are content-addressed (grid position does not enter the
+//! hash), one cell directory serves many overlapping grids: a filtered
+//! partial run (`--filter`), a widened axis, or a different expansion
+//! order all reuse whatever cells they share with previous runs.
+//!
+//! Invalidation is implicit: anything that changes the resolved config
+//! changes the key, and [`SIM_VERSION_TAG`] folds simulator semantics
+//! into the key, so bumping the tag orphans every older entry (see
+//! `CACHE.md` at the repository root). Corrupt or truncated cell files
+//! are detected on load and fall back to re-execution with a warning.
+
+use super::runner::CellMetrics;
+use crate::config::SimConfig;
+use crate::util::hash::content_hash_hex;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Simulator semantics version. Part of every cell key: bump this when a
+/// change alters simulation *results* for an unchanged config (the
+/// golden-report snapshot drifting is the usual signal), so stale cached
+/// cells can never be spliced into new summaries.
+pub const SIM_VERSION_TAG: &str = "dsd-sim-1";
+
+/// Content key of one sweep cell: canonical JSON of the resolved config
+/// plus metric mode plus [`SIM_VERSION_TAG`], hashed to 32 hex chars.
+pub fn cell_key(cfg: &SimConfig, streaming: bool) -> String {
+    let doc = Json::obj()
+        .with("version", SIM_VERSION_TAG.into())
+        .with("streaming", streaming.into())
+        .with("config", cfg.to_canonical_json());
+    content_hash_hex(doc.to_string_canonical().as_bytes())
+}
+
+/// Outcome of a cache probe.
+#[derive(Debug)]
+pub enum CacheLookup {
+    /// Valid entry: reuse these metrics without executing the cell.
+    Hit(CellMetrics),
+    /// No entry on disk.
+    Miss,
+    /// An entry exists but is unreadable / truncated / inconsistent;
+    /// the cell must re-execute (and the reason is worth a warning).
+    Corrupt(String),
+}
+
+/// On-disk cell store: one JSON file per finished cell, named by its
+/// content key.
+#[derive(Clone, Debug)]
+pub struct CellCache {
+    dir: PathBuf,
+}
+
+impl CellCache {
+    /// Open (creating if needed) a cell directory.
+    pub fn open(dir: &Path) -> Result<CellCache, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cache: create {}: {e}", dir.display()))?;
+        Ok(CellCache { dir: dir.to_path_buf() })
+    }
+
+    /// The directory cells persist into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the entry for `key`.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Number of entries currently on disk (diagnostics).
+    pub fn n_entries(&self) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter(|e| {
+                    e.as_ref()
+                        .ok()
+                        .and_then(|e| e.path().extension().map(|x| x == "json"))
+                        .unwrap_or(false)
+                })
+                .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Probe the cache for `key`.
+    pub fn load(&self, key: &str) -> CacheLookup {
+        let path = self.path_for(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return CacheLookup::Miss,
+            Err(e) => return CacheLookup::Corrupt(format!("read {}: {e}", path.display())),
+        };
+        let doc = match Json::parse(&text) {
+            Ok(d) => d,
+            Err(e) => return CacheLookup::Corrupt(format!("{}: {e}", path.display())),
+        };
+        // The key is re-checked so a renamed / mismatched file can never
+        // masquerade as a different cell.
+        if doc.get("key").and_then(Json::as_str) != Some(key) {
+            return CacheLookup::Corrupt(format!("{}: key mismatch", path.display()));
+        }
+        if doc.get("version").and_then(Json::as_str) != Some(SIM_VERSION_TAG) {
+            // Unreachable for files written by this binary (the tag is in
+            // the hash), but a defense against hand-edited entries.
+            return CacheLookup::Corrupt(format!("{}: version mismatch", path.display()));
+        }
+        match doc.get("metrics").and_then(CellMetrics::from_json) {
+            Some(m) => CacheLookup::Hit(m),
+            None => CacheLookup::Corrupt(format!("{}: bad metrics record", path.display())),
+        }
+    }
+
+    /// Persist a finished cell. Written atomically (tmp file + rename)
+    /// so a kill mid-write leaves no half-entry behind under `key`.
+    /// Only successful cells are stored: errors re-execute on resume.
+    pub fn store(
+        &self,
+        key: &str,
+        labels: &[(String, String)],
+        metrics: &CellMetrics,
+    ) -> Result<(), String> {
+        let mut label_obj = Json::obj();
+        for (k, v) in labels {
+            label_obj.set(k, v.as_str().into());
+        }
+        let doc = Json::obj()
+            .with("key", key.into())
+            .with("version", SIM_VERSION_TAG.into())
+            .with("labels", label_obj)
+            .with("metrics", metrics.to_json());
+        let path = self.path_for(key);
+        // Unique tmp name per write: a grid with duplicate cells (e.g. a
+        // repeated seed) can store the same key from two workers at
+        // once, and interleaved writes to one tmp file would corrupt
+        // the renamed entry.
+        static WRITE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = WRITE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = self
+            .dir
+            .join(format!("{key}.json.tmp.{}.{seq}", std::process::id()));
+        let mut text = doc.to_string_pretty();
+        text.push('\n');
+        std::fs::write(&tmp, text).map_err(|e| format!("cache: write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("cache: rename to {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BatchingKind, RoutingKind, WindowKind};
+    use crate::util::prop::{run_prop, Gen};
+
+    fn base_cfg() -> SimConfig {
+        SimConfig::builder()
+            .seed(5)
+            .targets(2)
+            .drafters(10)
+            .requests(16)
+            .rate_per_s(12.0)
+            .build()
+    }
+
+    #[test]
+    fn key_shape_and_determinism() {
+        let k1 = cell_key(&base_cfg(), false);
+        let k2 = cell_key(&base_cfg(), false);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.len(), 32);
+        assert!(k1.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn streaming_mode_is_part_of_the_key() {
+        assert_ne!(cell_key(&base_cfg(), false), cell_key(&base_cfg(), true));
+    }
+
+    #[test]
+    fn yaml_field_order_does_not_change_the_key() {
+        let a = SimConfig::from_yaml(
+            "seed: 3\nnetwork:\n  rtt_ms: 20\n  jitter_ms: 1\nworkload:\n  requests: 50\n",
+        )
+        .unwrap();
+        let b = SimConfig::from_yaml(
+            "workload:\n  requests: 50\nnetwork:\n  jitter_ms: 1\n  rtt_ms: 20\nseed: 3\n",
+        )
+        .unwrap();
+        assert_eq!(cell_key(&a, false), cell_key(&b, false));
+    }
+
+    /// Property: document key order never affects the key; any single
+    /// axis perturbation (rtt, jitter, rate, seed, policy, scale) always
+    /// does. Random configs drive both halves from one generator so the
+    /// cases replay by seed.
+    #[test]
+    fn prop_key_stability_and_axis_sensitivity() {
+        run_prop("cell-key stability/sensitivity", 60, |g: &mut Gen| {
+            let seed = g.u64_in(0, 1 << 40);
+            let rtt = g.f64_in(0.0, 200.0);
+            let jitter = g.f64_in(0.0, 10.0);
+            let rate = g.f64_in(1.0, 100.0);
+            let targets = g.usize_in(1, 6);
+            let drafters = g.usize_in(1, 40);
+            let routing = *g.pick(&[RoutingKind::Random, RoutingKind::RoundRobin, RoutingKind::Jsq]);
+            let batching = *g.pick(&[BatchingKind::Fifo, BatchingKind::Lab]);
+            let dataset = g.pick(&["gsm8k", "cnndm", "humaneval"]).to_string();
+            let build = |seed: u64,
+                         rtt: f64,
+                         jitter: f64,
+                         rate: f64,
+                         targets: usize,
+                         drafters: usize,
+                         routing: RoutingKind,
+                         batching: BatchingKind,
+                         dataset: &str,
+                         window: WindowKind| {
+                SimConfig::builder()
+                    .seed(seed)
+                    .rtt_ms(rtt)
+                    .jitter_ms(jitter)
+                    .rate_per_s(rate)
+                    .targets(targets)
+                    .drafters(drafters)
+                    .routing(routing)
+                    .batching(batching)
+                    .dataset(dataset)
+                    .window(window)
+                    .requests(32)
+                    .build()
+            };
+            let base = build(
+                seed, rtt, jitter, rate, targets, drafters, routing, batching, &dataset,
+                WindowKind::Static(4),
+            );
+            let key = cell_key(&base, false);
+            // Identical reconstruction ⇒ identical key.
+            let again = build(
+                seed, rtt, jitter, rate, targets, drafters, routing, batching, &dataset,
+                WindowKind::Static(4),
+            );
+            assert_eq!(key, cell_key(&again, false), "key not a pure function of config");
+            // Single-axis perturbations ⇒ different keys.
+            let perturbed = [
+                build(seed ^ 1, rtt, jitter, rate, targets, drafters, routing, batching, &dataset, WindowKind::Static(4)),
+                build(seed, rtt + 0.125, jitter, rate, targets, drafters, routing, batching, &dataset, WindowKind::Static(4)),
+                build(seed, rtt, jitter + 0.125, rate, targets, drafters, routing, batching, &dataset, WindowKind::Static(4)),
+                build(seed, rtt, jitter, rate + 0.125, targets, drafters, routing, batching, &dataset, WindowKind::Static(4)),
+                build(seed, rtt, jitter, rate, targets + 1, drafters, routing, batching, &dataset, WindowKind::Static(4)),
+                build(seed, rtt, jitter, rate, targets, drafters + 1, routing, batching, &dataset, WindowKind::Static(4)),
+                build(seed, rtt, jitter, rate, targets, drafters, routing, batching, &dataset, WindowKind::Static(5)),
+                build(seed, rtt, jitter, rate, targets, drafters, routing, batching, &dataset, WindowKind::FusedOnly),
+            ];
+            for (i, p) in perturbed.iter().enumerate() {
+                assert_ne!(key, cell_key(p, false), "perturbation {i} did not change the key");
+            }
+            let other_routing = match routing {
+                RoutingKind::Jsq => RoutingKind::Random,
+                _ => RoutingKind::Jsq,
+            };
+            let p = build(seed, rtt, jitter, rate, targets, drafters, other_routing, batching, &dataset, WindowKind::Static(4));
+            assert_ne!(key, cell_key(&p, false), "routing change did not change the key");
+            let other_batching = match batching {
+                BatchingKind::Fifo => BatchingKind::Lab,
+                BatchingKind::Lab => BatchingKind::Fifo,
+            };
+            let p = build(seed, rtt, jitter, rate, targets, drafters, routing, other_batching, &dataset, WindowKind::Static(4));
+            assert_ne!(key, cell_key(&p, false), "batching change did not change the key");
+        });
+    }
+
+    /// Property: shuffling the key order of a JSON config document never
+    /// changes the cell key (exercises `Gen::permutation`).
+    #[test]
+    fn prop_json_document_order_irrelevant() {
+        run_prop("cell-key doc order", 40, |g: &mut Gen| {
+            let sections: Vec<(String, Json)> = vec![
+                ("seed".into(), Json::Num(g.u64_in(0, 1000) as f64)),
+                (
+                    "network".into(),
+                    Json::obj()
+                        .with("rtt_ms", g.f64_in(0.0, 100.0).into())
+                        .with("jitter_ms", g.f64_in(0.0, 5.0).into()),
+                ),
+                (
+                    "workload".into(),
+                    Json::obj()
+                        .with("requests", Json::Num(g.usize_in(8, 200) as f64))
+                        .with("rate_per_s", g.f64_in(1.0, 50.0).into()),
+                ),
+            ];
+            let in_order = Json::Obj(sections.clone());
+            let perm = g.permutation(sections.len());
+            let shuffled = Json::Obj(perm.iter().map(|&i| sections[i].clone()).collect());
+            let a = SimConfig::from_json(&in_order).unwrap();
+            let b = SimConfig::from_json(&shuffled).unwrap();
+            assert_eq!(cell_key(&a, false), cell_key(&b, false));
+        });
+    }
+
+    #[test]
+    fn store_load_roundtrip_and_corruption() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-cellcache-unit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let key = cell_key(&base_cfg(), false);
+        assert!(matches!(cache.load(&key), CacheLookup::Miss));
+
+        let m = CellMetrics {
+            completed: 16,
+            throughput_rps: 11.5,
+            token_throughput: 400.0,
+            target_utilization: 0.5,
+            mean_ttft_ms: 120.0,
+            p99_ttft_ms: 300.0,
+            mean_tpot_ms: 25.0,
+            p99_tpot_ms: 60.0,
+            mean_e2e_ms: 900.0,
+            mean_acceptance: f64::NAN, // fused-style NaN must round-trip
+            mean_queue_delay_ms: 2.0,
+            mean_net_delay_ms: 6.0,
+            sim_duration_ms: 1500.0,
+            events_processed: 999,
+            mean_features: [0.25, 0.8, 10.0, 25.0, 4.0],
+        };
+        let labels = vec![("rtt_ms".to_string(), "10".to_string())];
+        cache.store(&key, &labels, &m).unwrap();
+        assert_eq!(cache.n_entries(), 1);
+        match cache.load(&key) {
+            CacheLookup::Hit(got) => {
+                assert_eq!(got.completed, 16);
+                assert!(got.mean_acceptance.is_nan());
+                assert_eq!(got.mean_features, m.mean_features);
+                // Byte-stable re-emission: the reloaded metrics must
+                // serialize exactly like the originals.
+                assert_eq!(
+                    got.to_json().to_string_pretty(),
+                    m.to_json().to_string_pretty()
+                );
+            }
+            other => panic!("expected hit, got {other:?}"),
+        }
+
+        // Truncation ⇒ Corrupt, never a bogus Hit.
+        let path = cache.path_for(&key);
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(matches!(cache.load(&key), CacheLookup::Corrupt(_)));
+
+        // A valid file under the wrong name ⇒ Corrupt (key mismatch).
+        std::fs::write(&path, &full).unwrap();
+        let wrong = cache.path_for(&"0".repeat(32));
+        std::fs::copy(&path, &wrong).unwrap();
+        assert!(matches!(cache.load(&"0".repeat(32)), CacheLookup::Corrupt(_)));
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

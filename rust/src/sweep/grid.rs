@@ -19,12 +19,93 @@ use crate::util::yaml;
 /// One expanded grid cell: a concrete config plus its axis labels.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
-    /// Position in expansion order (result ordering key).
+    /// Position in expansion order (result ordering key). Preserved
+    /// across filtering, so a filtered run reports the same indices the
+    /// full grid would.
     pub index: usize,
     /// `(axis, value)` pairs in expansion order.
     pub labels: Vec<(String, String)>,
     /// Fully resolved simulator configuration.
     pub cfg: SimConfig,
+}
+
+impl SweepCell {
+    /// Value of one axis label (None for an unknown axis name).
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse a `--filter` axis selector: `key=value[,key=value]`. Values
+/// compare against cell labels verbatim (e.g. `window=static4`,
+/// `rtt_ms=5`).
+pub fn parse_filter(s: &str) -> Result<Vec<(String, String)>, String> {
+    let mut pairs = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| format!("filter: expected key=value, got '{part}'"))?;
+        let (k, v) = (k.trim(), v.trim());
+        if k.is_empty() || v.is_empty() {
+            return Err(format!("filter: empty key or value in '{part}'"));
+        }
+        pairs.push((k.to_string(), v.to_string()));
+    }
+    if pairs.is_empty() {
+        return Err("filter: no key=value pairs".into());
+    }
+    Ok(pairs)
+}
+
+/// Canonical rendering of a filter (pairs sorted by key then value):
+/// equivalent selections label their partial summaries identically no
+/// matter how the user ordered the pairs.
+pub fn filter_label(pairs: &[(String, String)]) -> String {
+    let mut sorted = pairs.to_vec();
+    sorted.sort();
+    sorted
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Keep only cells whose labels match every filter pair. Unknown axis
+/// keys and empty selections are errors (a typo must not silently run
+/// nothing / everything). Cell indices are preserved.
+pub fn filter_cells(
+    cells: Vec<SweepCell>,
+    pairs: &[(String, String)],
+) -> Result<Vec<SweepCell>, String> {
+    if let Some(first) = cells.first() {
+        for (k, _) in pairs {
+            if first.label(k).is_none() {
+                let known: Vec<&str> = first.labels.iter().map(|(lk, _)| lk.as_str()).collect();
+                return Err(format!(
+                    "filter: unknown axis '{k}' (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+    }
+    let kept: Vec<SweepCell> = cells
+        .into_iter()
+        .filter(|c| pairs.iter().all(|(k, v)| c.label(k) == Some(v.as_str())))
+        .collect();
+    if kept.is_empty() {
+        return Err(format!(
+            "filter: no cells match '{}'",
+            filter_label(pairs)
+        ));
+    }
+    Ok(kept)
 }
 
 /// A declarative parameter grid over [`SimConfig`]s.
@@ -523,6 +604,46 @@ streaming: true
         assert_eq!(cells[1].cfg.n_targets(), 6);
         // Drafter pools untouched (single-valued axis, same total).
         assert_eq!(cells[0].cfg.n_drafters(), 100);
+    }
+
+    #[test]
+    fn filter_parses_and_selects() {
+        let grid = SweepGrid::from_yaml(small_yaml()).unwrap();
+        let cells = grid.expand().unwrap();
+        let pairs = parse_filter("rtt_ms=5, seed=1").unwrap();
+        let kept = filter_cells(cells.clone(), &pairs).unwrap();
+        // 16 cells / (2 rtt × 2 seeds) = 4 survivors.
+        assert_eq!(kept.len(), 4);
+        for c in &kept {
+            assert_eq!(c.label("rtt_ms"), Some("5"));
+            assert_eq!(c.label("seed"), Some("1"));
+        }
+        // Original grid indices survive filtering.
+        assert!(kept.windows(2).all(|w| w[0].index < w[1].index));
+        assert_ne!(kept[1].index, 1);
+    }
+
+    #[test]
+    fn filter_label_is_order_canonical() {
+        let a = parse_filter("seed=1,rtt_ms=5").unwrap();
+        let b = parse_filter("rtt_ms=5,seed=1").unwrap();
+        assert_eq!(filter_label(&a), filter_label(&b));
+        assert_eq!(filter_label(&a), "rtt_ms=5,seed=1");
+    }
+
+    #[test]
+    fn bad_filters_rejected() {
+        assert!(parse_filter("").is_err());
+        assert!(parse_filter("rtt_ms").is_err());
+        assert!(parse_filter("=5").is_err());
+        let grid = SweepGrid::from_yaml(small_yaml()).unwrap();
+        let cells = grid.expand().unwrap();
+        // Unknown axis key.
+        let err = filter_cells(cells.clone(), &parse_filter("rttms=5").unwrap()).unwrap_err();
+        assert!(err.contains("unknown axis"), "{err}");
+        // No match.
+        let err = filter_cells(cells, &parse_filter("rtt_ms=999").unwrap()).unwrap_err();
+        assert!(err.contains("no cells match"), "{err}");
     }
 
     #[test]

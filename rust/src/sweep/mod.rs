@@ -9,15 +9,33 @@
 //! grid with streaming metrics (`streaming: true`) bounds per-cell
 //! memory so individual cells can simulate millions of requests.
 //!
-//! Entry points: `dsd sweep --grid <grid.yaml>` on the CLI,
-//! [`SweepGrid`] + [`run_grid`] from library code (see
-//! `examples/fleet_sweep.rs`), and [`crate::experiments::fig6`] which
-//! runs its RTT sweep through this runner.
+//! Sweeps larger than a process lifetime run through the [`cache`]
+//! layer: every cell has a stable content key (canonical JSON of its
+//! resolved config + metric mode + simulator version tag), finished
+//! cells persist to `<dir>/cells/<key>.json` as they complete, and
+//! re-invocations load hits, execute only misses, and splice both into
+//! a byte-identical summary ([`run_grid_cached`] / [`run_cells_cached`]).
+//! Axis selection for partial runs is [`grid::parse_filter`] /
+//! [`grid::filter_cells`] (`--filter` on the CLI); filtered summaries
+//! are labeled partial. The AWC training-dataset generator
+//! ([`crate::awc::generate_dataset`]) rides the same expansion + cached
+//! runner, so dataset sweeps inherit caching and resume for free.
+//!
+//! Entry points: `dsd sweep --grid <grid.yaml> [--out-dir <dir>]
+//! [--resume <dir>] [--filter k=v,...]` on the CLI, [`SweepGrid`] +
+//! [`run_grid`] from library code (see `examples/fleet_sweep.rs`), and
+//! [`crate::experiments::fig6`] which runs its RTT sweep through this
+//! runner.
 
+pub mod cache;
 pub mod grid;
 pub mod runner;
 pub mod summary;
 
-pub use grid::{SweepCell, SweepGrid};
-pub use runner::{default_threads, run_cells, run_grid, CellMetrics, CellResult};
+pub use cache::{cell_key, CacheLookup, CellCache, SIM_VERSION_TAG};
+pub use grid::{filter_cells, filter_label, parse_filter, SweepCell, SweepGrid};
+pub use runner::{
+    default_threads, run_cells, run_cells_cached, run_grid, run_grid_cached, CellMetrics,
+    CellResult, RunStats,
+};
 pub use summary::SweepSummary;

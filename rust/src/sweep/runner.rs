@@ -6,6 +6,7 @@
 //! depends only on the grid — never on thread scheduling — so repeated
 //! runs (at any thread count) produce byte-identical summaries.
 
+use super::cache::{cell_key, CacheLookup, CellCache};
 use super::grid::{SweepCell, SweepGrid};
 use crate::config::SimConfig;
 use crate::metrics::{SimReport, StreamingReport};
@@ -45,6 +46,11 @@ pub struct CellMetrics {
     pub sim_duration_ms: f64,
     /// DES events processed.
     pub events_processed: u64,
+    /// Mean WC-DNN feature vector observed at window-decision time
+    /// `[q_depth_util, α_recent, RTT_recent, TPOT_recent, γ_prev]` —
+    /// carried so the AWC dataset generator can run on this runner (and
+    /// its cache) without re-entering the simulator.
+    pub mean_features: [f64; 5],
 }
 
 impl CellMetrics {
@@ -65,6 +71,7 @@ impl CellMetrics {
             mean_net_delay_ms: rep.system.mean_net_delay_ms,
             sim_duration_ms: rep.system.sim_duration_ms,
             events_processed: rep.system.events_processed,
+            mean_features: rep.system.mean_features,
         }
     }
 
@@ -85,6 +92,7 @@ impl CellMetrics {
             mean_net_delay_ms: rep.system.mean_net_delay_ms,
             sim_duration_ms: rep.system.sim_duration_ms,
             events_processed: rep.system.events_processed,
+            mean_features: rep.system.mean_features,
         }
     }
 
@@ -106,6 +114,44 @@ impl CellMetrics {
             .with("mean_net_delay_ms", self.mean_net_delay_ms.into())
             .with("sim_duration_ms", self.sim_duration_ms.into())
             .with("events_processed", self.events_processed.into())
+            .with(
+                "mean_features",
+                Json::Arr(self.mean_features.iter().map(|&x| Json::Num(x)).collect()),
+            )
+    }
+
+    /// Decode a snapshot previously written by [`CellMetrics::to_json`]
+    /// (the cell-cache load path). `None` on any missing or mistyped
+    /// field — a partial record means a truncated or foreign file and
+    /// must fall back to re-execution, never to garbage metrics. NaN
+    /// fields (e.g. acceptance of fused cells) round-trip via JSON null.
+    pub fn from_json(j: &Json) -> Option<CellMetrics> {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64_or_nan);
+        let features = j.get("mean_features")?.as_arr()?;
+        if features.len() != 5 {
+            return None;
+        }
+        let mut mean_features = [0.0f64; 5];
+        for (slot, v) in mean_features.iter_mut().zip(features) {
+            *slot = v.as_f64_or_nan()?;
+        }
+        Some(CellMetrics {
+            completed: j.get("completed")?.as_u64()?,
+            throughput_rps: f("throughput_rps")?,
+            token_throughput: f("token_throughput")?,
+            target_utilization: f("target_utilization")?,
+            mean_ttft_ms: f("mean_ttft_ms")?,
+            p99_ttft_ms: f("p99_ttft_ms")?,
+            mean_tpot_ms: f("mean_tpot_ms")?,
+            p99_tpot_ms: f("p99_tpot_ms")?,
+            mean_e2e_ms: f("mean_e2e_ms")?,
+            mean_acceptance: f("mean_acceptance")?,
+            mean_queue_delay_ms: f("mean_queue_delay_ms")?,
+            mean_net_delay_ms: f("mean_net_delay_ms")?,
+            sim_duration_ms: f("sim_duration_ms")?,
+            events_processed: j.get("events_processed")?.as_u64()?,
+            mean_features,
+        })
     }
 }
 
@@ -143,6 +189,38 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Execution accounting for one (possibly cached) sweep run. The resume
+/// integration tests assert on `executed == 0` for warm re-runs — i.e.
+/// cache hits execute zero simulator steps.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunStats {
+    /// Cells in the run (after any filtering).
+    pub total: usize,
+    /// Cells that actually entered the simulator.
+    pub executed: usize,
+    /// Cells satisfied from the cell cache.
+    pub cache_hits: usize,
+    /// Corrupt / truncated cache entries that forced re-execution.
+    pub corrupt_entries: usize,
+}
+
+impl RunStats {
+    /// One-line human rendering for progress logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} cells: {} executed, {} cached{}",
+            self.total,
+            self.executed,
+            self.cache_hits,
+            if self.corrupt_entries > 0 {
+                format!(", {} corrupt entries re-executed", self.corrupt_entries)
+            } else {
+                String::new()
+            }
+        )
+    }
+}
+
 /// Expand and execute a grid on `threads` workers. Results are ordered
 /// by cell index regardless of scheduling.
 pub fn run_grid(grid: &SweepGrid, threads: usize) -> Result<Vec<CellResult>, String> {
@@ -150,14 +228,42 @@ pub fn run_grid(grid: &SweepGrid, threads: usize) -> Result<Vec<CellResult>, Str
     Ok(run_cells(&cells, grid.streaming, threads))
 }
 
+/// [`run_grid`] against a cell cache: hits load from disk, misses
+/// execute and persist as they complete.
+pub fn run_grid_cached(
+    grid: &SweepGrid,
+    threads: usize,
+    cache: Option<&CellCache>,
+) -> Result<(Vec<CellResult>, RunStats), String> {
+    let cells = grid.expand()?;
+    Ok(run_cells_cached(&cells, grid.streaming, threads, cache))
+}
+
 /// Execute pre-expanded cells on `threads` workers (clamped to the cell
 /// count; 0 is treated as 1).
 pub fn run_cells(cells: &[SweepCell], streaming: bool, threads: usize) -> Vec<CellResult> {
+    run_cells_cached(cells, streaming, threads, None).0
+}
+
+/// Execute pre-expanded cells, consulting `cache` before every cell and
+/// persisting each finished cell *as it completes* (so a killed sweep
+/// keeps everything already done). Failed cells are never cached. Labels
+/// always come from the current grid expansion, so summaries reflect the
+/// invoking grid even when metrics were computed by an earlier run.
+pub fn run_cells_cached(
+    cells: &[SweepCell],
+    streaming: bool,
+    threads: usize,
+    cache: Option<&CellCache>,
+) -> (Vec<CellResult>, RunStats) {
     if cells.is_empty() {
-        return Vec::new();
+        return (Vec::new(), RunStats::default());
     }
     let threads = threads.clamp(1, cells.len());
     let next = AtomicUsize::new(0);
+    let executed = AtomicUsize::new(0);
+    let cache_hits = AtomicUsize::new(0);
+    let corrupt_entries = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<CellResult>>> =
         cells.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
@@ -168,19 +274,55 @@ pub fn run_cells(cells: &[SweepCell], streaming: bool, threads: usize) -> Vec<Ce
                     break;
                 }
                 let cell = &cells[i];
+                let key = cache.map(|_| cell_key(&cell.cfg, streaming));
+                let mut outcome = None;
+                if let (Some(c), Some(k)) = (cache, key.as_deref()) {
+                    match c.load(k) {
+                        CacheLookup::Hit(m) => {
+                            cache_hits.fetch_add(1, Ordering::Relaxed);
+                            outcome = Some(Ok(m));
+                        }
+                        CacheLookup::Corrupt(why) => {
+                            corrupt_entries.fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "[sweep] warning: corrupt cache entry for cell {} ({why}); \
+                                 re-executing",
+                                cell.index
+                            );
+                        }
+                        CacheLookup::Miss => {}
+                    }
+                }
+                let outcome = outcome.unwrap_or_else(|| {
+                    executed.fetch_add(1, Ordering::Relaxed);
+                    let out = run_cell(&cell.cfg, streaming);
+                    if let (Some(c), Some(k), Ok(m)) = (cache, key.as_deref(), &out) {
+                        if let Err(e) = c.store(k, &cell.labels, m) {
+                            eprintln!("[sweep] warning: {e}");
+                        }
+                    }
+                    out
+                });
                 let result = CellResult {
                     index: cell.index,
                     labels: cell.labels.clone(),
-                    outcome: run_cell(&cell.cfg, streaming),
+                    outcome,
                 };
                 *slots[i].lock().expect("slot lock") = Some(result);
             });
         }
     });
-    slots
+    let stats = RunStats {
+        total: cells.len(),
+        executed: executed.load(Ordering::Relaxed),
+        cache_hits: cache_hits.load(Ordering::Relaxed),
+        corrupt_entries: corrupt_entries.load(Ordering::Relaxed),
+    };
+    let results = slots
         .into_iter()
         .map(|s| s.into_inner().expect("slot lock").expect("cell executed"))
-        .collect()
+        .collect();
+    (results, stats)
 }
 
 fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
@@ -257,6 +399,69 @@ mod tests {
         grid.datasets = vec!["nope".into()];
         let rs = run_grid(&grid, 2).unwrap();
         assert!(rs.iter().all(|r| r.outcome.is_err()));
+    }
+
+    #[test]
+    fn metrics_json_roundtrip_is_lossless() {
+        let grid = tiny_grid();
+        let rs = run_grid(&grid, 2).unwrap();
+        for r in &rs {
+            let m = r.metrics();
+            let back = CellMetrics::from_json(&m.to_json()).expect("roundtrip");
+            assert_eq!(
+                back.to_json().to_string_pretty(),
+                m.to_json().to_string_pretty(),
+                "reloaded metrics must re-serialize byte-identically"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_run_executes_each_cell_once() {
+        use crate::sweep::cache::CellCache;
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-runner-cache-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let grid = tiny_grid();
+        let cells = grid.expand().unwrap();
+        let (cold, s1) = run_cells_cached(&cells, false, 2, Some(&cache));
+        assert_eq!(s1.executed, cells.len());
+        assert_eq!(s1.cache_hits, 0);
+        let (warm, s2) = run_cells_cached(&cells, false, 3, Some(&cache));
+        assert_eq!(s2.executed, 0, "warm run must execute zero cells");
+        assert_eq!(s2.cache_hits, cells.len());
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(
+                a.metrics().to_json().to_string_pretty(),
+                b.metrics().to_json().to_string_pretty()
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_cells_are_not_cached() {
+        use crate::sweep::cache::CellCache;
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-runner-cache-fail-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let mut grid = tiny_grid();
+        grid.datasets = vec!["nope".into()];
+        let cells = grid.expand().unwrap();
+        let (_, s1) = run_cells_cached(&cells, false, 2, Some(&cache));
+        assert_eq!(s1.executed, cells.len());
+        assert_eq!(cache.n_entries(), 0, "errors must not persist");
+        let (rs, s2) = run_cells_cached(&cells, false, 2, Some(&cache));
+        assert_eq!(s2.executed, cells.len(), "errors re-execute on resume");
+        assert!(rs.iter().all(|r| r.outcome.is_err()));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -12,12 +12,23 @@ pub struct SweepSummary {
     pub cells: Vec<CellResult>,
     /// Whether cells ran in streaming-metrics mode.
     pub streaming: bool,
+    /// Canonical `--filter` selector when the cells are an axis-filtered
+    /// subset of their grid; `None` for full-grid summaries. Filtered
+    /// summaries are labeled partial in JSON and table output, but stay
+    /// byte-deterministic for a given (grid, filter) pair.
+    pub filter: Option<String>,
 }
 
 impl SweepSummary {
-    /// Wrap runner output.
+    /// Wrap runner output (full-grid summary).
     pub fn new(cells: Vec<CellResult>, streaming: bool) -> SweepSummary {
-        SweepSummary { cells, streaming }
+        SweepSummary { cells, streaming, filter: None }
+    }
+
+    /// Mark this summary as an axis-filtered partial run.
+    pub fn with_filter(mut self, filter: Option<String>) -> SweepSummary {
+        self.filter = filter;
+        self
     }
 
     /// Cells that failed to run.
@@ -50,9 +61,14 @@ impl SweepSummary {
     /// no wall-clock fields — repeated runs emit identical bytes
     /// regardless of thread count.
     pub fn to_json(&self) -> Json {
-        Json::obj()
-            .with("streaming", self.streaming.into())
-            .with("cells", (self.cells.len() as u64).into())
+        let mut j = Json::obj().with("streaming", self.streaming.into());
+        if let Some(f) = &self.filter {
+            // Present only on filtered runs, so full-grid summaries keep
+            // their historical byte layout.
+            j.set("partial", true.into());
+            j.set("filter", f.as_str().into());
+        }
+        j.with("cells", (self.cells.len() as u64).into())
             .with("failed", (self.n_failed() as u64).into())
             .with(
                 "results",
@@ -86,9 +102,13 @@ impl SweepSummary {
             "done", "tput r/s", "ttft ms", "p99 ttft", "tpot ms", "p99 tpot", "acc", "util",
         ]);
         let mut table = Table::new(&headers).with_title(&format!(
-            "sweep — {} cells{}",
+            "sweep — {} cells{}{}",
             self.cells.len(),
-            if self.streaming { " (streaming)" } else { "" }
+            if self.streaming { " (streaming)" } else { "" },
+            match &self.filter {
+                Some(f) => format!(" (partial: {f})"),
+                None => String::new(),
+            }
         ));
         for c in &self.cells {
             let mut row = vec![c.index.to_string()];
@@ -140,6 +160,7 @@ mod tests {
             mean_net_delay_ms: 5.0,
             sim_duration_ms: 1000.0,
             events_processed: 1234,
+            mean_features: [0.4, 0.8, 10.0, 20.0, 4.0],
         }
     }
 
@@ -188,5 +209,19 @@ mod tests {
         let t = s.render_table();
         assert!(t.contains("error: boom"));
         assert!(t.contains("rtt_ms"));
+    }
+
+    #[test]
+    fn filtered_summary_labeled_partial() {
+        let s = SweepSummary::new(vec![cell(0, "5", true)], false)
+            .with_filter(Some("rtt_ms=5".into()));
+        let j = s.to_json();
+        assert_eq!(j.get("partial").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("filter").unwrap().as_str(), Some("rtt_ms=5"));
+        assert!(s.render_table().contains("partial: rtt_ms=5"));
+        // Unfiltered summaries keep the historical layout: no keys added.
+        let full = SweepSummary::new(vec![cell(0, "5", true)], false);
+        assert!(full.to_json().get("partial").is_none());
+        assert!(full.to_json().get("filter").is_none());
     }
 }

@@ -1,0 +1,71 @@
+//! Deterministic content hashing (replaces external hash crates,
+//! unavailable offline).
+//!
+//! FNV-1a over bytes. Unlike `std::collections::hash_map::DefaultHasher`
+//! (SipHash with a per-process random key), FNV-1a is a pure function of
+//! its input: the same bytes hash identically across threads, processes,
+//! machines, and releases — the property the sweep cell cache relies on
+//! to address results on disk.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a starting from an explicit state (chaining / decorrelated
+/// second passes).
+pub fn fnv1a_64_seeded(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Standard FNV-1a 64-bit hash.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    fnv1a_64_seeded(FNV_OFFSET, bytes)
+}
+
+/// 128-bit content hash as 32 lowercase hex characters: a standard
+/// FNV-1a pass plus a second pass whose offset basis is derived from the
+/// first digest, so the two halves decorrelate. Collision probability at
+/// sweep scales (≤ millions of cells) is negligible.
+pub fn content_hash_hex(bytes: &[u8]) -> String {
+    let h1 = fnv1a_64(bytes);
+    let h2 = fnv1a_64_seeded(h1 ^ 0x9e37_79b9_7f4a_7c15, bytes);
+    format!("{h1:016x}{h2:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let a = content_hash_hex(b"sweep cell one");
+        let b = content_hash_hex(b"sweep cell one");
+        let c = content_hash_hex(b"sweep cell two");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 32);
+        assert!(a.chars().all(|ch| ch.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn single_byte_flip_changes_both_halves() {
+        let a = content_hash_hex(b"abcdef");
+        let b = content_hash_hex(b"abcdeg");
+        assert_ne!(a[..16], b[..16]);
+        assert_ne!(a[16..], b[16..]);
+    }
+}

@@ -135,6 +135,43 @@ impl Json {
         self.as_arr()?.iter().map(|x| x.as_f64()).collect()
     }
 
+    /// As f64, decoding `null` to NaN. The writer emits non-finite
+    /// numbers as `null` (JSON has no NaN/Inf), so this is the inverse
+    /// used when reloading metric snapshots: NaN → null → NaN round-trips
+    /// and re-serializes to identical bytes.
+    pub fn as_f64_or_nan(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
+    /// Recursively sort object keys (byte order). Arrays keep their
+    /// element order — element order is semantic in JSON.
+    pub fn canonicalize(&self) -> Json {
+        match self {
+            Json::Arr(xs) => Json::Arr(xs.iter().map(Json::canonicalize).collect()),
+            Json::Obj(pairs) => {
+                let mut sorted: Vec<(String, Json)> = pairs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.canonicalize()))
+                    .collect();
+                sorted.sort_by(|a, b| a.0.cmp(&b.0));
+                Json::Obj(sorted)
+            }
+            other => other.clone(),
+        }
+    }
+
+    /// Canonical serialization: compact, object keys sorted recursively.
+    /// Two structurally equal documents produce identical bytes no matter
+    /// what order their keys were inserted or parsed in — the hashing
+    /// basis for sweep cell cache keys.
+    pub fn to_string_canonical(&self) -> String {
+        self.canonicalize().to_string_compact()
+    }
+
     /// Serialize compactly (no whitespace).
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
@@ -633,5 +670,37 @@ mod tests {
     #[test]
     fn non_finite_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+    }
+
+    #[test]
+    fn f64_or_nan_decodes_null() {
+        assert_eq!(Json::Num(2.5).as_f64_or_nan(), Some(2.5));
+        assert!(Json::Null.as_f64_or_nan().unwrap().is_nan());
+        assert_eq!(Json::Bool(true).as_f64_or_nan(), None);
+        // Round-trip: NaN serializes to null, reloads as NaN, and
+        // re-serializes to the same bytes.
+        let first = Json::Num(f64::NAN).to_string_compact();
+        let reloaded = Json::parse(&first).unwrap().as_f64_or_nan().unwrap();
+        assert_eq!(Json::Num(reloaded).to_string_compact(), first);
+    }
+
+    #[test]
+    fn canonical_ignores_insertion_order() {
+        let a = Json::obj()
+            .with("z", 1.0.into())
+            .with("a", Json::obj().with("q", 2.0.into()).with("b", 3.0.into()));
+        let b = Json::obj()
+            .with("a", Json::obj().with("b", 3.0.into()).with("q", 2.0.into()))
+            .with("z", 1.0.into());
+        assert_eq!(a.to_string_canonical(), b.to_string_canonical());
+        assert_eq!(a.to_string_canonical(), r#"{"a":{"b":3,"q":2},"z":1}"#);
+        // Compact form still reflects insertion order.
+        assert_ne!(a.to_string_compact(), b.to_string_compact());
+    }
+
+    #[test]
+    fn canonical_preserves_array_order() {
+        let v = Json::parse(r#"{"xs": [3, 1, 2]}"#).unwrap();
+        assert_eq!(v.to_string_canonical(), r#"{"xs":[3,1,2]}"#);
     }
 }

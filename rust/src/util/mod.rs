@@ -2,6 +2,7 @@
 //! RNG, JSON, YAML, CLI parsing, statistics, property testing, tables.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -64,6 +64,23 @@ impl Gen {
         &xs[i]
     }
 
+    /// Uniform random permutation of `0..n`. Used by order-insensitivity
+    /// properties, e.g. "document key order never changes a sweep cell's
+    /// cache key".
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut xs: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut xs);
+        xs
+    }
+
+    /// Shuffle a vector in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.rng.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
     /// Borrow the underlying RNG for ad-hoc draws.
     pub fn rng(&mut self) -> &mut Pcg64 {
         &mut self.rng
@@ -122,6 +139,32 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.u64_in(0, 1_000_000), b.u64_in(0, 1_000_000));
         }
+    }
+
+    #[test]
+    fn permutation_is_a_bijection() {
+        let mut g = Gen::new(11);
+        for n in [0usize, 1, 2, 7, 32] {
+            let p = g.permutation(n);
+            assert_eq!(p.len(), n);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+        }
+        // Deterministic per seed.
+        assert_eq!(Gen::new(3).permutation(10), Gen::new(3).permutation(10));
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut g = Gen::new(5);
+        let mut xs = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let mut want = xs.clone();
+        g.shuffle(&mut xs);
+        let mut got = xs.clone();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
     }
 
     #[test]
