@@ -164,10 +164,7 @@ pub fn generate_dataset_cached(
                     let scenario = format!("{ds}-20t{n_d}d-rtt{rtt}-x{mult}");
                     let (probes, s) =
                         probe_scenario(grid, ds, n_d, rtt, mult, scen_idx, cache, threads);
-                    stats.total += s.total;
-                    stats.executed += s.executed;
-                    stats.cache_hits += s.cache_hits;
-                    stats.corrupt_entries += s.corrupt_entries;
+                    stats.absorb(s);
                     let label = label_from_probes(&probes, grid.weights);
                     for p in &probes {
                         rows.push(DatasetRow {

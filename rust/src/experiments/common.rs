@@ -7,6 +7,9 @@ use crate::config::{
 };
 use crate::metrics::SimReport;
 use crate::sim::Simulator;
+use crate::sweep::cache::CellCache;
+use crate::sweep::runner::{default_threads, run_cells_cached, CellMetrics, RunStats};
+use crate::sweep::{SweepCell, SweepGrid};
 use crate::util::json::Json;
 
 /// Scale factor applied to request counts (1.0 = paper scale). Tests use
@@ -104,6 +107,100 @@ pub fn paper_config(
     cfg
 }
 
+/// Execution context for experiments that run on the cached sweep
+/// runner (`dsd reproduce --cache-dir / --threads / --streaming`).
+pub struct ExpContext<'a> {
+    /// Worker threads for the runner.
+    pub threads: usize,
+    /// Optional cell cache: re-running a figure (or widening its seed
+    /// list) only executes cells the cache has not seen, and a killed
+    /// run resumes from whatever already finished.
+    pub cache: Option<&'a CellCache>,
+    /// Run cells in bounded-memory streaming-metrics mode (1M+ request
+    /// cells; `throughput_rps` becomes the naive completions/duration
+    /// ratio — see `metrics::StreamingReport`).
+    pub streaming: bool,
+    /// Accounting accumulated over every [`run_points`] batch executed
+    /// with this context. The kill-and-resume tests read
+    /// `ctx.stats.get().executed` to prove a warm cache re-executes
+    /// zero cells.
+    pub stats: std::cell::Cell<RunStats>,
+}
+
+impl Default for ExpContext<'_> {
+    fn default() -> Self {
+        ExpContext {
+            threads: default_threads().min(8),
+            cache: None,
+            streaming: false,
+            stats: std::cell::Cell::new(RunStats::default()),
+        }
+    }
+}
+
+impl<'a> ExpContext<'a> {
+    /// Context with an optional cache and defaults elsewhere.
+    pub fn with_cache(cache: Option<&'a CellCache>) -> ExpContext<'a> {
+        ExpContext {
+            cache,
+            ..ExpContext::default()
+        }
+    }
+
+    /// Fold one runner batch's accounting into the accumulated stats.
+    pub fn absorb_stats(&self, stats: RunStats) {
+        let mut acc = self.stats.get();
+        acc.absorb(stats);
+        self.stats.set(acc);
+    }
+}
+
+/// One experiment scenario as a sweep grid: a concrete config replicated
+/// over the seed axis (the grid's only swept axis, so cells expand in
+/// seed order).
+pub fn point_grid(cfg: SimConfig, seeds: &[u64], streaming: bool) -> SweepGrid {
+    let mut g = SweepGrid::new(cfg);
+    g.seeds = seeds.to_vec();
+    g.streaming = streaming;
+    g
+}
+
+/// Expand scenario grids (declaration order) into one cell list with
+/// globally unique indices and execute every cell through the cached
+/// runner in a single batch — the whole figure shares the thread pool,
+/// and every cell inherits content-addressed caching and kill-resume.
+/// Returns `result[point]` = per-seed metrics in seed order, plus run
+/// accounting. Every grid must expand to exactly `per_point` cells.
+pub fn run_points(
+    grids: &[SweepGrid],
+    per_point: usize,
+    ctx: &ExpContext,
+) -> (Vec<Vec<CellMetrics>>, RunStats) {
+    let mut cells: Vec<SweepCell> = Vec::new();
+    for g in grids {
+        let expanded = g.expand().expect("experiment grid expands");
+        assert_eq!(expanded.len(), per_point, "experiment point cell count");
+        for mut c in expanded {
+            c.index = cells.len();
+            cells.push(c);
+        }
+    }
+    let (results, stats) = run_cells_cached(&cells, ctx.streaming, ctx.threads, ctx.cache);
+    ctx.absorb_stats(stats);
+    let points = results
+        .chunks(per_point)
+        .map(|chunk| chunk.iter().map(|c| *c.metrics()).collect())
+        .collect();
+    (points, stats)
+}
+
+/// Mean of one metric across a point's seed replicas (same arithmetic —
+/// and therefore the same floating-point rounding — as [`mean_of`] over
+/// per-seed reports).
+pub fn mean_metric(cells: &[CellMetrics], f: impl Fn(&CellMetrics) -> f64) -> f64 {
+    crate::util::stats::mean(&cells.iter().map(f).collect::<Vec<_>>())
+}
+
 /// Run a config with several seeds; returns per-seed reports (the paper
 /// averages over random seeds, §5).
 pub fn run_seeds(cfg: &SimConfig, seeds: &[u64]) -> Vec<SimReport> {
@@ -196,5 +293,36 @@ mod tests {
     fn scale_floors_request_count() {
         assert_eq!(Scale(0.001).n(400), 8);
         assert_eq!(Scale::full().n(400), 400);
+    }
+
+    #[test]
+    fn run_points_is_bit_identical_to_run_seeds() {
+        // The runner-backed path must reproduce the direct per-seed
+        // path exactly: same configs, same simulator entry, same
+        // floating-point trajectory.
+        let cfg = paper_config(
+            "gsm8k",
+            60,
+            10.0,
+            RoutingKind::Jsq,
+            BatchingKind::Lab,
+            WindowKind::Static(4),
+            Scale(0.03),
+            1,
+        );
+        let seeds = [1u64, 2];
+        let reps = run_seeds(&cfg, &seeds);
+        let grids = vec![point_grid(cfg, &seeds, false)];
+        let (points, stats) = run_points(&grids, seeds.len(), &ExpContext::default());
+        assert_eq!(stats.total, 2);
+        assert_eq!(points.len(), 1);
+        for (rep, m) in reps.iter().zip(&points[0]) {
+            assert_eq!(rep.system.completed as u64, m.completed);
+            assert_eq!(rep.system.events_processed, m.events_processed);
+            assert!((rep.system.throughput_rps - m.throughput_rps).abs() < 1e-12);
+            assert!((rep.mean_ttft() - m.mean_ttft_ms).abs() < 1e-12);
+            assert!((rep.mean_tpot() - m.mean_tpot_ms).abs() < 1e-12);
+            assert!((rep.mean_e2e() - m.mean_e2e_ms).abs() < 1e-12);
+        }
     }
 }

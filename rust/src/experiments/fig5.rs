@@ -10,8 +10,17 @@
 //! Paper shape: each addition improves throughput and latency; on GSM8K
 //! throughput climbs ≈25.1 → 28.1 req/s, TPOT drops ≈45 → 37 ms, with
 //! AWC providing the main latency gain.
+//!
+//! Execution rides the cached sweep runner: one grid per policy stack
+//! (the stacks are hand-picked routing × batching × window combinations,
+//! not a cross product), all cells batched through a single
+//! `run_cells_cached` call — so `dsd reproduce --exp fig5 --cache-dir`
+//! resumes and skips like any sweep, and `--streaming` bounds per-cell
+//! memory at any request count.
 
-use super::common::{mean_of, paper_config, run_seeds, save_rows, Row, Scale};
+use super::common::{
+    mean_metric, paper_config, point_grid, run_points, save_rows, ExpContext, Row, Scale,
+};
 use crate::config::{BatchingKind, RoutingKind, WindowKind};
 use crate::util::table::{fnum, Table};
 
@@ -34,16 +43,40 @@ pub fn stacks() -> Vec<(&'static str, RoutingKind, BatchingKind, WindowKind)> {
 /// One dataset's stack sweep; returns rows of
 /// (stack, throughput, ttft, tpot).
 pub fn sweep(dataset: &str, scale: Scale, seeds: &[u64]) -> Vec<(String, f64, f64, f64)> {
+    sweep_cached(dataset, scale, seeds, &ExpContext::default())
+}
+
+/// [`sweep`] on an explicit runner context (threads / cell cache /
+/// streaming mode).
+pub fn sweep_cached(
+    dataset: &str,
+    scale: Scale,
+    seeds: &[u64],
+    ctx: &ExpContext,
+) -> Vec<(String, f64, f64, f64)> {
+    let grids: Vec<_> = stacks()
+        .into_iter()
+        .map(|(_, routing, batching, window)| {
+            point_grid(
+                paper_config(dataset, 600, 10.0, routing, batching, window, scale, seeds[0]),
+                seeds,
+                ctx.streaming,
+            )
+        })
+        .collect();
+    let (points, stats) = run_points(&grids, seeds.len(), ctx);
+    if ctx.cache.is_some() {
+        eprintln!("[fig5] {dataset}: {}", stats.describe());
+    }
     stacks()
         .into_iter()
-        .map(|(name, routing, batching, window)| {
-            let cfg = paper_config(dataset, 600, 10.0, routing, batching, window, scale, seeds[0]);
-            let reps = run_seeds(&cfg, seeds);
+        .zip(points)
+        .map(|((name, _, _, _), cells)| {
             (
                 name.to_string(),
-                mean_of(&reps, |r| r.system.throughput_rps),
-                mean_of(&reps, |r| r.mean_ttft()),
-                mean_of(&reps, |r| r.mean_tpot()),
+                mean_metric(&cells, |m| m.throughput_rps),
+                mean_metric(&cells, |m| m.mean_ttft_ms),
+                mean_metric(&cells, |m| m.mean_tpot_ms),
             )
         })
         .collect()
@@ -51,12 +84,17 @@ pub fn sweep(dataset: &str, scale: Scale, seeds: &[u64]) -> Vec<(String, f64, f6
 
 /// Run the full figure and render the paper-style table.
 pub fn run(scale: Scale, seeds: &[u64]) -> String {
+    run_cached(scale, seeds, &ExpContext::default())
+}
+
+/// [`run`] on an explicit runner context (`dsd reproduce --cache-dir`).
+pub fn run_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> String {
     let mut out = String::new();
     let mut rows = Vec::new();
     for dataset in ["gsm8k", "cnndm", "humaneval"] {
         let mut table = Table::new(&["stack", "tput req/s", "TTFT ms", "TPOT ms"])
             .with_title(&format!("Fig 5 — policy stacks ({dataset})"));
-        for (name, tput, ttft, tpot) in sweep(dataset, scale, seeds) {
+        for (name, tput, ttft, tpot) in sweep_cached(dataset, scale, seeds, ctx) {
             table.row(vec![
                 name.clone(),
                 fnum(tput, 1),
@@ -115,5 +153,18 @@ mod tests {
             default.3,
             setting4.3
         );
+    }
+
+    #[test]
+    fn streaming_context_runs() {
+        let ctx = ExpContext {
+            streaming: true,
+            ..ExpContext::default()
+        };
+        let rows = sweep_cached("gsm8k", Scale(0.02), &[1], &ctx);
+        assert_eq!(rows.len(), 5);
+        for (_, tput, ttft, tpot) in rows {
+            assert!(tput > 0.0 && ttft > 0.0 && tpot > 0.0);
+        }
     }
 }

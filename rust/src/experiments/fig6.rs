@@ -9,11 +9,10 @@
 //! ([`crate::sweep`]); cell ordering is deterministic, so the figure is
 //! bit-identical across thread counts.
 
-use super::common::{paper_config, save_rows, Row, Scale};
+use super::common::{paper_config, save_rows, ExpContext, Row, Scale};
 use crate::config::{BatchingKind, RoutingKind, WindowKind};
-use crate::sweep::cache::CellCache;
 use crate::sweep::grid::window_label;
-use crate::sweep::{default_threads, run_grid_cached, CellResult, SweepGrid};
+use crate::sweep::{run_grid_cached, CellResult, SweepGrid};
 use crate::util::stats::mean;
 use crate::util::table::{fnum, Table};
 
@@ -28,16 +27,13 @@ pub type Series = Vec<(f64, f64, f64, f64)>;
 /// Run both modes over the sweep (cells execute in parallel on the
 /// sweep runner; results are selected back by their axis labels).
 pub fn sweep(scale: Scale, seeds: &[u64]) -> (Series, Series) {
-    sweep_cached(scale, seeds, None)
+    sweep_cached(scale, seeds, &ExpContext::default())
 }
 
-/// [`sweep`] against an optional cell cache: re-running the figure (or
-/// widening its seed list) only executes cells the cache has not seen.
-pub fn sweep_cached(
-    scale: Scale,
-    seeds: &[u64],
-    cache: Option<&CellCache>,
-) -> (Series, Series) {
+/// [`sweep`] on an explicit runner context: re-running the figure (or
+/// widening its seed list) against a cell cache only executes cells the
+/// cache has not seen; `streaming` bounds per-cell memory.
+pub fn sweep_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> (Series, Series) {
     let mut base = paper_config(
         "gsm8k",
         600,
@@ -56,9 +52,10 @@ pub fn sweep_cached(
     grid.windows = vec![WindowKind::Static(4), WindowKind::FusedOnly];
     grid.rtt_ms = rtt_points();
     grid.seeds = seeds.to_vec();
-    let (cells, stats) =
-        run_grid_cached(&grid, default_threads().min(8), cache).expect("fig6 grid");
-    if cache.is_some() {
+    grid.streaming = ctx.streaming;
+    let (cells, stats) = run_grid_cached(&grid, ctx.threads, ctx.cache).expect("fig6 grid");
+    ctx.absorb_stats(stats);
+    if ctx.cache.is_some() {
         eprintln!("[fig6] {}", stats.describe());
     }
     // Select cells by their axis labels (robust to any change in the
@@ -106,12 +103,12 @@ pub fn crossover_rtt(distributed: &Series, fused: &Series) -> Option<f64> {
 
 /// Run and render.
 pub fn run(scale: Scale, seeds: &[u64]) -> String {
-    run_cached(scale, seeds, None)
+    run_cached(scale, seeds, &ExpContext::default())
 }
 
-/// [`run`] with an optional cell cache (`dsd reproduce --cache-dir`).
-pub fn run_cached(scale: Scale, seeds: &[u64], cache: Option<&CellCache>) -> String {
-    let (dist, fused) = sweep_cached(scale, seeds, cache);
+/// [`run`] on an explicit runner context (`dsd reproduce --cache-dir`).
+pub fn run_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> String {
+    let (dist, fused) = sweep_cached(scale, seeds, ctx);
     let mut table = Table::new(&[
         "RTT ms",
         "dist tput",

@@ -5,8 +5,16 @@
 //! Paper shape: JSQ is best while resources are not saturated (TPOT
 //! 5–20 ms lower, best throughput to ≈1k drafters) but saturates and is
 //! caught (and crossed on TPOT) by Round-Robin at high load.
+//!
+//! Execution rides the cached sweep runner: one grid per
+//! (routing, drafter-count) point — each point needs its own base config
+//! because the edge pool layout and the offered load both scale with the
+//! drafter count — and all cells batch through a single
+//! `run_cells_cached` call.
 
-use super::common::{mean_of, paper_config, run_seeds, save_rows, Row, Scale};
+use super::common::{
+    mean_metric, paper_config, point_grid, run_points, save_rows, ExpContext, Row, Scale,
+};
 use crate::config::{BatchingKind, RoutingKind, WindowKind};
 use crate::util::table::{fnum, Table};
 
@@ -26,31 +34,55 @@ pub fn routings() -> Vec<(&'static str, RoutingKind)> {
 
 /// `result[routing][point] = (drafters, tput, tpot)`.
 pub fn sweep(dataset: &str, scale: Scale, seeds: &[u64]) -> Vec<Vec<(usize, f64, f64)>> {
+    sweep_cached(dataset, scale, seeds, &ExpContext::default())
+}
+
+/// [`sweep`] on an explicit runner context (threads / cell cache /
+/// streaming mode).
+pub fn sweep_cached(
+    dataset: &str,
+    scale: Scale,
+    seeds: &[u64],
+    ctx: &ExpContext,
+) -> Vec<Vec<(usize, f64, f64)>> {
+    let mut grids = Vec::new();
+    for (_, routing) in routings() {
+        for n in drafter_points() {
+            let mut cfg = paper_config(
+                dataset,
+                n,
+                10.0,
+                routing,
+                BatchingKind::Lab,
+                WindowKind::Static(4),
+                scale,
+                seeds[0],
+            );
+            // Offered load scales with the edge pool so saturation
+            // is reached within the sweep (paper: load tracks the
+            // number of draft clients).
+            cfg.workload.rate_per_s *= n as f64 / 600.0;
+            grids.push(point_grid(cfg, seeds, ctx.streaming));
+        }
+    }
+    let (points, stats) = run_points(&grids, seeds.len(), ctx);
+    if ctx.cache.is_some() {
+        eprintln!("[fig7_8] {dataset}: {}", stats.describe());
+    }
+    let npts = drafter_points().len();
     routings()
         .iter()
-        .map(|&(_, routing)| {
+        .enumerate()
+        .map(|(ri, _)| {
             drafter_points()
                 .into_iter()
-                .map(|n| {
-                    let mut cfg = paper_config(
-                        dataset,
-                        n,
-                        10.0,
-                        routing,
-                        BatchingKind::Lab,
-                        WindowKind::Static(4),
-                        scale,
-                        seeds[0],
-                    );
-                    // Offered load scales with the edge pool so saturation
-                    // is reached within the sweep (paper: load tracks the
-                    // number of draft clients).
-                    cfg.workload.rate_per_s *= n as f64 / 600.0;
-                    let reps = run_seeds(&cfg, seeds);
+                .enumerate()
+                .map(|(pi, n)| {
+                    let cells = &points[ri * npts + pi];
                     (
                         n,
-                        mean_of(&reps, |r| r.system.throughput_rps),
-                        mean_of(&reps, |r| r.mean_tpot()),
+                        mean_metric(cells, |m| m.throughput_rps),
+                        mean_metric(cells, |m| m.mean_tpot_ms),
                     )
                 })
                 .collect()
@@ -60,10 +92,15 @@ pub fn sweep(dataset: &str, scale: Scale, seeds: &[u64]) -> Vec<Vec<(usize, f64,
 
 /// Run and render both figures' series.
 pub fn run(scale: Scale, seeds: &[u64]) -> String {
+    run_cached(scale, seeds, &ExpContext::default())
+}
+
+/// [`run`] on an explicit runner context (`dsd reproduce --cache-dir`).
+pub fn run_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> String {
     let mut out = String::new();
     let mut rows = Vec::new();
     for dataset in ["gsm8k", "humaneval", "cnndm"] {
-        let results = sweep(dataset, scale, seeds);
+        let results = sweep_cached(dataset, scale, seeds, ctx);
         let mut t7 = Table::new(&["drafters", "Random", "RR", "JSQ"])
             .with_title(&format!("Fig 7 — throughput vs draft clients ({dataset})"));
         let mut t8 = Table::new(&["drafters", "Random", "RR", "JSQ"])

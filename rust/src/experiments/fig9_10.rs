@@ -6,8 +6,14 @@
 //! load (Fig 9); both policies reach the same throughput ceiling once
 //! the system saturates beyond ≈1k drafters (Fig 10) — queue order does
 //! not create compute capacity.
+//!
+//! Execution rides the cached sweep runner: one grid per
+//! (batching, drafter-count) point, every cell batched through a single
+//! `run_cells_cached` call (same structure as Fig 7/8).
 
-use super::common::{mean_of, paper_config, run_seeds, save_rows, Row, Scale};
+use super::common::{
+    mean_metric, paper_config, point_grid, run_points, save_rows, ExpContext, Row, Scale,
+};
 use crate::config::{BatchingKind, RoutingKind, WindowKind};
 use crate::util::table::{fnum, Table};
 
@@ -16,31 +22,60 @@ pub fn drafter_points() -> Vec<usize> {
     vec![400, 800, 1200, 1600, 2000]
 }
 
+/// The two batching policies of the ablation (paper order).
+pub fn batchings() -> Vec<BatchingKind> {
+    vec![BatchingKind::Fifo, BatchingKind::Lab]
+}
+
 /// `result[policy][point] = (drafters, tput, tpot)`; policy 0 = FIFO,
 /// 1 = LAB.
 pub fn sweep(dataset: &str, scale: Scale, seeds: &[u64]) -> Vec<Vec<(usize, f64, f64)>> {
-    [BatchingKind::Fifo, BatchingKind::Lab]
+    sweep_cached(dataset, scale, seeds, &ExpContext::default())
+}
+
+/// [`sweep`] on an explicit runner context (threads / cell cache /
+/// streaming mode).
+pub fn sweep_cached(
+    dataset: &str,
+    scale: Scale,
+    seeds: &[u64],
+    ctx: &ExpContext,
+) -> Vec<Vec<(usize, f64, f64)>> {
+    let mut grids = Vec::new();
+    for batching in batchings() {
+        for n in drafter_points() {
+            let mut cfg = paper_config(
+                dataset,
+                n,
+                10.0,
+                RoutingKind::Jsq,
+                batching,
+                WindowKind::Static(4),
+                scale,
+                seeds[0],
+            );
+            cfg.workload.rate_per_s *= n as f64 / 600.0;
+            grids.push(point_grid(cfg, seeds, ctx.streaming));
+        }
+    }
+    let (points, stats) = run_points(&grids, seeds.len(), ctx);
+    if ctx.cache.is_some() {
+        eprintln!("[fig9_10] {dataset}: {}", stats.describe());
+    }
+    let npts = drafter_points().len();
+    batchings()
         .iter()
-        .map(|&batching| {
+        .enumerate()
+        .map(|(bi, _)| {
             drafter_points()
                 .into_iter()
-                .map(|n| {
-                    let mut cfg = paper_config(
-                        dataset,
-                        n,
-                        10.0,
-                        RoutingKind::Jsq,
-                        batching,
-                        WindowKind::Static(4),
-                        scale,
-                        seeds[0],
-                    );
-                    cfg.workload.rate_per_s *= n as f64 / 600.0;
-                    let reps = run_seeds(&cfg, seeds);
+                .enumerate()
+                .map(|(pi, n)| {
+                    let cells = &points[bi * npts + pi];
                     (
                         n,
-                        mean_of(&reps, |r| r.system.throughput_rps),
-                        mean_of(&reps, |r| r.mean_tpot()),
+                        mean_metric(cells, |m| m.throughput_rps),
+                        mean_metric(cells, |m| m.mean_tpot_ms),
                     )
                 })
                 .collect()
@@ -50,10 +85,15 @@ pub fn sweep(dataset: &str, scale: Scale, seeds: &[u64]) -> Vec<Vec<(usize, f64,
 
 /// Run and render both figures.
 pub fn run(scale: Scale, seeds: &[u64]) -> String {
+    run_cached(scale, seeds, &ExpContext::default())
+}
+
+/// [`run`] on an explicit runner context (`dsd reproduce --cache-dir`).
+pub fn run_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> String {
     let mut out = String::new();
     let mut rows = Vec::new();
     for dataset in ["gsm8k", "humaneval", "cnndm"] {
-        let results = sweep(dataset, scale, seeds);
+        let results = sweep_cached(dataset, scale, seeds, ctx);
         let mut t9 = Table::new(&["drafters", "FIFO TPOT", "LAB TPOT", "Δ"])
             .with_title(&format!("Fig 9 — FIFO vs LAB latency ({dataset})"));
         let mut t10 = Table::new(&["drafters", "FIFO tput", "LAB tput"])

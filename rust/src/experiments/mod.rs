@@ -2,6 +2,13 @@
 //! evaluation (§5), each regenerating the corresponding rows/series.
 //! `dsd reproduce --exp <id>` is the CLI entry; `rust/benches/bench_*`
 //! time the same code paths.
+//!
+//! Every runner-backed family (fig5, fig6, fig7/8, fig9/10, table2)
+//! executes through `sweep::run_cells_cached`, so all of them inherit
+//! `--cache-dir` (content-addressed per-cell persistence + kill-resume),
+//! `--threads`, and `--streaming` (bounded-memory cells for 1M+ request
+//! scales). The experiment modules themselves are grid declarations plus
+//! formatting.
 
 pub mod common;
 pub mod fig4;
@@ -11,7 +18,27 @@ pub mod fig7_8;
 pub mod fig9_10;
 pub mod table2;
 
-pub use common::Scale;
+pub use common::{ExpContext, Scale};
+
+/// Knobs `dsd reproduce` forwards to the runner-backed families.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOptions {
+    /// Worker threads (0 = one per core, capped at 8 like the direct
+    /// library entry points).
+    pub threads: usize,
+    /// Run cells in bounded-memory streaming-metrics mode.
+    pub streaming: bool,
+}
+
+impl RunOptions {
+    fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::sweep::default_threads().min(8)
+        } else {
+            self.threads
+        }
+    }
+}
 
 /// Run one experiment by id; returns its rendered report.
 pub fn run_experiment(exp: &str, scale: Scale, seeds: &[u64]) -> Result<String, String> {
@@ -19,33 +46,59 @@ pub fn run_experiment(exp: &str, scale: Scale, seeds: &[u64]) -> Result<String, 
 }
 
 /// [`run_experiment`] with an optional sweep cell-cache directory
-/// (`dsd reproduce --cache-dir <dir>`). Experiments that execute on the
-/// sweep runner (currently fig6) persist their cells under
-/// `<dir>/<exp>/` and skip anything already computed — re-rendering a
-/// figure after a crash, or with more seeds, only runs the delta.
+/// (`dsd reproduce --cache-dir <dir>`).
 pub fn run_experiment_cached(
     exp: &str,
     scale: Scale,
     seeds: &[u64],
     cache_dir: Option<&std::path::Path>,
 ) -> Result<String, String> {
-    Ok(match exp {
-        "fig4" => fig4::run(seeds[0]).0,
-        "fig5" => fig5::run(scale, seeds),
-        "fig6" => {
-            let cache = match cache_dir {
-                Some(dir) => Some(crate::sweep::CellCache::open(&dir.join("fig6"))?),
-                None => None,
-            };
-            fig6::run_cached(scale, seeds, cache.as_ref())
+    run_experiment_opts(exp, scale, seeds, cache_dir, RunOptions::default())
+}
+
+/// Full-control entry: every runner-backed experiment persists its cells
+/// under `<cache_dir>/<exp>/` and skips anything already computed —
+/// re-rendering a figure after a crash, or with more seeds, only runs
+/// the delta — and honors the thread/streaming knobs.
+pub fn run_experiment_opts(
+    exp: &str,
+    scale: Scale,
+    seeds: &[u64],
+    cache_dir: Option<&std::path::Path>,
+    opts: RunOptions,
+) -> Result<String, String> {
+    let run_one = |name: &str| -> Result<String, String> {
+        if name == "fig4" {
+            // Fig 4 is a single annotated run, not a sweep family.
+            return Ok(fig4::run(seeds[0]).0);
         }
-        "fig7" | "fig8" | "fig7_8" => fig7_8::run(scale, seeds),
-        "fig9" | "fig10" | "fig9_10" => fig9_10::run(scale, seeds),
-        "table2" => table2::run(scale, seeds),
+        let cache = match cache_dir {
+            Some(dir) => Some(crate::sweep::CellCache::open(&dir.join(name))?),
+            None => None,
+        };
+        let ctx = ExpContext {
+            threads: opts.resolved_threads(),
+            cache: cache.as_ref(),
+            streaming: opts.streaming,
+            stats: Default::default(),
+        };
+        Ok(match name {
+            "fig5" => fig5::run_cached(scale, seeds, &ctx),
+            "fig6" => fig6::run_cached(scale, seeds, &ctx),
+            "fig7_8" => fig7_8::run_cached(scale, seeds, &ctx),
+            "fig9_10" => fig9_10::run_cached(scale, seeds, &ctx),
+            "table2" => table2::run_cached(scale, seeds, &ctx),
+            other => unreachable!("unrouted experiment '{other}'"),
+        })
+    };
+    Ok(match exp {
+        "fig4" | "fig5" | "fig6" | "table2" => run_one(exp)?,
+        "fig7" | "fig8" | "fig7_8" => run_one("fig7_8")?,
+        "fig9" | "fig10" | "fig9_10" => run_one("fig9_10")?,
         "all" => {
             let mut out = String::new();
             for e in ["fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2"] {
-                out.push_str(&run_experiment_cached(e, scale, seeds, cache_dir)?);
+                out.push_str(&run_one(e)?);
                 out.push('\n');
             }
             out
@@ -65,5 +118,13 @@ mod tests {
     #[test]
     fn unknown_experiment_rejected() {
         assert!(run_experiment("fig99", Scale::tiny(), &[1]).is_err());
+    }
+
+    #[test]
+    fn aliases_route_to_canonical_families() {
+        // Aliased ids render the same report as the canonical id.
+        let a = run_experiment("fig9", Scale(0.02), &[1]).unwrap();
+        let b = run_experiment("fig9_10", Scale(0.02), &[1]).unwrap();
+        assert_eq!(a, b);
     }
 }

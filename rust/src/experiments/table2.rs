@@ -4,8 +4,14 @@
 //! Configs: {20 targets / 600 drafters, 20 / 1000} × {10 ms, 30 ms} RTT.
 //! Paper shape: AWC has the best throughput in 12/12 cells (+3–10% vs
 //! Static), TTFT within ±4% of the best baseline, TPOT 6–10% lower.
+//!
+//! Execution rides the cached sweep runner: one grid per
+//! (config, dataset, policy) cell, all 36 cells × seeds batched through
+//! a single `run_cells_cached` call.
 
-use super::common::{mean_of, paper_config, run_seeds, save_rows, Row, Scale};
+use super::common::{
+    mean_metric, paper_config, point_grid, run_points, save_rows, ExpContext, Row, Scale,
+};
 use crate::config::{BatchingKind, RoutingKind, WindowKind};
 use crate::util::table::{fnum, fpct, Table};
 
@@ -28,6 +34,9 @@ pub fn policies() -> Vec<(&'static str, WindowKind)> {
     ]
 }
 
+/// Datasets in table column order.
+const DATASETS: [&str; 3] = ["gsm8k", "humaneval", "cnndm"];
+
 /// One cell's metrics.
 #[derive(Clone, Copy, Debug)]
 pub struct Cell {
@@ -41,30 +50,52 @@ pub struct Cell {
 
 /// Run the whole table; returns `result[config][dataset][policy]`.
 pub fn sweep(scale: Scale, seeds: &[u64]) -> Vec<Vec<Vec<Cell>>> {
+    sweep_cached(scale, seeds, &ExpContext::default())
+}
+
+/// [`sweep`] on an explicit runner context (threads / cell cache /
+/// streaming mode).
+pub fn sweep_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> Vec<Vec<Vec<Cell>>> {
+    let mut grids = Vec::new();
+    for &(_, drafters, rtt) in &configs() {
+        for ds in DATASETS {
+            for (_, w) in policies() {
+                grids.push(point_grid(
+                    paper_config(
+                        ds,
+                        drafters,
+                        rtt,
+                        RoutingKind::Jsq,
+                        BatchingKind::Lab,
+                        w,
+                        scale,
+                        seeds[0],
+                    ),
+                    seeds,
+                    ctx.streaming,
+                ));
+            }
+        }
+    }
+    let (points, stats) = run_points(&grids, seeds.len(), ctx);
+    if ctx.cache.is_some() {
+        eprintln!("[table2] {}", stats.describe());
+    }
+    let n_pol = policies().len();
+    let n_ds = DATASETS.len();
     configs()
         .iter()
-        .map(|&(_, drafters, rtt)| {
-            ["gsm8k", "humaneval", "cnndm"]
-                .iter()
-                .map(|ds| {
-                    policies()
-                        .iter()
-                        .map(|(_, w)| {
-                            let cfg = paper_config(
-                                ds,
-                                drafters,
-                                rtt,
-                                RoutingKind::Jsq,
-                                BatchingKind::Lab,
-                                w.clone(),
-                                scale,
-                                seeds[0],
-                            );
-                            let reps = run_seeds(&cfg, seeds);
+        .enumerate()
+        .map(|(ci, _)| {
+            (0..n_ds)
+                .map(|di| {
+                    (0..n_pol)
+                        .map(|pi| {
+                            let cells = &points[(ci * n_ds + di) * n_pol + pi];
                             Cell {
-                                tput: mean_of(&reps, |r| r.system.throughput_rps),
-                                ttft: mean_of(&reps, |r| r.mean_ttft()),
-                                tpot: mean_of(&reps, |r| r.mean_tpot()),
+                                tput: mean_metric(cells, |m| m.throughput_rps),
+                                ttft: mean_metric(cells, |m| m.mean_ttft_ms),
+                                tpot: mean_metric(cells, |m| m.mean_tpot_ms),
                             }
                         })
                         .collect()
@@ -76,8 +107,12 @@ pub fn sweep(scale: Scale, seeds: &[u64]) -> Vec<Vec<Vec<Cell>>> {
 
 /// Run and render the paper-style table.
 pub fn run(scale: Scale, seeds: &[u64]) -> String {
-    let results = sweep(scale, seeds);
-    let datasets = ["gsm8k", "humaneval", "cnndm"];
+    run_cached(scale, seeds, &ExpContext::default())
+}
+
+/// [`run`] on an explicit runner context (`dsd reproduce --cache-dir`).
+pub fn run_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> String {
+    let results = sweep_cached(scale, seeds, ctx);
     let mut out = String::new();
     let mut rows = Vec::new();
     for (metric_idx, (metric, better_high)) in
@@ -90,7 +125,7 @@ pub fn run(scale: Scale, seeds: &[u64]) -> String {
         ])
         .with_title(&format!("Table 2 — {metric}"));
         for (ci, (clabel, _, _)) in configs().iter().enumerate() {
-            for (di, ds) in datasets.iter().enumerate() {
+            for (di, ds) in DATASETS.iter().enumerate() {
                 let cells = &results[ci][di];
                 let get = |c: &Cell| match metric_idx {
                     0 => c.tput,

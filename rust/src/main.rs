@@ -45,6 +45,11 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("simulate", "run DSD-Sim on a deployment config")
         .opt("config", "YAML deployment file", None)
         .opt("seed", "override RNG seed", None)
+        .flag(
+            "streaming",
+            "bounded-memory streaming metrics: folded percentiles, per-target and \
+             per-drafter-pool breakdowns, γ histogram, SLO counters",
+        )
         .flag("json", "emit the full JSON report");
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
     let mut cfg = match a.get("config") {
@@ -53,6 +58,15 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     };
     if let Some(seed) = a.get_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = seed;
+    }
+    if a.flag("streaming") {
+        let report = Simulator::try_new(cfg)?.try_run_streaming()?;
+        if a.flag("json") {
+            println!("{}", report.to_json().to_string_pretty());
+        } else {
+            println!("{}", report.summary());
+        }
+        return Ok(());
     }
     let report = Simulator::try_new(cfg)?.run();
     if a.flag("json") {
@@ -86,9 +100,26 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
              summary is labeled partial",
             None,
         )
+        .opt(
+            "gc",
+            "garbage-collect a cell directory (or run dir with cells/): prune entries \
+             orphaned by a SIM_VERSION_TAG bump, corrupt files, and stale tmp files; \
+             with --grid (optionally narrowed by --filter), also prune cells outside \
+             that selection. Runs standalone.",
+            None,
+        )
         .flag("table", "print an ASCII table instead of JSON")
         .flag("streaming", "force streaming metrics regardless of the grid file");
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    if let Some(dir) = a.get("gc") {
+        if a.get("out-dir").is_some() || a.get("resume").is_some() {
+            return Err("sweep: --gc runs standalone (no --out-dir/--resume)".into());
+        }
+        if a.get("filter").is_some() && a.get("grid").is_none() {
+            return Err("sweep: --gc --filter needs --grid to expand cells".into());
+        }
+        return cmd_sweep_gc(std::path::Path::new(dir), a.get("grid"), a.get("filter"));
+    }
     // A cached run directory comes from --out-dir (fresh) or --resume
     // (continue); both mean the same layout, and cells are
     // content-addressed so resuming is just re-running against the
@@ -214,6 +245,51 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `dsd sweep --gc <dir> [--grid g.yaml [--filter k=v,...]]`: prune a
+/// cell directory. Accepts either a raw cells directory or a
+/// `--out-dir` run directory (whose cells live under `<dir>/cells`).
+/// With a grid, the keys of the (optionally filtered, same semantics as
+/// a `--filter` run) expansion in *both* metric modes stay valid — a
+/// directory may hold full-mode and streaming cells for the same grid.
+fn cmd_sweep_gc(
+    dir: &std::path::Path,
+    grid_path: Option<&str>,
+    filter: Option<&str>,
+) -> Result<(), String> {
+    let cells_dir = if dir.join("cells").is_dir() {
+        dir.join("cells")
+    } else {
+        dir.to_path_buf()
+    };
+    if !cells_dir.is_dir() {
+        return Err(format!("gc: no such cell directory {}", cells_dir.display()));
+    }
+    let cache = dsd::sweep::CellCache::open(&cells_dir)?;
+    let valid = match grid_path {
+        Some(path) => {
+            let grid = dsd::sweep::SweepGrid::from_yaml_file(path)?;
+            let mut cells = grid.expand()?;
+            if let Some(f) = filter {
+                let pairs = dsd::sweep::parse_filter(f)?;
+                cells = dsd::sweep::filter_cells(cells, &pairs)?;
+            }
+            let mut keys = std::collections::HashSet::new();
+            for cell in cells {
+                keys.insert(dsd::sweep::cell_key(&cell.cfg, false));
+                keys.insert(dsd::sweep::cell_key(&cell.cfg, true));
+            }
+            Some(keys)
+        }
+        None => None,
+    };
+    let stats = cache.gc(valid.as_ref());
+    eprintln!("[sweep] gc {}: {}", cells_dir.display(), stats.describe());
+    if stats.failed > 0 {
+        return Err(format!("gc: {} files could not be removed", stats.failed));
+    }
+    Ok(())
+}
+
 fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("reproduce", "regenerate a paper table/figure")
         .opt("exp", "fig4|fig5|fig6|fig7|fig9|table2|all", Some("all"))
@@ -221,19 +297,31 @@ fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
         .opt("seeds", "number of seeds to average", Some("3"))
         .opt(
             "cache-dir",
-            "sweep cell-cache directory: runner-backed figures resume/skip cached cells",
+            "sweep cell-cache directory: every runner-backed figure persists cells \
+             under <dir>/<exp> and a re-run (or kill-and-resume) executes only misses",
             None,
+        )
+        .opt("threads", "worker threads (0 = one per core, capped at 8)", Some("0"))
+        .flag(
+            "streaming",
+            "bounded-memory streaming metrics per cell (1M+ request scales; \
+             throughput is the naive completions/duration ratio)",
         );
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
     let scale = Scale(a.get_f64("scale").map_err(|e| e.to_string())?.unwrap_or(1.0));
     let n_seeds = a.get_u64("seeds").map_err(|e| e.to_string())?.unwrap_or(3);
     let seeds: Vec<u64> = (1..=n_seeds).collect();
     let cache_dir = a.get("cache-dir").map(std::path::PathBuf::from);
-    let out = dsd::experiments::run_experiment_cached(
+    let opts = dsd::experiments::RunOptions {
+        threads: a.get_usize("threads").map_err(|e| e.to_string())?.unwrap(),
+        streaming: a.flag("streaming"),
+    };
+    let out = dsd::experiments::run_experiment_opts(
         a.get("exp").unwrap_or("all"),
         scale,
         &seeds,
         cache_dir.as_deref(),
+        opts,
     )?;
     println!("{out}");
     Ok(())

@@ -8,6 +8,7 @@ pub mod sink;
 
 pub use report::{RequestMetrics, SimReport, SloSpec, SystemMetrics};
 pub use sink::{
-    FullSink, MetricSummary, MetricsSink, StreamingConfig, StreamingReport, StreamingSink,
-    StreamingSummary,
+    drafter_pool_of, FullSink, GammaSummary, GroupSummary, MetricSummary, MetricsSink,
+    SloSummary, StreamingConfig, StreamingReport, StreamingSink, StreamingSummary,
+    GAMMA_HIST_BUCKETS,
 };

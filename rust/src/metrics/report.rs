@@ -1,5 +1,6 @@
 //! Per-request and system-level metric records and the end-of-run report.
 
+use super::sink::{drafter_pool_of, GammaSummary, GroupSummary};
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 
@@ -90,12 +91,21 @@ pub struct SystemMetrics {
 }
 
 /// SLO thresholds for goodput-style evaluation.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SloSpec {
     /// TTFT limit, ms.
     pub ttft_ms: f64,
     /// TPOT limit, ms.
     pub tpot_ms: f64,
+}
+
+impl SloSpec {
+    /// Interactive-tier default: first token within a second, tokens
+    /// faster than reading speed. One of the two thresholds the
+    /// streaming sink counts by default.
+    pub const INTERACTIVE: SloSpec = SloSpec { ttft_ms: 1_000.0, tpot_ms: 50.0 };
+    /// Relaxed batch-ish tier (the second default streaming threshold).
+    pub const RELAXED: SloSpec = SloSpec { ttft_ms: 2_500.0, tpot_ms: 100.0 };
 }
 
 /// Complete end-of-run report.
@@ -159,12 +169,81 @@ impl SimReport {
         if self.requests.is_empty() {
             return 0.0;
         }
-        let ok = self
-            .requests
+        self.slo_attained(slo) as f64 / self.requests.len() as f64
+    }
+
+    /// Number of requests meeting both SLO limits — the integer counter
+    /// the streaming sink's [`crate::metrics::SloSummary`] must match
+    /// exactly.
+    pub fn slo_attained(&self, slo: SloSpec) -> u64 {
+        self.requests
             .iter()
             .filter(|r| r.ttft_ms <= slo.ttft_ms && r.tpot_ms <= slo.tpot_ms)
-            .count();
-        ok as f64 / self.requests.len() as f64
+            .count() as u64
+    }
+
+    /// Window-decision (γ) histogram over the retained per-request
+    /// decision vectors, in the exact [`GammaSummary`] shape the
+    /// streaming sink folds at decision time. When every request
+    /// completes the two are identical (all-integer fields).
+    pub fn gamma_summary(&self) -> GammaSummary {
+        let mut g = GammaSummary::default();
+        for r in &self.requests {
+            for &gamma in &r.gamma_decisions {
+                g.push(gamma);
+            }
+        }
+        g
+    }
+
+    /// Per-target breakdown (routing histogram + per-target latency and
+    /// acceptance), computed *independently* of the streaming sink:
+    /// arithmetic means over the retained records, grouped by
+    /// `target_id`, indexed `0..=max_target_id`. The differential
+    /// harness compares this against the streaming sink's Welford-folded
+    /// [`GroupSummary`]s: counts exactly, means to floating-point noise.
+    pub fn per_target_breakdown(&self) -> Vec<GroupSummary> {
+        self.group_breakdown(|r| r.target_id)
+    }
+
+    /// Per-drafter-pool breakdown; `pool_ends` are cumulative pool end
+    /// indices as in [`drafter_pool_of`].
+    pub fn per_pool_breakdown(&self, pool_ends: &[usize]) -> Vec<GroupSummary> {
+        self.group_breakdown(|r| drafter_pool_of(r.drafter_id, pool_ends))
+    }
+
+    fn group_breakdown(&self, key_of: impl Fn(&RequestMetrics) -> usize) -> Vec<GroupSummary> {
+        let n_groups = match self.requests.iter().map(&key_of).max() {
+            Some(max) => max + 1,
+            None => return Vec::new(),
+        };
+        (0..n_groups)
+            .map(|key| {
+                let members: Vec<&RequestMetrics> = self
+                    .requests
+                    .iter()
+                    .filter(|r| key_of(r) == key)
+                    .collect();
+                let vals = |f: &dyn Fn(&RequestMetrics) -> f64| -> Vec<f64> {
+                    members.iter().map(|r| f(r)).collect()
+                };
+                let acc: Vec<f64> = members
+                    .iter()
+                    .map(|r| r.acceptance)
+                    .filter(|a| a.is_finite())
+                    .collect();
+                GroupSummary {
+                    key,
+                    completed: members.len() as u64,
+                    output_tokens: members.iter().map(|r| r.output_tokens as u64).sum(),
+                    fused_rounds: members.iter().map(|r| r.fused_rounds as u64).sum(),
+                    mean_ttft_ms: mean(&vals(&|r| r.ttft_ms)),
+                    mean_tpot_ms: mean(&vals(&|r| r.tpot_ms)),
+                    mean_e2e_ms: mean(&vals(&|r| r.e2e_ms)),
+                    mean_acceptance: if acc.is_empty() { f64::NAN } else { mean(&acc) },
+                }
+            })
+            .collect()
     }
 
     /// One-line human summary.
@@ -280,5 +359,61 @@ mod tests {
             system: SystemMetrics::default(),
         };
         assert!((rep.mean_acceptance() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gamma_summary_counts_all_decisions() {
+        let rep = SimReport {
+            requests: vec![req(0, 1.0, 2.0), req(1, 1.0, 2.0)],
+            system: SystemMetrics::default(),
+        };
+        // Each req carries decisions [4, 4, 5].
+        let g = rep.gamma_summary();
+        assert_eq!(g.decisions, 6);
+        assert_eq!(g.total, 26);
+        assert_eq!(g.hist[4], 4);
+        assert_eq!(g.hist[5], 2);
+        assert_eq!(g.overflow, 0);
+        assert!((g.mean() - rep.mean_gamma()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_target_breakdown_partitions() {
+        let mut a = req(0, 100.0, 30.0);
+        a.target_id = 1;
+        let mut b = req(1, 300.0, 50.0);
+        b.target_id = 1;
+        let mut c = req(2, 200.0, 40.0);
+        c.target_id = 0;
+        c.acceptance = f64::NAN;
+        let rep = SimReport {
+            requests: vec![a, b, c],
+            system: SystemMetrics::default(),
+        };
+        let groups = rep.per_target_breakdown();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].completed, 1);
+        assert_eq!(groups[1].completed, 2);
+        assert!((groups[1].mean_ttft_ms - 200.0).abs() < 1e-9);
+        assert!(groups[0].mean_acceptance.is_nan());
+        assert!((groups[1].mean_acceptance - 0.8).abs() < 1e-12);
+        let total: u64 = groups.iter().map(|g| g.completed).sum();
+        assert_eq!(total as usize, rep.requests.len());
+        // Pool breakdown groups by drafter id through the pool map.
+        let pools = rep.per_pool_breakdown(&[1, 2]);
+        assert_eq!(pools.len(), 1); // all drafter_id 0 → pool 0
+        assert_eq!(pools[0].completed, 3);
+    }
+
+    #[test]
+    fn slo_attained_count_matches_fraction() {
+        let rep = SimReport {
+            requests: vec![req(0, 100.0, 30.0), req(1, 300.0, 50.0)],
+            system: SystemMetrics::default(),
+        };
+        let slo = SloSpec { ttft_ms: 200.0, tpot_ms: 40.0 };
+        assert_eq!(rep.slo_attained(slo), 1);
+        assert!((rep.slo_attainment(slo) - 0.5).abs() < 1e-9);
+        assert_eq!(rep.slo_attained(SloSpec::INTERACTIVE), 2);
     }
 }

@@ -8,18 +8,42 @@
 //!   exact percentiles and the per-request JSON dump.
 //! * [`StreamingSink`] folds each record into Welford [`Accumulator`]s
 //!   and fixed-bucket [`Histogram`]s at completion time and drops it.
-//!   Memory is O(buckets), independent of request count, so a single
-//!   cell can simulate millions of requests; percentiles are accurate to
-//!   one histogram bucket width.
+//!   Memory is O(buckets + targets + pools), independent of request
+//!   count, so a single cell can simulate millions of requests;
+//!   percentiles are accurate to one histogram bucket width.
+//!
+//! Since the streaming-parity work the streaming sink is at feature
+//! parity with the full sink: bounded-memory routing/γ decision
+//! histograms ([`GammaSummary`]), per-target and per-drafter-pool
+//! latency/acceptance breakdowns ([`GroupSummary`]), and SLO-attainment
+//! counters ([`SloSummary`]). γ decisions fold at *decision time*
+//! through [`MetricsSink::record_gamma`] (the streaming sink keeps no
+//! per-request γ vectors); everything else folds at completion time.
+//! When every request completes — the differential grid in
+//! `tests/streaming_parity.rs` guarantees it — the decision-time fold
+//! counts exactly the decisions a full-sink report retains.
 
-use super::report::{RequestMetrics, SystemMetrics};
+use super::report::{RequestMetrics, SloSpec, SystemMetrics};
+use crate::config::SimConfig;
 use crate::util::json::Json;
 use crate::util::stats::{Accumulator, Histogram};
+
+/// γ values 0..GAMMA_HIST_BUCKETS-1 are counted exactly; anything larger
+/// lands in the overflow counter (still part of the decision count and
+/// the exact mean).
+pub const GAMMA_HIST_BUCKETS: usize = 64;
 
 /// Destination for completed-request records.
 pub trait MetricsSink: Send {
     /// Record one completed request.
     fn record(&mut self, m: &RequestMetrics);
+
+    /// Fold one window-size decision the moment the window policy makes
+    /// it (distributed rounds only — fused rounds have no γ). The full
+    /// sink ignores this: its report derives γ statistics from the
+    /// retained per-request decision vectors. The streaming sink counts
+    /// here so it never has to retain those vectors.
+    fn record_gamma(&mut self, _gamma: u32) {}
 
     /// Whether the simulator should retain per-request γ-decision
     /// vectors. The full sink reports them; the streaming sink returns
@@ -53,8 +77,21 @@ impl MetricsSink for FullSink {
     }
 }
 
-/// Histogram geometry for the streaming sink.
-#[derive(Clone, Copy, Debug)]
+/// Map a drafter id to its pool index given cumulative pool end indices
+/// (e.g. pool counts `[10, 10]` ⇒ `pool_ends = [10, 20]`). Ids at or
+/// beyond the last end — synthetic drafters in fused-only runs — map to
+/// the last pool; an empty `pool_ends` means a single implicit pool 0.
+pub fn drafter_pool_of(drafter_id: usize, pool_ends: &[usize]) -> usize {
+    for (i, &end) in pool_ends.iter().enumerate() {
+        if drafter_id < end {
+            return i;
+        }
+    }
+    pool_ends.len().saturating_sub(1)
+}
+
+/// Histogram geometry + breakdown configuration for the streaming sink.
+#[derive(Clone, Debug)]
 pub struct StreamingConfig {
     /// Upper edge of the TTFT histogram, ms.
     pub ttft_hi_ms: f64,
@@ -64,6 +101,11 @@ pub struct StreamingConfig {
     pub e2e_hi_ms: f64,
     /// Buckets per histogram (resolution = hi / buckets).
     pub buckets: usize,
+    /// SLO thresholds to count attainment against (goodput counters).
+    pub slos: Vec<SloSpec>,
+    /// Cumulative drafter-pool end indices for the per-pool breakdown
+    /// (see [`drafter_pool_of`]); empty = one implicit pool.
+    pub drafter_pool_ends: Vec<usize>,
 }
 
 impl Default for StreamingConfig {
@@ -75,11 +117,206 @@ impl Default for StreamingConfig {
             tpot_hi_ms: 2_000.0,
             e2e_hi_ms: 1_200_000.0,
             buckets: 8192,
+            slos: vec![SloSpec::INTERACTIVE, SloSpec::RELAXED],
+            drafter_pool_ends: Vec::new(),
         }
     }
 }
 
-/// Constant-memory sink: moment accumulators + histogram percentiles.
+impl StreamingConfig {
+    /// Default geometry specialized to one simulation config: the
+    /// per-pool breakdown boundaries come from the config's drafter pool
+    /// slices. This is what [`crate::sim::Simulator::run_streaming`]
+    /// constructs.
+    pub fn for_sim(cfg: &SimConfig) -> StreamingConfig {
+        let mut ends = Vec::with_capacity(cfg.drafter_pools.len());
+        let mut total = 0usize;
+        for p in &cfg.drafter_pools {
+            total += p.count;
+            ends.push(total);
+        }
+        StreamingConfig {
+            drafter_pool_ends: ends,
+            ..StreamingConfig::default()
+        }
+    }
+}
+
+/// Streaming accumulators for one request group (a target server or a
+/// drafter pool). O(1) memory per group.
+#[derive(Clone, Debug, Default)]
+struct GroupStats {
+    completed: u64,
+    output_tokens: u64,
+    fused_rounds: u64,
+    ttft: Accumulator,
+    tpot: Accumulator,
+    e2e: Accumulator,
+    /// Finite (speculating) acceptance ratios only; fused NaNs skipped.
+    acceptance: Accumulator,
+}
+
+impl GroupStats {
+    fn push(&mut self, m: &RequestMetrics) {
+        self.completed += 1;
+        self.output_tokens += m.output_tokens as u64;
+        self.fused_rounds += m.fused_rounds as u64;
+        self.ttft.push(m.ttft_ms);
+        self.tpot.push(m.tpot_ms);
+        self.e2e.push(m.e2e_ms);
+        if m.acceptance.is_finite() {
+            self.acceptance.push(m.acceptance);
+        }
+    }
+
+    fn summary(&self, key: usize) -> GroupSummary {
+        GroupSummary {
+            key,
+            completed: self.completed,
+            output_tokens: self.output_tokens,
+            fused_rounds: self.fused_rounds,
+            mean_ttft_ms: self.ttft.mean(),
+            mean_tpot_ms: self.tpot.mean(),
+            mean_e2e_ms: self.e2e.mean(),
+            mean_acceptance: if self.acceptance.count() == 0 {
+                f64::NAN
+            } else {
+                self.acceptance.mean()
+            },
+        }
+    }
+}
+
+/// Folded breakdown of one request group (target server or drafter
+/// pool): counts are exact; means are Welford-exact in streaming mode
+/// and arithmetic in [`super::SimReport`]'s independent computation
+/// (identical to floating-point noise).
+#[derive(Clone, Debug)]
+pub struct GroupSummary {
+    /// Group key: target id, or drafter-pool index.
+    pub key: usize,
+    /// Completed requests in the group.
+    pub completed: u64,
+    /// Output tokens across the group's completed requests.
+    pub output_tokens: u64,
+    /// Fused rounds executed by the group's completed requests.
+    pub fused_rounds: u64,
+    /// Mean TTFT, ms (0 for an empty group).
+    pub mean_ttft_ms: f64,
+    /// Mean TPOT, ms.
+    pub mean_tpot_ms: f64,
+    /// Mean end-to-end latency, ms.
+    pub mean_e2e_ms: f64,
+    /// Mean acceptance over speculating requests (NaN if none).
+    pub mean_acceptance: f64,
+}
+
+impl GroupSummary {
+    /// JSON encoding (insertion-ordered keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("key", self.key.into())
+            .with("completed", self.completed.into())
+            .with("output_tokens", self.output_tokens.into())
+            .with("fused_rounds", self.fused_rounds.into())
+            .with("mean_ttft_ms", self.mean_ttft_ms.into())
+            .with("mean_tpot_ms", self.mean_tpot_ms.into())
+            .with("mean_e2e_ms", self.mean_e2e_ms.into())
+            .with("mean_acceptance", self.mean_acceptance.into())
+    }
+}
+
+/// Bounded-memory window-decision (γ) histogram. All fields are integer
+/// counts, so streaming and full modes agree *exactly* whenever every
+/// request completes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GammaSummary {
+    /// Window decisions folded (distributed rounds).
+    pub decisions: u64,
+    /// Sum of all decided γ values (exact).
+    pub total: u64,
+    /// `hist[g]` = decisions with window size `g`; trailing zeros
+    /// trimmed, capped at [`GAMMA_HIST_BUCKETS`].
+    pub hist: Vec<u64>,
+    /// Decisions with γ ≥ [`GAMMA_HIST_BUCKETS`] (counted in
+    /// `decisions`/`total`, not in `hist`).
+    pub overflow: u64,
+}
+
+impl GammaSummary {
+    /// Fold one decision.
+    pub fn push(&mut self, gamma: u32) {
+        self.decisions += 1;
+        self.total += gamma as u64;
+        let g = gamma as usize;
+        if g < GAMMA_HIST_BUCKETS {
+            if self.hist.len() <= g {
+                self.hist.resize(g + 1, 0);
+            }
+            self.hist[g] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    /// Mean window size (NaN when no decisions were folded).
+    pub fn mean(&self) -> f64 {
+        if self.decisions == 0 {
+            f64::NAN
+        } else {
+            self.total as f64 / self.decisions as f64
+        }
+    }
+
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("decisions", self.decisions.into())
+            .with("total", self.total.into())
+            .with("mean", self.mean().into())
+            .with("overflow", self.overflow.into())
+            .with(
+                "hist",
+                Json::Arr(self.hist.iter().map(|&c| Json::Num(c as f64)).collect()),
+            )
+    }
+}
+
+/// SLO-attainment counter for one threshold pair.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSummary {
+    /// The thresholds counted against.
+    pub spec: SloSpec,
+    /// Completed requests meeting both limits.
+    pub attained: u64,
+    /// Completed requests evaluated.
+    pub completed: u64,
+}
+
+impl SloSummary {
+    /// Attained fraction (0 when nothing completed — matching
+    /// [`super::SimReport::slo_attainment`]).
+    pub fn attainment(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.attained as f64 / self.completed as f64
+        }
+    }
+
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("ttft_ms", self.spec.ttft_ms.into())
+            .with("tpot_ms", self.spec.tpot_ms.into())
+            .with("attained", self.attained.into())
+            .with("completed", self.completed.into())
+            .with("attainment", self.attainment().into())
+    }
+}
+
+/// Constant-memory sink: moment accumulators + histogram percentiles +
+/// per-target / per-pool / γ / SLO breakdowns.
 pub struct StreamingSink {
     ttft: Accumulator,
     tpot: Accumulator,
@@ -91,6 +328,16 @@ pub struct StreamingSink {
     e2e_hist: Histogram,
     output_tokens: u64,
     completed: u64,
+    fused_rounds: u64,
+    /// Indexed by target id; grown on first sight (routing histogram +
+    /// per-target latency/acceptance breakdown).
+    per_target: Vec<GroupStats>,
+    /// Indexed by drafter-pool index (see `pool_ends`).
+    per_pool: Vec<GroupStats>,
+    pool_ends: Vec<usize>,
+    gamma: GammaSummary,
+    slos: Vec<SloSpec>,
+    slo_attained: Vec<u64>,
 }
 
 impl Default for StreamingSink {
@@ -100,8 +347,9 @@ impl Default for StreamingSink {
 }
 
 impl StreamingSink {
-    /// Sink with the given histogram geometry.
+    /// Sink with the given histogram geometry and breakdown config.
     pub fn new(cfg: StreamingConfig) -> Self {
+        let n_slos = cfg.slos.len();
         StreamingSink {
             ttft: Accumulator::new(),
             tpot: Accumulator::new(),
@@ -112,6 +360,13 @@ impl StreamingSink {
             e2e_hist: Histogram::new(0.0, cfg.e2e_hi_ms, cfg.buckets),
             output_tokens: 0,
             completed: 0,
+            fused_rounds: 0,
+            per_target: Vec::new(),
+            per_pool: Vec::new(),
+            pool_ends: cfg.drafter_pool_ends,
+            gamma: GammaSummary::default(),
+            slos: cfg.slos,
+            slo_attained: vec![0; n_slos],
         }
     }
 
@@ -120,6 +375,7 @@ impl StreamingSink {
         StreamingSummary {
             completed: self.completed,
             output_tokens: self.output_tokens,
+            fused_rounds: self.fused_rounds,
             ttft_ms: MetricSummary::from_parts(&self.ttft, &self.ttft_hist),
             tpot_ms: MetricSummary::from_parts(&self.tpot, &self.tpot_hist),
             e2e_ms: MetricSummary::from_parts(&self.e2e, &self.e2e_hist),
@@ -128,8 +384,38 @@ impl StreamingSink {
             } else {
                 self.acceptance.mean()
             },
+            per_target: self
+                .per_target
+                .iter()
+                .enumerate()
+                .map(|(id, g)| g.summary(id))
+                .collect(),
+            per_pool: self
+                .per_pool
+                .iter()
+                .enumerate()
+                .map(|(id, g)| g.summary(id))
+                .collect(),
+            gamma: self.gamma.clone(),
+            slo: self
+                .slos
+                .iter()
+                .zip(&self.slo_attained)
+                .map(|(&spec, &attained)| SloSummary {
+                    spec,
+                    attained,
+                    completed: self.completed,
+                })
+                .collect(),
         }
     }
+}
+
+fn grow_and_push(groups: &mut Vec<GroupStats>, idx: usize, m: &RequestMetrics) {
+    if groups.len() <= idx {
+        groups.resize_with(idx + 1, GroupStats::default);
+    }
+    groups[idx].push(m);
 }
 
 impl MetricsSink for StreamingSink {
@@ -145,6 +431,19 @@ impl MetricsSink for StreamingSink {
         }
         self.output_tokens += m.output_tokens as u64;
         self.completed += 1;
+        self.fused_rounds += m.fused_rounds as u64;
+        grow_and_push(&mut self.per_target, m.target_id, m);
+        let pool = drafter_pool_of(m.drafter_id, &self.pool_ends);
+        grow_and_push(&mut self.per_pool, pool, m);
+        for (i, s) in self.slos.iter().enumerate() {
+            if m.ttft_ms <= s.ttft_ms && m.tpot_ms <= s.tpot_ms {
+                self.slo_attained[i] += 1;
+            }
+        }
+    }
+
+    fn record_gamma(&mut self, gamma: u32) {
+        self.gamma.push(gamma);
     }
 
     fn keep_gamma_history(&self) -> bool {
@@ -206,12 +505,14 @@ impl MetricSummary {
 }
 
 /// End-of-run snapshot from a [`StreamingSink`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct StreamingSummary {
     /// Completed requests.
     pub completed: u64,
     /// Output tokens across completed requests.
     pub output_tokens: u64,
+    /// Fused rounds executed across completed requests.
+    pub fused_rounds: u64,
     /// Time-to-first-token distribution.
     pub ttft_ms: MetricSummary,
     /// Time-per-output-token distribution.
@@ -220,6 +521,16 @@ pub struct StreamingSummary {
     pub e2e_ms: MetricSummary,
     /// Mean acceptance over speculating requests (NaN if none).
     pub mean_acceptance: f64,
+    /// Per-target-server breakdown, indexed by target id (the routing
+    /// histogram: `per_target[t].completed` counts completions routed to
+    /// target `t`).
+    pub per_target: Vec<GroupSummary>,
+    /// Per-drafter-pool breakdown, indexed by pool.
+    pub per_pool: Vec<GroupSummary>,
+    /// Window-decision (γ) histogram.
+    pub gamma: GammaSummary,
+    /// SLO-attainment counters, parallel to the configured SLO list.
+    pub slo: Vec<SloSummary>,
 }
 
 impl StreamingSummary {
@@ -228,10 +539,24 @@ impl StreamingSummary {
         Json::obj()
             .with("completed", self.completed.into())
             .with("output_tokens", self.output_tokens.into())
+            .with("fused_rounds", self.fused_rounds.into())
             .with("ttft_ms", self.ttft_ms.to_json())
             .with("tpot_ms", self.tpot_ms.to_json())
             .with("e2e_ms", self.e2e_ms.to_json())
             .with("mean_acceptance", self.mean_acceptance.into())
+            .with(
+                "per_target",
+                Json::Arr(self.per_target.iter().map(|g| g.to_json()).collect()),
+            )
+            .with(
+                "per_pool",
+                Json::Arr(self.per_pool.iter().map(|g| g.to_json()).collect()),
+            )
+            .with("gamma", self.gamma.to_json())
+            .with(
+                "slo",
+                Json::Arr(self.slo.iter().map(|s| s.to_json()).collect()),
+            )
     }
 }
 
@@ -286,6 +611,7 @@ impl StreamingReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{run_prop, Gen};
 
     fn req(id: usize, ttft: f64, tpot: f64, acc: f64) -> RequestMetrics {
         RequestMetrics {
@@ -347,9 +673,236 @@ mod tests {
     fn streaming_json_is_deterministic() {
         let mut s = StreamingSink::default();
         s.record(&req(0, 10.0, 1.0, 0.5));
+        s.record_gamma(4);
         let a = s.summary().to_json().to_string_compact();
         let b = s.summary().to_json().to_string_compact();
         assert_eq!(a, b);
         assert!(a.contains("\"p99\""));
+        assert!(a.contains("\"per_target\""));
+        assert!(a.contains("\"gamma\""));
+        assert!(a.contains("\"slo\""));
+    }
+
+    #[test]
+    fn per_target_and_pool_breakdowns_fold() {
+        let cfg = StreamingConfig {
+            drafter_pool_ends: vec![2, 4], // drafters 0-1 → pool 0, 2-3 → pool 1
+            ..StreamingConfig::default()
+        };
+        let mut s = StreamingSink::new(cfg);
+        let mut a = req(0, 10.0, 1.0, 0.8);
+        a.target_id = 1;
+        a.drafter_id = 0;
+        let mut b = req(1, 30.0, 3.0, 0.6);
+        b.target_id = 1;
+        b.drafter_id = 3;
+        let mut c = req(2, 20.0, 2.0, f64::NAN);
+        c.target_id = 0;
+        c.drafter_id = 2;
+        c.fused_rounds = 7;
+        for m in [&a, &b, &c] {
+            s.record(m);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.per_target.len(), 2);
+        assert_eq!(sum.per_target[0].completed, 1);
+        assert_eq!(sum.per_target[1].completed, 2);
+        assert_eq!(sum.per_target[0].fused_rounds, 7);
+        assert!((sum.per_target[1].mean_ttft_ms - 20.0).abs() < 1e-12);
+        assert!(sum.per_target[0].mean_acceptance.is_nan());
+        assert_eq!(sum.per_pool.len(), 2);
+        assert_eq!(sum.per_pool[0].completed, 1);
+        assert_eq!(sum.per_pool[1].completed, 2);
+        assert!((sum.per_pool[0].mean_acceptance - 0.8).abs() < 1e-12);
+        assert_eq!(sum.fused_rounds, 7);
+    }
+
+    #[test]
+    fn gamma_histogram_counts_and_overflow() {
+        let mut g = GammaSummary::default();
+        for x in [4u32, 4, 6, 2, 100] {
+            g.push(x);
+        }
+        assert_eq!(g.decisions, 5);
+        assert_eq!(g.total, 116);
+        assert_eq!(g.overflow, 1);
+        assert_eq!(g.hist.len(), 7);
+        assert_eq!(g.hist[4], 2);
+        assert_eq!(g.hist[6], 1);
+        assert_eq!(g.hist[2], 1);
+        assert!((g.mean() - 23.2).abs() < 1e-12);
+        assert!(GammaSummary::default().mean().is_nan());
+    }
+
+    #[test]
+    fn slo_counters_match_thresholds() {
+        let cfg = StreamingConfig {
+            slos: vec![SloSpec { ttft_ms: 15.0, tpot_ms: 2.0 }],
+            ..StreamingConfig::default()
+        };
+        let mut s = StreamingSink::new(cfg);
+        s.record(&req(0, 10.0, 1.0, 0.8)); // attained
+        s.record(&req(1, 10.0, 3.0, 0.8)); // tpot breach
+        s.record(&req(2, 20.0, 1.0, 0.8)); // ttft breach
+        let sum = s.summary();
+        assert_eq!(sum.slo.len(), 1);
+        assert_eq!(sum.slo[0].attained, 1);
+        assert_eq!(sum.slo[0].completed, 3);
+        assert!((sum.slo[0].attainment() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drafter_pool_mapping() {
+        assert_eq!(drafter_pool_of(0, &[]), 0);
+        assert_eq!(drafter_pool_of(99, &[]), 0);
+        let ends = [10, 20, 26];
+        assert_eq!(drafter_pool_of(0, &ends), 0);
+        assert_eq!(drafter_pool_of(9, &ends), 0);
+        assert_eq!(drafter_pool_of(10, &ends), 1);
+        assert_eq!(drafter_pool_of(25, &ends), 2);
+        // Synthetic ids beyond the last end map to the last pool.
+        assert_eq!(drafter_pool_of(40, &ends), 2);
+    }
+
+    /// Property (ISSUE 3 satellite): per-target and per-pool breakdowns
+    /// *partition* the global accumulators under generated request
+    /// streams — counts sum exactly, token/fused-round totals sum
+    /// exactly, and group means recombine into the global mean via the
+    /// count-weighted average.
+    #[test]
+    fn prop_breakdowns_partition_global_accumulators() {
+        run_prop("streaming breakdown partition", 60, |g: &mut Gen| {
+            let n_targets = g.usize_in(1, 5);
+            let n_pools = g.usize_in(1, 4);
+            let pool_size = g.usize_in(1, 6);
+            let ends: Vec<usize> = (1..=n_pools).map(|i| i * pool_size).collect();
+            let n = g.usize_in(1, 120);
+            let cfg = StreamingConfig {
+                drafter_pool_ends: ends.clone(),
+                slos: vec![SloSpec { ttft_ms: 50.0, tpot_ms: 5.0 }],
+                ..StreamingConfig::default()
+            };
+            let mut sink = StreamingSink::new(cfg);
+            let mut ms = Vec::with_capacity(n);
+            for id in 0..n {
+                let mut m = req(
+                    id,
+                    g.f64_in(1.0, 100.0),
+                    g.f64_in(0.1, 10.0),
+                    if g.bool_with(0.2) { f64::NAN } else { g.f64_in(0.0, 1.0) },
+                );
+                m.target_id = g.usize_in(0, n_targets - 1);
+                m.drafter_id = g.usize_in(0, n_pools * pool_size - 1);
+                m.output_tokens = g.usize_in(1, 300) as u32;
+                m.fused_rounds = g.usize_in(0, 9) as u32;
+                sink.record(&m);
+                for _ in 0..g.usize_in(0, 4) {
+                    sink.record_gamma(g.usize_in(0, 80) as u32);
+                }
+                ms.push(m);
+            }
+            let sum = sink.summary();
+            let by_group = |groups: &[GroupSummary]| {
+                let completed: u64 = groups.iter().map(|t| t.completed).sum();
+                let tokens: u64 = groups.iter().map(|t| t.output_tokens).sum();
+                let fused: u64 = groups.iter().map(|t| t.fused_rounds).sum();
+                (completed, tokens, fused)
+            };
+            for groups in [&sum.per_target, &sum.per_pool] {
+                let (completed, tokens, fused) = by_group(groups);
+                assert_eq!(completed, sum.completed, "group counts must partition");
+                assert_eq!(tokens, sum.output_tokens, "token counts must partition");
+                assert_eq!(fused, sum.fused_rounds, "fused rounds must partition");
+                // Count-weighted group means recombine into the global mean.
+                for (pick, global) in [
+                    (0usize, sum.ttft_ms.mean),
+                    (1, sum.tpot_ms.mean),
+                    (2, sum.e2e_ms.mean),
+                ] {
+                    let weighted: f64 = groups
+                        .iter()
+                        .map(|t| {
+                            let mean = match pick {
+                                0 => t.mean_ttft_ms,
+                                1 => t.mean_tpot_ms,
+                                _ => t.mean_e2e_ms,
+                            };
+                            mean * t.completed as f64
+                        })
+                        .sum();
+                    let recombined = weighted / sum.completed as f64;
+                    assert!(
+                        (recombined - global).abs() <= global.abs().max(1.0) * 1e-9,
+                        "weighted group means must recombine: {recombined} vs {global}"
+                    );
+                }
+            }
+            // Per-pool assignment respects the pool boundaries exactly.
+            for (pool_idx, group) in sum.per_pool.iter().enumerate() {
+                let expect = ms
+                    .iter()
+                    .filter(|m| drafter_pool_of(m.drafter_id, &ends) == pool_idx)
+                    .count() as u64;
+                assert_eq!(group.completed, expect);
+            }
+            // γ histogram totals reconcile.
+            let hist_total: u64 = sum.gamma.hist.iter().sum();
+            assert_eq!(hist_total + sum.gamma.overflow, sum.gamma.decisions);
+            // SLO counters bounded by completions and consistent with a
+            // direct recount.
+            let direct = ms
+                .iter()
+                .filter(|m| m.ttft_ms <= 50.0 && m.tpot_ms <= 5.0)
+                .count() as u64;
+            assert_eq!(sum.slo[0].attained, direct);
+            assert!(sum.slo[0].attained <= sum.completed);
+        });
+    }
+
+    /// Property: acceptance means also recombine, weighted by the count
+    /// of *speculating* (finite-acceptance) requests per group.
+    #[test]
+    fn prop_acceptance_recombines_over_speculating_requests() {
+        run_prop("streaming acceptance recombination", 40, |g: &mut Gen| {
+            let n_targets = g.usize_in(1, 4);
+            let n = g.usize_in(1, 80);
+            let mut sink = StreamingSink::default();
+            let mut ms = Vec::with_capacity(n);
+            for id in 0..n {
+                let mut m = req(
+                    id,
+                    g.f64_in(1.0, 50.0),
+                    g.f64_in(0.1, 5.0),
+                    if g.bool_with(0.3) { f64::NAN } else { g.f64_in(0.0, 1.0) },
+                );
+                m.target_id = g.usize_in(0, n_targets - 1);
+                sink.record(&m);
+                ms.push(m);
+            }
+            let sum = sink.summary();
+            let spec_count = |t: usize| {
+                ms.iter()
+                    .filter(|m| m.target_id == t && m.acceptance.is_finite())
+                    .count()
+            };
+            let total_spec: usize = (0..n_targets).map(spec_count).sum();
+            if total_spec == 0 {
+                assert!(sum.mean_acceptance.is_nan());
+                return;
+            }
+            let weighted: f64 = sum
+                .per_target
+                .iter()
+                .enumerate()
+                .filter(|(t, _)| spec_count(*t) > 0)
+                .map(|(t, grp)| grp.mean_acceptance * spec_count(t) as f64)
+                .sum();
+            let recombined = weighted / total_spec as f64;
+            assert!(
+                (recombined - sum.mean_acceptance).abs() < 1e-9,
+                "acceptance recombination: {recombined} vs {}",
+                sum.mean_acceptance
+            );
+        });
     }
 }

@@ -16,8 +16,8 @@
 use crate::config::{SimConfig, Topology, WindowKind};
 use crate::hwmodel::{Hardware, Predictor};
 use crate::metrics::{
-    FullSink, MetricsSink, RequestMetrics, SimReport, StreamingReport, StreamingSink,
-    SystemMetrics,
+    FullSink, MetricsSink, RequestMetrics, SimReport, StreamingConfig, StreamingReport,
+    StreamingSink, SystemMetrics,
 };
 use crate::policies::window::ExecMode;
 use crate::policies::{
@@ -216,9 +216,12 @@ impl Simulator {
         self.try_run_streaming().expect("window policy")
     }
 
-    /// Fallible form of [`Simulator::run_streaming`].
+    /// Fallible form of [`Simulator::run_streaming`]. The sink is
+    /// configured from the simulation config so per-drafter-pool
+    /// breakdowns follow the deployment's pool slices.
     pub fn try_run_streaming(self) -> Result<StreamingReport, String> {
-        let (sink, system) = self.run_with(StreamingSink::default())?;
+        let scfg = StreamingConfig::for_sim(&self.cfg);
+        let (sink, system) = self.run_with(StreamingSink::new(scfg))?;
         Ok(StreamingReport {
             stream: sink.summary(),
             system,
@@ -559,6 +562,9 @@ impl<S: MetricsSink> SimState<S> {
                     r.gammas.push(gamma);
                 }
                 let did = r.drafter;
+                // Decision-time fold point: streaming sinks count γ here
+                // so they never retain per-request decision vectors.
+                self.sink.record_gamma(gamma);
                 self.drafters[did]
                     .tasks
                     .push_back(DrafterTask::Draft { req: rid, gamma });
@@ -1145,6 +1151,23 @@ mod tests {
         let tol = stream.stream.ttft_ms.resolution + 1e-9;
         assert!(stream.stream.ttft_ms.p99 >= full.p_ttft(95.0) - tol);
         assert!(stream.stream.ttft_ms.p99 <= full.p_ttft(100.0) + tol);
+        // Parity fields previously exclusive to the full sink: the γ
+        // histogram folded at decision time matches the decision vectors
+        // the full report retained, and the per-target routing counts
+        // match exactly (all-integer comparisons; the exhaustive grid
+        // lives in tests/streaming_parity.rs).
+        assert_eq!(stream.stream.gamma, full.gamma_summary());
+        let full_targets = full.per_target_breakdown();
+        assert_eq!(stream.stream.per_target.len(), full_targets.len());
+        for (s, f) in stream.stream.per_target.iter().zip(&full_targets) {
+            assert_eq!(s.completed, f.completed);
+            assert_eq!(s.output_tokens, f.output_tokens);
+            assert!((s.mean_ttft_ms - f.mean_ttft_ms).abs() < 1e-9);
+        }
+        // SLO counters agree with the report's goodput counts.
+        for slo in &stream.stream.slo {
+            assert_eq!(slo.attained, full.slo_attained(slo.spec));
+        }
     }
 
     #[test]

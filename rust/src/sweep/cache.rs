@@ -53,6 +53,33 @@ pub enum CacheLookup {
     Corrupt(String),
 }
 
+/// Accounting from one [`CellCache::gc`] pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcStats {
+    /// Valid entries left in place.
+    pub kept: usize,
+    /// Files removed (orphaned, corrupt, version-mismatched, stale tmp).
+    pub pruned: usize,
+    /// Files that should have been removed but could not be.
+    pub failed: usize,
+}
+
+impl GcStats {
+    /// One-line human rendering.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} entries kept, {} pruned{}",
+            self.kept,
+            self.pruned,
+            if self.failed > 0 {
+                format!(", {} could not be removed", self.failed)
+            } else {
+                String::new()
+            }
+        )
+    }
+}
+
 /// On-disk cell store: one JSON file per finished cell, named by its
 /// content key.
 #[derive(Clone, Debug)]
@@ -154,6 +181,57 @@ impl CellCache {
         std::fs::write(&tmp, text).map_err(|e| format!("cache: write {}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, &path)
             .map_err(|e| format!("cache: rename to {}: {e}", path.display()))
+    }
+
+    /// Garbage-collect the cell directory (`dsd sweep --gc <dir>`).
+    ///
+    /// Removes every file the current binary could never splice into a
+    /// summary: entries whose [`SIM_VERSION_TAG`] no longer matches
+    /// (orphans of a tag bump), corrupt/truncated/misnamed entries, and
+    /// stale `*.json.tmp.*` files left by a kill mid-write. When
+    /// `valid_keys` is given (the key set of a current grid expansion),
+    /// readable entries outside that set are pruned too, narrowing the
+    /// directory to exactly the given grid. Files that are not cache
+    /// entries at all (no `.json` suffix) are left untouched.
+    pub fn gc(
+        &self,
+        valid_keys: Option<&std::collections::HashSet<String>>,
+    ) -> GcStats {
+        let mut stats = GcStats::default();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return stats;
+        };
+        // Deterministic pass order (read_dir order is fs-dependent).
+        let mut paths: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        paths.sort();
+        for path in paths {
+            let Some(name) = path.file_name().and_then(|n| n.to_str()).map(String::from)
+            else {
+                continue;
+            };
+            let keep = if name.contains(".json.tmp.") {
+                false // stale atomic-write temp from a killed run
+            } else if let Some(key) = name.strip_suffix(".json") {
+                match self.load(key) {
+                    CacheLookup::Hit(_) => {
+                        valid_keys.is_none_or(|ks| ks.contains(key))
+                    }
+                    // Unreadable under the current binary: version
+                    // mismatch, truncation, or a misnamed entry.
+                    CacheLookup::Corrupt(_) | CacheLookup::Miss => false,
+                }
+            } else {
+                continue; // not a cache artifact
+            };
+            if keep {
+                stats.kept += 1;
+            } else if std::fs::remove_file(&path).is_ok() {
+                stats.pruned += 1;
+            } else {
+                stats.failed += 1;
+            }
+        }
+        stats
     }
 }
 
@@ -366,6 +444,61 @@ mod tests {
         let wrong = cache.path_for(&"0".repeat(32));
         std::fs::copy(&path, &wrong).unwrap();
         assert!(matches!(cache.load(&"0".repeat(32)), CacheLookup::Corrupt(_)));
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_prunes_unreadable_and_out_of_grid_entries() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-cellcache-gc-unit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let key = cell_key(&base_cfg(), false);
+        let m = CellMetrics {
+            completed: 4,
+            throughput_rps: 1.0,
+            token_throughput: 10.0,
+            target_utilization: 0.5,
+            mean_ttft_ms: 10.0,
+            p99_ttft_ms: 20.0,
+            mean_tpot_ms: 1.0,
+            p99_tpot_ms: 2.0,
+            mean_e2e_ms: 50.0,
+            mean_acceptance: 0.8,
+            mean_queue_delay_ms: 0.1,
+            mean_net_delay_ms: 0.2,
+            sim_duration_ms: 100.0,
+            events_processed: 42,
+            mean_features: [0.1, 0.2, 0.3, 0.4, 0.5],
+        };
+        cache.store(&key, &[], &m).unwrap();
+        // Orphans: wrong-name copy, old version tag, stale tmp file, and
+        // a non-cache file that must be left alone.
+        std::fs::copy(cache.path_for(&key), cache.path_for(&"0".repeat(32))).unwrap();
+        let old_key = "f".repeat(32);
+        std::fs::write(
+            cache.path_for(&old_key),
+            format!("{{\"key\": \"{old_key}\", \"version\": \"dsd-sim-0\"}}\n"),
+        )
+        .unwrap();
+        std::fs::write(dir.join(format!("{key}.json.tmp.1.0")), "partial").unwrap();
+        std::fs::write(dir.join("README"), "not a cell").unwrap();
+
+        // Without a key set: keeps every readable entry, prunes the rest.
+        let stats = cache.gc(None);
+        assert_eq!(stats, GcStats { kept: 1, pruned: 3, failed: 0 });
+        assert!(cache.path_for(&key).exists());
+        assert!(dir.join("README").exists());
+        assert!(matches!(cache.load(&key), CacheLookup::Hit(_)));
+
+        // With an empty valid set: the surviving entry is out-of-grid.
+        let none: std::collections::HashSet<String> = std::collections::HashSet::new();
+        let stats = cache.gc(Some(&none));
+        assert_eq!(stats, GcStats { kept: 0, pruned: 1, failed: 0 });
+        assert_eq!(cache.n_entries(), 0);
 
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -22,17 +22,20 @@
 //! runner, so dataset sweeps inherit caching and resume for free.
 //!
 //! Entry points: `dsd sweep --grid <grid.yaml> [--out-dir <dir>]
-//! [--resume <dir>] [--filter k=v,...]` on the CLI, [`SweepGrid`] +
-//! [`run_grid`] from library code (see `examples/fleet_sweep.rs`), and
-//! [`crate::experiments::fig6`] which runs its RTT sweep through this
-//! runner.
+//! [--resume <dir>] [--filter k=v,...] [--gc <dir>]` on the CLI,
+//! [`SweepGrid`] + [`run_grid`] from library code (see
+//! `examples/fleet_sweep.rs`), and every runner-backed experiment
+//! family (fig5, fig6, fig7/8, fig9/10, table2 — see
+//! [`crate::experiments`]), all of which batch their cells through
+//! [`run_cells_cached`]. [`CellCache::gc`] prunes entries orphaned by a
+//! [`SIM_VERSION_TAG`] bump (or narrowed out of a grid).
 
 pub mod cache;
 pub mod grid;
 pub mod runner;
 pub mod summary;
 
-pub use cache::{cell_key, CacheLookup, CellCache, SIM_VERSION_TAG};
+pub use cache::{cell_key, CacheLookup, CellCache, GcStats, SIM_VERSION_TAG};
 pub use grid::{filter_cells, filter_label, parse_filter, SweepCell, SweepGrid};
 pub use runner::{
     default_threads, run_cells, run_cells_cached, run_grid, run_grid_cached, CellMetrics,

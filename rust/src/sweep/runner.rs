@@ -205,6 +205,16 @@ pub struct RunStats {
 }
 
 impl RunStats {
+    /// Fold another run's accounting into this one (experiment families
+    /// and the AWC dataset generator batch several grid runs per
+    /// figure/scenario and report one total).
+    pub fn absorb(&mut self, other: RunStats) {
+        self.total += other.total;
+        self.executed += other.executed;
+        self.cache_hits += other.cache_hits;
+        self.corrupt_entries += other.corrupt_entries;
+    }
+
     /// One-line human rendering for progress logs.
     pub fn describe(&self) -> String {
         format!(

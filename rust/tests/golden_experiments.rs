@@ -1,0 +1,211 @@
+//! Self-bootstrapping golden snapshots for the runner-ported experiment
+//! families (fig5, fig7/8, fig9/10, table2) plus cached-vs-uncached
+//! byte-identity: each family's sweep data must serialize identically
+//! whether computed directly, against a cold cell cache, or spliced
+//! entirely from a warm cache — and the warm pass must execute zero
+//! cells (the kill-and-resume acceptance criterion).
+//!
+//! Snapshots self-bootstrap like `tests/golden_report.rs`: the first run
+//! on a machine writes `tests/golden/<name>` and passes; once committed,
+//! any byte drift fails. Regenerate deliberately with
+//! `DSD_UPDATE_GOLDEN=1 cargo test -q --test golden_experiments`.
+
+use dsd::experiments::{fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale};
+use dsd::sweep::CellCache;
+use dsd::util::json::Json;
+use std::path::PathBuf;
+
+const SCALE: Scale = Scale(0.05);
+const SEEDS: [u64; 1] = [1];
+
+/// Unique scratch dir per test (no tempfile crate offline).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "dsd-golden-exp-{name}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Compare (or bootstrap) a golden snapshot under tests/golden/.
+fn check_golden(name: &str, text: &str) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("tests/golden/{name}"));
+    let update = std::env::var_os("DSD_UPDATE_GOLDEN").is_some();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, text).unwrap();
+        eprintln!("golden: wrote snapshot {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        text, want,
+        "{name}: experiment output drifted from the committed snapshot. If the \
+         change is intentional, regenerate with DSD_UPDATE_GOLDEN=1 cargo test \
+         (and bump SIM_VERSION_TAG if simulation results changed)."
+    );
+}
+
+/// Run one family three ways — uncached, cold cache, warm cache — and
+/// assert byte identity plus zero warm re-execution; returns the
+/// canonical serialization for the golden check.
+fn triple_run(name: &str, run: impl Fn(&ExpContext) -> String) -> String {
+    let dir = scratch(name);
+    let cache = CellCache::open(&dir).unwrap();
+    let plain = run(&ExpContext::default());
+
+    let cold_ctx = ExpContext::with_cache(Some(&cache));
+    let cold = run(&cold_ctx);
+    let cold_stats = cold_ctx.stats.get();
+    assert!(cold_stats.executed > 0, "{name}: cold run must execute");
+    assert_eq!(cold_stats.cache_hits, 0, "{name}: cold run must not hit");
+
+    let warm_ctx = ExpContext::with_cache(Some(&cache));
+    let warm = run(&warm_ctx);
+    let warm_stats = warm_ctx.stats.get();
+    assert_eq!(
+        warm_stats.executed, 0,
+        "{name}: warm re-run (kill-and-resume) must execute zero cells"
+    );
+    assert_eq!(warm_stats.cache_hits, warm_stats.total, "{name}");
+
+    assert_eq!(plain, cold, "{name}: cached run must be byte-identical to uncached");
+    assert_eq!(cold, warm, "{name}: warm splice must be byte-identical to cold run");
+    let _ = std::fs::remove_dir_all(&dir);
+    plain
+}
+
+fn pretty(j: Json) -> String {
+    let mut t = j.to_string_pretty();
+    t.push('\n');
+    t
+}
+
+fn fig5_json(rows: &[(String, f64, f64, f64)]) -> String {
+    pretty(Json::Arr(
+        rows.iter()
+            .map(|(stack, tput, ttft, tpot)| {
+                Json::obj()
+                    .with("stack", stack.as_str().into())
+                    .with("tput", (*tput).into())
+                    .with("ttft", (*ttft).into())
+                    .with("tpot", (*tpot).into())
+            })
+            .collect(),
+    ))
+}
+
+fn series_json(labels: &[&str], series: &[Vec<(usize, f64, f64)>]) -> String {
+    pretty(Json::Arr(
+        labels
+            .iter()
+            .zip(series)
+            .map(|(label, pts)| {
+                Json::obj().with("series", (*label).into()).with(
+                    "points",
+                    Json::Arr(
+                        pts.iter()
+                            .map(|(n, tput, tpot)| {
+                                Json::obj()
+                                    .with("drafters", (*n).into())
+                                    .with("tput", (*tput).into())
+                                    .with("tpot", (*tpot).into())
+                            })
+                            .collect(),
+                    ),
+                )
+            })
+            .collect(),
+    ))
+}
+
+fn table2_json(results: &[Vec<Vec<table2::Cell>>]) -> String {
+    let datasets = ["gsm8k", "humaneval", "cnndm"];
+    let mut rows = Vec::new();
+    for (ci, (clabel, _, _)) in table2::configs().iter().enumerate() {
+        for (di, ds) in datasets.iter().enumerate() {
+            for (pi, (plabel, _)) in table2::policies().iter().enumerate() {
+                let c = &results[ci][di][pi];
+                rows.push(
+                    Json::obj()
+                        .with("config", (*clabel).into())
+                        .with("dataset", (*ds).into())
+                        .with("policy", (*plabel).into())
+                        .with("tput", c.tput.into())
+                        .with("ttft", c.ttft.into())
+                        .with("tpot", c.tpot.into()),
+                );
+            }
+        }
+    }
+    pretty(Json::Arr(rows))
+}
+
+fn fig6_json(dist: &fig6::Series, fused: &fig6::Series) -> String {
+    let series = |name: &str, s: &fig6::Series| {
+        Json::obj().with("series", name.into()).with(
+            "points",
+            Json::Arr(
+                s.iter()
+                    .map(|(rtt, tput, ttft, tpot)| {
+                        Json::obj()
+                            .with("rtt_ms", (*rtt).into())
+                            .with("tput", (*tput).into())
+                            .with("ttft", (*ttft).into())
+                            .with("tpot", (*tpot).into())
+                    })
+                    .collect(),
+            ),
+        )
+    };
+    pretty(Json::Arr(vec![
+        series("distributed", dist),
+        series("fused", fused),
+    ]))
+}
+
+#[test]
+fn golden_fig6_and_cache_identity() {
+    let text = triple_run("fig6", |ctx| {
+        let (dist, fused) = fig6::sweep_cached(SCALE, &SEEDS, ctx);
+        fig6_json(&dist, &fused)
+    });
+    check_golden("fig6_gsm8k_tiny.json", &text);
+}
+
+#[test]
+fn golden_fig5_and_cache_identity() {
+    let text = triple_run("fig5", |ctx| {
+        fig5_json(&fig5::sweep_cached("gsm8k", SCALE, &SEEDS, ctx))
+    });
+    check_golden("fig5_gsm8k_tiny.json", &text);
+}
+
+#[test]
+fn golden_fig7_8_and_cache_identity() {
+    let labels: Vec<&str> = fig7_8::routings().iter().map(|&(n, _)| n).collect();
+    let text = triple_run("fig7-8", |ctx| {
+        series_json(&labels, &fig7_8::sweep_cached("gsm8k", SCALE, &SEEDS, ctx))
+    });
+    check_golden("fig7_8_gsm8k_tiny.json", &text);
+}
+
+#[test]
+fn golden_fig9_10_and_cache_identity() {
+    let text = triple_run("fig9-10", |ctx| {
+        series_json(
+            &["FIFO", "LAB"],
+            &fig9_10::sweep_cached("gsm8k", SCALE, &SEEDS, ctx),
+        )
+    });
+    check_golden("fig9_10_gsm8k_tiny.json", &text);
+}
+
+#[test]
+fn golden_table2_and_cache_identity() {
+    let text = triple_run("table2", |ctx| {
+        table2_json(&table2::sweep_cached(SCALE, &SEEDS, ctx))
+    });
+    check_golden("table2_tiny.json", &text);
+}

@@ -4,7 +4,7 @@
 //! zero simulator steps; corrupt cell files fall back to re-execution.
 
 use dsd::sweep::{
-    cell_key, filter_cells, filter_label, parse_filter, run_cells_cached, CellCache,
+    cell_key, filter_cells, filter_label, parse_filter, run_cells_cached, CellCache, GcStats,
     SweepGrid, SweepSummary,
 };
 use std::path::PathBuf;
@@ -165,6 +165,74 @@ fn streaming_and_full_modes_never_share_cells() {
         "streaming cells must not hit full-mode entries"
     );
     assert_eq!(cache.n_entries(), 2 * grid.n_cells());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `dsd sweep --gc` behavior (ISSUE 3 satellite, ROADMAP cache
+/// follow-up): orphans left behind by a `SIM_VERSION_TAG` bump — plus
+/// corrupt entries, misnamed files, and stale atomic-write temps — are
+/// pruned; the current grid's cells survive and the next run still
+/// splices them with zero re-execution. A narrowed key set prunes the
+/// out-of-grid half, which then (and only then) re-executes.
+#[test]
+fn gc_prunes_orphans_then_resume_still_executes_zero() {
+    let dir = scratch("gc");
+    let grid = SweepGrid::from_yaml(grid_yaml()).unwrap();
+    let n = grid.n_cells();
+    let cache = CellCache::open(&dir.join("cells")).unwrap();
+    let (baseline, cold) = summary_bytes(&grid, &cache, 3);
+    assert_eq!(cold.executed, n);
+
+    // Orphans: a valid entry copied under the wrong key, a hand-crafted
+    // entry from an older simulator version tag, and a stale tmp file.
+    let cells = grid.expand().unwrap();
+    let first_key = cell_key(&cells[0].cfg, grid.streaming);
+    std::fs::copy(cache.path_for(&first_key), cache.path_for(&"0".repeat(32))).unwrap();
+    let old_key = "f".repeat(32);
+    std::fs::write(
+        cache.path_for(&old_key),
+        format!("{{\"key\": \"{old_key}\", \"version\": \"dsd-sim-0\"}}\n"),
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("cells").join(format!("{first_key}.json.tmp.99.0")),
+        "partial write",
+    )
+    .unwrap();
+    assert_eq!(cache.n_entries(), n + 2);
+
+    // GC against the grid's key set (both metric modes stay valid, the
+    // same contract `dsd sweep --gc --grid` applies).
+    let mut keys = std::collections::HashSet::new();
+    for cell in &cells {
+        keys.insert(cell_key(&cell.cfg, false));
+        keys.insert(cell_key(&cell.cfg, true));
+    }
+    let stats = cache.gc(Some(&keys));
+    assert_eq!(stats, GcStats { kept: n, pruned: 3, failed: 0 });
+    assert_eq!(cache.n_entries(), n);
+
+    // Every surviving cell still splices: zero re-execution, identical
+    // bytes.
+    let (resumed, warm) = summary_bytes(&grid, &cache, 2);
+    assert_eq!(warm.executed, 0, "gc must not touch in-grid cells");
+    assert_eq!(resumed, baseline);
+
+    // Narrow the valid set to the rtt_ms=5 half: gc prunes the other
+    // half, which the next full run re-executes (and only it).
+    let subset = filter_cells(grid.expand().unwrap(), &parse_filter("rtt_ms=5").unwrap()).unwrap();
+    let mut subset_keys = std::collections::HashSet::new();
+    for cell in &subset {
+        subset_keys.insert(cell_key(&cell.cfg, false));
+        subset_keys.insert(cell_key(&cell.cfg, true));
+    }
+    let stats = cache.gc(Some(&subset_keys));
+    assert_eq!(stats, GcStats { kept: subset.len(), pruned: n - subset.len(), failed: 0 });
+    let (regrown, refill) = summary_bytes(&grid, &cache, 3);
+    assert_eq!(refill.executed, n - subset.len());
+    assert_eq!(refill.cache_hits, subset.len());
+    assert_eq!(regrown, baseline);
+
     let _ = std::fs::remove_dir_all(&dir);
 }
 
