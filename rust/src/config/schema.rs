@@ -6,6 +6,7 @@
 //! explicit device pools.
 
 use crate::cluster::{gpu_by_name, model_by_name, GpuSpec, ModelSpec};
+use crate::scenario::Scenario;
 use crate::util::json::Json;
 use crate::util::yaml;
 
@@ -159,6 +160,10 @@ pub struct SimConfig {
     pub workload: WorkloadConfig,
     /// Hard stop for simulated time, ms (safety net).
     pub max_sim_ms: f64,
+    /// Optional scripted dynamics: a time-varying arrival process and a
+    /// timeline of link/device/load events (see [`crate::scenario`]).
+    /// `None` reproduces the static pre-scenario simulator bit for bit.
+    pub scenario: Option<Scenario>,
 }
 
 impl SimConfig {
@@ -261,6 +266,9 @@ impl SimConfig {
         if let Some(x) = doc.get("max_sim_ms").and_then(Json::as_f64) {
             b.cfg.max_sim_ms = x;
         }
+        if let Some(s) = doc.get("scenario") {
+            b.cfg.scenario = Some(Scenario::from_json(s)?);
+        }
         b.cfg.validate()?;
         Ok(b.cfg)
     }
@@ -339,7 +347,10 @@ impl SimConfig {
         // are f64, and distinct u64 seeds ≥ 2^53 (plausible with
         // hash-derived or wrapping-arithmetic seeds) would collide to
         // one f64 — and therefore one cache key — if emitted as Num.
-        Json::obj()
+        // The scenario block is appended only when present: scenario-free
+        // configs keep their historical canonical bytes, so existing
+        // sweep cache keys stay valid.
+        let mut j = Json::obj()
             .with("seed", self.seed.to_string().into())
             .with(
                 "cluster",
@@ -376,7 +387,11 @@ impl SimConfig {
                     .with("window_ms", self.batch.window_ms.into()),
             )
             .with("workload", workload)
-            .with("max_sim_ms", self.max_sim_ms.into())
+            .with("max_sim_ms", self.max_sim_ms.into());
+        if let Some(s) = &self.scenario {
+            j.set("scenario", s.to_canonical_json());
+        }
+        j
     }
 
     /// Total target count across pools.
@@ -425,6 +440,27 @@ impl SimConfig {
         }
         if self.batch.decode_batch == 0 || self.batch.prefill_batch == 0 {
             return Err("config: zero batch size".into());
+        }
+        if let Some(s) = &self.scenario {
+            s.validate(self.drafter_pools.len(), self.n_targets())?;
+            // Trace-driven workloads carry their own arrival times; a
+            // scenario arrival process (or rate override) could not take
+            // effect and must not silently pretend to — the cell would
+            // be cache-keyed and labeled by dynamics it never ran.
+            if self.workload.trace_path.is_some() {
+                let has_overrides = s
+                    .events
+                    .iter()
+                    .any(|e| matches!(e.event, crate::scenario::ScenarioEvent::RateOverride { .. }));
+                if s.arrivals.is_some() || has_overrides {
+                    return Err(
+                        "config: scenario arrival processes / rate overrides cannot \
+                         combine with workload.trace_path (the trace fixes arrival \
+                         times); drop the arrivals block or the trace"
+                            .into(),
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -538,6 +574,7 @@ impl Default for SimConfigBuilder {
                     trace_path: None,
                 },
                 max_sim_ms: 3_600_000.0,
+                scenario: None,
             },
         }
     }
@@ -607,6 +644,11 @@ impl SimConfigBuilder {
     /// Set batch knobs.
     pub fn batch_knobs(mut self, k: BatchKnobs) -> Self {
         self.cfg.batch = k;
+        self
+    }
+    /// Attach a scripted-dynamics scenario.
+    pub fn scenario(mut self, s: Scenario) -> Self {
+        self.cfg.scenario = Some(s);
         self
     }
     /// Finalize (panics on invalid combinations — builder misuse is a bug).
@@ -836,6 +878,107 @@ cluster:
             cfg.to_canonical_json().to_string_canonical(),
             plain.to_canonical_json().to_string_canonical()
         );
+    }
+
+    #[test]
+    fn scenario_block_parses_and_validates() {
+        let y = "\
+seed: 3
+cluster:
+  targets:
+    - count: 2
+  drafters:
+    - count: 4
+    - count: 4
+scenario:
+  name: flap
+  arrivals:
+    kind: diurnal
+    mean_per_s: 30
+    amplitude_per_s: 10
+    period_ms: 20000
+  events:
+    - at_ms: 5000
+      kind: link_degrade
+      pool: 1
+      rtt_mult: 8
+    - at_ms: 9000
+      kind: link_restore
+      pool: 1
+";
+        let c = SimConfig::from_yaml(y).unwrap();
+        let s = c.scenario.as_ref().unwrap();
+        assert_eq!(s.name, "flap");
+        assert_eq!(s.events.len(), 2);
+        // Pool index beyond the deployment is rejected at validate time.
+        let bad = y.replace("pool: 1", "pool: 7");
+        assert!(SimConfig::from_yaml(&bad).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn scenario_arrivals_reject_trace_driven_workloads() {
+        use crate::scenario::{ArrivalProcess, Scenario, ScenarioEvent, TimedEvent};
+        let mk = |arrivals, events| {
+            let mut cfg = SimConfig::builder().build();
+            cfg.workload.trace_path = Some("trace.jsonl".into());
+            cfg.scenario = Some(Scenario { name: "s".into(), arrivals, events });
+            cfg
+        };
+        // Arrival process + trace: rejected.
+        let c = mk(Some(ArrivalProcess::Constant { rate_per_s: 10.0 }), Vec::new());
+        assert!(c.validate().unwrap_err().contains("trace_path"));
+        // Rate override + trace: rejected.
+        let c = mk(
+            None,
+            vec![TimedEvent {
+                at_ms: 5.0,
+                event: ScenarioEvent::RateOverride { rate_per_s: 9.0 },
+            }],
+        );
+        assert!(c.validate().unwrap_err().contains("trace_path"));
+        // Runtime-only events (no arrival semantics) are fine with traces.
+        let c = mk(
+            None,
+            vec![TimedEvent {
+                at_ms: 5.0,
+                event: ScenarioEvent::TargetSlowdown { target: None, mult: 2.0 },
+            }],
+        );
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn scenario_free_canonical_json_is_unchanged_and_scenarios_fork_keys() {
+        // No "scenario" key for scenario-free configs: historical sweep
+        // cache keys must remain valid.
+        let plain = SimConfig::builder().build();
+        let j = plain.to_canonical_json();
+        assert!(j.get("scenario").is_none());
+        // Attaching a scenario changes the canonical bytes; different
+        // scenarios differ from each other.
+        let scn = |name: &str, rtt_mult: f64| {
+            crate::scenario::Scenario {
+                name: name.into(),
+                arrivals: None,
+                events: vec![crate::scenario::TimedEvent {
+                    at_ms: 100.0,
+                    event: crate::scenario::ScenarioEvent::LinkDegrade {
+                        pool: None,
+                        rtt_mult,
+                        jitter_mult: 1.0,
+                        bandwidth_mult: 1.0,
+                    },
+                }],
+            }
+        };
+        let a = SimConfig::builder().scenario(scn("a", 2.0)).build();
+        let b = SimConfig::builder().scenario(scn("a", 4.0)).build();
+        let pj = plain.to_canonical_json().to_string_canonical();
+        let aj = a.to_canonical_json().to_string_canonical();
+        let bj = b.to_canonical_json().to_string_canonical();
+        assert_ne!(pj, aj);
+        assert_ne!(aj, bj);
+        assert!(a.to_canonical_json().path(&["scenario", "name"]).is_some());
     }
 
     #[test]

@@ -189,7 +189,7 @@ pub fn run_points(
     ctx.absorb_stats(stats);
     let points = results
         .chunks(per_point)
-        .map(|chunk| chunk.iter().map(|c| *c.metrics()).collect())
+        .map(|chunk| chunk.iter().map(|c| c.metrics().clone()).collect())
         .collect();
     (points, stats)
 }

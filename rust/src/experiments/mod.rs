@@ -3,13 +3,15 @@
 //! `dsd reproduce --exp <id>` is the CLI entry; `rust/benches/bench_*`
 //! time the same code paths.
 //!
-//! Every runner-backed family (fig5, fig6, fig7/8, fig9/10, table2)
+//! Every runner-backed family (fig5, fig6, fig7/8, fig9/10, table2, and
+//! the scenario-driven `agility` family)
 //! executes through `sweep::run_cells_cached`, so all of them inherit
 //! `--cache-dir` (content-addressed per-cell persistence + kill-resume),
 //! `--threads`, and `--streaming` (bounded-memory cells for 1M+ request
 //! scales). The experiment modules themselves are grid declarations plus
 //! formatting.
 
+pub mod agility;
 pub mod common;
 pub mod fig4;
 pub mod fig5;
@@ -88,16 +90,17 @@ pub fn run_experiment_opts(
             "fig7_8" => fig7_8::run_cached(scale, seeds, &ctx),
             "fig9_10" => fig9_10::run_cached(scale, seeds, &ctx),
             "table2" => table2::run_cached(scale, seeds, &ctx),
+            "agility" => agility::run_cached(scale, seeds, &ctx),
             other => unreachable!("unrouted experiment '{other}'"),
         })
     };
     Ok(match exp {
-        "fig4" | "fig5" | "fig6" | "table2" => run_one(exp)?,
+        "fig4" | "fig5" | "fig6" | "table2" | "agility" => run_one(exp)?,
         "fig7" | "fig8" | "fig7_8" => run_one("fig7_8")?,
         "fig9" | "fig10" | "fig9_10" => run_one("fig9_10")?,
         "all" => {
             let mut out = String::new();
-            for e in ["fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2"] {
+            for e in ["fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2", "agility"] {
                 out.push_str(&run_one(e)?);
                 out.push('\n');
             }
@@ -105,7 +108,8 @@ pub fn run_experiment_opts(
         }
         other => {
             return Err(format!(
-                "unknown experiment '{other}' (try: fig4 fig5 fig6 fig7 fig9 table2 all)"
+                "unknown experiment '{other}' (try: fig4 fig5 fig6 fig7 fig9 table2 \
+                 agility all)"
             ))
         }
     })

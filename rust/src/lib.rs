@@ -44,6 +44,7 @@ pub mod hwmodel;
 pub mod metrics;
 pub mod policies;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod specdec;
 pub mod sweep;

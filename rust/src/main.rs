@@ -1,9 +1,11 @@
 //! `dsd` — the DSD leader binary.
 //!
 //! Subcommands:
-//!   simulate       run DSD-Sim on a YAML deployment config
+//!   simulate       run DSD-Sim on a YAML deployment config (--scenario adds
+//!                  scripted dynamics: flash crowds, link churn, failures)
 //!   sweep          expand a scenario grid and run every cell in parallel
-//!   reproduce      regenerate a paper table/figure (fig4..fig10, table2, all)
+//!   reproduce      regenerate a paper table/figure (fig4..fig10, table2,
+//!                  agility, all)
 //!   sweep-dataset  generate the AWC training dataset (paper §4.2)
 //!   trace-gen      emit a synthetic workload trace (Table 1 schema)
 //!   serve          run the real edge-cloud serving path on AOT artifacts
@@ -44,6 +46,12 @@ fn main() {
 fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("simulate", "run DSD-Sim on a deployment config")
         .opt("config", "YAML deployment file", None)
+        .opt(
+            "scenario",
+            "scenario YAML file (scripted dynamics: time-varying arrivals, link \
+             churn, device failures — overrides any scenario in --config)",
+            None,
+        )
         .opt("seed", "override RNG seed", None)
         .flag(
             "streaming",
@@ -56,6 +64,10 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         Some(path) => SimConfig::from_yaml_file(path)?,
         None => SimConfig::builder().build(),
     };
+    if let Some(path) = a.get("scenario") {
+        cfg.scenario = Some(dsd::scenario::Scenario::from_yaml_file(path)?);
+        cfg.validate()?;
+    }
     if let Some(seed) = a.get_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = seed;
     }
@@ -292,7 +304,7 @@ fn cmd_sweep_gc(
 
 fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("reproduce", "regenerate a paper table/figure")
-        .opt("exp", "fig4|fig5|fig6|fig7|fig9|table2|all", Some("all"))
+        .opt("exp", "fig4|fig5|fig6|fig7|fig9|table2|agility|all", Some("all"))
         .opt("scale", "request-count scale factor (1.0 = paper)", Some("1.0"))
         .opt("seeds", "number of seeds to average", Some("3"))
         .opt(

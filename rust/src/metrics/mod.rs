@@ -5,6 +5,7 @@
 
 pub mod report;
 pub mod sink;
+pub mod timeseries;
 
 pub use report::{RequestMetrics, SimReport, SloSpec, SystemMetrics};
 pub use sink::{
@@ -12,3 +13,4 @@ pub use sink::{
     SloSummary, StreamingConfig, StreamingReport, StreamingSink, StreamingSummary,
     GAMMA_HIST_BUCKETS,
 };
+pub use timeseries::{TimeSeries, TimeSeriesConfig, TimeSeriesSummary, WindowSummary};

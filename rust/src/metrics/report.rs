@@ -1,6 +1,7 @@
 //! Per-request and system-level metric records and the end-of-run report.
 
 use super::sink::{drafter_pool_of, GammaSummary, GroupSummary};
+use super::timeseries::{TimeSeriesConfig, TimeSeriesSummary, WindowSummary};
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 
@@ -65,6 +66,16 @@ pub struct SystemMetrics {
     /// completion rate `0.5·N / (t75 − t25)`. Robust to warm-up and to
     /// straggler tails (a completions-per-total-duration ratio would be
     /// dominated by the longest request).
+    ///
+    /// **Stationarity caveat:** the interquartile estimator assumes the
+    /// completion process is (roughly) stationary between its 25th and
+    /// 75th completion percentiles. Under scripted dynamics — flash
+    /// crowds, link flaps, pool failures (`scenario:` configs) — that
+    /// assumption fails and this single number averages over regimes
+    /// that were deliberately made different. Non-stationary analyses
+    /// (e.g. the `agility` experiment family) must use the windowed
+    /// alternative instead: [`SimReport::time_series`] /
+    /// [`TimeSeriesSummary::mean_throughput_between`].
     pub throughput_rps: f64,
     /// Completed requests / total simulated duration (the naive ratio).
     pub total_throughput_rps: f64,
@@ -210,6 +221,101 @@ impl SimReport {
     /// indices as in [`drafter_pool_of`].
     pub fn per_pool_breakdown(&self, pool_ends: &[usize]) -> Vec<GroupSummary> {
         self.group_breakdown(|r| drafter_pool_of(r.drafter_id, pool_ends))
+    }
+
+    /// Windowed time series over the retained records — the full-sink
+    /// side of the streaming sink's folded
+    /// [`TimeSeriesSummary`](crate::metrics::StreamingSummary); this is
+    /// also the throughput estimator of record for *non-stationary*
+    /// runs, where the interquartile `throughput_rps` is invalid (see
+    /// [`SystemMetrics::throughput_rps`]).
+    ///
+    /// Computed *independently* of [`crate::metrics::TimeSeries`]: a
+    /// single sum-and-count binning pass in trace order with plain
+    /// arithmetic means (the streaming fold runs Welford in completion
+    /// order), re-deriving the same grouping rules — completion-window
+    /// assignment, active-span overlap, cap-and-overflow. O(requests +
+    /// windows), so scenario cells can carry the series at any scale.
+    /// The differential harness compares this against the streaming
+    /// fold — counts exactly, means to floating-point noise.
+    pub fn time_series(&self, cfg: &TimeSeriesConfig) -> TimeSeriesSummary {
+        let w = cfg.window_ms;
+        let index_of = |t_ms: f64| (t_ms.max(0.0) / w) as usize;
+        #[derive(Clone, Default)]
+        struct Bin {
+            completed: u64,
+            output_tokens: u64,
+            ttft_sum: f64,
+            tpot_sum: f64,
+            acc_sum: f64,
+            acc_n: u64,
+        }
+        let mut bins: Vec<Bin> = Vec::new();
+        let mut active: Vec<u64> = Vec::new();
+        let mut overflow_completed = 0u64;
+        for r in &self.requests {
+            let wi = index_of(r.arrival_ms + r.e2e_ms);
+            if wi >= cfg.max_windows {
+                overflow_completed += 1;
+            } else {
+                if bins.len() <= wi {
+                    bins.resize(wi + 1, Bin::default());
+                }
+                let b = &mut bins[wi];
+                b.completed += 1;
+                b.output_tokens += r.output_tokens as u64;
+                b.ttft_sum += r.ttft_ms;
+                b.tpot_sum += r.tpot_ms;
+                if r.acceptance.is_finite() {
+                    b.acc_sum += r.acceptance;
+                    b.acc_n += 1;
+                }
+            }
+            let first = index_of(r.arrival_ms);
+            if first < cfg.max_windows {
+                let last = wi.min(cfg.max_windows - 1);
+                if active.len() <= last {
+                    active.resize(last + 1, 0);
+                }
+                for a in &mut active[first..=last] {
+                    *a += 1;
+                }
+            }
+        }
+        let n = bins.len().max(active.len());
+        let empty = Bin::default();
+        let windows = (0..n)
+            .map(|k| {
+                let b = bins.get(k).unwrap_or(&empty);
+                let mean_of = |sum: f64| {
+                    if b.completed == 0 {
+                        0.0
+                    } else {
+                        sum / b.completed as f64
+                    }
+                };
+                WindowSummary {
+                    index: k,
+                    start_ms: k as f64 * w,
+                    completed: b.completed,
+                    active: active.get(k).copied().unwrap_or(0),
+                    output_tokens: b.output_tokens,
+                    throughput_rps: b.completed as f64 / (w / 1_000.0),
+                    mean_ttft_ms: mean_of(b.ttft_sum),
+                    mean_tpot_ms: mean_of(b.tpot_sum),
+                    mean_acceptance: if b.acc_n == 0 {
+                        f64::NAN
+                    } else {
+                        b.acc_sum / b.acc_n as f64
+                    },
+                }
+            })
+            .collect();
+        TimeSeriesSummary {
+            window_ms: w,
+            overflow_completed,
+            windows,
+        }
     }
 
     fn group_breakdown(&self, key_of: impl Fn(&RequestMetrics) -> usize) -> Vec<GroupSummary> {
@@ -403,6 +509,36 @@ mod tests {
         let pools = rep.per_pool_breakdown(&[1, 2]);
         assert_eq!(pools.len(), 1); // all drafter_id 0 → pool 0
         assert_eq!(pools[0].completed, 3);
+    }
+
+    #[test]
+    fn time_series_groups_by_completion_window() {
+        let mut a = req(0, 100.0, 1.0); // e2e = 100 + 1*100 = 200 → window 0
+        a.arrival_ms = 0.0;
+        let mut b = req(1, 100.0, 10.0); // e2e = 1100; arrival 500 → completes 1600 → window 1
+        b.arrival_ms = 500.0;
+        b.e2e_ms = 1_100.0;
+        let rep = SimReport {
+            requests: vec![a, b],
+            system: SystemMetrics::default(),
+        };
+        let ts = rep.time_series(&TimeSeriesConfig { window_ms: 1_000.0, max_windows: 64 });
+        assert_eq!(ts.windows.len(), 2);
+        assert_eq!(ts.windows[0].completed, 1);
+        assert_eq!(ts.windows[1].completed, 1);
+        // b is active in both windows, a only in the first.
+        assert_eq!(ts.windows[0].active, 2);
+        assert_eq!(ts.windows[1].active, 1);
+        assert_eq!(ts.overflow_completed, 0);
+        assert!((ts.windows[0].throughput_rps - 1.0).abs() < 1e-12);
+        assert!((ts.windows[0].mean_ttft_ms - 100.0).abs() < 1e-12);
+        // A cap of 1 window overflows b's completion but keeps it active
+        // in the surviving window.
+        let capped = rep.time_series(&TimeSeriesConfig { window_ms: 1_000.0, max_windows: 1 });
+        assert_eq!(capped.windows.len(), 1);
+        assert_eq!(capped.overflow_completed, 1);
+        assert_eq!(capped.windows[0].completed, 1);
+        assert_eq!(capped.windows[0].active, 2);
     }
 
     #[test]

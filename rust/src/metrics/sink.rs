@@ -15,8 +15,10 @@
 //! Since the streaming-parity work the streaming sink is at feature
 //! parity with the full sink: bounded-memory routing/γ decision
 //! histograms ([`GammaSummary`]), per-target and per-drafter-pool
-//! latency/acceptance breakdowns ([`GroupSummary`]), and SLO-attainment
-//! counters ([`SloSummary`]). γ decisions fold at *decision time*
+//! latency/acceptance breakdowns ([`GroupSummary`]), SLO-attainment
+//! counters ([`SloSummary`]), and the windowed time series
+//! ([`TimeSeriesSummary`] — scenario-dynamics observability, see
+//! [`super::timeseries`]). γ decisions fold at *decision time*
 //! through [`MetricsSink::record_gamma`] (the streaming sink keeps no
 //! per-request γ vectors); everything else folds at completion time.
 //! When every request completes — the differential grid in
@@ -24,6 +26,7 @@
 //! counts exactly the decisions a full-sink report retains.
 
 use super::report::{RequestMetrics, SloSpec, SystemMetrics};
+use super::timeseries::{TimeSeries, TimeSeriesConfig, TimeSeriesSummary};
 use crate::config::SimConfig;
 use crate::util::json::Json;
 use crate::util::stats::{Accumulator, Histogram};
@@ -106,6 +109,9 @@ pub struct StreamingConfig {
     /// Cumulative drafter-pool end indices for the per-pool breakdown
     /// (see [`drafter_pool_of`]); empty = one implicit pool.
     pub drafter_pool_ends: Vec<usize>,
+    /// Window geometry for the folded time series (scenario-dynamics
+    /// observability).
+    pub time_series: TimeSeriesConfig,
 }
 
 impl Default for StreamingConfig {
@@ -119,6 +125,7 @@ impl Default for StreamingConfig {
             buckets: 8192,
             slos: vec![SloSpec::INTERACTIVE, SloSpec::RELAXED],
             drafter_pool_ends: Vec::new(),
+            time_series: TimeSeriesConfig::default(),
         }
     }
 }
@@ -338,6 +345,7 @@ pub struct StreamingSink {
     gamma: GammaSummary,
     slos: Vec<SloSpec>,
     slo_attained: Vec<u64>,
+    ts: TimeSeries,
 }
 
 impl Default for StreamingSink {
@@ -367,6 +375,7 @@ impl StreamingSink {
             gamma: GammaSummary::default(),
             slos: cfg.slos,
             slo_attained: vec![0; n_slos],
+            ts: TimeSeries::new(cfg.time_series),
         }
     }
 
@@ -407,6 +416,7 @@ impl StreamingSink {
                     completed: self.completed,
                 })
                 .collect(),
+            time_series: self.ts.summary(),
         }
     }
 }
@@ -440,6 +450,7 @@ impl MetricsSink for StreamingSink {
                 self.slo_attained[i] += 1;
             }
         }
+        self.ts.fold(m);
     }
 
     fn record_gamma(&mut self, gamma: u32) {
@@ -531,6 +542,9 @@ pub struct StreamingSummary {
     pub gamma: GammaSummary,
     /// SLO-attainment counters, parallel to the configured SLO list.
     pub slo: Vec<SloSummary>,
+    /// Fixed-width windowed time series (throughput, latency means,
+    /// acceptance, active-request counts per window).
+    pub time_series: TimeSeriesSummary,
 }
 
 impl StreamingSummary {
@@ -557,6 +571,7 @@ impl StreamingSummary {
                 "slo",
                 Json::Arr(self.slo.iter().map(|s| s.to_json()).collect()),
             )
+            .with("time_series", self.time_series.to_json())
     }
 }
 
@@ -681,6 +696,26 @@ mod tests {
         assert!(a.contains("\"per_target\""));
         assert!(a.contains("\"gamma\""));
         assert!(a.contains("\"slo\""));
+        assert!(a.contains("\"time_series\""));
+    }
+
+    #[test]
+    fn time_series_folds_with_the_other_breakdowns() {
+        let mut s = StreamingSink::default();
+        // Completes at 100 + 10·10 = 200 ms → window 0; a second request
+        // arriving at 1.5 s completing at 1.6 s → window 1.
+        s.record(&req(0, 100.0, 10.0, 0.8));
+        let mut late = req(1, 50.0, 5.0, 0.6);
+        late.arrival_ms = 1_500.0;
+        s.record(&late);
+        let sum = s.summary();
+        assert_eq!(sum.time_series.windows.len(), 2);
+        assert_eq!(sum.time_series.windows[0].completed, 1);
+        assert_eq!(sum.time_series.windows[1].completed, 1);
+        assert_eq!(
+            sum.time_series.windows.iter().map(|w| w.completed).sum::<u64>(),
+            sum.completed
+        );
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Windowed time-series metrics: fixed-width time windows folding
+//! throughput, latency means, acceptance, and active-request counts —
+//! the instrumentation that makes scripted dynamics *observable*.
+//!
+//! Both metric sinks produce a [`TimeSeriesSummary`]:
+//!
+//! * [`StreamingSink`](super::StreamingSink) folds each completed
+//!   request into a [`TimeSeries`] (Welford accumulators per window,
+//!   O(windows) memory), preserving bounded-memory mode's feature
+//!   parity;
+//! * [`SimReport::time_series`](super::SimReport::time_series)
+//!   recomputes the same summary *independently* from the retained
+//!   per-request records with plain arithmetic means — the differential
+//!   harness (`tests/streaming_parity.rs`) compares the two exactly on
+//!   counts and to 1e-9 on means.
+//!
+//! A request is assigned to the window containing its **completion**
+//! time (`arrival_ms + e2e_ms`); it counts as *active* in every window
+//! its `[arrival, completion]` span overlaps. Windows are `[k·w,
+//! (k+1)·w)`; completions beyond `max_windows` fold into an overflow
+//! counter and active spans clamp to the last window.
+
+use super::report::RequestMetrics;
+use crate::util::json::Json;
+use crate::util::stats::Accumulator;
+
+/// Window geometry for time-series folding.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimeSeriesConfig {
+    /// Window width, ms.
+    pub window_ms: f64,
+    /// Hard cap on the number of windows (memory bound; completions
+    /// beyond it land in the overflow counter).
+    pub max_windows: usize,
+}
+
+impl Default for TimeSeriesConfig {
+    fn default() -> Self {
+        // One-second windows: fine enough to see a flash crowd or link
+        // flap, coarse enough that an hour of simulated time stays at
+        // 3.6k windows. 4096 windows ≈ 68 min at the default width.
+        TimeSeriesConfig { window_ms: 1_000.0, max_windows: 4_096 }
+    }
+}
+
+/// Per-window streaming accumulators.
+#[derive(Clone, Debug, Default)]
+struct WindowAcc {
+    completed: u64,
+    output_tokens: u64,
+    ttft: Accumulator,
+    tpot: Accumulator,
+    /// Finite (speculating) acceptance ratios only.
+    acceptance: Accumulator,
+}
+
+/// Bounded-memory time-series folder (the streaming-sink side).
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    cfg: TimeSeriesConfig,
+    /// Indexed by window; grown on sight.
+    windows: Vec<WindowAcc>,
+    /// Active-request counts, indexed by window; grown on sight.
+    active: Vec<u64>,
+    /// Completions beyond the window cap.
+    overflow_completed: u64,
+}
+
+impl TimeSeries {
+    /// Empty series with the given geometry.
+    pub fn new(cfg: TimeSeriesConfig) -> TimeSeries {
+        TimeSeries {
+            cfg,
+            windows: Vec::new(),
+            active: Vec::new(),
+            overflow_completed: 0,
+        }
+    }
+
+    /// Window index of a timestamp (unclamped).
+    fn index_of(&self, t_ms: f64) -> usize {
+        (t_ms.max(0.0) / self.cfg.window_ms) as usize
+    }
+
+    /// Fold one completed request.
+    pub fn fold(&mut self, m: &RequestMetrics) {
+        let end_ms = m.arrival_ms + m.e2e_ms;
+        let wi = self.index_of(end_ms);
+        if wi >= self.cfg.max_windows {
+            self.overflow_completed += 1;
+        } else {
+            if self.windows.len() <= wi {
+                self.windows.resize_with(wi + 1, WindowAcc::default);
+            }
+            let w = &mut self.windows[wi];
+            w.completed += 1;
+            w.output_tokens += m.output_tokens as u64;
+            w.ttft.push(m.ttft_ms);
+            w.tpot.push(m.tpot_ms);
+            if m.acceptance.is_finite() {
+                w.acceptance.push(m.acceptance);
+            }
+        }
+        // Active span: every window the [arrival, completion] interval
+        // overlaps, clamped to the window cap.
+        let first = self.index_of(m.arrival_ms);
+        if first < self.cfg.max_windows {
+            let last = wi.min(self.cfg.max_windows - 1);
+            if self.active.len() <= last {
+                self.active.resize(last + 1, 0);
+            }
+            for a in &mut self.active[first..=last] {
+                *a += 1;
+            }
+        }
+    }
+
+    /// Snapshot the folded series.
+    pub fn summary(&self) -> TimeSeriesSummary {
+        let n = self.windows.len().max(self.active.len());
+        let empty = WindowAcc::default();
+        let windows = (0..n)
+            .map(|k| {
+                let w = self.windows.get(k).unwrap_or(&empty);
+                WindowSummary {
+                    index: k,
+                    start_ms: k as f64 * self.cfg.window_ms,
+                    completed: w.completed,
+                    active: self.active.get(k).copied().unwrap_or(0),
+                    output_tokens: w.output_tokens,
+                    throughput_rps: w.completed as f64 / (self.cfg.window_ms / 1_000.0),
+                    mean_ttft_ms: w.ttft.mean(),
+                    mean_tpot_ms: w.tpot.mean(),
+                    mean_acceptance: if w.acceptance.count() == 0 {
+                        f64::NAN
+                    } else {
+                        w.acceptance.mean()
+                    },
+                }
+            })
+            .collect();
+        TimeSeriesSummary {
+            window_ms: self.cfg.window_ms,
+            overflow_completed: self.overflow_completed,
+            windows,
+        }
+    }
+}
+
+/// Folded statistics of one time window.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowSummary {
+    /// Window index `k` (covers `[k·window_ms, (k+1)·window_ms)`).
+    pub index: usize,
+    /// Window start, ms.
+    pub start_ms: f64,
+    /// Requests completing in the window.
+    pub completed: u64,
+    /// Requests active (arrived, not yet completed) during any part of
+    /// the window.
+    pub active: u64,
+    /// Output tokens of the window's completions.
+    pub output_tokens: u64,
+    /// Completion throughput, requests/second (`completed / window`).
+    pub throughput_rps: f64,
+    /// Mean TTFT of the window's completions, ms (0 when empty).
+    pub mean_ttft_ms: f64,
+    /// Mean TPOT of the window's completions, ms.
+    pub mean_tpot_ms: f64,
+    /// Mean acceptance over the window's speculating completions — the
+    /// accepted fraction of drafted tokens (NaN when none speculated).
+    pub mean_acceptance: f64,
+}
+
+impl WindowSummary {
+    /// JSON encoding (insertion-ordered keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("index", self.index.into())
+            .with("start_ms", self.start_ms.into())
+            .with("completed", self.completed.into())
+            .with("active", self.active.into())
+            .with("output_tokens", self.output_tokens.into())
+            .with("throughput_rps", self.throughput_rps.into())
+            .with("mean_ttft_ms", self.mean_ttft_ms.into())
+            .with("mean_tpot_ms", self.mean_tpot_ms.into())
+            .with("mean_acceptance", self.mean_acceptance.into())
+    }
+
+    fn from_json(j: &Json) -> Option<WindowSummary> {
+        Some(WindowSummary {
+            index: j.get("index")?.as_usize()?,
+            start_ms: j.get("start_ms")?.as_f64()?,
+            completed: j.get("completed")?.as_u64()?,
+            active: j.get("active")?.as_u64()?,
+            output_tokens: j.get("output_tokens")?.as_u64()?,
+            throughput_rps: j.get("throughput_rps")?.as_f64_or_nan()?,
+            mean_ttft_ms: j.get("mean_ttft_ms")?.as_f64_or_nan()?,
+            mean_tpot_ms: j.get("mean_tpot_ms")?.as_f64_or_nan()?,
+            mean_acceptance: j.get("mean_acceptance")?.as_f64_or_nan()?,
+        })
+    }
+}
+
+/// The complete windowed time series of one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeSeriesSummary {
+    /// Window width, ms.
+    pub window_ms: f64,
+    /// Completions beyond the window cap (not represented in `windows`).
+    pub overflow_completed: u64,
+    /// Per-window summaries, index order, no gaps (quiet windows appear
+    /// with zero counts).
+    pub windows: Vec<WindowSummary>,
+}
+
+impl TimeSeriesSummary {
+    /// JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("window_ms", self.window_ms.into())
+            .with("overflow_completed", self.overflow_completed.into())
+            .with(
+                "windows",
+                Json::Arr(self.windows.iter().map(|w| w.to_json()).collect()),
+            )
+    }
+
+    /// Decode a summary previously written by
+    /// [`TimeSeriesSummary::to_json`] (the sweep cell-cache load path).
+    /// `None` on any missing or mistyped field.
+    pub fn from_json(j: &Json) -> Option<TimeSeriesSummary> {
+        let windows = j
+            .get("windows")?
+            .as_arr()?
+            .iter()
+            .map(WindowSummary::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(TimeSeriesSummary {
+            window_ms: j.get("window_ms")?.as_f64()?,
+            overflow_completed: j.get("overflow_completed")?.as_u64()?,
+            windows,
+        })
+    }
+
+    /// Mean completion throughput (req/s) over the full windows whose
+    /// start lies in `[t0_ms, t1_ms)`; `None` when the range covers no
+    /// window.
+    pub fn mean_throughput_between(&self, t0_ms: f64, t1_ms: f64) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .windows
+            .iter()
+            .filter(|w| (t0_ms..t1_ms).contains(&w.start_ms))
+            .map(|w| w.throughput_rps)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(xs.iter().sum::<f64>() / xs.len() as f64)
+        }
+    }
+
+    /// Time from `event_ms` until throughput first sustains
+    /// `target_rps`: scans windows **starting at or after** `event_ms`
+    /// (a window straddling the event still contains pre-event
+    /// completions and must not register a spurious instant recovery;
+    /// the final, partial window is excluded too) for the first with
+    /// `throughput_rps >= target_rps` and returns the distance from
+    /// `event_ms` to that window's end. `None` when throughput never
+    /// recovers within the series — the agility experiment's
+    /// time-to-recover metric.
+    pub fn recovery_ms_after(&self, event_ms: f64, target_rps: f64) -> Option<f64> {
+        self.first_window_matching(event_ms, |w| w.throughput_rps >= target_rps)
+    }
+
+    /// Time from `event_ms` until the active-request count first falls
+    /// to `target_active` or below — the backlog-drain analogue of
+    /// [`TimeSeriesSummary::recovery_ms_after`], with the same window
+    /// eligibility rules (post-event full windows only).
+    pub fn drain_ms_after(&self, event_ms: f64, target_active: f64) -> Option<f64> {
+        self.first_window_matching(event_ms, |w| (w.active as f64) <= target_active)
+    }
+
+    fn first_window_matching(
+        &self,
+        event_ms: f64,
+        pred: impl Fn(&WindowSummary) -> bool,
+    ) -> Option<f64> {
+        let n = self.windows.len();
+        // The last window is truncated by the end of the run; its
+        // counts undershoot and must not fake a (non-)recovery.
+        for w in self.windows.iter().take(n.saturating_sub(1)) {
+            if w.start_ms < event_ms {
+                continue;
+            }
+            if pred(w) {
+                return Some((w.start_ms + self.window_ms - event_ms).max(0.0));
+            }
+        }
+        None
+    }
+
+    /// Mean active-request count over the full windows whose start lies
+    /// in `[t0_ms, t1_ms)`; `None` when the range covers no window.
+    pub fn mean_active_between(&self, t0_ms: f64, t1_ms: f64) -> Option<f64> {
+        let xs: Vec<f64> = self
+            .windows
+            .iter()
+            .filter(|w| (t0_ms..t1_ms).contains(&w.start_ms))
+            .map(|w| w.active as f64)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(xs.iter().sum::<f64>() / xs.len() as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: f64, e2e: f64, acc: f64) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival_ms: arrival,
+            ttft_ms: e2e * 0.2,
+            tpot_ms: 2.0,
+            e2e_ms: e2e,
+            acceptance: acc,
+            target_id: 0,
+            drafter_id: 0,
+            output_tokens: 10,
+            gamma_decisions: Vec::new(),
+            fused_rounds: 0,
+        }
+    }
+
+    #[test]
+    fn folds_by_completion_window_and_tracks_active_spans() {
+        let mut ts = TimeSeries::new(TimeSeriesConfig { window_ms: 1_000.0, max_windows: 16 });
+        ts.fold(&req(0, 100.0, 400.0, 0.8)); // completes at 500 → window 0
+        ts.fold(&req(1, 900.0, 1_200.0, 0.6)); // completes at 2100 → window 2
+        ts.fold(&req(2, 1_500.0, 100.0, f64::NAN)); // completes at 1600 → window 1
+        let s = ts.summary();
+        assert_eq!(s.windows.len(), 3);
+        assert_eq!(
+            s.windows.iter().map(|w| w.completed).collect::<Vec<_>>(),
+            vec![1, 1, 1]
+        );
+        // Active: r0 spans window 0; r1 spans 0..=2; r2 spans window 1.
+        assert_eq!(
+            s.windows.iter().map(|w| w.active).collect::<Vec<_>>(),
+            vec![2, 2, 1]
+        );
+        assert_eq!(s.windows[0].output_tokens, 10);
+        assert!((s.windows[0].throughput_rps - 1.0).abs() < 1e-12);
+        assert!((s.windows[0].mean_ttft_ms - 80.0).abs() < 1e-12);
+        assert!((s.windows[0].mean_acceptance - 0.8).abs() < 1e-12);
+        assert!(s.windows[1].mean_acceptance.is_nan(), "fused-only window");
+        assert_eq!(s.overflow_completed, 0);
+    }
+
+    #[test]
+    fn quiet_windows_appear_with_zero_counts() {
+        let mut ts = TimeSeries::new(TimeSeriesConfig { window_ms: 100.0, max_windows: 64 });
+        ts.fold(&req(0, 10.0, 20.0, 0.5)); // window 0
+        ts.fold(&req(1, 510.0, 20.0, 0.5)); // window 5
+        let s = ts.summary();
+        assert_eq!(s.windows.len(), 6);
+        assert_eq!(s.windows[3].completed, 0);
+        assert_eq!(s.windows[3].active, 0);
+        assert_eq!(s.windows[3].mean_ttft_ms, 0.0);
+        assert!(s.windows[3].mean_acceptance.is_nan());
+    }
+
+    #[test]
+    fn window_cap_overflows_and_clamps_active() {
+        let mut ts = TimeSeries::new(TimeSeriesConfig { window_ms: 100.0, max_windows: 3 });
+        ts.fold(&req(0, 50.0, 800.0, 0.9)); // completes at 850 → beyond cap
+        ts.fold(&req(1, 950.0, 10.0, 0.9)); // arrival already beyond cap
+        let s = ts.summary();
+        assert_eq!(s.overflow_completed, 2);
+        assert_eq!(s.windows.len(), 3);
+        // r0's active span clamps to the capped windows; r1's span lies
+        // entirely beyond the cap and is skipped.
+        assert_eq!(
+            s.windows.iter().map(|w| w.active).collect::<Vec<_>>(),
+            vec![1, 1, 1]
+        );
+        assert_eq!(s.windows.iter().map(|w| w.completed).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let mut ts = TimeSeries::new(TimeSeriesConfig::default());
+        ts.fold(&req(0, 100.0, 500.0, 0.7));
+        ts.fold(&req(1, 2_100.0, 900.0, f64::NAN));
+        let s = ts.summary();
+        let back = TimeSeriesSummary::from_json(&s.to_json()).expect("roundtrip");
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            s.to_json().to_string_pretty(),
+            "reloaded series must re-serialize byte-identically"
+        );
+        assert!(TimeSeriesSummary::from_json(&Json::obj()).is_none());
+    }
+
+    #[test]
+    fn recovery_and_range_helpers() {
+        let mk = |tputs: &[f64]| TimeSeriesSummary {
+            window_ms: 1_000.0,
+            overflow_completed: 0,
+            windows: tputs
+                .iter()
+                .enumerate()
+                .map(|(k, &t)| WindowSummary {
+                    index: k,
+                    start_ms: k as f64 * 1_000.0,
+                    completed: t as u64,
+                    active: 0,
+                    output_tokens: 0,
+                    throughput_rps: t,
+                    mean_ttft_ms: 0.0,
+                    mean_tpot_ms: 0.0,
+                    mean_acceptance: f64::NAN,
+                })
+                .collect(),
+        };
+        // Baseline 10/s, dip at window 2, recovery in window 5 (final
+        // window 7 is excluded as partial).
+        let s = mk(&[10.0, 10.0, 2.0, 3.0, 4.0, 9.5, 10.0, 1.0]);
+        assert!((s.mean_throughput_between(0.0, 2_000.0).unwrap() - 10.0).abs() < 1e-12);
+        // Event at 2000 ms; target 9.0: window 5 ends at 6000 → 4000 ms.
+        assert_eq!(s.recovery_ms_after(2_000.0, 9.0), Some(4_000.0));
+        // Never recovers to 11/s.
+        assert_eq!(s.recovery_ms_after(2_000.0, 11.0), None);
+        // Empty range.
+        assert!(s.mean_throughput_between(50_000.0, 60_000.0).is_none());
+        // A mid-window event must not let the straddling window — which
+        // still holds pre-event completions — register recovery: event
+        // at 1500 ms skips window 1 (starts at 1000, throughput 10)
+        // and the scan starts at window 2.
+        assert_eq!(s.recovery_ms_after(1_500.0, 9.0), Some(4_500.0));
+    }
+
+    #[test]
+    fn active_drain_helpers() {
+        let mk_active = |actives: &[u64]| TimeSeriesSummary {
+            window_ms: 1_000.0,
+            overflow_completed: 0,
+            windows: actives
+                .iter()
+                .enumerate()
+                .map(|(k, &a)| WindowSummary {
+                    index: k,
+                    start_ms: k as f64 * 1_000.0,
+                    completed: 0,
+                    active: a,
+                    output_tokens: 0,
+                    throughput_rps: 0.0,
+                    mean_ttft_ms: 0.0,
+                    mean_tpot_ms: 0.0,
+                    mean_acceptance: f64::NAN,
+                })
+                .collect(),
+        };
+        // Baseline ~4 active, burst backlog peaks at 40, drains by
+        // window 6 (last window 8 is partial and excluded).
+        let s = mk_active(&[4, 4, 30, 40, 25, 12, 5, 4, 1]);
+        assert!((s.mean_active_between(0.0, 2_000.0).unwrap() - 4.0).abs() < 1e-12);
+        // Event at 4000 ms, drain target 5: window 6 ends at 7000.
+        assert_eq!(s.drain_ms_after(4_000.0, 5.0), Some(3_000.0));
+        // Never drains to 0 within the full windows.
+        assert_eq!(s.drain_ms_after(4_000.0, 0.0), None);
+    }
+}

@@ -22,6 +22,16 @@ pub struct WindowDecision {
 
 /// The feature vector window policies observe — exactly the five inputs
 /// of the WC-DNN (paper §4.1), assembled by the performance analyzer.
+///
+/// **Liveness invariant** (scenario engine): policies must read network
+/// and load state from *this* vector on every `decide` call, never from
+/// configuration captured at construction — scripted dynamics
+/// ([`crate::scenario`]) change links and hardware mid-run, and the
+/// simulator feeds those changes through here (measured EMAs once
+/// telemetry flows; the *live* link as the cold-start fallback). The
+/// built-in policies and AWC hold no config-derived constants; the
+/// regression lock is `window_features_track_live_link_state` in
+/// `tests/scenario_integration.rs`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct WindowFeatures {
     /// Queue-depth utilization of the routed target: occupancy relative

@@ -1,0 +1,305 @@
+//! Applying scripted events to a live simulation: the mutable runtime
+//! view of everything a scenario can change.
+//!
+//! [`RuntimeDynamics`] snapshots the expanded topology's per-drafter
+//! links at t=0 and owns the *current* values the simulator reads on
+//! every network and hardware-latency computation: effective link specs,
+//! per-target slowdown multipliers, and per-pool availability. Scenario
+//! events mutate this state through [`RuntimeDynamics::apply`];
+//! multipliers are always applied to the **baseline** snapshot, so
+//! repeated degrades do not compound and restores return bit-identical
+//! baseline values. Scenario-free simulations read the same state, which
+//! then equals the frozen topology exactly.
+
+use super::script::ScenarioEvent;
+use crate::config::{LinkSpec, PoolSpec, Topology};
+
+/// A pool availability transition the simulator must react to (dropping
+/// queued edge work on Down, waking drafters on Up). Link and slowdown
+/// changes need no simulator-side reaction — they are read live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolTransition {
+    /// The pool just went down (was up).
+    Down(usize),
+    /// The pool just came back (was down).
+    Up(usize),
+}
+
+/// Mutable runtime state scripted events act on.
+pub struct RuntimeDynamics {
+    /// t=0 per-drafter links (parallel to the expanded drafter list).
+    base_links: Vec<LinkSpec>,
+    /// Current effective per-drafter links.
+    links: Vec<LinkSpec>,
+    /// t=0 fallback link (synthetic drafter ids, e.g. fused-only runs).
+    base_default: LinkSpec,
+    /// Current effective fallback link.
+    default_link: LinkSpec,
+    /// Per-target hardware-latency multiplier (1.0 = baseline).
+    target_mult: Vec<f64>,
+    /// Per-drafter-pool availability.
+    pool_down: Vec<bool>,
+    /// Cumulative drafter-pool end indices (pool `p` covers
+    /// `pool_ends[p-1]..pool_ends[p]`).
+    pool_ends: Vec<usize>,
+}
+
+impl RuntimeDynamics {
+    /// Snapshot the expanded topology (plus the global default link and
+    /// the drafter pool slicing) as the t=0 baseline.
+    pub fn new(
+        topo: &Topology,
+        default_link: LinkSpec,
+        drafter_pools: &[PoolSpec],
+        n_targets: usize,
+    ) -> RuntimeDynamics {
+        let mut pool_ends = Vec::with_capacity(drafter_pools.len());
+        let mut total = 0usize;
+        for p in drafter_pools {
+            total += p.count;
+            pool_ends.push(total);
+        }
+        RuntimeDynamics {
+            base_links: topo.links.clone(),
+            links: topo.links.clone(),
+            base_default: default_link,
+            default_link,
+            target_mult: vec![1.0; n_targets],
+            pool_down: vec![false; drafter_pools.len()],
+            pool_ends,
+        }
+    }
+
+    /// Current effective link for a drafter id (the fallback default for
+    /// synthetic ids). Scenario-free this equals
+    /// [`Topology::link`](crate::config::Topology::link) bit-for-bit.
+    pub fn link(&self, drafter_id: usize) -> &LinkSpec {
+        self.links.get(drafter_id).unwrap_or(&self.default_link)
+    }
+
+    /// Current hardware-latency multiplier of one target.
+    pub fn target_mult(&self, target_id: usize) -> f64 {
+        self.target_mult.get(target_id).copied().unwrap_or(1.0)
+    }
+
+    /// Whether any target currently runs slowed down (fast path guard:
+    /// scenario-free simulations skip the multiply entirely).
+    pub fn any_target_slowdown(&self) -> bool {
+        self.target_mult.iter().any(|&m| m != 1.0)
+    }
+
+    /// Pool index of a drafter id (`None` for synthetic ids beyond the
+    /// expanded pools — those can never be "down").
+    pub fn pool_of(&self, drafter_id: usize) -> Option<usize> {
+        self.pool_ends.iter().position(|&end| drafter_id < end)
+    }
+
+    /// Whether a drafter currently belongs to a failed pool.
+    pub fn drafter_down(&self, drafter_id: usize) -> bool {
+        self.pool_of(drafter_id)
+            .map(|p| self.pool_down[p])
+            .unwrap_or(false)
+    }
+
+    /// Drafter-id range `[lo, hi)` of one pool.
+    pub fn pool_range(&self, pool: usize) -> (usize, usize) {
+        let hi = self.pool_ends[pool];
+        let lo = if pool == 0 { 0 } else { self.pool_ends[pool - 1] };
+        (lo, hi)
+    }
+
+    fn scaled(base: &LinkSpec, rtt_mult: f64, jitter_mult: f64, bandwidth_mult: f64) -> LinkSpec {
+        LinkSpec {
+            rtt_ms: base.rtt_ms * rtt_mult,
+            jitter_ms: base.jitter_ms * jitter_mult,
+            // ∞ · m = ∞ for m > 0: an unmodelled-serialization link
+            // stays unmodelled under degradation.
+            bandwidth_mbps: base.bandwidth_mbps * bandwidth_mult,
+        }
+    }
+
+    fn for_pool_links(&mut self, pool: Option<usize>, f: impl Fn(&LinkSpec) -> LinkSpec) {
+        match pool {
+            Some(p) => {
+                let (lo, hi) = self.pool_range(p);
+                for i in lo..hi {
+                    self.links[i] = f(&self.base_links[i]);
+                }
+            }
+            None => {
+                for (cur, base) in self.links.iter_mut().zip(&self.base_links) {
+                    *cur = f(base);
+                }
+                self.default_link = f(&self.base_default);
+            }
+        }
+    }
+
+    /// Apply one event. Returns the pool transition the simulator must
+    /// react to, if any; repeated Down (or Up) events on a pool already
+    /// in that state are no-ops, so reaction logic runs exactly once per
+    /// transition.
+    pub fn apply(&mut self, ev: &ScenarioEvent) -> Option<PoolTransition> {
+        match *ev {
+            ScenarioEvent::LinkDegrade { pool, rtt_mult, jitter_mult, bandwidth_mult } => {
+                self.for_pool_links(pool, |base| {
+                    Self::scaled(base, rtt_mult, jitter_mult, bandwidth_mult)
+                });
+                None
+            }
+            ScenarioEvent::LinkRestore { pool } => {
+                self.for_pool_links(pool, |base| *base);
+                None
+            }
+            ScenarioEvent::DrafterPoolDown { pool } => {
+                if self.pool_down[pool] {
+                    None
+                } else {
+                    self.pool_down[pool] = true;
+                    Some(PoolTransition::Down(pool))
+                }
+            }
+            ScenarioEvent::DrafterPoolUp { pool } => {
+                if self.pool_down[pool] {
+                    self.pool_down[pool] = false;
+                    Some(PoolTransition::Up(pool))
+                } else {
+                    None
+                }
+            }
+            ScenarioEvent::TargetSlowdown { target, mult } => {
+                match target {
+                    Some(t) => self.target_mult[t] = mult,
+                    None => self.target_mult.fill(mult),
+                }
+                None
+            }
+            // Folded into the arrival envelope at trace-generation time.
+            ScenarioEvent::RateOverride { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn two_pool_cfg() -> SimConfig {
+        SimConfig::from_yaml(
+            "\
+cluster:
+  targets:
+    - count: 2
+  drafters:
+    - count: 4
+      rtt_ms: 6
+    - count: 3
+network:
+  rtt_ms: 20
+  jitter_ms: 1
+",
+        )
+        .unwrap()
+    }
+
+    fn dynamics(cfg: &SimConfig) -> RuntimeDynamics {
+        let topo = Topology::expand(cfg).unwrap();
+        RuntimeDynamics::new(&topo, cfg.network, &cfg.drafter_pools, cfg.n_targets())
+    }
+
+    #[test]
+    fn baseline_matches_topology() {
+        let cfg = two_pool_cfg();
+        let topo = Topology::expand(&cfg).unwrap();
+        let d = dynamics(&cfg);
+        for i in 0..7 {
+            assert_eq!(d.link(i).rtt_ms, topo.link(i).rtt_ms);
+            assert_eq!(d.link(i).jitter_ms, topo.link(i).jitter_ms);
+        }
+        // Synthetic ids fall back to the global default, like Topology.
+        assert_eq!(d.link(99).rtt_ms, 20.0);
+        assert_eq!(d.target_mult(0), 1.0);
+        assert!(!d.any_target_slowdown());
+        assert!(!d.drafter_down(0));
+        assert_eq!(d.pool_of(3), Some(0));
+        assert_eq!(d.pool_of(4), Some(1));
+        assert_eq!(d.pool_of(7), None);
+        assert_eq!(d.pool_range(1), (4, 7));
+    }
+
+    #[test]
+    fn degrade_is_absolute_and_restore_returns_baseline() {
+        let cfg = two_pool_cfg();
+        let mut d = dynamics(&cfg);
+        let degrade = ScenarioEvent::LinkDegrade {
+            pool: Some(1),
+            rtt_mult: 8.0,
+            jitter_mult: 2.0,
+            bandwidth_mult: 1.0,
+        };
+        d.apply(&degrade);
+        assert_eq!(d.link(4).rtt_ms, 160.0); // pool 1 base 20 × 8
+        assert_eq!(d.link(0).rtt_ms, 6.0); // pool 0 untouched
+        // Re-applying does not compound: multipliers act on the baseline.
+        d.apply(&degrade);
+        assert_eq!(d.link(4).rtt_ms, 160.0);
+        d.apply(&ScenarioEvent::LinkRestore { pool: Some(1) });
+        assert_eq!(d.link(4).rtt_ms, 20.0);
+        assert_eq!(d.link(4).jitter_ms, 1.0);
+    }
+
+    #[test]
+    fn global_degrade_covers_default_link_and_keeps_infinite_bandwidth() {
+        let cfg = two_pool_cfg();
+        let mut d = dynamics(&cfg);
+        d.apply(&ScenarioEvent::LinkDegrade {
+            pool: None,
+            rtt_mult: 2.0,
+            jitter_mult: 0.0,
+            bandwidth_mult: 0.25,
+        });
+        assert_eq!(d.link(0).rtt_ms, 12.0);
+        assert_eq!(d.link(5).rtt_ms, 40.0);
+        assert_eq!(d.link(99).rtt_ms, 40.0); // default link scales too
+        assert_eq!(d.link(0).jitter_ms, 0.0);
+        assert!(d.link(0).bandwidth_mbps.is_infinite(), "∞ bandwidth stays ∞");
+        d.apply(&ScenarioEvent::LinkRestore { pool: None });
+        assert_eq!(d.link(99).rtt_ms, 20.0);
+    }
+
+    #[test]
+    fn pool_transitions_fire_once() {
+        let cfg = two_pool_cfg();
+        let mut d = dynamics(&cfg);
+        let down = ScenarioEvent::DrafterPoolDown { pool: 0 };
+        assert_eq!(d.apply(&down), Some(PoolTransition::Down(0)));
+        assert_eq!(d.apply(&down), None, "already down");
+        assert!(d.drafter_down(2));
+        assert!(!d.drafter_down(5));
+        let up = ScenarioEvent::DrafterPoolUp { pool: 0 };
+        assert_eq!(d.apply(&up), Some(PoolTransition::Up(0)));
+        assert_eq!(d.apply(&up), None, "already up");
+        assert!(!d.drafter_down(2));
+    }
+
+    #[test]
+    fn target_slowdown_sets_and_restores() {
+        let cfg = two_pool_cfg();
+        let mut d = dynamics(&cfg);
+        d.apply(&ScenarioEvent::TargetSlowdown { target: Some(1), mult: 3.0 });
+        assert_eq!(d.target_mult(0), 1.0);
+        assert_eq!(d.target_mult(1), 3.0);
+        assert!(d.any_target_slowdown());
+        d.apply(&ScenarioEvent::TargetSlowdown { target: None, mult: 1.0 });
+        assert!(!d.any_target_slowdown());
+    }
+
+    #[test]
+    fn rate_override_is_a_runtime_noop() {
+        let cfg = two_pool_cfg();
+        let mut d = dynamics(&cfg);
+        assert_eq!(d.apply(&ScenarioEvent::RateOverride { rate_per_s: 50.0 }), None);
+        assert_eq!(d.link(0).rtt_ms, 6.0);
+    }
+}

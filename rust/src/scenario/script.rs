@@ -1,0 +1,403 @@
+//! The scripted-event timeline: typed, validated dynamics a scenario
+//! injects into a running simulation.
+//!
+//! Events are declared in YAML (see `examples/scenarios/`) and scheduled
+//! on the simulator's [`EventQueue`](crate::sim::EventQueue) at build
+//! time as `Ev::Scenario(index)` entries; ties at one timestamp resolve
+//! in timeline order. [`ScenarioEvent::RateOverride`] is the one
+//! exception: arrivals are materialized at trace-generation time, so
+//! rate overrides fold into the arrival envelope
+//! ([`crate::scenario::ArrivalPlan`]) instead of firing at runtime.
+
+use crate::util::json::Json;
+
+/// One scripted change to the running system. All multipliers are
+/// **absolute with respect to the t=0 baseline** — applying a degrade
+/// twice does not compound, and `LinkRestore` / `mult: 1` returns the
+/// exact baseline values (bit-for-bit).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScenarioEvent {
+    /// Scale link parameters of one drafter pool (or every link plus the
+    /// fallback default link when `pool` is `None`). An infinite
+    /// baseline bandwidth stays infinite under any positive multiplier —
+    /// degrade bandwidth only on finite-bandwidth links.
+    LinkDegrade {
+        /// Drafter-pool index; `None` = global.
+        pool: Option<usize>,
+        /// RTT multiplier (≥ 0).
+        rtt_mult: f64,
+        /// Jitter multiplier (≥ 0).
+        jitter_mult: f64,
+        /// Bandwidth multiplier (> 0).
+        bandwidth_mult: f64,
+    },
+    /// Reset link parameters of a pool (or everything) to baseline.
+    LinkRestore {
+        /// Drafter-pool index; `None` = global.
+        pool: Option<usize>,
+    },
+    /// Device failure: every drafter in the pool stops serving. Queued
+    /// edge work is dropped and affected requests migrate to fused
+    /// (cloud-only) execution until the pool comes back.
+    DrafterPoolDown {
+        /// Drafter-pool index.
+        pool: usize,
+    },
+    /// Recovery: the pool's drafters resume; fused-parked requests
+    /// migrate back through the normal per-round window decision.
+    DrafterPoolUp {
+        /// Drafter-pool index.
+        pool: usize,
+    },
+    /// Co-tenant interference: scale one target's (or every target's)
+    /// hardware latency by `mult` (`mult: 1` restores baseline).
+    TargetSlowdown {
+        /// Target device id; `None` = all targets.
+        target: Option<usize>,
+        /// Latency multiplier (> 0).
+        mult: f64,
+    },
+    /// Pin the arrival envelope to a new rate from this timestamp onward
+    /// (consumed at trace-generation time, not at runtime).
+    RateOverride {
+        /// New arrival rate, requests/second (> 0).
+        rate_per_s: f64,
+    },
+}
+
+impl ScenarioEvent {
+    /// Stable kind name (YAML `kind:` values).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScenarioEvent::LinkDegrade { .. } => "link_degrade",
+            ScenarioEvent::LinkRestore { .. } => "link_restore",
+            ScenarioEvent::DrafterPoolDown { .. } => "drafter_pool_down",
+            ScenarioEvent::DrafterPoolUp { .. } => "drafter_pool_up",
+            ScenarioEvent::TargetSlowdown { .. } => "target_slowdown",
+            ScenarioEvent::RateOverride { .. } => "rate_override",
+        }
+    }
+}
+
+/// A [`ScenarioEvent`] with its firing time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimedEvent {
+    /// Simulation time the event fires, ms.
+    pub at_ms: f64,
+    /// What happens.
+    pub event: ScenarioEvent,
+}
+
+impl TimedEvent {
+    /// Parse one timeline entry. Strict: unknown keys are rejected —
+    /// most event fields are optional with no-op defaults, so a typo'd
+    /// field (`rtt_mlt: 8`) would otherwise silently neutralize the
+    /// event while the scenario still labels and cache-keys the cell.
+    pub fn from_json(j: &Json) -> Result<TimedEvent, String> {
+        let at_ms = j
+            .get("at_ms")
+            .and_then(Json::as_f64)
+            .ok_or("scenario event: missing number 'at_ms'")?;
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("scenario event: missing 'kind'")?;
+        let allowed: &[&str] = match kind {
+            "link_degrade" => &["pool", "rtt_mult", "jitter_mult", "bandwidth_mult"],
+            "link_restore" => &["pool"],
+            "drafter_pool_down" | "drafter_pool_up" => &["pool"],
+            "target_slowdown" => &["target", "mult"],
+            "rate_override" => &["rate_per_s"],
+            _ => &[], // unknown kind: rejected below with the full list
+        };
+        if let Json::Obj(pairs) = j {
+            for (k, _) in pairs {
+                if k != "at_ms" && k != "kind" && !allowed.contains(&k.as_str()) {
+                    return Err(format!(
+                        "scenario event ({kind}): unknown key '{k}' (known: at_ms, kind{})",
+                        allowed
+                            .iter()
+                            .map(|a| format!(", {a}"))
+                            .collect::<String>()
+                    ));
+                }
+            }
+        }
+        let opt_usize = |key: &str| -> Result<Option<usize>, String> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| format!("scenario event ({kind}): '{key}' must be an index")),
+            }
+        };
+        let req_usize = |key: &str| -> Result<usize, String> {
+            opt_usize(key)?
+                .ok_or_else(|| format!("scenario event ({kind}): missing index '{key}'"))
+        };
+        let num = |key: &str, default: f64| -> Result<f64, String> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("scenario event ({kind}): '{key}' must be a number")),
+            }
+        };
+        let event = match kind {
+            "link_degrade" => ScenarioEvent::LinkDegrade {
+                pool: opt_usize("pool")?,
+                rtt_mult: num("rtt_mult", 1.0)?,
+                jitter_mult: num("jitter_mult", 1.0)?,
+                bandwidth_mult: num("bandwidth_mult", 1.0)?,
+            },
+            "link_restore" => ScenarioEvent::LinkRestore { pool: opt_usize("pool")? },
+            "drafter_pool_down" => ScenarioEvent::DrafterPoolDown { pool: req_usize("pool")? },
+            "drafter_pool_up" => ScenarioEvent::DrafterPoolUp { pool: req_usize("pool")? },
+            "target_slowdown" => ScenarioEvent::TargetSlowdown {
+                target: opt_usize("target")?,
+                mult: num("mult", 1.0)?,
+            },
+            "rate_override" => ScenarioEvent::RateOverride {
+                rate_per_s: j
+                    .get("rate_per_s")
+                    .and_then(Json::as_f64)
+                    .ok_or("scenario event (rate_override): missing number 'rate_per_s'")?,
+            },
+            other => {
+                return Err(format!(
+                    "scenario event: unknown kind '{other}' (known: link_degrade, \
+                     link_restore, drafter_pool_down, drafter_pool_up, target_slowdown, \
+                     rate_override)"
+                ))
+            }
+        };
+        Ok(TimedEvent { at_ms, event })
+    }
+
+    /// Canonical JSON (fixed key order — part of the cache key).
+    pub fn to_canonical_json(&self) -> Json {
+        let j = Json::obj()
+            .with("at_ms", self.at_ms.into())
+            .with("kind", self.event.kind().into());
+        match self.event {
+            ScenarioEvent::LinkDegrade { pool, rtt_mult, jitter_mult, bandwidth_mult } => {
+                let mut j = j;
+                if let Some(p) = pool {
+                    j.set("pool", p.into());
+                }
+                j.with("rtt_mult", rtt_mult.into())
+                    .with("jitter_mult", jitter_mult.into())
+                    .with("bandwidth_mult", bandwidth_mult.into())
+            }
+            ScenarioEvent::LinkRestore { pool } => {
+                let mut j = j;
+                if let Some(p) = pool {
+                    j.set("pool", p.into());
+                }
+                j
+            }
+            ScenarioEvent::DrafterPoolDown { pool } => j.with("pool", pool.into()),
+            ScenarioEvent::DrafterPoolUp { pool } => j.with("pool", pool.into()),
+            ScenarioEvent::TargetSlowdown { target, mult } => {
+                let mut j = j;
+                if let Some(t) = target {
+                    j.set("target", t.into());
+                }
+                j.with("mult", mult.into())
+            }
+            ScenarioEvent::RateOverride { rate_per_s } => {
+                j.with("rate_per_s", rate_per_s.into())
+            }
+        }
+    }
+
+    /// Sanity checks against the deployment shape.
+    pub fn validate(&self, n_drafter_pools: usize, n_targets: usize) -> Result<(), String> {
+        if !self.at_ms.is_finite() || self.at_ms < 0.0 {
+            return Err(format!(
+                "scenario event ({}): at_ms must be finite and ≥ 0",
+                self.event.kind()
+            ));
+        }
+        let pool_ok = |p: Option<usize>| -> Result<(), String> {
+            if let Some(p) = p {
+                if p >= n_drafter_pools {
+                    return Err(format!(
+                        "scenario event ({}): pool {p} out of range ({} drafter pools)",
+                        self.event.kind(),
+                        n_drafter_pools
+                    ));
+                }
+            }
+            Ok(())
+        };
+        let mult_ok = |name: &str, x: f64, allow_zero: bool| -> Result<(), String> {
+            let lo_ok = if allow_zero { x >= 0.0 } else { x > 0.0 };
+            if !x.is_finite() || !lo_ok {
+                return Err(format!(
+                    "scenario event ({}): {name} must be finite and {}",
+                    self.event.kind(),
+                    if allow_zero { "≥ 0" } else { "> 0" }
+                ));
+            }
+            Ok(())
+        };
+        match self.event {
+            ScenarioEvent::LinkDegrade { pool, rtt_mult, jitter_mult, bandwidth_mult } => {
+                pool_ok(pool)?;
+                mult_ok("rtt_mult", rtt_mult, true)?;
+                mult_ok("jitter_mult", jitter_mult, true)?;
+                mult_ok("bandwidth_mult", bandwidth_mult, false)
+            }
+            ScenarioEvent::LinkRestore { pool } => pool_ok(pool),
+            ScenarioEvent::DrafterPoolDown { pool } | ScenarioEvent::DrafterPoolUp { pool } => {
+                pool_ok(Some(pool))
+            }
+            ScenarioEvent::TargetSlowdown { target, mult } => {
+                if let Some(t) = target {
+                    if t >= n_targets {
+                        return Err(format!(
+                            "scenario event (target_slowdown): target {t} out of range \
+                             ({n_targets} targets)"
+                        ));
+                    }
+                }
+                mult_ok("mult", mult, false)
+            }
+            ScenarioEvent::RateOverride { rate_per_s } => {
+                mult_ok("rate_per_s", rate_per_s, false)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: TimedEvent) {
+        let j = ev.to_canonical_json();
+        let back = TimedEvent::from_json(&j).unwrap();
+        assert_eq!(ev, back);
+        assert_eq!(
+            j.to_string_canonical(),
+            back.to_canonical_json().to_string_canonical()
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_all_kinds() {
+        roundtrip(TimedEvent {
+            at_ms: 1_000.0,
+            event: ScenarioEvent::LinkDegrade {
+                pool: Some(1),
+                rtt_mult: 8.0,
+                jitter_mult: 2.0,
+                bandwidth_mult: 0.25,
+            },
+        });
+        roundtrip(TimedEvent {
+            at_ms: 2_000.0,
+            event: ScenarioEvent::LinkDegrade {
+                pool: None,
+                rtt_mult: 4.0,
+                jitter_mult: 1.0,
+                bandwidth_mult: 1.0,
+            },
+        });
+        roundtrip(TimedEvent { at_ms: 3_000.0, event: ScenarioEvent::LinkRestore { pool: None } });
+        roundtrip(TimedEvent { at_ms: 0.0, event: ScenarioEvent::DrafterPoolDown { pool: 0 } });
+        roundtrip(TimedEvent { at_ms: 5.5, event: ScenarioEvent::DrafterPoolUp { pool: 2 } });
+        roundtrip(TimedEvent {
+            at_ms: 9.0,
+            event: ScenarioEvent::TargetSlowdown { target: Some(3), mult: 2.5 },
+        });
+        roundtrip(TimedEvent {
+            at_ms: 10.0,
+            event: ScenarioEvent::RateOverride { rate_per_s: 33.0 },
+        });
+    }
+
+    #[test]
+    fn degrade_multipliers_default_to_one() {
+        let j = Json::obj()
+            .with("at_ms", 100.0.into())
+            .with("kind", "link_degrade".into())
+            .with("rtt_mult", 6.0.into());
+        let ev = TimedEvent::from_json(&j).unwrap();
+        assert_eq!(
+            ev.event,
+            ScenarioEvent::LinkDegrade {
+                pool: None,
+                rtt_mult: 6.0,
+                jitter_mult: 1.0,
+                bandwidth_mult: 1.0,
+            }
+        );
+    }
+
+    #[test]
+    fn unknown_kind_and_missing_fields_rejected() {
+        let bad = Json::obj().with("at_ms", 1.0.into()).with("kind", "explode".into());
+        assert!(TimedEvent::from_json(&bad).unwrap_err().contains("unknown kind"));
+        let no_pool = Json::obj()
+            .with("at_ms", 1.0.into())
+            .with("kind", "drafter_pool_down".into());
+        assert!(TimedEvent::from_json(&no_pool).unwrap_err().contains("pool"));
+        let no_at = Json::obj().with("kind", "link_restore".into());
+        assert!(TimedEvent::from_json(&no_at).unwrap_err().contains("at_ms"));
+    }
+
+    #[test]
+    fn typoed_optional_fields_rejected_not_defaulted() {
+        // `rtt_mlt` must not silently parse as a no-op degrade.
+        let typo = Json::obj()
+            .with("at_ms", 1.0.into())
+            .with("kind", "link_degrade".into())
+            .with("rtt_mlt", 8.0.into());
+        let err = TimedEvent::from_json(&typo).unwrap_err();
+        assert!(err.contains("unknown key 'rtt_mlt'"), "{err}");
+        // Fields of *other* kinds are unknown here too.
+        let wrong_kind = Json::obj()
+            .with("at_ms", 1.0.into())
+            .with("kind", "target_slowdown".into())
+            .with("pool", 0.into());
+        assert!(TimedEvent::from_json(&wrong_kind).unwrap_err().contains("unknown key"));
+    }
+
+    #[test]
+    fn validation_checks_ranges() {
+        let ev = |event| TimedEvent { at_ms: 10.0, event };
+        assert!(ev(ScenarioEvent::DrafterPoolDown { pool: 2 }).validate(2, 4).is_err());
+        assert!(ev(ScenarioEvent::DrafterPoolDown { pool: 1 }).validate(2, 4).is_ok());
+        assert!(ev(ScenarioEvent::TargetSlowdown { target: Some(4), mult: 2.0 })
+            .validate(2, 4)
+            .is_err());
+        assert!(ev(ScenarioEvent::TargetSlowdown { target: None, mult: 0.0 })
+            .validate(2, 4)
+            .is_err());
+        assert!(ev(ScenarioEvent::LinkDegrade {
+            pool: None,
+            rtt_mult: f64::NAN,
+            jitter_mult: 1.0,
+            bandwidth_mult: 1.0,
+        })
+        .validate(2, 4)
+        .is_err());
+        assert!(ev(ScenarioEvent::LinkDegrade {
+            pool: None,
+            rtt_mult: 0.0, // zero RTT is allowed (ideal link)
+            jitter_mult: 0.0,
+            bandwidth_mult: 0.5,
+        })
+        .validate(2, 4)
+        .is_ok());
+        assert!(ev(ScenarioEvent::RateOverride { rate_per_s: -1.0 }).validate(2, 4).is_err());
+        let past = TimedEvent {
+            at_ms: -1.0,
+            event: ScenarioEvent::LinkRestore { pool: None },
+        };
+        assert!(past.validate(2, 4).is_err());
+    }
+}

@@ -12,6 +12,14 @@
 //! [`Predictor`] hardware model, the workload [`Trace`], and the three
 //! policy families. All randomness forks from the config seed; repeated
 //! runs are bit-identical (single event heap ordered by `(time, seq)`).
+//!
+//! Scripted dynamics ([`crate::scenario`]) ride the same event queue:
+//! timeline entries schedule as `Ev::Scenario` events and mutate the
+//! [`RuntimeDynamics`] state (live links, target slowdown multipliers,
+//! pool availability) that every network and hardware-latency
+//! computation reads. Without a scenario that state equals the frozen
+//! topology, and the simulation is bit-identical to the pre-scenario
+//! engine.
 
 use crate::config::{SimConfig, Topology, WindowKind};
 use crate::hwmodel::{Hardware, Predictor};
@@ -24,6 +32,7 @@ use crate::policies::{
     make_batching, make_routing, make_window, BatchingPolicy, QueuedRequest, RoutingPolicy,
     TargetSnapshot, WindowFeatures, WindowPolicy,
 };
+use crate::scenario::{ArrivalPlan, PoolTransition, RuntimeDynamics, ScenarioEvent, TimedEvent};
 use crate::sim::engine::EventQueue;
 use crate::specdec::SpeculationState;
 use crate::trace::{dataset_by_name, Trace};
@@ -70,6 +79,9 @@ enum Ev {
     PrefillNotify(usize),
     /// Migration: request switches fused→distributed (back at drafter).
     MigrateToEdge(usize),
+    /// A scripted scenario event fires (index into the scenario
+    /// timeline; see [`crate::scenario`]).
+    Scenario(usize),
 }
 
 /// Drafter-side work items.
@@ -92,6 +104,12 @@ struct Request {
     spec: SpeculationState,
     mode: ExecMode,
     edge_prefill_done: bool,
+    /// `edge_prefill_done` was faked by a drafter-pool failure (the
+    /// prefill never ran, or its KV died with the device). Fused
+    /// execution doesn't need it; if the pool recovers before the
+    /// request ever starts a round, the prefill is re-queued so
+    /// post-recovery distributed execution pays the real cost.
+    edge_prefill_lost: bool,
     target_prefill_seen: bool,
     ttft_ms: Option<f64>,
     completed_ms: Option<f64>,
@@ -167,9 +185,17 @@ impl Simulator {
             None => {
                 let ds = dataset_by_name(&cfg.workload.dataset)
                     .ok_or_else(|| format!("unknown dataset '{}'", cfg.workload.dataset))?;
-                ds.generate(
+                // The scenario's arrival process (with rate overrides
+                // folded into the envelope) replaces the stationary
+                // stream; a constant plan reproduces the legacy draw
+                // sequence bit for bit.
+                let plan = match &cfg.scenario {
+                    Some(s) => s.plan(cfg.workload.rate_per_s),
+                    None => ArrivalPlan::constant(cfg.workload.rate_per_s),
+                };
+                ds.generate_plan(
                     cfg.workload.requests,
-                    cfg.workload.rate_per_s,
+                    &plan,
                     topo.drafters.len().max(1),
                     cfg.seed,
                 )
@@ -284,6 +310,12 @@ struct SimState<S: MetricsSink> {
     completed: usize,
     completed_tokens: u64,
     fused_only: bool,
+    /// Live (scenario-mutable) view of links, target slowdowns, and
+    /// pool availability. Scenario-free it equals the frozen topology
+    /// bit for bit.
+    dynamics: RuntimeDynamics,
+    /// The scenario timeline; `Ev::Scenario(i)` indexes into it.
+    scenario_events: Vec<TimedEvent>,
     wall_start: std::time::Instant,
     feat_sum: [f64; 5],
     feat_n: u64,
@@ -320,6 +352,7 @@ impl<S: MetricsSink> SimState<S> {
                 spec: SpeculationState::new(r.output_length.max(1)),
                 mode: ExecMode::Distributed,
                 edge_prefill_done: false,
+                edge_prefill_lost: false,
                 target_prefill_seen: false,
                 ttft_ms: None,
                 completed_ms: None,
@@ -354,6 +387,21 @@ impl<S: MetricsSink> SimState<S> {
         for r in &requests {
             q.schedule(r.arrival_ms, Ev::Arrival(r.id));
         }
+        let dynamics =
+            RuntimeDynamics::new(&topo, cfg.network, &cfg.drafter_pools, n_targets);
+        let scenario_events: Vec<TimedEvent> = cfg
+            .scenario
+            .as_ref()
+            .map(|s| s.events.clone())
+            .unwrap_or_default();
+        for (i, ev) in scenario_events.iter().enumerate() {
+            // Rate overrides were already folded into the arrival
+            // envelope at trace-generation time; everything else fires
+            // at runtime.
+            if !matches!(ev.event, ScenarioEvent::RateOverride { .. }) {
+                q.schedule(ev.at_ms, Ev::Scenario(i));
+            }
+        }
         let fused_only = matches!(cfg.window, WindowKind::FusedOnly);
         let seed = cfg.seed;
         let keep_gammas = sink.keep_gamma_history();
@@ -377,6 +425,8 @@ impl<S: MetricsSink> SimState<S> {
             completed: 0,
             completed_tokens: 0,
             fused_only,
+            dynamics,
+            scenario_events,
             wall_start: std::time::Instant::now(),
             feat_sum: [0.0; 5],
             feat_n: 0,
@@ -398,11 +448,12 @@ impl<S: MetricsSink> SimState<S> {
     /// `RTT/2 + |N(0, jitter)| + payload_bits / bandwidth`.
     ///
     /// Links are per drafter (heterogeneous edge networks come from
-    /// per-pool overrides); the serialization term vanishes on the
-    /// default infinite-bandwidth link, matching the legacy model
-    /// bit-for-bit.
+    /// per-pool overrides) and read from the *live* [`RuntimeDynamics`]
+    /// state, so scripted degradations take effect mid-run; the
+    /// serialization term vanishes on the default infinite-bandwidth
+    /// link, matching the legacy model bit-for-bit.
     fn link_delay(&mut self, drafter_id: usize, payload_bytes: f64) -> f64 {
-        let l = *self.topo.link(drafter_id);
+        let l = *self.dynamics.link(drafter_id);
         let ser = if l.bandwidth_mbps.is_finite() {
             // Mbit/s = 1000 bits/ms.
             payload_bytes * 8.0 / (l.bandwidth_mbps * 1000.0)
@@ -452,6 +503,83 @@ impl<S: MetricsSink> SimState<S> {
                     self.start_round(now, rid);
                 }
             }
+            Ev::Scenario(idx) => self.on_scenario(now, idx),
+        }
+    }
+
+    // ---- Scripted dynamics ----
+    /// Apply one timeline event to the runtime state and react to pool
+    /// availability transitions: a pool going down drops its queued edge
+    /// work and migrates the affected requests to fused (cloud-only)
+    /// execution; a pool coming back wakes its drafters, and parked
+    /// requests migrate back through the normal per-round window
+    /// decision.
+    fn on_scenario(&mut self, now: f64, idx: usize) {
+        let ev = self.scenario_events[idx].event;
+        match self.dynamics.apply(&ev) {
+            Some(PoolTransition::Down(pool)) => {
+                let (lo, hi) = self.dynamics.pool_range(pool);
+                let mut orphaned: Vec<(usize, bool)> = Vec::new();
+                for did in lo..hi {
+                    for task in std::mem::take(&mut self.drafters[did].tasks) {
+                        match task {
+                            DrafterTask::Prefill(rid) => orphaned.push((rid, false)),
+                            DrafterTask::Draft { req, .. } => orphaned.push((req, true)),
+                        }
+                    }
+                }
+                for (rid, was_draft) in orphaned {
+                    if self.requests[rid].completed_ms.is_some() {
+                        continue;
+                    }
+                    if was_draft {
+                        // The draft never ran; re-home to the target.
+                        // `start_round` sees the dead drafter and forces
+                        // fused execution.
+                        self.start_round(now, rid);
+                    } else {
+                        // The edge prefill is lost; mark it done so the
+                        // request proceeds (fused needs no edge KV) and
+                        // kick the round if the target side is ready.
+                        self.requests[rid].edge_prefill_done = true;
+                        self.requests[rid].edge_prefill_lost = true;
+                        if self.requests[rid].target_prefill_seen {
+                            self.start_round(now, rid);
+                        }
+                    }
+                }
+            }
+            Some(PoolTransition::Up(pool)) => {
+                let (lo, hi) = self.dynamics.pool_range(pool);
+                // Requests that lost their edge prefill to the failure
+                // and never started a round (still Distributed: their
+                // target prefill hasn't landed, or they'd have been
+                // force-parked in fused) re-run the prefill on the
+                // recovered device — post-recovery speculation must pay
+                // the real prefill cost. Fused-parked requests keep the
+                // established migration shortcut: like the pre-scenario
+                // fused→distributed path, migrating back re-drafts
+                // without a re-modeled edge prefill.
+                for rid in 0..self.requests.len() {
+                    let r = &mut self.requests[rid];
+                    if !r.edge_prefill_lost
+                        || r.completed_ms.is_some()
+                        || !(lo..hi).contains(&r.drafter)
+                    {
+                        continue;
+                    }
+                    r.edge_prefill_lost = false;
+                    if r.mode == ExecMode::Distributed {
+                        r.edge_prefill_done = false;
+                        let did = r.drafter;
+                        self.drafters[did].tasks.push_back(DrafterTask::Prefill(rid));
+                    }
+                }
+                for did in lo..hi {
+                    self.q.schedule_in(0.0, Ev::DrafterFree(did));
+                }
+            }
+            None => {}
         }
     }
 
@@ -479,6 +607,13 @@ impl<S: MetricsSink> SimState<S> {
         if self.fused_only {
             self.requests[rid].edge_prefill_done = true;
             self.requests[rid].mode = ExecMode::Fused;
+        } else if self.dynamics.drafter_down(did) {
+            // The request's home drafter is in a failed pool: skip the
+            // edge prefill (there is no device to run it); once the
+            // target prefill lands, `start_round` re-homes the request
+            // to fused execution until the pool recovers.
+            self.requests[rid].edge_prefill_done = true;
+            self.requests[rid].edge_prefill_lost = true;
         } else {
             // Edge prefill queued at the drafter.
             let did = self.requests[rid].drafter;
@@ -490,7 +625,7 @@ impl<S: MetricsSink> SimState<S> {
 
     // ---- Drafter servicing ----
     fn on_drafter_free(&mut self, did: usize) {
-        if self.drafters[did].busy {
+        if self.drafters[did].busy || self.dynamics.drafter_down(did) {
             return;
         }
         let Some(task) = self.drafters[did].tasks.pop_front() else {
@@ -520,6 +655,26 @@ impl<S: MetricsSink> SimState<S> {
     fn on_drafter_task_done(&mut self, now: f64, rid: usize, gamma: u32) {
         let did = self.requests[rid].drafter;
         self.drafters[did].busy = false;
+        if self.dynamics.drafter_down(did) {
+            // The device failed while this task ran: its output is lost
+            // and it takes no further work. A finished draft re-homes
+            // the request to fused execution; a finished edge prefill
+            // just unblocks the round (which will also land fused).
+            if self.requests[rid].completed_ms.is_none() {
+                if gamma == 0 {
+                    // The prefill finished but its KV died with the
+                    // device.
+                    self.requests[rid].edge_prefill_done = true;
+                    self.requests[rid].edge_prefill_lost = true;
+                    if self.requests[rid].target_prefill_seen {
+                        self.start_round(now, rid);
+                    }
+                } else {
+                    self.start_round(now, rid);
+                }
+            }
+            return;
+        }
         self.q.schedule_in(0.0, Ev::DrafterFree(did));
         if gamma == 0 {
             // Edge prefill complete.
@@ -538,6 +693,20 @@ impl<S: MetricsSink> SimState<S> {
 
     // ---- Speculation stage: window decision + drafting/migration ----
     fn start_round(&mut self, _now: f64, rid: usize) {
+        // Device failure overrides the window policy: with no live
+        // drafter the only executable mode is fused. The policy is not
+        // consulted (and no feature vector is recorded) — this is a
+        // coordinator decision, not a learned one.
+        let did = self.requests[rid].drafter;
+        if self.dynamics.drafter_down(did) {
+            let r = &mut self.requests[rid];
+            r.mode = ExecMode::Fused;
+            let tid = r.target;
+            let d = self.link_delay(did, CTRL_BYTES);
+            self.targets[tid].fused_resident.push_back(rid);
+            self.q.schedule_in(d, Ev::TargetKick(tid));
+            return;
+        }
         let feats = self.features(rid);
         self.record_features(&feats);
         let key = self.requests[rid].pair_key();
@@ -589,7 +758,12 @@ impl<S: MetricsSink> SimState<S> {
             } else {
                 0.75
             },
-            rtt_recent_ms: r.rtt_ema.value_or(self.topo.link(r.drafter).rtt_ms),
+            // The cold-start fallback reads the *live* link, not the
+            // frozen t=0 topology: under scripted link changes the
+            // window policy must see current conditions even before the
+            // first measured round trip (after that the EMA feedback
+            // path tracks reality on its own).
+            rtt_recent_ms: r.rtt_ema.value_or(self.dynamics.link(r.drafter).rtt_ms),
             tpot_recent_ms: t.tpot_ema.value_or(0.0),
             gamma_prev: r.gamma_prev,
         }
@@ -730,11 +904,13 @@ impl<S: MetricsSink> SimState<S> {
 
     /// Batch duration with padding: batch cost is governed by the
     /// *maximum* member length (shorter members pay padding) — this is
-    /// the overhead LAB reduces.
+    /// the overhead LAB reduces. Scripted `TargetSlowdown` events scale
+    /// the result (co-tenant interference); the multiply is skipped
+    /// entirely at baseline so scenario-free runs stay bit-identical.
     fn op_duration(&self, tid: usize, op: &TargetOp) -> f64 {
         let dev = self.topo.target(tid);
         let hw = Hardware { gpu: dev.gpu, tp: dev.tp_degree };
-        match op {
+        let base = match op {
             TargetOp::Prefill(ids) => {
                 let maxlen = ids
                     .iter()
@@ -767,6 +943,12 @@ impl<S: MetricsSink> SimState<S> {
                 self.predictor
                     .decode_ms(dev.model, hw, ids.len() as u32, max_ctx)
             }
+        };
+        let mult = self.dynamics.target_mult(tid);
+        if mult != 1.0 {
+            base * mult
+        } else {
+            base
         }
     }
 
@@ -835,9 +1017,14 @@ impl<S: MetricsSink> SimState<S> {
                     if self.requests[rid].spec.done() {
                         self.complete(now, rid);
                         self.targets[tid].fused_resident.retain(|&x| x != rid);
-                    } else if !self.fused_only {
+                    } else if !self.fused_only
+                        && !self.dynamics.drafter_down(self.requests[rid].drafter)
+                    {
                         // Re-evaluate mode each fused round (hysteresis in
-                        // the policy makes this cheap and stable).
+                        // the policy makes this cheap and stable). While
+                        // the request's drafter pool is down there is
+                        // nothing to migrate back to, so re-evaluation
+                        // waits for recovery.
                         let feats = self.features(rid);
                         self.record_features(&feats);
                         let key = self.requests[rid].pair_key();

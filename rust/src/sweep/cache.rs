@@ -18,6 +18,13 @@
 //! into the key, so bumping the tag orphans every older entry (see
 //! `CACHE.md` at the repository root). Corrupt or truncated cell files
 //! are detected on load and fall back to re-execution with a warning.
+//!
+//! Failed cells persist too, as retry-counted markers
+//! ([`CellCache::store_failure`]): a failing cell re-executes on each
+//! resume until [`MAX_FAILED_ATTEMPTS`] executions have failed, after
+//! which the stored error is surfaced directly — a permanently broken
+//! cell stops burning simulator time, and the error survives the
+//! process that produced it.
 
 use super::runner::CellMetrics;
 use crate::config::SimConfig;
@@ -30,6 +37,13 @@ use std::path::{Path, PathBuf};
 /// golden-report snapshot drifting is the usual signal), so stale cached
 /// cells can never be spliced into new summaries.
 pub const SIM_VERSION_TAG: &str = "dsd-sim-1";
+
+/// Bounded retry policy for cached failures: a cell that keeps failing
+/// re-executes on each resume until its persisted attempt count reaches
+/// this bound; after that the stored error is surfaced without
+/// re-entering the simulator (no more re-executing forever — and no
+/// silent infinite retry loops on permanently broken cells).
+pub const MAX_FAILED_ATTEMPTS: u32 = 3;
 
 /// Content key of one sweep cell: canonical JSON of the resolved config
 /// plus metric mode plus [`SIM_VERSION_TAG`], hashed to 32 hex chars.
@@ -48,6 +62,16 @@ pub enum CacheLookup {
     Hit(CellMetrics),
     /// No entry on disk.
     Miss,
+    /// A persisted failure marker: the cell errored `attempts` times.
+    /// Below [`MAX_FAILED_ATTEMPTS`] the cell retries (incrementing the
+    /// count on another failure); at or above it the stored error is
+    /// surfaced without re-execution.
+    Failed {
+        /// The last execution's error message.
+        error: String,
+        /// How many executions have failed so far.
+        attempts: u32,
+    },
     /// An entry exists but is unreadable / truncated / inconsistent;
     /// the cell must re-execute (and the reason is worth a warning).
     Corrupt(String),
@@ -142,6 +166,21 @@ impl CellCache {
             // the hash), but a defense against hand-edited entries.
             return CacheLookup::Corrupt(format!("{}: version mismatch", path.display()));
         }
+        if let Some(f) = doc.get("failed") {
+            let (error, attempts) = match (
+                f.get("error").and_then(Json::as_str),
+                f.get("attempts").and_then(Json::as_u64),
+            ) {
+                (Some(e), Some(a)) => (e.to_string(), a as u32),
+                _ => {
+                    return CacheLookup::Corrupt(format!(
+                        "{}: bad failure record",
+                        path.display()
+                    ))
+                }
+            };
+            return CacheLookup::Failed { error, attempts };
+        }
         match doc.get("metrics").and_then(CellMetrics::from_json) {
             Some(m) => CacheLookup::Hit(m),
             None => CacheLookup::Corrupt(format!("{}: bad metrics record", path.display())),
@@ -150,22 +189,49 @@ impl CellCache {
 
     /// Persist a finished cell. Written atomically (tmp file + rename)
     /// so a kill mid-write leaves no half-entry behind under `key`.
-    /// Only successful cells are stored: errors re-execute on resume.
     pub fn store(
         &self,
         key: &str,
         labels: &[(String, String)],
         metrics: &CellMetrics,
     ) -> Result<(), String> {
+        let doc = Self::entry_doc(key, labels).with("metrics", metrics.to_json());
+        self.write_atomic(key, doc)
+    }
+
+    /// Persist a *failed* cell as a retry-counted failure marker
+    /// (`{"failed": {"error", "attempts"}}`). Overwrites any previous
+    /// marker under the key, so the attempt count advances monotonically
+    /// across resumes; a later success simply overwrites the marker with
+    /// real metrics.
+    pub fn store_failure(
+        &self,
+        key: &str,
+        labels: &[(String, String)],
+        error: &str,
+        attempts: u32,
+    ) -> Result<(), String> {
+        let doc = Self::entry_doc(key, labels).with(
+            "failed",
+            Json::obj()
+                .with("error", error.into())
+                .with("attempts", attempts.into()),
+        );
+        self.write_atomic(key, doc)
+    }
+
+    fn entry_doc(key: &str, labels: &[(String, String)]) -> Json {
         let mut label_obj = Json::obj();
         for (k, v) in labels {
             label_obj.set(k, v.as_str().into());
         }
-        let doc = Json::obj()
+        Json::obj()
             .with("key", key.into())
             .with("version", SIM_VERSION_TAG.into())
             .with("labels", label_obj)
-            .with("metrics", metrics.to_json());
+    }
+
+    fn write_atomic(&self, key: &str, doc: Json) -> Result<(), String> {
         let path = self.path_for(key);
         // Unique tmp name per write: a grid with duplicate cells (e.g. a
         // repeated seed) can store the same key from two workers at
@@ -213,7 +279,9 @@ impl CellCache {
                 false // stale atomic-write temp from a killed run
             } else if let Some(key) = name.strip_suffix(".json") {
                 match self.load(key) {
-                    CacheLookup::Hit(_) => {
+                    // Failure markers are valid entries too: pruning one
+                    // would reset its retry budget.
+                    CacheLookup::Hit(_) | CacheLookup::Failed { .. } => {
                         valid_keys.is_none_or(|ks| ks.contains(key))
                     }
                     // Unreadable under the current binary: version
@@ -414,6 +482,7 @@ mod tests {
             sim_duration_ms: 1500.0,
             events_processed: 999,
             mean_features: [0.25, 0.8, 10.0, 25.0, 4.0],
+            time_series: None,
         };
         let labels = vec![("rtt_ms".to_string(), "10".to_string())];
         cache.store(&key, &labels, &m).unwrap();
@@ -449,6 +518,76 @@ mod tests {
     }
 
     #[test]
+    fn failure_markers_roundtrip_and_count_attempts() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-cellcache-fail-unit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let key = cell_key(&base_cfg(), false);
+        cache.store_failure(&key, &[], "unknown dataset 'nope'", 1).unwrap();
+        match cache.load(&key) {
+            CacheLookup::Failed { error, attempts } => {
+                assert_eq!(error, "unknown dataset 'nope'");
+                assert_eq!(attempts, 1);
+            }
+            other => panic!("expected failure marker, got {other:?}"),
+        }
+        // Overwriting advances the attempt count.
+        cache.store_failure(&key, &[], "unknown dataset 'nope'", 2).unwrap();
+        assert!(matches!(cache.load(&key), CacheLookup::Failed { attempts: 2, .. }));
+        // A later success replaces the marker entirely.
+        let m = CellMetrics {
+            completed: 1,
+            throughput_rps: 1.0,
+            token_throughput: 1.0,
+            target_utilization: 0.1,
+            mean_ttft_ms: 1.0,
+            p99_ttft_ms: 1.0,
+            mean_tpot_ms: 1.0,
+            p99_tpot_ms: 1.0,
+            mean_e2e_ms: 1.0,
+            mean_acceptance: 0.5,
+            mean_queue_delay_ms: 0.0,
+            mean_net_delay_ms: 0.0,
+            sim_duration_ms: 1.0,
+            events_processed: 1,
+            mean_features: [0.0; 5],
+            time_series: None,
+        };
+        cache.store(&key, &[], &m).unwrap();
+        assert!(matches!(cache.load(&key), CacheLookup::Hit(_)));
+        // A malformed failure record is Corrupt, never a bogus Failed.
+        cache.store_failure(&key, &[], "x", 1).unwrap();
+        let text = std::fs::read_to_string(cache.path_for(&key)).unwrap();
+        std::fs::write(cache.path_for(&key), text.replace("\"attempts\"", "\"atempts\""))
+            .unwrap();
+        assert!(matches!(cache.load(&key), CacheLookup::Corrupt(_)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_keeps_failure_markers_in_grid() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-cellcache-gc-fail-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let key = cell_key(&base_cfg(), false);
+        cache.store_failure(&key, &[], "boom", 2).unwrap();
+        let stats = cache.gc(None);
+        assert_eq!(stats, GcStats { kept: 1, pruned: 0, failed: 0 });
+        assert!(matches!(cache.load(&key), CacheLookup::Failed { attempts: 2, .. }));
+        // Out-of-grid failure markers prune like any other entry.
+        let none: std::collections::HashSet<String> = std::collections::HashSet::new();
+        let stats = cache.gc(Some(&none));
+        assert_eq!(stats, GcStats { kept: 0, pruned: 1, failed: 0 });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn gc_prunes_unreadable_and_out_of_grid_entries() {
         let dir = std::env::temp_dir().join(format!(
             "dsd-cellcache-gc-unit-{}",
@@ -473,6 +612,7 @@ mod tests {
             sim_duration_ms: 100.0,
             events_processed: 42,
             mean_features: [0.1, 0.2, 0.3, 0.4, 0.5],
+            time_series: None,
         };
         cache.store(&key, &[], &m).unwrap();
         // Orphans: wrong-name copy, old version tag, stale tmp file, and

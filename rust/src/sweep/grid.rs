@@ -2,17 +2,19 @@
 //! swept axis, expanded into the cross product of concrete cell configs.
 //!
 //! Axes (all optional; an absent axis pins the base value):
-//! RTT, jitter, arrival rate, dataset, routing / batching / window
-//! policy, cluster scale (target and drafter counts), and seed.
+//! scenario (scripted dynamics), RTT, jitter, arrival rate, dataset,
+//! routing / batching / window policy, cluster scale (target and
+//! drafter counts), and seed.
 //!
 //! Expansion order is fixed and documented — outermost to innermost:
-//! `dataset → routing → batching → window → targets → drafters → rtt →
-//! jitter → rate → seed` — so cell indices are stable and seed replicas
-//! of one configuration are adjacent.
+//! `scenario → dataset → routing → batching → window → targets →
+//! drafters → rtt → jitter → rate → seed` — so cell indices are stable
+//! and seed replicas of one configuration are adjacent.
 
 use crate::config::{
     parse_batching, parse_routing, BatchingKind, RoutingKind, SimConfig, WindowKind,
 };
+use crate::scenario::Scenario;
 use crate::util::json::Json;
 use crate::util::yaml;
 
@@ -113,6 +115,10 @@ pub fn filter_cells(
 pub struct SweepGrid {
     /// Defaults for every knob the axes do not touch.
     pub base: SimConfig,
+    /// Scenario axis (scripted dynamics; `None` = static simulation).
+    /// In grid YAML the entries are scenario file paths or the literal
+    /// `none`; cells are labeled by scenario name.
+    pub scenarios: Vec<Option<Scenario>>,
     /// Edge–cloud RTT axis, ms.
     pub rtt_ms: Vec<f64>,
     /// Jitter axis, ms.
@@ -141,6 +147,7 @@ impl SweepGrid {
     /// Grid with every axis pinned to the base config's value.
     pub fn new(base: SimConfig) -> SweepGrid {
         SweepGrid {
+            scenarios: vec![base.scenario.clone()],
             rtt_ms: vec![base.network.rtt_ms],
             jitter_ms: vec![base.network.jitter_ms],
             rate_per_s: vec![base.workload.rate_per_s],
@@ -158,7 +165,8 @@ impl SweepGrid {
 
     /// Number of cells the grid expands to.
     pub fn n_cells(&self) -> usize {
-        self.datasets.len()
+        self.scenarios.len()
+            * self.datasets.len()
             * self.routing.len()
             * self.batching.len()
             * self.windows.len()
@@ -215,8 +223,8 @@ impl SweepGrid {
             return Ok(grid);
         };
         const KNOWN: &[&str] = &[
-            "rtt_ms", "jitter_ms", "rate_per_s", "dataset", "routing", "batching",
-            "window", "targets", "drafters", "seeds",
+            "scenario", "rtt_ms", "jitter_ms", "rate_per_s", "dataset", "routing",
+            "batching", "window", "targets", "drafters", "seeds",
         ];
         if let Json::Obj(pairs) = sweep {
             for (k, _) in pairs {
@@ -229,6 +237,18 @@ impl SweepGrid {
             }
         } else {
             return Err("sweep: expected a mapping of axes".into());
+        }
+        if let Some(v) = sweep.get("scenario") {
+            grid.scenarios = str_axis("scenario", v)?
+                .iter()
+                .map(|s| {
+                    if s.as_str() == "none" {
+                        Ok(None)
+                    } else {
+                        Scenario::from_yaml_file(s).map(Some)
+                    }
+                })
+                .collect::<Result<_, String>>()?;
         }
         if let Some(v) = sweep.get("rtt_ms") {
             grid.rtt_ms = f64_axis("rtt_ms", v)?;
@@ -284,30 +304,37 @@ impl SweepGrid {
             return Err("sweep: a swept axis is empty".into());
         }
         let mut cells = Vec::with_capacity(self.n_cells());
-        for ds in &self.datasets {
-            for &routing in &self.routing {
-                for &batching in &self.batching {
-                    for window in &self.windows {
-                        for &n_targets in &self.targets {
-                            for &n_drafters in &self.drafters {
-                                for &rtt in &self.rtt_ms {
-                                    for &jitter in &self.jitter_ms {
-                                        for &rate in &self.rate_per_s {
-                                            for &seed in &self.seeds {
-                                                let cfg = self.cell_config(
-                                                    ds, routing, batching, window,
-                                                    n_targets, n_drafters, rtt, jitter,
-                                                    rate, seed,
-                                                )?;
-                                                cells.push(SweepCell {
-                                                    index: cells.len(),
-                                                    labels: labels_for(
+        for scenario in &self.scenarios {
+            for ds in &self.datasets {
+                for &routing in &self.routing {
+                    for &batching in &self.batching {
+                        for window in &self.windows {
+                            for &n_targets in &self.targets {
+                                for &n_drafters in &self.drafters {
+                                    for &rtt in &self.rtt_ms {
+                                        for &jitter in &self.jitter_ms {
+                                            for &rate in &self.rate_per_s {
+                                                for &seed in &self.seeds {
+                                                    let cfg = self.cell_config(
+                                                        scenario, ds, routing, batching,
+                                                        window, n_targets, n_drafters,
+                                                        rtt, jitter, rate, seed,
+                                                    )?;
+                                                    let mut labels = vec![(
+                                                        "scenario".to_string(),
+                                                        scenario_label(scenario),
+                                                    )];
+                                                    labels.extend(labels_for(
                                                         ds, routing, batching, window,
                                                         n_targets, n_drafters, rtt,
                                                         jitter, rate, seed,
-                                                    ),
-                                                    cfg,
-                                                });
+                                                    ));
+                                                    cells.push(SweepCell {
+                                                        index: cells.len(),
+                                                        labels,
+                                                        cfg,
+                                                    });
+                                                }
                                             }
                                         }
                                     }
@@ -324,6 +351,7 @@ impl SweepGrid {
     #[allow(clippy::too_many_arguments)]
     fn cell_config(
         &self,
+        scenario: &Option<Scenario>,
         dataset: &str,
         routing: RoutingKind,
         batching: BatchingKind,
@@ -336,6 +364,7 @@ impl SweepGrid {
         seed: u64,
     ) -> Result<SimConfig, String> {
         let mut cfg = self.base.clone();
+        cfg.scenario = scenario.clone();
         cfg.seed = seed;
         cfg.workload.dataset = dataset.to_string();
         cfg.workload.rate_per_s = rate;
@@ -348,6 +377,14 @@ impl SweepGrid {
         scale_pools(&mut cfg.drafter_pools, n_drafters, "drafters")?;
         cfg.validate()?;
         Ok(cfg)
+    }
+}
+
+/// Stable label for a scenario axis entry.
+pub fn scenario_label(s: &Option<Scenario>) -> String {
+    match s {
+        Some(s) => s.name.clone(),
+        None => "none".into(),
     }
 }
 
@@ -644,6 +681,73 @@ streaming: true
         // No match.
         let err = filter_cells(cells, &parse_filter("rtt_ms=999").unwrap()).unwrap_err();
         assert!(err.contains("no cells match"), "{err}");
+    }
+
+    #[test]
+    fn scenario_axis_expands_outermost_and_labels_cells() {
+        use crate::scenario::{Scenario, ScenarioEvent, TimedEvent};
+        let mut grid = SweepGrid::new(SimConfig::builder().requests(8).build());
+        grid.seeds = vec![1, 2];
+        grid.scenarios = vec![
+            None,
+            Some(Scenario {
+                name: "flap".into(),
+                arrivals: None,
+                events: vec![TimedEvent {
+                    at_ms: 100.0,
+                    event: ScenarioEvent::LinkDegrade {
+                        pool: None,
+                        rtt_mult: 4.0,
+                        jitter_mult: 1.0,
+                        bandwidth_mult: 1.0,
+                    },
+                }],
+            }),
+        ];
+        assert_eq!(grid.n_cells(), 4);
+        let cells = grid.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        // Scenario is the outermost axis: seeds iterate inside it.
+        assert_eq!(cells[0].label("scenario"), Some("none"));
+        assert_eq!(cells[1].label("scenario"), Some("none"));
+        assert_eq!(cells[2].label("scenario"), Some("flap"));
+        assert_eq!(cells[3].label("scenario"), Some("flap"));
+        assert!(cells[0].cfg.scenario.is_none());
+        assert_eq!(cells[2].cfg.scenario.as_ref().unwrap().name, "flap");
+        assert_eq!(cells[2].cfg.seed, 1);
+        // The scenario axis filters like any other.
+        let kept = filter_cells(cells, &parse_filter("scenario=flap").unwrap()).unwrap();
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn scenario_axis_from_yaml_loads_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-grid-scn-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("burst.yaml");
+        std::fs::write(
+            &path,
+            "arrivals:\n  kind: mmpp\n  rate_lo_per_s: 10\n  rate_hi_per_s: 60\n  dwell_lo_ms: 3000\n  dwell_hi_ms: 1000\n",
+        )
+        .unwrap();
+        let y = format!(
+            "base:\n  workload:\n    requests: 8\nsweep:\n  scenario: [none, {}]\n",
+            path.display()
+        );
+        let grid = SweepGrid::from_yaml(&y).unwrap();
+        assert_eq!(grid.scenarios.len(), 2);
+        assert!(grid.scenarios[0].is_none());
+        // File stem becomes the scenario name (no name: key in the file).
+        assert_eq!(grid.scenarios[1].as_ref().unwrap().name, "burst");
+        assert_eq!(grid.n_cells(), 2);
+        // A missing file is an error, not a silent no-scenario cell.
+        let bad = "sweep:\n  scenario: [/nonexistent/scn.yaml]\n";
+        assert!(SweepGrid::from_yaml(bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -161,6 +161,7 @@ mod tests {
             sim_duration_ms: 1000.0,
             events_processed: 1234,
             mean_features: [0.4, 0.8, 10.0, 20.0, 4.0],
+            time_series: None,
         }
     }
 

@@ -13,6 +13,7 @@
 //! scheduler dynamics depend only on these statistics (DESIGN.md §4).
 
 use super::schema::{Trace, TraceRecord};
+use crate::scenario::ArrivalPlan;
 use crate::util::rng::Pcg64;
 
 /// Statistical profile of one benchmark workload.
@@ -123,6 +124,8 @@ impl DatasetProfile {
     /// Generate a full trace: `n` requests, Poisson arrivals at
     /// `rate_per_s` (requests/second across the whole system), drafter ids
     /// uniform over `n_drafters` (paper §3.2, synthetic arrival mode).
+    /// Delegates to [`DatasetProfile::generate_plan`] with a stationary
+    /// plan — the two are bit-identical by construction.
     pub fn generate(
         &self,
         n: usize,
@@ -130,12 +133,27 @@ impl DatasetProfile {
         n_drafters: usize,
         seed: u64,
     ) -> Trace {
+        self.generate_plan(n, &ArrivalPlan::constant(rate_per_s), n_drafters, seed)
+    }
+
+    /// Generate a trace whose arrivals follow a scenario
+    /// [`ArrivalPlan`] (time-varying rate envelopes, thinning-sampled;
+    /// see [`crate::scenario::arrivals`]). Per-request draws interleave
+    /// with arrival draws exactly as in the legacy generator, so a
+    /// constant plan reproduces the historical traces bit for bit.
+    pub fn generate_plan(
+        &self,
+        n: usize,
+        plan: &ArrivalPlan,
+        n_drafters: usize,
+        seed: u64,
+    ) -> Trace {
         let mut rng = Pcg64::new(seed ^ fxhash(self.name));
+        let mut sampler = plan.sampler();
         let mut t_ms = 0.0f64;
         let mut records = Vec::with_capacity(n);
         for _ in 0..n {
-            // Poisson process: exponential inter-arrivals.
-            t_ms += rng.exponential(rate_per_s / 1000.0);
+            t_ms = sampler.next_after(t_ms, &mut rng);
             let (prompt_length, output_length) = self.sample_lengths(&mut rng);
             // Draft tokens consumed can exceed output_length (rejected
             // tokens still consume sequence entries); 2x + slack is ample.
@@ -248,6 +266,44 @@ mod tests {
         let a = GSM8K.generate(50, 20.0, 5, 9);
         let b = GSM8K.generate(50, 20.0, 5, 9);
         assert_eq!(a.records, b.records);
+    }
+
+    #[test]
+    fn constant_plan_is_bit_identical_to_legacy_generation() {
+        // The legacy draw sequence, reproduced inline: one exponential
+        // per arrival interleaved with the per-request draws. The
+        // plan-driven generator must match record for record, bit for
+        // bit (the scenario engine's no-regression contract).
+        let plan = ArrivalPlan::constant(20.0);
+        let via_plan = GSM8K.generate_plan(50, &plan, 5, 9);
+        let legacy = GSM8K.generate(50, 20.0, 5, 9);
+        assert_eq!(via_plan.records, legacy.records);
+        for (a, b) in via_plan.records.iter().zip(&legacy.records) {
+            assert!(a.arrival_time_ms == b.arrival_time_ms, "bit-identical arrivals");
+        }
+    }
+
+    #[test]
+    fn spike_plan_concentrates_arrivals() {
+        use crate::scenario::ArrivalProcess;
+        let plan = ArrivalPlan {
+            process: ArrivalProcess::Spike {
+                base_per_s: 10.0,
+                peak_per_s: 200.0,
+                t_start_ms: 1_000.0,
+                t_end_ms: 2_000.0,
+            },
+            overrides: Vec::new(),
+        };
+        let t = GSM8K.generate_plan(400, &plan, 8, 3);
+        t.validate().unwrap();
+        let in_spike = t
+            .records
+            .iter()
+            .filter(|r| (1_000.0..2_000.0).contains(&r.arrival_time_ms))
+            .count();
+        // 1 s at 200/s dominates the surrounding 10/s base traffic.
+        assert!(in_spike > 120, "in_spike={in_spike}");
     }
 
     #[test]

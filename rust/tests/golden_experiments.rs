@@ -1,5 +1,5 @@
 //! Self-bootstrapping golden snapshots for the runner-ported experiment
-//! families (fig5, fig7/8, fig9/10, table2) plus cached-vs-uncached
+//! families (fig5, fig7/8, fig9/10, table2, agility) plus cached-vs-uncached
 //! byte-identity: each family's sweep data must serialize identically
 //! whether computed directly, against a cold cell cache, or spliced
 //! entirely from a warm cache — and the warm pass must execute zero
@@ -10,7 +10,7 @@
 //! any byte drift fails. Regenerate deliberately with
 //! `DSD_UPDATE_GOLDEN=1 cargo test -q --test golden_experiments`.
 
-use dsd::experiments::{fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale};
+use dsd::experiments::{agility, fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale};
 use dsd::sweep::CellCache;
 use dsd::util::json::Json;
 use std::path::PathBuf;
@@ -208,4 +208,41 @@ fn golden_table2_and_cache_identity() {
         table2_json(&table2::sweep_cached(SCALE, &SEEDS, ctx))
     });
     check_golden("table2_tiny.json", &text);
+}
+
+fn agility_json(rows: &[agility::AgilityRow]) -> String {
+    pretty(Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .with("scenario", r.scenario.into())
+                    .with("policy", r.policy.into())
+                    .with("baseline_rps", r.baseline_rps.into())
+                    .with("disturbed_rps", r.disturbed_rps.into())
+                    // Infinity has no JSON literal; encode "never
+                    // recovered" as null via the NaN/null convention.
+                    .with(
+                        "recovery_ms",
+                        if r.recovery_ms.is_finite() {
+                            r.recovery_ms.into()
+                        } else {
+                            Json::Null
+                        },
+                    )
+                    .with("mean_tpot_ms", r.mean_tpot_ms.into())
+            })
+            .collect(),
+    ))
+}
+
+/// The scenario-driven agility family gets the same cold/warm/uncached
+/// byte-identity contract as every other figure — this exercises the
+/// scenario canonical JSON inside cache keys and the time-series payload
+/// inside cached cell files end to end.
+#[test]
+fn golden_agility_and_cache_identity() {
+    let text = triple_run("agility", |ctx| {
+        agility_json(&agility::sweep_cached(SCALE, &SEEDS, ctx))
+    });
+    check_golden("agility_tiny.json", &text);
 }

@@ -1,0 +1,297 @@
+//! Scenario-engine integration tests: the no-regression contract
+//! (scenario-free and constant-scenario runs are bit-identical to the
+//! legacy simulator), cross-thread determinism of scenario sweeps, the
+//! behavioral signatures of each event kind, the live-link feature
+//! regression lock, and a self-bootstrapping golden snapshot for a
+//! drafter-churn scenario (PR 3 style: first run writes
+//! `tests/golden/scenario_churn_seed5.json`, committed bytes lock it).
+
+use dsd::config::{SimConfig, WindowKind};
+use dsd::metrics::SimReport;
+use dsd::scenario::{ArrivalProcess, Scenario, ScenarioEvent, TimedEvent};
+use dsd::sim::Simulator;
+use dsd::sweep::{run_cells, SweepGrid};
+use std::path::PathBuf;
+
+fn small_cfg(seed: u64) -> SimConfig {
+    SimConfig::builder()
+        .seed(seed)
+        .targets(2)
+        .drafters(16)
+        .requests(48)
+        .rate_per_s(24.0)
+        .dataset("gsm8k")
+        .build()
+}
+
+/// Report JSON with the wall-clock field (the only nondeterministic
+/// value) removed.
+fn report_json(mut rep: SimReport) -> String {
+    rep.system.wall_ms = 0.0;
+    let mut text = rep.to_json().to_string_pretty();
+    text.push('\n');
+    text
+}
+
+fn degrade(at_ms: f64, rtt_mult: f64) -> TimedEvent {
+    TimedEvent {
+        at_ms,
+        event: ScenarioEvent::LinkDegrade {
+            pool: None,
+            rtt_mult,
+            jitter_mult: 1.0,
+            bandwidth_mult: 1.0,
+        },
+    }
+}
+
+/// The no-regression contract, part 1: attaching a scenario whose
+/// arrival process is the same constant rate and whose timeline is empty
+/// reproduces the scenario-free run bit for bit (same trace, same event
+/// trajectory, same report bytes).
+#[test]
+fn constant_scenario_is_bit_identical_to_scenario_free() {
+    let plain = Simulator::new(small_cfg(9)).run();
+    let mut cfg = small_cfg(9);
+    cfg.scenario = Some(Scenario {
+        name: "noop".into(),
+        arrivals: Some(ArrivalProcess::Constant { rate_per_s: 24.0 }),
+        events: Vec::new(),
+    });
+    let scripted = Simulator::new(cfg).run();
+    assert_eq!(plain.system.events_processed, scripted.system.events_processed);
+    assert_eq!(report_json(plain), report_json(scripted));
+}
+
+/// The no-regression contract, part 2 (ISSUE satellite): the same
+/// scenario grid produces byte-identical results at any thread count —
+/// scenario state is per-cell, so parallelism cannot leak between cells.
+#[test]
+fn scenario_sweep_is_deterministic_across_thread_counts() {
+    let mut base = small_cfg(3);
+    base.scenario = Some(Scenario {
+        name: "mix".into(),
+        arrivals: Some(ArrivalProcess::Spike {
+            base_per_s: 24.0,
+            peak_per_s: 96.0,
+            t_start_ms: 300.0,
+            t_end_ms: 900.0,
+        }),
+        events: vec![
+            degrade(400.0, 5.0),
+            TimedEvent { at_ms: 1_200.0, event: ScenarioEvent::LinkRestore { pool: None } },
+        ],
+    });
+    let mut grid = SweepGrid::new(base);
+    grid.seeds = vec![1, 2, 3];
+    grid.rtt_ms = vec![5.0, 40.0];
+    let cells = grid.expand().unwrap();
+    let one = run_cells(&cells, false, 1);
+    let many = run_cells(&cells, false, 4);
+    assert_eq!(one.len(), many.len());
+    for (a, b) in one.iter().zip(&many) {
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(
+            a.metrics().to_json().to_string_pretty(),
+            b.metrics().to_json().to_string_pretty(),
+            "cell {} must be byte-identical across thread counts",
+            a.index
+        );
+        assert!(a.metrics().time_series.is_some(), "scenario cells carry the series");
+    }
+}
+
+/// Mid-run link degradation must show up in the measured network delay
+/// and hurt distributed tail latency.
+#[test]
+fn link_degrade_mid_run_raises_net_delay() {
+    let plain = Simulator::new(small_cfg(5)).run();
+    let mut cfg = small_cfg(5);
+    cfg.scenario = Some(Scenario {
+        name: "degrade".into(),
+        arrivals: None,
+        events: vec![degrade(200.0, 8.0)],
+    });
+    let hurt = Simulator::new(cfg).run();
+    assert_eq!(hurt.system.completed, 48, "all requests still complete");
+    assert!(
+        hurt.system.mean_net_delay_ms > plain.system.mean_net_delay_ms * 2.0,
+        "degraded {} vs baseline {}",
+        hurt.system.mean_net_delay_ms,
+        plain.system.mean_net_delay_ms
+    );
+}
+
+/// Target slowdown scales hardware latency: TPOT rises, everything still
+/// completes, and restoring mult=1 mid-run keeps it bounded.
+#[test]
+fn target_slowdown_raises_tpot() {
+    let plain = Simulator::new(small_cfg(6)).run();
+    let mut cfg = small_cfg(6);
+    cfg.scenario = Some(Scenario {
+        name: "slow".into(),
+        arrivals: None,
+        events: vec![TimedEvent {
+            at_ms: 0.0,
+            event: ScenarioEvent::TargetSlowdown { target: None, mult: 3.0 },
+        }],
+    });
+    let slowed = Simulator::new(cfg).run();
+    assert_eq!(slowed.system.completed, 48);
+    // Verification is one leg of the speculation loop (drafting and the
+    // network are unscaled), so the end-to-end TPOT inflation is a
+    // fraction of the 3× hardware multiplier.
+    assert!(
+        slowed.mean_tpot() > plain.mean_tpot() * 1.2,
+        "slowed {} vs baseline {}",
+        slowed.mean_tpot(),
+        plain.mean_tpot()
+    );
+}
+
+/// Drafter-pool failure: requests on the dead pool migrate to fused
+/// execution (fused rounds appear under a Static policy that would never
+/// choose them), everything completes, and recovery lets later requests
+/// speculate again.
+#[test]
+fn drafter_pool_churn_migrates_to_fused_and_back() {
+    let mut cfg = small_cfg(7);
+    cfg.scenario = Some(Scenario {
+        name: "churn".into(),
+        arrivals: None,
+        events: vec![
+            TimedEvent { at_ms: 150.0, event: ScenarioEvent::DrafterPoolDown { pool: 0 } },
+            TimedEvent { at_ms: 1_000.0, event: ScenarioEvent::DrafterPoolUp { pool: 0 } },
+        ],
+    });
+    let rep = Simulator::new(cfg).run();
+    assert_eq!(rep.system.completed, 48, "churn must not strand requests");
+    // Static γ=4 never chooses fused on its own (see
+    // `static_window_records_gammas` in the simulator tests); any fused
+    // round here is the failure-migration path.
+    let fused_rounds: u32 = rep.requests.iter().map(|r| r.fused_rounds).sum();
+    assert!(fused_rounds > 0, "pool failure must park work in fused mode");
+    // Speculation still happened for unaffected / recovered requests.
+    let decisions: usize = rep.requests.iter().map(|r| r.gamma_decisions.len()).sum();
+    assert!(decisions > 0, "speculation must resume around the outage");
+}
+
+/// Regression lock for the live-link feature fix (ISSUE satellite): the
+/// window policy's cold-start RTT fallback must read the *live* link,
+/// not the t=0 topology. A scenario that degrades every link at t=0 is
+/// physically identical to a config whose static RTT already is the
+/// degraded value — so with an RTT-sensitive policy (AWC) the two runs
+/// must produce identical per-request trajectories. Before the fix the
+/// scenario run fed stale baseline RTTs into early decisions and the
+/// trajectories diverged.
+#[test]
+fn window_features_track_live_link_state() {
+    let mk = |rtt: f64, scenario: Option<Scenario>| {
+        let mut cfg = SimConfig::builder()
+            .seed(11)
+            .targets(2)
+            .drafters(16)
+            .requests(48)
+            .rate_per_s(24.0)
+            .rtt_ms(rtt)
+            .window(WindowKind::Awc { weights_path: None })
+            .build();
+        cfg.scenario = scenario;
+        Simulator::new(cfg).run()
+    };
+    // 10 ms × 8 at t=0 ≡ static 80 ms (jitter/bandwidth multipliers 1).
+    let scripted = mk(
+        10.0,
+        Some(Scenario {
+            name: "degrade-at-zero".into(),
+            arrivals: None,
+            events: vec![degrade(0.0, 8.0)],
+        }),
+    );
+    let static80 = mk(80.0, None);
+    // The scenario run processes exactly one extra event (the degrade).
+    assert_eq!(
+        scripted.system.events_processed,
+        static80.system.events_processed + 1
+    );
+    assert_eq!(scripted.system.completed, static80.system.completed);
+    assert_eq!(scripted.system.mean_features, static80.system.mean_features);
+    for (a, b) in scripted.requests.iter().zip(&static80.requests) {
+        assert!(a.ttft_ms == b.ttft_ms, "req {}: trajectories must match", a.id);
+        assert!(a.e2e_ms == b.e2e_ms, "req {}", a.id);
+        assert_eq!(a.gamma_decisions, b.gamma_decisions, "req {}", a.id);
+    }
+}
+
+/// Golden snapshot for a churn scenario (self-bootstrapping, ISSUE
+/// satellite): byte drift in the scripted-dynamics pipeline — arrival
+/// thinning, event application, failure migration — fails this test once
+/// the snapshot is committed. Regenerate deliberately with
+/// `DSD_UPDATE_GOLDEN=1 cargo test -q --test scenario_integration`.
+#[test]
+fn golden_churn_scenario_snapshot() {
+    let mut cfg = small_cfg(5);
+    cfg.scenario = Some(Scenario {
+        name: "golden-churn".into(),
+        arrivals: Some(ArrivalProcess::Mmpp {
+            rate_lo_per_s: 16.0,
+            rate_hi_per_s: 64.0,
+            dwell_lo_ms: 800.0,
+            dwell_hi_ms: 300.0,
+        }),
+        events: vec![
+            TimedEvent { at_ms: 250.0, event: ScenarioEvent::DrafterPoolDown { pool: 0 } },
+            degrade(400.0, 3.0),
+            TimedEvent { at_ms: 900.0, event: ScenarioEvent::DrafterPoolUp { pool: 0 } },
+            TimedEvent { at_ms: 1_100.0, event: ScenarioEvent::LinkRestore { pool: None } },
+        ],
+    });
+    let text = report_json(Simulator::new(cfg).run());
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/scenario_churn_seed5.json");
+    let update = std::env::var_os("DSD_UPDATE_GOLDEN").is_some();
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &text).unwrap();
+        eprintln!("golden: wrote snapshot {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        text, want,
+        "churn-scenario report drifted from the committed snapshot. If the change \
+         is intentional, regenerate with DSD_UPDATE_GOLDEN=1 cargo test (and bump \
+         SIM_VERSION_TAG if simulation results changed)."
+    );
+}
+
+/// The streaming time series is visible end to end on a scenario run —
+/// the flash crowd shows up as a throughput hump in the windows.
+#[test]
+fn flash_crowd_is_visible_in_the_time_series() {
+    let mut cfg = small_cfg(8);
+    cfg.workload.requests = 120;
+    cfg.scenario = Some(Scenario {
+        name: "crowd".into(),
+        arrivals: Some(ArrivalProcess::Spike {
+            base_per_s: 20.0,
+            peak_per_s: 120.0,
+            t_start_ms: 1_000.0,
+            t_end_ms: 2_000.0,
+        }),
+        events: Vec::new(),
+    });
+    let rep = Simulator::new(cfg).run_streaming();
+    assert_eq!(rep.stream.completed, 120);
+    let ts = &rep.stream.time_series;
+    assert!(ts.windows.len() >= 2, "run must span several windows");
+    let windowed: u64 = ts.windows.iter().map(|w| w.completed).sum();
+    assert_eq!(windowed + ts.overflow_completed, rep.stream.completed);
+    // Peak active load sits well above the quietest window's load.
+    let max_active = ts.windows.iter().map(|w| w.active).max().unwrap();
+    let min_active = ts.windows.iter().map(|w| w.active).min().unwrap();
+    assert!(
+        max_active >= min_active + 5,
+        "burst must show in active counts: max {max_active} min {min_active}"
+    );
+}

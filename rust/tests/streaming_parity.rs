@@ -1,5 +1,6 @@
 //! ISSUE 3 differential test harness: streaming-sink ≡ full-sink parity
-//! across a grid of datasets × policy families × link shapes.
+//! across a grid of datasets × policy families × link shapes × scripted
+//! scenarios.
 //!
 //! Contract (acceptance criteria):
 //! * means and counts are exact — the refold test pins them *bit-exact*
@@ -10,10 +11,15 @@
 //!   order statistic of rank slack separating the two estimators),
 //! * per-target / per-drafter-pool counts, γ-decision histograms, and
 //!   SLO-attainment counters — the fields that previously required the
-//!   full sink — are *exactly* equal (all-integer comparisons).
+//!   full sink — are *exactly* equal (all-integer comparisons),
+//! * the windowed time series agrees window by window: all counts
+//!   (completed / active / tokens) exactly, means to 1e-9 — including
+//!   on scenario-bearing configs (flash crowd, link flap, pool churn),
+//!   so bounded-memory mode keeps feature parity under dynamics.
 
 use dsd::config::{BatchingKind, LinkOverride, PoolSpec, RoutingKind, SimConfig, WindowKind};
 use dsd::metrics::{FullSink, GroupSummary, MetricsSink, SimReport, StreamingConfig, StreamingSink};
+use dsd::scenario::{ArrivalProcess, Scenario, ScenarioEvent, TimedEvent};
 use dsd::sim::Simulator;
 use dsd::util::stats::percentile;
 
@@ -47,7 +53,8 @@ fn base(
 
 /// The differential grid: 3 datasets × 4 window policies (each paired
 /// with a distinct routing/batching stack) + heterogeneous-link and
-/// finite-bandwidth variants — 14 configurations.
+/// finite-bandwidth variants + 3 scenario-bearing configs (flash crowd,
+/// link flap, pool churn + target slowdown) — 17 configurations.
 fn differential_grid() -> Vec<(String, SimConfig)> {
     use dsd::cluster::gpu::{A40, V100};
     use dsd::cluster::model::{LLAMA2_7B, QWEN_7B};
@@ -111,6 +118,71 @@ fn differential_grid() -> Vec<(String, SimConfig)> {
     );
     slow.network.bandwidth_mbps = 2.0;
     grid.push(("cnndm/slow-link".into(), slow));
+    // Scenario-bearing configs: the time-series parity contract must
+    // hold under scripted dynamics too (the whole point of the windows).
+    // (1) Flash crowd: a 4× arrival burst through the thinning sampler.
+    let mut spike = base(33, "gsm8k", WindowKind::Static(4), RoutingKind::Jsq, BatchingKind::Lab);
+    spike.scenario = Some(Scenario {
+        name: "spike".into(),
+        arrivals: Some(ArrivalProcess::Spike {
+            base_per_s: 24.0,
+            peak_per_s: 96.0,
+            t_start_ms: 400.0,
+            t_end_ms: 1_000.0,
+        }),
+        events: Vec::new(),
+    });
+    grid.push(("gsm8k/scenario-spike".into(), spike));
+    // (2) Link flap: RTT ×6 mid-run, restored later.
+    let mut flap = base(
+        34,
+        "humaneval",
+        WindowKind::Awc { weights_path: None },
+        RoutingKind::Jsq,
+        BatchingKind::Lab,
+    );
+    flap.scenario = Some(Scenario {
+        name: "flap".into(),
+        arrivals: None,
+        events: vec![
+            TimedEvent {
+                at_ms: 300.0,
+                event: ScenarioEvent::LinkDegrade {
+                    pool: None,
+                    rtt_mult: 6.0,
+                    jitter_mult: 2.0,
+                    bandwidth_mult: 1.0,
+                },
+            },
+            TimedEvent { at_ms: 1_500.0, event: ScenarioEvent::LinkRestore { pool: None } },
+        ],
+    });
+    grid.push(("humaneval/scenario-flap".into(), flap));
+    // (3) Drafter-pool churn across two pools (per-pool breakdown keeps
+    // real structure while pool 1 dies and recovers), plus a target
+    // slowdown pulse.
+    let mut churn = base(35, "gsm8k", WindowKind::Static(4), RoutingKind::Jsq, BatchingKind::Fifo);
+    churn.drafter_pools = vec![
+        PoolSpec { count: 6, gpu: &A40, tp: 1, model: &LLAMA2_7B, link: None },
+        PoolSpec { count: 6, gpu: &V100, tp: 1, model: &QWEN_7B, link: None },
+    ];
+    churn.scenario = Some(Scenario {
+        name: "churn".into(),
+        arrivals: None,
+        events: vec![
+            TimedEvent { at_ms: 200.0, event: ScenarioEvent::DrafterPoolDown { pool: 1 } },
+            TimedEvent {
+                at_ms: 500.0,
+                event: ScenarioEvent::TargetSlowdown { target: Some(0), mult: 2.0 },
+            },
+            TimedEvent { at_ms: 1_200.0, event: ScenarioEvent::DrafterPoolUp { pool: 1 } },
+            TimedEvent {
+                at_ms: 1_400.0,
+                event: ScenarioEvent::TargetSlowdown { target: Some(0), mult: 1.0 },
+            },
+        ],
+    });
+    grid.push(("gsm8k/scenario-churn".into(), churn));
     grid
 }
 
@@ -222,12 +294,58 @@ fn assert_parity(name: &str, cfg: &SimConfig, full: &SimReport) {
             "{name}: slo fraction"
         );
     }
+
+    // Windowed time series: the streaming sink's Welford fold against
+    // the report's independent arithmetic recomputation — counts exact,
+    // means to floating-point noise, window by window.
+    let s_ts = &stream.stream.time_series;
+    let f_ts = full.time_series(&scfg.time_series);
+    assert_eq!(s_ts.window_ms, f_ts.window_ms, "{name}: ts window width");
+    assert_eq!(
+        s_ts.overflow_completed, f_ts.overflow_completed,
+        "{name}: ts overflow"
+    );
+    assert_eq!(s_ts.windows.len(), f_ts.windows.len(), "{name}: ts window count");
+    let mut windowed_total = s_ts.overflow_completed;
+    for (s, f) in s_ts.windows.iter().zip(&f_ts.windows) {
+        assert_eq!(s.index, f.index, "{name}: ts index");
+        assert_eq!(s.completed, f.completed, "{name}: ts w{} completed", s.index);
+        assert_eq!(s.active, f.active, "{name}: ts w{} active", s.index);
+        assert_eq!(
+            s.output_tokens, f.output_tokens,
+            "{name}: ts w{} tokens",
+            s.index
+        );
+        assert!(
+            (s.throughput_rps - f.throughput_rps).abs() < 1e-9,
+            "{name}: ts w{} throughput",
+            s.index
+        );
+        for (metric, a, b) in [
+            ("ttft", s.mean_ttft_ms, f.mean_ttft_ms),
+            ("tpot", s.mean_tpot_ms, f.mean_tpot_ms),
+            ("acceptance", s.mean_acceptance, f.mean_acceptance),
+        ] {
+            assert!(
+                nan_or_close(a, b),
+                "{name}: ts w{} mean {metric}: {a} vs {b}",
+                s.index
+            );
+        }
+        windowed_total += s.completed;
+    }
+    // The windows partition the completions.
+    assert_eq!(windowed_total, stream.stream.completed, "{name}: ts partition");
 }
 
 #[test]
 fn streaming_matches_full_across_differential_grid() {
     let grid = differential_grid();
-    assert!(grid.len() >= 12, "differential grid must cover ≥12 configs");
+    assert!(grid.len() >= 14, "differential grid must cover ≥14 configs");
+    assert!(
+        grid.iter().filter(|(_, c)| c.scenario.is_some()).count() >= 3,
+        "differential grid must include ≥3 scenario-bearing configs"
+    );
     for (name, cfg) in grid {
         let full = Simulator::new(cfg.clone()).run();
         assert_parity(&name, &cfg, &full);
