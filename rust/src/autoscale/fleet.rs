@@ -1,0 +1,421 @@
+//! The target-fleet lifecycle state machine.
+//!
+//! Each deployed target is in one of four states:
+//!
+//! ```text
+//!          begin_up (provision)            finish_provision
+//!   Off ────────────────────────► Provisioning ────────────► Active
+//!    ▲                                                          │
+//!    │ finish_drain                                   begin_down │
+//!    └───────────────────────── Draining ◄──────────────────────┘
+//!                                   │  begin_up (cancel drain)
+//!                                   └───────────────────────► Active
+//! ```
+//!
+//! [`Fleet`] owns the states, enforces the capacity bounds on every
+//! transition (committed capacity — Active + Provisioning — never
+//! leaves `[min, max]`; at least one target always stays serving), and
+//! accounts cost: the *provisioned* count (everything not Off — you pay
+//! for provisioning cold starts and draining tails too) is integrated
+//! over time into target-seconds and recorded as a step series both
+//! metric sinks fold into the windowed active-target-count series.
+//!
+//! The simulator drives the transitions and does the queue surgery
+//! (re-routing a draining target's work); this module is pure state so
+//! the invariants are unit-testable without an event loop.
+
+use super::AutoscaleMetrics;
+
+/// Lifecycle state of one deployed target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TargetState {
+    /// Not provisioned: costs nothing, serves nothing.
+    Off,
+    /// Cold-starting: paid for, not yet accepting work.
+    Provisioning,
+    /// Serving.
+    Active,
+    /// Graceful scale-down: finishes in-flight work, accepts nothing
+    /// new, still paid for until it turns off.
+    Draining,
+}
+
+/// How a scale-up was satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpKind {
+    /// A draining target was reprieved: it is Active again immediately
+    /// (no cold start — the hardware never shut down).
+    CancelDrain(usize),
+    /// An off target starts provisioning; it becomes Active after the
+    /// configured cold-start delay.
+    Provision(usize),
+}
+
+/// The elastic target fleet: states, bounds, and cost accounting.
+pub struct Fleet {
+    min: usize,
+    max: usize,
+    states: Vec<TargetState>,
+    /// Provisioned-count step series `(at_ms, count)`; starts with the
+    /// t=0 initial value, ends with the finalize marker.
+    steps: Vec<(f64, u32)>,
+    /// ∫ provisioned dt, in ms·targets.
+    paid_target_ms: f64,
+    last_ms: f64,
+    scale_ups: u64,
+    scale_downs: u64,
+    peak: u32,
+    finalized: bool,
+}
+
+impl Fleet {
+    /// Fleet over `n_targets` deployed devices, `initial` of them
+    /// Active at t=0. Bounds must already be validated
+    /// (`min ≤ initial ≤ max ≤ n_targets`).
+    pub fn new(n_targets: usize, min: usize, max: usize, initial: usize) -> Fleet {
+        debug_assert!(min >= 1 && min <= initial && initial <= max && max <= n_targets);
+        let states = (0..n_targets)
+            .map(|i| {
+                if i < initial {
+                    TargetState::Active
+                } else {
+                    TargetState::Off
+                }
+            })
+            .collect();
+        Fleet {
+            min,
+            max,
+            states,
+            steps: vec![(0.0, initial as u32)],
+            paid_target_ms: 0.0,
+            last_ms: 0.0,
+            scale_ups: 0,
+            scale_downs: 0,
+            peak: initial as u32,
+            finalized: false,
+        }
+    }
+
+    /// State of one target (ids beyond the fleet read as Off).
+    pub fn state(&self, tid: usize) -> TargetState {
+        self.states.get(tid).copied().unwrap_or(TargetState::Off)
+    }
+
+    /// Committed capacity: Active + Provisioning.
+    pub fn committed(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| matches!(s, TargetState::Active | TargetState::Provisioning))
+            .count()
+    }
+
+    /// Targets currently accepting work.
+    pub fn n_active(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| matches!(s, TargetState::Active))
+            .count()
+    }
+
+    /// Provisioned (paid-for) capacity: everything not Off.
+    pub fn provisioned(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| !matches!(s, TargetState::Off))
+            .count()
+    }
+
+    /// The provisioned-count step series recorded so far.
+    pub fn steps(&self) -> &[(f64, u32)] {
+        &self.steps
+    }
+
+    /// Advance the cost integral to `now` at the current provisioned
+    /// count. Time never runs backwards (same-time events integrate a
+    /// zero-length segment).
+    fn accrue(&mut self, now: f64) {
+        let now = now.max(self.last_ms);
+        self.paid_target_ms += self.provisioned() as f64 * (now - self.last_ms);
+        self.last_ms = now;
+    }
+
+    fn record_step(&mut self, now: f64) {
+        let paid = self.provisioned() as u32;
+        self.peak = self.peak.max(paid);
+        self.steps.push((now, paid));
+    }
+
+    /// Begin one scale-up at `now`. Prefers reprieving a draining
+    /// target (its hardware never left); otherwise starts provisioning
+    /// the lowest-indexed off target. `None` when the committed bound
+    /// or the physical fleet is exhausted. The provisioned count only
+    /// steps for a fresh provision — a drain cancellation was already
+    /// being paid for.
+    pub fn begin_up(&mut self, now: f64) -> Option<UpKind> {
+        if self.committed() + 1 > self.max {
+            return None;
+        }
+        if let Some(tid) = self
+            .states
+            .iter()
+            .position(|s| matches!(s, TargetState::Draining))
+        {
+            self.accrue(now);
+            self.states[tid] = TargetState::Active;
+            self.scale_ups += 1;
+            return Some(UpKind::CancelDrain(tid));
+        }
+        let tid = self
+            .states
+            .iter()
+            .position(|s| matches!(s, TargetState::Off))?;
+        self.accrue(now);
+        self.states[tid] = TargetState::Provisioning;
+        self.scale_ups += 1;
+        self.record_step(now);
+        Some(UpKind::Provision(tid))
+    }
+
+    /// A provisioning target finished its cold start. Returns whether a
+    /// transition happened (false if the target was not provisioning —
+    /// a stale event).
+    pub fn finish_provision(&mut self, now: f64, tid: usize) -> bool {
+        if self.state(tid) != TargetState::Provisioning {
+            return false;
+        }
+        self.accrue(now);
+        self.states[tid] = TargetState::Active;
+        true
+    }
+
+    /// Begin one graceful scale-down at `now`: the highest-indexed
+    /// active target starts draining (deterministic victim choice).
+    /// Refused when it would take committed capacity below `min` or
+    /// leave no serving target (provisioning replacements are not yet
+    /// accepting work).
+    pub fn begin_down(&mut self, now: f64) -> Option<usize> {
+        if self.committed() <= self.min || self.n_active() <= 1 {
+            return None;
+        }
+        let tid = self
+            .states
+            .iter()
+            .rposition(|s| matches!(s, TargetState::Active))?;
+        self.accrue(now);
+        self.states[tid] = TargetState::Draining;
+        self.scale_downs += 1;
+        // Paid count unchanged: a draining target still costs money
+        // until it actually turns off.
+        Some(tid)
+    }
+
+    /// A draining target emptied out: turn it off (this is when the
+    /// meter stops). No-op if the target is not draining (e.g. its
+    /// drain was cancelled by a scale-up).
+    pub fn finish_drain(&mut self, now: f64, tid: usize) {
+        if self.state(tid) != TargetState::Draining {
+            return;
+        }
+        self.accrue(now);
+        self.states[tid] = TargetState::Off;
+        self.record_step(now);
+    }
+
+    /// Close the books at the end of the run: integrate the final
+    /// segment and append the end-of-run step marker both metric sinks
+    /// need to bound the windowed capacity series. Idempotent.
+    pub fn finalize(&mut self, now: f64) {
+        if self.finalized {
+            return;
+        }
+        self.finalized = true;
+        self.accrue(now);
+        self.record_step(now);
+    }
+
+    /// Fold the accounting into the end-of-run metrics.
+    pub fn metrics(&self, cost_per_target_s: f64, completed_tokens: u64) -> AutoscaleMetrics {
+        let target_seconds = self.paid_target_ms / 1_000.0;
+        let cost = target_seconds * cost_per_target_s;
+        AutoscaleMetrics {
+            target_seconds,
+            cost,
+            cost_per_1k_tokens: if completed_tokens == 0 {
+                f64::NAN
+            } else {
+                cost / (completed_tokens as f64 / 1_000.0)
+            },
+            scale_up_events: self.scale_ups,
+            scale_down_events: self.scale_downs,
+            peak_provisioned: self.peak,
+            final_provisioned: self.provisioned() as u32,
+            steps: self.steps.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, Gen};
+
+    #[test]
+    fn initial_fleet_splits_active_and_off() {
+        let f = Fleet::new(4, 1, 4, 2);
+        assert_eq!(f.state(0), TargetState::Active);
+        assert_eq!(f.state(1), TargetState::Active);
+        assert_eq!(f.state(2), TargetState::Off);
+        assert_eq!(f.state(9), TargetState::Off);
+        assert_eq!(f.committed(), 2);
+        assert_eq!(f.provisioned(), 2);
+        assert_eq!(f.steps(), &[(0.0, 2)]);
+    }
+
+    #[test]
+    fn up_provisions_then_activates_and_steps_once() {
+        let mut f = Fleet::new(4, 1, 4, 2);
+        let up = f.begin_up(1_000.0).unwrap();
+        assert_eq!(up, UpKind::Provision(2));
+        assert_eq!(f.state(2), TargetState::Provisioning);
+        assert_eq!(f.committed(), 3);
+        assert_eq!(f.provisioned(), 3);
+        assert_eq!(f.steps().last(), Some(&(1_000.0, 3)));
+        assert!(f.finish_provision(2_000.0, 2));
+        assert_eq!(f.state(2), TargetState::Active);
+        // No extra step for activation: the paid count did not change.
+        assert_eq!(f.steps().len(), 2);
+        // Stale event: no-op.
+        assert!(!f.finish_provision(2_500.0, 2));
+    }
+
+    #[test]
+    fn down_drains_highest_index_and_steps_at_shutoff() {
+        let mut f = Fleet::new(4, 1, 4, 3);
+        let tid = f.begin_down(1_000.0).unwrap();
+        assert_eq!(tid, 2, "highest-indexed active target drains first");
+        assert_eq!(f.state(2), TargetState::Draining);
+        assert_eq!(f.committed(), 2);
+        assert_eq!(f.provisioned(), 3, "draining still paid");
+        assert_eq!(f.steps().len(), 1, "no step until the meter stops");
+        f.finish_drain(3_000.0, 2);
+        assert_eq!(f.state(2), TargetState::Off);
+        assert_eq!(f.provisioned(), 2);
+        assert_eq!(f.steps().last(), Some(&(3_000.0, 2)));
+    }
+
+    #[test]
+    fn up_cancels_a_drain_before_paying_for_a_cold_start() {
+        let mut f = Fleet::new(4, 1, 4, 3);
+        let tid = f.begin_down(1_000.0).unwrap();
+        let up = f.begin_up(1_500.0).unwrap();
+        assert_eq!(up, UpKind::CancelDrain(tid));
+        assert_eq!(f.state(tid), TargetState::Active);
+        assert_eq!(f.steps().len(), 1, "cancelled drain never changed the paid count");
+        // finish_drain after a cancellation is a stale no-op.
+        f.finish_drain(2_000.0, tid);
+        assert_eq!(f.state(tid), TargetState::Active);
+    }
+
+    #[test]
+    fn bounds_are_enforced() {
+        let mut f = Fleet::new(3, 2, 3, 2);
+        assert!(f.begin_up(0.0).is_some());
+        assert!(f.begin_up(1.0).is_none(), "max reached");
+        assert!(f.begin_down(2.0).is_some());
+        assert!(f.begin_down(3.0).is_none(), "min reached");
+        // Never drain the last serving target, even above min.
+        let mut f = Fleet::new(4, 1, 4, 2);
+        assert!(f.begin_up(0.0).is_some()); // 2 active + 1 provisioning
+        let first = f.begin_down(1.0);
+        assert!(first.is_some());
+        assert!(
+            f.begin_down(2.0).is_none(),
+            "one serving target must remain while the replacement cold-starts"
+        );
+    }
+
+    #[test]
+    fn cost_integrates_the_paid_step_function() {
+        let mut f = Fleet::new(4, 1, 4, 2);
+        f.begin_up(1_000.0); // 2 targets × 1 s
+        f.finish_provision(1_500.0, 2);
+        f.begin_down(2_000.0); // 3 targets × 1 s
+        f.finish_drain(3_000.0, 2); // 3 targets × 1 s (draining is paid)
+        f.finalize(5_000.0); // 2 targets × 2 s
+        let m = f.metrics(2.0, 4_000);
+        // 2·1 + 3·1 + 3·1 + 2·2 = 12 target-seconds.
+        assert!((m.target_seconds - 12.0).abs() < 1e-9, "{}", m.target_seconds);
+        assert!((m.cost - 24.0).abs() < 1e-9);
+        assert!((m.cost_per_1k_tokens - 6.0).abs() < 1e-9);
+        assert_eq!(m.scale_up_events, 1);
+        assert_eq!(m.scale_down_events, 1);
+        assert_eq!(m.peak_provisioned, 3);
+        assert_eq!(m.final_provisioned, 2);
+        assert_eq!(m.steps.last(), Some(&(5_000.0, 2)));
+        // Finalize is idempotent.
+        f.finalize(9_000.0);
+        assert!((f.metrics(2.0, 4_000).target_seconds - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_tokens_yield_nan_cost_per_1k() {
+        let mut f = Fleet::new(2, 1, 2, 1);
+        f.finalize(1_000.0);
+        assert!(f.metrics(1.0, 0).cost_per_1k_tokens.is_nan());
+    }
+
+    /// Property (ISSUE satellite): under arbitrary valid transition
+    /// sequences the provisioned count recorded in the step series
+    /// never leaves `[min, max]`, committed capacity stays in bounds,
+    /// and at least one target keeps serving.
+    #[test]
+    fn prop_fleet_never_leaves_bounds() {
+        run_prop("fleet capacity bounds", 60, |g: &mut Gen| {
+            let n = g.usize_in(2, 8);
+            let min = g.usize_in(1, n);
+            let max = g.usize_in(min, n);
+            let initial = g.usize_in(min, max);
+            let mut f = Fleet::new(n, min, max, initial);
+            let mut pending: Vec<usize> = Vec::new(); // provisioning
+            let mut draining: Vec<usize> = Vec::new();
+            for tick in 0..120 {
+                let now = tick as f64 * 100.0;
+                match g.usize_in(0, 3) {
+                    0 => match f.begin_up(now) {
+                        Some(UpKind::Provision(tid)) => pending.push(tid),
+                        Some(UpKind::CancelDrain(tid)) => draining.retain(|&x| x != tid),
+                        None => {}
+                    },
+                    1 => {
+                        if let Some(tid) = f.begin_down(now) {
+                            draining.push(tid);
+                        }
+                    }
+                    2 => {
+                        if let Some(tid) = pending.pop() {
+                            assert!(f.finish_provision(now, tid));
+                        }
+                    }
+                    _ => {
+                        if let Some(tid) = draining.pop() {
+                            f.finish_drain(now, tid);
+                        }
+                    }
+                }
+                assert!(f.committed() >= min && f.committed() <= max, "committed bounds");
+                assert!(f.n_active() >= 1, "a serving target must always remain");
+                assert!(f.provisioned() <= max, "paid capacity above max");
+            }
+            f.finalize(120.0 * 100.0);
+            for &(_, c) in f.steps() {
+                assert!(
+                    (c as usize) >= min && (c as usize) <= max,
+                    "step series left [{min}, {max}]: {c}"
+                );
+            }
+            let m = f.metrics(1.0, 10);
+            assert!(m.target_seconds >= 0.0 && m.target_seconds.is_finite());
+        });
+    }
+}

@@ -1,0 +1,454 @@
+//! The elastic-capacity subsystem: autoscaling target pools.
+//!
+//! The paper's north star is *agile* edge–cloud serving, but a fixed
+//! target fleet frozen at t=0 cannot express the provisioning side of
+//! agility (DiP-SD and the heterogeneous-edge speculative-decoding line
+//! study exactly this interaction). This module makes the cloud pool
+//! elastic:
+//!
+//! * [`AutoscaleConfig`] — the `autoscale:` block of a
+//!   [`SimConfig`](crate::config::SimConfig): capacity bounds, the
+//!   evaluation tick, cold-start provisioning delay, cooldown, and the
+//!   per-target-second cost rate. A config without the block behaves —
+//!   byte for byte, including canonical JSON and sweep cache keys —
+//!   exactly like the pre-autoscale simulator.
+//! * [`ScalingPolicy`] / [`PolicyEngine`] ([`policy`]) — pluggable
+//!   scale-up/scale-down decision rules evaluated on a fixed tick:
+//!   reactive queue-depth/utilization thresholds with hysteresis and
+//!   cooldown, a scheduled policy driven purely by scripted
+//!   `target_pool_up` / `target_pool_down` scenario events, and a
+//!   predictive policy that extrapolates the windowed arrival-rate
+//!   trend one provisioning lead ahead.
+//! * [`Fleet`] ([`fleet`]) — the per-target lifecycle state machine
+//!   (Off → Provisioning → Active → Draining → Off) with bound-checked
+//!   transitions, the provisioned-capacity step series, and
+//!   target-second cost accounting folded into [`AutoscaleMetrics`].
+//!
+//! The simulator applies fleet transitions through
+//! [`RuntimeDynamics`](crate::scenario::RuntimeDynamics) (live
+//! per-target availability), drains scale-downs gracefully (in-flight
+//! batches finish; queued work re-routes through the configured routing
+//! policy), and surfaces everything via `dsd simulate --autoscale`, the
+//! `autoscale` sweep axis, and the `dsd reproduce elasticity` family.
+
+pub mod fleet;
+pub mod policy;
+
+pub use fleet::{Fleet, TargetState, UpKind};
+pub use policy::{CapacitySnapshot, PolicyEngine, ScaleDecision, ScalingPolicy};
+
+use crate::util::json::Json;
+use crate::util::yaml;
+
+/// The `autoscale:` configuration block: capacity bounds, tick timing,
+/// and cost accounting for an elastic target pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Name (sweep axis label; defaults to `"autoscale"`, or the file
+    /// stem when loaded from a file).
+    pub name: String,
+    /// The scaling decision rule.
+    pub policy: ScalingPolicy,
+    /// Lower capacity bound (committed targets never fall below this).
+    pub min_targets: usize,
+    /// Upper capacity bound; `None` = every deployed target.
+    pub max_targets: Option<usize>,
+    /// Targets active at t=0; `None` = the resolved maximum.
+    pub initial_targets: Option<usize>,
+    /// Policy evaluation tick, ms.
+    pub eval_interval_ms: f64,
+    /// Minimum spacing between policy-initiated scaling decisions, ms
+    /// (scripted scenario events bypass it — an operator override).
+    pub cooldown_ms: f64,
+    /// Cold-start delay between a scale-up decision and the new target
+    /// accepting work, ms. Provisioning capacity is already paid for.
+    pub provision_delay_ms: f64,
+    /// Cost rate, per target-second (folds into
+    /// [`AutoscaleMetrics::cost`] and cost-per-1k-tokens).
+    pub cost_per_target_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            name: "autoscale".into(),
+            policy: ScalingPolicy::default_reactive(),
+            min_targets: 1,
+            max_targets: None,
+            initial_targets: None,
+            eval_interval_ms: 500.0,
+            cooldown_ms: 2_000.0,
+            provision_delay_ms: 1_500.0,
+            cost_per_target_s: 1.0,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Parse an autoscale YAML document:
+    ///
+    /// ```yaml
+    /// policy:
+    ///   kind: reactive
+    ///   up_queue_depth: 6
+    ///   down_queue_depth: 1
+    ///   down_utilization: 0.35
+    /// min_targets: 1
+    /// max_targets: 4
+    /// initial_targets: 2
+    /// eval_interval_ms: 500
+    /// cooldown_ms: 2000
+    /// provision_delay_ms: 1500
+    /// cost_per_target_s: 1.0
+    /// ```
+    pub fn from_yaml(text: &str) -> Result<AutoscaleConfig, String> {
+        let doc = yaml::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&doc)
+    }
+
+    /// Load from a YAML file; the file stem becomes the name when the
+    /// document has no `name:` key.
+    pub fn from_yaml_file(path: &str) -> Result<AutoscaleConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let mut a = Self::from_yaml(&text)?;
+        if a.name == "autoscale" {
+            if let Some(stem) = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|x| x.to_str())
+            {
+                a.name = stem.to_string();
+            }
+        }
+        Ok(a)
+    }
+
+    /// Parse from a decoded document (the `autoscale:` block of a
+    /// `SimConfig` shares this schema). Strict: unknown keys are
+    /// rejected — a typo'd bound would otherwise silently fall back to a
+    /// default while still labeling and cache-keying the cell.
+    pub fn from_json(doc: &Json) -> Result<AutoscaleConfig, String> {
+        const KNOWN: &[&str] = &[
+            "name",
+            "policy",
+            "min_targets",
+            "max_targets",
+            "initial_targets",
+            "eval_interval_ms",
+            "cooldown_ms",
+            "provision_delay_ms",
+            "cost_per_target_s",
+        ];
+        if let Json::Obj(pairs) = doc {
+            for (k, _) in pairs {
+                if !KNOWN.contains(&k.as_str()) {
+                    return Err(format!(
+                        "autoscale: unknown key '{k}' (known: {})",
+                        KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("autoscale: expected a mapping".into());
+        }
+        let mut a = AutoscaleConfig::default();
+        if let Some(n) = doc.get("name").and_then(Json::as_str) {
+            a.name = n.to_string();
+        }
+        if let Some(p) = doc.get("policy") {
+            a.policy = ScalingPolicy::from_json(p)?;
+        }
+        let num = |key: &str, default: f64| -> Result<f64, String> {
+            match doc.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("autoscale: '{key}' must be a number")),
+            }
+        };
+        let opt_usize = |key: &str| -> Result<Option<usize>, String> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| format!("autoscale: '{key}' must be a count")),
+            }
+        };
+        if let Some(m) = opt_usize("min_targets")? {
+            a.min_targets = m;
+        }
+        a.max_targets = opt_usize("max_targets")?;
+        a.initial_targets = opt_usize("initial_targets")?;
+        a.eval_interval_ms = num("eval_interval_ms", a.eval_interval_ms)?;
+        a.cooldown_ms = num("cooldown_ms", a.cooldown_ms)?;
+        a.provision_delay_ms = num("provision_delay_ms", a.provision_delay_ms)?;
+        a.cost_per_target_s = num("cost_per_target_s", a.cost_per_target_s)?;
+        a.validate_shape()?;
+        Ok(a)
+    }
+
+    /// Canonical JSON: fixed key order, optional bounds emitted only
+    /// when set. Part of
+    /// [`SimConfig::to_canonical_json`](crate::config::SimConfig) — and
+    /// therefore of the sweep cell cache key — whenever the block is
+    /// attached; autoscale-free configs serialize exactly as before.
+    pub fn to_canonical_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("name", self.name.as_str().into())
+            .with("policy", self.policy.to_canonical_json())
+            .with("min_targets", self.min_targets.into());
+        if let Some(m) = self.max_targets {
+            j.set("max_targets", m.into());
+        }
+        if let Some(m) = self.initial_targets {
+            j.set("initial_targets", m.into());
+        }
+        j.with("eval_interval_ms", self.eval_interval_ms.into())
+            .with("cooldown_ms", self.cooldown_ms.into())
+            .with("provision_delay_ms", self.provision_delay_ms.into())
+            .with("cost_per_target_s", self.cost_per_target_s.into())
+    }
+
+    /// Upper capacity bound resolved against the deployment size.
+    pub fn resolved_max(&self, n_targets: usize) -> usize {
+        self.max_targets.unwrap_or(n_targets)
+    }
+
+    /// Initial active count resolved against the deployment size.
+    pub fn resolved_initial(&self, n_targets: usize) -> usize {
+        self.initial_targets
+            .unwrap_or_else(|| self.resolved_max(n_targets))
+    }
+
+    /// Deployment-independent sanity checks (run at parse time).
+    fn validate_shape(&self) -> Result<(), String> {
+        self.policy.validate()?;
+        if self.min_targets == 0 {
+            return Err("autoscale: min_targets must be at least 1".into());
+        }
+        let pos = |name: &str, x: f64| -> Result<(), String> {
+            if !x.is_finite() || x <= 0.0 {
+                return Err(format!("autoscale: {name} must be finite and positive"));
+            }
+            Ok(())
+        };
+        let non_neg = |name: &str, x: f64| -> Result<(), String> {
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("autoscale: {name} must be finite and ≥ 0"));
+            }
+            Ok(())
+        };
+        pos("eval_interval_ms", self.eval_interval_ms)?;
+        non_neg("cooldown_ms", self.cooldown_ms)?;
+        non_neg("provision_delay_ms", self.provision_delay_ms)?;
+        non_neg("cost_per_target_s", self.cost_per_target_s)
+    }
+
+    /// Full validation against the deployment shape (from
+    /// [`SimConfig::validate`](crate::config::SimConfig)).
+    pub fn validate(&self, n_targets: usize) -> Result<(), String> {
+        self.validate_shape()?;
+        let max = self.resolved_max(n_targets);
+        if max > n_targets {
+            return Err(format!(
+                "autoscale: max_targets {max} exceeds the {n_targets} deployed targets \
+                 (declare more targets in cluster.targets — the pool lists the physical \
+                 fleet; autoscale chooses how much of it is provisioned)"
+            ));
+        }
+        if self.min_targets > max {
+            return Err(format!(
+                "autoscale: min_targets {} exceeds max_targets {max}",
+                self.min_targets
+            ));
+        }
+        let initial = self.resolved_initial(n_targets);
+        if initial < self.min_targets || initial > max {
+            return Err(format!(
+                "autoscale: initial_targets {initial} outside [{}, {max}]",
+                self.min_targets
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// End-of-run elastic-capacity accounting, reported (only) for
+/// autoscale-bearing runs in both metric sinks'
+/// [`SystemMetrics`](crate::metrics::SystemMetrics) and carried by
+/// autoscale-bearing sweep cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscaleMetrics {
+    /// ∫ provisioned-target count dt over the run, in target-seconds —
+    /// provisioning and draining targets are paid for too.
+    pub target_seconds: f64,
+    /// `target_seconds × cost_per_target_s`.
+    pub cost: f64,
+    /// Cost per 1 000 generated tokens (NaN when nothing completed).
+    pub cost_per_1k_tokens: f64,
+    /// Scale-up decisions applied (including drain cancellations and
+    /// scripted `target_pool_up` events).
+    pub scale_up_events: u64,
+    /// Scale-down decisions applied (drain starts).
+    pub scale_down_events: u64,
+    /// Largest provisioned count observed.
+    pub peak_provisioned: u32,
+    /// Provisioned count at the end of the run.
+    pub final_provisioned: u32,
+    /// The provisioned-capacity step series `(at_ms, count)`: one entry
+    /// per change plus the t=0 initial value and an end-of-run marker.
+    /// Both metric sinks integrate this into the windowed
+    /// active-target-count series (parity-locked).
+    pub steps: Vec<(f64, u32)>,
+}
+
+impl AutoscaleMetrics {
+    /// JSON encoding (insertion-ordered keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("target_seconds", self.target_seconds.into())
+            .with("cost", self.cost.into())
+            .with("cost_per_1k_tokens", self.cost_per_1k_tokens.into())
+            .with("scale_up_events", self.scale_up_events.into())
+            .with("scale_down_events", self.scale_down_events.into())
+            .with("peak_provisioned", (self.peak_provisioned as u64).into())
+            .with("final_provisioned", (self.final_provisioned as u64).into())
+            .with(
+                "steps",
+                Json::Arr(
+                    self.steps
+                        .iter()
+                        .map(|&(t, c)| Json::Arr(vec![t.into(), (c as u64).into()]))
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Decode a snapshot previously written by
+    /// [`AutoscaleMetrics::to_json`] (the sweep cell-cache load path).
+    /// `None` on any missing or mistyped field.
+    pub fn from_json(j: &Json) -> Option<AutoscaleMetrics> {
+        let steps = j
+            .get("steps")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                let pair = s.as_arr()?;
+                if pair.len() != 2 {
+                    return None;
+                }
+                Some((pair[0].as_f64()?, pair[1].as_u64()? as u32))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(AutoscaleMetrics {
+            target_seconds: j.get("target_seconds")?.as_f64()?,
+            cost: j.get("cost")?.as_f64()?,
+            cost_per_1k_tokens: j.get("cost_per_1k_tokens")?.as_f64_or_nan()?,
+            scale_up_events: j.get("scale_up_events")?.as_u64()?,
+            scale_down_events: j.get("scale_down_events")?.as_u64()?,
+            peak_provisioned: j.get("peak_provisioned")?.as_u64()? as u32,
+            final_provisioned: j.get("final_provisioned")?.as_u64()? as u32,
+            steps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REACTIVE: &str = "\
+name: burst-pool
+policy:
+  kind: reactive
+  up_queue_depth: 6
+  down_queue_depth: 1
+  down_utilization: 0.35
+min_targets: 1
+max_targets: 4
+initial_targets: 2
+eval_interval_ms: 250
+cooldown_ms: 1000
+provision_delay_ms: 800
+cost_per_target_s: 2.5
+";
+
+    #[test]
+    fn yaml_parses_and_resolves_bounds() {
+        let a = AutoscaleConfig::from_yaml(REACTIVE).unwrap();
+        assert_eq!(a.name, "burst-pool");
+        assert!(matches!(a.policy, ScalingPolicy::Reactive { .. }));
+        assert_eq!(a.min_targets, 1);
+        assert_eq!(a.resolved_max(8), 4);
+        assert_eq!(a.resolved_initial(8), 2);
+        a.validate(4).unwrap();
+        // Defaults: bounds resolve to the deployment.
+        let d = AutoscaleConfig::from_yaml("policy:\n  kind: scheduled\n").unwrap();
+        assert_eq!(d.resolved_max(6), 6);
+        assert_eq!(d.resolved_initial(6), 6);
+        d.validate(6).unwrap();
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let err = AutoscaleConfig::from_yaml("min_targts: 1\n").unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+        let err = AutoscaleConfig::from_yaml("policy:\n  kind: nope\n").unwrap_err();
+        assert!(err.contains("unknown"), "{err}");
+    }
+
+    #[test]
+    fn canonical_json_roundtrip_is_stable() {
+        for y in [
+            REACTIVE,
+            "policy:\n  kind: scheduled\n",
+            "policy:\n  kind: predictive\n  window_ticks: 5\nmax_targets: 3\n",
+        ] {
+            let a = AutoscaleConfig::from_yaml(y).unwrap();
+            let j = a.to_canonical_json();
+            let back = AutoscaleConfig::from_json(&j).unwrap();
+            assert_eq!(a, back);
+            assert_eq!(
+                j.to_string_canonical(),
+                back.to_canonical_json().to_string_canonical()
+            );
+        }
+    }
+
+    #[test]
+    fn validation_checks_bounds_against_deployment() {
+        let a = AutoscaleConfig::from_yaml("max_targets: 6\n").unwrap();
+        assert!(a.validate(4).unwrap_err().contains("exceeds"));
+        let a = AutoscaleConfig::from_yaml("min_targets: 3\nmax_targets: 2\n").unwrap();
+        assert!(a.validate(4).is_err());
+        let a = AutoscaleConfig::from_yaml("min_targets: 2\ninitial_targets: 1\n").unwrap();
+        assert!(a.validate(4).unwrap_err().contains("initial_targets"));
+        assert!(AutoscaleConfig::from_yaml("min_targets: 0\n").is_err());
+        assert!(AutoscaleConfig::from_yaml("eval_interval_ms: 0\n").is_err());
+        assert!(AutoscaleConfig::from_yaml("cooldown_ms: -1\n").is_err());
+    }
+
+    #[test]
+    fn metrics_json_roundtrip() {
+        let m = AutoscaleMetrics {
+            target_seconds: 12.5,
+            cost: 25.0,
+            cost_per_1k_tokens: 0.8,
+            scale_up_events: 3,
+            scale_down_events: 2,
+            peak_provisioned: 4,
+            final_provisioned: 2,
+            steps: vec![(0.0, 2), (1_000.0, 3), (5_000.0, 2), (9_000.0, 2)],
+        };
+        let back = AutoscaleMetrics::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+        // NaN cost-per-token (no tokens) survives via the null convention.
+        let empty = AutoscaleMetrics {
+            cost_per_1k_tokens: f64::NAN,
+            ..m.clone()
+        };
+        let back = AutoscaleMetrics::from_json(&empty.to_json()).unwrap();
+        assert!(back.cost_per_1k_tokens.is_nan());
+        assert!(AutoscaleMetrics::from_json(&Json::obj()).is_none());
+    }
+}

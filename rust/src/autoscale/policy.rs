@@ -1,0 +1,561 @@
+//! Pluggable scaling policies and the tick-driven decision engine.
+//!
+//! Every policy is evaluated on the fixed autoscale tick against a
+//! [`CapacitySnapshot`] of the live system and emits a
+//! [`ScaleDecision`]. The [`PolicyEngine`] owns the cross-tick state —
+//! cooldown bookkeeping and the recent arrival-rate window the
+//! predictive policy extrapolates — so the policies themselves stay
+//! pure decision rules, unit-testable without a simulator.
+
+use crate::util::json::Json;
+
+/// The scaling decision rule of an
+/// [`AutoscaleConfig`](super::AutoscaleConfig).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScalingPolicy {
+    /// Threshold rule on the live queue depth and utilization, with a
+    /// hysteresis band: scale up when queued work per active target
+    /// exceeds `up_queue_depth`; scale down only when it has fallen
+    /// below the (strictly smaller) `down_queue_depth` *and* the busy
+    /// fraction is at or under `down_utilization`.
+    Reactive {
+        /// Queued work per active target triggering a scale-up.
+        up_queue_depth: f64,
+        /// Queued work per active target permitting a scale-down
+        /// (hysteresis: must be < `up_queue_depth`).
+        down_queue_depth: f64,
+        /// Busy-target fraction at or below which scale-down is allowed.
+        down_utilization: f64,
+    },
+    /// No tick-driven decisions: capacity changes come exclusively from
+    /// scripted `target_pool_up` / `target_pool_down` scenario events
+    /// (and a fixed fleet with no events gets pure cost accounting).
+    Scheduled,
+    /// Trend extrapolation: the recent arrival-rate slope is projected
+    /// one provisioning lead ahead, the backlog is forecast under the
+    /// projected rate, and the thresholds act on that *forecast* — so
+    /// capacity is requested before the spike arrives rather than after
+    /// the queue has already formed.
+    Predictive {
+        /// Arrival-rate history length, in ticks (slope window; ≥ 2).
+        window_ticks: usize,
+        /// Forecast backlog per committed target triggering a scale-up.
+        up_backlog_per_target: f64,
+        /// Forecast backlog per remaining target permitting a
+        /// scale-down (hysteresis: must be < `up_backlog_per_target`).
+        down_backlog_per_target: f64,
+    },
+}
+
+impl ScalingPolicy {
+    /// The default reactive rule (used when a config block names no
+    /// policy).
+    pub fn default_reactive() -> ScalingPolicy {
+        ScalingPolicy::Reactive {
+            up_queue_depth: 6.0,
+            down_queue_depth: 1.0,
+            down_utilization: 0.35,
+        }
+    }
+
+    /// Stable kind name (YAML `kind:` values and labels).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ScalingPolicy::Reactive { .. } => "reactive",
+            ScalingPolicy::Scheduled => "scheduled",
+            ScalingPolicy::Predictive { .. } => "predictive",
+        }
+    }
+
+    /// Parse the `policy:` block. Strict: unknown keys are rejected.
+    pub fn from_json(j: &Json) -> Result<ScalingPolicy, String> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("autoscale policy: missing 'kind'")?;
+        let allowed: &[&str] = match kind {
+            "reactive" => &["up_queue_depth", "down_queue_depth", "down_utilization"],
+            "scheduled" => &[],
+            "predictive" => &[
+                "window_ticks",
+                "up_backlog_per_target",
+                "down_backlog_per_target",
+            ],
+            _ => &[], // unknown kind: rejected below with the full list
+        };
+        if let Json::Obj(pairs) = j {
+            for (k, _) in pairs {
+                if k != "kind" && !allowed.contains(&k.as_str()) {
+                    return Err(format!("autoscale policy ({kind}): unknown key '{k}'"));
+                }
+            }
+        }
+        let num = |key: &str, default: f64| -> Result<f64, String> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| format!("autoscale policy ({kind}): '{key}' must be a number")),
+            }
+        };
+        let p = match kind {
+            "reactive" => ScalingPolicy::Reactive {
+                up_queue_depth: num("up_queue_depth", 6.0)?,
+                down_queue_depth: num("down_queue_depth", 1.0)?,
+                down_utilization: num("down_utilization", 0.35)?,
+            },
+            "scheduled" => ScalingPolicy::Scheduled,
+            "predictive" => ScalingPolicy::Predictive {
+                window_ticks: match j.get("window_ticks") {
+                    None => 4,
+                    Some(v) => v.as_usize().ok_or(
+                        "autoscale policy (predictive): 'window_ticks' must be a count",
+                    )?,
+                },
+                up_backlog_per_target: num("up_backlog_per_target", 6.0)?,
+                down_backlog_per_target: num("down_backlog_per_target", 1.0)?,
+            },
+            other => {
+                return Err(format!(
+                    "autoscale policy: unknown kind '{other}' \
+                     (known: reactive, scheduled, predictive)"
+                ))
+            }
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Canonical JSON (fixed key order per kind — part of the sweep
+    /// cache key for autoscale-bearing configs).
+    pub fn to_canonical_json(&self) -> Json {
+        let base = Json::obj().with("kind", self.kind().into());
+        match *self {
+            ScalingPolicy::Reactive {
+                up_queue_depth,
+                down_queue_depth,
+                down_utilization,
+            } => base
+                .with("up_queue_depth", up_queue_depth.into())
+                .with("down_queue_depth", down_queue_depth.into())
+                .with("down_utilization", down_utilization.into()),
+            ScalingPolicy::Scheduled => base,
+            ScalingPolicy::Predictive {
+                window_ticks,
+                up_backlog_per_target,
+                down_backlog_per_target,
+            } => base
+                .with("window_ticks", window_ticks.into())
+                .with("up_backlog_per_target", up_backlog_per_target.into())
+                .with("down_backlog_per_target", down_backlog_per_target.into()),
+        }
+    }
+
+    /// Sanity checks (thresholds finite, hysteresis bands ordered).
+    pub fn validate(&self) -> Result<(), String> {
+        let band = |up_name: &str, up: f64, down_name: &str, down: f64| -> Result<(), String> {
+            if !up.is_finite() || up <= 0.0 {
+                return Err(format!(
+                    "autoscale policy: {up_name} must be finite and positive"
+                ));
+            }
+            if !down.is_finite() || down < 0.0 {
+                return Err(format!(
+                    "autoscale policy: {down_name} must be finite and ≥ 0"
+                ));
+            }
+            if down >= up {
+                return Err(format!(
+                    "autoscale policy: {down_name} must be below {up_name} \
+                     (the hysteresis band prevents scale flapping)"
+                ));
+            }
+            Ok(())
+        };
+        match *self {
+            ScalingPolicy::Reactive {
+                up_queue_depth,
+                down_queue_depth,
+                down_utilization,
+            } => {
+                band(
+                    "up_queue_depth",
+                    up_queue_depth,
+                    "down_queue_depth",
+                    down_queue_depth,
+                )?;
+                if !down_utilization.is_finite() || !(0.0..=1.0).contains(&down_utilization) {
+                    return Err(
+                        "autoscale policy: down_utilization must be in [0, 1]".into()
+                    );
+                }
+                Ok(())
+            }
+            ScalingPolicy::Scheduled => Ok(()),
+            ScalingPolicy::Predictive {
+                window_ticks,
+                up_backlog_per_target,
+                down_backlog_per_target,
+            } => {
+                if window_ticks < 2 {
+                    return Err(
+                        "autoscale policy: window_ticks must be at least 2 (a slope \
+                         needs two samples)"
+                            .into(),
+                    );
+                }
+                band(
+                    "up_backlog_per_target",
+                    up_backlog_per_target,
+                    "down_backlog_per_target",
+                    down_backlog_per_target,
+                )
+            }
+        }
+    }
+}
+
+/// Live-system observation one autoscale tick evaluates.
+#[derive(Clone, Copy, Debug)]
+pub struct CapacitySnapshot {
+    /// Tick time, ms.
+    pub now_ms: f64,
+    /// Committed capacity: Active + Provisioning targets.
+    pub committed: usize,
+    /// Targets currently accepting work.
+    pub active: usize,
+    /// Active targets currently executing a batch.
+    pub busy_active: usize,
+    /// Work queued across active targets (prefill + verify + fused
+    /// residents).
+    pub queued: usize,
+    /// Requests arrived but not yet completed, system-wide.
+    pub backlog: usize,
+    /// Arrival rate over the last tick, requests/second.
+    pub arrival_rate_per_s: f64,
+    /// Completion rate over the last tick, requests/second.
+    pub completion_rate_per_s: f64,
+}
+
+/// What one tick decided.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// No change.
+    Hold,
+    /// Provision this many additional targets.
+    Up(usize),
+    /// Drain this many targets.
+    Down(usize),
+}
+
+/// Tick-driven decision engine: applies the policy rule under the
+/// configured cooldown and capacity bounds, and maintains the
+/// arrival-rate history the predictive rule extrapolates.
+pub struct PolicyEngine {
+    policy: ScalingPolicy,
+    cooldown_ms: f64,
+    eval_interval_ms: f64,
+    /// Forecast lead: a decision made now delivers capacity one
+    /// provisioning delay (plus one tick of decision latency) later.
+    lead_ms: f64,
+    min: usize,
+    max: usize,
+    last_decision_ms: f64,
+    /// Recent arrival rates, oldest first (bounded by the predictive
+    /// window; unused but cheap for the other policies).
+    rates: Vec<f64>,
+}
+
+impl PolicyEngine {
+    /// Engine for one config with bounds already resolved against the
+    /// deployment.
+    pub fn new(cfg: &super::AutoscaleConfig, min: usize, max: usize) -> PolicyEngine {
+        PolicyEngine {
+            policy: cfg.policy.clone(),
+            cooldown_ms: cfg.cooldown_ms,
+            eval_interval_ms: cfg.eval_interval_ms,
+            lead_ms: cfg.provision_delay_ms + cfg.eval_interval_ms,
+            min,
+            max,
+            last_decision_ms: f64::NEG_INFINITY,
+            rates: Vec::new(),
+        }
+    }
+
+    /// Evaluate one tick. Non-`Hold` outcomes stamp the cooldown clock;
+    /// a tick inside the cooldown window always holds (the rate history
+    /// still advances, so the predictive slope never goes stale).
+    pub fn decide(&mut self, snap: &CapacitySnapshot) -> ScaleDecision {
+        let window = match self.policy {
+            ScalingPolicy::Predictive { window_ticks, .. } => window_ticks,
+            _ => 2,
+        };
+        self.rates.push(snap.arrival_rate_per_s);
+        if self.rates.len() > window {
+            self.rates.remove(0);
+        }
+        if snap.now_ms - self.last_decision_ms < self.cooldown_ms {
+            return ScaleDecision::Hold;
+        }
+        let decision = match self.policy {
+            ScalingPolicy::Scheduled => ScaleDecision::Hold,
+            ScalingPolicy::Reactive {
+                up_queue_depth,
+                down_queue_depth,
+                down_utilization,
+            } => {
+                let active = snap.active.max(1) as f64;
+                let q_per = snap.queued as f64 / active;
+                let util = snap.busy_active as f64 / active;
+                if q_per > up_queue_depth && snap.committed < self.max {
+                    ScaleDecision::Up(1)
+                } else if snap.committed > self.min
+                    && q_per <= down_queue_depth
+                    && util <= down_utilization
+                {
+                    ScaleDecision::Down(1)
+                } else {
+                    ScaleDecision::Hold
+                }
+            }
+            ScalingPolicy::Predictive {
+                up_backlog_per_target,
+                down_backlog_per_target,
+                ..
+            } => {
+                let newest = *self.rates.last().expect("rate pushed above");
+                let oldest = self.rates[0];
+                let slope_per_ms = if self.rates.len() >= 2 {
+                    (newest - oldest) / ((self.rates.len() - 1) as f64 * self.eval_interval_ms)
+                } else {
+                    0.0
+                };
+                let forecast_rate = (newest + slope_per_ms * self.lead_ms).max(0.0);
+                let drift =
+                    (forecast_rate - snap.completion_rate_per_s) * self.lead_ms / 1_000.0;
+                let forecast_backlog = (snap.backlog as f64 + drift).max(0.0);
+                let committed = snap.committed.max(1) as f64;
+                if forecast_backlog / committed > up_backlog_per_target
+                    && snap.committed < self.max
+                {
+                    ScaleDecision::Up(1)
+                } else if snap.committed > self.min
+                    && forecast_backlog / (committed - 1.0).max(1.0) <= down_backlog_per_target
+                {
+                    ScaleDecision::Down(1)
+                } else {
+                    ScaleDecision::Hold
+                }
+            }
+        };
+        if decision != ScaleDecision::Hold {
+            self.last_decision_ms = snap.now_ms;
+        }
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::AutoscaleConfig;
+    use crate::util::prop::{run_prop, Gen};
+
+    fn engine(policy: ScalingPolicy, cooldown_ms: f64, min: usize, max: usize) -> PolicyEngine {
+        let cfg = AutoscaleConfig {
+            policy,
+            cooldown_ms,
+            eval_interval_ms: 500.0,
+            provision_delay_ms: 1_000.0,
+            ..AutoscaleConfig::default()
+        };
+        PolicyEngine::new(&cfg, min, max)
+    }
+
+    fn snap(now_ms: f64, committed: usize, queued: usize, busy: usize) -> CapacitySnapshot {
+        CapacitySnapshot {
+            now_ms,
+            committed,
+            active: committed,
+            busy_active: busy,
+            queued,
+            backlog: queued,
+            arrival_rate_per_s: 10.0,
+            completion_rate_per_s: 10.0,
+        }
+    }
+
+    #[test]
+    fn reactive_scales_up_on_queue_pressure_and_down_when_idle() {
+        let mut e = engine(ScalingPolicy::default_reactive(), 0.0, 1, 4);
+        // 2 targets, 20 queued → 10 per target > 6 → up.
+        assert_eq!(e.decide(&snap(0.0, 2, 20, 2)), ScaleDecision::Up(1));
+        // Mid-band: hold (hysteresis — neither threshold crossed).
+        assert_eq!(e.decide(&snap(500.0, 3, 9, 3)), ScaleDecision::Hold);
+        // Empty and idle → down.
+        assert_eq!(e.decide(&snap(1_000.0, 3, 0, 0)), ScaleDecision::Down(1));
+        // At the lower bound: never below min.
+        assert_eq!(e.decide(&snap(1_500.0, 1, 0, 0)), ScaleDecision::Hold);
+        // At the upper bound: never above max.
+        assert_eq!(e.decide(&snap(2_000.0, 4, 99, 4)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn cooldown_suppresses_consecutive_decisions() {
+        let mut e = engine(ScalingPolicy::default_reactive(), 2_000.0, 1, 8);
+        assert_eq!(e.decide(&snap(0.0, 2, 40, 2)), ScaleDecision::Up(1));
+        // Pressure persists but the cooldown window holds the line.
+        assert_eq!(e.decide(&snap(500.0, 3, 40, 3)), ScaleDecision::Hold);
+        assert_eq!(e.decide(&snap(1_999.0, 3, 40, 3)), ScaleDecision::Hold);
+        // Cooldown elapsed → the next decision fires.
+        assert_eq!(e.decide(&snap(2_000.0, 3, 40, 3)), ScaleDecision::Up(1));
+    }
+
+    #[test]
+    fn scheduled_policy_never_decides() {
+        let mut e = engine(ScalingPolicy::Scheduled, 0.0, 1, 4);
+        assert_eq!(e.decide(&snap(0.0, 2, 500, 2)), ScaleDecision::Hold);
+        assert_eq!(e.decide(&snap(500.0, 2, 0, 0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn predictive_provisions_ahead_of_a_rising_trend() {
+        let p = ScalingPolicy::Predictive {
+            window_ticks: 3,
+            up_backlog_per_target: 6.0,
+            down_backlog_per_target: 1.0,
+        };
+        let mut e = engine(p, 0.0, 1, 4);
+        // Arrival rate ramps 10 → 30 → 50 while completions stay at 10
+        // and the *current* backlog is still small: the reactive rule
+        // would hold, the forecast does not.
+        let mut s = snap(0.0, 2, 0, 2);
+        s.backlog = 2;
+        s.arrival_rate_per_s = 10.0;
+        assert_eq!(e.decide(&s), ScaleDecision::Hold);
+        s.now_ms = 500.0;
+        s.arrival_rate_per_s = 30.0;
+        let _ = e.decide(&s);
+        s.now_ms = 1_000.0;
+        s.arrival_rate_per_s = 50.0;
+        // slope = 40/s per 1000ms; lead 1500ms → forecast 110/s;
+        // drift (110-10)·1.5 = 150 ≫ 6 per target.
+        assert_eq!(e.decide(&s), ScaleDecision::Up(1));
+    }
+
+    #[test]
+    fn predictive_shrinks_once_the_forecast_backlog_clears() {
+        let p = ScalingPolicy::Predictive {
+            window_ticks: 3,
+            up_backlog_per_target: 6.0,
+            down_backlog_per_target: 1.0,
+        };
+        let mut e = engine(p, 0.0, 1, 4);
+        let mut s = snap(0.0, 3, 0, 0);
+        s.backlog = 0;
+        s.arrival_rate_per_s = 5.0;
+        s.completion_rate_per_s = 20.0;
+        assert_eq!(e.decide(&s), ScaleDecision::Down(1));
+        // But never below min.
+        s.now_ms = 500.0;
+        s.committed = 1;
+        assert_eq!(e.decide(&s), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn validation_rejects_inverted_hysteresis_bands() {
+        assert!(ScalingPolicy::Reactive {
+            up_queue_depth: 2.0,
+            down_queue_depth: 3.0,
+            down_utilization: 0.5,
+        }
+        .validate()
+        .is_err());
+        assert!(ScalingPolicy::Reactive {
+            up_queue_depth: 2.0,
+            down_queue_depth: 1.0,
+            down_utilization: 1.5,
+        }
+        .validate()
+        .is_err());
+        assert!(ScalingPolicy::Predictive {
+            window_ticks: 1,
+            up_backlog_per_target: 4.0,
+            down_backlog_per_target: 1.0,
+        }
+        .validate()
+        .is_err());
+        assert!(ScalingPolicy::default_reactive().validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_all_kinds() {
+        for p in [
+            ScalingPolicy::default_reactive(),
+            ScalingPolicy::Scheduled,
+            ScalingPolicy::Predictive {
+                window_ticks: 6,
+                up_backlog_per_target: 8.0,
+                down_backlog_per_target: 2.0,
+            },
+        ] {
+            let j = p.to_canonical_json();
+            let back = ScalingPolicy::from_json(&j).unwrap();
+            assert_eq!(p, back);
+            assert_eq!(
+                j.to_string_canonical(),
+                back.to_canonical_json().to_string_canonical()
+            );
+        }
+        let typo = Json::obj()
+            .with("kind", "reactive".into())
+            .with("up_que_depth", 5.0.into());
+        assert!(ScalingPolicy::from_json(&typo).unwrap_err().contains("unknown key"));
+    }
+
+    /// Property (ISSUE satellite): under arbitrary snapshots the engine
+    /// never proposes leaving `[min, max]`, and decisions are never
+    /// closer together than the cooldown.
+    #[test]
+    fn prop_decisions_respect_bounds_and_cooldown() {
+        run_prop("policy engine bounds + cooldown", 50, |g: &mut Gen| {
+            let min = g.usize_in(1, 3);
+            let max = min + g.usize_in(0, 5);
+            let cooldown = g.f64_in(0.0, 5_000.0);
+            let policy = if g.bool_with(0.5) {
+                ScalingPolicy::default_reactive()
+            } else {
+                ScalingPolicy::Predictive {
+                    window_ticks: g.usize_in(2, 6),
+                    up_backlog_per_target: g.f64_in(2.0, 10.0),
+                    down_backlog_per_target: g.f64_in(0.0, 1.9),
+                }
+            };
+            let mut e = engine(policy, cooldown, min, max);
+            let mut committed = g.usize_in(min, max);
+            let mut last_decision = f64::NEG_INFINITY;
+            for tick in 0..200 {
+                let now = tick as f64 * 500.0;
+                let mut s = snap(now, committed, g.usize_in(0, 60), g.usize_in(0, committed));
+                s.backlog = g.usize_in(0, 80);
+                s.arrival_rate_per_s = g.f64_in(0.0, 100.0);
+                s.completion_rate_per_s = g.f64_in(0.0, 100.0);
+                match e.decide(&s) {
+                    ScaleDecision::Up(n) => {
+                        assert!(committed + n <= max, "up beyond max");
+                        assert!(now - last_decision >= cooldown, "cooldown violated");
+                        committed += n;
+                        last_decision = now;
+                    }
+                    ScaleDecision::Down(n) => {
+                        assert!(committed - n >= min, "down beyond min");
+                        assert!(now - last_decision >= cooldown, "cooldown violated");
+                        committed -= n;
+                        last_decision = now;
+                    }
+                    ScaleDecision::Hold => {}
+                }
+            }
+        });
+    }
+}

@@ -5,6 +5,7 @@
 //! `auto_topology` pass ([`crate::config::topology`]) expands it into
 //! explicit device pools.
 
+use crate::autoscale::AutoscaleConfig;
 use crate::cluster::{gpu_by_name, model_by_name, GpuSpec, ModelSpec};
 use crate::scenario::Scenario;
 use crate::util::json::Json;
@@ -164,6 +165,11 @@ pub struct SimConfig {
     /// timeline of link/device/load events (see [`crate::scenario`]).
     /// `None` reproduces the static pre-scenario simulator bit for bit.
     pub scenario: Option<Scenario>,
+    /// Optional elastic target pool (see [`crate::autoscale`]):
+    /// `cluster.targets` then declares the *physical* fleet and the
+    /// autoscale policy chooses how much of it is provisioned over
+    /// time. `None` reproduces the fixed-fleet simulator bit for bit.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl SimConfig {
@@ -178,10 +184,19 @@ impl SimConfig {
         Self::from_json(&doc)
     }
 
-    /// Load from a YAML file.
+    /// Load from a YAML file. Relative resource paths inside the
+    /// document — currently the `kind: trace` arrival envelope's
+    /// timestamp file — resolve against the config file's directory.
     pub fn from_yaml_file(path: &str) -> Result<SimConfig, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
-        Self::from_yaml(&text)
+        let mut cfg = Self::from_yaml(&text)?;
+        if let Some(s) = &mut cfg.scenario {
+            let base = std::path::Path::new(path)
+                .parent()
+                .unwrap_or(std::path::Path::new("."));
+            s.resolve_paths(base)?;
+        }
+        Ok(cfg)
     }
 
     /// Parse from an already-decoded document (the sweep grid embeds a
@@ -268,6 +283,9 @@ impl SimConfig {
         }
         if let Some(s) = doc.get("scenario") {
             b.cfg.scenario = Some(Scenario::from_json(s)?);
+        }
+        if let Some(a) = doc.get("autoscale") {
+            b.cfg.autoscale = Some(AutoscaleConfig::from_json(a)?);
         }
         b.cfg.validate()?;
         Ok(b.cfg)
@@ -391,6 +409,12 @@ impl SimConfig {
         if let Some(s) = &self.scenario {
             j.set("scenario", s.to_canonical_json());
         }
+        // Like the scenario block: appended only when present, so
+        // autoscale-free configs keep their historical canonical bytes
+        // and existing sweep cache keys stay valid.
+        if let Some(a) = &self.autoscale {
+            j.set("autoscale", a.to_canonical_json());
+        }
         j
     }
 
@@ -441,8 +465,30 @@ impl SimConfig {
         if self.batch.decode_batch == 0 || self.batch.prefill_batch == 0 {
             return Err("config: zero batch size".into());
         }
+        if let Some(a) = &self.autoscale {
+            a.validate(self.n_targets())?;
+        }
         if let Some(s) = &self.scenario {
             s.validate(self.drafter_pools.len(), self.n_targets())?;
+            // Scripted capacity events drive the autoscale fleet; with
+            // no autoscale block they could not take effect and must
+            // not silently pretend to.
+            let has_pool_events = s.events.iter().any(|e| {
+                matches!(
+                    e.event,
+                    crate::scenario::ScenarioEvent::TargetPoolUp { .. }
+                        | crate::scenario::ScenarioEvent::TargetPoolDown { .. }
+                )
+            });
+            if has_pool_events && self.autoscale.is_none() {
+                return Err(
+                    "config: scenario target_pool_up/target_pool_down events require an \
+                     autoscale: block (they drive the elastic target pool; add \
+                     `autoscale: {policy: {kind: scheduled}}` for purely scripted \
+                     capacity)"
+                        .into(),
+                );
+            }
             // Trace-driven workloads carry their own arrival times; a
             // scenario arrival process (or rate override) could not take
             // effect and must not silently pretend to — the cell would
@@ -575,6 +621,7 @@ impl Default for SimConfigBuilder {
                 },
                 max_sim_ms: 3_600_000.0,
                 scenario: None,
+                autoscale: None,
             },
         }
     }
@@ -649,6 +696,11 @@ impl SimConfigBuilder {
     /// Attach a scripted-dynamics scenario.
     pub fn scenario(mut self, s: Scenario) -> Self {
         self.cfg.scenario = Some(s);
+        self
+    }
+    /// Attach an elastic-capacity (autoscale) block.
+    pub fn autoscale(mut self, a: AutoscaleConfig) -> Self {
+        self.cfg.autoscale = Some(a);
         self
     }
     /// Finalize (panics on invalid combinations — builder misuse is a bug).
@@ -979,6 +1031,67 @@ scenario:
         assert_ne!(pj, aj);
         assert_ne!(aj, bj);
         assert!(a.to_canonical_json().path(&["scenario", "name"]).is_some());
+    }
+
+    #[test]
+    fn autoscale_block_parses_validates_and_forks_canonical_bytes() {
+        let y = "\
+seed: 5
+cluster:
+  targets:
+    - count: 4
+  drafters:
+    - count: 8
+autoscale:
+  policy:
+    kind: reactive
+    up_queue_depth: 4
+  min_targets: 1
+  max_targets: 4
+  initial_targets: 2
+";
+        let c = SimConfig::from_yaml(y).unwrap();
+        let a = c.autoscale.as_ref().unwrap();
+        assert_eq!(a.min_targets, 1);
+        assert_eq!(a.resolved_initial(c.n_targets()), 2);
+        // Bounds beyond the deployment are rejected at validate time.
+        let bad = y.replace("max_targets: 4", "max_targets: 9");
+        assert!(SimConfig::from_yaml(&bad).unwrap_err().contains("exceeds"));
+        // No "autoscale" key for autoscale-free configs: historical
+        // sweep cache keys must remain valid.
+        let plain = SimConfig::builder().build();
+        assert!(plain.to_canonical_json().get("autoscale").is_none());
+        // Attaching a block changes the canonical bytes; different
+        // blocks differ from each other.
+        let pj = plain.to_canonical_json().to_string_canonical();
+        let aj = c.to_canonical_json().to_string_canonical();
+        let c2 = SimConfig::from_yaml(&y.replace("up_queue_depth: 4", "up_queue_depth: 8"))
+            .unwrap();
+        let bj = c2.to_canonical_json().to_string_canonical();
+        assert_ne!(pj, aj);
+        assert_ne!(aj, bj);
+        assert!(c.to_canonical_json().path(&["autoscale", "policy", "kind"]).is_some());
+    }
+
+    #[test]
+    fn scenario_target_pool_events_require_an_autoscale_block() {
+        let y = "\
+cluster:
+  targets:
+    - count: 3
+  drafters:
+    - count: 6
+scenario:
+  name: scripted
+  events:
+    - at_ms: 1000
+      kind: target_pool_down
+      count: 1
+";
+        let err = SimConfig::from_yaml(y).unwrap_err();
+        assert!(err.contains("autoscale"), "{err}");
+        let with_block = format!("{y}autoscale:\n  policy:\n    kind: scheduled\n");
+        SimConfig::from_yaml(&with_block).unwrap();
     }
 
     #[test]

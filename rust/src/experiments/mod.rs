@@ -3,8 +3,9 @@
 //! `dsd reproduce --exp <id>` is the CLI entry; `rust/benches/bench_*`
 //! time the same code paths.
 //!
-//! Every runner-backed family (fig5, fig6, fig7/8, fig9/10, table2, and
-//! the scenario-driven `agility` family)
+//! Every runner-backed family (fig5, fig6, fig7/8, fig9/10, table2, the
+//! scenario-driven `agility` family, and the autoscale-driven
+//! `elasticity` family)
 //! executes through `sweep::run_cells_cached`, so all of them inherit
 //! `--cache-dir` (content-addressed per-cell persistence + kill-resume),
 //! `--threads`, and `--streaming` (bounded-memory cells for 1M+ request
@@ -13,6 +14,7 @@
 
 pub mod agility;
 pub mod common;
+pub mod elasticity;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
@@ -91,16 +93,20 @@ pub fn run_experiment_opts(
             "fig9_10" => fig9_10::run_cached(scale, seeds, &ctx),
             "table2" => table2::run_cached(scale, seeds, &ctx),
             "agility" => agility::run_cached(scale, seeds, &ctx),
+            "elasticity" => elasticity::run_cached(scale, seeds, &ctx),
             other => unreachable!("unrouted experiment '{other}'"),
         })
     };
     Ok(match exp {
-        "fig4" | "fig5" | "fig6" | "table2" | "agility" => run_one(exp)?,
+        "fig4" | "fig5" | "fig6" | "table2" | "agility" | "elasticity" => run_one(exp)?,
         "fig7" | "fig8" | "fig7_8" => run_one("fig7_8")?,
         "fig9" | "fig10" | "fig9_10" => run_one("fig9_10")?,
         "all" => {
             let mut out = String::new();
-            for e in ["fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2", "agility"] {
+            for e in [
+                "fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2", "agility",
+                "elasticity",
+            ] {
                 out.push_str(&run_one(e)?);
                 out.push('\n');
             }
@@ -109,7 +115,7 @@ pub fn run_experiment_opts(
         other => {
             return Err(format!(
                 "unknown experiment '{other}' (try: fig4 fig5 fig6 fig7 fig9 table2 \
-                 agility all)"
+                 agility elasticity all)"
             ))
         }
     })

@@ -35,6 +35,7 @@
 //! println!("{}", report.summary());
 //! ```
 
+pub mod autoscale;
 pub mod awc;
 pub mod cluster;
 pub mod config;

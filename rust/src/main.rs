@@ -2,10 +2,12 @@
 //!
 //! Subcommands:
 //!   simulate       run DSD-Sim on a YAML deployment config (--scenario adds
-//!                  scripted dynamics: flash crowds, link churn, failures)
+//!                  scripted dynamics: flash crowds, link churn, failures;
+//!                  --autoscale adds an elastic target pool with cost
+//!                  accounting)
 //!   sweep          expand a scenario grid and run every cell in parallel
 //!   reproduce      regenerate a paper table/figure (fig4..fig10, table2,
-//!                  agility, all)
+//!                  agility, elasticity, all)
 //!   sweep-dataset  generate the AWC training dataset (paper §4.2)
 //!   trace-gen      emit a synthetic workload trace (Table 1 schema)
 //!   serve          run the real edge-cloud serving path on AOT artifacts
@@ -52,6 +54,13 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
              churn, device failures — overrides any scenario in --config)",
             None,
         )
+        .opt(
+            "autoscale",
+            "autoscale YAML file (elastic target pool: scaling policy, capacity \
+             bounds, cold-start delay, cost rate — overrides any autoscale block \
+             in --config)",
+            None,
+        )
         .opt("seed", "override RNG seed", None)
         .flag(
             "streaming",
@@ -64,8 +73,16 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         Some(path) => SimConfig::from_yaml_file(path)?,
         None => SimConfig::builder().build(),
     };
+    // Apply BOTH overrides before validating: a scenario with
+    // target_pool_* events is only valid together with an autoscale
+    // block, and the two commonly arrive as a flag pair.
     if let Some(path) = a.get("scenario") {
         cfg.scenario = Some(dsd::scenario::Scenario::from_yaml_file(path)?);
+    }
+    if let Some(path) = a.get("autoscale") {
+        cfg.autoscale = Some(dsd::autoscale::AutoscaleConfig::from_yaml_file(path)?);
+    }
+    if a.get("scenario").is_some() || a.get("autoscale").is_some() {
         cfg.validate()?;
     }
     if let Some(seed) = a.get_u64("seed").map_err(|e| e.to_string())? {
@@ -304,7 +321,11 @@ fn cmd_sweep_gc(
 
 fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("reproduce", "regenerate a paper table/figure")
-        .opt("exp", "fig4|fig5|fig6|fig7|fig9|table2|agility|all", Some("all"))
+        .opt(
+            "exp",
+            "fig4|fig5|fig6|fig7|fig9|table2|agility|elasticity|all",
+            Some("all"),
+        )
         .opt("scale", "request-count scale factor (1.0 = paper)", Some("1.0"))
         .opt("seeds", "number of seeds to average", Some("3"))
         .opt(

@@ -1,7 +1,10 @@
 //! Per-request and system-level metric records and the end-of-run report.
 
 use super::sink::{drafter_pool_of, GammaSummary, GroupSummary};
-use super::timeseries::{TimeSeriesConfig, TimeSeriesSummary, WindowSummary};
+use super::timeseries::{
+    integrate_capacity_segment, TimeSeriesConfig, TimeSeriesSummary, WindowSummary,
+};
+use crate::autoscale::AutoscaleMetrics;
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 
@@ -99,6 +102,11 @@ pub struct SystemMetrics {
     /// `[q_depth_util, α_recent, RTT_recent, TPOT_recent, γ_prev]` —
     /// consumed by the AWC training-dataset generator (paper §4.2).
     pub mean_features: [f64; 5],
+    /// Elastic-capacity accounting (target-seconds, cost, the
+    /// provisioned-count step series) — present only for runs with an
+    /// `autoscale:` block, so autoscale-free reports keep their
+    /// historical bytes. See [`crate::autoscale`].
+    pub autoscale: Option<AutoscaleMetrics>,
 }
 
 /// SLO thresholds for goodput-style evaluation.
@@ -282,7 +290,31 @@ impl SimReport {
                 }
             }
         }
-        let n = bins.len().max(active.len());
+        // Active-target-count series: integrate the autoscale fleet's
+        // provisioned-count step function over the window grid — the
+        // batch recomputation of the series the streaming sink folds
+        // incrementally through `record_capacity`. Both sides process
+        // the same segments in time order through the one shared
+        // integration routine, so per-window sums are bit-identical by
+        // construction (the parity harness checks the plumbing around
+        // it: step delivery, presence rules, the per-window divisor).
+        let mut cap_ms: Vec<f64> = Vec::new();
+        let has_capacity = self.system.autoscale.is_some();
+        if let Some(auto) = &self.system.autoscale {
+            for pair in auto.steps.windows(2) {
+                let (t0, count) = pair[0];
+                let (t1, _) = pair[1];
+                integrate_capacity_segment(
+                    &mut cap_ms,
+                    w,
+                    cfg.max_windows,
+                    t0,
+                    t1,
+                    count as f64,
+                );
+            }
+        }
+        let n = bins.len().max(active.len()).max(cap_ms.len());
         let empty = Bin::default();
         let windows = (0..n)
             .map(|k| {
@@ -307,6 +339,11 @@ impl SimReport {
                         f64::NAN
                     } else {
                         b.acc_sum / b.acc_n as f64
+                    },
+                    provisioned_targets: if has_capacity {
+                        Some(cap_ms.get(k).copied().unwrap_or(0.0) / w)
+                    } else {
+                        None
                     },
                 }
             })
@@ -369,20 +406,23 @@ impl SimReport {
     /// Full structured JSON (paper §3.5: "emitted in a structured JSON
     /// format" for online adaptation and offline analysis).
     pub fn to_json(&self) -> Json {
+        let mut system = Json::obj()
+            .with("throughput_rps", self.system.throughput_rps.into())
+            .with("token_throughput", self.system.token_throughput.into())
+            .with("target_utilization", self.system.target_utilization.into())
+            .with("mean_queue_delay_ms", self.system.mean_queue_delay_ms.into())
+            .with("mean_net_delay_ms", self.system.mean_net_delay_ms.into())
+            .with("sim_duration_ms", self.system.sim_duration_ms.into())
+            .with("completed", self.system.completed.into())
+            .with("events_processed", self.system.events_processed.into())
+            .with("wall_ms", self.system.wall_ms.into());
+        // Autoscale-free reports keep their historical bytes: the key
+        // exists only when an elastic pool actually ran.
+        if let Some(a) = &self.system.autoscale {
+            system.set("autoscale", a.to_json());
+        }
         Json::obj()
-            .with(
-                "system",
-                Json::obj()
-                    .with("throughput_rps", self.system.throughput_rps.into())
-                    .with("token_throughput", self.system.token_throughput.into())
-                    .with("target_utilization", self.system.target_utilization.into())
-                    .with("mean_queue_delay_ms", self.system.mean_queue_delay_ms.into())
-                    .with("mean_net_delay_ms", self.system.mean_net_delay_ms.into())
-                    .with("sim_duration_ms", self.system.sim_duration_ms.into())
-                    .with("completed", self.system.completed.into())
-                    .with("events_processed", self.system.events_processed.into())
-                    .with("wall_ms", self.system.wall_ms.into()),
-            )
+            .with("system", system)
             .with(
                 "aggregates",
                 Json::obj()

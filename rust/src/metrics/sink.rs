@@ -54,6 +54,18 @@ pub trait MetricsSink: Send {
     fn keep_gamma_history(&self) -> bool {
         true
     }
+
+    /// Fold one elastic-capacity step — the provisioned-target count
+    /// changed to `provisioned` at `at_ms` (see [`crate::autoscale`]).
+    /// Called only for autoscale-bearing runs: the t=0 initial count,
+    /// one step per fleet change, and an end-of-run marker. The
+    /// streaming sink integrates these into the windowed
+    /// active-target-count series; the full sink ignores them — its
+    /// report recomputes the same series from the step list retained in
+    /// [`SystemMetrics`](super::SystemMetrics) (`O(scale events)`, so
+    /// bounded either way), and the differential harness compares the
+    /// two.
+    fn record_capacity(&mut self, _at_ms: f64, _provisioned: u32) {}
 }
 
 /// Retains every per-request record (exact statistics, O(requests) memory).
@@ -460,6 +472,10 @@ impl MetricsSink for StreamingSink {
     fn keep_gamma_history(&self) -> bool {
         false
     }
+
+    fn record_capacity(&mut self, at_ms: f64, provisioned: u32) {
+        self.ts.fold_capacity(at_ms, provisioned);
+    }
 }
 
 /// Folded distribution of one latency metric.
@@ -606,19 +622,22 @@ impl StreamingReport {
     /// Full structured JSON (wall-clock excluded so output is
     /// bit-reproducible across runs).
     pub fn to_json(&self) -> Json {
+        let mut system = Json::obj()
+            .with("throughput_rps", self.system.throughput_rps.into())
+            .with("token_throughput", self.system.token_throughput.into())
+            .with("target_utilization", self.system.target_utilization.into())
+            .with("mean_queue_delay_ms", self.system.mean_queue_delay_ms.into())
+            .with("mean_net_delay_ms", self.system.mean_net_delay_ms.into())
+            .with("sim_duration_ms", self.system.sim_duration_ms.into())
+            .with("completed", self.system.completed.into())
+            .with("events_processed", self.system.events_processed.into());
+        // Key present only for autoscale-bearing runs (byte-stable
+        // reports otherwise).
+        if let Some(a) = &self.system.autoscale {
+            system.set("autoscale", a.to_json());
+        }
         Json::obj()
-            .with(
-                "system",
-                Json::obj()
-                    .with("throughput_rps", self.system.throughput_rps.into())
-                    .with("token_throughput", self.system.token_throughput.into())
-                    .with("target_utilization", self.system.target_utilization.into())
-                    .with("mean_queue_delay_ms", self.system.mean_queue_delay_ms.into())
-                    .with("mean_net_delay_ms", self.system.mean_net_delay_ms.into())
-                    .with("sim_duration_ms", self.system.sim_duration_ms.into())
-                    .with("completed", self.system.completed.into())
-                    .with("events_processed", self.system.events_processed.into()),
-            )
+            .with("system", system)
             .with("stream", self.stream.to_json())
     }
 }
@@ -697,6 +716,22 @@ mod tests {
         assert!(a.contains("\"gamma\""));
         assert!(a.contains("\"slo\""));
         assert!(a.contains("\"time_series\""));
+    }
+
+    #[test]
+    fn capacity_steps_reach_the_streaming_time_series() {
+        let mut s = StreamingSink::default();
+        s.record_capacity(0.0, 2);
+        s.record_capacity(500.0, 3);
+        s.record_capacity(1_000.0, 3); // end marker
+        s.record(&req(0, 100.0, 10.0, 0.8)); // completes at 200 ms → window 0
+        let sum = s.summary();
+        // 2 targets for 500 ms + 3 targets for 500 ms over a 1 s window.
+        assert!((sum.time_series.windows[0].provisioned_targets.unwrap() - 2.5).abs() < 1e-12);
+        // Without capacity steps the field never appears.
+        let mut plain = StreamingSink::default();
+        plain.record(&req(0, 100.0, 10.0, 0.8));
+        assert!(plain.summary().time_series.windows[0].provisioned_targets.is_none());
     }
 
     #[test]

@@ -64,6 +64,13 @@ pub struct TimeSeries {
     active: Vec<u64>,
     /// Completions beyond the window cap.
     overflow_completed: u64,
+    /// Per-window ∫(provisioned target count)dt in ms·targets — the
+    /// elastic-capacity series, folded incrementally from
+    /// [`TimeSeries::fold_capacity`] steps. Empty (and the summary
+    /// field absent) when no capacity steps were recorded.
+    cap_ms: Vec<f64>,
+    /// Last capacity step seen: `(time, count)`.
+    cap_last: Option<(f64, f64)>,
 }
 
 impl TimeSeries {
@@ -74,6 +81,8 @@ impl TimeSeries {
             windows: Vec::new(),
             active: Vec::new(),
             overflow_completed: 0,
+            cap_ms: Vec::new(),
+            cap_last: None,
         }
     }
 
@@ -115,9 +124,34 @@ impl TimeSeries {
         }
     }
 
+    /// Fold one provisioned-capacity step `(t_ms, count)`: the segment
+    /// since the previous step is integrated at the previous count into
+    /// the per-window capacity series. The simulator emits the t=0
+    /// initial count, one step per change, and an end-of-run marker, so
+    /// the series covers the whole run. Windows beyond the cap are
+    /// skipped (matching the completion fold's overflow behavior).
+    pub fn fold_capacity(&mut self, t_ms: f64, provisioned: u32) {
+        let t = t_ms.max(0.0);
+        if let Some((t0, count)) = self.cap_last {
+            integrate_capacity_segment(
+                &mut self.cap_ms,
+                self.cfg.window_ms,
+                self.cfg.max_windows,
+                t0,
+                t.max(t0),
+                count,
+            );
+        }
+        self.cap_last = Some((t.max(self.cap_last.map_or(0.0, |(t0, _)| t0)), provisioned as f64));
+    }
+
     /// Snapshot the folded series.
     pub fn summary(&self) -> TimeSeriesSummary {
-        let n = self.windows.len().max(self.active.len());
+        let n = self
+            .windows
+            .len()
+            .max(self.active.len())
+            .max(self.cap_ms.len());
         let empty = WindowAcc::default();
         let windows = (0..n)
             .map(|k| {
@@ -136,6 +170,11 @@ impl TimeSeries {
                     } else {
                         w.acceptance.mean()
                     },
+                    provisioned_targets: if self.cap_last.is_some() {
+                        Some(self.cap_ms.get(k).copied().unwrap_or(0.0) / self.cfg.window_ms)
+                    } else {
+                        None
+                    },
                 }
             })
             .collect();
@@ -144,6 +183,48 @@ impl TimeSeries {
             overflow_completed: self.overflow_completed,
             windows,
         }
+    }
+}
+
+/// Integrate one constant-count capacity segment `[a, b)` (ms, count in
+/// targets) into a per-window `ms·targets` accumulator, clamped to
+/// `max_windows`. This is the **single** implementation behind both the
+/// streaming sink's incremental fold ([`TimeSeries::fold_capacity`])
+/// and the report's batch recomputation
+/// ([`SimReport::time_series`](super::SimReport)): the windowed
+/// capacity series agrees between the two sides *by construction* —
+/// both feed the same step segments, in time order, through this exact
+/// arithmetic. The parity harness still checks the surrounding
+/// plumbing (step delivery, presence rules, the per-window divisor).
+pub(crate) fn integrate_capacity_segment(
+    cap_ms: &mut Vec<f64>,
+    window_ms: f64,
+    max_windows: usize,
+    a: f64,
+    b: f64,
+    count: f64,
+) {
+    let a = a.max(0.0);
+    let b = b.max(a);
+    if b <= a {
+        return;
+    }
+    let mut k = (a / window_ms) as usize;
+    while k < max_windows {
+        let ws = k as f64 * window_ms;
+        let we = ws + window_ms;
+        let lo = a.max(ws);
+        let hi = b.min(we);
+        if hi > lo {
+            if cap_ms.len() <= k {
+                cap_ms.resize(k + 1, 0.0);
+            }
+            cap_ms[k] += count * (hi - lo);
+        }
+        if we >= b {
+            break;
+        }
+        k += 1;
     }
 }
 
@@ -170,12 +251,18 @@ pub struct WindowSummary {
     /// Mean acceptance over the window's speculating completions — the
     /// accepted fraction of drafted tokens (NaN when none speculated).
     pub mean_acceptance: f64,
+    /// Time-weighted mean provisioned-target count over the window —
+    /// the elastic-capacity series. `None` (and the JSON key absent,
+    /// keeping autoscale-free series byte-identical) when the run had
+    /// no autoscale block. The final, partial window integrates only up
+    /// to the end of the run, mirroring its partial completion counts.
+    pub provisioned_targets: Option<f64>,
 }
 
 impl WindowSummary {
     /// JSON encoding (insertion-ordered keys, deterministic).
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .with("index", self.index.into())
             .with("start_ms", self.start_ms.into())
             .with("completed", self.completed.into())
@@ -184,7 +271,11 @@ impl WindowSummary {
             .with("throughput_rps", self.throughput_rps.into())
             .with("mean_ttft_ms", self.mean_ttft_ms.into())
             .with("mean_tpot_ms", self.mean_tpot_ms.into())
-            .with("mean_acceptance", self.mean_acceptance.into())
+            .with("mean_acceptance", self.mean_acceptance.into());
+        if let Some(p) = self.provisioned_targets {
+            j.set("provisioned_targets", p.into());
+        }
+        j
     }
 
     fn from_json(j: &Json) -> Option<WindowSummary> {
@@ -198,6 +289,12 @@ impl WindowSummary {
             mean_ttft_ms: j.get("mean_ttft_ms")?.as_f64_or_nan()?,
             mean_tpot_ms: j.get("mean_tpot_ms")?.as_f64_or_nan()?,
             mean_acceptance: j.get("mean_acceptance")?.as_f64_or_nan()?,
+            // Optional: absent on autoscale-free series (and on entries
+            // written before the elastic-capacity subsystem).
+            provisioned_targets: match j.get("provisioned_targets") {
+                None => None,
+                Some(v) => Some(v.as_f64_or_nan()?),
+            },
         })
     }
 }
@@ -245,8 +342,11 @@ impl TimeSeriesSummary {
 
     /// Mean completion throughput (req/s) over the full windows whose
     /// start lies in `[t0_ms, t1_ms)`; `None` when the range covers no
-    /// window.
+    /// window — including empty (`t1 ≤ t0`) and non-finite ranges, so a
+    /// degenerate query can never produce a NaN that propagates into
+    /// downstream means (ISSUE satellite).
     pub fn mean_throughput_between(&self, t0_ms: f64, t1_ms: f64) -> Option<f64> {
+        Self::range_ok(t0_ms, t1_ms)?;
         let xs: Vec<f64> = self
             .windows
             .iter()
@@ -260,6 +360,13 @@ impl TimeSeriesSummary {
         }
     }
 
+    /// Guard shared by the range/scan helpers: degenerate inputs
+    /// (non-finite bounds, empty ranges) yield `None` rather than a
+    /// silently-wrong scan.
+    fn range_ok(t0_ms: f64, t1_ms: f64) -> Option<()> {
+        (t0_ms.is_finite() && t1_ms.is_finite() && t1_ms > t0_ms).then_some(())
+    }
+
     /// Time from `event_ms` until throughput first sustains
     /// `target_rps`: scans windows **starting at or after** `event_ms`
     /// (a window straddling the event still contains pre-event
@@ -270,6 +377,13 @@ impl TimeSeriesSummary {
     /// recovers within the series — the agility experiment's
     /// time-to-recover metric.
     pub fn recovery_ms_after(&self, event_ms: f64, target_rps: f64) -> Option<f64> {
+        // A NaN target (e.g. a recovery fraction of a NaN baseline)
+        // would vacuously never match; a non-finite event time would
+        // scan from the wrong place. Both are caller bugs — fail to
+        // `None` instead of fabricating a recovery time.
+        if !event_ms.is_finite() || !target_rps.is_finite() {
+            return None;
+        }
         self.first_window_matching(event_ms, |w| w.throughput_rps >= target_rps)
     }
 
@@ -278,6 +392,9 @@ impl TimeSeriesSummary {
     /// [`TimeSeriesSummary::recovery_ms_after`], with the same window
     /// eligibility rules (post-event full windows only).
     pub fn drain_ms_after(&self, event_ms: f64, target_active: f64) -> Option<f64> {
+        if !event_ms.is_finite() || !target_active.is_finite() {
+            return None;
+        }
         self.first_window_matching(event_ms, |w| (w.active as f64) <= target_active)
     }
 
@@ -301,8 +418,10 @@ impl TimeSeriesSummary {
     }
 
     /// Mean active-request count over the full windows whose start lies
-    /// in `[t0_ms, t1_ms)`; `None` when the range covers no window.
+    /// in `[t0_ms, t1_ms)`; `None` when the range covers no window (or
+    /// is degenerate — see [`TimeSeriesSummary::mean_throughput_between`]).
     pub fn mean_active_between(&self, t0_ms: f64, t1_ms: f64) -> Option<f64> {
+        Self::range_ok(t0_ms, t1_ms)?;
         let xs: Vec<f64> = self
             .windows
             .iter()
@@ -425,6 +544,7 @@ mod tests {
                     mean_ttft_ms: 0.0,
                     mean_tpot_ms: 0.0,
                     mean_acceptance: f64::NAN,
+                    provisioned_targets: None,
                 })
                 .collect(),
         };
@@ -446,6 +566,71 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_ranges_return_none_not_nan() {
+        // ISSUE satellite: empty, inverted, and non-finite query ranges
+        // must fail to None — a NaN mean would silently poison every
+        // downstream seed average.
+        let mut ts = TimeSeries::new(TimeSeriesConfig { window_ms: 1_000.0, max_windows: 16 });
+        ts.fold(&req(0, 100.0, 400.0, 0.8));
+        ts.fold(&req(1, 1_200.0, 300.0, 0.8));
+        let s = ts.summary();
+        assert!(s.mean_throughput_between(1_000.0, 1_000.0).is_none(), "empty range");
+        assert!(s.mean_throughput_between(2_000.0, 1_000.0).is_none(), "inverted range");
+        assert!(s.mean_throughput_between(f64::NAN, 1_000.0).is_none());
+        assert!(s.mean_throughput_between(0.0, f64::NAN).is_none());
+        assert!(s.mean_throughput_between(f64::NEG_INFINITY, f64::INFINITY).is_none());
+        assert!(s.mean_active_between(500.0, 500.0).is_none());
+        assert!(s.mean_active_between(f64::NAN, f64::NAN).is_none());
+        assert!(s.recovery_ms_after(f64::NAN, 1.0).is_none());
+        assert!(s.recovery_ms_after(0.0, f64::NAN).is_none());
+        assert!(s.drain_ms_after(f64::INFINITY, 1.0).is_none());
+        assert!(s.drain_ms_after(0.0, f64::NAN).is_none());
+        // Well-formed queries still work.
+        assert!(s.mean_throughput_between(0.0, 2_000.0).is_some());
+    }
+
+    #[test]
+    fn capacity_steps_fold_into_windowed_means() {
+        let mut ts = TimeSeries::new(TimeSeriesConfig { window_ms: 1_000.0, max_windows: 8 });
+        // 2 targets for 1.5 windows, 3 targets for half a window, then
+        // back to 2 until the end-of-run marker at 3 s.
+        ts.fold_capacity(0.0, 2);
+        ts.fold_capacity(1_500.0, 3);
+        ts.fold_capacity(2_000.0, 2);
+        ts.fold_capacity(3_000.0, 2); // end marker
+        ts.fold(&req(0, 100.0, 300.0, 0.8));
+        let s = ts.summary();
+        assert_eq!(s.windows.len(), 3, "capacity extends the series past completions");
+        assert_eq!(s.windows[0].provisioned_targets, Some(2.0));
+        // Window 1: 2 targets for 500 ms + 3 targets for 500 ms = 2.5.
+        assert!((s.windows[1].provisioned_targets.unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(s.windows[2].provisioned_targets, Some(2.0));
+        // JSON round-trip keeps the capacity series (string compare:
+        // empty windows hold NaN acceptance, and NaN != NaN).
+        let back = TimeSeriesSummary::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.to_json().to_string_pretty(), s.to_json().to_string_pretty());
+        assert_eq!(back.windows[1].provisioned_targets, s.windows[1].provisioned_targets);
+        // No capacity steps → no field, and bytes match the historical
+        // layout (no "provisioned_targets" key anywhere).
+        let mut plain = TimeSeries::new(TimeSeriesConfig::default());
+        plain.fold(&req(0, 100.0, 300.0, 0.8));
+        let pj = plain.summary().to_json().to_string_pretty();
+        assert!(!pj.contains("provisioned_targets"));
+        assert!(plain.summary().windows[0].provisioned_targets.is_none());
+    }
+
+    #[test]
+    fn capacity_integration_respects_the_window_cap() {
+        let mut ts = TimeSeries::new(TimeSeriesConfig { window_ms: 100.0, max_windows: 2 });
+        ts.fold_capacity(0.0, 4);
+        ts.fold_capacity(1_000.0, 4); // far beyond the cap
+        let s = ts.summary();
+        assert_eq!(s.windows.len(), 2);
+        assert_eq!(s.windows[0].provisioned_targets, Some(4.0));
+        assert_eq!(s.windows[1].provisioned_targets, Some(4.0));
+    }
+
+    #[test]
     fn active_drain_helpers() {
         let mk_active = |actives: &[u64]| TimeSeriesSummary {
             window_ms: 1_000.0,
@@ -463,6 +648,7 @@ mod tests {
                     mean_ttft_ms: 0.0,
                     mean_tpot_ms: 0.0,
                     mean_acceptance: f64::NAN,
+                    provisioned_targets: None,
                 })
                 .collect(),
         };

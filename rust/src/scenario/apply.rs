@@ -37,6 +37,11 @@ pub struct RuntimeDynamics {
     default_link: LinkSpec,
     /// Per-target hardware-latency multiplier (1.0 = baseline).
     target_mult: Vec<f64>,
+    /// Per-target availability: whether the target currently accepts
+    /// new work. Always true without autoscaling; the elastic-capacity
+    /// subsystem ([`crate::autoscale`]) flips it as targets provision,
+    /// drain, and shut off, so routing reads *live* capacity.
+    target_available: Vec<bool>,
     /// Per-drafter-pool availability.
     pool_down: Vec<bool>,
     /// Cumulative drafter-pool end indices (pool `p` covers
@@ -65,6 +70,7 @@ impl RuntimeDynamics {
             base_default: default_link,
             default_link,
             target_mult: vec![1.0; n_targets],
+            target_available: vec![true; n_targets],
             pool_down: vec![false; drafter_pools.len()],
             pool_ends,
         }
@@ -86,6 +92,26 @@ impl RuntimeDynamics {
     /// scenario-free simulations skip the multiply entirely).
     pub fn any_target_slowdown(&self) -> bool {
         self.target_mult.iter().any(|&m| m != 1.0)
+    }
+
+    /// Whether a target currently accepts new work (always true without
+    /// an elastic capacity pool; ids beyond the fleet read unavailable).
+    pub fn target_available(&self, target_id: usize) -> bool {
+        self.target_available.get(target_id).copied().unwrap_or(false)
+    }
+
+    /// Flip one target's availability (the autoscale fleet's lifecycle
+    /// transitions call this so every routing decision sees live
+    /// capacity).
+    pub fn set_target_available(&mut self, target_id: usize, available: bool) {
+        if let Some(slot) = self.target_available.get_mut(target_id) {
+            *slot = available;
+        }
+    }
+
+    /// Number of targets currently accepting work.
+    pub fn n_targets_available(&self) -> usize {
+        self.target_available.iter().filter(|&&a| a).count()
     }
 
     /// Pool index of a drafter id (`None` for synthetic ids beyond the
@@ -176,6 +202,10 @@ impl RuntimeDynamics {
             }
             // Folded into the arrival envelope at trace-generation time.
             ScenarioEvent::RateOverride { .. } => None,
+            // Routed through the autoscale fleet by the simulator before
+            // the dynamics state is consulted (the fleet then flips
+            // per-target availability here via `set_target_available`).
+            ScenarioEvent::TargetPoolUp { .. } | ScenarioEvent::TargetPoolDown { .. } => None,
         }
     }
 }
@@ -293,6 +323,23 @@ network:
         assert!(d.any_target_slowdown());
         d.apply(&ScenarioEvent::TargetSlowdown { target: None, mult: 1.0 });
         assert!(!d.any_target_slowdown());
+    }
+
+    #[test]
+    fn target_availability_defaults_on_and_toggles() {
+        let cfg = two_pool_cfg();
+        let mut d = dynamics(&cfg);
+        assert!(d.target_available(0));
+        assert!(d.target_available(1));
+        assert!(!d.target_available(9), "ids beyond the fleet are unavailable");
+        assert_eq!(d.n_targets_available(), 2);
+        d.set_target_available(1, false);
+        assert!(!d.target_available(1));
+        assert_eq!(d.n_targets_available(), 1);
+        d.set_target_available(1, true);
+        assert_eq!(d.n_targets_available(), 2);
+        d.set_target_available(9, false); // out of range: ignored
+        assert_eq!(d.n_targets_available(), 2);
     }
 
     #[test]

@@ -63,6 +63,21 @@ pub enum ScenarioEvent {
         /// New arrival rate, requests/second (> 0).
         rate_per_s: f64,
     },
+    /// Scripted capacity addition: provision `count` more cloud targets
+    /// (cold-start delay applies; clamped to the autoscale `max`).
+    /// Requires an `autoscale:` block on the owning config — the
+    /// scheduled/scripted provisioning path of [`crate::autoscale`].
+    TargetPoolUp {
+        /// Targets to add (≥ 1).
+        count: usize,
+    },
+    /// Scripted capacity removal: gracefully drain `count` targets
+    /// (in-flight batches finish, queued work re-routes; clamped to the
+    /// autoscale `min`). Requires an `autoscale:` block.
+    TargetPoolDown {
+        /// Targets to drain (≥ 1).
+        count: usize,
+    },
 }
 
 impl ScenarioEvent {
@@ -75,6 +90,8 @@ impl ScenarioEvent {
             ScenarioEvent::DrafterPoolUp { .. } => "drafter_pool_up",
             ScenarioEvent::TargetSlowdown { .. } => "target_slowdown",
             ScenarioEvent::RateOverride { .. } => "rate_override",
+            ScenarioEvent::TargetPoolUp { .. } => "target_pool_up",
+            ScenarioEvent::TargetPoolDown { .. } => "target_pool_down",
         }
     }
 }
@@ -108,6 +125,7 @@ impl TimedEvent {
             "drafter_pool_down" | "drafter_pool_up" => &["pool"],
             "target_slowdown" => &["target", "mult"],
             "rate_override" => &["rate_per_s"],
+            "target_pool_up" | "target_pool_down" => &["count"],
             _ => &[], // unknown kind: rejected below with the full list
         };
         if let Json::Obj(pairs) = j {
@@ -164,11 +182,17 @@ impl TimedEvent {
                     .and_then(Json::as_f64)
                     .ok_or("scenario event (rate_override): missing number 'rate_per_s'")?,
             },
+            "target_pool_up" => ScenarioEvent::TargetPoolUp {
+                count: opt_usize("count")?.unwrap_or(1),
+            },
+            "target_pool_down" => ScenarioEvent::TargetPoolDown {
+                count: opt_usize("count")?.unwrap_or(1),
+            },
             other => {
                 return Err(format!(
                     "scenario event: unknown kind '{other}' (known: link_degrade, \
                      link_restore, drafter_pool_down, drafter_pool_up, target_slowdown, \
-                     rate_override)"
+                     rate_override, target_pool_up, target_pool_down)"
                 ))
             }
         };
@@ -209,6 +233,8 @@ impl TimedEvent {
             ScenarioEvent::RateOverride { rate_per_s } => {
                 j.with("rate_per_s", rate_per_s.into())
             }
+            ScenarioEvent::TargetPoolUp { count } => j.with("count", count.into()),
+            ScenarioEvent::TargetPoolDown { count } => j.with("count", count.into()),
         }
     }
 
@@ -268,6 +294,15 @@ impl TimedEvent {
             ScenarioEvent::RateOverride { rate_per_s } => {
                 mult_ok("rate_per_s", rate_per_s, false)
             }
+            ScenarioEvent::TargetPoolUp { count } | ScenarioEvent::TargetPoolDown { count } => {
+                if count == 0 {
+                    return Err(format!(
+                        "scenario event ({}): count must be at least 1",
+                        self.event.kind()
+                    ));
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -317,6 +352,34 @@ mod tests {
             at_ms: 10.0,
             event: ScenarioEvent::RateOverride { rate_per_s: 33.0 },
         });
+        roundtrip(TimedEvent {
+            at_ms: 11.0,
+            event: ScenarioEvent::TargetPoolUp { count: 2 },
+        });
+        roundtrip(TimedEvent {
+            at_ms: 12.0,
+            event: ScenarioEvent::TargetPoolDown { count: 1 },
+        });
+    }
+
+    #[test]
+    fn target_pool_events_default_count_and_validate() {
+        let j = Json::obj()
+            .with("at_ms", 5.0.into())
+            .with("kind", "target_pool_up".into());
+        let ev = TimedEvent::from_json(&j).unwrap();
+        assert_eq!(ev.event, ScenarioEvent::TargetPoolUp { count: 1 });
+        let zero = TimedEvent {
+            at_ms: 5.0,
+            event: ScenarioEvent::TargetPoolDown { count: 0 },
+        };
+        assert!(zero.validate(1, 2).unwrap_err().contains("count"));
+        // Foreign keys rejected.
+        let bad = Json::obj()
+            .with("at_ms", 5.0.into())
+            .with("kind", "target_pool_down".into())
+            .with("pool", 1.into());
+        assert!(TimedEvent::from_json(&bad).unwrap_err().contains("unknown key"));
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //! topology, and the simulation is bit-identical to the pre-scenario
 //! engine.
 
+use crate::autoscale::{
+    CapacitySnapshot, Fleet, PolicyEngine, ScaleDecision, TargetState, UpKind,
+};
 use crate::config::{SimConfig, Topology, WindowKind};
 use crate::hwmodel::{Hardware, Predictor};
 use crate::metrics::{
@@ -82,6 +85,18 @@ enum Ev {
     /// A scripted scenario event fires (index into the scenario
     /// timeline; see [`crate::scenario`]).
     Scenario(usize),
+    /// Elastic-capacity lifecycle (see [`crate::autoscale`]): the
+    /// policy evaluation tick, or a provisioning cold start completing.
+    Autoscale(AutoscaleEv),
+}
+
+/// The two autoscale event flavors riding [`Ev::Autoscale`].
+#[derive(Clone, Copy, Debug)]
+enum AutoscaleEv {
+    /// Evaluate the scaling policy.
+    Tick,
+    /// A provisioning target finished its cold start.
+    Provisioned(usize),
 }
 
 /// Drafter-side work items.
@@ -179,6 +194,13 @@ impl Simulator {
     /// Fallible constructor.
     pub fn try_new(cfg: SimConfig) -> Result<Self, String> {
         cfg.validate()?;
+        if let Some(s) = &cfg.scenario {
+            // A `kind: trace` arrival envelope must have loaded its
+            // timestamp file (path resolution happens at file-load
+            // time); failing here names the fix instead of generating
+            // an empty workload.
+            s.ensure_arrivals_ready()?;
+        }
         let topo = Topology::expand(&cfg)?;
         let trace = match &cfg.workload.trace_path {
             Some(p) => crate::trace::io::read_jsonl(std::path::Path::new(p))?,
@@ -266,6 +288,7 @@ impl Simulator {
         let mut st = SimState::build(self.cfg, self.topo, self.predictor, self.trace,
                                      routing, batching, window, sink);
         st.run_loop();
+        st.finalize_autoscale();
         let system = st.system_metrics();
         Ok((st.sink, system))
     }
@@ -316,12 +339,35 @@ struct SimState<S: MetricsSink> {
     dynamics: RuntimeDynamics,
     /// The scenario timeline; `Ev::Scenario(i)` indexes into it.
     scenario_events: Vec<TimedEvent>,
+    /// Elastic target-pool runtime (None without an `autoscale:` block —
+    /// and then every new code path below is skipped, keeping
+    /// autoscale-free runs bit-identical to the fixed-fleet simulator).
+    autoscale: Option<AutoscaleRuntime>,
+    /// Requests that have arrived so far (backlog = arrived − completed,
+    /// an autoscale policy input).
+    arrived: usize,
     wall_start: std::time::Instant,
     feat_sum: [f64; 5],
     feat_n: u64,
     sink: S,
     /// Whether the sink wants per-request γ-decision vectors retained.
     keep_gammas: bool,
+}
+
+/// Simulator-side glue for the elastic target pool: the fleet state
+/// machine, the policy engine, and the tick accounting that feeds it.
+struct AutoscaleRuntime {
+    fleet: Fleet,
+    engine: PolicyEngine,
+    eval_interval_ms: f64,
+    provision_delay_ms: f64,
+    cost_per_target_s: f64,
+    /// Fleet capacity steps already forwarded to the metrics sink.
+    steps_synced: usize,
+    /// `arrived` at the previous tick (arrival-rate estimation).
+    tick_arrived: usize,
+    /// `completed` at the previous tick (completion-rate estimation).
+    tick_completed: usize,
 }
 
 impl<S: MetricsSink> SimState<S> {
@@ -405,7 +451,21 @@ impl<S: MetricsSink> SimState<S> {
         let fused_only = matches!(cfg.window, WindowKind::FusedOnly);
         let seed = cfg.seed;
         let keep_gammas = sink.keep_gamma_history();
-        SimState {
+        let autoscale = cfg.autoscale.as_ref().map(|ac| {
+            let max = ac.resolved_max(n_targets);
+            let initial = ac.resolved_initial(n_targets);
+            AutoscaleRuntime {
+                fleet: Fleet::new(n_targets, ac.min_targets, max, initial),
+                engine: PolicyEngine::new(ac, ac.min_targets, max),
+                eval_interval_ms: ac.eval_interval_ms,
+                provision_delay_ms: ac.provision_delay_ms,
+                cost_per_target_s: ac.cost_per_target_s,
+                steps_synced: 0,
+                tick_arrived: 0,
+                tick_completed: 0,
+            }
+        });
+        let mut st = SimState {
             cfg,
             topo,
             predictor,
@@ -427,12 +487,28 @@ impl<S: MetricsSink> SimState<S> {
             fused_only,
             dynamics,
             scenario_events,
+            autoscale,
+            arrived: 0,
             wall_start: std::time::Instant::now(),
             feat_sum: [0.0; 5],
             feat_n: 0,
             sink,
             keep_gammas,
+        };
+        if st.autoscale.is_some() {
+            // Targets beyond the initial fleet start unavailable; the
+            // first policy tick fires one interval in.
+            for tid in 0..st.targets.len() {
+                let a = st.autoscale.as_ref().expect("checked above");
+                if a.fleet.state(tid) != TargetState::Active {
+                    st.dynamics.set_target_available(tid, false);
+                }
+            }
+            let interval = st.autoscale.as_ref().expect("checked above").eval_interval_ms;
+            st.q.schedule(interval, Ev::Autoscale(AutoscaleEv::Tick));
+            st.sync_capacity(); // the t=0 initial-capacity step
         }
+        st
     }
 
     /// Record an observed feature vector for dataset aggregation.
@@ -480,14 +556,17 @@ impl<S: MetricsSink> SimState<S> {
         match ev {
             Ev::Arrival(rid) => self.on_arrival(now, rid),
             Ev::PromptAtTarget(rid) => {
-                let tid = self.requests[rid].target;
+                // Landing guard: the routed target may have drained (or
+                // shut off) while the prompt was in flight — re-route
+                // through the normal policy against live capacity.
+                let tid = self.routable_target(rid);
                 self.targets[tid].prefill_q.push_back((rid, now));
                 self.q.schedule_in(0.0, Ev::TargetKick(tid));
             }
             Ev::DrafterFree(did) => self.on_drafter_free(did),
             Ev::DrafterTaskDone { req, gamma } => self.on_drafter_task_done(now, req, gamma),
             Ev::UplinkArrive { req, gamma, sent_ms } => {
-                let tid = self.requests[req].target;
+                let tid = self.routable_target(req);
                 self.requests[req].uplink_sent_ms = sent_ms;
                 self.targets[tid].verify_q.push_back((req, gamma, now));
                 self.q.schedule_in(0.0, Ev::TargetKick(tid));
@@ -504,7 +583,239 @@ impl<S: MetricsSink> SimState<S> {
                 }
             }
             Ev::Scenario(idx) => self.on_scenario(now, idx),
+            Ev::Autoscale(aev) => self.on_autoscale(now, aev),
         }
+    }
+
+    // ---- Elastic capacity (autoscale) ----
+    /// Whether a target currently accepts new work. Reads the live
+    /// [`RuntimeDynamics`] availability view — always true without an
+    /// autoscale block.
+    fn target_routable(&self, tid: usize) -> bool {
+        self.dynamics.target_available(tid)
+    }
+
+    /// Snapshots of every routable target (the full fleet without
+    /// autoscaling — bit-identical to the pre-autoscale router input).
+    fn routable_snapshots(&self) -> Vec<TargetSnapshot> {
+        self.targets
+            .iter()
+            .enumerate()
+            .filter(|(id, _)| self.target_routable(*id))
+            .map(|(id, t)| TargetSnapshot {
+                id,
+                prefill_queue: t.prefill_q.len(),
+                active: t.verify_q.len() + t.fused_resident.len(),
+                recent_tpot_ms: t.tpot_ema.value_or(0.0),
+                busy: t.busy,
+            })
+            .collect()
+    }
+
+    /// Re-route a request through the configured routing policy against
+    /// live capacity (the fleet invariants guarantee at least one
+    /// serving target exists).
+    fn reroute(&mut self, rid: usize) -> usize {
+        let snaps = self.routable_snapshots();
+        let tid = self.routing.route(&snaps, &mut self.rng_route);
+        self.requests[rid].target = tid;
+        tid
+    }
+
+    /// The request's target if it still accepts work, else a fresh
+    /// routing decision.
+    fn routable_target(&mut self, rid: usize) -> usize {
+        let tid = self.requests[rid].target;
+        if self.target_routable(tid) {
+            tid
+        } else {
+            self.reroute(rid)
+        }
+    }
+
+    fn on_autoscale(&mut self, now: f64, ev: AutoscaleEv) {
+        match ev {
+            AutoscaleEv::Tick => self.on_autoscale_tick(now),
+            AutoscaleEv::Provisioned(tid) => {
+                let Some(a) = self.autoscale.as_mut() else {
+                    return;
+                };
+                if a.fleet.finish_provision(now, tid) {
+                    self.dynamics.set_target_available(tid, true);
+                    self.q.schedule_in(0.0, Ev::TargetKick(tid));
+                }
+            }
+        }
+    }
+
+    /// One policy evaluation tick: observe the live system, let the
+    /// engine decide, apply the decision, reschedule.
+    fn on_autoscale_tick(&mut self, now: f64) {
+        let total = self.requests.len();
+        let snap = {
+            let Some(a) = self.autoscale.as_ref() else {
+                return;
+            };
+            let mut queued = 0usize;
+            let mut busy = 0usize;
+            let mut active = 0usize;
+            for (tid, t) in self.targets.iter().enumerate() {
+                if a.fleet.state(tid) == TargetState::Active {
+                    active += 1;
+                    queued += t.prefill_q.len() + t.verify_q.len() + t.fused_resident.len();
+                    busy += t.busy as usize;
+                }
+            }
+            let dt_s = a.eval_interval_ms / 1_000.0;
+            CapacitySnapshot {
+                now_ms: now,
+                committed: a.fleet.committed(),
+                active,
+                busy_active: busy,
+                queued,
+                backlog: self.arrived.saturating_sub(self.completed),
+                arrival_rate_per_s: (self.arrived - a.tick_arrived) as f64 / dt_s,
+                completion_rate_per_s: (self.completed - a.tick_completed) as f64 / dt_s,
+            }
+        };
+        let (decision, interval) = {
+            let arrived = self.arrived;
+            let completed = self.completed;
+            let a = self.autoscale.as_mut().expect("checked above");
+            a.tick_arrived = arrived;
+            a.tick_completed = completed;
+            (a.engine.decide(&snap), a.eval_interval_ms)
+        };
+        match decision {
+            ScaleDecision::Up(n) => self.scale_up(now, n),
+            ScaleDecision::Down(n) => self.scale_down(now, n),
+            ScaleDecision::Hold => {}
+        }
+        if self.completed < total {
+            self.q.schedule_in(interval, Ev::Autoscale(AutoscaleEv::Tick));
+        }
+    }
+
+    /// Apply up to `n` scale-ups (policy- or script-initiated): cancel
+    /// in-progress drains first, otherwise start cold provisioning.
+    /// Bounds are enforced by the fleet.
+    fn scale_up(&mut self, now: f64, n: usize) {
+        for _ in 0..n {
+            let Some(a) = self.autoscale.as_mut() else {
+                return;
+            };
+            match a.fleet.begin_up(now) {
+                Some(UpKind::CancelDrain(tid)) => {
+                    self.dynamics.set_target_available(tid, true);
+                    self.q.schedule_in(0.0, Ev::TargetKick(tid));
+                }
+                Some(UpKind::Provision(tid)) => {
+                    let d = a.provision_delay_ms;
+                    self.q.schedule_in(d, Ev::Autoscale(AutoscaleEv::Provisioned(tid)));
+                }
+                None => break,
+            }
+        }
+        self.sync_capacity();
+    }
+
+    /// Apply up to `n` graceful scale-downs: the victim stops accepting
+    /// work immediately, its queued work re-routes through the routing
+    /// policy, and the target shuts off once its in-flight batch (if
+    /// any) finishes.
+    fn scale_down(&mut self, now: f64, n: usize) {
+        for _ in 0..n {
+            let Some(a) = self.autoscale.as_mut() else {
+                return;
+            };
+            let Some(tid) = a.fleet.begin_down(now) else {
+                break;
+            };
+            self.dynamics.set_target_available(tid, false);
+            self.drain_target(now, tid);
+        }
+        self.sync_capacity();
+    }
+
+    /// Re-route a draining target's queued and resident work and turn
+    /// the target off once nothing is left and no batch is in flight.
+    /// Fused residents stay put while a batch runs (its member set is
+    /// implicit in the residency list) and move when it completes —
+    /// [`SimState::on_target_done`] calls back in here.
+    fn drain_target(&mut self, now: f64, tid: usize) {
+        let prefills: Vec<(usize, f64)> =
+            std::mem::take(&mut self.targets[tid].prefill_q).into_iter().collect();
+        let verifies: Vec<(usize, u32, f64)> =
+            std::mem::take(&mut self.targets[tid].verify_q).into_iter().collect();
+        let fused: Vec<usize> = if self.targets[tid].busy {
+            Vec::new()
+        } else {
+            std::mem::take(&mut self.targets[tid].fused_resident)
+                .into_iter()
+                .collect()
+        };
+        for (rid, enq) in prefills {
+            if self.requests[rid].completed_ms.is_some() {
+                continue;
+            }
+            // Original enqueue times survive the move, so queue-delay
+            // accounting keeps the wait already served.
+            let nt = self.reroute(rid);
+            self.targets[nt].prefill_q.push_back((rid, enq));
+            self.q.schedule_in(0.0, Ev::TargetKick(nt));
+        }
+        for (rid, gamma, enq) in verifies {
+            if self.requests[rid].completed_ms.is_some() {
+                continue;
+            }
+            let nt = self.reroute(rid);
+            self.targets[nt].verify_q.push_back((rid, gamma, enq));
+            self.q.schedule_in(0.0, Ev::TargetKick(nt));
+        }
+        for rid in fused {
+            if self.requests[rid].completed_ms.is_some() {
+                continue;
+            }
+            let nt = self.reroute(rid);
+            self.targets[nt].fused_resident.push_back(rid);
+            self.q.schedule_in(0.0, Ev::TargetKick(nt));
+        }
+        let t = &self.targets[tid];
+        if !t.busy
+            && t.prefill_q.is_empty()
+            && t.verify_q.is_empty()
+            && t.fused_resident.is_empty()
+        {
+            if let Some(a) = self.autoscale.as_mut() {
+                a.fleet.finish_drain(now, tid);
+            }
+            self.sync_capacity();
+        }
+    }
+
+    /// Forward fleet capacity steps the sink has not seen yet (the
+    /// streaming sink folds them into the windowed active-target-count
+    /// series; the full sink's report recomputes the same series from
+    /// the retained steps in `SystemMetrics`).
+    fn sync_capacity(&mut self) {
+        let Some(a) = self.autoscale.as_mut() else {
+            return;
+        };
+        while a.steps_synced < a.fleet.steps().len() {
+            let (t, c) = a.fleet.steps()[a.steps_synced];
+            self.sink.record_capacity(t, c);
+            a.steps_synced += 1;
+        }
+    }
+
+    /// Close the capacity books at end of run: integrate the last cost
+    /// segment and emit the end-of-run step marker to the sink.
+    fn finalize_autoscale(&mut self) {
+        let now = self.q.now();
+        if let Some(a) = self.autoscale.as_mut() {
+            a.fleet.finalize(now);
+        }
+        self.sync_capacity();
     }
 
     // ---- Scripted dynamics ----
@@ -516,6 +827,21 @@ impl<S: MetricsSink> SimState<S> {
     /// decision.
     fn on_scenario(&mut self, now: f64, idx: usize) {
         let ev = self.scenario_events[idx].event;
+        // Scripted capacity changes route through the autoscale fleet
+        // (config validation guarantees the block exists); they bypass
+        // the policy cooldown — an explicit operator action — but the
+        // fleet still clamps to [min_targets, max_targets].
+        match ev {
+            ScenarioEvent::TargetPoolUp { count } => {
+                self.scale_up(now, count);
+                return;
+            }
+            ScenarioEvent::TargetPoolDown { count } => {
+                self.scale_down(now, count);
+                return;
+            }
+            _ => {}
+        }
         match self.dynamics.apply(&ev) {
             Some(PoolTransition::Down(pool)) => {
                 let (lo, hi) = self.dynamics.pool_range(pool);
@@ -585,18 +911,11 @@ impl<S: MetricsSink> SimState<S> {
 
     // ---- Routing stage ----
     fn on_arrival(&mut self, now: f64, rid: usize) {
-        let snaps: Vec<TargetSnapshot> = self
-            .targets
-            .iter()
-            .enumerate()
-            .map(|(id, t)| TargetSnapshot {
-                id,
-                prefill_queue: t.prefill_q.len(),
-                active: t.verify_q.len() + t.fused_resident.len(),
-                recent_tpot_ms: t.tpot_ema.value_or(0.0),
-                busy: t.busy,
-            })
-            .collect();
+        self.arrived += 1;
+        // Routing sees only targets currently accepting work — the full
+        // fleet without autoscaling (bit-identical to the pre-autoscale
+        // snapshot list).
+        let snaps = self.routable_snapshots();
         let tid = self.routing.route(&snaps, &mut self.rng_route);
         self.requests[rid].target = tid;
         // Prompt travels to the cloud for target-side prefill.
@@ -699,9 +1018,8 @@ impl<S: MetricsSink> SimState<S> {
         // coordinator decision, not a learned one.
         let did = self.requests[rid].drafter;
         if self.dynamics.drafter_down(did) {
-            let r = &mut self.requests[rid];
-            r.mode = ExecMode::Fused;
-            let tid = r.target;
+            self.requests[rid].mode = ExecMode::Fused;
+            let tid = self.routable_target(rid);
             let d = self.link_delay(did, CTRL_BYTES);
             self.targets[tid].fused_resident.push_back(rid);
             self.q.schedule_in(d, Ev::TargetKick(tid));
@@ -716,10 +1034,11 @@ impl<S: MetricsSink> SimState<S> {
         match decision.mode {
             ExecMode::Fused => {
                 r.mode = ExecMode::Fused;
-                let tid = r.target;
                 let did = r.drafter;
                 // Control message travels to the cloud, then the request
-                // becomes fused-resident there.
+                // becomes fused-resident there (re-routed first if its
+                // target drained while it speculated).
+                let tid = self.routable_target(rid);
                 let d = self.link_delay(did, CTRL_BYTES);
                 self.targets[tid].fused_resident.push_back(rid);
                 self.q.schedule_in(d, Ev::TargetKick(tid));
@@ -772,6 +1091,11 @@ impl<S: MetricsSink> SimState<S> {
     // ---- Batching stage: target dispatch ----
     fn on_target_kick(&mut self, now: f64, tid: usize) {
         if self.targets[tid].busy {
+            return;
+        }
+        // A draining / provisioning / off target starts no new batches
+        // (its in-flight batch, if any, finishes normally).
+        if !self.target_routable(tid) {
             return;
         }
         let Some(op) = self.select_op(tid) else {
@@ -1041,6 +1365,16 @@ impl<S: MetricsSink> SimState<S> {
                 }
             }
         }
+        // Drain continuation: a draining target just finished its last
+        // in-flight batch — move whatever is still resident (fused
+        // members survive the batch) and shut it off once empty.
+        let draining = self
+            .autoscale
+            .as_ref()
+            .is_some_and(|a| a.fleet.state(tid) == TargetState::Draining);
+        if draining {
+            self.drain_target(now, tid);
+        }
         self.q.schedule_in(0.0, Ev::TargetKick(tid));
     }
 
@@ -1058,7 +1392,7 @@ impl<S: MetricsSink> SimState<S> {
         if self.requests[rid].spec.done() {
             self.complete(now, rid);
         } else if self.requests[rid].mode == ExecMode::Fused || self.fused_only {
-            let tid = self.requests[rid].target;
+            let tid = self.routable_target(rid);
             self.targets[tid].fused_resident.push_back(rid);
             self.q.schedule_in(0.0, Ev::TargetKick(tid));
         } else if self.requests[rid].edge_prefill_done {
@@ -1156,6 +1490,10 @@ impl<S: MetricsSink> SimState<S> {
                 }
                 m
             },
+            autoscale: self
+                .autoscale
+                .as_ref()
+                .map(|a| a.fleet.metrics(a.cost_per_target_s, self.completed_tokens)),
         }
     }
 }
@@ -1412,6 +1750,123 @@ mod tests {
             slow.system.mean_net_delay_ms,
             inf.system.mean_net_delay_ms
         );
+    }
+
+    #[test]
+    fn autoscale_reactive_scales_up_under_flash_crowd_and_completes() {
+        use crate::autoscale::{AutoscaleConfig, ScalingPolicy};
+        use crate::scenario::{ArrivalProcess, Scenario};
+        let mut cfg = SimConfig::builder()
+            .seed(9)
+            .targets(4)
+            .drafters(24)
+            .requests(240)
+            .rate_per_s(30.0)
+            .build();
+        cfg.scenario = Some(Scenario {
+            name: "burst".into(),
+            arrivals: Some(ArrivalProcess::Spike {
+                base_per_s: 30.0,
+                peak_per_s: 120.0,
+                t_start_ms: 2_000.0,
+                t_end_ms: 5_000.0,
+            }),
+            events: Vec::new(),
+        });
+        cfg.autoscale = Some(AutoscaleConfig {
+            policy: ScalingPolicy::Reactive {
+                up_queue_depth: 2.0,
+                down_queue_depth: 0.5,
+                down_utilization: 0.5,
+            },
+            min_targets: 1,
+            max_targets: Some(4),
+            initial_targets: Some(1),
+            eval_interval_ms: 200.0,
+            cooldown_ms: 400.0,
+            provision_delay_ms: 300.0,
+            ..AutoscaleConfig::default()
+        });
+        let rep = Simulator::new(cfg).run();
+        assert_eq!(rep.system.completed, 240, "drains must not strand requests");
+        let a = rep.system.autoscale.as_ref().expect("autoscale metrics present");
+        assert!(a.scale_up_events > 0, "the burst must trigger scale-ups");
+        assert!(a.peak_provisioned > 1);
+        for &(_, c) in &a.steps {
+            assert!((1..=4).contains(&(c as usize)), "capacity left [1, 4]: {c}");
+        }
+        assert!(a.target_seconds > 0.0);
+        // Elasticity saves money vs. paying for the full fleet throughout.
+        assert!(
+            a.target_seconds < 4.0 * rep.system.sim_duration_ms / 1_000.0 + 1e-6,
+            "elastic {} vs fixed {}",
+            a.target_seconds,
+            4.0 * rep.system.sim_duration_ms / 1_000.0
+        );
+    }
+
+    #[test]
+    fn scheduled_full_fleet_autoscale_preserves_request_dynamics() {
+        use crate::autoscale::{AutoscaleConfig, ScalingPolicy};
+        let plain = Simulator::new(small_cfg()).run();
+        let mut cfg = small_cfg();
+        cfg.autoscale = Some(AutoscaleConfig {
+            policy: ScalingPolicy::Scheduled,
+            ..AutoscaleConfig::default()
+        });
+        let fixed = Simulator::new(cfg).run();
+        // A scheduled policy over the full fleet never scales: every
+        // request-path decision (routing, batching, speculation) and
+        // therefore every latency is bit-identical to the plain run —
+        // only the tick events and the cost meter are new.
+        assert_eq!(fixed.system.completed, plain.system.completed);
+        assert!((fixed.mean_ttft() - plain.mean_ttft()).abs() < 1e-12);
+        assert!((fixed.mean_tpot() - plain.mean_tpot()).abs() < 1e-12);
+        assert!((fixed.mean_e2e() - plain.mean_e2e()).abs() < 1e-12);
+        assert!(fixed.system.events_processed > plain.system.events_processed);
+        assert!(plain.system.autoscale.is_none(), "plain runs carry no meter");
+        let a = fixed.system.autoscale.as_ref().unwrap();
+        assert_eq!(a.scale_up_events + a.scale_down_events, 0);
+        assert_eq!(a.final_provisioned, 2);
+        assert!(
+            (a.target_seconds - 2.0 * fixed.system.sim_duration_ms / 1_000.0).abs() < 1e-6,
+            "fixed fleet pays for 2 targets for the whole run"
+        );
+    }
+
+    #[test]
+    fn scripted_target_pool_events_drive_capacity() {
+        use crate::autoscale::{AutoscaleConfig, ScalingPolicy};
+        use crate::scenario::{Scenario, ScenarioEvent, TimedEvent};
+        let mut cfg = SimConfig::builder()
+            .seed(4)
+            .targets(3)
+            .drafters(12)
+            .requests(60)
+            .rate_per_s(20.0)
+            .build();
+        cfg.scenario = Some(Scenario {
+            name: "scripted".into(),
+            arrivals: None,
+            events: vec![
+                TimedEvent { at_ms: 500.0, event: ScenarioEvent::TargetPoolDown { count: 1 } },
+                TimedEvent { at_ms: 1_500.0, event: ScenarioEvent::TargetPoolUp { count: 1 } },
+            ],
+        });
+        cfg.autoscale = Some(AutoscaleConfig {
+            policy: ScalingPolicy::Scheduled,
+            min_targets: 1,
+            max_targets: Some(3),
+            initial_targets: Some(3),
+            provision_delay_ms: 200.0,
+            ..AutoscaleConfig::default()
+        });
+        let rep = Simulator::new(cfg).run();
+        assert_eq!(rep.system.completed, 60);
+        let a = rep.system.autoscale.as_ref().unwrap();
+        assert_eq!(a.scale_down_events, 1, "scripted drain applied");
+        assert_eq!(a.scale_up_events, 1, "scripted recovery applied");
+        assert_eq!(a.final_provisioned, 3, "capacity restored by the end");
     }
 
     #[test]

@@ -483,6 +483,8 @@ mod tests {
             events_processed: 999,
             mean_features: [0.25, 0.8, 10.0, 25.0, 4.0],
             time_series: None,
+            autoscale: None,
+            slo_interactive: None,
         };
         let labels = vec![("rtt_ms".to_string(), "10".to_string())];
         cache.store(&key, &labels, &m).unwrap();
@@ -555,6 +557,8 @@ mod tests {
             events_processed: 1,
             mean_features: [0.0; 5],
             time_series: None,
+            autoscale: None,
+            slo_interactive: None,
         };
         cache.store(&key, &[], &m).unwrap();
         assert!(matches!(cache.load(&key), CacheLookup::Hit(_)));
@@ -613,6 +617,8 @@ mod tests {
             events_processed: 42,
             mean_features: [0.1, 0.2, 0.3, 0.4, 0.5],
             time_series: None,
+            autoscale: None,
+            slo_interactive: None,
         };
         cache.store(&key, &[], &m).unwrap();
         // Orphans: wrong-name copy, old version tag, stale tmp file, and

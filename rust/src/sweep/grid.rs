@@ -2,15 +2,16 @@
 //! swept axis, expanded into the cross product of concrete cell configs.
 //!
 //! Axes (all optional; an absent axis pins the base value):
-//! scenario (scripted dynamics), RTT, jitter, arrival rate, dataset,
-//! routing / batching / window policy, cluster scale (target and
-//! drafter counts), and seed.
+//! scenario (scripted dynamics), autoscale (elastic target pools), RTT,
+//! jitter, arrival rate, dataset, routing / batching / window policy,
+//! cluster scale (target and drafter counts), and seed.
 //!
 //! Expansion order is fixed and documented — outermost to innermost:
-//! `scenario → dataset → routing → batching → window → targets →
-//! drafters → rtt → jitter → rate → seed` — so cell indices are stable
-//! and seed replicas of one configuration are adjacent.
+//! `scenario → autoscale → dataset → routing → batching → window →
+//! targets → drafters → rtt → jitter → rate → seed` — so cell indices
+//! are stable and seed replicas of one configuration are adjacent.
 
+use crate::autoscale::AutoscaleConfig;
 use crate::config::{
     parse_batching, parse_routing, BatchingKind, RoutingKind, SimConfig, WindowKind,
 };
@@ -119,6 +120,10 @@ pub struct SweepGrid {
     /// In grid YAML the entries are scenario file paths or the literal
     /// `none`; cells are labeled by scenario name.
     pub scenarios: Vec<Option<Scenario>>,
+    /// Autoscale axis (elastic target pools; `None` = fixed fleet). In
+    /// grid YAML the entries are autoscale file paths or the literal
+    /// `none`; cells are labeled by block name.
+    pub autoscales: Vec<Option<AutoscaleConfig>>,
     /// Edge–cloud RTT axis, ms.
     pub rtt_ms: Vec<f64>,
     /// Jitter axis, ms.
@@ -148,6 +153,7 @@ impl SweepGrid {
     pub fn new(base: SimConfig) -> SweepGrid {
         SweepGrid {
             scenarios: vec![base.scenario.clone()],
+            autoscales: vec![base.autoscale.clone()],
             rtt_ms: vec![base.network.rtt_ms],
             jitter_ms: vec![base.network.jitter_ms],
             rate_per_s: vec![base.workload.rate_per_s],
@@ -166,6 +172,7 @@ impl SweepGrid {
     /// Number of cells the grid expands to.
     pub fn n_cells(&self) -> usize {
         self.scenarios.len()
+            * self.autoscales.len()
             * self.datasets.len()
             * self.routing.len()
             * self.batching.len()
@@ -223,8 +230,8 @@ impl SweepGrid {
             return Ok(grid);
         };
         const KNOWN: &[&str] = &[
-            "scenario", "rtt_ms", "jitter_ms", "rate_per_s", "dataset", "routing",
-            "batching", "window", "targets", "drafters", "seeds",
+            "scenario", "autoscale", "rtt_ms", "jitter_ms", "rate_per_s", "dataset",
+            "routing", "batching", "window", "targets", "drafters", "seeds",
         ];
         if let Json::Obj(pairs) = sweep {
             for (k, _) in pairs {
@@ -246,6 +253,18 @@ impl SweepGrid {
                         Ok(None)
                     } else {
                         Scenario::from_yaml_file(s).map(Some)
+                    }
+                })
+                .collect::<Result<_, String>>()?;
+        }
+        if let Some(v) = sweep.get("autoscale") {
+            grid.autoscales = str_axis("autoscale", v)?
+                .iter()
+                .map(|s| {
+                    if s.as_str() == "none" {
+                        Ok(None)
+                    } else {
+                        AutoscaleConfig::from_yaml_file(s).map(Some)
                     }
                 })
                 .collect::<Result<_, String>>()?;
@@ -305,35 +324,44 @@ impl SweepGrid {
         }
         let mut cells = Vec::with_capacity(self.n_cells());
         for scenario in &self.scenarios {
-            for ds in &self.datasets {
-                for &routing in &self.routing {
-                    for &batching in &self.batching {
-                        for window in &self.windows {
-                            for &n_targets in &self.targets {
-                                for &n_drafters in &self.drafters {
-                                    for &rtt in &self.rtt_ms {
-                                        for &jitter in &self.jitter_ms {
-                                            for &rate in &self.rate_per_s {
-                                                for &seed in &self.seeds {
-                                                    let cfg = self.cell_config(
-                                                        scenario, ds, routing, batching,
-                                                        window, n_targets, n_drafters,
-                                                        rtt, jitter, rate, seed,
-                                                    )?;
-                                                    let mut labels = vec![(
-                                                        "scenario".to_string(),
-                                                        scenario_label(scenario),
-                                                    )];
-                                                    labels.extend(labels_for(
-                                                        ds, routing, batching, window,
-                                                        n_targets, n_drafters, rtt,
-                                                        jitter, rate, seed,
-                                                    ));
-                                                    cells.push(SweepCell {
-                                                        index: cells.len(),
-                                                        labels,
-                                                        cfg,
-                                                    });
+            for autoscale in &self.autoscales {
+                for ds in &self.datasets {
+                    for &routing in &self.routing {
+                        for &batching in &self.batching {
+                            for window in &self.windows {
+                                for &n_targets in &self.targets {
+                                    for &n_drafters in &self.drafters {
+                                        for &rtt in &self.rtt_ms {
+                                            for &jitter in &self.jitter_ms {
+                                                for &rate in &self.rate_per_s {
+                                                    for &seed in &self.seeds {
+                                                        let cfg = self.cell_config(
+                                                            scenario, autoscale, ds,
+                                                            routing, batching, window,
+                                                            n_targets, n_drafters, rtt,
+                                                            jitter, rate, seed,
+                                                        )?;
+                                                        let mut labels = vec![
+                                                            (
+                                                                "scenario".to_string(),
+                                                                scenario_label(scenario),
+                                                            ),
+                                                            (
+                                                                "autoscale".to_string(),
+                                                                autoscale_label(autoscale),
+                                                            ),
+                                                        ];
+                                                        labels.extend(labels_for(
+                                                            ds, routing, batching, window,
+                                                            n_targets, n_drafters, rtt,
+                                                            jitter, rate, seed,
+                                                        ));
+                                                        cells.push(SweepCell {
+                                                            index: cells.len(),
+                                                            labels,
+                                                            cfg,
+                                                        });
+                                                    }
                                                 }
                                             }
                                         }
@@ -352,6 +380,7 @@ impl SweepGrid {
     fn cell_config(
         &self,
         scenario: &Option<Scenario>,
+        autoscale: &Option<AutoscaleConfig>,
         dataset: &str,
         routing: RoutingKind,
         batching: BatchingKind,
@@ -365,6 +394,7 @@ impl SweepGrid {
     ) -> Result<SimConfig, String> {
         let mut cfg = self.base.clone();
         cfg.scenario = scenario.clone();
+        cfg.autoscale = autoscale.clone();
         cfg.seed = seed;
         cfg.workload.dataset = dataset.to_string();
         cfg.workload.rate_per_s = rate;
@@ -384,6 +414,14 @@ impl SweepGrid {
 pub fn scenario_label(s: &Option<Scenario>) -> String {
     match s {
         Some(s) => s.name.clone(),
+        None => "none".into(),
+    }
+}
+
+/// Stable label for an autoscale axis entry.
+pub fn autoscale_label(a: &Option<AutoscaleConfig>) -> String {
+    match a {
+        Some(a) => a.name.clone(),
         None => "none".into(),
     }
 }
@@ -748,6 +786,46 @@ streaming: true
         let bad = "sweep:\n  scenario: [/nonexistent/scn.yaml]\n";
         assert!(SweepGrid::from_yaml(bad).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn autoscale_axis_expands_and_labels_cells() {
+        use crate::autoscale::{AutoscaleConfig, ScalingPolicy};
+        let mut grid = SweepGrid::new(
+            SimConfig::builder().targets(4).requests(8).build(),
+        );
+        grid.seeds = vec![1, 2];
+        grid.autoscales = vec![
+            None,
+            Some(AutoscaleConfig {
+                name: "elastic".into(),
+                policy: ScalingPolicy::default_reactive(),
+                min_targets: 1,
+                max_targets: Some(4),
+                initial_targets: Some(2),
+                ..AutoscaleConfig::default()
+            }),
+        ];
+        assert_eq!(grid.n_cells(), 4);
+        let cells = grid.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        // Autoscale sits just inside scenario: seeds iterate inside it.
+        assert_eq!(cells[0].label("autoscale"), Some("none"));
+        assert_eq!(cells[1].label("autoscale"), Some("none"));
+        assert_eq!(cells[2].label("autoscale"), Some("elastic"));
+        assert_eq!(cells[3].label("autoscale"), Some("elastic"));
+        assert!(cells[0].cfg.autoscale.is_none());
+        assert_eq!(cells[2].cfg.autoscale.as_ref().unwrap().name, "elastic");
+        assert_eq!(cells[2].cfg.seed, 1);
+        // The axis filters like any other.
+        let kept = filter_cells(cells, &parse_filter("autoscale=elastic").unwrap()).unwrap();
+        assert_eq!(kept.len(), 2);
+        // YAML: a missing file is an error, not a silent fixed-fleet cell.
+        let bad = "sweep:\n  autoscale: [/nonexistent/auto.yaml]\n";
+        assert!(SweepGrid::from_yaml(bad).is_err());
+        // And the literal `none` pins the fixed fleet.
+        let g = SweepGrid::from_yaml("sweep:\n  autoscale: [none]\n").unwrap();
+        assert_eq!(g.autoscales, vec![None]);
     }
 
     #[test]

@@ -36,7 +36,10 @@ pub mod runner;
 pub mod summary;
 
 pub use cache::{cell_key, CacheLookup, CellCache, GcStats, SIM_VERSION_TAG};
-pub use grid::{filter_cells, filter_label, parse_filter, scenario_label, SweepCell, SweepGrid};
+pub use grid::{
+    autoscale_label, filter_cells, filter_label, parse_filter, scenario_label, SweepCell,
+    SweepGrid,
+};
 pub use runner::{
     default_threads, run_cells, run_cells_cached, run_grid, run_grid_cached, CellMetrics,
     CellResult, RunStats,

@@ -8,8 +8,9 @@
 
 use super::cache::{cell_key, CacheLookup, CellCache, MAX_FAILED_ATTEMPTS};
 use super::grid::{SweepCell, SweepGrid};
+use crate::autoscale::AutoscaleMetrics;
 use crate::config::SimConfig;
-use crate::metrics::{SimReport, StreamingReport, TimeSeriesConfig, TimeSeriesSummary};
+use crate::metrics::{SimReport, SloSpec, StreamingReport, TimeSeriesConfig, TimeSeriesSummary};
 use crate::sim::Simulator;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -51,12 +52,21 @@ pub struct CellMetrics {
     /// carried so the AWC dataset generator can run on this runner (and
     /// its cache) without re-entering the simulator.
     pub mean_features: [f64; 5],
-    /// Windowed time series — populated (by [`run_cells_cached`]) only
-    /// for scenario-bearing cells, where single-number summaries hide
-    /// the dynamics the scenario scripted. `None` keeps scenario-free
-    /// cell files and summaries byte-identical to their historical
-    /// layout.
+    /// Windowed time series — populated (by [`run_cells_cached`]) for
+    /// scenario-bearing and autoscale-bearing cells, where
+    /// single-number summaries hide the scripted dynamics. `None` keeps
+    /// scenario-free cell files and summaries byte-identical to their
+    /// historical layout.
     pub time_series: Option<TimeSeriesSummary>,
+    /// Elastic-capacity accounting — present only for cells whose
+    /// config carries an `autoscale:` block (see [`crate::autoscale`]).
+    pub autoscale: Option<AutoscaleMetrics>,
+    /// Interactive-tier SLO attainment fraction
+    /// ([`SloSpec::INTERACTIVE`]) — populated alongside `autoscale`:
+    /// the elasticity experiments trade cost against SLO attainment,
+    /// which the flat metric set did not carry. `None` keeps historical
+    /// cell bytes.
+    pub slo_interactive: Option<f64>,
 }
 
 impl CellMetrics {
@@ -79,6 +89,8 @@ impl CellMetrics {
             events_processed: rep.system.events_processed,
             mean_features: rep.system.mean_features,
             time_series: None,
+            autoscale: rep.system.autoscale.clone(),
+            slo_interactive: None,
         }
     }
 
@@ -101,6 +113,8 @@ impl CellMetrics {
             events_processed: rep.system.events_processed,
             mean_features: rep.system.mean_features,
             time_series: None,
+            autoscale: rep.system.autoscale.clone(),
+            slo_interactive: None,
         }
     }
 
@@ -131,6 +145,12 @@ impl CellMetrics {
         if let Some(ts) = &self.time_series {
             j.set("time_series", ts.to_json());
         }
+        if let Some(a) = &self.autoscale {
+            j.set("autoscale", a.to_json());
+        }
+        if let Some(s) = self.slo_interactive {
+            j.set("slo_interactive", s.into());
+        }
         j
     }
 
@@ -156,6 +176,14 @@ impl CellMetrics {
             None => None,
             Some(t) => Some(TimeSeriesSummary::from_json(t)?),
         };
+        let autoscale = match j.get("autoscale") {
+            None => None,
+            Some(a) => Some(AutoscaleMetrics::from_json(a)?),
+        };
+        let slo_interactive = match j.get("slo_interactive") {
+            None => None,
+            Some(s) => Some(s.as_f64_or_nan()?),
+        };
         Some(CellMetrics {
             completed: j.get("completed")?.as_u64()?,
             throughput_rps: f("throughput_rps")?,
@@ -173,6 +201,8 @@ impl CellMetrics {
             events_processed: j.get("events_processed")?.as_u64()?,
             mean_features,
             time_series,
+            autoscale,
+            slo_interactive,
         })
     }
 }
@@ -397,16 +427,28 @@ fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
     // a bad AWC weights path) must become a per-cell error, not a panic
     // on a scoped worker thread that would abort the whole sweep.
     let sim = Simulator::try_new(cfg.clone())?;
-    // Scenario-bearing cells carry the windowed time series: scripted
-    // dynamics make the single-number summaries misleading (see the
-    // stationarity caveat on `SystemMetrics::throughput_rps`), and the
-    // agility experiments consume the windows directly.
-    let want_series = cfg.scenario.is_some();
+    // Scenario- and autoscale-bearing cells carry the windowed time
+    // series: scripted dynamics make the single-number summaries
+    // misleading (see the stationarity caveat on
+    // `SystemMetrics::throughput_rps`), and the agility/elasticity
+    // experiments consume the windows directly. Autoscale-bearing cells
+    // additionally carry the interactive SLO attainment (the elasticity
+    // trade-off axis).
+    let want_series = cfg.scenario.is_some() || cfg.autoscale.is_some();
+    let want_slo = cfg.autoscale.is_some();
     Ok(if streaming {
         let rep = sim.try_run_streaming()?;
         let mut m = CellMetrics::from_streaming(&rep);
         if want_series {
             m.time_series = Some(rep.stream.time_series.clone());
+        }
+        if want_slo {
+            m.slo_interactive = rep
+                .stream
+                .slo
+                .iter()
+                .find(|s| s.spec == SloSpec::INTERACTIVE)
+                .map(|s| s.attainment());
         }
         m
     } else {
@@ -414,6 +456,9 @@ fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
         let mut m = CellMetrics::from_report(&rep);
         if want_series {
             m.time_series = Some(rep.time_series(&TimeSeriesConfig::default()));
+        }
+        if want_slo {
+            m.slo_interactive = Some(rep.slo_attainment(SloSpec::INTERACTIVE));
         }
         m
     })

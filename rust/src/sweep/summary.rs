@@ -162,6 +162,8 @@ mod tests {
             events_processed: 1234,
             mean_features: [0.4, 0.8, 10.0, 20.0, 4.0],
             time_series: None,
+            autoscale: None,
+            slo_interactive: None,
         }
     }
 

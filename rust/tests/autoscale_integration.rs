@@ -1,0 +1,281 @@
+//! Integration tests for the elastic-capacity subsystem (ISSUE 5):
+//! fleet-bound invariants under randomized configurations, determinism
+//! across worker-thread counts, scripted capacity events end to end,
+//! and cell-cache behavior for autoscale-bearing cells.
+
+use dsd::autoscale::{AutoscaleConfig, ScalingPolicy};
+use dsd::config::SimConfig;
+use dsd::scenario::{ArrivalProcess, Scenario, ScenarioEvent, TimedEvent};
+use dsd::sim::Simulator;
+use dsd::sweep::{run_cells, SweepGrid};
+use dsd::util::prop::{run_prop, Gen};
+
+fn elastic(policy: ScalingPolicy, min: usize, max: usize, initial: usize) -> AutoscaleConfig {
+    AutoscaleConfig {
+        name: "elastic".into(),
+        policy,
+        min_targets: min,
+        max_targets: Some(max),
+        initial_targets: Some(initial),
+        eval_interval_ms: 200.0,
+        cooldown_ms: 400.0,
+        provision_delay_ms: 300.0,
+        cost_per_target_s: 1.0,
+    }
+}
+
+fn burst_scenario(base: f64, peak: f64) -> Scenario {
+    Scenario {
+        name: "burst".into(),
+        arrivals: Some(ArrivalProcess::Spike {
+            base_per_s: base,
+            peak_per_s: peak,
+            t_start_ms: 1_000.0,
+            t_end_ms: 3_000.0,
+        }),
+        events: Vec::new(),
+    }
+}
+
+/// Property (ISSUE satellite): across randomized bounds, policies, and
+/// load shapes, every request completes, the provisioned-capacity step
+/// series never leaves `[min, max]`, and the cost integral is bounded
+/// by `max × duration`.
+#[test]
+fn prop_autoscaled_runs_complete_within_capacity_bounds() {
+    run_prop("autoscale simulator invariants", 10, |g: &mut Gen| {
+        let fleet = g.usize_in(2, 4);
+        let min = 1;
+        let max = g.usize_in(min, fleet);
+        let initial = g.usize_in(min, max);
+        let policy = if g.bool_with(0.5) {
+            ScalingPolicy::Reactive {
+                up_queue_depth: g.f64_in(1.0, 6.0),
+                down_queue_depth: 0.5,
+                down_utilization: g.f64_in(0.2, 0.6),
+            }
+        } else {
+            ScalingPolicy::Predictive {
+                window_ticks: g.usize_in(2, 5),
+                up_backlog_per_target: g.f64_in(2.0, 8.0),
+                down_backlog_per_target: 1.0,
+            }
+        };
+        let mut cfg = SimConfig::builder()
+            .seed(g.seed)
+            .targets(fleet)
+            .drafters(12)
+            .requests(g.usize_in(40, 120))
+            .rate_per_s(g.f64_in(10.0, 40.0))
+            .build();
+        cfg.scenario = Some(burst_scenario(20.0, g.f64_in(40.0, 100.0)));
+        cfg.autoscale = Some(elastic(policy, min, max, initial));
+        cfg.validate().unwrap();
+        let requests = cfg.workload.requests;
+        let rep = Simulator::new(cfg).run();
+        assert_eq!(
+            rep.system.completed, requests,
+            "autoscaling must never strand a request"
+        );
+        let a = rep.system.autoscale.as_ref().expect("autoscale metrics");
+        for &(t, c) in &a.steps {
+            assert!(t >= 0.0 && t.is_finite());
+            assert!(
+                (min..=max).contains(&(c as usize)),
+                "capacity {c} left [{min}, {max}]"
+            );
+        }
+        assert!((min..=max).contains(&(a.final_provisioned as usize)));
+        assert!((a.peak_provisioned as usize) <= max);
+        let ceiling = max as f64 * rep.system.sim_duration_ms / 1_000.0;
+        assert!(
+            a.target_seconds <= ceiling + 1e-6,
+            "cost integral {} above the max-fleet ceiling {ceiling}",
+            a.target_seconds
+        );
+        assert!(a.target_seconds >= 0.0);
+    });
+}
+
+/// Autoscale sweeps stay byte-identical across worker-thread counts
+/// (the determinism contract every other axis already carries).
+#[test]
+fn autoscale_sweep_is_byte_identical_across_thread_counts() {
+    let base = SimConfig::builder()
+        .seed(1)
+        .targets(3)
+        .drafters(9)
+        .requests(30)
+        .rate_per_s(15.0)
+        .build();
+    let mut grid = SweepGrid::new(base);
+    grid.seeds = vec![1, 2];
+    grid.scenarios = vec![Some(burst_scenario(15.0, 60.0))];
+    grid.autoscales = vec![
+        None,
+        Some(elastic(ScalingPolicy::default_reactive(), 1, 3, 2)),
+        Some(elastic(
+            ScalingPolicy::Predictive {
+                window_ticks: 3,
+                up_backlog_per_target: 4.0,
+                down_backlog_per_target: 1.0,
+            },
+            1,
+            3,
+            1,
+        )),
+    ];
+    let cells = grid.expand().unwrap();
+    assert_eq!(cells.len(), 6);
+    let one = run_cells(&cells, false, 1);
+    let four = run_cells(&cells, false, 4);
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(
+            a.metrics().to_json().to_string_pretty(),
+            b.metrics().to_json().to_string_pretty(),
+            "thread count changed an autoscale cell"
+        );
+    }
+    // Elastic cells carry the capacity payloads; the fixed-fleet cell
+    // does not (historical byte layout).
+    for r in &one {
+        let m = r.metrics();
+        if r.label("autoscale") == Some("none") {
+            assert!(m.autoscale.is_none());
+            assert!(m.slo_interactive.is_none());
+        } else {
+            assert!(m.autoscale.is_some(), "elastic cells carry the cost meter");
+            assert!(m.slo_interactive.is_some());
+            assert!(m.time_series.is_some());
+            assert!(m
+                .time_series
+                .as_ref()
+                .unwrap()
+                .windows
+                .iter()
+                .all(|w| w.provisioned_targets.is_some()));
+        }
+    }
+}
+
+/// Cached autoscale cells splice byte-identically and execute zero
+/// cells warm (the kill-and-resume contract over the new payloads).
+#[test]
+fn autoscale_cells_cache_and_resume() {
+    use dsd::sweep::{run_cells_cached, CellCache};
+    let dir = std::env::temp_dir().join(format!("dsd-autoscale-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = CellCache::open(&dir).unwrap();
+    let base = SimConfig::builder()
+        .seed(3)
+        .targets(3)
+        .drafters(9)
+        .requests(24)
+        .rate_per_s(12.0)
+        .build();
+    let mut grid = SweepGrid::new(base);
+    grid.autoscales = vec![Some(elastic(ScalingPolicy::default_reactive(), 1, 3, 2))];
+    grid.seeds = vec![1, 2];
+    let cells = grid.expand().unwrap();
+    let (cold, s1) = run_cells_cached(&cells, false, 2, Some(&cache));
+    assert_eq!(s1.executed, cells.len());
+    let (warm, s2) = run_cells_cached(&cells, false, 2, Some(&cache));
+    assert_eq!(s2.executed, 0, "warm autoscale run must execute zero cells");
+    assert_eq!(s2.cache_hits, cells.len());
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(
+            a.metrics().to_json().to_string_pretty(),
+            b.metrics().to_json().to_string_pretty(),
+            "cached autoscale payloads must reload byte-identically"
+        );
+        assert!(b.metrics().autoscale.is_some(), "meter survives the cache");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scripted `target_pool_*` events drive the fleet end to end through
+/// YAML (scenario file + autoscale block), bypassing the policy
+/// cooldown but never the capacity bounds.
+#[test]
+fn scripted_capacity_events_from_yaml_respect_bounds() {
+    let y = "\
+seed: 2
+cluster:
+  targets:
+    - count: 3
+  drafters:
+    - count: 9
+workload:
+  dataset: gsm8k
+  requests: 40
+  rate_per_s: 15
+autoscale:
+  policy:
+    kind: scheduled
+  min_targets: 1
+  max_targets: 3
+  initial_targets: 3
+  cooldown_ms: 1000000
+  provision_delay_ms: 100
+scenario:
+  name: scripted
+  events:
+    - at_ms: 400
+      kind: target_pool_down
+      count: 2
+    - at_ms: 1200
+      kind: target_pool_up
+      count: 5
+";
+    let cfg = SimConfig::from_yaml(y).unwrap();
+    let requests = cfg.workload.requests;
+    let rep = Simulator::new(cfg).run();
+    assert_eq!(rep.system.completed, requests);
+    let a = rep.system.autoscale.as_ref().unwrap();
+    // The huge cooldown is irrelevant: scripted events are operator
+    // actions. The up-count of 5 clamps at the 3-target fleet.
+    assert!(a.scale_down_events >= 1 && a.scale_down_events <= 2);
+    assert!(a.scale_up_events >= 1);
+    for &(_, c) in &a.steps {
+        assert!((1..=3).contains(&(c as usize)));
+    }
+    assert_eq!(a.final_provisioned, 3);
+}
+
+/// A drain mid-flight re-routes queued work instead of stranding it:
+/// force a one-target drain while heavily loaded and check completion.
+#[test]
+fn graceful_drain_reroutes_queued_work() {
+    let mut cfg = SimConfig::builder()
+        .seed(6)
+        .targets(2)
+        .drafters(16)
+        .requests(80)
+        .rate_per_s(60.0)
+        .build();
+    cfg.scenario = Some(Scenario {
+        name: "forced-drain".into(),
+        arrivals: None,
+        events: vec![TimedEvent {
+            at_ms: 300.0,
+            event: ScenarioEvent::TargetPoolDown { count: 1 },
+        }],
+    });
+    cfg.autoscale = Some(AutoscaleConfig {
+        policy: ScalingPolicy::Scheduled,
+        min_targets: 1,
+        max_targets: Some(2),
+        initial_targets: Some(2),
+        ..AutoscaleConfig::default()
+    });
+    let rep = Simulator::new(cfg).run();
+    assert_eq!(rep.system.completed, 80, "drained work must re-route, not strand");
+    let a = rep.system.autoscale.as_ref().unwrap();
+    assert_eq!(a.scale_down_events, 1);
+    assert_eq!(a.final_provisioned, 1);
+    // Every completion after the drain point ran on the surviving
+    // target; the report's per-target breakdown shows both served work.
+    let groups = rep.per_target_breakdown();
+    assert!(groups.iter().map(|g| g.completed).sum::<u64>() == 80);
+}

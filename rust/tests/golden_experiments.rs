@@ -1,5 +1,6 @@
 //! Self-bootstrapping golden snapshots for the runner-ported experiment
-//! families (fig5, fig7/8, fig9/10, table2, agility) plus cached-vs-uncached
+//! families (fig5, fig7/8, fig9/10, table2, agility, elasticity) plus
+//! cached-vs-uncached
 //! byte-identity: each family's sweep data must serialize identically
 //! whether computed directly, against a cold cell cache, or spliced
 //! entirely from a warm cache — and the warm pass must execute zero
@@ -10,7 +11,7 @@
 //! any byte drift fails. Regenerate deliberately with
 //! `DSD_UPDATE_GOLDEN=1 cargo test -q --test golden_experiments`.
 
-use dsd::experiments::{agility, fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale};
+use dsd::experiments::{agility, elasticity, fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale};
 use dsd::sweep::CellCache;
 use dsd::util::json::Json;
 use std::path::PathBuf;
@@ -245,4 +246,35 @@ fn golden_agility_and_cache_identity() {
         agility_json(&agility::sweep_cached(SCALE, &SEEDS, ctx))
     });
     check_golden("agility_tiny.json", &text);
+}
+
+fn elasticity_json(rows: &[elasticity::ElasticityRow]) -> String {
+    pretty(Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .with("scenario", r.scenario.into())
+                    .with("policy", r.policy.into())
+                    .with("throughput_rps", r.throughput_rps.into())
+                    .with("slo_interactive", r.slo_interactive.into())
+                    .with("mean_targets", r.mean_targets.into())
+                    .with("cost_per_1k_tokens", r.cost_per_1k_tokens.into())
+                    .with("cost_vs_static", r.cost_vs_static.into())
+                    .with("cost", r.cost.into())
+            })
+            .collect(),
+    ))
+}
+
+/// The autoscale-driven elasticity family (ISSUE 5): cold/warm/uncached
+/// byte-identity over autoscale-bearing cells — exercising the
+/// autoscale canonical JSON inside cache keys, and the capacity
+/// time-series / cost-meter / SLO payloads inside cached cell files,
+/// end to end.
+#[test]
+fn golden_elasticity_and_cache_identity() {
+    let text = triple_run("elasticity", |ctx| {
+        elasticity_json(&elasticity::sweep_cached(SCALE, &SEEDS, ctx))
+    });
+    check_golden("elasticity_tiny.json", &text);
 }

@@ -14,9 +14,13 @@
 //!   full sink — are *exactly* equal (all-integer comparisons),
 //! * the windowed time series agrees window by window: all counts
 //!   (completed / active / tokens) exactly, means to 1e-9 — including
-//!   on scenario-bearing configs (flash crowd, link flap, pool churn),
-//!   so bounded-memory mode keeps feature parity under dynamics.
+//!   on scenario-bearing configs (flash crowd, link flap, pool churn)
+//!   and on autoscale-bearing configs, where the elastic-capacity
+//!   series (per-window provisioned-target means) and the cost meter
+//!   must also agree between the streaming fold and the report's batch
+//!   recomputation.
 
+use dsd::autoscale::{AutoscaleConfig, ScalingPolicy};
 use dsd::config::{BatchingKind, LinkOverride, PoolSpec, RoutingKind, SimConfig, WindowKind};
 use dsd::metrics::{FullSink, GroupSummary, MetricsSink, SimReport, StreamingConfig, StreamingSink};
 use dsd::scenario::{ArrivalProcess, Scenario, ScenarioEvent, TimedEvent};
@@ -54,7 +58,9 @@ fn base(
 /// The differential grid: 3 datasets × 4 window policies (each paired
 /// with a distinct routing/batching stack) + heterogeneous-link and
 /// finite-bandwidth variants + 3 scenario-bearing configs (flash crowd,
-/// link flap, pool churn + target slowdown) — 17 configurations.
+/// link flap, pool churn + target slowdown) + 1 autoscale-bearing
+/// config (reactive elastic pool under a flash crowd) — 18
+/// configurations.
 fn differential_grid() -> Vec<(String, SimConfig)> {
     use dsd::cluster::gpu::{A40, V100};
     use dsd::cluster::model::{LLAMA2_7B, QWEN_7B};
@@ -183,6 +189,37 @@ fn differential_grid() -> Vec<(String, SimConfig)> {
         ],
     });
     grid.push(("gsm8k/scenario-churn".into(), churn));
+    // (4) Elastic capacity: a reactive autoscale pool under a flash
+    // crowd — the capacity series and cost meter must survive streaming
+    // mode (ISSUE 5 acceptance criterion).
+    let mut elastic =
+        base(36, "gsm8k", WindowKind::Static(4), RoutingKind::Jsq, BatchingKind::Lab);
+    elastic.scenario = Some(Scenario {
+        name: "burst".into(),
+        arrivals: Some(ArrivalProcess::Spike {
+            base_per_s: 24.0,
+            peak_per_s: 96.0,
+            t_start_ms: 500.0,
+            t_end_ms: 1_200.0,
+        }),
+        events: Vec::new(),
+    });
+    elastic.autoscale = Some(AutoscaleConfig {
+        name: "elastic".into(),
+        policy: ScalingPolicy::Reactive {
+            up_queue_depth: 2.0,
+            down_queue_depth: 0.5,
+            down_utilization: 0.5,
+        },
+        min_targets: 1,
+        max_targets: Some(3),
+        initial_targets: Some(1),
+        eval_interval_ms: 150.0,
+        cooldown_ms: 300.0,
+        provision_delay_ms: 250.0,
+        cost_per_target_s: 1.0,
+    });
+    grid.push(("gsm8k/autoscale-burst".into(), elastic));
     grid
 }
 
@@ -332,10 +369,51 @@ fn assert_parity(name: &str, cfg: &SimConfig, full: &SimReport) {
                 s.index
             );
         }
+        // Elastic-capacity series: present on exactly the same windows,
+        // equal to 1e-9 (the incremental fold vs the batch integration).
+        match (s.provisioned_targets, f.provisioned_targets) {
+            (None, None) => {}
+            (Some(a), Some(b)) => assert!(
+                (a - b).abs() < 1e-9,
+                "{name}: ts w{} provisioned targets: {a} vs {b}",
+                s.index
+            ),
+            (a, b) => panic!("{name}: ts w{} capacity presence mismatch: {a:?} vs {b:?}", s.index),
+        }
         windowed_total += s.completed;
     }
     // The windows partition the completions.
     assert_eq!(windowed_total, stream.stream.completed, "{name}: ts partition");
+
+    // Elastic-capacity accounting: both modes run the same deterministic
+    // fleet, so the cost meter agrees exactly.
+    match (&stream.system.autoscale, &full.system.autoscale) {
+        (None, None) => assert!(
+            s_ts.windows.iter().all(|w| w.provisioned_targets.is_none()),
+            "{name}: capacity series without an autoscale block"
+        ),
+        (Some(sa), Some(fa)) => {
+            assert_eq!(sa.steps, fa.steps, "{name}: capacity steps");
+            assert_eq!(sa.scale_up_events, fa.scale_up_events, "{name}");
+            assert_eq!(sa.scale_down_events, fa.scale_down_events, "{name}");
+            assert!(
+                (sa.target_seconds - fa.target_seconds).abs() < 1e-9,
+                "{name}: target-seconds {} vs {}",
+                sa.target_seconds,
+                fa.target_seconds
+            );
+            assert!(
+                !s_ts.windows.is_empty()
+                    && s_ts.windows.iter().all(|w| w.provisioned_targets.is_some()),
+                "{name}: every window must carry the capacity series"
+            );
+        }
+        (a, b) => panic!(
+            "{name}: autoscale metrics presence mismatch: {:?} vs {:?}",
+            a.is_some(),
+            b.is_some()
+        ),
+    }
 }
 
 #[test]
@@ -345,6 +423,10 @@ fn streaming_matches_full_across_differential_grid() {
     assert!(
         grid.iter().filter(|(_, c)| c.scenario.is_some()).count() >= 3,
         "differential grid must include ≥3 scenario-bearing configs"
+    );
+    assert!(
+        grid.iter().any(|(_, c)| c.autoscale.is_some()),
+        "differential grid must include an autoscale-bearing config"
     );
     for (name, cfg) in grid {
         let full = Simulator::new(cfg.clone()).run();
@@ -360,10 +442,19 @@ fn streaming_matches_full_across_differential_grid() {
 #[test]
 fn refolding_full_records_is_bit_identical_to_live_streaming() {
     for (name, cfg) in differential_grid() {
-        let (sink, _system) = Simulator::new(cfg.clone())
+        let (sink, system) = Simulator::new(cfg.clone())
             .run_with(FullSink::new())
             .expect("full run");
         let mut refold = StreamingSink::new(StreamingConfig::for_sim(&cfg));
+        // The capacity step series replays from the retained system
+        // metrics (it is the only streaming input that does not live in
+        // the per-request records; its accumulators are disjoint from
+        // the record fold, so replay order vs records is immaterial).
+        if let Some(a) = &system.autoscale {
+            for &(t, c) in &a.steps {
+                refold.record_capacity(t, c);
+            }
+        }
         for m in sink.into_requests() {
             for &g in &m.gamma_decisions {
                 refold.record_gamma(g);
@@ -399,4 +490,49 @@ fn streaming_parity_at_scale_100k() {
     cfg.max_sim_ms = 1e9;
     let full = Simulator::new(cfg.clone()).run();
     assert_parity("scale-100k", &cfg, &full);
+}
+
+/// Nightly autoscale differential: the same parity contract — including
+/// the capacity series and cost meter — on an elastic pool riding a
+/// sustained flash crowd at 40k requests, where provisioning churn
+/// actually accumulates many capacity steps.
+#[test]
+#[ignore = "nightly-scale autoscale differential (~40k requests); run with: cargo test --release -- --ignored"]
+fn streaming_parity_autoscale_at_scale_40k() {
+    let mut cfg = SimConfig::builder()
+        .seed(8)
+        .targets(6)
+        .drafters(48)
+        .requests(40_000)
+        .rate_per_s(200.0)
+        .dataset("gsm8k")
+        .build();
+    cfg.max_sim_ms = 1e9;
+    cfg.scenario = Some(Scenario {
+        name: "burst".into(),
+        arrivals: Some(ArrivalProcess::Spike {
+            base_per_s: 200.0,
+            peak_per_s: 600.0,
+            t_start_ms: 60_000.0,
+            t_end_ms: 120_000.0,
+        }),
+        events: Vec::new(),
+    });
+    cfg.autoscale = Some(AutoscaleConfig {
+        name: "elastic".into(),
+        policy: ScalingPolicy::Reactive {
+            up_queue_depth: 4.0,
+            down_queue_depth: 1.0,
+            down_utilization: 0.4,
+        },
+        min_targets: 2,
+        max_targets: Some(6),
+        initial_targets: Some(3),
+        eval_interval_ms: 500.0,
+        cooldown_ms: 1_500.0,
+        provision_delay_ms: 1_000.0,
+        cost_per_target_s: 1.0,
+    });
+    let full = Simulator::new(cfg.clone()).run();
+    assert_parity("autoscale-40k", &cfg, &full);
 }
