@@ -30,4 +30,5 @@ fn main() {
         2.0 * n as f64 / t.elapsed().as_secs_f64(),
         "events/s",
     );
+    harness::finish("engine");
 }

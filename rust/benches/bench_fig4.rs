@@ -7,4 +7,5 @@ fn main() {
     harness::bench("fig4/full calibration study", 10, || {
         black_box(dsd::experiments::fig4::run(42));
     });
+    harness::finish("fig4");
 }

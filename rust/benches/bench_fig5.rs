@@ -12,4 +12,5 @@ fn main() {
     harness::bench("fig5/sweep at paper scale", 3, || {
         black_box(fig5::run(Scale(1.0), &[1]));
     });
+    harness::finish("fig5");
 }

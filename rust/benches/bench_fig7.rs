@@ -8,4 +8,5 @@ fn main() {
     harness::bench("fig7_8/routing sweep at scale 0.25", 3, || {
         black_box(fig7_8::run(Scale(0.25), &[1]));
     });
+    harness::finish("fig7");
 }

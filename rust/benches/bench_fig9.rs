@@ -8,4 +8,5 @@ fn main() {
     harness::bench("fig9_10/batching sweep at scale 0.25", 3, || {
         black_box(fig9_10::run(Scale(0.25), &[1]));
     });
+    harness::finish("fig9");
 }

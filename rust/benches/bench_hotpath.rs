@@ -1,0 +1,19 @@
+//! Hot-path microbenchmarks (ROADMAP speed program): the four paths
+//! every million-cell sweep pays per cell — DES event queue traffic, the
+//! streaming simulator loop, cell-key derivation, and cell
+//! serialization — plus paired old-vs-lean cases so the emitted
+//! `BENCH_hotpath.json` records the measured speedup of this PR's
+//! allocation-free variants.
+//!
+//! The suite itself lives in `dsd::bench` so `dsd bench --suite hotpath`
+//! and the `cargo test` smoke test run the same cases.
+
+use dsd::bench::{default_out_dir, run_suite, Tier};
+
+fn main() {
+    let report = run_suite("hotpath", Tier::Full).expect("built-in suite");
+    match report.write_to(&default_out_dir()) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("[bench] {e}"),
+    }
+}

@@ -34,4 +34,5 @@ fn main() {
         n as f64 / t.elapsed().as_secs_f64(),
         "pred/s",
     );
+    harness::finish("hwmodel");
 }

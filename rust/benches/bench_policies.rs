@@ -49,4 +49,5 @@ fn main() {
             black_box(awc.decide(i % 32, &f));
         }
     });
+    harness::finish("policies");
 }

@@ -46,4 +46,5 @@ fn main() {
         black_box((acc, corr));
         tkv_slot = Some(nkv);
     });
+    harness::finish("runtime");
 }

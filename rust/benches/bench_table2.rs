@@ -12,4 +12,5 @@ fn main() {
     harness::bench("table2/sweep at paper scale", 3, || {
         black_box(table2::run(Scale(1.0), &[1]));
     });
+    harness::finish("table2");
 }

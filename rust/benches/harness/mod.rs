@@ -1,30 +1,64 @@
-//! Mini-criterion: the offline registry has no criterion crate, so each
-//! bench target links this harness. `bench("name", iters, f)` warms up,
-//! times `iters` runs, and prints mean / p50 / p99 per iteration.
+//! Mini-criterion shim for the `cargo bench` targets: the offline
+//! registry has no criterion crate, so each target links this module.
+//!
+//! The timing loop and percentile math live in [`dsd::bench`] (shared
+//! with `dsd bench` on the CLI and the `cargo test` smoke test);
+//! percentiles go through the linear-interpolation
+//! `util::stats::percentile`, not the biased direct indexing this shim
+//! originally used. Cases accumulate in a process-global collector, and
+//! [`finish`] writes them as machine-readable `BENCH_<suite>.json` at
+//! the repository root so successive runs form a perf trajectory — call
+//! it at the end of every bench `main`.
 
-use std::time::Instant;
+use dsd::bench::{case_line, default_out_dir, rate_line, time_case, BenchReport, Tier};
+use std::sync::Mutex;
 
-/// Run and report one benchmark case.
-pub fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
-    // Warmup.
-    for _ in 0..iters.div_ceil(10).max(1) {
-        f();
-    }
-    let mut samples = Vec::with_capacity(iters);
-    for _ in 0..iters {
-        let t = Instant::now();
-        f();
-        samples.push(t.elapsed().as_secs_f64() * 1e3);
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    let p50 = samples[samples.len() / 2];
-    let p99 = samples[(samples.len() * 99 / 100).min(samples.len() - 1)];
-    println!("bench {name:<44} mean {mean:>9.3} ms  p50 {p50:>9.3} ms  p99 {p99:>9.3} ms");
+static COLLECTOR: Mutex<Option<BenchReport>> = Mutex::new(None);
+
+fn with_report(f: impl FnOnce(&mut BenchReport)) {
+    let mut guard = COLLECTOR.lock().expect("bench collector");
+    // The suite name is only known at `finish`; collect under a
+    // placeholder until then.
+    f(guard.get_or_insert_with(|| BenchReport::new("", Tier::Full)));
+}
+
+/// Run, record, and report one benchmark case.
+pub fn bench(name: &str, iters: usize, f: impl FnMut()) {
+    let case = time_case(name, iters, f);
+    println!("{}", case_line(&case));
+    with_report(|r| r.cases.push(case));
 }
 
 /// Report a derived throughput figure alongside benches.
 #[allow(dead_code)]
 pub fn report_rate(name: &str, value: f64, unit: &str) {
-    println!("rate  {name:<44} {value:>12.0} {unit}");
+    println!("{}", rate_line(name, value, unit));
+    with_report(|r| {
+        r.rates.push(dsd::bench::RateResult {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        })
+    });
+}
+
+/// Persist everything benched so far as `BENCH_<suite>.json` at the
+/// repository root. Call once, at the end of the bench target's `main`.
+pub fn finish(suite: &str) {
+    let report = {
+        let mut guard = COLLECTOR.lock().expect("bench collector");
+        guard.take()
+    };
+    let Some(mut report) = report else {
+        // Nothing ran (e.g. the target bailed out early on missing
+        // artifacts): write no file rather than an empty trajectory
+        // point.
+        eprintln!("[bench] no cases recorded; not writing BENCH_{suite}.json");
+        return;
+    };
+    report.suite = suite.to_string();
+    match report.write_to(&default_out_dir()) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("[bench] {e}"),
+    }
 }

@@ -1,0 +1,509 @@
+//! Benchmark-trajectory subsystem (ROADMAP speed program).
+//!
+//! Every benchmark run — a `cargo bench` target through the
+//! `benches/harness` shim, or `dsd bench` on the CLI — emits a
+//! machine-readable `BENCH_<suite>.json` at the repository root next to
+//! the golden reports, so successive PRs diff a perf *trajectory*
+//! instead of guessing from prose. The mini-criterion timing loop lives
+//! here (the offline registry has no criterion crate) so the CLI, the
+//! bench targets, and the `cargo test` smoke test all share one
+//! implementation — and one percentile definition: samples summarize
+//! through [`crate::util::stats::percentile`] (linear interpolation),
+//! not the biased `samples[len/2]` / truncating-p99 indexing the first
+//! harness used.
+//!
+//! Report schema (stable; parsed back by [`BenchReport::from_json`]):
+//!
+//! ```json
+//! {
+//!   "suite": "hotpath",
+//!   "meta": {"sim_version": "dsd-sim-1", "profile": "release",
+//!            "threads": 8, "tier": "full"},
+//!   "cases": [{"name": "...", "iters": 20,
+//!              "mean_ms": 1.2, "p50_ms": 1.1, "p99_ms": 2.0}],
+//!   "rates": [{"name": "...", "value": 1.5e6, "unit": "events/s"}]
+//! }
+//! ```
+//!
+//! `meta.sim_version` is [`SIM_VERSION_TAG`]: a trajectory diff across a
+//! tag bump compares different simulators and says so. `meta.profile`
+//! distinguishes debug smoke runs from release measurements — only
+//! release/full points belong on a trajectory plot.
+
+use crate::config::SimConfig;
+use crate::sim::{EventQueue, Simulator};
+use crate::sweep::cache::{cell_key, CellKeyer};
+use crate::sweep::runner::CellMetrics;
+use crate::sweep::SIM_VERSION_TAG;
+use crate::util::json::Json;
+use crate::util::stats;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// How hard a suite runs: `Full` is the measurement configuration the
+/// bench targets use; `Quick` shrinks iteration counts and workloads to
+/// smoke-test scale (the `cargo test` guard and `dsd bench --quick`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Smoke-test scale: every case executes, nothing is measured well.
+    Quick,
+    /// Measurement scale.
+    Full,
+}
+
+impl Tier {
+    /// Pick a size by tier.
+    pub fn pick(self, quick: usize, full: usize) -> usize {
+        match self {
+            Tier::Quick => quick,
+            Tier::Full => full,
+        }
+    }
+
+    /// Lowercase tag for the report metadata.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Tier::Quick => "quick",
+            Tier::Full => "full",
+        }
+    }
+}
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CaseResult {
+    /// Case name, `area/what` by convention.
+    pub name: String,
+    /// Timed iterations (excludes warmup).
+    pub iters: usize,
+    /// Mean per-iteration wall time, ms.
+    pub mean_ms: f64,
+    /// Median per-iteration wall time, ms (linear interpolation).
+    pub p50_ms: f64,
+    /// 99th-percentile per-iteration wall time, ms.
+    pub p99_ms: f64,
+}
+
+/// A derived throughput figure reported alongside timed cases.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RateResult {
+    /// Figure name.
+    pub name: String,
+    /// Figure value.
+    pub value: f64,
+    /// Unit label, e.g. `events/s`.
+    pub unit: String,
+}
+
+/// One bench run: metadata plus every case/rate it produced. Serializes
+/// to `BENCH_<suite>.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// Suite name (also names the output file).
+    pub suite: String,
+    /// [`SIM_VERSION_TAG`] at build time.
+    pub sim_version: String,
+    /// `release` or `debug` (from `debug_assertions`).
+    pub profile: String,
+    /// Available hardware parallelism when the run started.
+    pub threads: usize,
+    /// Tier tag (`quick` / `full`).
+    pub tier: String,
+    /// Timed cases, in execution order.
+    pub cases: Vec<CaseResult>,
+    /// Derived rate figures, in execution order.
+    pub rates: Vec<RateResult>,
+}
+
+impl BenchReport {
+    /// Empty report with run metadata captured from the build and host.
+    pub fn new(suite: &str, tier: Tier) -> BenchReport {
+        BenchReport {
+            suite: suite.to_string(),
+            sim_version: SIM_VERSION_TAG.to_string(),
+            profile: if cfg!(debug_assertions) { "debug" } else { "release" }.to_string(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            tier: tier.tag().to_string(),
+            cases: Vec::new(),
+            rates: Vec::new(),
+        }
+    }
+
+    /// File name this report persists under.
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.suite)
+    }
+
+    /// Serialize (insertion-ordered keys; stable across runs).
+    pub fn to_json(&self) -> Json {
+        let meta = Json::obj()
+            .with("sim_version", self.sim_version.as_str().into())
+            .with("profile", self.profile.as_str().into())
+            .with("threads", self.threads.into())
+            .with("tier", self.tier.as_str().into());
+        let cases: Vec<Json> = self
+            .cases
+            .iter()
+            .map(|c| {
+                Json::obj()
+                    .with("name", c.name.as_str().into())
+                    .with("iters", c.iters.into())
+                    .with("mean_ms", c.mean_ms.into())
+                    .with("p50_ms", c.p50_ms.into())
+                    .with("p99_ms", c.p99_ms.into())
+            })
+            .collect();
+        let rates: Vec<Json> = self
+            .rates
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .with("name", r.name.as_str().into())
+                    .with("value", r.value.into())
+                    .with("unit", r.unit.as_str().into())
+            })
+            .collect();
+        Json::obj()
+            .with("suite", self.suite.as_str().into())
+            .with("meta", meta)
+            .with("cases", Json::Arr(cases))
+            .with("rates", Json::Arr(rates))
+    }
+
+    /// Parse a report back (None on any schema violation).
+    pub fn from_json(doc: &Json) -> Option<BenchReport> {
+        let meta = doc.get("meta")?;
+        let mut report = BenchReport {
+            suite: doc.get("suite")?.as_str()?.to_string(),
+            sim_version: meta.get("sim_version")?.as_str()?.to_string(),
+            profile: meta.get("profile")?.as_str()?.to_string(),
+            threads: meta.get("threads")?.as_usize()?,
+            tier: meta.get("tier")?.as_str()?.to_string(),
+            cases: Vec::new(),
+            rates: Vec::new(),
+        };
+        for c in doc.get("cases")?.as_arr()? {
+            report.cases.push(CaseResult {
+                name: c.get("name")?.as_str()?.to_string(),
+                iters: c.get("iters")?.as_usize()?,
+                mean_ms: c.get("mean_ms")?.as_f64()?,
+                p50_ms: c.get("p50_ms")?.as_f64()?,
+                p99_ms: c.get("p99_ms")?.as_f64()?,
+            });
+        }
+        for r in doc.get("rates")?.as_arr()? {
+            report.rates.push(RateResult {
+                name: r.get("name")?.as_str()?.to_string(),
+                value: r.get("value")?.as_f64()?,
+                unit: r.get("unit")?.as_str()?.to_string(),
+            });
+        }
+        Some(report)
+    }
+
+    /// Write `BENCH_<suite>.json` into `dir`; returns the path written.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf, String> {
+        let path = dir.join(self.file_name());
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(&path, text)
+            .map_err(|e| format!("bench: write {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Time one case at `iters` iterations, record it, and print the
+    /// one-line human summary.
+    pub fn run_case(&mut self, name: &str, iters: usize, f: impl FnMut()) {
+        let case = time_case(name, iters, f);
+        println!("{}", case_line(&case));
+        self.cases.push(case);
+    }
+
+    /// Record a derived rate figure and print it.
+    pub fn report_rate(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{}", rate_line(name, value, unit));
+        self.rates.push(RateResult {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
+    }
+}
+
+/// Warm up, then time `iters` runs of `f`. Shared by [`BenchReport`] and
+/// the `benches/harness` shim (which collects cases globally because the
+/// bench targets call a free `bench(..)` function).
+pub fn time_case(name: &str, iters: usize, mut f: impl FnMut()) -> CaseResult {
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let (mean_ms, p50_ms, p99_ms) = summarize_samples(&samples);
+    CaseResult {
+        name: name.to_string(),
+        iters,
+        mean_ms,
+        p50_ms,
+        p99_ms,
+    }
+}
+
+/// (mean, p50, p99) of a per-iteration sample, all in the sample's unit.
+/// Percentiles use the shared linear-interpolation definition in
+/// [`stats::percentile`] — the old harness indexed `samples[len/2]`
+/// (upper-mid element: biased high for even lengths) and truncated the
+/// p99 index (for `iters < 100` it returned the *minimum* sample).
+pub fn summarize_samples(samples: &[f64]) -> (f64, f64, f64) {
+    (
+        stats::mean(samples),
+        stats::percentile(samples, 50.0),
+        stats::percentile(samples, 99.0),
+    )
+}
+
+/// Human one-liner for a timed case (the classic harness format).
+pub fn case_line(c: &CaseResult) -> String {
+    format!(
+        "bench {:<44} mean {:>9.3} ms  p50 {:>9.3} ms  p99 {:>9.3} ms",
+        c.name, c.mean_ms, c.p50_ms, c.p99_ms
+    )
+}
+
+/// Human one-liner for a rate figure.
+pub fn rate_line(name: &str, value: f64, unit: &str) -> String {
+    format!("rate  {name:<44} {value:>12.0} {unit}")
+}
+
+/// Where bench reports land by default: the repository root (parent of
+/// the crate directory), next to the golden reports.
+pub fn default_out_dir() -> PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).to_path_buf()
+}
+
+/// Names of every built-in suite, for `dsd bench --list` and the smoke
+/// test (which runs each at [`Tier::Quick`]).
+pub fn suite_names() -> &'static [&'static str] {
+    &["hotpath"]
+}
+
+/// Run one named suite.
+pub fn run_suite(name: &str, tier: Tier) -> Result<BenchReport, String> {
+    match name {
+        "hotpath" => Ok(hotpath_suite(tier)),
+        other => Err(format!(
+            "unknown bench suite '{other}' (available: {})",
+            suite_names().join(", ")
+        )),
+    }
+}
+
+/// A small but non-degenerate config for simulator-loop cases.
+fn bench_sim_config(requests: usize) -> SimConfig {
+    SimConfig::builder()
+        .seed(7)
+        .targets(2)
+        .drafters(8)
+        .requests(requests)
+        .rate_per_s(40.0)
+        .build()
+}
+
+/// A fully populated cell-metrics fixture for serialization cases.
+fn bench_cell_metrics() -> CellMetrics {
+    CellMetrics {
+        completed: 4096,
+        throughput_rps: 118.5,
+        token_throughput: 15_300.0,
+        target_utilization: 0.62,
+        mean_ttft_ms: 104.0,
+        p99_ttft_ms: 420.0,
+        mean_tpot_ms: 21.5,
+        p99_tpot_ms: 55.0,
+        mean_e2e_ms: 1_930.0,
+        mean_acceptance: 0.71,
+        mean_queue_delay_ms: 3.25,
+        mean_net_delay_ms: 11.0,
+        sim_duration_ms: 34_500.0,
+        events_processed: 1_250_000,
+        mean_features: [0.7, 0.5, 12.0, 21.5, 4.0],
+        time_series: None,
+        autoscale: None,
+        slo_interactive: None,
+    }
+}
+
+/// The four ROADMAP-named hot paths, plus paired old-vs-lean cases for
+/// the two serialization optimizations so the emitted JSON records the
+/// measured speedup (acceptance criterion of the speed program).
+fn hotpath_suite(tier: Tier) -> BenchReport {
+    let mut report = BenchReport::new("hotpath", tier);
+    let iters = tier.pick(2, 20);
+
+    // 1. DES engine: raw queue throughput.
+    let n_events = tier.pick(1_000, 100_000);
+    report.run_case(
+        &format!("engine/schedule+pop {n_events} events"),
+        iters,
+        || {
+            let mut q = EventQueue::new();
+            let mut x = 1u64;
+            for i in 0..n_events as u64 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                q.schedule((x % 1_000_000) as f64, i);
+            }
+            while q.pop().is_some() {}
+        },
+    );
+
+    // 2. Simulator loop in streaming mode (the per-round cost every
+    // sweep cell pays); the rate figure normalizes by events processed.
+    let n_req = tier.pick(24, 512);
+    let mut last_events = 0u64;
+    let mut last_secs = f64::NAN;
+    report.run_case(&format!("sim/run_streaming {n_req} requests"), iters, || {
+        let sim = Simulator::new(bench_sim_config(n_req));
+        let t = Instant::now();
+        let rep = sim.run_streaming();
+        last_secs = t.elapsed().as_secs_f64();
+        last_events = rep.system.events_processed;
+    });
+    if last_secs.is_finite() && last_secs > 0.0 {
+        report.report_rate(
+            "sim/streaming events per second",
+            last_events as f64 / last_secs,
+            "events/s",
+        );
+    }
+
+    // 3. Cell-key derivation: one-shot (fresh wrapper document each
+    // time) vs the reused CellKeyer — byte-identical keys, so the delta
+    // is pure derivation overhead.
+    let key_cfgs: Vec<SimConfig> =
+        (0..tier.pick(4, 64) as u64).map(|s| {
+            SimConfig::builder()
+                .seed(s)
+                .targets(2)
+                .drafters(8)
+                .requests(64)
+                .rate_per_s(10.0 + s as f64)
+                .build()
+        }).collect();
+    report.run_case("cellkey/one-shot cell_key", iters, || {
+        let mut acc = 0usize;
+        for cfg in &key_cfgs {
+            acc += cell_key(cfg, false).len();
+        }
+        assert_eq!(acc, 32 * key_cfgs.len());
+    });
+    report.run_case("cellkey/reused CellKeyer", iters, || {
+        let mut keyer = CellKeyer::new(false);
+        let mut acc = 0usize;
+        for cfg in &key_cfgs {
+            acc += keyer.key(cfg).len();
+        }
+        assert_eq!(acc, 32 * key_cfgs.len());
+    });
+
+    // 4. Sweep-cell serialization: fresh String per cell vs the reused
+    // buffer the cache's atomic writer uses (byte-identical output).
+    let metrics = bench_cell_metrics();
+    let n_cells = tier.pick(8, 256);
+    report.run_case(
+        &format!("cellser/to_string_pretty x{n_cells}"),
+        iters,
+        || {
+            let mut total = 0usize;
+            for _ in 0..n_cells {
+                total += metrics.to_json().to_string_pretty().len();
+            }
+            assert!(total > 0);
+        },
+    );
+    report.run_case(
+        &format!("cellser/write_pretty_into reused buf x{n_cells}"),
+        iters,
+        || {
+            let mut buf = String::new();
+            let mut total = 0usize;
+            for _ in 0..n_cells {
+                buf.clear();
+                metrics.to_json().write_pretty_into(&mut buf);
+                total += buf.len();
+            }
+            assert!(total > 0);
+        },
+    );
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_matches_shared_percentile_definition() {
+        // Even-length sample: the old harness reported samples[2] = 3
+        // as the median; the shared definition interpolates to 2.5.
+        let samples = [1.0, 2.0, 3.0, 4.0];
+        let (mean, p50, p99) = summarize_samples(&samples);
+        assert_eq!(mean, 2.5);
+        assert_eq!(p50, 2.5);
+        assert_eq!(p50, stats::percentile(&samples, 50.0));
+        assert_eq!(p99, stats::percentile(&samples, 99.0));
+        // The old truncating index `samples[(len*99/100).min(len-1)]`
+        // degenerates to the MAX sample for every len ≤ 100 — i.e. for
+        // all real bench iteration counts; interpolation gives 3.97 here.
+        assert!(p99 < 4.0 && (p99 - 3.97).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let mut r = BenchReport::new("unit", Tier::Quick);
+        r.cases.push(CaseResult {
+            name: "a/b".into(),
+            iters: 3,
+            mean_ms: 1.5,
+            p50_ms: 1.25,
+            p99_ms: 2.75,
+        });
+        r.rates.push(RateResult {
+            name: "a/rate".into(),
+            value: 1.0e6,
+            unit: "events/s".into(),
+        });
+        let doc = r.to_json();
+        let back = BenchReport::from_json(&doc).expect("roundtrip");
+        assert_eq!(back, r);
+        assert_eq!(back.sim_version, SIM_VERSION_TAG);
+        // Reparse from text too (what the smoke test does).
+        let text = doc.to_string_pretty();
+        let reparsed = Json::parse(&text).unwrap();
+        assert_eq!(BenchReport::from_json(&reparsed).expect("reparse"), r);
+        // Schema violations return None, never panic.
+        assert!(BenchReport::from_json(&Json::obj()).is_none());
+        let mut broken = doc.clone();
+        broken.remove("meta");
+        assert!(BenchReport::from_json(&broken).is_none());
+    }
+
+    #[test]
+    fn unknown_suite_is_an_error() {
+        assert!(run_suite("nope", Tier::Quick).is_err());
+        for name in suite_names() {
+            // Existence only; execution is covered by tests/bench_smoke.rs.
+            assert!(!name.is_empty());
+        }
+    }
+
+    #[test]
+    fn file_name_follows_suite() {
+        assert_eq!(BenchReport::new("hotpath", Tier::Full).file_name(), "BENCH_hotpath.json");
+    }
+}

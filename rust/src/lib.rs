@@ -37,6 +37,7 @@
 
 pub mod autoscale;
 pub mod awc;
+pub mod bench;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -12,6 +12,7 @@
 //!   trace-gen      emit a synthetic workload trace (Table 1 schema)
 //!   serve          run the real edge-cloud serving path on AOT artifacts
 //!   awc-eval       compare AWC vs baselines on one configuration
+//!   bench          run a named benchmark suite and write BENCH_<suite>.json
 //!
 //! `dsd <cmd> --help` lists options.
 
@@ -25,7 +26,8 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = args.split_first() else {
         eprintln!(
-            "usage: dsd <simulate|sweep|reproduce|sweep-dataset|trace-gen|serve|awc-eval> [options]"
+            "usage: dsd <simulate|sweep|reproduce|sweep-dataset|trace-gen|serve|awc-eval|bench> \
+             [options]"
         );
         std::process::exit(2);
     };
@@ -37,6 +39,7 @@ fn main() {
         "trace-gen" => cmd_trace_gen(rest),
         "serve" => cmd_serve(rest),
         "awc-eval" => cmd_awc_eval(rest),
+        "bench" => cmd_bench(rest),
         other => Err(format!("unknown subcommand '{other}'")),
     };
     if let Err(e) = result {
@@ -518,6 +521,47 @@ fn cmd_awc_eval(rest: &[String]) -> Result<(), String> {
         ]);
     }
     println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_bench(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("bench", "run a benchmark suite, write BENCH_<suite>.json")
+        .opt("suite", "suite name (see --list)", Some("hotpath"))
+        .opt(
+            "out-dir",
+            "directory for BENCH_<suite>.json (default: the repository root)",
+            None,
+        )
+        .flag(
+            "quick",
+            "smoke-test tier: tiny iteration counts and workloads; the emitted \
+             JSON is tagged tier=quick and is not a trajectory point",
+        )
+        .flag("list", "list available suites and exit");
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    if a.flag("list") {
+        for name in dsd::bench::suite_names() {
+            println!("{name}");
+        }
+        return Ok(());
+    }
+    let tier = if a.flag("quick") {
+        dsd::bench::Tier::Quick
+    } else {
+        dsd::bench::Tier::Full
+    };
+    let out_dir = match a.get("out-dir") {
+        Some(d) => {
+            let dir = std::path::PathBuf::from(d);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("create {}: {e}", dir.display()))?;
+            dir
+        }
+        None => dsd::bench::default_out_dir(),
+    };
+    let report = dsd::bench::run_suite(a.get("suite").unwrap(), tier)?;
+    let path = report.write_to(&out_dir)?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

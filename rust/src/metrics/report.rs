@@ -496,6 +496,29 @@ mod tests {
         assert!(Json::parse(&text).is_ok());
     }
 
+    /// Regression: a single non-finite latency record must degrade the
+    /// affected percentiles, never abort the whole end-of-run report —
+    /// `percentile`'s old `partial_cmp(..).unwrap()` comparator panicked
+    /// on the first NaN it compared.
+    #[test]
+    fn report_with_nan_latency_does_not_panic() {
+        let mut bad = req(0, 100.0, 30.0);
+        bad.ttft_ms = f64::NAN;
+        bad.tpot_ms = f64::NAN;
+        let rep = SimReport {
+            requests: vec![bad, req(1, 300.0, 50.0), req(2, 200.0, 40.0)],
+            system: SystemMetrics::default(),
+        };
+        // NaN sorts past +inf under total order: low/mid percentiles
+        // stay finite, only the extreme upper tail reaches the NaN.
+        assert!(rep.p_ttft(50.0).is_finite());
+        assert!(rep.p_tpot(50.0).is_finite());
+        assert!(rep.p_ttft(100.0).is_nan());
+        // The rest of the report machinery must also survive emission.
+        assert!(Json::parse(&rep.to_json().to_string_pretty()).is_ok());
+        assert!(rep.summary().contains("completed="));
+    }
+
     #[test]
     fn acceptance_ignores_fused_nan() {
         let mut a = req(0, 1.0, 2.0);

@@ -300,7 +300,11 @@ impl Simulator {
 fn steady_throughput(reqs: &[RequestMetrics], duration_ms: f64) -> f64 {
     let duration = duration_ms.max(1e-9);
     let mut ends: Vec<f64> = reqs.iter().map(|r| r.arrival_ms + r.e2e_ms).collect();
-    ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Total order: completion times are finite and non-negative in any
+    // valid run, so this sorts identically to the old `partial_cmp`
+    // comparator — but a corrupted NaN degrades the estimate instead of
+    // panicking mid-report.
+    ends.sort_by(f64::total_cmp);
     if ends.len() >= 8 {
         let t25 = ends[ends.len() / 4];
         let t75 = ends[ends.len() * 3 / 4];
@@ -352,6 +356,13 @@ struct SimState<S: MetricsSink> {
     sink: S,
     /// Whether the sink wants per-request γ-decision vectors retained.
     keep_gammas: bool,
+    /// Scratch buffer for routable-target snapshots, refilled before
+    /// every routing decision instead of allocating a fresh
+    /// `Vec<TargetSnapshot>` per arrival/re-route (one of the measured
+    /// hot paths — see `bench_hotpath`). Contents are transient; only
+    /// [`SimState::fill_routable_snapshots`] and the immediately
+    /// following `route` call may observe it.
+    snap_scratch: Vec<TargetSnapshot>,
 }
 
 /// Simulator-side glue for the elastic target pool: the fleet state
@@ -494,6 +505,7 @@ impl<S: MetricsSink> SimState<S> {
             feat_n: 0,
             sink,
             keep_gammas,
+            snap_scratch: Vec::with_capacity(n_targets),
         };
         if st.autoscale.is_some() {
             // Targets beyond the initial fleet start unavailable; the
@@ -595,29 +607,43 @@ impl<S: MetricsSink> SimState<S> {
         self.dynamics.target_available(tid)
     }
 
-    /// Snapshots of every routable target (the full fleet without
-    /// autoscaling — bit-identical to the pre-autoscale router input).
-    fn routable_snapshots(&self) -> Vec<TargetSnapshot> {
-        self.targets
-            .iter()
-            .enumerate()
-            .filter(|(id, _)| self.target_routable(*id))
-            .map(|(id, t)| TargetSnapshot {
+    /// Refill the scratch buffer with snapshots of every routable target
+    /// (the full fleet without autoscaling). Same targets, same order,
+    /// same field values as the old allocating `routable_snapshots`, so
+    /// the policy sees identical input and draws the identical RNG
+    /// stream — reports stay byte-for-byte unchanged.
+    ///
+    /// Availability is read via `self.dynamics` directly (not the
+    /// whole-`self` [`SimState::target_routable`] helper) so the `&mut`
+    /// borrow of the scratch buffer splits cleanly from the read.
+    fn fill_routable_snapshots(&mut self) {
+        self.snap_scratch.clear();
+        for (id, t) in self.targets.iter().enumerate() {
+            if !self.dynamics.target_available(id) {
+                continue;
+            }
+            self.snap_scratch.push(TargetSnapshot {
                 id,
                 prefill_queue: t.prefill_q.len(),
                 active: t.verify_q.len() + t.fused_resident.len(),
                 recent_tpot_ms: t.tpot_ema.value_or(0.0),
                 busy: t.busy,
-            })
-            .collect()
+            });
+        }
+    }
+
+    /// One routing decision over the current routable fleet.
+    fn route_routable(&mut self) -> usize {
+        self.fill_routable_snapshots();
+        // Disjoint field borrows: scratch (shared), policy + RNG (mut).
+        self.routing.route(&self.snap_scratch, &mut self.rng_route)
     }
 
     /// Re-route a request through the configured routing policy against
     /// live capacity (the fleet invariants guarantee at least one
     /// serving target exists).
     fn reroute(&mut self, rid: usize) -> usize {
-        let snaps = self.routable_snapshots();
-        let tid = self.routing.route(&snaps, &mut self.rng_route);
+        let tid = self.route_routable();
         self.requests[rid].target = tid;
         tid
     }
@@ -915,8 +941,7 @@ impl<S: MetricsSink> SimState<S> {
         // Routing sees only targets currently accepting work — the full
         // fleet without autoscaling (bit-identical to the pre-autoscale
         // snapshot list).
-        let snaps = self.routable_snapshots();
-        let tid = self.routing.route(&snaps, &mut self.rng_route);
+        let tid = self.route_routable();
         self.requests[rid].target = tid;
         // Prompt travels to the cloud for target-side prefill.
         let did = self.requests[rid].drafter;

@@ -47,12 +47,59 @@ pub const MAX_FAILED_ATTEMPTS: u32 = 3;
 
 /// Content key of one sweep cell: canonical JSON of the resolved config
 /// plus metric mode plus [`SIM_VERSION_TAG`], hashed to 32 hex chars.
+///
+/// One-shot form; sweep workers deriving keys for many cells should hold
+/// a [`CellKeyer`], which produces byte-identical keys without the
+/// per-cell wrapper construction and string allocations.
 pub fn cell_key(cfg: &SimConfig, streaming: bool) -> String {
     let doc = Json::obj()
         .with("version", SIM_VERSION_TAG.into())
         .with("streaming", streaming.into())
         .with("config", cfg.to_canonical_json());
     content_hash_hex(doc.to_string_canonical().as_bytes())
+}
+
+/// Reusable cell-key deriver: the invariant portion of the key document
+/// is precomputed once, so per-cell derivation only serializes the parts
+/// that actually vary (the config axes).
+///
+/// Canonical (sorted-key) order of the wrapper document is
+/// `"config" < "streaming" < "version"`, so its canonical bytes are
+/// exactly `{"config":<canonical cfg>,"streaming":<b>,"version":"…"}` —
+/// a constant prefix and suffix around the config serialization. Both
+/// are frozen at construction; [`CellKeyer::key`] writes the config into
+/// a reused buffer between them. Keys are asserted byte-identical to
+/// [`cell_key`] (and to the original clone-and-sort serialization path)
+/// in this module's tests — cache entries written under either path
+/// address the same cells.
+pub struct CellKeyer {
+    /// `{"config":` — invariant across every cell.
+    prefix: &'static str,
+    /// `,"streaming":<b>,"version":"<tag>"}` — invariant per keyer.
+    suffix: String,
+    /// Reused serialization buffer (grows to the largest config seen).
+    buf: String,
+}
+
+impl CellKeyer {
+    /// A keyer for one metric mode (streaming or full).
+    pub fn new(streaming: bool) -> CellKeyer {
+        CellKeyer {
+            prefix: "{\"config\":",
+            suffix: format!(",\"streaming\":{streaming},\"version\":\"{SIM_VERSION_TAG}\"}}"),
+            buf: String::new(),
+        }
+    }
+
+    /// Derive the content key for one cell — byte-identical to
+    /// [`cell_key`]`(cfg, streaming)`.
+    pub fn key(&mut self, cfg: &SimConfig) -> String {
+        self.buf.clear();
+        self.buf.push_str(self.prefix);
+        cfg.to_canonical_json().write_canonical_into(&mut self.buf);
+        self.buf.push_str(&self.suffix);
+        content_hash_hex(self.buf.as_bytes())
+    }
 }
 
 /// Outcome of a cache probe.
@@ -242,9 +289,22 @@ impl CellCache {
         let tmp = self
             .dir
             .join(format!("{key}.json.tmp.{}.{seq}", std::process::id()));
-        let mut text = doc.to_string_pretty();
-        text.push('\n');
-        std::fs::write(&tmp, text).map_err(|e| format!("cache: write {}: {e}", tmp.display()))?;
+        // Serialize into a thread-local reused buffer: a worker storing
+        // thousands of cells reallocates the text once, not per cell.
+        // `write_pretty_into` appends the exact bytes `to_string_pretty`
+        // returned before, so on-disk entries are unchanged.
+        thread_local! {
+            static BUF: std::cell::RefCell<String> =
+                const { std::cell::RefCell::new(String::new()) };
+        }
+        BUF.with(|b| {
+            let mut text = b.borrow_mut();
+            text.clear();
+            doc.write_pretty_into(&mut text);
+            text.push('\n');
+            std::fs::write(&tmp, text.as_bytes())
+                .map_err(|e| format!("cache: write {}: {e}", tmp.display()))
+        })?;
         std::fs::rename(&tmp, &path)
             .map_err(|e| format!("cache: rename to {}: {e}", path.display()))
     }
@@ -331,6 +391,53 @@ mod tests {
     #[test]
     fn streaming_mode_is_part_of_the_key() {
         assert_ne!(cell_key(&base_cfg(), false), cell_key(&base_cfg(), true));
+    }
+
+    /// The key a [`CellKeyer`] derives is byte-identical to [`cell_key`]
+    /// AND to the fully-legacy serialization path (deep clone-and-sort,
+    /// then compact) — the three-way check pins both this PR's
+    /// optimizations (wrapper precompute, no-clone canonical writer) to
+    /// the original bytes, so existing cell directories stay valid.
+    #[test]
+    fn keyer_matches_one_shot_and_legacy_paths() {
+        for streaming in [false, true] {
+            let mut keyer = CellKeyer::new(streaming);
+            for cfg in [
+                base_cfg(),
+                SimConfig::builder().seed(99).targets(4).drafters(3).requests(8).build(),
+                SimConfig::from_yaml(
+                    "seed: 7\nnetwork:\n  rtt_ms: 35\nworkload:\n  requests: 24\n",
+                )
+                .unwrap(),
+            ] {
+                let fast = keyer.key(&cfg);
+                assert_eq!(fast, cell_key(&cfg, streaming));
+                let legacy_doc = Json::obj()
+                    .with("version", SIM_VERSION_TAG.into())
+                    .with("streaming", streaming.into())
+                    .with("config", cfg.to_canonical_json());
+                let legacy_bytes = legacy_doc.canonicalize().to_string_compact();
+                assert_eq!(fast, content_hash_hex(legacy_bytes.as_bytes()));
+            }
+        }
+    }
+
+    /// Buffer reuse across cells must never leak bytes between keys: a
+    /// long config followed by a short one hashes exactly what a fresh
+    /// keyer would.
+    #[test]
+    fn keyer_buffer_reuse_does_not_leak_across_cells() {
+        let long = SimConfig::from_yaml(
+            "seed: 1\nnetwork:\n  rtt_ms: 20\n  jitter_ms: 2\nworkload:\n  requests: 64\n  dataset: cnndm\n",
+        )
+        .unwrap();
+        let short = base_cfg();
+        let mut reused = CellKeyer::new(false);
+        let k_long = reused.key(&long);
+        let k_short = reused.key(&short);
+        assert_eq!(k_long, CellKeyer::new(false).key(&long));
+        assert_eq!(k_short, CellKeyer::new(false).key(&short));
+        assert_ne!(k_long, k_short);
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub mod grid;
 pub mod runner;
 pub mod summary;
 
-pub use cache::{cell_key, CacheLookup, CellCache, GcStats, SIM_VERSION_TAG};
+pub use cache::{cell_key, CacheLookup, CellCache, CellKeyer, GcStats, SIM_VERSION_TAG};
 pub use grid::{
     autoscale_label, filter_cells, filter_label, parse_filter, scenario_label, SweepCell,
     SweepGrid,

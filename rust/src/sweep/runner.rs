@@ -6,7 +6,7 @@
 //! depends only on the grid — never on thread scheduling — so repeated
 //! runs (at any thread count) produce byte-identical summaries.
 
-use super::cache::{cell_key, CacheLookup, CellCache, MAX_FAILED_ATTEMPTS};
+use super::cache::{CacheLookup, CellCache, CellKeyer, MAX_FAILED_ATTEMPTS};
 use super::grid::{SweepCell, SweepGrid};
 use crate::autoscale::AutoscaleMetrics;
 use crate::config::SimConfig;
@@ -343,68 +343,74 @@ pub fn run_cells_cached(
         cells.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
-                }
-                let cell = &cells[i];
-                let key = cache.map(|_| cell_key(&cell.cfg, streaming));
-                let mut outcome = None;
-                let mut prior_attempts = 0u32;
-                if let (Some(c), Some(k)) = (cache, key.as_deref()) {
-                    match c.load(k) {
-                        CacheLookup::Hit(m) => {
-                            cache_hits.fetch_add(1, Ordering::Relaxed);
-                            outcome = Some(Ok(m));
-                        }
-                        CacheLookup::Failed { error, attempts }
-                            if attempts >= MAX_FAILED_ATTEMPTS =>
-                        {
-                            // Retry budget exhausted: surface the
-                            // persisted error instead of re-executing
-                            // forever.
-                            failed_hits.fetch_add(1, Ordering::Relaxed);
-                            outcome = Some(Err(format!(
-                                "persistent failure ({attempts} attempts): {error}"
-                            )));
-                        }
-                        CacheLookup::Failed { attempts, .. } => {
-                            prior_attempts = attempts;
-                        }
-                        CacheLookup::Corrupt(why) => {
-                            corrupt_entries.fetch_add(1, Ordering::Relaxed);
-                            eprintln!(
-                                "[sweep] warning: corrupt cache entry for cell {} ({why}); \
-                                 re-executing",
-                                cell.index
-                            );
-                        }
-                        CacheLookup::Miss => {}
+            scope.spawn(|| {
+                // Per-worker key deriver: the invariant wrapper and the
+                // serialization buffer amortize across every cell this
+                // worker claims (byte-identical keys to `cell_key`).
+                let mut keyer = CellKeyer::new(streaming);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
                     }
-                }
-                let outcome = outcome.unwrap_or_else(|| {
-                    executed.fetch_add(1, Ordering::Relaxed);
-                    let out = run_cell(&cell.cfg, streaming);
+                    let cell = &cells[i];
+                    let key = cache.map(|_| keyer.key(&cell.cfg));
+                    let mut outcome = None;
+                    let mut prior_attempts = 0u32;
                     if let (Some(c), Some(k)) = (cache, key.as_deref()) {
-                        let stored = match &out {
-                            Ok(m) => c.store(k, &cell.labels, m),
-                            Err(e) => {
-                                c.store_failure(k, &cell.labels, e, prior_attempts + 1)
+                        match c.load(k) {
+                            CacheLookup::Hit(m) => {
+                                cache_hits.fetch_add(1, Ordering::Relaxed);
+                                outcome = Some(Ok(m));
                             }
-                        };
-                        if let Err(e) = stored {
-                            eprintln!("[sweep] warning: {e}");
+                            CacheLookup::Failed { error, attempts }
+                                if attempts >= MAX_FAILED_ATTEMPTS =>
+                            {
+                                // Retry budget exhausted: surface the
+                                // persisted error instead of re-executing
+                                // forever.
+                                failed_hits.fetch_add(1, Ordering::Relaxed);
+                                outcome = Some(Err(format!(
+                                    "persistent failure ({attempts} attempts): {error}"
+                                )));
+                            }
+                            CacheLookup::Failed { attempts, .. } => {
+                                prior_attempts = attempts;
+                            }
+                            CacheLookup::Corrupt(why) => {
+                                corrupt_entries.fetch_add(1, Ordering::Relaxed);
+                                eprintln!(
+                                    "[sweep] warning: corrupt cache entry for cell {} \
+                                     ({why}); re-executing",
+                                    cell.index
+                                );
+                            }
+                            CacheLookup::Miss => {}
                         }
                     }
-                    out
-                });
-                let result = CellResult {
-                    index: cell.index,
-                    labels: cell.labels.clone(),
-                    outcome,
-                };
-                *slots[i].lock().expect("slot lock") = Some(result);
+                    let outcome = outcome.unwrap_or_else(|| {
+                        executed.fetch_add(1, Ordering::Relaxed);
+                        let out = run_cell(&cell.cfg, streaming);
+                        if let (Some(c), Some(k)) = (cache, key.as_deref()) {
+                            let stored = match &out {
+                                Ok(m) => c.store(k, &cell.labels, m),
+                                Err(e) => {
+                                    c.store_failure(k, &cell.labels, e, prior_attempts + 1)
+                                }
+                            };
+                            if let Err(e) = stored {
+                                eprintln!("[sweep] warning: {e}");
+                            }
+                        }
+                        out
+                    });
+                    let result = CellResult {
+                        index: cell.index,
+                        labels: cell.labels.clone(),
+                        outcome,
+                    };
+                    *slots[i].lock().expect("slot lock") = Some(result);
+                }
             });
         }
     });

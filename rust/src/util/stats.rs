@@ -79,12 +79,19 @@ impl Accumulator {
 /// Percentile of a sample (linear interpolation, `q` in [0, 100]).
 ///
 /// Sorts a copy; fine for end-of-run reporting.
+///
+/// NaN policy: samples sort by IEEE-754 *total order* (`f64::total_cmp`),
+/// under which NaN lands past +∞ at the top of the sorted sample. A stray
+/// non-finite latency therefore perturbs only the extreme upper
+/// percentiles that actually reach it — it can never abort an end-of-run
+/// report (the previous `partial_cmp(..).unwrap()` comparator panicked on
+/// the first NaN). For all-finite samples the ordering is unchanged.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (q / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -169,10 +176,17 @@ impl TimeWindow {
     }
 
     /// Record `value` observed at time `now` (non-decreasing).
+    ///
+    /// Eviction runs *before* the insert: a quiet gap longer than the
+    /// horizon leaves the window momentarily empty, which re-zeroes the
+    /// running sum exactly (see [`TimeWindow::evict`]) before the new
+    /// value lands. The eviction set is identical either way (the fresh
+    /// entry could never be older than the horizon), but this order is
+    /// what lets the drift bound below hold.
     pub fn push(&mut self, now: f64, value: f64) {
+        self.evict(now);
         self.entries.push_back((now, value));
         self.sum += value;
-        self.evict(now);
     }
 
     fn evict(&mut self, now: f64) {
@@ -183,6 +197,14 @@ impl TimeWindow {
             } else {
                 break;
             }
+        }
+        // `sum -= v` accumulates floating-point error over long runs
+        // (multi-million-event simulations push and evict continuously).
+        // An empty window has an exactly known sum, so resync it here:
+        // accumulated error can never outlive one window occupancy, and
+        // every gap longer than the horizon restores an exact sum.
+        if self.entries.is_empty() {
+            self.sum = 0.0;
         }
     }
 
@@ -344,6 +366,23 @@ mod tests {
         assert!(percentile(&[], 50.0).is_nan());
     }
 
+    // Regression: a single non-finite latency sample used to abort the
+    // whole end-of-run report via the `partial_cmp(..).unwrap()` sort
+    // comparator. NaN now sorts last (IEEE total order), so mid-range
+    // percentiles stay finite and only the extreme tail sees the NaN.
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        let xs = [1.0, 2.0, f64::NAN, 3.0];
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan(), "NaN owns the top rank");
+        // Infinities order normally, below NaN.
+        let xs = [f64::INFINITY, 1.0, f64::NAN, f64::NEG_INFINITY];
+        assert_eq!(percentile(&xs, 0.0), f64::NEG_INFINITY);
+        assert_eq!(percentile(&xs, 50.0), f64::INFINITY); // (1.0 + ∞) / 2
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
     #[test]
     fn ema_tracks_and_smooths() {
         let mut e = Ema::new(0.4);
@@ -376,6 +415,59 @@ mod tests {
         let w = TimeWindow::new(5.0);
         assert!(w.is_empty());
         assert_eq!(w.mean(), None);
+    }
+
+    #[test]
+    fn time_window_sum_resets_exactly_when_emptied() {
+        let mut w = TimeWindow::new(1.0);
+        // Values chosen so `sum -= v` leaves a residue in plain f64
+        // arithmetic: (0.1 + 0.2) - 0.1 - 0.2 != 0.0 exactly — without
+        // the empty-window resync the next mean would inherit it.
+        w.push(0.0, 0.1);
+        w.push(0.5, 0.2);
+        w.push(100.0, 3.0); // gap > horizon: evicts both, resyncs, inserts
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.sum, 3.0, "sum is exact after a full eviction, no residue");
+        assert_eq!(w.mean(), Some(3.0));
+        w.push(300.0, 0.0); // empties again before inserting 0.0
+        assert_eq!(w.sum, 0.0, "sum is exactly re-zeroed");
+    }
+
+    /// Property: over long random push/evict sequences the running sum
+    /// stays equal (to fp tolerance) to a naive recompute over the
+    /// retained entries, and emptying the window resyncs it *exactly*.
+    #[test]
+    fn prop_time_window_running_sum_matches_naive_recompute() {
+        use crate::util::prop::{run_prop, Gen};
+        run_prop("time-window sum vs naive recompute", 40, |g: &mut Gen| {
+            let horizon = g.f64_in(0.5, 20.0);
+            let mut w = TimeWindow::new(horizon);
+            let mut now = 0.0;
+            let steps = g.usize_in(200, 2000);
+            for _ in 0..steps {
+                // Occasional jumps past the horizon empty the window and
+                // must trigger the exact resync.
+                now += if g.bool_with(0.05) {
+                    horizon * g.f64_in(1.5, 3.0)
+                } else {
+                    g.f64_in(0.0, horizon / 4.0)
+                };
+                w.push(now, g.f64_in(-10.0, 10.0));
+                let naive: f64 = w.entries.iter().map(|&(_, v)| v).sum();
+                let scale = naive.abs().max(1.0);
+                assert!(
+                    (w.sum - naive).abs() <= 1e-9 * scale,
+                    "running sum drifted: {} vs naive {naive}",
+                    w.sum
+                );
+            }
+            // Force a full eviction: the empty-window resync is *exact*,
+            // even after thousands of inexact `sum -= v` updates.
+            let v = g.f64_in(-10.0, 10.0);
+            w.push(now + horizon * 4.0, v);
+            assert_eq!(w.len(), 1);
+            assert_eq!(w.sum, v, "sum must be exactly the sole survivor");
+        });
     }
 
     #[test]

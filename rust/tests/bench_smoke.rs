@@ -1,0 +1,89 @@
+//! Bench smoke test: every registered suite must execute at quick tier
+//! and emit a `BENCH_<suite>.json` that parses back through `util::json`
+//! with the expected schema. Bench targets used to be `test = false`
+//! compile-only artifacts — this guard makes the suites themselves
+//! `cargo test`-visible so they can never silently rot again.
+
+use dsd::bench::{run_suite, suite_names, BenchReport, Tier};
+use dsd::sweep::SIM_VERSION_TAG;
+use dsd::util::json::Json;
+
+#[test]
+fn every_suite_runs_quick_and_emits_valid_json() {
+    let dir = std::env::temp_dir().join(format!("dsd-bench-smoke-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for name in suite_names() {
+        let report = run_suite(name, Tier::Quick).expect("suite runs");
+        assert_eq!(&report.suite, name);
+        assert!(
+            !report.cases.is_empty(),
+            "suite '{name}' produced no cases — nothing would be trended"
+        );
+
+        let path = report.write_to(&dir).expect("write report");
+        assert_eq!(
+            path.file_name().unwrap().to_str().unwrap(),
+            format!("BENCH_{name}.json")
+        );
+
+        // The emitted file must parse back through util::json with the
+        // documented schema.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).expect("BENCH json parses");
+        assert_eq!(doc.get("suite").and_then(Json::as_str), Some(*name));
+        let meta = doc.get("meta").expect("meta object");
+        assert_eq!(
+            meta.get("sim_version").and_then(Json::as_str),
+            Some(SIM_VERSION_TAG),
+            "trajectory points must carry the simulator version tag"
+        );
+        let profile = meta.get("profile").and_then(Json::as_str).unwrap();
+        assert!(profile == "debug" || profile == "release");
+        assert!(meta.get("threads").and_then(Json::as_usize).unwrap() >= 1);
+        assert_eq!(meta.get("tier").and_then(Json::as_str), Some("quick"));
+
+        for case in doc.get("cases").and_then(Json::as_arr).unwrap() {
+            let case_name = case.get("name").and_then(Json::as_str).unwrap();
+            assert!(!case_name.is_empty());
+            assert!(case.get("iters").and_then(Json::as_usize).unwrap() >= 1);
+            let mean = case.get("mean_ms").and_then(Json::as_f64).unwrap();
+            let p50 = case.get("p50_ms").and_then(Json::as_f64).unwrap();
+            let p99 = case.get("p99_ms").and_then(Json::as_f64).unwrap();
+            for (label, v) in [("mean_ms", mean), ("p50_ms", p50), ("p99_ms", p99)] {
+                assert!(
+                    v.is_finite() && v >= 0.0,
+                    "{case_name}: {label} = {v} must be a finite non-negative time"
+                );
+            }
+            assert!(p50 <= p99, "{case_name}: p50 {p50} must not exceed p99 {p99}");
+        }
+        for rate in doc.get("rates").and_then(Json::as_arr).unwrap() {
+            assert!(rate.get("value").and_then(Json::as_f64).unwrap().is_finite());
+            assert!(!rate.get("unit").and_then(Json::as_str).unwrap().is_empty());
+        }
+
+        // Structured roundtrip: the same report comes back from the file.
+        let back = BenchReport::from_json(&doc).expect("schema roundtrip");
+        assert_eq!(back, report);
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hotpath_suite_covers_the_roadmap_hot_paths() {
+    let report = run_suite("hotpath", Tier::Quick).expect("hotpath runs");
+    let names: Vec<&str> = report.cases.iter().map(|c| c.name.as_str()).collect();
+    for prefix in ["engine/", "sim/", "cellkey/", "cellser/"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(prefix)),
+            "hotpath suite lost its '{prefix}' coverage (cases: {names:?})"
+        );
+    }
+    // The paired old-vs-lean cases must both be present, or the emitted
+    // JSON stops recording the optimization's measured speedup.
+    assert!(names.iter().any(|n| n.contains("one-shot")));
+    assert!(names.iter().any(|n| n.contains("reused")));
+}
