@@ -231,6 +231,11 @@ pub struct CapacitySnapshot {
     pub queued: usize,
     /// Requests arrived but not yet completed, system-wide.
     pub backlog: usize,
+    /// Backlog of the highest-priority request class (tier 0 of the
+    /// `classes:` block); 0 for single-tenant runs. Lets class-aware
+    /// policies scale on interactive pressure specifically rather than
+    /// the blended total.
+    pub interactive_backlog: usize,
     /// Arrival rate over the last tick, requests/second.
     pub arrival_rate_per_s: f64,
     /// Completion rate over the last tick, requests/second.
@@ -380,6 +385,7 @@ mod tests {
             busy_active: busy,
             queued,
             backlog: queued,
+            interactive_backlog: 0,
             arrival_rate_per_s: 10.0,
             completion_rate_per_s: 10.0,
         }

@@ -1,0 +1,518 @@
+//! Multi-tenant request classes: per-class arrival processes, SLO
+//! tiers, and priority-aware serving knobs (the ROADMAP's multi-tenant
+//! gateway item; paper framing: "agile serving" of heterogeneous
+//! workloads sharing one edge–cloud deployment).
+//!
+//! A [`ClassesConfig`] attaches to a [`SimConfig`](crate::config::SimConfig)
+//! via the `classes:` YAML block:
+//!
+//! ```yaml
+//! classes:
+//!   priority_admission: true
+//!   defer_batch_threshold: 12
+//!   tiers:
+//!     - name: interactive
+//!       rate_per_s: 20
+//!       slo:
+//!         ttft_ms: 1000
+//!         tpot_ms: 50
+//!     - name: batch
+//!       arrivals:
+//!         kind: spike
+//!         base_per_s: 5
+//!         peak_per_s: 80
+//!         t_start_ms: 20000
+//!         t_end_ms: 40000
+//! ```
+//!
+//! Tier declaration order **is** priority order: tier 0 is served first
+//! under priority admission, the last tier is deferred under backlog
+//! pressure. Each tier carries its own [`ArrivalProcess`] (the global
+//! `workload.rate_per_s` is unused when classes are present — every
+//! arrival belongs to exactly one tier) and its own [`SloSpec`];
+//! `workload.requests` remains the *total* request count, split across
+//! tiers by merging their arrival streams in time order.
+//!
+//! Like the `scenario:` and `autoscale:` blocks, an absent `classes:`
+//! block leaves the canonical JSON — and therefore every sweep cache
+//! key — byte-identical to the class-free simulator.
+
+use crate::metrics::SloSpec;
+use crate::scenario::{ArrivalPlan, ArrivalProcess, Scenario, ScenarioEvent};
+use crate::util::json::Json;
+use crate::util::yaml;
+
+/// One request class (SLO tier): a name, an arrival process, and the
+/// SLO thresholds its traffic is evaluated against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassSpec {
+    /// Tier name (unique within the block; also the label scenario
+    /// `class_rate_override` events target).
+    pub name: String,
+    /// The tier's own arrival process.
+    pub arrivals: ArrivalProcess,
+    /// SLO thresholds for this tier's attainment counters.
+    pub slo: SloSpec,
+}
+
+/// The `classes:` block: an ordered list of SLO tiers plus the
+/// priority-serving knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassesConfig {
+    /// Block name (sweep axis label; defaults to `"classes"`, or the
+    /// file stem when loaded via [`ClassesConfig::from_yaml_file`]).
+    pub name: String,
+    /// SLO tiers in priority order (tier 0 served first).
+    pub tiers: Vec<ClassSpec>,
+    /// Reorder target queues so higher-priority classes are admitted to
+    /// batches first (stable within a class — FIFO order is preserved).
+    pub priority_admission: bool,
+    /// When set, batch formation skips lowest-tier work whenever the
+    /// target's queued top-tier backlog exceeds this many requests (the
+    /// deferral never empties an otherwise non-empty batch).
+    pub defer_batch_threshold: Option<usize>,
+}
+
+const KNOWN: [&str; 4] = ["name", "priority_admission", "defer_batch_threshold", "tiers"];
+const TIER_KNOWN: [&str; 4] = ["name", "rate_per_s", "arrivals", "slo"];
+
+impl ClassesConfig {
+    /// Parse a classes YAML document (the standalone-file form of the
+    /// `classes:` block).
+    pub fn from_yaml(text: &str) -> Result<ClassesConfig, String> {
+        let doc = yaml::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&doc)
+    }
+
+    /// Load from a YAML file; the file stem becomes the name when the
+    /// document has no `name:` key, and relative resource paths (a
+    /// `kind: trace` tier arrival's timestamp file) resolve against the
+    /// file's directory.
+    pub fn from_yaml_file(path: &str) -> Result<ClassesConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let mut c = Self::from_yaml(&text)?;
+        if c.name == "classes" {
+            if let Some(stem) = std::path::Path::new(path)
+                .file_stem()
+                .and_then(|x| x.to_str())
+            {
+                c.name = stem.to_string();
+            }
+        }
+        let base = std::path::Path::new(path)
+            .parent()
+            .unwrap_or(std::path::Path::new("."));
+        c.resolve_paths(base)?;
+        Ok(c)
+    }
+
+    /// Resolve (and load) file-backed tier arrival resources; relative
+    /// paths resolve against `base_dir`.
+    pub fn resolve_paths(&mut self, base_dir: &std::path::Path) -> Result<(), String> {
+        for t in &mut self.tiers {
+            t.arrivals.resolve_paths(base_dir)?;
+        }
+        Ok(())
+    }
+
+    /// Parse from a decoded document (the `classes:` block of a
+    /// `SimConfig` shares this schema). Strict: unknown keys are
+    /// rejected so a typo'd knob cannot silently neutralize a tier
+    /// while still labeling and cache-keying the cell.
+    pub fn from_json(doc: &Json) -> Result<ClassesConfig, String> {
+        if let Json::Obj(pairs) = doc {
+            for (k, _) in pairs {
+                if !KNOWN.contains(&k.as_str()) {
+                    return Err(format!(
+                        "classes: unknown key '{k}' (known: {})",
+                        KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("classes: expected a mapping".into());
+        }
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("classes")
+            .to_string();
+        let priority_admission = match doc.get("priority_admission") {
+            None => true,
+            Some(v) => v
+                .as_bool()
+                .ok_or("classes: priority_admission must be a boolean")?,
+        };
+        let defer_batch_threshold = match doc.get("defer_batch_threshold") {
+            None => None,
+            Some(v) => Some(
+                v.as_usize()
+                    .ok_or("classes: defer_batch_threshold must be a non-negative integer")?,
+            ),
+        };
+        let tier_list = doc
+            .get("tiers")
+            .ok_or("classes: missing 'tiers' list")?
+            .as_arr()
+            .ok_or("classes: 'tiers' must be a list")?;
+        let mut tiers = Vec::with_capacity(tier_list.len());
+        for t in tier_list {
+            tiers.push(Self::tier_from_json(t)?);
+        }
+        let cfg = ClassesConfig { name, tiers, priority_admission, defer_batch_threshold };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn tier_from_json(j: &Json) -> Result<ClassSpec, String> {
+        if let Json::Obj(pairs) = j {
+            for (k, _) in pairs {
+                if !TIER_KNOWN.contains(&k.as_str()) {
+                    return Err(format!(
+                        "classes tier: unknown key '{k}' (known: {})",
+                        TIER_KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("classes tier: expected a mapping".into());
+        }
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("classes tier: missing 'name'")?
+            .to_string();
+        let arrivals = match (j.get("rate_per_s"), j.get("arrivals")) {
+            (Some(r), None) => ArrivalProcess::Constant {
+                rate_per_s: r
+                    .as_f64()
+                    .ok_or_else(|| format!("classes tier '{name}': rate_per_s must be a number"))?,
+            },
+            (None, Some(a)) => ArrivalProcess::from_json(a)
+                .map_err(|e| format!("classes tier '{name}': {e}"))?,
+            (Some(_), Some(_)) => {
+                return Err(format!(
+                    "classes tier '{name}': give either rate_per_s or arrivals, not both"
+                ))
+            }
+            (None, None) => {
+                return Err(format!(
+                    "classes tier '{name}': missing arrival process (rate_per_s or arrivals)"
+                ))
+            }
+        };
+        let slo = match j.get("slo") {
+            None => SloSpec::RELAXED,
+            Some(s) => {
+                if let Json::Obj(pairs) = s {
+                    for (k, _) in pairs {
+                        if k != "ttft_ms" && k != "tpot_ms" {
+                            return Err(format!(
+                                "classes tier '{name}': unknown slo key '{k}' (known: \
+                                 ttft_ms, tpot_ms)"
+                            ));
+                        }
+                    }
+                } else {
+                    return Err(format!("classes tier '{name}': slo must be a mapping"));
+                }
+                SloSpec {
+                    ttft_ms: s
+                        .get("ttft_ms")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(SloSpec::RELAXED.ttft_ms),
+                    tpot_ms: s
+                        .get("tpot_ms")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(SloSpec::RELAXED.tpot_ms),
+                }
+            }
+        };
+        Ok(ClassSpec { name, arrivals, slo })
+    }
+
+    /// Canonical JSON: fixed key order, tiers in priority order. Part
+    /// of [`SimConfig::to_canonical_json`](crate::config::SimConfig) —
+    /// and therefore of the sweep cell cache key — whenever a classes
+    /// block is attached. Class-free configs serialize exactly as
+    /// before (no `classes` key at all).
+    pub fn to_canonical_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("name", self.name.as_str().into())
+            .with("priority_admission", self.priority_admission.into());
+        if let Some(th) = self.defer_batch_threshold {
+            j.set("defer_batch_threshold", th.into());
+        }
+        j.with(
+            "tiers",
+            Json::Arr(
+                self.tiers
+                    .iter()
+                    .map(|t| {
+                        Json::obj()
+                            .with("name", t.name.as_str().into())
+                            .with("arrivals", t.arrivals.to_canonical_json())
+                            .with(
+                                "slo",
+                                Json::obj()
+                                    .with("ttft_ms", t.slo.ttft_ms.into())
+                                    .with("tpot_ms", t.slo.tpot_ms.into()),
+                            )
+                    })
+                    .collect(),
+            ),
+        )
+    }
+
+    /// Number of declared tiers.
+    pub fn n_classes(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Index of a tier by name.
+    pub fn class_index(&self, name: &str) -> Option<usize> {
+        self.tiers.iter().position(|t| t.name == name)
+    }
+
+    /// `(name, slo)` list in priority order — the per-class breakdown
+    /// configuration both metric sinks consume.
+    pub fn slo_list(&self) -> Vec<(String, SloSpec)> {
+        self.tiers.iter().map(|t| (t.name.clone(), t.slo)).collect()
+    }
+
+    /// Per-tier arrival plans: each tier's process plus every scenario
+    /// `class_rate_override` event naming that tier folded into its
+    /// envelope (validated against declared names in
+    /// [`SimConfig::validate`](crate::config::SimConfig)).
+    pub fn plans(&self, scenario: Option<&Scenario>) -> Vec<ArrivalPlan> {
+        self.tiers
+            .iter()
+            .map(|t| {
+                let overrides = scenario
+                    .map(|s| {
+                        s.events
+                            .iter()
+                            .filter_map(|e| match &e.event {
+                                ScenarioEvent::ClassRateOverride { class, rate_per_s }
+                                    if *class == t.name =>
+                                {
+                                    Some((e.at_ms, *rate_per_s))
+                                }
+                                _ => None,
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                ArrivalPlan { process: t.arrivals.clone(), overrides }
+            })
+            .collect()
+    }
+
+    /// Sanity checks (shape-level; cross-checks against the owning
+    /// config — trace workloads, scenario arrivals — live in
+    /// [`SimConfig::validate`](crate::config::SimConfig)).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tiers.is_empty() {
+            return Err("classes: at least one tier required".into());
+        }
+        for (i, t) in self.tiers.iter().enumerate() {
+            if t.name.is_empty() {
+                return Err(format!("classes: tier {i} has an empty name"));
+            }
+            if self.tiers[..i].iter().any(|u| u.name == t.name) {
+                return Err(format!("classes: duplicate tier name '{}'", t.name));
+            }
+            t.arrivals
+                .validate()
+                .map_err(|e| format!("classes tier '{}': {e}", t.name))?;
+            let bad = |x: f64| !x.is_finite() || x <= 0.0;
+            if bad(t.slo.ttft_ms) || bad(t.slo.tpot_ms) {
+                return Err(format!(
+                    "classes tier '{}': slo thresholds must be finite and positive",
+                    t.name
+                ));
+            }
+        }
+        if self.defer_batch_threshold.is_some() && self.tiers.len() < 2 {
+            return Err(
+                "classes: defer_batch_threshold requires at least two tiers (it defers \
+                 the lowest tier in favor of the highest)"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FAIR: &str = "\
+name: fair
+priority_admission: true
+defer_batch_threshold: 12
+tiers:
+  - name: interactive
+    rate_per_s: 20
+    slo:
+      ttft_ms: 1000
+      tpot_ms: 50
+  - name: batch
+    arrivals:
+      kind: spike
+      base_per_s: 5
+      peak_per_s: 80
+      t_start_ms: 20000
+      t_end_ms: 40000
+";
+
+    #[test]
+    fn yaml_parses_tiers_in_priority_order() {
+        let c = ClassesConfig::from_yaml(FAIR).unwrap();
+        assert_eq!(c.name, "fair");
+        assert!(c.priority_admission);
+        assert_eq!(c.defer_batch_threshold, Some(12));
+        assert_eq!(c.n_classes(), 2);
+        assert_eq!(c.tiers[0].name, "interactive");
+        assert_eq!(
+            c.tiers[0].arrivals,
+            ArrivalProcess::Constant { rate_per_s: 20.0 }
+        );
+        assert_eq!(c.tiers[0].slo, SloSpec { ttft_ms: 1_000.0, tpot_ms: 50.0 });
+        // Tier without an slo block gets the relaxed default.
+        assert_eq!(c.tiers[1].slo, SloSpec::RELAXED);
+        assert!(matches!(c.tiers[1].arrivals, ArrivalProcess::Spike { .. }));
+        assert_eq!(c.class_index("batch"), Some(1));
+        assert_eq!(c.class_index("bulk"), None);
+    }
+
+    #[test]
+    fn canonical_json_roundtrip_is_stable() {
+        let c = ClassesConfig::from_yaml(FAIR).unwrap();
+        let j = c.to_canonical_json();
+        let back = ClassesConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+        assert_eq!(
+            j.to_string_canonical(),
+            back.to_canonical_json().to_string_canonical()
+        );
+        // Threshold-free blocks omit the key entirely.
+        let mut bare = c.clone();
+        bare.defer_batch_threshold = None;
+        assert!(!bare
+            .to_canonical_json()
+            .to_string_canonical()
+            .contains("defer_batch_threshold"));
+    }
+
+    #[test]
+    fn strict_keys_and_shapes_rejected() {
+        assert!(ClassesConfig::from_yaml("tiersz: []\n")
+            .unwrap_err()
+            .contains("unknown key"));
+        assert!(ClassesConfig::from_yaml("name: x\n")
+            .unwrap_err()
+            .contains("tiers"));
+        let typo = FAIR.replace("rate_per_s: 20", "rate_pers: 20");
+        assert!(ClassesConfig::from_yaml(&typo).unwrap_err().contains("unknown key"));
+        let slo_typo = FAIR.replace("ttft_ms: 1000", "ttft: 1000");
+        assert!(ClassesConfig::from_yaml(&slo_typo)
+            .unwrap_err()
+            .contains("unknown slo key"));
+        // Both or neither arrival forms are rejected.
+        let both = "\
+tiers:
+  - name: a
+    rate_per_s: 5
+    arrivals:
+      kind: constant
+      rate_per_s: 5
+  - name: b
+    rate_per_s: 5
+";
+        assert!(ClassesConfig::from_yaml(both).unwrap_err().contains("not both"));
+        let neither = "tiers:\n  - name: a\n";
+        assert!(ClassesConfig::from_yaml(neither)
+            .unwrap_err()
+            .contains("missing arrival process"));
+    }
+
+    #[test]
+    fn validation_rejects_bad_blocks() {
+        let dup = "\
+tiers:
+  - name: a
+    rate_per_s: 5
+  - name: a
+    rate_per_s: 6
+";
+        assert!(ClassesConfig::from_yaml(dup).unwrap_err().contains("duplicate"));
+        let bad_rate = "tiers:\n  - name: a\n    rate_per_s: -2\n";
+        assert!(ClassesConfig::from_yaml(bad_rate).is_err());
+        let bad_slo = "\
+tiers:
+  - name: a
+    rate_per_s: 5
+    slo:
+      ttft_ms: 0
+";
+        assert!(ClassesConfig::from_yaml(bad_slo)
+            .unwrap_err()
+            .contains("finite and positive"));
+        let single_defer = "\
+defer_batch_threshold: 4
+tiers:
+  - name: a
+    rate_per_s: 5
+";
+        assert!(ClassesConfig::from_yaml(single_defer)
+            .unwrap_err()
+            .contains("at least two tiers"));
+    }
+
+    #[test]
+    fn plans_fold_class_rate_overrides_per_tier() {
+        use crate::scenario::TimedEvent;
+        let c = ClassesConfig::from_yaml(FAIR).unwrap();
+        let s = Scenario {
+            name: "s".into(),
+            arrivals: None,
+            events: vec![
+                TimedEvent {
+                    at_ms: 8_000.0,
+                    event: ScenarioEvent::ClassRateOverride {
+                        class: "batch".into(),
+                        rate_per_s: 2.0,
+                    },
+                },
+                TimedEvent {
+                    at_ms: 9_000.0,
+                    event: ScenarioEvent::ClassRateOverride {
+                        class: "interactive".into(),
+                        rate_per_s: 44.0,
+                    },
+                },
+            ],
+        };
+        let plans = c.plans(Some(&s));
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].overrides, vec![(9_000.0, 44.0)]);
+        assert_eq!(plans[1].overrides, vec![(8_000.0, 2.0)]);
+        // No scenario → no overrides.
+        let bare = c.plans(None);
+        assert!(bare.iter().all(|p| p.overrides.is_empty()));
+    }
+
+    #[test]
+    fn file_stem_names_the_block() {
+        let dir = std::env::temp_dir().join(format!("dsd-classes-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("two_tier.yaml");
+        std::fs::write(&path, FAIR.replace("name: fair\n", "")).unwrap();
+        let c = ClassesConfig::from_yaml_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.name, "two_tier");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

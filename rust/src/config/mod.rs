@@ -2,9 +2,11 @@
 //! ingestion, and the `auto_topology` pass that expands a high-level
 //! specification into explicit drafter/target device pools.
 
+pub mod classes;
 pub mod schema;
 pub mod topology;
 
+pub use classes::{ClassSpec, ClassesConfig};
 pub use schema::{
     parse_batching, parse_routing, parse_window, BatchKnobs, BatchingKind, LinkOverride,
     NetworkConfig, PoolSpec, RoutingKind, SimConfig, SimConfigBuilder, WindowKind,

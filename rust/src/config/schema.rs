@@ -7,6 +7,7 @@
 
 use crate::autoscale::AutoscaleConfig;
 use crate::cluster::{gpu_by_name, model_by_name, GpuSpec, ModelSpec};
+use crate::config::classes::ClassesConfig;
 use crate::scenario::Scenario;
 use crate::util::json::Json;
 use crate::util::yaml;
@@ -170,6 +171,11 @@ pub struct SimConfig {
     /// autoscale policy chooses how much of it is provisioned over
     /// time. `None` reproduces the fixed-fleet simulator bit for bit.
     pub autoscale: Option<AutoscaleConfig>,
+    /// Optional multi-tenant request classes (see
+    /// [`crate::config::classes`]): per-class arrival processes and SLO
+    /// tiers plus priority-aware serving. `None` reproduces the
+    /// single-tenant simulator bit for bit.
+    pub classes: Option<ClassesConfig>,
 }
 
 impl SimConfig {
@@ -190,11 +196,15 @@ impl SimConfig {
     pub fn from_yaml_file(path: &str) -> Result<SimConfig, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         let mut cfg = Self::from_yaml(&text)?;
+        let base = std::path::Path::new(path)
+            .parent()
+            .unwrap_or(std::path::Path::new("."))
+            .to_path_buf();
         if let Some(s) = &mut cfg.scenario {
-            let base = std::path::Path::new(path)
-                .parent()
-                .unwrap_or(std::path::Path::new("."));
-            s.resolve_paths(base)?;
+            s.resolve_paths(&base)?;
+        }
+        if let Some(c) = &mut cfg.classes {
+            c.resolve_paths(&base)?;
         }
         Ok(cfg)
     }
@@ -286,6 +296,9 @@ impl SimConfig {
         }
         if let Some(a) = doc.get("autoscale") {
             b.cfg.autoscale = Some(AutoscaleConfig::from_json(a)?);
+        }
+        if let Some(c) = doc.get("classes") {
+            b.cfg.classes = Some(ClassesConfig::from_json(c)?);
         }
         b.cfg.validate()?;
         Ok(b.cfg)
@@ -415,6 +428,11 @@ impl SimConfig {
         if let Some(a) = &self.autoscale {
             j.set("autoscale", a.to_canonical_json());
         }
+        // Same contract for the multi-tenant block: class-free configs
+        // keep their historical canonical bytes and cache keys.
+        if let Some(c) = &self.classes {
+            j.set("classes", c.to_canonical_json());
+        }
         j
     }
 
@@ -467,6 +485,66 @@ impl SimConfig {
         }
         if let Some(a) = &self.autoscale {
             a.validate(self.n_targets())?;
+        }
+        if let Some(c) = &self.classes {
+            c.validate()?;
+            // Trace-driven workloads carry their own arrival times and
+            // class tags would be fabricated; per-class arrivals could
+            // not take effect and must not silently pretend to.
+            if self.workload.trace_path.is_some() {
+                return Err(
+                    "config: classes cannot combine with workload.trace_path (the trace \
+                     fixes arrival times and carries no tier structure); drop the \
+                     classes block or the trace"
+                        .into(),
+                );
+            }
+            if let Some(s) = &self.scenario {
+                // Each tier owns its arrival process; a scenario-level
+                // arrival process or global rate override would fight
+                // the per-tier envelopes.
+                let has_global_override = s
+                    .events
+                    .iter()
+                    .any(|e| matches!(e.event, crate::scenario::ScenarioEvent::RateOverride { .. }));
+                if s.arrivals.is_some() || has_global_override {
+                    return Err(
+                        "config: scenario arrival processes / global rate_override \
+                         events cannot combine with a classes block (each tier declares \
+                         its own arrivals); use class_rate_override events instead"
+                            .into(),
+                    );
+                }
+            }
+        }
+        // Class-targeted scenario events must name a declared tier —
+        // checked here (Simulator::try_new calls validate) so a typo'd
+        // class name fails with a named error, never a silent no-op.
+        if let Some(s) = &self.scenario {
+            for e in &s.events {
+                if let crate::scenario::ScenarioEvent::ClassRateOverride { class, .. } = &e.event {
+                    match &self.classes {
+                        None => {
+                            return Err(format!(
+                                "config: scenario event class_rate_override ('{class}') \
+                                 requires a classes: block declaring that tier"
+                            ))
+                        }
+                        Some(c) if c.class_index(class).is_none() => {
+                            return Err(format!(
+                                "config: scenario event class_rate_override targets \
+                                 undeclared class '{class}' (declared: {})",
+                                c.tiers
+                                    .iter()
+                                    .map(|t| t.name.as_str())
+                                    .collect::<Vec<_>>()
+                                    .join(", ")
+                            ))
+                        }
+                        Some(_) => {}
+                    }
+                }
+            }
         }
         if let Some(s) = &self.scenario {
             s.validate(self.drafter_pools.len(), self.n_targets())?;
@@ -622,6 +700,7 @@ impl Default for SimConfigBuilder {
                 max_sim_ms: 3_600_000.0,
                 scenario: None,
                 autoscale: None,
+                classes: None,
             },
         }
     }
@@ -701,6 +780,11 @@ impl SimConfigBuilder {
     /// Attach an elastic-capacity (autoscale) block.
     pub fn autoscale(mut self, a: AutoscaleConfig) -> Self {
         self.cfg.autoscale = Some(a);
+        self
+    }
+    /// Attach a multi-tenant request-classes block.
+    pub fn classes(mut self, c: ClassesConfig) -> Self {
+        self.cfg.classes = Some(c);
         self
     }
     /// Finalize (panics on invalid combinations — builder misuse is a bug).
@@ -1071,6 +1155,91 @@ autoscale:
         assert_ne!(pj, aj);
         assert_ne!(aj, bj);
         assert!(c.to_canonical_json().path(&["autoscale", "policy", "kind"]).is_some());
+    }
+
+    #[test]
+    fn classes_block_parses_validates_and_forks_canonical_bytes() {
+        let y = "\
+seed: 5
+cluster:
+  targets:
+    - count: 2
+  drafters:
+    - count: 8
+classes:
+  name: fair
+  tiers:
+    - name: interactive
+      rate_per_s: 20
+      slo:
+        ttft_ms: 1000
+        tpot_ms: 50
+    - name: batch
+      rate_per_s: 10
+";
+        let c = SimConfig::from_yaml(y).unwrap();
+        let cl = c.classes.as_ref().unwrap();
+        assert_eq!(cl.name, "fair");
+        assert_eq!(cl.n_classes(), 2);
+        assert!(cl.priority_admission, "defaults on");
+        // No "classes" key for class-free configs: historical sweep
+        // cache keys must remain valid.
+        let plain = SimConfig::builder().build();
+        assert!(plain.to_canonical_json().get("classes").is_none());
+        // Attaching a block changes the canonical bytes; different
+        // blocks differ from each other.
+        let pj = plain.to_canonical_json().to_string_canonical();
+        let aj = c.to_canonical_json().to_string_canonical();
+        let c2 = SimConfig::from_yaml(&y.replace("rate_per_s: 20", "rate_per_s: 25")).unwrap();
+        let bj = c2.to_canonical_json().to_string_canonical();
+        assert_ne!(pj, aj);
+        assert_ne!(aj, bj);
+        assert!(c.to_canonical_json().path(&["classes", "tiers"]).is_some());
+        // Classes reject trace-driven workloads and scenario arrivals.
+        let mut traced = c.clone();
+        traced.workload.trace_path = Some("t.jsonl".into());
+        assert!(traced.validate().unwrap_err().contains("trace_path"));
+        let mut with_arrivals = c.clone();
+        with_arrivals.scenario = Some(crate::scenario::Scenario {
+            name: "s".into(),
+            arrivals: Some(crate::scenario::ArrivalProcess::Constant { rate_per_s: 5.0 }),
+            events: Vec::new(),
+        });
+        assert!(with_arrivals
+            .validate()
+            .unwrap_err()
+            .contains("class_rate_override"));
+    }
+
+    #[test]
+    fn class_rate_override_requires_a_declared_tier() {
+        use crate::scenario::{Scenario, ScenarioEvent, TimedEvent};
+        let mk_scenario = |class: &str| Scenario {
+            name: "s".into(),
+            arrivals: None,
+            events: vec![TimedEvent {
+                at_ms: 5_000.0,
+                event: ScenarioEvent::ClassRateOverride {
+                    class: class.into(),
+                    rate_per_s: 9.0,
+                },
+            }],
+        };
+        // Without a classes block the event has nothing to target.
+        let mut cfg = SimConfig::builder().build();
+        cfg.scenario = Some(mk_scenario("interactive"));
+        assert!(cfg.validate().unwrap_err().contains("requires a classes"));
+        // With a block, only declared names pass.
+        let classes = crate::config::ClassesConfig::from_yaml(
+            "tiers:\n  - name: interactive\n    rate_per_s: 20\n  - name: batch\n    rate_per_s: 5\n",
+        )
+        .unwrap();
+        cfg.classes = Some(classes);
+        cfg.validate().unwrap();
+        cfg.scenario = Some(mk_scenario("bulk"));
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("undeclared class 'bulk'"), "{err}");
+        assert!(err.contains("interactive, batch"), "{err}");
     }
 
     #[test]

@@ -4,8 +4,8 @@
 //! time the same code paths.
 //!
 //! Every runner-backed family (fig5, fig6, fig7/8, fig9/10, table2, the
-//! scenario-driven `agility` family, and the autoscale-driven
-//! `elasticity` family)
+//! scenario-driven `agility` family, the autoscale-driven
+//! `elasticity` family, and the multi-tenant `fairness` family)
 //! executes through `sweep::run_cells_cached`, so all of them inherit
 //! `--cache-dir` (content-addressed per-cell persistence + kill-resume),
 //! `--threads`, and `--streaming` (bounded-memory cells for 1M+ request
@@ -15,6 +15,7 @@
 pub mod agility;
 pub mod common;
 pub mod elasticity;
+pub mod fairness;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
@@ -94,18 +95,21 @@ pub fn run_experiment_opts(
             "table2" => table2::run_cached(scale, seeds, &ctx),
             "agility" => agility::run_cached(scale, seeds, &ctx),
             "elasticity" => elasticity::run_cached(scale, seeds, &ctx),
+            "fairness" => fairness::run_cached(scale, seeds, &ctx),
             other => unreachable!("unrouted experiment '{other}'"),
         })
     };
     Ok(match exp {
-        "fig4" | "fig5" | "fig6" | "table2" | "agility" | "elasticity" => run_one(exp)?,
+        "fig4" | "fig5" | "fig6" | "table2" | "agility" | "elasticity" | "fairness" => {
+            run_one(exp)?
+        }
         "fig7" | "fig8" | "fig7_8" => run_one("fig7_8")?,
         "fig9" | "fig10" | "fig9_10" => run_one("fig9_10")?,
         "all" => {
             let mut out = String::new();
             for e in [
                 "fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2", "agility",
-                "elasticity",
+                "elasticity", "fairness",
             ] {
                 out.push_str(&run_one(e)?);
                 out.push('\n');
@@ -115,7 +119,7 @@ pub fn run_experiment_opts(
         other => {
             return Err(format!(
                 "unknown experiment '{other}' (try: fig4 fig5 fig6 fig7 fig9 table2 \
-                 agility elasticity all)"
+                 agility elasticity fairness all)"
             ))
         }
     })

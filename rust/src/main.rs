@@ -4,10 +4,11 @@
 //!   simulate       run DSD-Sim on a YAML deployment config (--scenario adds
 //!                  scripted dynamics: flash crowds, link churn, failures;
 //!                  --autoscale adds an elastic target pool with cost
-//!                  accounting)
+//!                  accounting; --classes adds multi-tenant request classes
+//!                  with priority-aware admission)
 //!   sweep          expand a scenario grid and run every cell in parallel
 //!   reproduce      regenerate a paper table/figure (fig4..fig10, table2,
-//!                  agility, elasticity, all)
+//!                  agility, elasticity, fairness, all)
 //!   sweep-dataset  generate the AWC training dataset (paper §4.2)
 //!   trace-gen      emit a synthetic workload trace (Table 1 schema)
 //!   serve          run the real edge-cloud serving path on AOT artifacts
@@ -64,6 +65,13 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
              in --config)",
             None,
         )
+        .opt(
+            "classes",
+            "request-classes YAML file (multi-tenant SLO tiers: per-class arrival \
+             processes, priority admission, batch deferral — overrides any classes \
+             block in --config)",
+            None,
+        )
         .opt("seed", "override RNG seed", None)
         .flag(
             "streaming",
@@ -76,16 +84,21 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         Some(path) => SimConfig::from_yaml_file(path)?,
         None => SimConfig::builder().build(),
     };
-    // Apply BOTH overrides before validating: a scenario with
+    // Apply ALL overrides before validating: a scenario with
     // target_pool_* events is only valid together with an autoscale
-    // block, and the two commonly arrive as a flag pair.
+    // block (and class_rate_override events only with a classes block),
+    // and the flags commonly arrive together.
     if let Some(path) = a.get("scenario") {
         cfg.scenario = Some(dsd::scenario::Scenario::from_yaml_file(path)?);
     }
     if let Some(path) = a.get("autoscale") {
         cfg.autoscale = Some(dsd::autoscale::AutoscaleConfig::from_yaml_file(path)?);
     }
-    if a.get("scenario").is_some() || a.get("autoscale").is_some() {
+    if let Some(path) = a.get("classes") {
+        cfg.classes = Some(dsd::config::ClassesConfig::from_yaml_file(path)?);
+    }
+    if a.get("scenario").is_some() || a.get("autoscale").is_some() || a.get("classes").is_some()
+    {
         cfg.validate()?;
     }
     if let Some(seed) = a.get_u64("seed").map_err(|e| e.to_string())? {
@@ -326,7 +339,7 @@ fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("reproduce", "regenerate a paper table/figure")
         .opt(
             "exp",
-            "fig4|fig5|fig6|fig7|fig9|table2|agility|elasticity|all",
+            "fig4|fig5|fig6|fig7|fig9|table2|agility|elasticity|fairness|all",
             Some("all"),
         )
         .opt("scale", "request-count scale factor (1.0 = paper)", Some("1.0"))

@@ -9,8 +9,8 @@ pub mod timeseries;
 
 pub use report::{RequestMetrics, SimReport, SloSpec, SystemMetrics};
 pub use sink::{
-    drafter_pool_of, FullSink, GammaSummary, GroupSummary, MetricSummary, MetricsSink,
-    SloSummary, StreamingConfig, StreamingReport, StreamingSink, StreamingSummary,
-    GAMMA_HIST_BUCKETS,
+    drafter_pool_of, ClassSummary, FullSink, GammaSummary, GroupSummary, MetricSummary,
+    MetricsSink, SloSummary, StreamingConfig, StreamingReport, StreamingSink,
+    StreamingSummary, GAMMA_HIST_BUCKETS,
 };
 pub use timeseries::{TimeSeries, TimeSeriesConfig, TimeSeriesSummary, WindowSummary};

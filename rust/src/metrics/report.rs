@@ -1,6 +1,6 @@
 //! Per-request and system-level metric records and the end-of-run report.
 
-use super::sink::{drafter_pool_of, GammaSummary, GroupSummary};
+use super::sink::{drafter_pool_of, ClassSummary, GammaSummary, GroupSummary, SloSummary};
 use super::timeseries::{
     integrate_capacity_segment, TimeSeriesConfig, TimeSeriesSummary, WindowSummary,
 };
@@ -34,12 +34,16 @@ pub struct RequestMetrics {
     pub gamma_decisions: Vec<u32>,
     /// Rounds executed in fused mode.
     pub fused_rounds: u32,
+    /// Request-class index (tier position in the `classes:` block; 0 for
+    /// single-tenant runs). Serialized only when nonzero, so classless
+    /// per-request dumps keep their historical bytes.
+    pub class_id: usize,
 }
 
 impl RequestMetrics {
     /// Serialize to the analyzer's JSON schema.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .with("id", self.id.into())
             .with("arrival_ms", self.arrival_ms.into())
             .with("ttft_ms", self.ttft_ms.into())
@@ -58,7 +62,11 @@ impl RequestMetrics {
                         .collect(),
                 ),
             )
-            .with("fused_rounds", (self.fused_rounds as u64).into())
+            .with("fused_rounds", (self.fused_rounds as u64).into());
+        if self.class_id != 0 {
+            j.set("class_id", self.class_id.into());
+        }
+        j
     }
 }
 
@@ -355,6 +363,73 @@ impl SimReport {
         }
     }
 
+    /// Per-request-class breakdown, computed *independently* of the
+    /// streaming sink: one entry per declared tier (`classes` in
+    /// declaration order), each with arithmetic-mean group statistics,
+    /// attainment against the tier's *own* SLO, and a windowed time
+    /// series restricted to the tier's requests. Out-of-range class ids
+    /// clamp to the last tier, mirroring both the simulator and the
+    /// streaming fold. Tiers with no completions yield 0-count groups
+    /// (0.0 means, NaN acceptance) — never a division by zero. The
+    /// per-tier series is built from a capacity-free sub-report, so it
+    /// carries no `provisioned_targets` — fleet size is global, not
+    /// per-tier — matching the streaming side's per-class fold.
+    pub fn per_class_breakdown(
+        &self,
+        classes: &[(String, SloSpec)],
+        ts_cfg: &TimeSeriesConfig,
+    ) -> Vec<ClassSummary> {
+        let n = classes.len();
+        classes
+            .iter()
+            .enumerate()
+            .map(|(ci, (name, spec))| {
+                let members: Vec<RequestMetrics> = self
+                    .requests
+                    .iter()
+                    .filter(|r| r.class_id.min(n - 1) == ci)
+                    .cloned()
+                    .collect();
+                let vals = |f: &dyn Fn(&RequestMetrics) -> f64| -> Vec<f64> {
+                    members.iter().map(|r| f(r)).collect()
+                };
+                let acc: Vec<f64> = members
+                    .iter()
+                    .map(|r| r.acceptance)
+                    .filter(|a| a.is_finite())
+                    .collect();
+                let group = GroupSummary {
+                    key: ci,
+                    completed: members.len() as u64,
+                    output_tokens: members.iter().map(|r| r.output_tokens as u64).sum(),
+                    fused_rounds: members.iter().map(|r| r.fused_rounds as u64).sum(),
+                    mean_ttft_ms: mean(&vals(&|r| r.ttft_ms)),
+                    mean_tpot_ms: mean(&vals(&|r| r.tpot_ms)),
+                    mean_e2e_ms: mean(&vals(&|r| r.e2e_ms)),
+                    mean_acceptance: if acc.is_empty() { f64::NAN } else { mean(&acc) },
+                };
+                let slo = SloSummary {
+                    spec: *spec,
+                    attained: members
+                        .iter()
+                        .filter(|r| r.ttft_ms <= spec.ttft_ms && r.tpot_ms <= spec.tpot_ms)
+                        .count() as u64,
+                    completed: members.len() as u64,
+                };
+                let sub = SimReport {
+                    requests: members,
+                    system: SystemMetrics::default(),
+                };
+                ClassSummary {
+                    name: name.clone(),
+                    group,
+                    slo,
+                    time_series: sub.time_series(ts_cfg),
+                }
+            })
+            .collect()
+    }
+
     fn group_breakdown(&self, key_of: impl Fn(&RequestMetrics) -> usize) -> Vec<GroupSummary> {
         let n_groups = match self.requests.iter().map(&key_of).max() {
             Some(max) => max + 1,
@@ -458,6 +533,7 @@ mod tests {
             output_tokens: 100,
             gamma_decisions: vec![4, 4, 5],
             fused_rounds: 0,
+            class_id: 0,
         }
     }
 
@@ -602,6 +678,75 @@ mod tests {
         assert_eq!(capped.overflow_completed, 1);
         assert_eq!(capped.windows[0].completed, 1);
         assert_eq!(capped.windows[0].active, 2);
+    }
+
+    #[test]
+    fn class_id_serialized_only_when_nonzero() {
+        let classless = req(0, 1.0, 2.0).to_json();
+        assert!(classless.get("class_id").is_none(), "classless bytes unchanged");
+        let mut r = req(1, 1.0, 2.0);
+        r.class_id = 2;
+        assert_eq!(r.to_json().get("class_id").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn per_class_breakdown_partitions_with_tier_slos() {
+        let classes = vec![
+            ("interactive".to_string(), SloSpec { ttft_ms: 150.0, tpot_ms: 40.0 }),
+            ("batch".to_string(), SloSpec { ttft_ms: 1_000.0, tpot_ms: 100.0 }),
+        ];
+        let a = req(0, 100.0, 30.0); // tier 0, attained
+        let mut b = req(1, 300.0, 50.0); // tier 0, breach
+        b.class_id = 0;
+        let mut c = req(2, 400.0, 60.0); // tier 1, attained
+        c.class_id = 1;
+        let mut stray = req(3, 2_000.0, 60.0); // clamps to tier 1, breach
+        stray.class_id = 7;
+        let rep = SimReport {
+            requests: vec![a, b, c, stray],
+            system: SystemMetrics::default(),
+        };
+        let ts_cfg = TimeSeriesConfig { window_ms: 1_000.0, max_windows: 64 };
+        let per = rep.per_class_breakdown(&classes, &ts_cfg);
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].name, "interactive");
+        assert_eq!(per[0].group.completed, 2);
+        assert_eq!(per[0].slo.attained, 1);
+        assert!((per[0].group.mean_ttft_ms - 200.0).abs() < 1e-9);
+        assert_eq!(per[1].group.completed, 2);
+        assert_eq!(per[1].slo.attained, 1);
+        // Class counts partition the report.
+        let total: u64 = per.iter().map(|c| c.group.completed).sum();
+        assert_eq!(total as usize, rep.requests.len());
+        // Per-tier series are capacity-free sub-reports.
+        for c in &per {
+            assert!(c.time_series.windows.iter().all(|w| w.provisioned_targets.is_none()));
+        }
+    }
+
+    /// ISSUE satellite: a declared tier with zero completions must
+    /// report 0 counts and 0.0 means, never NaN from a 0/0.
+    #[test]
+    fn per_class_breakdown_empty_tier_is_zero_not_nan() {
+        let classes = vec![
+            ("interactive".to_string(), SloSpec::INTERACTIVE),
+            ("batch".to_string(), SloSpec::RELAXED),
+        ];
+        let rep = SimReport {
+            requests: vec![req(0, 100.0, 30.0)], // tier 0 only
+            system: SystemMetrics::default(),
+        };
+        let ts_cfg = TimeSeriesConfig { window_ms: 1_000.0, max_windows: 64 };
+        let per = rep.per_class_breakdown(&classes, &ts_cfg);
+        let empty = &per[1];
+        assert_eq!(empty.group.completed, 0);
+        assert_eq!(empty.group.mean_ttft_ms, 0.0);
+        assert_eq!(empty.group.mean_e2e_ms, 0.0);
+        assert!(empty.group.mean_acceptance.is_nan());
+        assert!((empty.slo.attainment() - 0.0).abs() < 1e-12);
+        assert!(empty.time_series.windows.is_empty());
+        // No declared classes → empty breakdown, even with requests.
+        assert!(rep.per_class_breakdown(&[], &ts_cfg).is_empty());
     }
 
     #[test]

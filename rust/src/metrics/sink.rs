@@ -124,6 +124,10 @@ pub struct StreamingConfig {
     /// Window geometry for the folded time series (scenario-dynamics
     /// observability).
     pub time_series: TimeSeriesConfig,
+    /// Request classes, tier order: `(name, slo)` per tier from the
+    /// config's `classes:` block. Empty = single-tenant (no per-class
+    /// breakdown is kept or emitted, preserving historical bytes).
+    pub classes: Vec<(String, SloSpec)>,
 }
 
 impl Default for StreamingConfig {
@@ -138,6 +142,7 @@ impl Default for StreamingConfig {
             slos: vec![SloSpec::INTERACTIVE, SloSpec::RELAXED],
             drafter_pool_ends: Vec::new(),
             time_series: TimeSeriesConfig::default(),
+            classes: Vec::new(),
         }
     }
 }
@@ -156,6 +161,11 @@ impl StreamingConfig {
         }
         StreamingConfig {
             drafter_pool_ends: ends,
+            classes: cfg
+                .classes
+                .as_ref()
+                .map(|c| c.slo_list())
+                .unwrap_or_default(),
             ..StreamingConfig::default()
         }
     }
@@ -242,6 +252,48 @@ impl GroupSummary {
             .with("mean_tpot_ms", self.mean_tpot_ms.into())
             .with("mean_e2e_ms", self.mean_e2e_ms.into())
             .with("mean_acceptance", self.mean_acceptance.into())
+    }
+}
+
+/// Streaming per-class (tier) state: group accumulators, the tier's own
+/// SLO counter, and a windowed time series restricted to the tier's
+/// completions. O(1) memory per declared class.
+struct ClassStats {
+    name: String,
+    spec: SloSpec,
+    group: GroupStats,
+    attained: u64,
+    ts: TimeSeries,
+}
+
+/// Per-request-class breakdown: one entry per tier declared in the
+/// config's `classes:` block, in declaration (priority) order. Counts
+/// are exact; means match the full sink's independent computation to
+/// floating-point noise (locked in `tests/streaming_parity.rs`).
+#[derive(Clone, Debug)]
+pub struct ClassSummary {
+    /// Tier name as declared (e.g. `"interactive"`).
+    pub name: String,
+    /// Latency/acceptance breakdown over the tier's completed requests
+    /// (`key` is the tier index).
+    pub group: GroupSummary,
+    /// Attainment against the tier's *own* SLO — `completed` here is the
+    /// tier's completion count, not the global one.
+    pub slo: SloSummary,
+    /// Windowed time series restricted to the tier's completions. Never
+    /// carries capacity (`provisioned_targets`): fleet size is global,
+    /// not per-tier.
+    pub time_series: TimeSeriesSummary,
+}
+
+impl ClassSummary {
+    /// JSON encoding (insertion-ordered keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str().into())
+            .with("group", self.group.to_json())
+            .with("slo", self.slo.to_json())
+            .with("time_series", self.time_series.to_json())
     }
 }
 
@@ -358,6 +410,8 @@ pub struct StreamingSink {
     slos: Vec<SloSpec>,
     slo_attained: Vec<u64>,
     ts: TimeSeries,
+    /// One entry per declared request class; empty when single-tenant.
+    per_class: Vec<ClassStats>,
 }
 
 impl Default for StreamingSink {
@@ -370,6 +424,17 @@ impl StreamingSink {
     /// Sink with the given histogram geometry and breakdown config.
     pub fn new(cfg: StreamingConfig) -> Self {
         let n_slos = cfg.slos.len();
+        let per_class = cfg
+            .classes
+            .iter()
+            .map(|(name, spec)| ClassStats {
+                name: name.clone(),
+                spec: *spec,
+                group: GroupStats::default(),
+                attained: 0,
+                ts: TimeSeries::new(cfg.time_series.clone()),
+            })
+            .collect();
         StreamingSink {
             ttft: Accumulator::new(),
             tpot: Accumulator::new(),
@@ -388,6 +453,7 @@ impl StreamingSink {
             slos: cfg.slos,
             slo_attained: vec![0; n_slos],
             ts: TimeSeries::new(cfg.time_series),
+            per_class,
         }
     }
 
@@ -429,6 +495,21 @@ impl StreamingSink {
                 })
                 .collect(),
             time_series: self.ts.summary(),
+            per_class: self
+                .per_class
+                .iter()
+                .enumerate()
+                .map(|(ci, c)| ClassSummary {
+                    name: c.name.clone(),
+                    group: c.group.summary(ci),
+                    slo: SloSummary {
+                        spec: c.spec,
+                        attained: c.attained,
+                        completed: c.group.completed,
+                    },
+                    time_series: c.ts.summary(),
+                })
+                .collect(),
         }
     }
 }
@@ -461,6 +542,17 @@ impl MetricsSink for StreamingSink {
             if m.ttft_ms <= s.ttft_ms && m.tpot_ms <= s.tpot_ms {
                 self.slo_attained[i] += 1;
             }
+        }
+        if !self.per_class.is_empty() {
+            // Out-of-range ids clamp to the last (lowest-priority) tier,
+            // mirroring the simulator's request-class clamping.
+            let ci = m.class_id.min(self.per_class.len() - 1);
+            let c = &mut self.per_class[ci];
+            c.group.push(m);
+            if m.ttft_ms <= c.spec.ttft_ms && m.tpot_ms <= c.spec.tpot_ms {
+                c.attained += 1;
+            }
+            c.ts.fold(m);
         }
         self.ts.fold(m);
     }
@@ -561,12 +653,16 @@ pub struct StreamingSummary {
     /// Fixed-width windowed time series (throughput, latency means,
     /// acceptance, active-request counts per window).
     pub time_series: TimeSeriesSummary,
+    /// Per-request-class breakdown, in tier order. Empty for
+    /// single-tenant runs — the `per_class` JSON key is then omitted so
+    /// classless summaries keep their historical bytes.
+    pub per_class: Vec<ClassSummary>,
 }
 
 impl StreamingSummary {
     /// JSON encoding.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .with("completed", self.completed.into())
             .with("output_tokens", self.output_tokens.into())
             .with("fused_rounds", self.fused_rounds.into())
@@ -587,7 +683,16 @@ impl StreamingSummary {
                 "slo",
                 Json::Arr(self.slo.iter().map(|s| s.to_json()).collect()),
             )
-            .with("time_series", self.time_series.to_json())
+            .with("time_series", self.time_series.to_json());
+        // Key present only for class-bearing runs (byte-stable
+        // summaries otherwise — same pattern as `autoscale`).
+        if !self.per_class.is_empty() {
+            j.set(
+                "per_class",
+                Json::Arr(self.per_class.iter().map(|c| c.to_json()).collect()),
+            );
+        }
+        j
     }
 }
 
@@ -660,6 +765,7 @@ mod tests {
             output_tokens: 11,
             gamma_decisions: Vec::new(),
             fused_rounds: 0,
+            class_id: 0,
         }
     }
 
@@ -819,6 +925,86 @@ mod tests {
         assert_eq!(sum.slo[0].attained, 1);
         assert_eq!(sum.slo[0].completed, 3);
         assert!((sum.slo[0].attainment() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_breakdown_folds_with_tier_slos() {
+        let cfg = StreamingConfig {
+            classes: vec![
+                ("interactive".into(), SloSpec { ttft_ms: 15.0, tpot_ms: 2.0 }),
+                ("batch".into(), SloSpec { ttft_ms: 100.0, tpot_ms: 10.0 }),
+            ],
+            ..StreamingConfig::default()
+        };
+        let mut s = StreamingSink::new(cfg);
+        s.record(&req(0, 10.0, 1.0, 0.8)); // interactive, attained
+        let mut slow = req(1, 40.0, 1.0, 0.6); // interactive, ttft breach
+        slow.class_id = 0;
+        s.record(&slow);
+        let mut b = req(2, 40.0, 3.0, 0.5); // batch, attained vs relaxed slo
+        b.class_id = 1;
+        s.record(&b);
+        // Out-of-range ids clamp to the last tier.
+        let mut stray = req(3, 500.0, 50.0, 0.4);
+        stray.class_id = 9;
+        s.record(&stray);
+        let sum = s.summary();
+        assert_eq!(sum.per_class.len(), 2);
+        assert_eq!(sum.per_class[0].name, "interactive");
+        assert_eq!(sum.per_class[0].group.completed, 2);
+        assert_eq!(sum.per_class[0].slo.attained, 1);
+        assert_eq!(sum.per_class[0].slo.completed, 2);
+        assert_eq!(sum.per_class[1].group.completed, 2);
+        assert_eq!(sum.per_class[1].slo.attained, 1); // stray breaches
+        assert!((sum.per_class[0].group.mean_ttft_ms - 25.0).abs() < 1e-12);
+        // Per-class windows partition the global completion count.
+        let class_windows: u64 = sum
+            .per_class
+            .iter()
+            .flat_map(|c| c.time_series.windows.iter().map(|w| w.completed))
+            .sum();
+        assert_eq!(class_windows, sum.completed);
+        // Per-class series never carry capacity.
+        for c in &sum.per_class {
+            assert!(c.time_series.windows.iter().all(|w| w.provisioned_targets.is_none()));
+        }
+        let j = sum.to_json().to_string_compact();
+        assert!(j.contains("\"per_class\""));
+        assert!(j.contains("\"interactive\""));
+    }
+
+    #[test]
+    fn classless_summary_has_no_per_class_key() {
+        let mut s = StreamingSink::default();
+        let mut m = req(0, 10.0, 1.0, 0.8);
+        m.class_id = 3; // ignored without declared classes
+        s.record(&m);
+        let sum = s.summary();
+        assert!(sum.per_class.is_empty());
+        assert!(!sum.to_json().to_string_compact().contains("per_class"));
+    }
+
+    #[test]
+    fn empty_class_tier_reports_zero_counts_not_nan() {
+        // ISSUE satellite: tiers with no arrivals must yield 0-count
+        // groups and 0.0 attainment, never NaN/divide-by-zero latencies.
+        let cfg = StreamingConfig {
+            classes: vec![
+                ("interactive".into(), SloSpec::INTERACTIVE),
+                ("batch".into(), SloSpec::RELAXED),
+            ],
+            ..StreamingConfig::default()
+        };
+        let mut s = StreamingSink::new(cfg);
+        s.record(&req(0, 10.0, 1.0, 0.8)); // class 0 only
+        let sum = s.summary();
+        let empty = &sum.per_class[1];
+        assert_eq!(empty.group.completed, 0);
+        assert_eq!(empty.slo.completed, 0);
+        assert!((empty.slo.attainment() - 0.0).abs() < 1e-12);
+        assert_eq!(empty.group.mean_ttft_ms, 0.0);
+        assert!(empty.group.mean_acceptance.is_nan());
+        assert!(empty.time_series.windows.is_empty());
     }
 
     #[test]

@@ -453,6 +453,7 @@ mod tests {
             output_tokens: 10,
             gamma_decisions: Vec::new(),
             fused_rounds: 0,
+            class_id: 0,
         }
     }
 

@@ -70,7 +70,12 @@ impl BatchingPolicy for Lab {
         candidates.sort_by(|&a, &b| {
             let da = (queue[a].length as f64 - head_len).abs();
             let db = (queue[b].length as f64 - head_len).abs();
-            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+            // total_cmp, not partial_cmp().unwrap(): the distances are
+            // finite today, but a NaN (e.g. from a future length signal)
+            // must degrade the ordering, never panic mid-dispatch. On
+            // finite values the two orderings agree, so tie-breaks and
+            // batch composition are byte-identical to the old comparator.
+            da.total_cmp(&db).then(a.cmp(&b))
         });
         let mut batch = vec![0];
         for &i in &candidates {
@@ -155,6 +160,29 @@ mod tests {
         // Nothing is "similar" to the head, but idle capacity is worse
         // than padding: batch still fills.
         assert_eq!(Lab::default().form_batch(&q, 3).len(), 3);
+    }
+
+    /// Regression (ISSUE satellite): the LAB candidate sort moved from
+    /// `partial_cmp(..).unwrap()` to `total_cmp`. On finite distances the
+    /// two comparators order identically, so the tie-break order — queue
+    /// position among equal |length − head| — must be exactly what the
+    /// old comparator produced.
+    #[test]
+    fn lab_tie_order_on_finite_values_unchanged() {
+        // Head 100; positions 1..=4 at distances 10, 10, 5, 10: nearest
+        // first, FIFO among the three equal-distance candidates.
+        let q = queue(&[100, 110, 90, 105, 110]);
+        assert_eq!(Lab::default().form_batch(&q, 5), vec![0, 3, 1, 2, 4]);
+        // Explicit cross-check against the legacy comparator on the same
+        // candidate set.
+        let head_len = q[0].length as f64;
+        let mut legacy: Vec<usize> = (1..q.len()).collect();
+        legacy.sort_by(|&a, &b| {
+            let da = (q[a].length as f64 - head_len).abs();
+            let db = (q[b].length as f64 - head_len).abs();
+            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+        });
+        assert_eq!(&Lab::default().form_batch(&q, 5)[1..], &legacy[..]);
     }
 
     #[test]

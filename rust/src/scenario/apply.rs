@@ -200,8 +200,8 @@ impl RuntimeDynamics {
                 }
                 None
             }
-            // Folded into the arrival envelope at trace-generation time.
-            ScenarioEvent::RateOverride { .. } => None,
+            // Folded into the arrival envelopes at trace-generation time.
+            ScenarioEvent::RateOverride { .. } | ScenarioEvent::ClassRateOverride { .. } => None,
             // Routed through the autoscale fleet by the simulator before
             // the dynamics state is consulted (the fleet then flips
             // per-target availability here via `set_target_available`).

@@ -15,7 +15,7 @@ use crate::util::json::Json;
 /// **absolute with respect to the t=0 baseline** — applying a degrade
 /// twice does not compound, and `LinkRestore` / `mult: 1` returns the
 /// exact baseline values (bit-for-bit).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum ScenarioEvent {
     /// Scale link parameters of one drafter pool (or every link plus the
     /// fallback default link when `pool` is `None`). An infinite
@@ -63,6 +63,17 @@ pub enum ScenarioEvent {
         /// New arrival rate, requests/second (> 0).
         rate_per_s: f64,
     },
+    /// Pin **one request class's** arrival envelope to a new rate from
+    /// this timestamp onward (consumed at trace-generation time, like
+    /// [`ScenarioEvent::RateOverride`]). Requires a `classes:` block on
+    /// the owning config declaring the named tier — an undeclared name
+    /// is rejected at `Simulator::try_new` time, never silently ignored.
+    ClassRateOverride {
+        /// Tier name as declared in the `classes:` block.
+        class: String,
+        /// New arrival rate for that tier, requests/second (> 0).
+        rate_per_s: f64,
+    },
     /// Scripted capacity addition: provision `count` more cloud targets
     /// (cold-start delay applies; clamped to the autoscale `max`).
     /// Requires an `autoscale:` block on the owning config — the
@@ -90,6 +101,7 @@ impl ScenarioEvent {
             ScenarioEvent::DrafterPoolUp { .. } => "drafter_pool_up",
             ScenarioEvent::TargetSlowdown { .. } => "target_slowdown",
             ScenarioEvent::RateOverride { .. } => "rate_override",
+            ScenarioEvent::ClassRateOverride { .. } => "class_rate_override",
             ScenarioEvent::TargetPoolUp { .. } => "target_pool_up",
             ScenarioEvent::TargetPoolDown { .. } => "target_pool_down",
         }
@@ -97,7 +109,7 @@ impl ScenarioEvent {
 }
 
 /// A [`ScenarioEvent`] with its firing time.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TimedEvent {
     /// Simulation time the event fires, ms.
     pub at_ms: f64,
@@ -125,6 +137,7 @@ impl TimedEvent {
             "drafter_pool_down" | "drafter_pool_up" => &["pool"],
             "target_slowdown" => &["target", "mult"],
             "rate_override" => &["rate_per_s"],
+            "class_rate_override" => &["class", "rate_per_s"],
             "target_pool_up" | "target_pool_down" => &["count"],
             _ => &[], // unknown kind: rejected below with the full list
         };
@@ -182,6 +195,16 @@ impl TimedEvent {
                     .and_then(Json::as_f64)
                     .ok_or("scenario event (rate_override): missing number 'rate_per_s'")?,
             },
+            "class_rate_override" => ScenarioEvent::ClassRateOverride {
+                class: j
+                    .get("class")
+                    .and_then(Json::as_str)
+                    .ok_or("scenario event (class_rate_override): missing 'class'")?
+                    .to_string(),
+                rate_per_s: j.get("rate_per_s").and_then(Json::as_f64).ok_or(
+                    "scenario event (class_rate_override): missing number 'rate_per_s'",
+                )?,
+            },
             "target_pool_up" => ScenarioEvent::TargetPoolUp {
                 count: opt_usize("count")?.unwrap_or(1),
             },
@@ -192,7 +215,7 @@ impl TimedEvent {
                 return Err(format!(
                     "scenario event: unknown kind '{other}' (known: link_degrade, \
                      link_restore, drafter_pool_down, drafter_pool_up, target_slowdown, \
-                     rate_override, target_pool_up, target_pool_down)"
+                     rate_override, class_rate_override, target_pool_up, target_pool_down)"
                 ))
             }
         };
@@ -233,6 +256,9 @@ impl TimedEvent {
             ScenarioEvent::RateOverride { rate_per_s } => {
                 j.with("rate_per_s", rate_per_s.into())
             }
+            ScenarioEvent::ClassRateOverride { ref class, rate_per_s } => j
+                .with("class", class.as_str().into())
+                .with("rate_per_s", rate_per_s.into()),
             ScenarioEvent::TargetPoolUp { count } => j.with("count", count.into()),
             ScenarioEvent::TargetPoolDown { count } => j.with("count", count.into()),
         }
@@ -294,6 +320,14 @@ impl TimedEvent {
             ScenarioEvent::RateOverride { rate_per_s } => {
                 mult_ok("rate_per_s", rate_per_s, false)
             }
+            ScenarioEvent::ClassRateOverride { ref class, rate_per_s } => {
+                if class.is_empty() {
+                    return Err(
+                        "scenario event (class_rate_override): class must be non-empty".into()
+                    );
+                }
+                mult_ok("rate_per_s", rate_per_s, false)
+            }
             ScenarioEvent::TargetPoolUp { count } | ScenarioEvent::TargetPoolDown { count } => {
                 if count == 0 {
                     return Err(format!(
@@ -351,6 +385,13 @@ mod tests {
         roundtrip(TimedEvent {
             at_ms: 10.0,
             event: ScenarioEvent::RateOverride { rate_per_s: 33.0 },
+        });
+        roundtrip(TimedEvent {
+            at_ms: 10.5,
+            event: ScenarioEvent::ClassRateOverride {
+                class: "batch".to_string(),
+                rate_per_s: 80.0,
+            },
         });
         roundtrip(TimedEvent {
             at_ms: 11.0,
@@ -457,6 +498,24 @@ mod tests {
         .validate(2, 4)
         .is_ok());
         assert!(ev(ScenarioEvent::RateOverride { rate_per_s: -1.0 }).validate(2, 4).is_err());
+        assert!(ev(ScenarioEvent::ClassRateOverride {
+            class: String::new(),
+            rate_per_s: 5.0,
+        })
+        .validate(2, 4)
+        .is_err());
+        assert!(ev(ScenarioEvent::ClassRateOverride {
+            class: "interactive".to_string(),
+            rate_per_s: 0.0,
+        })
+        .validate(2, 4)
+        .is_err());
+        assert!(ev(ScenarioEvent::ClassRateOverride {
+            class: "interactive".to_string(),
+            rate_per_s: 5.0,
+        })
+        .validate(2, 4)
+        .is_ok());
         let past = TimedEvent {
             at_ms: -1.0,
             event: ScenarioEvent::LinkRestore { pool: None },

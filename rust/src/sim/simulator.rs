@@ -111,6 +111,9 @@ enum DrafterTask {
 /// Per-request live state.
 struct Request {
     id: usize,
+    /// Request-class index (tier position in the `classes:` block; 0
+    /// single-tenant). Drives priority admission and per-class metrics.
+    class: usize,
     drafter: usize,
     target: usize,
     prompt_length: u32,
@@ -210,17 +213,30 @@ impl Simulator {
                 // The scenario's arrival process (with rate overrides
                 // folded into the envelope) replaces the stationary
                 // stream; a constant plan reproduces the legacy draw
-                // sequence bit for bit.
-                let plan = match &cfg.scenario {
-                    Some(s) => s.plan(cfg.workload.rate_per_s),
-                    None => ArrivalPlan::constant(cfg.workload.rate_per_s),
-                };
-                ds.generate_plan(
-                    cfg.workload.requests,
-                    &plan,
-                    topo.drafters.len().max(1),
-                    cfg.seed,
-                )
+                // sequence bit for bit. A `classes:` block replaces the
+                // single stream with one per-tier envelope each (config
+                // validation rejects classes + scenario arrivals, so the
+                // two branches never compete).
+                match &cfg.classes {
+                    Some(cl) => ds.generate_classes(
+                        cfg.workload.requests,
+                        &cl.plans(cfg.scenario.as_ref()),
+                        topo.drafters.len().max(1),
+                        cfg.seed,
+                    ),
+                    None => {
+                        let plan = match &cfg.scenario {
+                            Some(s) => s.plan(cfg.workload.rate_per_s),
+                            None => ArrivalPlan::constant(cfg.workload.rate_per_s),
+                        };
+                        ds.generate_plan(
+                            cfg.workload.requests,
+                            &plan,
+                            topo.drafters.len().max(1),
+                            cfg.seed,
+                        )
+                    }
+                }
             }
         };
         Ok(Simulator {
@@ -350,6 +366,13 @@ struct SimState<S: MetricsSink> {
     /// Requests that have arrived so far (backlog = arrived − completed,
     /// an autoscale policy input).
     arrived: usize,
+    /// Multi-tenant admission knobs (None without a `classes:` block —
+    /// the single-tenant hot path skips every class-aware branch).
+    mt: Option<MtRuntime>,
+    /// Per-class arrived counts (empty without a `classes:` block).
+    class_arrived: Vec<usize>,
+    /// Per-class completed counts (empty without a `classes:` block).
+    class_completed: Vec<usize>,
     wall_start: std::time::Instant,
     feat_sum: [f64; 5],
     feat_n: u64,
@@ -363,6 +386,16 @@ struct SimState<S: MetricsSink> {
     /// [`SimState::fill_routable_snapshots`] and the immediately
     /// following `route` call may observe it.
     snap_scratch: Vec<TargetSnapshot>,
+}
+
+/// Multi-tenant serving knobs lifted from the `classes:` block.
+struct MtRuntime {
+    /// Number of declared tiers (tier 0 = highest priority).
+    n_classes: usize,
+    /// Admit higher tiers ahead of lower ones at target queues.
+    priority_admission: bool,
+    /// Defer lowest-tier batch work while tier 0's backlog exceeds this.
+    defer_threshold: Option<usize>,
 }
 
 /// Simulator-side glue for the elastic target pool: the fleet state
@@ -395,12 +428,16 @@ impl<S: MetricsSink> SimState<S> {
     ) -> SimState<S> {
         let n_targets = topo.targets.len();
         let n_drafters = topo.drafters.len().max(1);
+        let n_classes = cfg.classes.as_ref().map(|c| c.n_classes()).unwrap_or(0);
         let requests: Vec<Request> = trace
             .records
             .iter()
             .enumerate()
             .map(|(id, r)| Request {
                 id,
+                // Clamp stray trace ids into the declared tier range
+                // (class-free configs pin every request to tier 0).
+                class: r.class_id.min(n_classes.saturating_sub(1)),
                 drafter: r.drafter_id % n_drafters,
                 target: usize::MAX,
                 prompt_length: r.prompt_length.max(1),
@@ -452,16 +489,24 @@ impl<S: MetricsSink> SimState<S> {
             .map(|s| s.events.clone())
             .unwrap_or_default();
         for (i, ev) in scenario_events.iter().enumerate() {
-            // Rate overrides were already folded into the arrival
-            // envelope at trace-generation time; everything else fires
-            // at runtime.
-            if !matches!(ev.event, ScenarioEvent::RateOverride { .. }) {
+            // Rate overrides (global and per-class) were already folded
+            // into the arrival envelopes at trace-generation time;
+            // everything else fires at runtime.
+            if !matches!(
+                ev.event,
+                ScenarioEvent::RateOverride { .. } | ScenarioEvent::ClassRateOverride { .. }
+            ) {
                 q.schedule(ev.at_ms, Ev::Scenario(i));
             }
         }
         let fused_only = matches!(cfg.window, WindowKind::FusedOnly);
         let seed = cfg.seed;
         let keep_gammas = sink.keep_gamma_history();
+        let mt = cfg.classes.as_ref().map(|c| MtRuntime {
+            n_classes: c.n_classes(),
+            priority_admission: c.priority_admission,
+            defer_threshold: c.defer_batch_threshold,
+        });
         let autoscale = cfg.autoscale.as_ref().map(|ac| {
             let max = ac.resolved_max(n_targets);
             let initial = ac.resolved_initial(n_targets);
@@ -500,6 +545,9 @@ impl<S: MetricsSink> SimState<S> {
             scenario_events,
             autoscale,
             arrived: 0,
+            mt,
+            class_arrived: vec![0; n_classes],
+            class_completed: vec![0; n_classes],
             wall_start: std::time::Instant::now(),
             feat_sum: [0.0; 5],
             feat_n: 0,
@@ -700,6 +748,7 @@ impl<S: MetricsSink> SimState<S> {
                 busy_active: busy,
                 queued,
                 backlog: self.arrived.saturating_sub(self.completed),
+                interactive_backlog: self.class_backlog(0),
                 arrival_rate_per_s: (self.arrived - a.tick_arrived) as f64 / dt_s,
                 completion_rate_per_s: (self.completed - a.tick_completed) as f64 / dt_s,
             }
@@ -852,7 +901,7 @@ impl<S: MetricsSink> SimState<S> {
     /// requests migrate back through the normal per-round window
     /// decision.
     fn on_scenario(&mut self, now: f64, idx: usize) {
-        let ev = self.scenario_events[idx].event;
+        let ev = self.scenario_events[idx].event.clone();
         // Scripted capacity changes route through the autoscale fleet
         // (config validation guarantees the block exists); they bypass
         // the policy cooldown — an explicit operator action — but the
@@ -938,6 +987,9 @@ impl<S: MetricsSink> SimState<S> {
     // ---- Routing stage ----
     fn on_arrival(&mut self, now: f64, rid: usize) {
         self.arrived += 1;
+        if !self.class_arrived.is_empty() {
+            self.class_arrived[self.requests[rid].class] += 1;
+        }
         // Routing sees only targets currently accepting work — the full
         // fleet without autoscaling (bit-identical to the pre-autoscale
         // snapshot list).
@@ -1176,9 +1228,51 @@ impl<S: MetricsSink> SimState<S> {
         self.q.schedule_in(dur, Ev::TargetDone { target: tid, op, started_ms: now });
     }
 
+    /// Current backlog (arrived − completed) of one request class; 0
+    /// without a `classes:` block.
+    fn class_backlog(&self, class: usize) -> usize {
+        self.class_arrived
+            .get(class)
+            .copied()
+            .unwrap_or(0)
+            .saturating_sub(self.class_completed.get(class).copied().unwrap_or(0))
+    }
+
+    /// Class-aware admission view of one target queue: the queue
+    /// positions eligible for this batch, highest-priority tier first
+    /// (the sort is stable, so FIFO order within each class survives).
+    /// With `defer_batch_threshold` set and the top tier's backlog above
+    /// it, lowest-tier work is held back — unless it is all the queue
+    /// holds, so deferral can delay but never deadlock the batch tier.
+    /// `None` means "use the queue as-is": always the case without a
+    /// `classes:` block, keeping the single-tenant path untouched.
+    fn admission_positions(&self, rids: impl Iterator<Item = usize>) -> Option<Vec<usize>> {
+        let mt = self.mt.as_ref()?;
+        let rids: Vec<usize> = rids.collect();
+        let mut pos: Vec<usize> = (0..rids.len()).collect();
+        if let Some(th) = mt.defer_threshold {
+            if self.class_backlog(0) > th {
+                let keep: Vec<usize> = pos
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.requests[rids[i]].class + 1 < mt.n_classes)
+                    .collect();
+                if !keep.is_empty() {
+                    pos = keep;
+                }
+            }
+        }
+        if mt.priority_admission {
+            pos.sort_by_key(|&i| self.requests[rids[i]].class);
+        }
+        Some(pos)
+    }
+
     /// Choose the next batch for an idle target: strict alternation
     /// between prefill and decode-side work when both wait (prevents
     /// starvation in either direction), batching policy picks members.
+    /// With a `classes:` block the batching policy sees the queue
+    /// through the class-priority admission view.
     fn select_op(&self, tid: usize) -> Option<TargetOp> {
         let t = &self.targets[tid];
         let has_prefill = !t.prefill_q.is_empty();
@@ -1189,37 +1283,27 @@ impl<S: MetricsSink> SimState<S> {
         }
         let prefer_prefill = has_prefill && (!t.last_was_prefill || (!has_verify && !has_fused));
         if prefer_prefill {
-            let view: Vec<QueuedRequest> = t
-                .prefill_q
-                .iter()
-                .map(|&(rid, enq)| QueuedRequest {
-                    id: rid,
-                    length: self.requests[rid].prompt_length,
-                    enqueued_ms: enq,
-                })
-                .collect();
-            let idxs = self
-                .batching
-                .form_batch(&view, self.cfg.batch.prefill_batch);
-            return Some(TargetOp::Prefill(
-                idxs.iter().map(|&i| t.prefill_q[i].0).collect(),
-            ));
+            return Some(self.select_prefill(t));
         }
         if has_verify {
-            let view: Vec<QueuedRequest> = t
-                .verify_q
-                .iter()
-                .map(|&(rid, _g, enq)| QueuedRequest {
-                    id: rid,
-                    length: self.requests[rid].ctx_len(),
-                    enqueued_ms: enq,
+            let pos = self.admission_positions(t.verify_q.iter().map(|&(rid, _, _)| rid));
+            let qi = |i: usize| pos.as_ref().map_or(i, |p| p[i]);
+            let view: Vec<QueuedRequest> = (0..t.verify_q.len())
+                .map(|i| {
+                    let (rid, _g, enq) = t.verify_q[qi(i)];
+                    QueuedRequest {
+                        id: rid,
+                        length: self.requests[rid].ctx_len(),
+                        enqueued_ms: enq,
+                    }
                 })
+                .take(pos.as_ref().map_or(t.verify_q.len(), Vec::len))
                 .collect();
             let idxs = self.batching.form_batch(&view, self.cfg.batch.decode_batch);
             return Some(TargetOp::Verify(
                 idxs.iter()
                     .map(|&i| {
-                        let (rid, g, _) = t.verify_q[i];
+                        let (rid, g, _) = t.verify_q[qi(i)];
                         (rid, g)
                     })
                     .collect(),
@@ -1236,19 +1320,27 @@ impl<S: MetricsSink> SimState<S> {
         }
         // Fall back to prefill (alternation preferred decode but there
         // was none).
-        let view: Vec<QueuedRequest> = t
-            .prefill_q
-            .iter()
-            .map(|&(rid, enq)| QueuedRequest {
-                id: rid,
-                length: self.requests[rid].prompt_length,
-                enqueued_ms: enq,
+        Some(self.select_prefill(t))
+    }
+
+    /// Form one prefill batch from a target's prefill queue (through the
+    /// class admission view when classes are configured).
+    fn select_prefill(&self, t: &Target) -> TargetOp {
+        let pos = self.admission_positions(t.prefill_q.iter().map(|&(rid, _)| rid));
+        let qi = |i: usize| pos.as_ref().map_or(i, |p| p[i]);
+        let view: Vec<QueuedRequest> = (0..t.prefill_q.len())
+            .map(|i| {
+                let (rid, enq) = t.prefill_q[qi(i)];
+                QueuedRequest {
+                    id: rid,
+                    length: self.requests[rid].prompt_length,
+                    enqueued_ms: enq,
+                }
             })
+            .take(pos.as_ref().map_or(t.prefill_q.len(), Vec::len))
             .collect();
         let idxs = self.batching.form_batch(&view, self.cfg.batch.prefill_batch);
-        Some(TargetOp::Prefill(
-            idxs.iter().map(|&i| t.prefill_q[i].0).collect(),
-        ))
+        TargetOp::Prefill(idxs.iter().map(|&i| t.prefill_q[qi(i)].0).collect())
     }
 
     /// Batch duration with padding: batch cost is governed by the
@@ -1449,6 +1541,7 @@ impl<S: MetricsSink> SimState<S> {
         }
         r.completed_ms = Some(now);
         self.completed += 1;
+        let class = r.class;
         let key = r.pair_key();
         // Fold the finished request into the metrics sink right here —
         // streaming sinks drop the record immediately, which is what
@@ -1473,9 +1566,13 @@ impl<S: MetricsSink> SimState<S> {
                 output_tokens: out_toks,
                 gamma_decisions: std::mem::take(&mut r.gammas),
                 fused_rounds: r.fused_rounds,
+                class_id: class,
             };
             self.completed_tokens += out_toks as u64;
             self.sink.record(&m);
+        }
+        if !self.class_completed.is_empty() {
+            self.class_completed[class] += 1;
         }
         self.window.forget(key);
     }
@@ -1892,6 +1989,102 @@ mod tests {
         assert_eq!(a.scale_down_events, 1, "scripted drain applied");
         assert_eq!(a.scale_up_events, 1, "scripted recovery applied");
         assert_eq!(a.final_provisioned, 3, "capacity restored by the end");
+    }
+
+    fn classy_cfg(priority: bool, defer: Option<usize>) -> SimConfig {
+        use crate::config::{ClassSpec, ClassesConfig};
+        use crate::metrics::SloSpec;
+        use crate::scenario::ArrivalProcess;
+        let mut cfg = SimConfig::builder()
+            .seed(11)
+            .targets(1)
+            .drafters(16)
+            .requests(160)
+            .build();
+        cfg.classes = Some(ClassesConfig {
+            name: "two-tier".into(),
+            tiers: vec![
+                ClassSpec {
+                    name: "interactive".into(),
+                    arrivals: ArrivalProcess::Constant { rate_per_s: 10.0 },
+                    slo: SloSpec::INTERACTIVE,
+                },
+                ClassSpec {
+                    name: "batch".into(),
+                    arrivals: ArrivalProcess::Spike {
+                        base_per_s: 5.0,
+                        peak_per_s: 120.0,
+                        t_start_ms: 1_000.0,
+                        t_end_ms: 3_000.0,
+                    },
+                    slo: SloSpec::RELAXED,
+                },
+            ],
+            priority_admission: priority,
+            defer_batch_threshold: defer,
+        });
+        cfg
+    }
+
+    fn mean_class_ttft(rep: &SimReport, class: usize) -> f64 {
+        let xs: Vec<f64> = rep
+            .requests
+            .iter()
+            .filter(|r| r.class_id == class)
+            .map(|r| r.ttft_ms)
+            .collect();
+        assert!(!xs.is_empty(), "class {class} must complete requests");
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    #[test]
+    fn class_bearing_runs_complete_and_tag_requests() {
+        let rep = Simulator::new(classy_cfg(true, None)).run();
+        assert_eq!(rep.system.completed, 160);
+        let n0 = rep.requests.iter().filter(|r| r.class_id == 0).count();
+        let n1 = rep.requests.iter().filter(|r| r.class_id == 1).count();
+        assert_eq!(n0 + n1, 160);
+        assert!(n0 > 0 && n1 > 0, "both tiers served: {n0}/{n1}");
+        // Deterministic, like every other simulation mode.
+        let again = Simulator::new(classy_cfg(true, None)).run();
+        assert_eq!(rep.system.events_processed, again.system.events_processed);
+        assert!((rep.mean_ttft() - again.mean_ttft()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priority_admission_defends_interactive_ttft_under_flash_crowd() {
+        let fifo = Simulator::new(classy_cfg(false, None)).run();
+        let prio = Simulator::new(classy_cfg(true, None)).run();
+        assert_eq!(fifo.system.completed, 160);
+        assert_eq!(prio.system.completed, 160);
+        let fifo_i = mean_class_ttft(&fifo, 0);
+        let prio_i = mean_class_ttft(&prio, 0);
+        // The flash-crowd batch tier floods the single target; jumping
+        // interactive work ahead in the queues must not make its TTFT
+        // worse, and under this much contention it should win outright.
+        assert!(
+            prio_i < fifo_i,
+            "priority admission defends interactive TTFT: prio={prio_i} fifo={fifo_i}"
+        );
+        // The traces are identical (same per-tier rng streams) — only
+        // admission order changed.
+        assert_eq!(
+            fifo.requests.iter().filter(|r| r.class_id == 0).count(),
+            prio.requests.iter().filter(|r| r.class_id == 0).count()
+        );
+    }
+
+    #[test]
+    fn batch_deferral_holds_lowest_tier_but_never_deadlocks() {
+        let rep = Simulator::new(classy_cfg(true, Some(2))).run();
+        assert_eq!(rep.system.completed, 160, "deferral must not strand batch work");
+        let plain = Simulator::new(classy_cfg(true, None)).run();
+        let held = mean_class_ttft(&rep, 1);
+        let free = mean_class_ttft(&plain, 1);
+        assert!(
+            held >= free - 1e-9,
+            "deferral can only delay the batch tier: held={held} free={free}"
+        );
     }
 
     #[test]

@@ -21,9 +21,10 @@ pub fn expected_speedup(alpha: f64, gamma: u32, c: f64) -> f64 {
 pub fn optimal_gamma(alpha: f64, c: f64, max_gamma: u32) -> u32 {
     (1..=max_gamma)
         .max_by(|&a, &b| {
-            expected_speedup(alpha, a, c)
-                .partial_cmp(&expected_speedup(alpha, b, c))
-                .unwrap()
+            // total_cmp: a NaN speedup (e.g. NaN α from a corrupt trace)
+            // must degrade the argmax, never panic; finite values order
+            // identically to the old partial_cmp comparator.
+            expected_speedup(alpha, a, c).total_cmp(&expected_speedup(alpha, b, c))
         })
         .unwrap_or(1)
 }
@@ -179,6 +180,29 @@ mod tests {
         let hi = optimal_gamma(0.9, 0.05, 12);
         assert!(hi >= lo, "higher acceptance supports larger windows");
         assert!(hi <= 12 && lo >= 1);
+    }
+
+    /// Regression (ISSUE satellite): the argmax moved from
+    /// `partial_cmp(..).unwrap()` to `total_cmp` — a NaN α (corrupt
+    /// acceptance estimate) must yield *some* in-range γ, never panic
+    /// mid-decision.
+    #[test]
+    fn optimal_gamma_survives_nan_alpha() {
+        let g = optimal_gamma(f64::NAN, 0.05, 12);
+        assert!((1..=12).contains(&g));
+        // Finite inputs keep the exact pre-refactor argmax.
+        assert_eq!(optimal_gamma(0.8, 0.05, 12), {
+            let mut best = 1;
+            let mut best_s = f64::MIN;
+            for g in 1..=12u32 {
+                let s = expected_speedup(0.8, g, 0.05);
+                if s > best_s {
+                    best_s = s;
+                    best = g;
+                }
+            }
+            best
+        });
     }
 
     #[test]

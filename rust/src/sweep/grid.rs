@@ -2,18 +2,21 @@
 //! swept axis, expanded into the cross product of concrete cell configs.
 //!
 //! Axes (all optional; an absent axis pins the base value):
-//! scenario (scripted dynamics), autoscale (elastic target pools), RTT,
-//! jitter, arrival rate, dataset, routing / batching / window policy,
-//! cluster scale (target and drafter counts), and seed.
+//! scenario (scripted dynamics), autoscale (elastic target pools),
+//! classes (multi-tenant request tiers), RTT, jitter, arrival rate,
+//! dataset, routing / batching / window policy, cluster scale (target
+//! and drafter counts), and seed.
 //!
 //! Expansion order is fixed and documented — outermost to innermost:
-//! `scenario → autoscale → dataset → routing → batching → window →
-//! targets → drafters → rtt → jitter → rate → seed` — so cell indices
-//! are stable and seed replicas of one configuration are adjacent.
+//! `scenario → autoscale → classes → dataset → routing → batching →
+//! window → targets → drafters → rtt → jitter → rate → seed` — so cell
+//! indices are stable and seed replicas of one configuration are
+//! adjacent.
 
 use crate::autoscale::AutoscaleConfig;
 use crate::config::{
-    parse_batching, parse_routing, BatchingKind, RoutingKind, SimConfig, WindowKind,
+    parse_batching, parse_routing, BatchingKind, ClassesConfig, RoutingKind, SimConfig,
+    WindowKind,
 };
 use crate::scenario::Scenario;
 use crate::util::json::Json;
@@ -124,6 +127,10 @@ pub struct SweepGrid {
     /// grid YAML the entries are autoscale file paths or the literal
     /// `none`; cells are labeled by block name.
     pub autoscales: Vec<Option<AutoscaleConfig>>,
+    /// Request-class axis (multi-tenant tiers; `None` = single-tenant).
+    /// In grid YAML the entries are classes file paths or the literal
+    /// `none`; cells are labeled by block name.
+    pub classes: Vec<Option<ClassesConfig>>,
     /// Edge–cloud RTT axis, ms.
     pub rtt_ms: Vec<f64>,
     /// Jitter axis, ms.
@@ -154,6 +161,7 @@ impl SweepGrid {
         SweepGrid {
             scenarios: vec![base.scenario.clone()],
             autoscales: vec![base.autoscale.clone()],
+            classes: vec![base.classes.clone()],
             rtt_ms: vec![base.network.rtt_ms],
             jitter_ms: vec![base.network.jitter_ms],
             rate_per_s: vec![base.workload.rate_per_s],
@@ -173,6 +181,7 @@ impl SweepGrid {
     pub fn n_cells(&self) -> usize {
         self.scenarios.len()
             * self.autoscales.len()
+            * self.classes.len()
             * self.datasets.len()
             * self.routing.len()
             * self.batching.len()
@@ -230,8 +239,8 @@ impl SweepGrid {
             return Ok(grid);
         };
         const KNOWN: &[&str] = &[
-            "scenario", "autoscale", "rtt_ms", "jitter_ms", "rate_per_s", "dataset",
-            "routing", "batching", "window", "targets", "drafters", "seeds",
+            "scenario", "autoscale", "classes", "rtt_ms", "jitter_ms", "rate_per_s",
+            "dataset", "routing", "batching", "window", "targets", "drafters", "seeds",
         ];
         if let Json::Obj(pairs) = sweep {
             for (k, _) in pairs {
@@ -265,6 +274,18 @@ impl SweepGrid {
                         Ok(None)
                     } else {
                         AutoscaleConfig::from_yaml_file(s).map(Some)
+                    }
+                })
+                .collect::<Result<_, String>>()?;
+        }
+        if let Some(v) = sweep.get("classes") {
+            grid.classes = str_axis("classes", v)?
+                .iter()
+                .map(|s| {
+                    if s.as_str() == "none" {
+                        Ok(None)
+                    } else {
+                        ClassesConfig::from_yaml_file(s).map(Some)
                     }
                 })
                 .collect::<Result<_, String>>()?;
@@ -325,42 +346,50 @@ impl SweepGrid {
         let mut cells = Vec::with_capacity(self.n_cells());
         for scenario in &self.scenarios {
             for autoscale in &self.autoscales {
-                for ds in &self.datasets {
-                    for &routing in &self.routing {
-                        for &batching in &self.batching {
-                            for window in &self.windows {
-                                for &n_targets in &self.targets {
-                                    for &n_drafters in &self.drafters {
-                                        for &rtt in &self.rtt_ms {
-                                            for &jitter in &self.jitter_ms {
-                                                for &rate in &self.rate_per_s {
-                                                    for &seed in &self.seeds {
-                                                        let cfg = self.cell_config(
-                                                            scenario, autoscale, ds,
-                                                            routing, batching, window,
-                                                            n_targets, n_drafters, rtt,
-                                                            jitter, rate, seed,
-                                                        )?;
-                                                        let mut labels = vec![
-                                                            (
-                                                                "scenario".to_string(),
-                                                                scenario_label(scenario),
-                                                            ),
-                                                            (
-                                                                "autoscale".to_string(),
-                                                                autoscale_label(autoscale),
-                                                            ),
-                                                        ];
-                                                        labels.extend(labels_for(
-                                                            ds, routing, batching, window,
-                                                            n_targets, n_drafters, rtt,
-                                                            jitter, rate, seed,
-                                                        ));
-                                                        cells.push(SweepCell {
-                                                            index: cells.len(),
-                                                            labels,
-                                                            cfg,
-                                                        });
+                for classes in &self.classes {
+                    for ds in &self.datasets {
+                        for &routing in &self.routing {
+                            for &batching in &self.batching {
+                                for window in &self.windows {
+                                    for &n_targets in &self.targets {
+                                        for &n_drafters in &self.drafters {
+                                            for &rtt in &self.rtt_ms {
+                                                for &jitter in &self.jitter_ms {
+                                                    for &rate in &self.rate_per_s {
+                                                        for &seed in &self.seeds {
+                                                            let cfg = self.cell_config(
+                                                                scenario, autoscale,
+                                                                classes, ds, routing,
+                                                                batching, window,
+                                                                n_targets, n_drafters,
+                                                                rtt, jitter, rate, seed,
+                                                            )?;
+                                                            let mut labels = vec![
+                                                                (
+                                                                    "scenario".to_string(),
+                                                                    scenario_label(scenario),
+                                                                ),
+                                                                (
+                                                                    "autoscale".to_string(),
+                                                                    autoscale_label(autoscale),
+                                                                ),
+                                                                (
+                                                                    "classes".to_string(),
+                                                                    classes_label(classes),
+                                                                ),
+                                                            ];
+                                                            labels.extend(labels_for(
+                                                                ds, routing, batching,
+                                                                window, n_targets,
+                                                                n_drafters, rtt, jitter,
+                                                                rate, seed,
+                                                            ));
+                                                            cells.push(SweepCell {
+                                                                index: cells.len(),
+                                                                labels,
+                                                                cfg,
+                                                            });
+                                                        }
                                                     }
                                                 }
                                             }
@@ -381,6 +410,7 @@ impl SweepGrid {
         &self,
         scenario: &Option<Scenario>,
         autoscale: &Option<AutoscaleConfig>,
+        classes: &Option<ClassesConfig>,
         dataset: &str,
         routing: RoutingKind,
         batching: BatchingKind,
@@ -395,6 +425,7 @@ impl SweepGrid {
         let mut cfg = self.base.clone();
         cfg.scenario = scenario.clone();
         cfg.autoscale = autoscale.clone();
+        cfg.classes = classes.clone();
         cfg.seed = seed;
         cfg.workload.dataset = dataset.to_string();
         cfg.workload.rate_per_s = rate;
@@ -422,6 +453,14 @@ pub fn scenario_label(s: &Option<Scenario>) -> String {
 pub fn autoscale_label(a: &Option<AutoscaleConfig>) -> String {
     match a {
         Some(a) => a.name.clone(),
+        None => "none".into(),
+    }
+}
+
+/// Stable label for a request-classes axis entry.
+pub fn classes_label(c: &Option<ClassesConfig>) -> String {
+    match c {
+        Some(c) => c.name.clone(),
         None => "none".into(),
     }
 }
@@ -826,6 +865,54 @@ streaming: true
         // And the literal `none` pins the fixed fleet.
         let g = SweepGrid::from_yaml("sweep:\n  autoscale: [none]\n").unwrap();
         assert_eq!(g.autoscales, vec![None]);
+    }
+
+    #[test]
+    fn classes_axis_expands_and_labels_cells() {
+        use crate::config::{ClassSpec, ClassesConfig};
+        use crate::metrics::SloSpec;
+        use crate::scenario::ArrivalProcess;
+        let mut grid = SweepGrid::new(SimConfig::builder().requests(8).build());
+        grid.seeds = vec![1, 2];
+        grid.classes = vec![
+            None,
+            Some(ClassesConfig {
+                name: "two_tier".into(),
+                tiers: vec![
+                    ClassSpec {
+                        name: "interactive".into(),
+                        arrivals: ArrivalProcess::Constant { rate_per_s: 10.0 },
+                        slo: SloSpec::INTERACTIVE,
+                    },
+                    ClassSpec {
+                        name: "batch".into(),
+                        arrivals: ArrivalProcess::Constant { rate_per_s: 5.0 },
+                        slo: SloSpec::RELAXED,
+                    },
+                ],
+                priority_admission: true,
+                defer_batch_threshold: None,
+            }),
+        ];
+        assert_eq!(grid.n_cells(), 4);
+        let cells = grid.expand().unwrap();
+        // Classes sits just inside autoscale: seeds iterate inside it.
+        assert_eq!(cells[0].label("classes"), Some("none"));
+        assert_eq!(cells[1].label("classes"), Some("none"));
+        assert_eq!(cells[2].label("classes"), Some("two_tier"));
+        assert_eq!(cells[3].label("classes"), Some("two_tier"));
+        assert!(cells[0].cfg.classes.is_none());
+        assert_eq!(cells[2].cfg.classes.as_ref().unwrap().n_classes(), 2);
+        assert_eq!(cells[2].cfg.seed, 1);
+        // The axis filters like any other.
+        let kept = filter_cells(cells, &parse_filter("classes=two_tier").unwrap()).unwrap();
+        assert_eq!(kept.len(), 2);
+        // YAML: a missing file is an error, not a silent single-tenant cell.
+        let bad = "sweep:\n  classes: [/nonexistent/classes.yaml]\n";
+        assert!(SweepGrid::from_yaml(bad).is_err());
+        // And the literal `none` pins single-tenant serving.
+        let g = SweepGrid::from_yaml("sweep:\n  classes: [none]\n").unwrap();
+        assert_eq!(g.classes, vec![None]);
     }
 
     #[test]

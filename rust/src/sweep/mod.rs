@@ -37,11 +37,11 @@ pub mod summary;
 
 pub use cache::{cell_key, CacheLookup, CellCache, CellKeyer, GcStats, SIM_VERSION_TAG};
 pub use grid::{
-    autoscale_label, filter_cells, filter_label, parse_filter, scenario_label, SweepCell,
-    SweepGrid,
+    autoscale_label, classes_label, filter_cells, filter_label, parse_filter,
+    scenario_label, SweepCell, SweepGrid,
 };
 pub use runner::{
-    default_threads, run_cells, run_cells_cached, run_grid, run_grid_cached, CellMetrics,
-    CellResult, RunStats,
+    default_threads, run_cells, run_cells_cached, run_grid, run_grid_cached,
+    CellMetrics, CellResult, ClassCellMetrics, RunStats,
 };
 pub use summary::SweepSummary;

@@ -16,6 +16,49 @@ use crate::util::json::Json;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Flat per-class reading carried by class-bearing cells: the tier
+/// name plus the numbers the fairness analyses plot (completion count,
+/// latency means, attainment against the tier's own SLO). A compact
+/// projection of [`crate::metrics::ClassSummary`] — full per-class
+/// series stay in the reports; cell files carry only what summaries
+/// consume.
+#[derive(Clone, Debug)]
+pub struct ClassCellMetrics {
+    /// Tier name as declared in the `classes:` block.
+    pub name: String,
+    /// Completed requests in the tier.
+    pub completed: u64,
+    /// Mean TTFT, ms (0 for an empty tier).
+    pub mean_ttft_ms: f64,
+    /// Mean TPOT, ms.
+    pub mean_tpot_ms: f64,
+    /// Attainment against the tier's own SLO (0 when nothing completed).
+    pub slo_attainment: f64,
+}
+
+impl ClassCellMetrics {
+    /// JSON encoding (insertion-ordered keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("name", self.name.as_str().into())
+            .with("completed", self.completed.into())
+            .with("mean_ttft_ms", self.mean_ttft_ms.into())
+            .with("mean_tpot_ms", self.mean_tpot_ms.into())
+            .with("slo_attainment", self.slo_attainment.into())
+    }
+
+    /// Decode one reading (cache load path); `None` on shape mismatch.
+    pub fn from_json(j: &Json) -> Option<ClassCellMetrics> {
+        Some(ClassCellMetrics {
+            name: j.get("name")?.as_str()?.to_string(),
+            completed: j.get("completed")?.as_u64()?,
+            mean_ttft_ms: j.get("mean_ttft_ms")?.as_f64_or_nan()?,
+            mean_tpot_ms: j.get("mean_tpot_ms")?.as_f64_or_nan()?,
+            slo_attainment: j.get("slo_attainment")?.as_f64_or_nan()?,
+        })
+    }
+}
+
 /// Flat per-cell metric snapshot, common to both metric modes.
 #[derive(Clone, Debug)]
 pub struct CellMetrics {
@@ -67,6 +110,10 @@ pub struct CellMetrics {
     /// which the flat metric set did not carry. `None` keeps historical
     /// cell bytes.
     pub slo_interactive: Option<f64>,
+    /// Per-request-class readings, tier order — present only for cells
+    /// whose config carries a `classes:` block. `None` keeps historical
+    /// cell bytes.
+    pub per_class: Option<Vec<ClassCellMetrics>>,
 }
 
 impl CellMetrics {
@@ -91,6 +138,7 @@ impl CellMetrics {
             time_series: None,
             autoscale: rep.system.autoscale.clone(),
             slo_interactive: None,
+            per_class: None,
         }
     }
 
@@ -115,6 +163,7 @@ impl CellMetrics {
             time_series: None,
             autoscale: rep.system.autoscale.clone(),
             slo_interactive: None,
+            per_class: None,
         }
     }
 
@@ -151,6 +200,12 @@ impl CellMetrics {
         if let Some(s) = self.slo_interactive {
             j.set("slo_interactive", s.into());
         }
+        if let Some(pc) = &self.per_class {
+            j.set(
+                "per_class",
+                Json::Arr(pc.iter().map(|c| c.to_json()).collect()),
+            );
+        }
         j
     }
 
@@ -184,6 +239,15 @@ impl CellMetrics {
             None => None,
             Some(s) => Some(s.as_f64_or_nan()?),
         };
+        let per_class = match j.get("per_class") {
+            None => None,
+            Some(p) => Some(
+                p.as_arr()?
+                    .iter()
+                    .map(ClassCellMetrics::from_json)
+                    .collect::<Option<Vec<_>>>()?,
+            ),
+        };
         Some(CellMetrics {
             completed: j.get("completed")?.as_u64()?,
             throughput_rps: f("throughput_rps")?,
@@ -203,6 +267,7 @@ impl CellMetrics {
             time_series,
             autoscale,
             slo_interactive,
+            per_class,
         })
     }
 }
@@ -442,6 +507,9 @@ fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
     // trade-off axis).
     let want_series = cfg.scenario.is_some() || cfg.autoscale.is_some();
     let want_slo = cfg.autoscale.is_some();
+    // Class-bearing cells carry the per-tier readings the fairness
+    // analyses plot; class-free cells keep their historical bytes.
+    let classes = cfg.classes.as_ref().map(|c| c.slo_list());
     Ok(if streaming {
         let rep = sim.try_run_streaming()?;
         let mut m = CellMetrics::from_streaming(&rep);
@@ -456,6 +524,21 @@ fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
                 .find(|s| s.spec == SloSpec::INTERACTIVE)
                 .map(|s| s.attainment());
         }
+        if classes.is_some() {
+            m.per_class = Some(
+                rep.stream
+                    .per_class
+                    .iter()
+                    .map(|c| ClassCellMetrics {
+                        name: c.name.clone(),
+                        completed: c.group.completed,
+                        mean_ttft_ms: c.group.mean_ttft_ms,
+                        mean_tpot_ms: c.group.mean_tpot_ms,
+                        slo_attainment: c.slo.attainment(),
+                    })
+                    .collect(),
+            );
+        }
         m
     } else {
         let rep = sim.try_run()?;
@@ -465,6 +548,20 @@ fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
         }
         if want_slo {
             m.slo_interactive = Some(rep.slo_attainment(SloSpec::INTERACTIVE));
+        }
+        if let Some(cl) = &classes {
+            m.per_class = Some(
+                rep.per_class_breakdown(cl, &TimeSeriesConfig::default())
+                    .iter()
+                    .map(|c| ClassCellMetrics {
+                        name: c.name.clone(),
+                        completed: c.group.completed,
+                        mean_ttft_ms: c.group.mean_ttft_ms,
+                        mean_tpot_ms: c.group.mean_tpot_ms,
+                        slo_attainment: c.slo.attainment(),
+                    })
+                    .collect(),
+            );
         }
         m
     })
@@ -522,6 +619,65 @@ mod tests {
         let rs = run_grid(&grid, 2).unwrap();
         assert_eq!(rs.len(), 4);
         assert!(rs[0].metrics().mean_ttft_ms > 0.0);
+    }
+
+    fn two_tier_classes() -> crate::config::ClassesConfig {
+        use crate::config::{ClassSpec, ClassesConfig};
+        use crate::scenario::ArrivalProcess;
+        ClassesConfig {
+            name: "two_tier".into(),
+            tiers: vec![
+                ClassSpec {
+                    name: "interactive".into(),
+                    arrivals: ArrivalProcess::Constant { rate_per_s: 12.0 },
+                    slo: SloSpec::INTERACTIVE,
+                },
+                ClassSpec {
+                    name: "batch".into(),
+                    arrivals: ArrivalProcess::Constant { rate_per_s: 8.0 },
+                    slo: SloSpec::RELAXED,
+                },
+            ],
+            priority_admission: true,
+            defer_batch_threshold: None,
+        }
+    }
+
+    /// ISSUE tentpole: the class axis is byte-deterministic across
+    /// thread counts, per-class readings appear exactly on class-bearing
+    /// cells, and they survive the cache JSON roundtrip.
+    #[test]
+    fn class_axis_cells_are_thread_deterministic_and_roundtrip() {
+        let mut grid = tiny_grid();
+        grid.rtt_ms = vec![5.0];
+        grid.seeds = vec![1];
+        grid.classes = vec![None, Some(two_tier_classes())];
+        let a = run_grid(&grid, 1).unwrap();
+        let b = run_grid(&grid, 4).unwrap();
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+            assert_eq!(
+                x.metrics().to_json().to_string_pretty(),
+                y.metrics().to_json().to_string_pretty(),
+                "class-axis cells must be byte-identical across thread counts"
+            );
+        }
+        // Class-free cell: no per_class key. Class-bearing cell: both
+        // tiers present with counts partitioning the total.
+        assert!(a[0].metrics().per_class.is_none());
+        let pc = a[1].metrics().per_class.as_ref().expect("per-class readings");
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc[0].name, "interactive");
+        assert_eq!(
+            pc.iter().map(|c| c.completed).sum::<u64>(),
+            a[1].metrics().completed
+        );
+        let back = CellMetrics::from_json(&a[1].metrics().to_json()).expect("roundtrip");
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            a[1].metrics().to_json().to_string_pretty()
+        );
     }
 
     #[test]

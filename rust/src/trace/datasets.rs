@@ -165,7 +165,72 @@ impl DatasetProfile {
                 acceptance_seq,
                 arrival_time_ms: t_ms,
                 drafter_id: rng.index(n_drafters.max(1)),
+                class_id: 0,
             });
+        }
+        Trace {
+            dataset: self.name.to_string(),
+            records,
+        }
+    }
+
+    /// Generate one multi-tenant trace: `n` requests across `plans.len()`
+    /// request classes, each class drawing arrivals from its own
+    /// [`ArrivalPlan`] with its own rng stream, merged globally by
+    /// arrival time (ties break toward the lower class index, i.e. the
+    /// higher-priority tier declared first). Each class's draw sequence
+    /// is the same interleave as [`DatasetProfile::generate_plan`] — one
+    /// arrival draw, then the per-request payload draws — so a
+    /// single-class call reproduces `generate_plan` with a perturbed
+    /// seed, and adding a tier never disturbs another tier's payloads.
+    pub fn generate_classes(
+        &self,
+        n: usize,
+        plans: &[ArrivalPlan],
+        n_drafters: usize,
+        seed: u64,
+    ) -> Trace {
+        assert!(!plans.is_empty(), "generate_classes needs at least one class plan");
+        // Independent per-class streams: same dataset hash, distinct odd
+        // multiplier per tier so streams never collide across seeds.
+        let mut rngs: Vec<Pcg64> = (0..plans.len())
+            .map(|ci| {
+                Pcg64::new(
+                    seed ^ fxhash(self.name)
+                        ^ (ci as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )
+            })
+            .collect();
+        let mut samplers: Vec<_> = plans.iter().map(|p| p.sampler()).collect();
+        // Pre-draw each class's first arrival so the merge loop always
+        // compares concrete next-arrival times.
+        let mut next_t: Vec<f64> = samplers
+            .iter_mut()
+            .zip(rngs.iter_mut())
+            .map(|(s, rng)| s.next_after(0.0, rng))
+            .collect();
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut ci = 0usize;
+            for (k, &t) in next_t.iter().enumerate().skip(1) {
+                if t < next_t[ci] {
+                    ci = k;
+                }
+            }
+            let t_ms = next_t[ci];
+            let rng = &mut rngs[ci];
+            let (prompt_length, output_length) = self.sample_lengths(rng);
+            let seq_len = (output_length as usize) * 2 + 16;
+            let acceptance_seq = self.sample_acceptance(rng, seq_len);
+            records.push(TraceRecord {
+                prompt_length,
+                output_length,
+                acceptance_seq,
+                arrival_time_ms: t_ms,
+                drafter_id: rng.index(n_drafters.max(1)),
+                class_id: ci,
+            });
+            next_t[ci] = samplers[ci].next_after(t_ms, rng);
         }
         Trace {
             dataset: self.name.to_string(),
@@ -304,6 +369,47 @@ mod tests {
             .count();
         // 1 s at 200/s dominates the surrounding 10/s base traffic.
         assert!(in_spike > 120, "in_spike={in_spike}");
+    }
+
+    #[test]
+    fn class_traces_merge_sorted_and_deterministic() {
+        let plans = vec![ArrivalPlan::constant(20.0), ArrivalPlan::constant(5.0)];
+        let a = GSM8K.generate_classes(400, &plans, 8, 9);
+        let b = GSM8K.generate_classes(400, &plans, 8, 9);
+        assert_eq!(a.records, b.records);
+        a.validate().unwrap();
+        let n0 = a.records.iter().filter(|r| r.class_id == 0).count();
+        let n1 = a.records.iter().filter(|r| r.class_id == 1).count();
+        assert_eq!(n0 + n1, 400);
+        assert!(n0 > 0 && n1 > 0, "both classes arrive: {n0}/{n1}");
+        // 20/s vs 5/s → class 0 dominates roughly 4:1.
+        assert!(n0 > n1 * 2, "rate split: {n0} vs {n1}");
+    }
+
+    #[test]
+    fn class_streams_are_independent() {
+        // Adding a second tier must not disturb the first tier's payload
+        // draws: class 0's records keep identical lengths/acceptance when
+        // tier 1's rate changes (only the merge order can move them).
+        let lo = vec![ArrivalPlan::constant(20.0), ArrivalPlan::constant(2.0)];
+        let hi = vec![ArrivalPlan::constant(20.0), ArrivalPlan::constant(50.0)];
+        let a = GSM8K.generate_classes(300, &lo, 8, 9);
+        let b = GSM8K.generate_classes(300, &hi, 8, 9);
+        let pa: Vec<_> = a
+            .records
+            .iter()
+            .filter(|r| r.class_id == 0)
+            .map(|r| (r.prompt_length, r.output_length, r.arrival_time_ms.to_bits()))
+            .collect();
+        let pb: Vec<_> = b
+            .records
+            .iter()
+            .filter(|r| r.class_id == 0)
+            .map(|r| (r.prompt_length, r.output_length, r.arrival_time_ms.to_bits()))
+            .collect();
+        let shared = pa.len().min(pb.len());
+        assert!(shared > 50, "enough class-0 arrivals to compare: {shared}");
+        assert_eq!(pa[..shared], pb[..shared]);
     }
 
     #[test]

@@ -23,12 +23,16 @@ pub struct TraceRecord {
     pub arrival_time_ms: f64,
     /// Edge drafter device the request arrives at.
     pub drafter_id: usize,
+    /// Request-class index (tier position in the `classes:` block; 0 for
+    /// single-tenant traces). Serialized only when nonzero, so classless
+    /// traces keep their historical Table-1 bytes.
+    pub class_id: usize,
 }
 
 impl TraceRecord {
     /// Serialize to the JSON schema of Table 1.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .with("prompt_length", (self.prompt_length as u64).into())
             .with("output_length", (self.output_length as u64).into())
             .with(
@@ -41,7 +45,11 @@ impl TraceRecord {
                 ),
             )
             .with("arrival_time_ms", self.arrival_time_ms.into())
-            .with("drafter_id", self.drafter_id.into())
+            .with("drafter_id", self.drafter_id.into());
+        if self.class_id != 0 {
+            j.set("class_id", self.class_id.into());
+        }
+        j
     }
 
     /// Parse from the Table-1 JSON schema.
@@ -68,6 +76,14 @@ impl TraceRecord {
             drafter_id: field("drafter_id")?
                 .as_usize()
                 .ok_or("drafter_id must be a non-negative integer")?,
+            // Optional: absent on every trace written before request
+            // classes existed.
+            class_id: match j.get("class_id") {
+                Some(v) => v
+                    .as_usize()
+                    .ok_or("class_id must be a non-negative integer")?,
+                None => 0,
+            },
         })
     }
 
@@ -156,7 +172,21 @@ mod tests {
             acceptance_seq: vec![true, false, true],
             arrival_time_ms: 5.3,
             drafter_id: 38,
+            class_id: 0,
         }
+    }
+
+    #[test]
+    fn class_id_roundtrips_and_stays_off_classless_records() {
+        let classless = sample().to_json();
+        assert!(classless.get("class_id").is_none(), "classless bytes unchanged");
+        let mut r = sample();
+        r.class_id = 2;
+        let j = r.to_json();
+        assert_eq!(j.get("class_id").and_then(Json::as_usize), Some(2));
+        assert_eq!(TraceRecord::from_json(&j).unwrap(), r);
+        // Absent field parses as class 0 (pre-classes traces).
+        assert_eq!(TraceRecord::from_json(&classless).unwrap().class_id, 0);
     }
 
     #[test]

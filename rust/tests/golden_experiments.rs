@@ -1,6 +1,6 @@
 //! Self-bootstrapping golden snapshots for the runner-ported experiment
-//! families (fig5, fig7/8, fig9/10, table2, agility, elasticity) plus
-//! cached-vs-uncached
+//! families (fig5, fig7/8, fig9/10, table2, agility, elasticity,
+//! fairness) plus cached-vs-uncached
 //! byte-identity: each family's sweep data must serialize identically
 //! whether computed directly, against a cold cell cache, or spliced
 //! entirely from a warm cache — and the warm pass must execute zero
@@ -11,7 +11,9 @@
 //! any byte drift fails. Regenerate deliberately with
 //! `DSD_UPDATE_GOLDEN=1 cargo test -q --test golden_experiments`.
 
-use dsd::experiments::{agility, elasticity, fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale};
+use dsd::experiments::{
+    agility, elasticity, fairness, fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale,
+};
 use dsd::sweep::CellCache;
 use dsd::util::json::Json;
 use std::path::PathBuf;
@@ -277,4 +279,32 @@ fn golden_elasticity_and_cache_identity() {
         elasticity_json(&elasticity::sweep_cached(SCALE, &SEEDS, ctx))
     });
     check_golden("elasticity_tiny.json", &text);
+}
+
+fn fairness_json(rows: &[fairness::FairnessRow]) -> String {
+    pretty(Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .with("strategy", r.strategy.into())
+                    .with("interactive_ttft_ms", r.interactive_ttft_ms.into())
+                    .with("interactive_slo", r.interactive_slo.into())
+                    .with("batch_ttft_ms", r.batch_ttft_ms.into())
+                    .with("batch_slo", r.batch_slo.into())
+                    .with("throughput_rps", r.throughput_rps.into())
+            })
+            .collect(),
+    ))
+}
+
+/// The multi-tenant fairness family (ISSUE 7): cold/warm/uncached
+/// byte-identity over class-bearing cells — exercising the classes
+/// canonical JSON inside cache keys and the per-class breakdown payload
+/// inside cached cell files end to end.
+#[test]
+fn golden_fairness_and_cache_identity() {
+    let text = triple_run("fairness", |ctx| {
+        fairness_json(&fairness::sweep_cached(SCALE, &SEEDS, ctx))
+    });
+    check_golden("fairness_tiny.json", &text);
 }

@@ -21,8 +21,13 @@
 //!   recomputation.
 
 use dsd::autoscale::{AutoscaleConfig, ScalingPolicy};
-use dsd::config::{BatchingKind, LinkOverride, PoolSpec, RoutingKind, SimConfig, WindowKind};
-use dsd::metrics::{FullSink, GroupSummary, MetricsSink, SimReport, StreamingConfig, StreamingSink};
+use dsd::config::{
+    BatchingKind, ClassSpec, ClassesConfig, LinkOverride, PoolSpec, RoutingKind, SimConfig,
+    WindowKind,
+};
+use dsd::metrics::{
+    FullSink, GroupSummary, MetricsSink, SimReport, SloSpec, StreamingConfig, StreamingSink,
+};
 use dsd::scenario::{ArrivalProcess, Scenario, ScenarioEvent, TimedEvent};
 use dsd::sim::Simulator;
 use dsd::util::stats::percentile;
@@ -59,8 +64,9 @@ fn base(
 /// with a distinct routing/batching stack) + heterogeneous-link and
 /// finite-bandwidth variants + 3 scenario-bearing configs (flash crowd,
 /// link flap, pool churn + target slowdown) + 1 autoscale-bearing
-/// config (reactive elastic pool under a flash crowd) — 18
-/// configurations.
+/// config (reactive elastic pool under a flash crowd) + 2 class-bearing
+/// configs (multi-tenant priority admission; priority + batch deferral
+/// under a batch-tier flash crowd) — 20 configurations.
 fn differential_grid() -> Vec<(String, SimConfig)> {
     use dsd::cluster::gpu::{A40, V100};
     use dsd::cluster::model::{LLAMA2_7B, QWEN_7B};
@@ -220,6 +226,58 @@ fn differential_grid() -> Vec<(String, SimConfig)> {
         cost_per_target_s: 1.0,
     });
     grid.push(("gsm8k/autoscale-burst".into(), elastic));
+    // (5) Multi-tenant priority admission: two SLO tiers with their own
+    // arrival processes — the per-class breakdown (group stats, tier SLO
+    // counters, per-tier windowed series) must agree between the
+    // streaming fold and the report's batch recomputation.
+    let mut classy =
+        base(37, "gsm8k", WindowKind::Static(4), RoutingKind::Jsq, BatchingKind::Lab);
+    classy.classes = Some(ClassesConfig {
+        name: "two-tier".into(),
+        tiers: vec![
+            ClassSpec {
+                name: "interactive".into(),
+                arrivals: ArrivalProcess::Constant { rate_per_s: 16.0 },
+                slo: SloSpec::INTERACTIVE,
+            },
+            ClassSpec {
+                name: "batch".into(),
+                arrivals: ArrivalProcess::Constant { rate_per_s: 8.0 },
+                slo: SloSpec::RELAXED,
+            },
+        ],
+        priority_admission: true,
+        defer_batch_threshold: None,
+    });
+    grid.push(("gsm8k/classes-priority".into(), classy));
+    // (6) Priority + batch deferral under a batch-tier flash crowd, on a
+    // class-blind-unfriendly dataset/policy mix (FIFO batching so the
+    // admission view is the only reordering in play).
+    let mut defer =
+        base(38, "cnndm", WindowKind::Static(4), RoutingKind::RoundRobin, BatchingKind::Fifo);
+    defer.classes = Some(ClassesConfig {
+        name: "defer".into(),
+        tiers: vec![
+            ClassSpec {
+                name: "interactive".into(),
+                arrivals: ArrivalProcess::Constant { rate_per_s: 12.0 },
+                slo: SloSpec::INTERACTIVE,
+            },
+            ClassSpec {
+                name: "batch".into(),
+                arrivals: ArrivalProcess::Spike {
+                    base_per_s: 6.0,
+                    peak_per_s: 48.0,
+                    t_start_ms: 300.0,
+                    t_end_ms: 1_200.0,
+                },
+                slo: SloSpec::RELAXED,
+            },
+        ],
+        priority_admission: true,
+        defer_batch_threshold: Some(2),
+    });
+    grid.push(("cnndm/classes-defer".into(), defer));
     grid
 }
 
@@ -385,6 +443,71 @@ fn assert_parity(name: &str, cfg: &SimConfig, full: &SimReport) {
     // The windows partition the completions.
     assert_eq!(windowed_total, stream.stream.completed, "{name}: ts partition");
 
+    // Per-class breakdown (multi-tenant runs): tier identity, group
+    // stats, tier-SLO counters, and the per-tier windowed series must
+    // agree between the streaming fold and the report's batch
+    // recomputation — counts exact, means to 1e-9.
+    let classes = cfg.classes.as_ref().map(|c| c.slo_list()).unwrap_or_default();
+    if classes.is_empty() {
+        assert!(
+            stream.stream.per_class.is_empty(),
+            "{name}: per-class breakdown without a classes block"
+        );
+    } else {
+        let f_pc = full.per_class_breakdown(&classes, &scfg.time_series);
+        assert_eq!(stream.stream.per_class.len(), classes.len(), "{name}: class count");
+        assert_eq!(f_pc.len(), classes.len(), "{name}: class count (full)");
+        let s_groups: Vec<GroupSummary> =
+            stream.stream.per_class.iter().map(|c| c.group.clone()).collect();
+        let f_groups: Vec<GroupSummary> = f_pc.iter().map(|c| c.group.clone()).collect();
+        assert_groups_match(name, "class", &s_groups, &f_groups);
+        let mut class_total = 0u64;
+        for (s, f) in stream.stream.per_class.iter().zip(&f_pc) {
+            assert_eq!(s.name, f.name, "{name}: class name order");
+            assert_eq!(s.slo.spec, f.slo.spec, "{name}: class {} slo spec", s.name);
+            assert_eq!(s.slo.attained, f.slo.attained, "{name}: class {} attained", s.name);
+            assert_eq!(s.slo.completed, f.slo.completed, "{name}: class {} completed", s.name);
+            assert_eq!(
+                s.slo.completed, s.group.completed,
+                "{name}: class {} slo counts its own tier",
+                s.name
+            );
+            let (sts, fts) = (&s.time_series, &f.time_series);
+            assert_eq!(sts.windows.len(), fts.windows.len(), "{name}: class {} windows", s.name);
+            for (sw, fw) in sts.windows.iter().zip(&fts.windows) {
+                assert_eq!(sw.index, fw.index, "{name}: class {} w index", s.name);
+                assert_eq!(
+                    sw.completed, fw.completed,
+                    "{name}: class {} w{} completed",
+                    s.name, sw.index
+                );
+                assert_eq!(
+                    sw.output_tokens, fw.output_tokens,
+                    "{name}: class {} w{} tokens",
+                    s.name, sw.index
+                );
+                assert!(
+                    nan_or_close(sw.mean_ttft_ms, fw.mean_ttft_ms)
+                        && nan_or_close(sw.mean_tpot_ms, fw.mean_tpot_ms),
+                    "{name}: class {} w{} means",
+                    s.name,
+                    sw.index
+                );
+                // Capacity is global, never per-tier — on either side.
+                assert!(
+                    sw.provisioned_targets.is_none() && fw.provisioned_targets.is_none(),
+                    "{name}: class {} w{} carries capacity",
+                    s.name,
+                    sw.index
+                );
+            }
+            class_total += s.group.completed;
+        }
+        // Tiers partition the completions (stray class ids clamp into
+        // the last tier, so nothing escapes the breakdown).
+        assert_eq!(class_total, stream.stream.completed, "{name}: class partition");
+    }
+
     // Elastic-capacity accounting: both modes run the same deterministic
     // fleet, so the cost meter agrees exactly.
     match (&stream.system.autoscale, &full.system.autoscale) {
@@ -427,6 +550,10 @@ fn streaming_matches_full_across_differential_grid() {
     assert!(
         grid.iter().any(|(_, c)| c.autoscale.is_some()),
         "differential grid must include an autoscale-bearing config"
+    );
+    assert!(
+        grid.iter().filter(|(_, c)| c.classes.is_some()).count() >= 2,
+        "differential grid must include ≥2 class-bearing configs"
     );
     for (name, cfg) in grid {
         let full = Simulator::new(cfg.clone()).run();
