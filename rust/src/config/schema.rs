@@ -9,6 +9,7 @@ use crate::autoscale::AutoscaleConfig;
 use crate::cluster::{gpu_by_name, model_by_name, GpuSpec, ModelSpec};
 use crate::config::classes::ClassesConfig;
 use crate::scenario::Scenario;
+use crate::specdec::ExecutionMode;
 use crate::util::json::Json;
 use crate::util::yaml;
 
@@ -176,6 +177,17 @@ pub struct SimConfig {
     /// tiers plus priority-aware serving. `None` reproduces the
     /// single-tenant simulator bit for bit.
     pub classes: Option<ClassesConfig>,
+    /// Round execution mode (see [`ExecutionMode`]). `Sequential` — the
+    /// default, and what an absent `execution:` key means — reproduces
+    /// the pre-execution-mode simulator bit for bit; `Pipelined`
+    /// overlaps drafting of window k+1 with verification of window k.
+    pub execution: ExecutionMode,
+    /// Opt-in: clamp out-of-range trace `class_id`s to the last declared
+    /// tier instead of rejecting the trace at load time. Off (the
+    /// default, and what an absent key means) a record whose class id
+    /// exceeds the declared tier count fails `Simulator::try_new` with a
+    /// named error.
+    pub clamp_trace_class_ids: bool,
 }
 
 impl SimConfig {
@@ -299,6 +311,15 @@ impl SimConfig {
         }
         if let Some(c) = doc.get("classes") {
             b.cfg.classes = Some(ClassesConfig::from_json(c)?);
+        }
+        if let Some(e) = doc.get("execution") {
+            let s = e
+                .as_str()
+                .ok_or("config: execution must be a string (sequential | pipelined)")?;
+            b.cfg.execution = ExecutionMode::parse(s).map_err(|e| format!("config: {e}"))?;
+        }
+        if let Some(x) = doc.get("clamp_trace_class_ids").and_then(Json::as_bool) {
+            b.cfg.clamp_trace_class_ids = x;
         }
         b.cfg.validate()?;
         Ok(b.cfg)
@@ -432,6 +453,16 @@ impl SimConfig {
         // keep their historical canonical bytes and cache keys.
         if let Some(c) = &self.classes {
             j.set("classes", c.to_canonical_json());
+        }
+        // And for execution: the key is emitted only for the non-default
+        // pipelined mode, so sequential configs (explicit or implicit)
+        // keep their historical canonical bytes and cache keys.
+        if self.execution == ExecutionMode::Pipelined {
+            j.set("execution", self.execution.label().into());
+        }
+        // The clamp opt-in follows the same only-when-set contract.
+        if self.clamp_trace_class_ids {
+            j.set("clamp_trace_class_ids", true.into());
         }
         j
     }
@@ -701,6 +732,8 @@ impl Default for SimConfigBuilder {
                 scenario: None,
                 autoscale: None,
                 classes: None,
+                execution: ExecutionMode::Sequential,
+                clamp_trace_class_ids: false,
             },
         }
     }
@@ -785,6 +818,11 @@ impl SimConfigBuilder {
     /// Attach a multi-tenant request-classes block.
     pub fn classes(mut self, c: ClassesConfig) -> Self {
         self.cfg.classes = Some(c);
+        self
+    }
+    /// Set the round execution mode (sequential | pipelined).
+    pub fn execution(mut self, e: ExecutionMode) -> Self {
+        self.cfg.execution = e;
         self
     }
     /// Finalize (panics on invalid combinations — builder misuse is a bug).
@@ -1261,6 +1299,61 @@ scenario:
         assert!(err.contains("autoscale"), "{err}");
         let with_block = format!("{y}autoscale:\n  policy:\n    kind: scheduled\n");
         SimConfig::from_yaml(&with_block).unwrap();
+    }
+
+    /// ISSUE 8 satellite: the sequential execution mode is the byte-level
+    /// identity — an absent `execution:` key, and an explicit
+    /// `execution: sequential`, must both keep the historical canonical
+    /// bytes (and therefore cache keys); only `pipelined` forks them.
+    #[test]
+    fn execution_absent_equals_sequential_canonical_json() {
+        let plain = SimConfig::builder().build();
+        assert_eq!(plain.execution, ExecutionMode::Sequential);
+        assert!(plain.to_canonical_json().get("execution").is_none());
+        let explicit = SimConfig::from_yaml("execution: sequential\n").unwrap();
+        assert_eq!(
+            plain.to_canonical_json().to_string_canonical(),
+            explicit.to_canonical_json().to_string_canonical()
+        );
+        let piped = SimConfig::from_yaml("execution: pipelined\n").unwrap();
+        assert_eq!(piped.execution, ExecutionMode::Pipelined);
+        assert_eq!(
+            piped.to_canonical_json().get("execution").and_then(Json::as_str),
+            Some("pipelined")
+        );
+        assert_ne!(
+            plain.to_canonical_json().to_string_canonical(),
+            piped.to_canonical_json().to_string_canonical()
+        );
+        // Builder route agrees with the YAML route.
+        let built = SimConfig::builder().execution(ExecutionMode::Pipelined).build();
+        assert_eq!(
+            built.to_canonical_json().to_string_canonical(),
+            piped.to_canonical_json().to_string_canonical()
+        );
+        // Unknown spellings are named errors, not silent defaults.
+        let err = SimConfig::from_yaml("execution: overlapped\n").unwrap_err();
+        assert!(err.contains("unknown execution mode"), "{err}");
+    }
+
+    /// The clamp opt-in follows the same only-when-set byte contract.
+    #[test]
+    fn clamp_opt_in_is_absent_by_default_and_forks_bytes_when_set() {
+        let plain = SimConfig::builder().build();
+        assert!(!plain.clamp_trace_class_ids);
+        assert!(plain.to_canonical_json().get("clamp_trace_class_ids").is_none());
+        let clamped = SimConfig::from_yaml("clamp_trace_class_ids: true\n").unwrap();
+        assert!(clamped.clamp_trace_class_ids);
+        assert_ne!(
+            plain.to_canonical_json().to_string_canonical(),
+            clamped.to_canonical_json().to_string_canonical()
+        );
+        // `false` is the default: identical bytes.
+        let off = SimConfig::from_yaml("clamp_trace_class_ids: false\n").unwrap();
+        assert_eq!(
+            plain.to_canonical_json().to_string_canonical(),
+            off.to_canonical_json().to_string_canonical()
+        );
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!
 //! Every runner-backed family (fig5, fig6, fig7/8, fig9/10, table2, the
 //! scenario-driven `agility` family, the autoscale-driven
-//! `elasticity` family, and the multi-tenant `fairness` family)
+//! `elasticity` family, the multi-tenant `fairness` family, and the
+//! execution-mode `pipeline` family)
 //! executes through `sweep::run_cells_cached`, so all of them inherit
 //! `--cache-dir` (content-addressed per-cell persistence + kill-resume),
 //! `--threads`, and `--streaming` (bounded-memory cells for 1M+ request
@@ -21,6 +22,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7_8;
 pub mod fig9_10;
+pub mod pipeline;
 pub mod table2;
 
 pub use common::{ExpContext, Scale};
@@ -96,20 +98,20 @@ pub fn run_experiment_opts(
             "agility" => agility::run_cached(scale, seeds, &ctx),
             "elasticity" => elasticity::run_cached(scale, seeds, &ctx),
             "fairness" => fairness::run_cached(scale, seeds, &ctx),
+            "pipeline" => pipeline::run_cached(scale, seeds, &ctx),
             other => unreachable!("unrouted experiment '{other}'"),
         })
     };
     Ok(match exp {
-        "fig4" | "fig5" | "fig6" | "table2" | "agility" | "elasticity" | "fairness" => {
-            run_one(exp)?
-        }
+        "fig4" | "fig5" | "fig6" | "table2" | "agility" | "elasticity" | "fairness"
+        | "pipeline" => run_one(exp)?,
         "fig7" | "fig8" | "fig7_8" => run_one("fig7_8")?,
         "fig9" | "fig10" | "fig9_10" => run_one("fig9_10")?,
         "all" => {
             let mut out = String::new();
             for e in [
                 "fig4", "fig5", "fig6", "fig7_8", "fig9_10", "table2", "agility",
-                "elasticity", "fairness",
+                "elasticity", "fairness", "pipeline",
             ] {
                 out.push_str(&run_one(e)?);
                 out.push('\n');
@@ -119,7 +121,7 @@ pub fn run_experiment_opts(
         other => {
             return Err(format!(
                 "unknown experiment '{other}' (try: fig4 fig5 fig6 fig7 fig9 table2 \
-                 agility elasticity fairness all)"
+                 agility elasticity fairness pipeline all)"
             ))
         }
     })

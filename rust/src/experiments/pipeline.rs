@@ -1,0 +1,337 @@
+//! The "pipeline" experiment family (`dsd reproduce pipeline`): where
+//! does pipelined speculation beat the sequential
+//! draft → ship → wait round trip?
+//!
+//! Sequential execution leaves the drafter idle for a full RTT (plus
+//! uplink serialization) every round; pipelined execution
+//! ([`ExecutionMode::Pipelined`]) spends that window drafting the next
+//! speculative block, at the price of re-drafting — metered as
+//! `wasted_draft_tokens` / `wasted_uplink_ms` — whenever the in-flight
+//! verdict comes back a rejection. Neither mode dominates:
+//!
+//! * **high RTT / slow uplink** — the hidden wait is long, so the
+//!   overlap gain swamps the occasional wasted draft and pipelined
+//!   wins on TPOT;
+//! * **low RTT under load** — there is little wait to hide, but the
+//!   speculative drafts still occupy edge drafters that other requests
+//!   are queueing for, so pipelining can give *back* throughput;
+//! * **window γ** scales both sides: a larger static window lengthens
+//!   the draft being overlapped *and* the work thrown away per
+//!   rejection.
+//!
+//! The family sweeps that three-axis frontier — RTT × uplink bandwidth
+//! × static window γ — running each knob point under both execution
+//! modes on the paper's §5.2 cluster, and reports per point the
+//! sequential vs pipelined mean TPOT and throughput plus the TPOT
+//! speedup. A footer summarizes the crossover frontier: for each
+//! (bandwidth, γ) column, the smallest RTT at which pipelined first
+//! wins.
+//!
+//! Both modes of a knob point share one config that differs only in
+//! the `execution:` key, so every row difference is attributable to
+//! execution mode — the same differs-only-in-the-knob discipline as
+//! the fairness family's admission strategies.
+//!
+//! Cells run through the cached sweep runner, so the family inherits
+//! `--cache-dir`, `--threads`, and `--streaming` like every other
+//! figure.
+
+use super::common::{mean_metric, paper_config, point_grid, run_points, save_rows, ExpContext, Row, Scale};
+use crate::config::{BatchingKind, RoutingKind, SimConfig, WindowKind};
+use crate::specdec::ExecutionMode;
+use crate::util::table::{fnum, Table};
+
+/// Swept round-trip times, ms (LAN edge → metro → cross-region).
+const RTTS: [f64; 3] = [5.0, 40.0, 160.0];
+/// Swept uplink bandwidths, Mbit/s (constrained cellular vs broadband).
+const BANDWIDTHS: [f64; 2] = [2.0, 100.0];
+/// Swept static speculation windows.
+const GAMMAS: [usize; 2] = [2, 8];
+/// Edge drafter count (the §5.2 default fleet, shared with fig5/fig6).
+const DRAFTERS: usize = 60;
+
+/// The knob axis in declaration (and row) order: RTT outermost, then
+/// bandwidth, then γ.
+pub fn knob_points() -> Vec<(f64, f64, usize)> {
+    let mut pts = Vec::new();
+    for &rtt in &RTTS {
+        for &bw in &BANDWIDTHS {
+            for &gamma in &GAMMAS {
+                pts.push((rtt, bw, gamma));
+            }
+        }
+    }
+    pts
+}
+
+/// One knob point's config under one execution mode. Everything except
+/// `execution` (and the knob values themselves) is the paper default.
+pub fn point_config(
+    rtt_ms: f64,
+    bandwidth_mbps: f64,
+    gamma: usize,
+    mode: ExecutionMode,
+    scale: Scale,
+    seed: u64,
+) -> SimConfig {
+    let mut cfg = paper_config(
+        "gsm8k",
+        DRAFTERS,
+        rtt_ms,
+        RoutingKind::Jsq,
+        BatchingKind::Lab,
+        WindowKind::Static(gamma),
+        scale,
+        seed,
+    );
+    cfg.network.bandwidth_mbps = bandwidth_mbps;
+    cfg.execution = mode;
+    cfg
+}
+
+/// One knob point's result row, seed-averaged across both modes.
+#[derive(Clone, Debug)]
+pub struct PipelineRow {
+    /// Round-trip time, ms.
+    pub rtt_ms: f64,
+    /// Uplink bandwidth, Mbit/s.
+    pub bandwidth_mbps: f64,
+    /// Static speculation window.
+    pub gamma: usize,
+    /// Sequential-mode mean TPOT, ms.
+    pub seq_tpot_ms: f64,
+    /// Pipelined-mode mean TPOT, ms.
+    pub pipe_tpot_ms: f64,
+    /// Sequential-mode throughput, req/s.
+    pub seq_throughput_rps: f64,
+    /// Pipelined-mode throughput, req/s.
+    pub pipe_throughput_rps: f64,
+}
+
+impl PipelineRow {
+    /// TPOT speedup of pipelined over sequential (>1 ⇒ pipelined wins).
+    pub fn speedup(&self) -> f64 {
+        self.seq_tpot_ms / self.pipe_tpot_ms
+    }
+
+    /// Which mode wins this point on mean TPOT.
+    pub fn winner(&self) -> &'static str {
+        if self.pipe_tpot_ms < self.seq_tpot_ms {
+            "pipelined"
+        } else {
+            "sequential"
+        }
+    }
+}
+
+/// Run the full family on the cached runner: two grids (sequential,
+/// pipelined) per knob point, batched through a single `run_points`
+/// call sharing the thread pool and the cell cache.
+pub fn sweep_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> Vec<PipelineRow> {
+    let pts = knob_points();
+    let mut grids = Vec::with_capacity(pts.len() * 2);
+    for &(rtt, bw, gamma) in &pts {
+        for mode in [ExecutionMode::Sequential, ExecutionMode::Pipelined] {
+            grids.push(point_grid(
+                point_config(rtt, bw, gamma, mode, scale, seeds[0]),
+                seeds,
+                ctx.streaming,
+            ));
+        }
+    }
+    let (points, stats) = run_points(&grids, seeds.len(), ctx);
+    if ctx.cache.is_some() {
+        eprintln!("[pipeline] {}", stats.describe());
+    }
+    pts.iter()
+        .zip(points.chunks(2))
+        .map(|(&(rtt, bw, gamma), pair)| PipelineRow {
+            rtt_ms: rtt,
+            bandwidth_mbps: bw,
+            gamma,
+            seq_tpot_ms: mean_metric(&pair[0], |m| m.mean_tpot_ms),
+            pipe_tpot_ms: mean_metric(&pair[1], |m| m.mean_tpot_ms),
+            seq_throughput_rps: mean_metric(&pair[0], |m| m.throughput_rps),
+            pipe_throughput_rps: mean_metric(&pair[1], |m| m.throughput_rps),
+        })
+        .collect()
+}
+
+/// The crossover frontier: for each (bandwidth, γ) column in
+/// declaration order, the smallest swept RTT at which pipelined first
+/// beats sequential on mean TPOT (rows are RTT-sorted by
+/// construction), or a note that it never does.
+pub fn frontier_lines(rows: &[PipelineRow]) -> String {
+    let mut out = String::from("crossover frontier (mean TPOT):\n");
+    for &bw in &BANDWIDTHS {
+        for &gamma in &GAMMAS {
+            let first_win = rows
+                .iter()
+                .filter(|r| r.bandwidth_mbps == bw && r.gamma == gamma)
+                .find(|r| r.winner() == "pipelined");
+            match first_win {
+                Some(r) => out.push_str(&format!(
+                    "  bw {} Mbps, γ={}: pipelined wins from rtt ≥ {} ms\n",
+                    fnum(bw, 0),
+                    gamma,
+                    fnum(r.rtt_ms, 0)
+                )),
+                None => out.push_str(&format!(
+                    "  bw {} Mbps, γ={}: sequential wins at every swept rtt\n",
+                    fnum(bw, 0),
+                    gamma
+                )),
+            }
+        }
+    }
+    out
+}
+
+/// Run and render.
+pub fn run(scale: Scale, seeds: &[u64]) -> String {
+    run_cached(scale, seeds, &ExpContext::default())
+}
+
+/// [`run`] on an explicit runner context (`dsd reproduce --cache-dir`).
+pub fn run_cached(scale: Scale, seeds: &[u64], ctx: &ExpContext) -> String {
+    let rows = sweep_cached(scale, seeds, ctx);
+    let mut table = Table::new(&[
+        "rtt ms",
+        "bw Mbps",
+        "γ",
+        "seq tpot ms",
+        "pipe tpot ms",
+        "speedup",
+        "seq tput r/s",
+        "pipe tput r/s",
+        "winner",
+    ])
+    .with_title(
+        "Pipelined vs sequential speculation — TPOT crossover over \
+         RTT × uplink bandwidth × window γ",
+    );
+    let mut out_rows = Vec::new();
+    for r in &rows {
+        table.row(vec![
+            fnum(r.rtt_ms, 0),
+            fnum(r.bandwidth_mbps, 0),
+            format!("{}", r.gamma),
+            fnum(r.seq_tpot_ms, 2),
+            fnum(r.pipe_tpot_ms, 2),
+            fnum(r.speedup(), 3),
+            fnum(r.seq_throughput_rps, 1),
+            fnum(r.pipe_throughput_rps, 1),
+            r.winner().into(),
+        ]);
+        out_rows.push(Row {
+            exp: "pipeline".into(),
+            labels: vec![
+                ("rtt_ms".into(), fnum(r.rtt_ms, 0)),
+                ("bandwidth_mbps".into(), fnum(r.bandwidth_mbps, 0)),
+                ("gamma".into(), format!("{}", r.gamma)),
+                ("winner".into(), r.winner().into()),
+            ],
+            values: vec![
+                ("seq_tpot_ms".into(), r.seq_tpot_ms),
+                ("pipe_tpot_ms".into(), r.pipe_tpot_ms),
+                ("speedup".into(), r.speedup()),
+                ("seq_throughput_rps".into(), r.seq_throughput_rps),
+                ("pipe_throughput_rps".into(), r.pipe_throughput_rps),
+            ],
+        });
+    }
+    save_rows("pipeline", &out_rows);
+    let mut out = table.render();
+    out.push_str(&frontier_lines(&rows));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_family_produces_all_rows_in_knob_order() {
+        let scale = Scale(0.05);
+        let rows = sweep_cached(scale, &[1], &ExpContext::default());
+        let pts = knob_points();
+        assert_eq!(rows.len(), pts.len());
+        for (r, &(rtt, bw, gamma)) in rows.iter().zip(&pts) {
+            assert_eq!(r.rtt_ms, rtt);
+            assert_eq!(r.bandwidth_mbps, bw);
+            assert_eq!(r.gamma, gamma);
+            assert!(
+                r.seq_tpot_ms.is_finite() && r.seq_tpot_ms > 0.0,
+                "seq tpot at rtt={rtt} bw={bw} γ={gamma}: {}",
+                r.seq_tpot_ms
+            );
+            assert!(
+                r.pipe_tpot_ms.is_finite() && r.pipe_tpot_ms > 0.0,
+                "pipe tpot at rtt={rtt} bw={bw} γ={gamma}: {}",
+                r.pipe_tpot_ms
+            );
+            assert!(r.seq_throughput_rps > 0.0 && r.pipe_throughput_rps > 0.0);
+            assert!(r.speedup().is_finite() && r.speedup() > 0.0);
+        }
+        let frontier = frontier_lines(&rows);
+        assert!(frontier.contains("crossover frontier"));
+        assert_eq!(
+            frontier.lines().count(),
+            1 + BANDWIDTHS.len() * GAMMAS.len(),
+            "one frontier line per (bandwidth, γ) column"
+        );
+    }
+
+    #[test]
+    fn mode_configs_differ_only_in_execution() {
+        // Byte-level discipline: a knob point's two configs must render
+        // identical canonical JSON once the pipelined one is switched
+        // back to sequential — so any row difference is the execution
+        // mode's doing, nothing else's.
+        let scale = Scale(0.05);
+        for &(rtt, bw, gamma) in &knob_points() {
+            let seq = point_config(rtt, bw, gamma, ExecutionMode::Sequential, scale, 1);
+            let pipe = point_config(rtt, bw, gamma, ExecutionMode::Pipelined, scale, 1);
+            assert_eq!(seq.execution, ExecutionMode::Sequential);
+            assert_eq!(pipe.execution, ExecutionMode::Pipelined);
+            let seq_json = seq.to_canonical_json().to_string_compact();
+            let pipe_json = pipe.to_canonical_json().to_string_compact();
+            assert!(!seq_json.contains("\"execution\""));
+            assert!(pipe_json.contains("\"execution\":\"pipelined\""));
+            let mut neutered = pipe.clone();
+            neutered.execution = ExecutionMode::Sequential;
+            assert_eq!(
+                seq_json,
+                neutered.to_canonical_json().to_string_compact(),
+                "rtt={rtt} bw={bw} γ={gamma}: configs differ beyond execution"
+            );
+        }
+    }
+
+    #[test]
+    fn high_rtt_slow_link_favors_pipelining() {
+        // The family's reason to exist: at the harshest swept corner
+        // (cross-region RTT over the constrained uplink, wide window)
+        // the hidden round-trip wait is the dominant TPOT term, so
+        // pipelined must not meaningfully lose to sequential there. A
+        // 10% multiplicative tolerance absorbs batch-composition noise
+        // at tiny scale — the crossover *magnitude* is the golden's
+        // job, not this test's.
+        let scale = Scale(0.05);
+        let rows = sweep_cached(scale, &[1], &ExpContext::default());
+        let corner = rows
+            .iter()
+            .find(|r| {
+                r.rtt_ms == RTTS[RTTS.len() - 1]
+                    && r.bandwidth_mbps == BANDWIDTHS[0]
+                    && r.gamma == GAMMAS[GAMMAS.len() - 1]
+            })
+            .expect("harshest knob point present");
+        assert!(
+            corner.pipe_tpot_ms <= corner.seq_tpot_ms * 1.10,
+            "pipelined {} vs sequential {} at the harshest corner",
+            corner.pipe_tpot_ms,
+            corner.seq_tpot_ms
+        );
+    }
+}

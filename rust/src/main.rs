@@ -5,10 +5,11 @@
 //!                  scripted dynamics: flash crowds, link churn, failures;
 //!                  --autoscale adds an elastic target pool with cost
 //!                  accounting; --classes adds multi-tenant request classes
-//!                  with priority-aware admission)
+//!                  with priority-aware admission; --execution picks the
+//!                  round engine: sequential | pipelined)
 //!   sweep          expand a scenario grid and run every cell in parallel
 //!   reproduce      regenerate a paper table/figure (fig4..fig10, table2,
-//!                  agility, elasticity, fairness, all)
+//!                  agility, elasticity, fairness, pipeline, all)
 //!   sweep-dataset  generate the AWC training dataset (paper §4.2)
 //!   trace-gen      emit a synthetic workload trace (Table 1 schema)
 //!   serve          run the real edge-cloud serving path on AOT artifacts
@@ -72,6 +73,14 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
              block in --config)",
             None,
         )
+        .opt(
+            "execution",
+            "round execution mode: sequential (default; draft, ship, wait for the \
+             verdict) or pipelined (draft the next window against the in-flight \
+             verdict; rejections invalidate it and meter wasted work) — overrides \
+             any execution key in --config",
+            None,
+        )
         .opt("seed", "override RNG seed", None)
         .flag(
             "streaming",
@@ -100,6 +109,9 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     if a.get("scenario").is_some() || a.get("autoscale").is_some() || a.get("classes").is_some()
     {
         cfg.validate()?;
+    }
+    if let Some(mode) = a.get("execution") {
+        cfg.execution = dsd::specdec::ExecutionMode::parse(mode)?;
     }
     if let Some(seed) = a.get_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = seed;
@@ -339,7 +351,7 @@ fn cmd_reproduce(rest: &[String]) -> Result<(), String> {
     let spec = Command::new("reproduce", "regenerate a paper table/figure")
         .opt(
             "exp",
-            "fig4|fig5|fig6|fig7|fig9|table2|agility|elasticity|fairness|all",
+            "fig4|fig5|fig6|fig7|fig9|table2|agility|elasticity|fairness|pipeline|all",
             Some("all"),
         )
         .opt("scale", "request-count scale factor (1.0 = paper)", Some("1.0"))

@@ -110,6 +110,15 @@ pub struct SystemMetrics {
     /// `[q_depth_util, α_recent, RTT_recent, TPOT_recent, γ_prev]` —
     /// consumed by the AWC training-dataset generator (paper §4.2).
     pub mean_features: [f64; 5],
+    /// Draft tokens thrown away by pipelined execution: speculative
+    /// windows invalidated by a rejection (or request completion)
+    /// before their verdict arrived. Always 0 under `execution:
+    /// sequential`, so sequential reports keep their historical bytes
+    /// (serialized only when work was actually wasted).
+    pub wasted_draft_tokens: u64,
+    /// Uplink transmission time spent shipping those invalidated
+    /// windows, ms (draft-only invalidations contribute 0 here).
+    pub wasted_uplink_ms: f64,
     /// Elastic-capacity accounting (target-seconds, cost, the
     /// provisioned-count step series) — present only for runs with an
     /// `autoscale:` block, so autoscale-free reports keep their
@@ -491,6 +500,16 @@ impl SimReport {
             .with("completed", self.system.completed.into())
             .with("events_processed", self.system.events_processed.into())
             .with("wall_ms", self.system.wall_ms.into());
+        // Pipelining-free reports keep their historical bytes: the
+        // waste counters appear only when an invalidated speculative
+        // window actually burned work (sequential runs never do).
+        if self.system.wasted_draft_tokens > 0 || self.system.wasted_uplink_ms != 0.0 {
+            system.set(
+                "wasted_draft_tokens",
+                self.system.wasted_draft_tokens.into(),
+            );
+            system.set("wasted_uplink_ms", self.system.wasted_uplink_ms.into());
+        }
         // Autoscale-free reports keep their historical bytes: the key
         // exists only when an elastic pool actually ran.
         if let Some(a) = &self.system.autoscale {
@@ -569,6 +588,30 @@ mod tests {
         assert_eq!(j.get("requests").unwrap().as_arr().unwrap().len(), 1);
         // Round-trips through text.
         let text = j.to_string_pretty();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    /// ISSUE 8: the pipelined waste counters must stay entirely off the
+    /// wire for sequential runs (historical report bytes unchanged) and
+    /// appear, with their exact totals, once any speculative work burns.
+    #[test]
+    fn wasted_counters_serialized_only_when_nonzero() {
+        let mut rep = SimReport {
+            requests: vec![req(0, 1.0, 2.0)],
+            system: SystemMetrics::default(),
+        };
+        let clean = rep.to_json();
+        let sys = clean.get("system").unwrap();
+        assert!(sys.get("wasted_draft_tokens").is_none());
+        assert!(sys.get("wasted_uplink_ms").is_none());
+        rep.system.wasted_draft_tokens = 9;
+        rep.system.wasted_uplink_ms = 3.25;
+        let dirty = rep.to_json();
+        let sys = dirty.get("system").unwrap();
+        assert_eq!(sys.get("wasted_draft_tokens").and_then(Json::as_usize), Some(9));
+        assert!(sys.get("wasted_uplink_ms").is_some());
+        let text = dirty.to_string_pretty();
+        assert!(text.contains("wasted_draft_tokens"));
         assert!(Json::parse(&text).is_ok());
     }
 

@@ -66,6 +66,16 @@ pub trait MetricsSink: Send {
     /// bounded either way), and the differential harness compares the
     /// two.
     fn record_capacity(&mut self, _at_ms: f64, _provisioned: u32) {}
+
+    /// Fold the cost of one invalidated speculative window — `execution:
+    /// pipelined` only (sequential runs never call this). `draft_tokens`
+    /// is the window's drafted-but-discarded token count; `uplink_ms`
+    /// the uplink delay it paid before dying (0 if it never shipped).
+    /// The full sink ignores this: the simulator's own counters reach
+    /// its report through [`SystemMetrics`](super::SystemMetrics). The
+    /// streaming sink accumulates here so both sides expose the same
+    /// totals (parity-locked in `tests/streaming_parity.rs`).
+    fn record_wasted(&mut self, _draft_tokens: u32, _uplink_ms: f64) {}
 }
 
 /// Retains every per-request record (exact statistics, O(requests) memory).
@@ -412,6 +422,11 @@ pub struct StreamingSink {
     ts: TimeSeries,
     /// One entry per declared request class; empty when single-tenant.
     per_class: Vec<ClassStats>,
+    /// Draft tokens burned by invalidated speculative windows
+    /// (pipelined execution; 0 — and unreported — otherwise).
+    wasted_draft_tokens: u64,
+    /// Uplink milliseconds burned by invalidated speculative windows.
+    wasted_uplink_ms: f64,
 }
 
 impl Default for StreamingSink {
@@ -454,6 +469,8 @@ impl StreamingSink {
             slo_attained: vec![0; n_slos],
             ts: TimeSeries::new(cfg.time_series),
             per_class,
+            wasted_draft_tokens: 0,
+            wasted_uplink_ms: 0.0,
         }
     }
 
@@ -510,6 +527,8 @@ impl StreamingSink {
                     time_series: c.ts.summary(),
                 })
                 .collect(),
+            wasted_draft_tokens: self.wasted_draft_tokens,
+            wasted_uplink_ms: self.wasted_uplink_ms,
         }
     }
 }
@@ -567,6 +586,11 @@ impl MetricsSink for StreamingSink {
 
     fn record_capacity(&mut self, at_ms: f64, provisioned: u32) {
         self.ts.fold_capacity(at_ms, provisioned);
+    }
+
+    fn record_wasted(&mut self, draft_tokens: u32, uplink_ms: f64) {
+        self.wasted_draft_tokens += draft_tokens as u64;
+        self.wasted_uplink_ms += uplink_ms;
     }
 }
 
@@ -657,6 +681,12 @@ pub struct StreamingSummary {
     /// single-tenant runs — the `per_class` JSON key is then omitted so
     /// classless summaries keep their historical bytes.
     pub per_class: Vec<ClassSummary>,
+    /// Draft tokens burned by invalidated speculative windows
+    /// (pipelined execution). The JSON keys are omitted when no waste
+    /// was folded, so sequential summaries keep their historical bytes.
+    pub wasted_draft_tokens: u64,
+    /// Uplink milliseconds burned by invalidated speculative windows.
+    pub wasted_uplink_ms: f64,
 }
 
 impl StreamingSummary {
@@ -691,6 +721,12 @@ impl StreamingSummary {
                 "per_class",
                 Json::Arr(self.per_class.iter().map(|c| c.to_json()).collect()),
             );
+        }
+        // Keys present only when waste was folded (pipelined runs with
+        // at least one invalidated window) — same pattern as per_class.
+        if self.wasted_draft_tokens > 0 || self.wasted_uplink_ms != 0.0 {
+            j.set("wasted_draft_tokens", self.wasted_draft_tokens.into());
+            j.set("wasted_uplink_ms", self.wasted_uplink_ms.into());
         }
         j
     }
@@ -740,6 +776,12 @@ impl StreamingReport {
         // reports otherwise).
         if let Some(a) = &self.system.autoscale {
             system.set("autoscale", a.to_json());
+        }
+        // Wasted-speculation counters appear only when nonzero
+        // (pipelined runs), mirroring the full report's emitter.
+        if self.system.wasted_draft_tokens > 0 || self.system.wasted_uplink_ms != 0.0 {
+            system.set("wasted_draft_tokens", self.system.wasted_draft_tokens.into());
+            system.set("wasted_uplink_ms", self.system.wasted_uplink_ms.into());
         }
         Json::obj()
             .with("system", system)
@@ -982,6 +1024,32 @@ mod tests {
         let sum = s.summary();
         assert!(sum.per_class.is_empty());
         assert!(!sum.to_json().to_string_compact().contains("per_class"));
+    }
+
+    #[test]
+    fn wasted_speculation_folds_and_keys_stay_off_sequential_bytes() {
+        // Sequential runs never call record_wasted: the counters stay 0
+        // and the JSON keys never appear (historical bytes preserved).
+        let mut plain = StreamingSink::default();
+        plain.record(&req(0, 10.0, 1.0, 0.8));
+        let sum = plain.summary();
+        assert_eq!(sum.wasted_draft_tokens, 0);
+        assert_eq!(sum.wasted_uplink_ms, 0.0);
+        let j = sum.to_json().to_string_compact();
+        assert!(!j.contains("wasted_draft_tokens"));
+        assert!(!j.contains("wasted_uplink_ms"));
+        // Pipelined invalidations accumulate exactly and surface both
+        // keys together.
+        let mut s = StreamingSink::default();
+        s.record(&req(0, 10.0, 1.0, 0.8));
+        s.record_wasted(4, 12.5);
+        s.record_wasted(3, 0.0); // invalidated before it shipped
+        let sum = s.summary();
+        assert_eq!(sum.wasted_draft_tokens, 7);
+        assert!((sum.wasted_uplink_ms - 12.5).abs() < 1e-12);
+        let j = sum.to_json().to_string_compact();
+        assert!(j.contains("\"wasted_draft_tokens\":7"));
+        assert!(j.contains("\"wasted_uplink_ms\""));
     }
 
     #[test]

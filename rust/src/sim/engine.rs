@@ -28,10 +28,12 @@ impl<E> PartialOrd for Entry<E> {
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap behaviour on BinaryHeap (max-heap).
+        // total_cmp, not partial_cmp: a NaN time must still occupy a
+        // fixed place in the order (IEEE total order puts it past +∞)
+        // rather than collapsing to Equal and corrupting sift paths.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -84,11 +86,12 @@ impl<E> EventQueue<E> {
     /// Schedule `payload` at absolute time `at` (clamped to now —
     /// scheduling in the past is a bug in debug builds).
     ///
-    /// Non-finite times are rejected: a NaN `at` would fall through the
-    /// `partial_cmp` fallback in `Entry::cmp` as `Ordering::Equal` and
-    /// silently corrupt heap order, and ±∞ would freeze or teleport the
-    /// clock. Debug builds assert; release builds clamp to `now` so one
-    /// bad arithmetic result cannot poison the whole simulation.
+    /// Non-finite times are rejected: ±∞ would freeze or teleport the
+    /// clock, and a NaN `at` — while no longer able to corrupt heap
+    /// order now that `Entry::cmp` uses `f64::total_cmp` — would sort
+    /// past every finite event and stall the queue. Debug builds
+    /// assert; release builds clamp to `now` so one bad arithmetic
+    /// result cannot poison the whole simulation.
     pub fn schedule(&mut self, at: f64, payload: E) {
         debug_assert!(at.is_finite(), "non-finite event time: {at}");
         debug_assert!(
@@ -209,6 +212,38 @@ mod tests {
             order,
             vec![(2.0, "nan"), (2.0, "inf"), (2.0, "ninf"), (3.0, "fine")]
         );
+    }
+
+    /// Regression (ISSUE 8 satellite): `Entry::cmp` used to fall back to
+    /// `Ordering::Equal` via `partial_cmp` when either time was NaN,
+    /// which violates the strict-weak-ordering contract `BinaryHeap`
+    /// relies on and could silently corrupt sift paths. With
+    /// `f64::total_cmp` a NaN time keeps a fixed rank (past +∞), so even
+    /// entries pushed straight into the heap — bypassing `schedule`'s
+    /// clamp — pop in a deterministic total order.
+    #[test]
+    fn entry_ordering_is_total_under_nan_times() {
+        let mut heap = BinaryHeap::new();
+        for (seq, time) in [
+            (0u64, f64::NAN),
+            (1, 1.0),
+            (2, f64::INFINITY),
+            (3, f64::NAN),
+            (4, 0.0),
+            (5, f64::NEG_INFINITY),
+        ] {
+            heap.push(Entry { time, seq, payload: () });
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|e| e.seq)).collect();
+        // IEEE total order: -∞ < 0 < 1 < +∞ < NaN, NaN ties by seq.
+        assert_eq!(order, vec![5, 4, 1, 2, 0, 3]);
+        // NaN compares unequal-and-ordered against itself and finite
+        // times — never Equal (the old bug collapsed all of these).
+        let nan = Entry { time: f64::NAN, seq: 7, payload: () };
+        let fin = Entry { time: 3.0, seq: 7, payload: () };
+        assert_ne!(nan.cmp(&fin), Ordering::Equal);
+        assert_ne!(fin.cmp(&nan), Ordering::Equal);
+        assert_eq!(nan.cmp(&fin).reverse(), fin.cmp(&nan));
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::policies::{
 };
 use crate::scenario::{ArrivalPlan, PoolTransition, RuntimeDynamics, ScenarioEvent, TimedEvent};
 use crate::sim::engine::EventQueue;
-use crate::specdec::SpeculationState;
+use crate::specdec::{ExecutionMode, SpeculationState};
 use crate::trace::{dataset_by_name, Trace};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Ema;
@@ -70,8 +70,11 @@ enum Ev {
     DrafterFree(usize),
     /// Drafter finished a task (`gamma == 0` means edge prefill).
     DrafterTaskDone { req: usize, gamma: u32 },
-    /// Draft tokens arrived at the target (join verify queue).
-    UplinkArrive { req: usize, gamma: u32, sent_ms: f64 },
+    /// Draft tokens arrived at the target (join verify queue). `spec`
+    /// marks a pipelined speculative window, which parks at the target
+    /// instead of joining the verify queue until its verdict releases
+    /// it (sequential mode never sets it).
+    UplinkArrive { req: usize, gamma: u32, sent_ms: f64, spec: bool },
     /// Try to dispatch a batch on a target.
     TargetKick(usize),
     /// A target batch finished.
@@ -106,6 +109,45 @@ enum DrafterTask {
     Prefill(usize),
     /// Draft γ tokens.
     Draft { req: usize, gamma: u32 },
+}
+
+/// Lifecycle of one speculative window drafted against a verdict that
+/// has not come back yet (pipelined execution only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum InflightPhase {
+    /// The speculative draft is still running on the drafter.
+    Drafting,
+    /// Drafted and shipped eagerly; the uplink is in flight.
+    Uplink,
+    /// Arrived at the target and parked (not verify-eligible until the
+    /// outstanding verdict releases it).
+    Held,
+    /// Promoted to primary while still on the wire (its predecessor
+    /// fully accepted before it landed): on arrival it joins the verify
+    /// queue directly and the next speculative window spawns.
+    Promoted,
+    /// Invalidated while drafting: the pending [`Ev::DrafterTaskDone`]
+    /// absorbs this tombstone (cost already metered).
+    InvalidDraft,
+    /// Invalidated while shipping: the pending speculative
+    /// [`Ev::UplinkArrive`] absorbs this tombstone (cost already
+    /// metered). Distinct from [`InflightPhase::InvalidDraft`] so a
+    /// later primary-draft completion can never be mistaken for the
+    /// tombstone's terminal event.
+    InvalidShip,
+}
+
+/// Bookkeeping for the one in-flight speculative window a request may
+/// carry in pipelined execution.
+#[derive(Clone, Copy, Debug)]
+struct Inflight {
+    gamma: u32,
+    /// When the speculative window was shipped; promotion restores this
+    /// into `uplink_sent_ms` so the RTT EMA measures the true loop.
+    sent_ms: f64,
+    /// The uplink delay this window already paid (wasted if it dies).
+    uplink_ms: f64,
+    phase: InflightPhase,
 }
 
 /// Per-request live state.
@@ -147,6 +189,15 @@ struct Request {
     /// Service time of the last verify batch (subtracted from the loop
     /// time to estimate pure network RTT).
     last_verify_ms: f64,
+    /// Pipelined execution: the speculative window drafted against the
+    /// not-yet-verified verdict of the shipped window. Always `None` in
+    /// sequential mode.
+    inflight: Option<Inflight>,
+    /// A shipped window's verification verdict is still in flight.
+    awaiting_verdict: bool,
+    /// The last verified window was fully accepted, so a speculative
+    /// continuation built on it extends a valid prefix.
+    last_full_accept: bool,
 }
 
 impl Request {
@@ -239,6 +290,7 @@ impl Simulator {
                 }
             }
         };
+        check_trace_classes(&cfg, &trace)?;
         Ok(Simulator {
             cfg,
             topo,
@@ -247,7 +299,10 @@ impl Simulator {
         })
     }
 
-    /// Replace the workload with an in-memory trace.
+    /// Replace the workload with an in-memory trace. Out-of-range
+    /// `class_id`s in the injected trace are caught by the same
+    /// [`check_trace_classes`] gate at run time, since this constructor
+    /// is infallible.
     pub fn with_trace(mut self, trace: Trace) -> Self {
         self.trace = trace;
         self
@@ -298,6 +353,9 @@ impl Simulator {
     /// from the full completion-time sample). Errs when the window
     /// policy cannot be constructed.
     pub fn run_with<S: MetricsSink>(self, sink: S) -> Result<(S, SystemMetrics), String> {
+        // Re-checked here (not only in `try_new`) so traces injected via
+        // the infallible `with_trace` face the same class-id gate.
+        check_trace_classes(&self.cfg, &self.trace)?;
         let routing = make_routing(self.cfg.routing);
         let batching = make_batching(self.cfg.batching);
         let window = make_window(&self.cfg.window)?;
@@ -308,6 +366,31 @@ impl Simulator {
         let system = st.system_metrics();
         Ok((st.sink, system))
     }
+}
+
+/// Reject trace records whose `class_id` falls outside the declared
+/// tier range (class-free configs admit only tier 0). Historically such
+/// ids were silently clamped into range, which let a mislabeled trace
+/// masquerade as valid multi-tenant input; now the error names the
+/// offending record, matching the `class_rate_override` validation
+/// idiom. `clamp_trace_class_ids: true` restores the old clamping as an
+/// explicit opt-in.
+fn check_trace_classes(cfg: &SimConfig, trace: &Trace) -> Result<(), String> {
+    if cfg.clamp_trace_class_ids {
+        return Ok(());
+    }
+    let n_classes = cfg.classes.as_ref().map(|c| c.n_classes()).unwrap_or(1).max(1);
+    for (i, r) in trace.records.iter().enumerate() {
+        if r.class_id >= n_classes {
+            return Err(format!(
+                "trace record {i} carries class_id {} but only {n_classes} class(es) are \
+                 declared (declare the tier, fix the trace, or set \
+                 clamp_trace_class_ids: true to clamp out-of-range ids)",
+                r.class_id
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Steady-state throughput: interquartile completion rate (robust to
@@ -353,6 +436,14 @@ struct SimState<S: MetricsSink> {
     completed: usize,
     completed_tokens: u64,
     fused_only: bool,
+    /// Pipelined execution enabled (`execution: pipelined`). False keeps
+    /// every new branch below dead and the sequential engine
+    /// bit-identical to its pre-execution-mode trajectory.
+    pipelined: bool,
+    /// Draft tokens burned by invalidated speculative windows.
+    wasted_draft_tokens: u64,
+    /// Uplink milliseconds burned shipping windows that were invalidated.
+    wasted_uplink_ms: f64,
     /// Live (scenario-mutable) view of links, target slowdowns, and
     /// pool availability. Scenario-free it equals the frozen topology
     /// bit for bit.
@@ -435,8 +526,11 @@ impl<S: MetricsSink> SimState<S> {
             .enumerate()
             .map(|(id, r)| Request {
                 id,
-                // Clamp stray trace ids into the declared tier range
-                // (class-free configs pin every request to tier 0).
+                // In range by construction: `check_trace_classes`
+                // rejected out-of-range ids before this point unless
+                // the config opted into clamping, so the `min` only
+                // bites under `clamp_trace_class_ids: true` (class-free
+                // configs pin every request to tier 0 either way).
                 class: r.class_id.min(n_classes.saturating_sub(1)),
                 drafter: r.drafter_id % n_drafters,
                 target: usize::MAX,
@@ -457,6 +551,9 @@ impl<S: MetricsSink> SimState<S> {
                 gamma_prev: 4,
                 uplink_sent_ms: 0.0,
                 last_verify_ms: 0.0,
+                inflight: None,
+                awaiting_verdict: false,
+                last_full_accept: false,
             })
             .collect();
         let targets = (0..n_targets)
@@ -500,6 +597,7 @@ impl<S: MetricsSink> SimState<S> {
             }
         }
         let fused_only = matches!(cfg.window, WindowKind::FusedOnly);
+        let pipelined = cfg.execution == ExecutionMode::Pipelined;
         let seed = cfg.seed;
         let keep_gammas = sink.keep_gamma_history();
         let mt = cfg.classes.as_ref().map(|c| MtRuntime {
@@ -541,6 +639,9 @@ impl<S: MetricsSink> SimState<S> {
             completed: 0,
             completed_tokens: 0,
             fused_only,
+            pipelined,
+            wasted_draft_tokens: 0,
+            wasted_uplink_ms: 0.0,
             dynamics,
             scenario_events,
             autoscale,
@@ -625,7 +726,11 @@ impl<S: MetricsSink> SimState<S> {
             }
             Ev::DrafterFree(did) => self.on_drafter_free(did),
             Ev::DrafterTaskDone { req, gamma } => self.on_drafter_task_done(now, req, gamma),
-            Ev::UplinkArrive { req, gamma, sent_ms } => {
+            Ev::UplinkArrive { req, gamma, sent_ms, spec } => {
+                if spec {
+                    self.on_spec_uplink_arrive(req);
+                    return;
+                }
                 let tid = self.routable_target(req);
                 self.requests[req].uplink_sent_ms = sent_ms;
                 self.targets[tid].verify_q.push_back((req, gamma, now));
@@ -934,6 +1039,24 @@ impl<S: MetricsSink> SimState<S> {
                         continue;
                     }
                     if was_draft {
+                        // A still-queued speculative draft dies with its
+                        // pool: meter it (tombstones were metered at
+                        // invalidation) and let the outstanding verdict
+                        // drive the request — no extra round here.
+                        if self.pipelined {
+                            if let Some(inf) = self.requests[rid].inflight {
+                                if matches!(
+                                    inf.phase,
+                                    InflightPhase::Drafting | InflightPhase::InvalidDraft
+                                ) {
+                                    self.requests[rid].inflight = None;
+                                    if inf.phase == InflightPhase::Drafting {
+                                        self.meter_waste(inf.gamma, 0.0);
+                                    }
+                                    continue;
+                                }
+                            }
+                        }
                         // The draft never ran; re-home to the target.
                         // `start_round` sees the dead drafter and forces
                         // fused execution.
@@ -1056,6 +1179,26 @@ impl<S: MetricsSink> SimState<S> {
             // and it takes no further work. A finished draft re-homes
             // the request to fused execution; a finished edge prefill
             // just unblocks the round (which will also land fused).
+            if self.pipelined && gamma > 0 {
+                if let Some(inf) = self.requests[rid].inflight {
+                    match inf.phase {
+                        InflightPhase::Drafting => {
+                            // A speculative draft died with the device:
+                            // meter it here; the outstanding verdict
+                            // still drives the request forward.
+                            self.requests[rid].inflight = None;
+                            self.meter_waste(inf.gamma, 0.0);
+                            return;
+                        }
+                        InflightPhase::InvalidDraft => {
+                            // Tombstone absorption (already metered).
+                            self.requests[rid].inflight = None;
+                            return;
+                        }
+                        _ => {}
+                    }
+                }
+            }
             if self.requests[rid].completed_ms.is_none() {
                 if gamma == 0 {
                     // The prefill finished but its KV died with the
@@ -1082,8 +1225,232 @@ impl<S: MetricsSink> SimState<S> {
             }
         } else {
             // Draft window complete: ship to the cloud.
+            if self.pipelined && self.on_speculative_draft_done(now, rid, gamma) {
+                return;
+            }
             let d = self.link_delay(did, gamma as f64 * TOKEN_BYTES);
-            self.q.schedule_in(d, Ev::UplinkArrive { req: rid, gamma, sent_ms: now });
+            self.q.schedule_in(
+                d,
+                Ev::UplinkArrive { req: rid, gamma, sent_ms: now, spec: false },
+            );
+            if self.pipelined {
+                // Window k is on the wire; draft window k+1 against the
+                // still-outstanding verdict instead of idling.
+                self.requests[rid].awaiting_verdict = true;
+                self.spawn_speculative(rid, gamma);
+            }
+        }
+    }
+
+    // ---- Pipelined execution (`execution: pipelined`) ----
+    /// Meter the cost of an invalidated speculative window: the draft
+    /// tokens always, the uplink milliseconds once it actually shipped.
+    /// This is the wasted-work fold point for both metrics sinks.
+    fn meter_waste(&mut self, draft_tokens: u32, uplink_ms: f64) {
+        self.wasted_draft_tokens += draft_tokens as u64;
+        self.wasted_uplink_ms += uplink_ms;
+        self.sink.record_wasted(draft_tokens, uplink_ms);
+    }
+
+    /// Begin drafting window k+1 while window k's verdict is in flight.
+    /// `shipped_gamma` is window k's size: the speculative window
+    /// assumes k fully accepts (γ+1 tokens produced) and sizes itself
+    /// against what would then remain, reusing the policy's last γ
+    /// decision (the policy itself is consulted again at the next
+    /// non-speculative round).
+    fn spawn_speculative(&mut self, rid: usize, shipped_gamma: u32) {
+        let r = &self.requests[rid];
+        if r.inflight.is_some() {
+            // An invalidated record is still absorbing its terminal
+            // event — skip one speculation rather than clobber it.
+            return;
+        }
+        if r.mode != ExecMode::Distributed {
+            return;
+        }
+        let did = r.drafter;
+        if self.dynamics.drafter_down(did) {
+            return;
+        }
+        let rem_after = r.spec.remaining().saturating_sub(shipped_gamma + 1);
+        if rem_after == 0 {
+            // A full accept would finish the request; nothing to draft.
+            return;
+        }
+        let gamma = r.gamma_prev.clamp(1, rem_after);
+        let r = &mut self.requests[rid];
+        if self.keep_gammas {
+            r.gammas.push(gamma);
+        }
+        r.inflight = Some(Inflight {
+            gamma,
+            sent_ms: 0.0,
+            uplink_ms: 0.0,
+            phase: InflightPhase::Drafting,
+        });
+        // Decision-time fold point, same as the sequential round path.
+        self.sink.record_gamma(gamma);
+        self.drafters[did]
+            .tasks
+            .push_back(DrafterTask::Draft { req: rid, gamma });
+        self.q.schedule_in(0.0, Ev::DrafterFree(did));
+    }
+
+    /// Handle a finished draft that may be the speculative window.
+    /// Returns true when the completion was consumed here; false means
+    /// it was a (possibly promoted) primary window and the caller ships
+    /// it through the normal path.
+    fn on_speculative_draft_done(&mut self, now: f64, rid: usize, gamma: u32) -> bool {
+        let Some(inf) = self.requests[rid].inflight else {
+            return false;
+        };
+        match inf.phase {
+            InflightPhase::Drafting => {
+                // Ship eagerly; the target parks it until the verdict
+                // releases (or invalidates) it.
+                let did = self.requests[rid].drafter;
+                let d = self.link_delay(did, gamma as f64 * TOKEN_BYTES);
+                let slot = self.requests[rid].inflight.as_mut().expect("checked above");
+                slot.phase = InflightPhase::Uplink;
+                slot.sent_ms = now;
+                slot.uplink_ms = d;
+                self.q.schedule_in(
+                    d,
+                    Ev::UplinkArrive { req: rid, gamma, sent_ms: now, spec: true },
+                );
+                true
+            }
+            InflightPhase::InvalidDraft => {
+                // Tombstone absorption: invalidated while it ran; its
+                // cost was metered at invalidation time.
+                self.requests[rid].inflight = None;
+                true
+            }
+            // Uplink / Held / InvalidShip records belong to an
+            // already-shipped speculative window — this completion is a
+            // promoted primary draft.
+            _ => false,
+        }
+    }
+
+    /// A speculative window's uplink landed at the cloud.
+    fn on_spec_uplink_arrive(&mut self, rid: usize) {
+        let Some(inf) = self.requests[rid].inflight else {
+            return;
+        };
+        match inf.phase {
+            InflightPhase::Uplink => {
+                self.requests[rid].inflight.as_mut().expect("checked above").phase =
+                    InflightPhase::Held;
+            }
+            InflightPhase::Promoted => {
+                // Promoted mid-flight: land it straight in the verify
+                // queue and start drafting the next window.
+                self.requests[rid].inflight = None;
+                let tid = self.routable_target(rid);
+                self.targets[tid].verify_q.push_back((rid, inf.gamma, self.q.now()));
+                self.q.schedule_in(0.0, Ev::TargetKick(tid));
+                self.spawn_speculative(rid, inf.gamma);
+            }
+            InflightPhase::InvalidShip => {
+                // Tombstone absorption (cost metered at invalidation).
+                self.requests[rid].inflight = None;
+            }
+            _ => {}
+        }
+    }
+
+    /// Invalidate the in-flight speculative window (its draft prefix
+    /// was falsified, or the request finished): meter the wasted work
+    /// and leave a tombstone for any still-pending terminal event.
+    fn invalidate_inflight(&mut self, rid: usize) {
+        let Some(inf) = self.requests[rid].inflight else {
+            return;
+        };
+        let (next, uplink) = match inf.phase {
+            InflightPhase::Drafting => (Some(InflightPhase::InvalidDraft), 0.0),
+            // A promoted window cannot reach a downlink before its own
+            // arrival clears the slot, but meter it like any shipped
+            // window if that invariant ever breaks.
+            InflightPhase::Uplink | InflightPhase::Promoted => {
+                (Some(InflightPhase::InvalidShip), inf.uplink_ms)
+            }
+            // Parked windows have no pending terminal event to absorb a
+            // tombstone — clear outright.
+            InflightPhase::Held => (None, inf.uplink_ms),
+            InflightPhase::InvalidDraft | InflightPhase::InvalidShip => return,
+        };
+        self.requests[rid].inflight =
+            next.map(|phase| Inflight { phase, ..inf });
+        self.meter_waste(inf.gamma, uplink);
+    }
+
+    /// Pipelined verdict handling: the speculative window drafted
+    /// against this verdict is promoted (full accept — its prefix is
+    /// intact) or invalidated (any rejection falsified the prefix it
+    /// extends).
+    fn on_downlink_pipelined(&mut self, now: f64, rid: usize) {
+        // Every pipelined verify downlink must correspond to a window
+        // this drafter shipped (and marked awaited); a verdict with no
+        // outstanding window would mean the state machine double-fired.
+        debug_assert!(
+            self.requests[rid].awaiting_verdict,
+            "pipelined verdict for request {rid} with no awaited window"
+        );
+        self.requests[rid].awaiting_verdict = false;
+        if self.requests[rid].spec.done() {
+            self.invalidate_inflight(rid);
+            self.complete(now, rid);
+            return;
+        }
+        if !self.requests[rid].last_full_accept {
+            self.invalidate_inflight(rid);
+            self.start_round(now, rid);
+            return;
+        }
+        let Some(inf) = self.requests[rid].inflight else {
+            // Nothing was speculated (window clipped at the end of the
+            // sequence, or the spawn was skipped) — normal round.
+            self.start_round(now, rid);
+            return;
+        };
+        match inf.phase {
+            InflightPhase::Drafting => {
+                // The running draft becomes the next primary window; its
+                // completion ships through the normal path.
+                self.requests[rid].inflight = None;
+            }
+            InflightPhase::Uplink => {
+                // Still on the wire: it becomes the awaited window and
+                // joins the verify queue when it lands (the next
+                // speculative window spawns at that point, once the
+                // slot frees — see `on_spec_uplink_arrive`).
+                let r = &mut self.requests[rid];
+                r.awaiting_verdict = true;
+                r.uplink_sent_ms = inf.sent_ms;
+                r.inflight.as_mut().expect("matched above").phase = InflightPhase::Promoted;
+            }
+            InflightPhase::Held => {
+                // Parked at the cloud: release it into the verify queue
+                // right now — this is the pipelining win, the next
+                // window starts verification with zero drafter/uplink
+                // latency on the critical path.
+                self.requests[rid].inflight = None;
+                let r = &mut self.requests[rid];
+                r.awaiting_verdict = true;
+                r.uplink_sent_ms = inf.sent_ms;
+                let tid = self.routable_target(rid);
+                self.targets[tid].verify_q.push_back((rid, inf.gamma, now));
+                self.q.schedule_in(0.0, Ev::TargetKick(tid));
+                self.spawn_speculative(rid, inf.gamma);
+            }
+            InflightPhase::InvalidDraft | InflightPhase::InvalidShip | InflightPhase::Promoted => {
+                // Stale tombstone from an earlier rejection (Promoted is
+                // unreachable here — its own arrival precedes its
+                // verdict); leave the slot for its terminal event and
+                // run a normal round.
+                self.start_round(now, rid);
+            }
         }
     }
 
@@ -1430,6 +1797,13 @@ impl<S: MetricsSink> SimState<S> {
                     self.targets[tid].alpha_counts.1 += verified as f64;
                     let r = &mut self.requests[rid];
                     r.last_verify_ms = dur;
+                    if self.pipelined {
+                        // A fully-accepted window keeps the speculative
+                        // continuation's prefix valid; any rejection
+                        // falsifies it (the verdict is applied at the
+                        // drafter when the downlink lands).
+                        r.last_full_accept = out.accepted == out.consumed;
+                    }
                     let did = r.drafter;
                     produced_total += out.produced;
                     // Verify result: acceptance outcome + bonus token.
@@ -1527,6 +1901,10 @@ impl<S: MetricsSink> SimState<S> {
             let net_rtt = (loop_ms - r.last_verify_ms).max(0.0);
             r.rtt_ema.push(net_rtt);
         }
+        if self.pipelined {
+            self.on_downlink_pipelined(now, rid);
+            return;
+        }
         if self.requests[rid].spec.done() {
             self.complete(now, rid);
         } else {
@@ -1612,6 +1990,8 @@ impl<S: MetricsSink> SimState<S> {
                 }
                 m
             },
+            wasted_draft_tokens: self.wasted_draft_tokens,
+            wasted_uplink_ms: self.wasted_uplink_ms,
             autoscale: self
                 .autoscale
                 .as_ref()
@@ -2115,5 +2495,217 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn pipelined_cfg(rtt: f64) -> SimConfig {
+        SimConfig::builder()
+            .seed(1)
+            .targets(2)
+            .drafters(20)
+            .requests(60)
+            .rate_per_s(20.0)
+            .rtt_ms(rtt)
+            .dataset("gsm8k")
+            .execution(ExecutionMode::Pipelined)
+            .build()
+    }
+
+    /// ISSUE 8 tentpole: pipelined execution must drive every request to
+    /// completion (no stalls in the in-flight-window state machine),
+    /// meter the speculative work it throws away, and stay exactly as
+    /// deterministic as the sequential engine.
+    #[test]
+    fn pipelined_completes_meters_waste_and_is_deterministic() {
+        let rep = Simulator::new(pipelined_cfg(40.0)).run();
+        assert_eq!(rep.system.completed, 60, "pipelined run must not stall");
+        // With α = 0.8 and γ = 4 roughly 3 in 5 windows reject, so
+        // invalidated speculation is guaranteed to show up.
+        assert!(
+            rep.system.wasted_draft_tokens > 0,
+            "rejections must invalidate speculative windows"
+        );
+        assert!(rep.system.wasted_uplink_ms >= 0.0);
+        for r in &rep.requests {
+            assert!(r.ttft_ms > 0.0);
+            assert!(r.e2e_ms >= r.ttft_ms);
+            assert!(r.output_tokens > 0);
+        }
+        let again = Simulator::new(pipelined_cfg(40.0)).run();
+        assert_eq!(rep.system.events_processed, again.system.events_processed);
+        assert_eq!(rep.system.wasted_draft_tokens, again.system.wasted_draft_tokens);
+        assert!((rep.system.wasted_uplink_ms - again.system.wasted_uplink_ms).abs() < 1e-12);
+        assert!((rep.mean_ttft() - again.mean_ttft()).abs() < 1e-12);
+        assert!((rep.mean_e2e() - again.mean_e2e()).abs() < 1e-12);
+    }
+
+    /// ISSUE 8 satellite (round-bookkeeping audit): pipelining changes
+    /// *when* windows are drafted, never *what* each request emits — the
+    /// per-request token totals must match the sequential engine exactly
+    /// (the trace fixes every output length), and an invalidated
+    /// in-flight window retiring must not double-count completions.
+    #[test]
+    fn pipelined_preserves_token_accounting() {
+        let seq = Simulator::new(small_cfg()).run();
+        let mut cfg = small_cfg();
+        cfg.execution = ExecutionMode::Pipelined;
+        let pipe = Simulator::new(cfg).run();
+        assert_eq!(seq.system.completed, pipe.system.completed);
+        assert_eq!(seq.requests.len(), pipe.requests.len());
+        for (s, p) in seq.requests.iter().zip(&pipe.requests) {
+            assert_eq!(s.id, p.id);
+            assert_eq!(
+                s.output_tokens, p.output_tokens,
+                "request {} token count drifted under pipelining",
+                s.id
+            );
+        }
+        // Sequential runs never waste speculative work...
+        assert_eq!(seq.system.wasted_draft_tokens, 0);
+        assert_eq!(seq.system.wasted_uplink_ms, 0.0);
+        // ...and the serialized sequential report carries no waste keys
+        // (byte-compatibility with pre-pipelining reports).
+        let sys = seq.to_json();
+        let sys = sys.get("system").unwrap();
+        assert!(sys.get("wasted_draft_tokens").is_none());
+        assert!(sys.get("wasted_uplink_ms").is_none());
+    }
+
+    /// ISSUE 8 regression lock: an explicit `execution: sequential` is
+    /// the absent-block default — reports are bit-identical in both
+    /// sink modes (events, latencies, waste counters).
+    #[test]
+    fn explicit_sequential_matches_default_bit_for_bit() {
+        let plain = Simulator::new(small_cfg()).run();
+        let mut cfg = small_cfg();
+        cfg.execution = ExecutionMode::Sequential;
+        let explicit = Simulator::new(cfg).run();
+        assert_eq!(plain.system.completed, explicit.system.completed);
+        assert_eq!(plain.system.events_processed, explicit.system.events_processed);
+        assert!((plain.mean_ttft() - explicit.mean_ttft()).abs() < 1e-12);
+        assert!((plain.mean_tpot() - explicit.mean_tpot()).abs() < 1e-12);
+        assert!((plain.mean_e2e() - explicit.mean_e2e()).abs() < 1e-12);
+        let s_plain = Simulator::new(small_cfg()).run_streaming();
+        let mut cfg = small_cfg();
+        cfg.execution = ExecutionMode::Sequential;
+        let s_explicit = Simulator::new(cfg).run_streaming();
+        assert_eq!(s_plain.system.events_processed, s_explicit.system.events_processed);
+        assert_eq!(s_plain.stream.completed, s_explicit.stream.completed);
+        assert_eq!(s_plain.stream.wasted_draft_tokens, 0);
+        assert_eq!(s_plain.stream.wasted_uplink_ms, 0.0);
+        assert!((s_plain.stream.ttft_ms.mean - s_explicit.stream.ttft_ms.mean).abs() < 1e-12);
+    }
+
+    /// The streaming sink folds the same waste the full engine counts:
+    /// both modes replay the identical event sequence, so the summary's
+    /// accumulated waste equals the system counters exactly.
+    #[test]
+    fn pipelined_streaming_matches_full_mode_waste() {
+        let full = Simulator::new(pipelined_cfg(40.0)).run();
+        let stream = Simulator::new(pipelined_cfg(40.0)).run_streaming();
+        assert_eq!(stream.system.events_processed, full.system.events_processed);
+        assert_eq!(stream.stream.completed as usize, full.system.completed);
+        assert_eq!(stream.stream.wasted_draft_tokens, full.system.wasted_draft_tokens);
+        assert!(
+            (stream.stream.wasted_uplink_ms - full.system.wasted_uplink_ms).abs() < 1e-9
+        );
+        // The summary's own copy agrees with the system aggregates the
+        // same run produced.
+        assert_eq!(stream.stream.wasted_draft_tokens, stream.system.wasted_draft_tokens);
+        assert!(
+            (stream.stream.wasted_uplink_ms - stream.system.wasted_uplink_ms).abs() < 1e-12
+        );
+    }
+
+    /// Pipelined execution composes with every routing/batching/window
+    /// policy without stranding requests (the state-machine analogue of
+    /// `all_policies_run_to_completion`).
+    #[test]
+    fn pipelined_all_policies_run_to_completion() {
+        for routing in [RoutingKind::Random, RoutingKind::RoundRobin, RoutingKind::Jsq] {
+            for window in [
+                WindowKind::Static(4),
+                WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 },
+            ] {
+                let cfg = SimConfig::builder()
+                    .seed(7)
+                    .targets(2)
+                    .drafters(12)
+                    .requests(30)
+                    .rate_per_s(15.0)
+                    .routing(routing)
+                    .window(window.clone())
+                    .execution(ExecutionMode::Pipelined)
+                    .build();
+                let rep = Simulator::new(cfg).run();
+                assert_eq!(rep.system.completed, 30, "stalled: {routing:?}/{window:?}");
+            }
+        }
+    }
+
+    fn stray_class_trace() -> Trace {
+        use crate::trace::schema::TraceRecord;
+        Trace {
+            dataset: "inline".into(),
+            records: vec![
+                TraceRecord {
+                    prompt_length: 64,
+                    output_length: 16,
+                    acceptance_seq: vec![true; 64],
+                    arrival_time_ms: 0.0,
+                    drafter_id: 0,
+                    class_id: 0,
+                },
+                TraceRecord {
+                    prompt_length: 64,
+                    output_length: 16,
+                    acceptance_seq: vec![true; 64],
+                    arrival_time_ms: 5.0,
+                    drafter_id: 1,
+                    class_id: 3, // out of range: no `classes:` block below
+                },
+            ],
+        }
+    }
+
+    /// ISSUE 8 satellite: out-of-range trace `class_id`s used to be
+    /// silently clamped into range; they are now rejected with an error
+    /// naming the offending record, on both the `try_new` path and the
+    /// infallible `with_trace` injection path.
+    #[test]
+    fn out_of_range_trace_class_ids_are_rejected() {
+        let cfg = SimConfig::builder()
+            .seed(1)
+            .targets(1)
+            .drafters(4)
+            .requests(2)
+            .build();
+        let err = Simulator::new(cfg)
+            .with_trace(stray_class_trace())
+            .try_run()
+            .expect_err("stray class_id must be rejected");
+        assert!(err.contains("class_id 3"), "names the bad id: {err}");
+        assert!(err.contains("record 1"), "names the record: {err}");
+        assert!(err.contains("clamp_trace_class_ids"), "names the opt-out: {err}");
+    }
+
+    /// The explicit opt-in restores the historical clamping behaviour:
+    /// the stray id folds into the last declared tier and the run
+    /// completes.
+    #[test]
+    fn clamp_opt_in_restores_historical_clamping() {
+        let mut cfg = SimConfig::builder()
+            .seed(1)
+            .targets(1)
+            .drafters(4)
+            .requests(2)
+            .build();
+        cfg.clamp_trace_class_ids = true;
+        let rep = Simulator::new(cfg)
+            .with_trace(stray_class_trace())
+            .try_run()
+            .expect("clamping opt-in admits the trace");
+        assert_eq!(rep.system.completed, 2);
+        // Single-tenant run: everything clamps to class 0.
+        assert!(rep.requests.iter().all(|r| r.class_id == 0));
     }
 }

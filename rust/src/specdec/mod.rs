@@ -1,6 +1,87 @@
 //! Core speculative-decoding mathematics and window semantics (paper §2.1),
 //! shared by the simulator and the real serving coordinator.
 
+/// How draft/verify rounds are scheduled against each other.
+///
+/// `Sequential` is the paper's model: draft → ship → verify → downlink,
+/// one window in flight per request. `Pipelined` (DiP-SD-style) starts
+/// drafting window k+1 the moment window k ships, hiding draft latency
+/// behind the verification round trip; a rejection anywhere in window k
+/// invalidates the in-flight speculative window, and the simulator
+/// meters the discarded work as `wasted_draft_tokens` /
+/// `wasted_uplink_ms`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExecutionMode {
+    /// One window in flight: draft, ship, verify, repeat (paper §2.1).
+    #[default]
+    Sequential,
+    /// Draft window k+1 overlaps verification of window k; rejections
+    /// invalidate (and meter) the speculative window.
+    Pipelined,
+}
+
+impl ExecutionMode {
+    /// Config-file / CLI spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecutionMode::Sequential => "sequential",
+            ExecutionMode::Pipelined => "pipelined",
+        }
+    }
+
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> Result<ExecutionMode, String> {
+        match s {
+            "sequential" => Ok(ExecutionMode::Sequential),
+            "pipelined" => Ok(ExecutionMode::Pipelined),
+            other => Err(format!(
+                "unknown execution mode '{other}' (expected sequential | pipelined)"
+            )),
+        }
+    }
+}
+
+/// Expected duration of one *sequential* round: draft γ tokens, ship
+/// them, verify, return the verdict (paper §2.1's round trip).
+pub fn sequential_round_ms(gamma: u32, draft_ms: f64, verify_ms: f64, rtt_ms: f64) -> f64 {
+    gamma as f64 * draft_ms + verify_ms + rtt_ms
+}
+
+/// Expected duration of one *pipelined* round once the pipe is warm:
+/// drafting of the next window overlaps the verify + network leg of the
+/// current one, so the steady-state period is the max of the two stages.
+/// `p_flush` is the probability the round rejects somewhere and the
+/// overlap is wasted (≈ `1 − α^γ`): flushed rounds pay the full
+/// sequential latency again while the pipe refills.
+pub fn pipelined_round_ms(
+    gamma: u32,
+    draft_ms: f64,
+    verify_ms: f64,
+    rtt_ms: f64,
+    p_flush: f64,
+) -> f64 {
+    let seq = sequential_round_ms(gamma, draft_ms, verify_ms, rtt_ms);
+    let overlapped = (gamma as f64 * draft_ms).max(verify_ms + rtt_ms);
+    let p = p_flush.clamp(0.0, 1.0);
+    p * seq + (1.0 - p) * overlapped
+}
+
+/// Expected per-round speedup of pipelined over sequential execution for
+/// acceptance rate `alpha` (the flush probability is `1 − α^γ`). Values
+/// above 1.0 mean pipelining wins — the crossover frontier reproduced by
+/// `dsd reproduce pipeline`.
+pub fn pipelined_speedup(
+    alpha: f64,
+    gamma: u32,
+    draft_ms: f64,
+    verify_ms: f64,
+    rtt_ms: f64,
+) -> f64 {
+    let p_flush = 1.0 - alpha.clamp(0.0, 1.0).powi(gamma as i32);
+    sequential_round_ms(gamma, draft_ms, verify_ms, rtt_ms)
+        / pipelined_round_ms(gamma, draft_ms, verify_ms, rtt_ms, p_flush)
+}
+
 /// Expected number of accepted draft tokens per window,
 /// `E[τ] = (1 − α^{γ+1}) / (1 − α)` (paper Eq. 1).
 pub fn expected_accepted(alpha: f64, gamma: u32) -> f64 {
@@ -155,6 +236,33 @@ impl SpeculationState {
 mod tests {
     use super::*;
     use crate::util::prop::{run_prop, Gen};
+
+    #[test]
+    fn execution_mode_parse_and_label_round_trip() {
+        assert_eq!(ExecutionMode::default(), ExecutionMode::Sequential);
+        for m in [ExecutionMode::Sequential, ExecutionMode::Pipelined] {
+            assert_eq!(ExecutionMode::parse(m.label()), Ok(m));
+        }
+        assert!(ExecutionMode::parse("overlapped").is_err());
+    }
+
+    #[test]
+    fn pipelined_round_model_behaviour() {
+        // γ=4, 2 ms/draft token, 10 ms verify, 60 ms RTT: the sequential
+        // round is 8 + 10 + 60 = 78 ms.
+        assert!((sequential_round_ms(4, 2.0, 10.0, 60.0) - 78.0).abs() < 1e-12);
+        // Never-flushing pipe hides the draft entirely behind the RTT.
+        assert!((pipelined_round_ms(4, 2.0, 10.0, 60.0, 0.0) - 70.0).abs() < 1e-12);
+        // Always-flushing pipe degenerates to sequential.
+        assert!((pipelined_round_ms(4, 2.0, 10.0, 60.0, 1.0) - 78.0).abs() < 1e-12);
+        // High acceptance + long RTT: pipelining wins (speedup > 1).
+        assert!(pipelined_speedup(0.9, 4, 2.0, 10.0, 120.0) > 1.0);
+        // Zero acceptance: every round flushes; no gain, no loss.
+        assert!((pipelined_speedup(0.0, 4, 2.0, 10.0, 120.0) - 1.0).abs() < 1e-12);
+        // Speedup is capped by the sequential/overlapped ratio.
+        let cap = 78.0 / 70.0;
+        assert!(pipelined_speedup(1.0, 4, 2.0, 10.0, 60.0) <= cap + 1e-12);
+    }
 
     #[test]
     fn eq1_matches_closed_form() {

@@ -4,14 +4,15 @@
 //! Axes (all optional; an absent axis pins the base value):
 //! scenario (scripted dynamics), autoscale (elastic target pools),
 //! classes (multi-tenant request tiers), RTT, jitter, arrival rate,
-//! dataset, routing / batching / window policy, cluster scale (target
-//! and drafter counts), and seed.
+//! dataset, routing / batching / window policy, round execution mode
+//! (sequential | pipelined), cluster scale (target and drafter counts),
+//! and seed.
 //!
 //! Expansion order is fixed and documented — outermost to innermost:
 //! `scenario → autoscale → classes → dataset → routing → batching →
-//! window → targets → drafters → rtt → jitter → rate → seed` — so cell
-//! indices are stable and seed replicas of one configuration are
-//! adjacent.
+//! window → execution → targets → drafters → rtt → jitter → rate →
+//! seed` — so cell indices are stable and seed replicas of one
+//! configuration are adjacent.
 
 use crate::autoscale::AutoscaleConfig;
 use crate::config::{
@@ -19,6 +20,7 @@ use crate::config::{
     WindowKind,
 };
 use crate::scenario::Scenario;
+use crate::specdec::ExecutionMode;
 use crate::util::json::Json;
 use crate::util::yaml;
 
@@ -145,6 +147,8 @@ pub struct SweepGrid {
     pub batching: Vec<BatchingKind>,
     /// Window-policy axis.
     pub windows: Vec<WindowKind>,
+    /// Round execution-mode axis (sequential | pipelined).
+    pub execution: Vec<ExecutionMode>,
     /// Target-count axis (cluster scale).
     pub targets: Vec<usize>,
     /// Drafter-count axis (cluster scale).
@@ -169,6 +173,7 @@ impl SweepGrid {
             routing: vec![base.routing],
             batching: vec![base.batching],
             windows: vec![base.window.clone()],
+            execution: vec![base.execution],
             targets: vec![base.n_targets()],
             drafters: vec![base.n_drafters()],
             seeds: vec![base.seed],
@@ -186,6 +191,7 @@ impl SweepGrid {
             * self.routing.len()
             * self.batching.len()
             * self.windows.len()
+            * self.execution.len()
             * self.targets.len()
             * self.drafters.len()
             * self.rtt_ms.len()
@@ -240,7 +246,8 @@ impl SweepGrid {
         };
         const KNOWN: &[&str] = &[
             "scenario", "autoscale", "classes", "rtt_ms", "jitter_ms", "rate_per_s",
-            "dataset", "routing", "batching", "window", "targets", "drafters", "seeds",
+            "dataset", "routing", "batching", "window", "execution", "targets",
+            "drafters", "seeds",
         ];
         if let Json::Obj(pairs) = sweep {
             for (k, _) in pairs {
@@ -320,6 +327,12 @@ impl SweepGrid {
                 .map(|s| parse_window_axis(s))
                 .collect::<Result<_, _>>()?;
         }
+        if let Some(v) = sweep.get("execution") {
+            grid.execution = str_axis("execution", v)?
+                .iter()
+                .map(|s| ExecutionMode::parse(s).map_err(|e| format!("sweep: {e}")))
+                .collect::<Result<_, _>>()?;
+        }
         if let Some(v) = sweep.get("targets") {
             grid.targets = usize_axis("targets", v)?;
         }
@@ -351,44 +364,48 @@ impl SweepGrid {
                         for &routing in &self.routing {
                             for &batching in &self.batching {
                                 for window in &self.windows {
-                                    for &n_targets in &self.targets {
-                                        for &n_drafters in &self.drafters {
-                                            for &rtt in &self.rtt_ms {
-                                                for &jitter in &self.jitter_ms {
-                                                    for &rate in &self.rate_per_s {
-                                                        for &seed in &self.seeds {
-                                                            let cfg = self.cell_config(
-                                                                scenario, autoscale,
-                                                                classes, ds, routing,
-                                                                batching, window,
-                                                                n_targets, n_drafters,
-                                                                rtt, jitter, rate, seed,
-                                                            )?;
-                                                            let mut labels = vec![
-                                                                (
-                                                                    "scenario".to_string(),
-                                                                    scenario_label(scenario),
-                                                                ),
-                                                                (
-                                                                    "autoscale".to_string(),
-                                                                    autoscale_label(autoscale),
-                                                                ),
-                                                                (
-                                                                    "classes".to_string(),
-                                                                    classes_label(classes),
-                                                                ),
-                                                            ];
-                                                            labels.extend(labels_for(
-                                                                ds, routing, batching,
-                                                                window, n_targets,
-                                                                n_drafters, rtt, jitter,
-                                                                rate, seed,
-                                                            ));
-                                                            cells.push(SweepCell {
-                                                                index: cells.len(),
-                                                                labels,
-                                                                cfg,
-                                                            });
+                                    for &execution in &self.execution {
+                                        for &n_targets in &self.targets {
+                                            for &n_drafters in &self.drafters {
+                                                for &rtt in &self.rtt_ms {
+                                                    for &jitter in &self.jitter_ms {
+                                                        for &rate in &self.rate_per_s {
+                                                            for &seed in &self.seeds {
+                                                                let cfg = self.cell_config(
+                                                                    scenario, autoscale,
+                                                                    classes, ds, routing,
+                                                                    batching, window,
+                                                                    execution,
+                                                                    n_targets, n_drafters,
+                                                                    rtt, jitter, rate, seed,
+                                                                )?;
+                                                                let mut labels = vec![
+                                                                    (
+                                                                        "scenario".to_string(),
+                                                                        scenario_label(scenario),
+                                                                    ),
+                                                                    (
+                                                                        "autoscale".to_string(),
+                                                                        autoscale_label(autoscale),
+                                                                    ),
+                                                                    (
+                                                                        "classes".to_string(),
+                                                                        classes_label(classes),
+                                                                    ),
+                                                                ];
+                                                                labels.extend(labels_for(
+                                                                    ds, routing, batching,
+                                                                    window, execution,
+                                                                    n_targets,
+                                                                    n_drafters, rtt, jitter,
+                                                                    rate, seed,
+                                                                ));
+                                                                cells.push(SweepCell {
+                                                                    index: cells.len(),
+                                                                    labels,
+                                                                    cfg,
+                                                                });
+                                                            }
                                                         }
                                                     }
                                                 }
@@ -415,6 +432,7 @@ impl SweepGrid {
         routing: RoutingKind,
         batching: BatchingKind,
         window: &WindowKind,
+        execution: ExecutionMode,
         n_targets: usize,
         n_drafters: usize,
         rtt: f64,
@@ -432,6 +450,7 @@ impl SweepGrid {
         cfg.routing = routing;
         cfg.batching = batching;
         cfg.window = window.clone();
+        cfg.execution = execution;
         cfg.network.rtt_ms = rtt;
         cfg.network.jitter_ms = jitter;
         scale_pools(&mut cfg.target_pools, n_targets, "targets")?;
@@ -497,6 +516,7 @@ fn labels_for(
     routing: RoutingKind,
     batching: BatchingKind,
     window: &WindowKind,
+    execution: ExecutionMode,
     n_targets: usize,
     n_drafters: usize,
     rtt: f64,
@@ -509,6 +529,7 @@ fn labels_for(
         ("routing".into(), routing_label(routing).into()),
         ("batching".into(), batching_label(batching).into()),
         ("window".into(), window_label(window)),
+        ("execution".into(), execution.label().into()),
         ("targets".into(), n_targets.to_string()),
         ("drafters".into(), n_drafters.to_string()),
         ("rtt_ms".into(), format!("{rtt}")),
@@ -913,6 +934,43 @@ streaming: true
         // And the literal `none` pins single-tenant serving.
         let g = SweepGrid::from_yaml("sweep:\n  classes: [none]\n").unwrap();
         assert_eq!(g.classes, vec![None]);
+    }
+
+    #[test]
+    fn execution_axis_expands_and_labels_cells() {
+        let mut grid = SweepGrid::new(SimConfig::builder().requests(8).build());
+        grid.seeds = vec![1, 2];
+        grid.execution = vec![ExecutionMode::Sequential, ExecutionMode::Pipelined];
+        assert_eq!(grid.n_cells(), 4);
+        let cells = grid.expand().unwrap();
+        // Execution sits just inside window: seeds iterate inside it.
+        assert_eq!(cells[0].label("execution"), Some("sequential"));
+        assert_eq!(cells[1].label("execution"), Some("sequential"));
+        assert_eq!(cells[2].label("execution"), Some("pipelined"));
+        assert_eq!(cells[3].label("execution"), Some("pipelined"));
+        assert_eq!(cells[0].cfg.execution, ExecutionMode::Sequential);
+        assert_eq!(cells[2].cfg.execution, ExecutionMode::Pipelined);
+        assert_eq!(cells[2].cfg.seed, 1);
+        // The axis filters like any other.
+        let kept = filter_cells(cells, &parse_filter("execution=pipelined").unwrap()).unwrap();
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn execution_axis_from_yaml() {
+        let grid =
+            SweepGrid::from_yaml("sweep:\n  execution: [sequential, pipelined]\n").unwrap();
+        assert_eq!(
+            grid.execution,
+            vec![ExecutionMode::Sequential, ExecutionMode::Pipelined]
+        );
+        assert_eq!(grid.n_cells(), 2);
+        // An unswept grid pins the base mode (sequential by default).
+        let pinned = SweepGrid::from_yaml("sweep:\n  rtt_ms: [5]\n").unwrap();
+        assert_eq!(pinned.execution, vec![ExecutionMode::Sequential]);
+        // Unknown mode names are rejected with the parse error.
+        let err = SweepGrid::from_yaml("sweep:\n  execution: [overlapped]\n").unwrap_err();
+        assert!(err.contains("unknown execution mode"), "{err}");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Self-bootstrapping golden snapshots for the runner-ported experiment
 //! families (fig5, fig7/8, fig9/10, table2, agility, elasticity,
-//! fairness) plus cached-vs-uncached
+//! fairness, pipeline) plus cached-vs-uncached
 //! byte-identity: each family's sweep data must serialize identically
 //! whether computed directly, against a cold cell cache, or spliced
 //! entirely from a warm cache — and the warm pass must execute zero
@@ -12,7 +12,8 @@
 //! `DSD_UPDATE_GOLDEN=1 cargo test -q --test golden_experiments`.
 
 use dsd::experiments::{
-    agility, elasticity, fairness, fig5, fig6, fig7_8, fig9_10, table2, ExpContext, Scale,
+    agility, elasticity, fairness, fig5, fig6, fig7_8, fig9_10, pipeline, table2, ExpContext,
+    Scale,
 };
 use dsd::sweep::CellCache;
 use dsd::util::json::Json;
@@ -307,4 +308,36 @@ fn golden_fairness_and_cache_identity() {
         fairness_json(&fairness::sweep_cached(SCALE, &SEEDS, ctx))
     });
     check_golden("fairness_tiny.json", &text);
+}
+
+fn pipeline_json(rows: &[pipeline::PipelineRow]) -> String {
+    pretty(Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj()
+                    .with("rtt_ms", r.rtt_ms.into())
+                    .with("bandwidth_mbps", r.bandwidth_mbps.into())
+                    .with("gamma", r.gamma.into())
+                    .with("seq_tpot_ms", r.seq_tpot_ms.into())
+                    .with("pipe_tpot_ms", r.pipe_tpot_ms.into())
+                    .with("speedup", r.speedup().into())
+                    .with("seq_throughput_rps", r.seq_throughput_rps.into())
+                    .with("pipe_throughput_rps", r.pipe_throughput_rps.into())
+                    .with("winner", r.winner().into())
+            })
+            .collect(),
+    ))
+}
+
+/// The execution-mode pipeline family (ISSUE 8): cold/warm/uncached
+/// byte-identity over cells whose cache keys carry the `execution` key
+/// only in pipelined mode — so half the family's cells must splice
+/// from keys byte-identical to their historical sequential layout, and
+/// the other half from keys the new mode just minted.
+#[test]
+fn golden_pipeline_and_cache_identity() {
+    let text = triple_run("pipeline", |ctx| {
+        pipeline_json(&pipeline::sweep_cached(SCALE, &SEEDS, ctx))
+    });
+    check_golden("pipeline_tiny.json", &text);
 }

@@ -30,6 +30,7 @@ use dsd::metrics::{
 };
 use dsd::scenario::{ArrivalProcess, Scenario, ScenarioEvent, TimedEvent};
 use dsd::sim::Simulator;
+use dsd::specdec::ExecutionMode;
 use dsd::util::stats::percentile;
 
 fn rel(a: f64, b: f64) -> f64 {
@@ -66,7 +67,10 @@ fn base(
 /// link flap, pool churn + target slowdown) + 1 autoscale-bearing
 /// config (reactive elastic pool under a flash crowd) + 2 class-bearing
 /// configs (multi-tenant priority admission; priority + batch deferral
-/// under a batch-tier flash crowd) — 20 configurations.
+/// under a batch-tier flash crowd) + 2 pipelined-execution configs
+/// (high-RTT static window; finite-bandwidth dynamic window), whose
+/// wasted-speculation counters must fold identically in both sinks —
+/// 22 configurations.
 fn differential_grid() -> Vec<(String, SimConfig)> {
     use dsd::cluster::gpu::{A40, V100};
     use dsd::cluster::model::{LLAMA2_7B, QWEN_7B};
@@ -278,6 +282,28 @@ fn differential_grid() -> Vec<(String, SimConfig)> {
         defer_batch_threshold: Some(2),
     });
     grid.push(("cnndm/classes-defer".into(), defer));
+    // (7) Pipelined execution on a high-RTT link (ISSUE 8): speculative
+    // windows overlap the verdict round-trip, so rejections invalidate
+    // shipped work and the wasted-draft/wasted-uplink fold points fire
+    // on both sinks.
+    let mut pipe =
+        base(39, "gsm8k", WindowKind::Static(4), RoutingKind::Jsq, BatchingKind::Lab);
+    pipe.network.rtt_ms = 40.0;
+    pipe.execution = ExecutionMode::Pipelined;
+    grid.push(("gsm8k/pipelined-static4".into(), pipe));
+    // (8) Pipelined + finite bandwidth + dynamic window: serialization
+    // delay makes wasted uplink milliseconds non-trivial, and the
+    // adapting γ exercises speculative window sizing.
+    let mut pipe_slow = base(
+        40,
+        "cnndm",
+        WindowKind::Dynamic { init: 4, lo: 0.25, hi: 0.75 },
+        RoutingKind::RoundRobin,
+        BatchingKind::Fifo,
+    );
+    pipe_slow.network.bandwidth_mbps = 2.0;
+    pipe_slow.execution = ExecutionMode::Pipelined;
+    grid.push(("cnndm/pipelined-slow-link".into(), pipe_slow));
     grid
 }
 
@@ -366,6 +392,34 @@ fn assert_parity(name: &str, cfg: &SimConfig, full: &SimReport) {
     // γ-decision histogram: exact (all-integer) equality between the
     // decision-time fold and the retained decision vectors.
     assert_eq!(stream.stream.gamma, full.gamma_summary(), "{name}: gamma histogram");
+
+    // Wasted-speculation counters (ISSUE 8, pipelined execution): the
+    // streaming sink's invalidation-time fold must equal the engine's
+    // system counters — token counts exactly, milliseconds to noise
+    // (both sides run the identical event sequence) — and sequential
+    // runs must stay at zero on every side.
+    assert_eq!(
+        stream.stream.wasted_draft_tokens, full.system.wasted_draft_tokens,
+        "{name}: wasted draft tokens"
+    );
+    assert!(
+        (stream.stream.wasted_uplink_ms - full.system.wasted_uplink_ms).abs() < 1e-9,
+        "{name}: wasted uplink ms {} vs {}",
+        stream.stream.wasted_uplink_ms,
+        full.system.wasted_uplink_ms
+    );
+    assert_eq!(
+        stream.stream.wasted_draft_tokens, stream.system.wasted_draft_tokens,
+        "{name}: summary vs system wasted tokens"
+    );
+    assert!(
+        (stream.stream.wasted_uplink_ms - stream.system.wasted_uplink_ms).abs() < 1e-12,
+        "{name}: summary vs system wasted uplink"
+    );
+    if cfg.execution == ExecutionMode::Sequential {
+        assert_eq!(full.system.wasted_draft_tokens, 0, "{name}: sequential wastes nothing");
+        assert_eq!(full.system.wasted_uplink_ms, 0.0, "{name}: sequential wastes nothing");
+    }
 
     // Per-target (routing histogram + latency/acceptance breakdown) and
     // per-drafter-pool breakdowns.
@@ -555,6 +609,13 @@ fn streaming_matches_full_across_differential_grid() {
         grid.iter().filter(|(_, c)| c.classes.is_some()).count() >= 2,
         "differential grid must include ≥2 class-bearing configs"
     );
+    assert!(
+        grid.iter()
+            .filter(|(_, c)| c.execution == ExecutionMode::Pipelined)
+            .count()
+            >= 2,
+        "differential grid must include ≥2 pipelined-execution configs"
+    );
     for (name, cfg) in grid {
         let full = Simulator::new(cfg.clone()).run();
         assert_parity(&name, &cfg, &full);
@@ -582,6 +643,13 @@ fn refolding_full_records_is_bit_identical_to_live_streaming() {
                 refold.record_capacity(t, c);
             }
         }
+        // Wasted speculation replays from the system counters the same
+        // way: the totals were produced by the exact f64 adds the live
+        // sink performed, so a single one-shot fold lands on identical
+        // bits (the u64 → u32 cast is safe at grid scale — a 48-request
+        // cell wastes a few hundred draft tokens at most). Sequential
+        // configs replay (0, 0.0), which leaves the summary keys off.
+        refold.record_wasted(system.wasted_draft_tokens as u32, system.wasted_uplink_ms);
         for m in sink.into_requests() {
             for &g in &m.gamma_decisions {
                 refold.record_gamma(g);
