@@ -47,6 +47,7 @@ pub mod metrics;
 pub mod policies;
 pub mod runtime;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 pub mod specdec;
 pub mod sweep;

@@ -8,11 +8,19 @@
 //!                  with priority-aware admission; --execution picks the
 //!                  round engine: sequential | pipelined)
 //!   sweep          expand a scenario grid and run every cell in parallel
+//!                  (--shard i/n partitions the grid deterministically across
+//!                  N workers; --merge splices shard run dirs back into the
+//!                  byte-identical single-process summary)
 //!   reproduce      regenerate a paper table/figure (fig4..fig10, table2,
 //!                  agility, elasticity, fairness, pipeline, all)
 //!   sweep-dataset  generate the AWC training dataset (paper §4.2)
 //!   trace-gen      emit a synthetic workload trace (Table 1 schema)
-//!   serve          run the real edge-cloud serving path on AOT artifacts
+//!   serve          run the real edge-cloud serving path on AOT artifacts;
+//!                  with --listen, run the long-lived grid service instead
+//!                  (line-delimited JSON protocol: submit-grid,
+//!                  poll-progress, fetch-summary, cancel, shutdown)
+//!   submit         client for a --listen grid service (submit a grid, wait,
+//!                  fetch the summary; also status/cancel/shutdown/ping)
 //!   awc-eval       compare AWC vs baselines on one configuration
 //!   bench          run a named benchmark suite and write BENCH_<suite>.json
 //!
@@ -28,8 +36,8 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = args.split_first() else {
         eprintln!(
-            "usage: dsd <simulate|sweep|reproduce|sweep-dataset|trace-gen|serve|awc-eval|bench> \
-             [options]"
+            "usage: dsd <simulate|sweep|reproduce|sweep-dataset|trace-gen|serve|submit|awc-eval|\
+             bench> [options]"
         );
         std::process::exit(2);
     };
@@ -40,6 +48,7 @@ fn main() {
         "sweep-dataset" => cmd_sweep_dataset(rest),
         "trace-gen" => cmd_trace_gen(rest),
         "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
         "awc-eval" => cmd_awc_eval(rest),
         "bench" => cmd_bench(rest),
         other => Err(format!("unknown subcommand '{other}'")),
@@ -165,12 +174,45 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
              that selection. Runs standalone.",
             None,
         )
+        .opt(
+            "shard",
+            "run only shard i of an n-way deterministic cell partition (0-based, \
+             e.g. 0/4): cells with index ≡ i (mod n) execute here, persist to the \
+             run directory's cells/, and a summary-shard-i-of-n.json manifest \
+             records the grid hash and counts. Requires --out-dir or --resume; \
+             reassemble with --merge.",
+            None,
+        )
+        .opt(
+            "merge",
+            "comma-separated shard run directories (or one shared directory): \
+             validate grid-hash/mode/filter agreement and shard completeness, \
+             splice the cached cells into a summary byte-identical to the \
+             single-process run. Runs standalone; writes summary.json to \
+             --out-dir (or the single shared directory) and honors --out/--table.",
+            None,
+        )
         .flag("table", "print an ASCII table instead of JSON")
         .flag("streaming", "force streaming metrics regardless of the grid file");
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    if let Some(dirs) = a.get("merge") {
+        if a.get("grid").is_some()
+            || a.get("filter").is_some()
+            || a.get("resume").is_some()
+            || a.get("shard").is_some()
+            || a.get("gc").is_some()
+        {
+            return Err(
+                "sweep: --merge runs standalone (no --grid/--filter/--resume/--shard/--gc; \
+                 the grid and filter come from the shard directories)"
+                    .into(),
+            );
+        }
+        return cmd_sweep_merge(dirs, a.get("out"), a.get("out-dir"), a.flag("table"));
+    }
     if let Some(dir) = a.get("gc") {
-        if a.get("out-dir").is_some() || a.get("resume").is_some() {
-            return Err("sweep: --gc runs standalone (no --out-dir/--resume)".into());
+        if a.get("out-dir").is_some() || a.get("resume").is_some() || a.get("shard").is_some() {
+            return Err("sweep: --gc runs standalone (no --out-dir/--resume/--shard)".into());
         }
         if a.get("filter").is_some() && a.get("grid").is_none() {
             return Err("sweep: --gc --filter needs --grid to expand cells".into());
@@ -245,6 +287,19 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
         }
         None => None,
     };
+    let shard = match a.get("shard") {
+        Some(s) => {
+            if run_dir.is_none() {
+                return Err(
+                    "sweep: --shard needs --out-dir (or --resume): shard cells must \
+                     persist somewhere --merge can find them"
+                        .into(),
+                );
+            }
+            Some(dsd::sweep::ShardSpec::parse(s)?)
+        }
+        None => None,
+    };
     let mut cells = grid.expand()?;
     let filter = match a.get("filter") {
         Some(f) => {
@@ -254,13 +309,27 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
         }
         None => None,
     };
+    // The fingerprint covers the FULL (filtered) grid, pre-partition:
+    // every shard of one grid records the same hash, which is what
+    // --merge cross-checks.
+    let cells_total = cells.len();
+    let grid_hash = shard
+        .as_ref()
+        .map(|_| dsd::sweep::grid_fingerprint(&cells, grid.streaming));
+    if let Some(spec) = &shard {
+        cells = dsd::sweep::shard_cells(cells, spec);
+    }
     eprintln!(
-        "[sweep] {} cells on {} threads{}{} ...",
+        "[sweep] {} cells on {} threads{}{}{} ...",
         cells.len(),
         threads.clamp(1, cells.len().max(1)),
         if grid.streaming { " (streaming)" } else { "" },
         match &filter {
             Some(f) => format!(" (filter: {f})"),
+            None => String::new(),
+        },
+        match &shard {
+            Some(s) => format!(" (shard {} of {} total cells)", s.label(), cells_total),
             None => String::new(),
         }
     );
@@ -268,6 +337,32 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
         dsd::sweep::run_cells_cached(&cells, grid.streaming, threads, cache.as_ref());
     if cache.is_some() {
         eprintln!("[sweep] {}", stats.describe());
+    }
+    if let Some(spec) = shard {
+        // Shard runs write their manifest, never summary.json: a shard
+        // summary would be a partial result wearing a full result's
+        // name. The merged summary comes from `--merge`.
+        let n_failed = results.iter().filter(|r| r.outcome.is_err()).count();
+        let manifest = dsd::sweep::ShardManifest {
+            shard: spec,
+            grid_hash: grid_hash.expect("sharded runs carry a fingerprint"),
+            streaming: grid.streaming,
+            filter,
+            cells_total,
+            cells_in_shard: results.len(),
+            failed_cells: n_failed,
+            stats,
+        };
+        let path = manifest.write_to(run_dir.as_ref().expect("--shard requires a run dir"))?;
+        eprintln!("[sweep] wrote {}", path.display());
+        if n_failed > 0 {
+            return Err(format!(
+                "{n_failed} of {} shard cells failed (markers persisted; merge will \
+                 surface them)",
+                results.len()
+            ));
+        }
+        return Ok(());
     }
     let summary =
         dsd::sweep::SweepSummary::new(results, grid.streaming).with_filter(filter.clone());
@@ -343,6 +438,76 @@ fn cmd_sweep_gc(
     eprintln!("[sweep] gc {}: {}", cells_dir.display(), stats.describe());
     if stats.failed > 0 {
         return Err(format!("gc: {} files could not be removed", stats.failed));
+    }
+    Ok(())
+}
+
+/// `dsd sweep --merge d1,d2,... [--out f] [--out-dir d] [--table]`:
+/// splice shard run directories into the single-process summary. All
+/// validation (grid-hash agreement, overlap/missing shards, cell
+/// completeness) lives in [`dsd::sweep::merge_shard_dirs`].
+fn cmd_sweep_merge(
+    dirs_arg: &str,
+    out: Option<&str>,
+    out_dir: Option<&str>,
+    table: bool,
+) -> Result<(), String> {
+    let dirs: Vec<std::path::PathBuf> = dirs_arg
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(std::path::PathBuf::from)
+        .collect();
+    if dirs.is_empty() {
+        return Err("merge: no shard directories given".into());
+    }
+    let report = dsd::sweep::merge_shard_dirs(&dirs)?;
+    eprintln!(
+        "[sweep] merged {} shards (grid {}): {}",
+        report.shard_count,
+        report.grid_hash,
+        report.stats.describe()
+    );
+    let summary = &report.summary;
+    let json = summary.to_json().to_string_pretty();
+    let write_to = |path: &std::path::Path| -> Result<(), String> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        std::fs::write(path, format!("{json}\n")).map_err(|e| e.to_string())?;
+        eprintln!("[sweep] wrote {}", path.display());
+        Ok(())
+    };
+    if let Some(path) = out {
+        write_to(std::path::Path::new(path))?;
+    }
+    // The merged summary lands like a single-process run's would:
+    // in --out-dir when given, or — when all shards shared one run
+    // directory — beside their cells. Per-shard directories without
+    // --out-dir print only (no directory is "the" run dir).
+    match (out_dir, dirs.len()) {
+        (Some(d), _) => {
+            let dir = std::path::PathBuf::from(d);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| format!("create {}: {e}", dir.display()))?;
+            write_to(&dir.join("summary.json"))?;
+        }
+        (None, 1) => write_to(&dirs[0].join("summary.json"))?,
+        (None, _) => {}
+    }
+    if table {
+        println!("{}", summary.render_table());
+    } else {
+        println!("{json}");
+    }
+    if summary.n_failed() > 0 {
+        return Err(format!(
+            "{} of {} merged cells failed",
+            summary.n_failed(),
+            summary.cells.len()
+        ));
     }
     Ok(())
 }
@@ -462,6 +627,16 @@ fn cmd_trace_gen(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    // Two serving paths share the subcommand: the original AOT/PJRT
+    // edge-cloud path (default), and the long-lived grid service
+    // selected by --listen. Dispatch on the flag's presence so every
+    // historical `dsd serve` invocation behaves exactly as before.
+    if rest
+        .iter()
+        .any(|a| a == "--listen" || a.starts_with("--listen="))
+    {
+        return cmd_serve_grid(rest);
+    }
     let spec = Command::new("serve", "real edge-cloud serving on AOT artifacts")
         .opt("artifacts", "artifacts directory", Some("artifacts"))
         .opt("requests", "number of requests", Some("8"))
@@ -505,6 +680,160 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         stats.mean_acceptance
     );
     Ok(())
+}
+
+/// `dsd serve --listen <addr>`: the long-running grid service
+/// (submit-grid / poll-progress / fetch-summary / cancel / shutdown
+/// over line-delimited JSON — see `dsd::serve::protocol`).
+fn cmd_serve_grid(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("serve", "long-running sweep grid service")
+        .opt(
+            "listen",
+            "address to bind (port 0 picks a free port)",
+            Some("127.0.0.1:7433"),
+        )
+        .opt(
+            "cache-dir",
+            "run directory backing execution: cells persist under <dir>/cells, so \
+             repeat submissions (and externally sharded runs of the same grid) are \
+             served from disk",
+            None,
+        )
+        .opt("threads", "worker threads per job (0 = one per core)", Some("0"))
+        .opt(
+            "max-jobs",
+            "bound on live (queued + running) jobs; submissions beyond it get a \
+             queue-full backpressure error",
+            Some("16"),
+        )
+        .opt(
+            "max-request-bytes",
+            "cap on one request line, bytes (oversized lines are rejected while \
+             reading, never buffered)",
+            Some("4194304"),
+        )
+        .opt("timeout-ms", "per-socket read/write timeout, ms", Some("30000"));
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let opts = dsd::serve::ServeOptions {
+        threads: a.get_usize("threads").map_err(|e| e.to_string())?.unwrap(),
+        cache_dir: a.get("cache-dir").map(std::path::PathBuf::from),
+        max_jobs: a.get_usize("max-jobs").map_err(|e| e.to_string())?.unwrap(),
+        max_request_bytes: a
+            .get_usize("max-request-bytes")
+            .map_err(|e| e.to_string())?
+            .unwrap(),
+        request_timeout_ms: a.get_u64("timeout-ms").map_err(|e| e.to_string())?.unwrap(),
+    };
+    let service = dsd::serve::GridService::start(a.get("listen").unwrap(), opts)?;
+    eprintln!(
+        "[serve] grid service listening on {} (protocol v{}; shut down with \
+         `dsd submit --addr {} --shutdown`)",
+        service.addr(),
+        dsd::serve::PROTOCOL_VERSION,
+        service.addr()
+    );
+    service.join();
+    eprintln!("[serve] drained; exiting");
+    Ok(())
+}
+
+/// `dsd submit`: client for a `dsd serve --listen` grid service.
+fn cmd_submit(rest: &[String]) -> Result<(), String> {
+    let spec = Command::new("submit", "client for a --listen grid service")
+        .opt("addr", "service address", Some("127.0.0.1:7433"))
+        .opt("grid", "sweep grid YAML file to submit", None)
+        .opt("job", "job id for --status/--fetch/--cancel", None)
+        .opt("out", "write the fetched summary to this path instead of stdout", None)
+        .opt("poll-ms", "poll interval while waiting", Some("500"))
+        .opt("wait-ms", "give up waiting after this long", Some("600000"))
+        .opt("timeout-ms", "per-request socket timeout, ms", Some("30000"))
+        .flag("streaming", "force streaming metrics regardless of the grid file")
+        .flag("no-wait", "submit and print the job id without waiting")
+        .flag("status", "poll one job (--job) and print its progress")
+        .flag("fetch", "fetch the summary of a completed job (--job)")
+        .flag("cancel", "cancel a job (--job)")
+        .flag("shutdown", "ask the service to drain and exit")
+        .flag("ping", "liveness probe");
+    let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    let addr = a.get("addr").unwrap();
+    let timeout_ms = a.get_u64("timeout-ms").map_err(|e| e.to_string())?.unwrap();
+    let mut client = dsd::serve::GridClient::connect(addr, timeout_ms)?;
+    let job_arg = || -> Result<u64, String> {
+        a.get_u64("job")
+            .map_err(|e| e.to_string())?
+            .ok_or_else(|| "submit: this action needs --job <id>".into())
+    };
+    let print_summary = |text: &str| -> Result<(), String> {
+        match a.get("out") {
+            Some(path) => {
+                let p = std::path::Path::new(path);
+                if let Some(dir) = p.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                    }
+                }
+                // File form matches `dsd sweep --out` byte-for-byte:
+                // exact summary text plus one trailing newline.
+                std::fs::write(p, format!("{text}\n")).map_err(|e| e.to_string())?;
+                eprintln!("[submit] wrote {}", p.display());
+            }
+            None => println!("{text}"),
+        }
+        Ok(())
+    };
+    if a.flag("ping") {
+        client.ping()?;
+        println!("ok");
+        return Ok(());
+    }
+    if a.flag("shutdown") {
+        client.shutdown_server()?;
+        println!("draining");
+        return Ok(());
+    }
+    if a.flag("status") {
+        let (state, done, total, failed) = client.poll(job_arg()?)?;
+        println!("{} {done}/{total} ({failed} failed)", state.label());
+        return Ok(());
+    }
+    if a.flag("cancel") {
+        let id = job_arg()?;
+        client.cancel(id)?;
+        println!("cancelled job {id}");
+        return Ok(());
+    }
+    if a.flag("fetch") {
+        let text = client.fetch_summary(job_arg()?)?;
+        return print_summary(&text);
+    }
+    // Default flow: submit a grid, wait for completion, fetch.
+    let grid_path = a
+        .get("grid")
+        .ok_or("submit: pass --grid <grid.yaml> (or one of --status/--fetch/--cancel/--shutdown/--ping)")?;
+    let grid_yaml = std::fs::read_to_string(grid_path)
+        .map_err(|e| format!("read {grid_path}: {e}"))?;
+    let streaming = if a.flag("streaming") { Some(true) } else { None };
+    let id = client.submit_grid_text(&grid_yaml, streaming)?;
+    eprintln!("[submit] job {id} accepted by {addr}");
+    if a.flag("no-wait") {
+        println!("{id}");
+        return Ok(());
+    }
+    let poll_ms = a.get_u64("poll-ms").map_err(|e| e.to_string())?.unwrap();
+    let wait_ms = a.get_u64("wait-ms").map_err(|e| e.to_string())?.unwrap();
+    let (state, done, total, failed) = client.wait(id, poll_ms, wait_ms)?;
+    match state {
+        dsd::serve::JobState::Completed => {
+            eprintln!("[submit] job {id} completed: {done}/{total} cells ({failed} failed)");
+            let text = client.fetch_summary(id)?;
+            print_summary(&text)?;
+            if failed > 0 {
+                return Err(format!("{failed} of {total} cells failed"));
+            }
+            Ok(())
+        }
+        other => Err(format!("submit: job {id} ended {}", other.label())),
+    }
 }
 
 fn cmd_awc_eval(rest: &[String]) -> Result<(), String> {

@@ -1,0 +1,167 @@
+//! Blocking line-protocol client for the grid service — the library
+//! behind `dsd submit`, and the harness the end-to-end service tests
+//! drive.
+
+use super::job::JobState;
+use super::protocol::{Request, PROTOCOL_VERSION};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// One connection to a [`crate::serve::GridService`].
+pub struct GridClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl GridClient {
+    /// Connect with a per-operation socket timeout.
+    pub fn connect(addr: &str, timeout_ms: u64) -> Result<GridClient, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("submit: connect {addr}: {e}"))?;
+        let timeout = Some(Duration::from_millis(timeout_ms.max(1)));
+        stream
+            .set_read_timeout(timeout)
+            .map_err(|e| format!("submit: set timeout: {e}"))?;
+        stream
+            .set_write_timeout(timeout)
+            .map_err(|e| format!("submit: set timeout: {e}"))?;
+        let writer = stream
+            .try_clone()
+            .map_err(|e| format!("submit: clone stream: {e}"))?;
+        Ok(GridClient {
+            writer,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    /// Send one raw line and read one response line — the hatch the
+    /// malformed-input tests use to bypass [`Request`]'s typed encoding.
+    pub fn request_line(&mut self, line: &str) -> Result<Json, String> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| format!("submit: send: {e}"))?;
+        let mut resp = String::new();
+        self.reader
+            .read_line(&mut resp)
+            .map_err(|e| format!("submit: recv: {e}"))?;
+        if resp.is_empty() {
+            return Err("submit: server closed the connection".into());
+        }
+        Json::parse(resp.trim()).map_err(|e| format!("submit: bad response: {e}"))
+    }
+
+    /// Send a typed request, return the decoded response object.
+    pub fn request(&mut self, req: &Request) -> Result<Json, String> {
+        self.request_line(&req.to_json().to_string_compact())
+    }
+
+    /// Send a typed request and demand success; protocol-level errors
+    /// come back as `Err("<code>: <message>")`.
+    fn request_ok(&mut self, req: &Request) -> Result<Json, String> {
+        let resp = self.request(req)?;
+        if resp.get("v").and_then(Json::as_u64) != Some(PROTOCOL_VERSION) {
+            return Err(format!(
+                "submit: response carries wrong protocol version: {}",
+                resp.to_string_compact()
+            ));
+        }
+        match resp.get("ok").and_then(Json::as_bool) {
+            Some(true) => Ok(resp),
+            _ => {
+                let code = resp
+                    .path(&["error", "code"])
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown");
+                let msg = resp
+                    .path(&["error", "message"])
+                    .and_then(Json::as_str)
+                    .unwrap_or("malformed error response");
+                Err(format!("{code}: {msg}"))
+            }
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), String> {
+        self.request_ok(&Request::Ping).map(|_| ())
+    }
+
+    /// Submit grid YAML text; returns the job id.
+    pub fn submit_grid_text(
+        &mut self,
+        grid_yaml: &str,
+        streaming: Option<bool>,
+    ) -> Result<u64, String> {
+        let resp = self.request_ok(&Request::SubmitGrid {
+            grid_yaml: grid_yaml.to_string(),
+            streaming,
+        })?;
+        resp.get("job")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| "submit: job-accepted response carries no job id".into())
+    }
+
+    /// Poll a job; returns `(state, done, total, failed_cells)`.
+    pub fn poll(&mut self, job: u64) -> Result<(JobState, usize, usize, usize), String> {
+        let resp = self.request_ok(&Request::PollProgress { job })?;
+        let state = match resp.get("state").and_then(Json::as_str) {
+            Some("queued") => JobState::Queued,
+            Some("running") => JobState::Running,
+            Some("completed") => JobState::Completed,
+            Some("failed") => JobState::Failed,
+            Some("cancelled") => JobState::Cancelled,
+            other => return Err(format!("submit: unknown job state {other:?}")),
+        };
+        let n = |k: &str| resp.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok((state, n("done"), n("total"), n("failed_cells")))
+    }
+
+    /// Fetch the exact summary text of a completed job.
+    pub fn fetch_summary(&mut self, job: u64) -> Result<String, String> {
+        let resp = self.request_ok(&Request::FetchSummary { job })?;
+        resp.get("summary")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| "submit: summary response carries no summary".into())
+    }
+
+    /// Cancel a job.
+    pub fn cancel(&mut self, job: u64) -> Result<(), String> {
+        self.request_ok(&Request::Cancel { job }).map(|_| ())
+    }
+
+    /// Ask the server to drain and exit.
+    pub fn shutdown_server(&mut self) -> Result<(), String> {
+        self.request_ok(&Request::Shutdown).map(|_| ())
+    }
+
+    /// Poll `job` every `poll_ms` until it leaves the queued/running
+    /// states or `timeout_ms` elapses. Returns the terminal state and
+    /// the final progress numbers.
+    pub fn wait(
+        &mut self,
+        job: u64,
+        poll_ms: u64,
+        timeout_ms: u64,
+    ) -> Result<(JobState, usize, usize, usize), String> {
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+        loop {
+            let snap = self.poll(job)?;
+            match snap.0 {
+                JobState::Queued | JobState::Running => {}
+                _ => return Ok(snap),
+            }
+            if Instant::now() >= deadline {
+                return Err(format!(
+                    "submit: job {job} still {} after {timeout_ms} ms",
+                    snap.0.label()
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(poll_ms.max(1)));
+        }
+    }
+}

@@ -1,0 +1,474 @@
+//! Bounded job queue shared between the service's connection threads
+//! (producers) and its single sweep worker (consumer).
+//!
+//! The queue is a `Mutex<_>` + `Condvar` pair — no channels, no
+//! dependencies — and is bounded by the number of *non-terminal* jobs
+//! (queued + running): a full queue rejects submissions with
+//! backpressure instead of buffering grids without limit. Terminal jobs
+//! (completed / failed / cancelled) stay resident so late `poll` /
+//! `fetch` requests can still be answered; they don't count against the
+//! bound.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Lifecycle of one submitted grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for the worker.
+    Queued,
+    /// The worker is executing its cells.
+    Running,
+    /// All cells done; summary available.
+    Completed,
+    /// The grid failed to parse/expand, or every path errored.
+    Failed,
+    /// Cancelled before completion (queued jobs skip execution;
+    /// running jobs stop at the next chunk boundary).
+    Cancelled,
+}
+
+impl JobState {
+    /// Wire label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    fn terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::Failed | JobState::Cancelled
+        )
+    }
+}
+
+/// Public progress snapshot of a job.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    /// Job id (assigned at submit, monotonically increasing from 0).
+    pub id: u64,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Cells finished so far (executed + cache-served).
+    pub done: usize,
+    /// Total cells in the job's grid (0 until the worker expands it).
+    pub total: usize,
+    /// Cells that entered the simulator.
+    pub executed: usize,
+    /// Cells served from the cell cache.
+    pub cache_hits: usize,
+    /// Cells whose outcome is an error.
+    pub failed_cells: usize,
+    /// Failure reason (Failed state only).
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    /// Wire encoding of a `poll-progress` answer's payload.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("job", self.id.into())
+            .with("state", self.state.label().into())
+            .with("done", (self.done as u64).into())
+            .with("total", (self.total as u64).into())
+            .with("executed", (self.executed as u64).into())
+            .with("cache_hits", (self.cache_hits as u64).into())
+            .with("failed_cells", (self.failed_cells as u64).into());
+        if let Some(e) = &self.error {
+            j.set("error", e.as_str().into());
+        }
+        j
+    }
+}
+
+/// One job's full record (internal).
+struct Job {
+    status: JobStatus,
+    grid_yaml: String,
+    streaming: Option<bool>,
+    /// Exact pretty summary text (Completed only).
+    summary: Option<String>,
+}
+
+/// What the worker receives for one unit of work.
+pub struct ClaimedJob {
+    /// Job id to report progress against.
+    pub id: u64,
+    /// The submitted grid YAML, verbatim.
+    pub grid_yaml: String,
+    /// Submit-time streaming override (`None` = grid decides).
+    pub streaming: Option<bool>,
+}
+
+/// Why a submission was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bound on live (queued + running) jobs is reached.
+    QueueFull { live: usize, max: usize },
+    /// The service is draining; no new work is accepted.
+    Draining,
+}
+
+impl SubmitError {
+    /// Stable wire code (service-level, same namespace as parse codes).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::QueueFull { .. } => "queue-full",
+            SubmitError::Draining => "shutting-down",
+        }
+    }
+
+    /// Human-readable description.
+    pub fn message(&self) -> String {
+        match self {
+            SubmitError::QueueFull { live, max } => format!(
+                "job queue is full ({live} live jobs, bound {max}); retry after a job finishes"
+            ),
+            SubmitError::Draining => "service is shutting down; no new jobs accepted".into(),
+        }
+    }
+}
+
+/// Why a summary fetch was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FetchError {
+    /// No job with that id was ever submitted.
+    UnknownJob,
+    /// The job exists but hasn't completed yet.
+    NotComplete { state: JobState },
+    /// The job terminated without a summary.
+    JobFailed { error: String },
+    /// The job was cancelled.
+    JobCancelled,
+}
+
+impl FetchError {
+    /// Stable wire code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            FetchError::UnknownJob => "unknown-job",
+            FetchError::NotComplete { .. } => "not-complete",
+            FetchError::JobFailed { .. } => "job-failed",
+            FetchError::JobCancelled => "job-cancelled",
+        }
+    }
+
+    /// Human-readable description.
+    pub fn message(&self) -> String {
+        match self {
+            FetchError::UnknownJob => "no such job".into(),
+            FetchError::NotComplete { state } => format!(
+                "job is {} — poll until it completes before fetching",
+                state.label()
+            ),
+            FetchError::JobFailed { error } => format!("job failed: {error}"),
+            FetchError::JobCancelled => "job was cancelled".into(),
+        }
+    }
+}
+
+struct QueueInner {
+    jobs: Vec<Job>,
+    /// Ids waiting for the worker, FIFO.
+    pending: VecDeque<u64>,
+    draining: bool,
+}
+
+/// The bounded FIFO job queue. All methods are `&self`; one instance is
+/// shared via `Arc` between connection threads and the worker.
+pub struct JobQueue {
+    inner: Mutex<QueueInner>,
+    /// Signals the worker (new job, or drain).
+    wake: Condvar,
+    max_live: usize,
+}
+
+impl JobQueue {
+    /// A queue admitting at most `max_live` non-terminal jobs.
+    pub fn new(max_live: usize) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(QueueInner {
+                jobs: Vec::new(),
+                pending: VecDeque::new(),
+                draining: false,
+            }),
+            wake: Condvar::new(),
+            max_live: max_live.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner> {
+        // A connection thread that panics while holding the lock has
+        // already been contained at the request level; the shared state
+        // it touches here is monotonic counters, safe to keep serving.
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Enqueue a grid; returns the new job id or a named refusal.
+    pub fn submit(&self, grid_yaml: String, streaming: Option<bool>) -> Result<u64, SubmitError> {
+        let mut q = self.lock();
+        if q.draining {
+            return Err(SubmitError::Draining);
+        }
+        let live = q.jobs.iter().filter(|j| !j.status.state.terminal()).count();
+        if live >= self.max_live {
+            return Err(SubmitError::QueueFull {
+                live,
+                max: self.max_live,
+            });
+        }
+        let id = q.jobs.len() as u64;
+        q.jobs.push(Job {
+            status: JobStatus {
+                id,
+                state: JobState::Queued,
+                done: 0,
+                total: 0,
+                executed: 0,
+                cache_hits: 0,
+                failed_cells: 0,
+                error: None,
+            },
+            grid_yaml,
+            streaming,
+            summary: None,
+        });
+        q.pending.push_back(id);
+        drop(q);
+        self.wake.notify_all();
+        Ok(id)
+    }
+
+    /// Progress snapshot; `None` for an id never issued.
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.lock()
+            .jobs
+            .get(id as usize)
+            .map(|j| j.status.clone())
+    }
+
+    /// Exact summary text of a completed job.
+    pub fn summary(&self, id: u64) -> Result<String, FetchError> {
+        let q = self.lock();
+        let job = q.jobs.get(id as usize).ok_or(FetchError::UnknownJob)?;
+        match job.status.state {
+            JobState::Completed => Ok(job
+                .summary
+                .clone()
+                .expect("completed job carries a summary")),
+            JobState::Failed => Err(FetchError::JobFailed {
+                error: job
+                    .status
+                    .error
+                    .clone()
+                    .unwrap_or_else(|| "unknown error".into()),
+            }),
+            JobState::Cancelled => Err(FetchError::JobCancelled),
+            state => Err(FetchError::NotComplete { state }),
+        }
+    }
+
+    /// Cancel a job. Queued jobs flip to Cancelled immediately (the
+    /// worker skips them); a running job stops at its next chunk
+    /// boundary. Terminal jobs are left as-is (idempotent). `false` for
+    /// an unknown id.
+    pub fn cancel(&self, id: u64) -> bool {
+        let mut q = self.lock();
+        let Some(job) = q.jobs.get_mut(id as usize) else {
+            return false;
+        };
+        match job.status.state {
+            JobState::Queued | JobState::Running => {
+                job.status.state = JobState::Cancelled;
+                true
+            }
+            _ => true,
+        }
+    }
+
+    /// Stop intake: pending submissions after this are refused, and
+    /// [`JobQueue::next_job`] returns `None` once the pending queue is
+    /// empty (letting the worker exit after finishing what's in flight).
+    pub fn drain(&self) {
+        self.lock().draining = true;
+        self.wake.notify_all();
+    }
+
+    /// Whether a drain was requested.
+    pub fn draining(&self) -> bool {
+        self.lock().draining
+    }
+
+    /// Worker side: block until a job is available or the queue drains.
+    /// Cancelled-while-queued jobs are skipped here. Returns `None`
+    /// exactly when draining and nothing is pending — the worker's exit
+    /// signal.
+    pub fn next_job(&self) -> Option<ClaimedJob> {
+        let mut q = self.lock();
+        loop {
+            while let Some(id) = q.pending.pop_front() {
+                let job = &mut q.jobs[id as usize];
+                if job.status.state != JobState::Queued {
+                    continue; // cancelled while queued
+                }
+                job.status.state = JobState::Running;
+                return Some(ClaimedJob {
+                    id,
+                    grid_yaml: job.grid_yaml.clone(),
+                    streaming: job.streaming,
+                });
+            }
+            if q.draining {
+                return None;
+            }
+            q = match self.wake.wait(q) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// Worker side: record the expanded cell count when execution starts.
+    pub fn mark_running(&self, id: u64, total: usize) {
+        if let Some(job) = self.lock().jobs.get_mut(id as usize) {
+            job.status.total = total;
+        }
+    }
+
+    /// Worker side: fold one finished chunk into the job's counters.
+    pub fn progress(&self, id: u64, done: usize, executed: usize, hits: usize, failed: usize) {
+        if let Some(job) = self.lock().jobs.get_mut(id as usize) {
+            job.status.done += done;
+            job.status.executed += executed;
+            job.status.cache_hits += hits;
+            job.status.failed_cells += failed;
+        }
+    }
+
+    /// Worker side: has this job been cancelled? (Checked between
+    /// chunks; also true for any other terminal state.)
+    pub fn is_cancelled(&self, id: u64) -> bool {
+        self.lock()
+            .jobs
+            .get(id as usize)
+            .map(|j| j.status.state != JobState::Running)
+            .unwrap_or(true)
+    }
+
+    /// Worker side: finish a job. `Ok(summary_text)` completes it with
+    /// the exact summary bytes; `Err(why)` fails it. A job cancelled
+    /// mid-run stays Cancelled.
+    pub fn finish(&self, id: u64, outcome: Result<String, String>) {
+        let mut q = self.lock();
+        let Some(job) = q.jobs.get_mut(id as usize) else {
+            return;
+        };
+        if job.status.state != JobState::Running {
+            return; // cancelled while running: keep the Cancelled state
+        }
+        match outcome {
+            Ok(text) => {
+                job.status.state = JobState::Completed;
+                job.summary = Some(text);
+            }
+            Err(why) => {
+                job.status.state = JobState::Failed;
+                job.status.error = Some(why);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_claim_finish_lifecycle() {
+        let q = JobQueue::new(4);
+        let id = q.submit("base:\n".into(), None).unwrap();
+        assert_eq!(q.status(id).unwrap().state, JobState::Queued);
+        let claimed = q.next_job().unwrap();
+        assert_eq!(claimed.id, id);
+        assert_eq!(q.status(id).unwrap().state, JobState::Running);
+        q.mark_running(id, 10);
+        q.progress(id, 4, 3, 1, 0);
+        let st = q.status(id).unwrap();
+        assert_eq!((st.done, st.total, st.executed, st.cache_hits), (4, 10, 3, 1));
+        q.finish(id, Ok("summary text".into()));
+        assert_eq!(q.status(id).unwrap().state, JobState::Completed);
+        assert_eq!(q.summary(id).unwrap(), "summary text");
+    }
+
+    #[test]
+    fn bound_counts_only_live_jobs() {
+        let q = JobQueue::new(2);
+        let a = q.submit("a".into(), None).unwrap();
+        let _b = q.submit("b".into(), None).unwrap();
+        assert_eq!(
+            q.submit("c".into(), None).unwrap_err().code(),
+            "queue-full"
+        );
+        // Finishing a job frees a slot.
+        let claimed = q.next_job().unwrap();
+        assert_eq!(claimed.id, a);
+        q.finish(a, Err("boom".into()));
+        assert!(q.submit("c".into(), None).is_ok());
+    }
+
+    #[test]
+    fn cancel_paths() {
+        let q = JobQueue::new(4);
+        let a = q.submit("a".into(), None).unwrap();
+        let b = q.submit("b".into(), None).unwrap();
+        // Cancel while queued: the worker never sees it.
+        assert!(q.cancel(a));
+        assert_eq!(q.status(a).unwrap().state, JobState::Cancelled);
+        assert_eq!(q.next_job().unwrap().id, b);
+        // Cancel while running: worker observes it between chunks and
+        // finish() keeps the cancelled state.
+        assert!(q.cancel(b));
+        assert!(q.is_cancelled(b));
+        q.finish(b, Ok("late".into()));
+        assert_eq!(q.status(b).unwrap().state, JobState::Cancelled);
+        assert_eq!(q.summary(b).unwrap_err().code(), "job-cancelled");
+        // Unknown ids are reported, not panicked on.
+        assert!(!q.cancel(99));
+        assert!(q.status(99).is_none());
+        assert_eq!(q.summary(99).unwrap_err().code(), "unknown-job");
+    }
+
+    #[test]
+    fn drain_stops_intake_and_releases_worker() {
+        let q = JobQueue::new(4);
+        q.submit("a".into(), None).unwrap();
+        q.drain();
+        assert_eq!(q.submit("b".into(), None).unwrap_err().code(), "shutting-down");
+        // Pending work is still handed out before the None.
+        assert!(q.next_job().is_some());
+        assert!(q.next_job().is_none());
+    }
+
+    #[test]
+    fn fetch_before_completion_names_the_state() {
+        let q = JobQueue::new(4);
+        let id = q.submit("a".into(), None).unwrap();
+        assert_eq!(q.summary(id).unwrap_err().code(), "not-complete");
+        q.next_job().unwrap();
+        assert_eq!(q.summary(id).unwrap_err().code(), "not-complete");
+        q.finish(id, Err("grid did not parse".into()));
+        let err = q.summary(id).unwrap_err();
+        assert_eq!(err.code(), "job-failed");
+        assert!(err.message().contains("grid did not parse"));
+    }
+}

@@ -1,0 +1,43 @@
+//! Long-running grid service — the network front half of the
+//! cluster-scale sweep story (the back half is `sweep::shard`).
+//!
+//! `dsd serve --listen <addr>` runs a [`service::GridService`]: a TCP
+//! listener speaking a line-delimited, versioned JSON protocol
+//! ([`protocol`]) over which clients submit sweep grids, poll progress,
+//! fetch finished summaries, and cancel jobs. Execution reuses the
+//! content-addressed cell cache, so a service pointed at a warm cache
+//! directory answers repeat submissions without re-simulating, and a
+//! grid being chewed by `--shard` workers elsewhere benefits from the
+//! shared `cells/` layout.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Validated parsing surface.** Every inbound line passes through
+//!    [`protocol::parse_request`], which never panics and maps every
+//!    malformed, unknown, over-version, or oversized input to a named
+//!    [`protocol::RequestError`] code. Fuzz-style property tests live
+//!    beside the parser.
+//! 2. **Bounded everything.** Request lines are size-capped *while
+//!    reading* (a 10 GB line never buffers), sockets carry read/write
+//!    timeouts, and the job queue is bounded — submissions beyond the
+//!    bound get a `queue-full` backpressure error instead of unbounded
+//!    memory growth.
+//! 3. **Deterministic outputs.** A fetched summary is the exact pretty
+//!    text the single-process `dsd sweep` run writes (transmitted as a
+//!    JSON string — string escaping is lossless, so no float
+//!    re-serialization can drift the bytes).
+//! 4. **Graceful drain.** A shutdown request stops intake, finishes the
+//!    running job, answers in-flight connections, then exits.
+//!
+//! [`client::GridClient`] is the matching blocking client; `dsd submit`
+//! wraps it on the CLI.
+
+pub mod client;
+pub mod job;
+pub mod protocol;
+pub mod service;
+
+pub use client::GridClient;
+pub use job::{JobQueue, JobState, JobStatus};
+pub use protocol::{parse_request, Request, RequestError, PROTOCOL_VERSION};
+pub use service::{GridService, ServeOptions};

@@ -1,0 +1,422 @@
+//! Wire protocol of the grid service: one JSON object per line, each
+//! carrying a protocol version, parsed through a surface that never
+//! panics and names every rejection.
+//!
+//! Request shapes (compact JSON, `\n`-terminated):
+//!
+//! ```text
+//! {"v":1,"type":"ping"}
+//! {"v":1,"type":"submit-grid","grid":"<grid.yaml text>","streaming":true}
+//! {"v":1,"type":"poll-progress","job":3}
+//! {"v":1,"type":"fetch-summary","job":3}
+//! {"v":1,"type":"cancel","job":3}
+//! {"v":1,"type":"shutdown"}
+//! ```
+//!
+//! Responses: `{"v":1,"ok":true,"type":...,...}` on success,
+//! `{"v":1,"ok":false,"error":{"code":"<kebab-name>","message":...}}`
+//! on rejection. Summaries travel as a JSON *string* holding the exact
+//! pretty summary text — string escaping round-trips losslessly, so the
+//! client receives bytes identical to the single-process `dsd sweep`
+//! output (re-encoding the summary as wire JSON would re-serialize
+//! every float and risk drift).
+
+use crate::util::json::Json;
+
+/// Wire protocol version; every request and response carries it as
+/// `"v"`. Bump on any incompatible shape change.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Default cap on one request line, bytes (grids are YAML text — 4 MiB
+/// is roomy; the cap exists so a hostile or broken peer cannot make the
+/// service buffer an unbounded line).
+pub const DEFAULT_MAX_REQUEST_BYTES: usize = 4 << 20;
+
+/// Default per-socket read/write timeout, ms.
+pub const DEFAULT_REQUEST_TIMEOUT_MS: u64 = 30_000;
+
+/// A validated inbound request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Liveness probe; answered immediately from the connection thread.
+    Ping,
+    /// Enqueue a sweep over `grid_yaml` (same schema as `dsd sweep
+    /// --grid`). `streaming: None` defers to the grid's own
+    /// `streaming:` key.
+    SubmitGrid {
+        grid_yaml: String,
+        streaming: Option<bool>,
+    },
+    /// Progress snapshot of a job.
+    PollProgress { job: u64 },
+    /// Full summary text of a completed job.
+    FetchSummary { job: u64 },
+    /// Cancel a queued or running job.
+    Cancel { job: u64 },
+    /// Stop intake, finish the running job, exit.
+    Shutdown,
+}
+
+impl Request {
+    /// Wire encoding (what [`crate::serve::GridClient`] sends).
+    pub fn to_json(&self) -> Json {
+        let base = Json::obj().with("v", PROTOCOL_VERSION.into());
+        match self {
+            Request::Ping => base.with("type", "ping".into()),
+            Request::SubmitGrid {
+                grid_yaml,
+                streaming,
+            } => {
+                let mut j = base
+                    .with("type", "submit-grid".into())
+                    .with("grid", grid_yaml.as_str().into());
+                if let Some(s) = streaming {
+                    j.set("streaming", (*s).into());
+                }
+                j
+            }
+            Request::PollProgress { job } => base
+                .with("type", "poll-progress".into())
+                .with("job", (*job).into()),
+            Request::FetchSummary { job } => base
+                .with("type", "fetch-summary".into())
+                .with("job", (*job).into()),
+            Request::Cancel { job } => {
+                base.with("type", "cancel".into()).with("job", (*job).into())
+            }
+            Request::Shutdown => base.with("type", "shutdown".into()),
+        }
+    }
+}
+
+/// Every way a request line can be rejected, each with a stable
+/// kebab-case code clients can branch on. Parsing never panics: any
+/// byte sequence maps to either a [`Request`] or one of these.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestError {
+    /// Line exceeded the configured byte cap (detected while reading —
+    /// the overflow is never buffered).
+    Oversized { len: usize, max: usize },
+    /// Not parseable as JSON at all.
+    MalformedJson { msg: String },
+    /// Valid JSON, but not an object.
+    NotAnObject,
+    /// Missing or non-integer `"v"`, or a version this server doesn't
+    /// speak.
+    BadVersion { got: String },
+    /// No `"type"` key.
+    MissingType,
+    /// A `"type"` this server doesn't know.
+    UnknownType { got: String },
+    /// A required field of the given request type is absent.
+    MissingField {
+        req: &'static str,
+        field: &'static str,
+    },
+    /// A field is present but of the wrong shape.
+    BadField {
+        req: &'static str,
+        field: &'static str,
+        want: &'static str,
+    },
+}
+
+impl RequestError {
+    /// Stable machine-readable code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            RequestError::Oversized { .. } => "oversized",
+            RequestError::MalformedJson { .. } => "malformed-json",
+            RequestError::NotAnObject => "not-an-object",
+            RequestError::BadVersion { .. } => "bad-version",
+            RequestError::MissingType => "missing-type",
+            RequestError::UnknownType { .. } => "unknown-type",
+            RequestError::MissingField { .. } => "missing-field",
+            RequestError::BadField { .. } => "bad-field",
+        }
+    }
+
+    /// Human-readable description (goes in the error response).
+    pub fn message(&self) -> String {
+        match self {
+            RequestError::Oversized { len, max } => {
+                format!("request line of {len}+ bytes exceeds the {max}-byte cap")
+            }
+            RequestError::MalformedJson { msg } => format!("malformed JSON: {msg}"),
+            RequestError::NotAnObject => "request must be a JSON object".into(),
+            RequestError::BadVersion { got } => format!(
+                "unsupported protocol version {got} (this server speaks v{PROTOCOL_VERSION})"
+            ),
+            RequestError::MissingType => "request has no 'type' key".into(),
+            RequestError::UnknownType { got } => format!(
+                "unknown request type '{got}' (known: ping, submit-grid, \
+                 poll-progress, fetch-summary, cancel, shutdown)"
+            ),
+            RequestError::MissingField { req, field } => {
+                format!("{req} request is missing required field '{field}'")
+            }
+            RequestError::BadField { req, field, want } => {
+                format!("{req} request field '{field}' must be {want}")
+            }
+        }
+    }
+}
+
+/// Parse one request line. Never panics; every outcome is either a
+/// [`Request`] or a named [`RequestError`]. `max_bytes` re-checks the
+/// reader's cap so the parser is safe standalone (e.g. under fuzzing).
+pub fn parse_request(line: &str, max_bytes: usize) -> Result<Request, RequestError> {
+    if line.len() > max_bytes {
+        return Err(RequestError::Oversized {
+            len: line.len(),
+            max: max_bytes,
+        });
+    }
+    let doc = Json::parse(line.trim()).map_err(|e| RequestError::MalformedJson {
+        msg: e.to_string(),
+    })?;
+    if !matches!(doc, Json::Obj(_)) {
+        return Err(RequestError::NotAnObject);
+    }
+    match doc.get("v").and_then(Json::as_u64) {
+        Some(PROTOCOL_VERSION) => {}
+        _ => {
+            return Err(RequestError::BadVersion {
+                got: match doc.get("v") {
+                    None => "<absent>".into(),
+                    Some(v) => v.to_string_compact(),
+                },
+            })
+        }
+    }
+    let ty = match doc.get("type") {
+        None => return Err(RequestError::MissingType),
+        Some(t) => t.as_str().ok_or(RequestError::BadField {
+            req: "any",
+            field: "type",
+            want: "a string",
+        })?,
+    };
+    let job_field = |req: &'static str| -> Result<u64, RequestError> {
+        match doc.get("job") {
+            None => Err(RequestError::MissingField { req, field: "job" }),
+            Some(j) => j.as_u64().ok_or(RequestError::BadField {
+                req,
+                field: "job",
+                want: "a non-negative integer",
+            }),
+        }
+    };
+    match ty {
+        "ping" => Ok(Request::Ping),
+        "submit-grid" => {
+            let grid_yaml = match doc.get("grid") {
+                None => {
+                    return Err(RequestError::MissingField {
+                        req: "submit-grid",
+                        field: "grid",
+                    })
+                }
+                Some(g) => g
+                    .as_str()
+                    .ok_or(RequestError::BadField {
+                        req: "submit-grid",
+                        field: "grid",
+                        want: "a string of grid YAML",
+                    })?
+                    .to_string(),
+            };
+            let streaming = match doc.get("streaming") {
+                None => None,
+                Some(s) => Some(s.as_bool().ok_or(RequestError::BadField {
+                    req: "submit-grid",
+                    field: "streaming",
+                    want: "a boolean",
+                })?),
+            };
+            Ok(Request::SubmitGrid {
+                grid_yaml,
+                streaming,
+            })
+        }
+        "poll-progress" => Ok(Request::PollProgress {
+            job: job_field("poll-progress")?,
+        }),
+        "fetch-summary" => Ok(Request::FetchSummary {
+            job: job_field("fetch-summary")?,
+        }),
+        "cancel" => Ok(Request::Cancel {
+            job: job_field("cancel")?,
+        }),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(RequestError::UnknownType { got: other.into() }),
+    }
+}
+
+/// Success response envelope: `{"v":1,"ok":true,"type":<ty>,...fields}`.
+pub fn ok_response(ty: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut j = Json::obj()
+        .with("v", PROTOCOL_VERSION.into())
+        .with("ok", true.into())
+        .with("type", ty.into());
+    for (k, v) in fields {
+        j.set(k, v);
+    }
+    j
+}
+
+/// Error response envelope:
+/// `{"v":1,"ok":false,"error":{"code":...,"message":...}}`.
+pub fn error_response(code: &str, message: &str) -> Json {
+    Json::obj()
+        .with("v", PROTOCOL_VERSION.into())
+        .with("ok", false.into())
+        .with(
+            "error",
+            Json::obj()
+                .with("code", code.into())
+                .with("message", message.into()),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{run_prop, Gen};
+
+    const MAX: usize = DEFAULT_MAX_REQUEST_BYTES;
+
+    #[test]
+    fn valid_requests_roundtrip_through_their_wire_encoding() {
+        let reqs = [
+            Request::Ping,
+            Request::SubmitGrid {
+                grid_yaml: "base:\n  seed: 3\nsweep:\n  rtt_ms: [5, 40]\n".into(),
+                streaming: Some(true),
+            },
+            Request::SubmitGrid {
+                grid_yaml: "".into(),
+                streaming: None,
+            },
+            Request::PollProgress { job: 0 },
+            Request::FetchSummary { job: 42 },
+            Request::Cancel { job: 7 },
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.to_json().to_string_compact();
+            assert_eq!(parse_request(&line, MAX), Ok(r.clone()), "{line}");
+        }
+    }
+
+    #[test]
+    fn every_rejection_is_a_named_error() {
+        let cases: [(&str, &str); 10] = [
+            ("", "malformed-json"),
+            ("not json at all", "malformed-json"),
+            ("[1,2,3]", "not-an-object"),
+            ("42", "not-an-object"),
+            ("{\"type\":\"ping\"}", "bad-version"),
+            ("{\"v\":99,\"type\":\"ping\"}", "bad-version"),
+            ("{\"v\":1}", "missing-type"),
+            ("{\"v\":1,\"type\":\"frobnicate\"}", "unknown-type"),
+            ("{\"v\":1,\"type\":\"submit-grid\"}", "missing-field"),
+            ("{\"v\":1,\"type\":\"poll-progress\",\"job\":\"x\"}", "bad-field"),
+        ];
+        for (line, want) in cases {
+            let err = parse_request(line, MAX).unwrap_err();
+            assert_eq!(err.code(), want, "'{line}' → {err:?}");
+            assert!(!err.message().is_empty());
+        }
+    }
+
+    #[test]
+    fn oversized_lines_are_rejected_by_length_alone() {
+        let line = format!("{{\"v\":1,\"type\":\"ping\",\"pad\":\"{}\"}}", "x".repeat(64));
+        assert_eq!(
+            parse_request(&line, 32).unwrap_err().code(),
+            "oversized",
+            "cap applies before parsing"
+        );
+        assert!(parse_request(&line, MAX).is_ok());
+    }
+
+    #[test]
+    fn non_integer_and_negative_versions_are_bad_version() {
+        for line in [
+            "{\"v\":\"1\",\"type\":\"ping\"}",
+            "{\"v\":1.5,\"type\":\"ping\"}",
+            "{\"v\":-1,\"type\":\"ping\"}",
+            "{\"v\":null,\"type\":\"ping\"}",
+        ] {
+            assert_eq!(parse_request(line, MAX).unwrap_err().code(), "bad-version");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_resolve_to_first_occurrence_without_panicking() {
+        // The in-repo JSON decoder keeps duplicate keys and `get`
+        // returns the first — the parser must stay deterministic and
+        // panic-free on such input, whatever it resolves to.
+        let line = "{\"v\":1,\"v\":99,\"type\":\"ping\",\"type\":\"shutdown\"}";
+        assert_eq!(parse_request(line, MAX), Ok(Request::Ping));
+    }
+
+    /// ISSUE satellite: random, truncated, duplicate-key, and oversized
+    /// inputs never panic and always yield a named error (or a valid
+    /// request).
+    #[test]
+    fn prop_arbitrary_bytes_never_panic() {
+        run_prop("parse_request total on arbitrary input", 300, |g: &mut Gen| {
+            let len = g.usize_in(0, 200);
+            let line: String = (0..len)
+                .map(|_| {
+                    // Mix of JSON-ish punctuation, letters, and controls.
+                    let pool = b"{}[]\":,truefalsenull0123456789.vtypejob \t\x7f\x01";
+                    *g.pick(pool) as char
+                })
+                .collect();
+            match parse_request(&line, 128) {
+                Ok(_) => {}
+                Err(e) => {
+                    assert!(!e.code().is_empty());
+                    assert!(!e.message().is_empty());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_truncations_of_valid_requests_never_panic() {
+        run_prop("parse_request total on truncated requests", 100, |g: &mut Gen| {
+            let full = Request::SubmitGrid {
+                grid_yaml: "base:\n  seed: 1\n".into(),
+                streaming: Some(false),
+            }
+            .to_json()
+            .to_string_compact();
+            let cut = g.usize_in(0, full.len());
+            // Cut at a char boundary (the wire encoding here is ASCII).
+            let line = &full[..cut];
+            match parse_request(line, MAX) {
+                Ok(r) => assert!(cut == full.len() && matches!(r, Request::SubmitGrid { .. })),
+                Err(e) => assert!(!e.code().is_empty()),
+            }
+        });
+    }
+
+    #[test]
+    fn response_envelopes_have_the_documented_shape() {
+        let ok = ok_response("pong", vec![("jobs", 3u64.into())]);
+        assert_eq!(ok.get("v").and_then(Json::as_u64), Some(PROTOCOL_VERSION));
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(ok.get("type").and_then(Json::as_str), Some("pong"));
+        assert_eq!(ok.get("jobs").and_then(Json::as_u64), Some(3));
+        let err = error_response("queue-full", "try later");
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            err.path(&["error", "code"]).and_then(Json::as_str),
+            Some("queue-full")
+        );
+    }
+}

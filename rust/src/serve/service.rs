@@ -1,0 +1,357 @@
+//! The grid service proper: TCP acceptor, per-connection request loop,
+//! and the single sweep worker thread.
+//!
+//! Thread topology (mirroring the coordinator's explicit-thread idiom):
+//!
+//! ```text
+//! acceptor ──spawns──▶ connection threads ──▶ JobQueue ◀── worker
+//!    │                      │ (parse, respond)               │ (run cells)
+//!    └── nonblocking poll   └── per-socket timeouts          └── chunked, cancellable
+//! ```
+//!
+//! The worker executes one job at a time through the same
+//! [`run_cells_cached`] path as `dsd sweep` — in chunks, so progress
+//! advances and cancellation takes effect at chunk boundaries, and
+//! against an optional shared cell cache, so repeat submissions and
+//! externally sharded runs are served from disk.
+
+use super::job::{ClaimedJob, JobQueue};
+use super::protocol::{
+    error_response, ok_response, parse_request, Request, RequestError,
+    DEFAULT_MAX_REQUEST_BYTES, DEFAULT_REQUEST_TIMEOUT_MS,
+};
+use crate::sweep::{run_cells_cached, CellCache, CellResult, SweepGrid, SweepSummary};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Service tuning knobs (all bounded; all defaulted).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Worker threads per job's cell execution (0 = one per core).
+    pub threads: usize,
+    /// Run directory whose `cells/` subdirectory backs execution;
+    /// `None` runs uncached.
+    pub cache_dir: Option<PathBuf>,
+    /// Bound on live (queued + running) jobs.
+    pub max_jobs: usize,
+    /// Bound on one request line, bytes.
+    pub max_request_bytes: usize,
+    /// Per-socket read/write timeout, ms.
+    pub request_timeout_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            threads: 0,
+            cache_dir: None,
+            max_jobs: 16,
+            max_request_bytes: DEFAULT_MAX_REQUEST_BYTES,
+            request_timeout_ms: DEFAULT_REQUEST_TIMEOUT_MS,
+        }
+    }
+}
+
+/// A running grid service. Dropping it without [`GridService::join`]
+/// leaves the threads running; the CLI and tests always join.
+pub struct GridService {
+    addr: SocketAddr,
+    queue: Arc<JobQueue>,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GridService {
+    /// Bind `listen` (e.g. `127.0.0.1:7433`; port 0 picks a free port)
+    /// and start the acceptor + worker threads.
+    pub fn start(listen: &str, opts: ServeOptions) -> Result<GridService, String> {
+        let listener =
+            TcpListener::bind(listen).map_err(|e| format!("serve: bind {listen}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("serve: set_nonblocking: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("serve: local_addr: {e}"))?;
+        let cache = match &opts.cache_dir {
+            Some(dir) => Some(CellCache::open(&dir.join("cells"))?),
+            None => None,
+        };
+        let queue = Arc::new(JobQueue::new(opts.max_jobs));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let threads = opts.threads;
+            std::thread::spawn(move || worker_loop(&queue, threads, cache.as_ref()))
+        };
+        let acceptor = {
+            let queue = Arc::clone(&queue);
+            let shutdown = Arc::clone(&shutdown);
+            let opts = opts.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, queue, shutdown, opts);
+            })
+        };
+        Ok(GridService {
+            addr,
+            queue,
+            shutdown,
+            acceptor: Some(acceptor),
+            worker: Some(worker),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Programmatic shutdown: same path as a `shutdown` request.
+    pub fn shutdown(&self) {
+        self.queue.drain();
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for the drain to finish: the worker exits after the pending
+    /// queue empties, then the acceptor notices the flag and exits.
+    /// (Connection threads close with their sockets and are detached.)
+    pub fn join(mut self) {
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        // The worker only exits on drain, so the flag is already set
+        // (either by a shutdown request or by `shutdown()`); the
+        // acceptor sees it within one poll interval.
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+fn accept_loop(
+    listener: TcpListener,
+    queue: Arc<JobQueue>,
+    shutdown: Arc<AtomicBool>,
+    opts: ServeOptions,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let queue = Arc::clone(&queue);
+                let shutdown = Arc::clone(&shutdown);
+                let opts = opts.clone();
+                std::thread::spawn(move || {
+                    handle_connection(stream, &queue, &shutdown, &opts);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                eprintln!("[serve] accept error: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// Read one `\n`-terminated line, enforcing the byte cap *while
+/// reading*: an over-long line is discarded as it streams in and
+/// surfaces as `Oversized` without ever being buffered whole.
+/// `Ok(None)` is a clean EOF; `Err(io)` covers timeouts and resets.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    max: usize,
+) -> std::io::Result<Option<Result<String, RequestError>>> {
+    let mut line = String::new();
+    let mut overflowed = false;
+    let mut total = 0usize;
+    loop {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            // EOF mid-line: treat a non-empty partial as a final line.
+            if line.is_empty() && !overflowed {
+                return Ok(None);
+            }
+            break;
+        }
+        let (chunk, saw_newline) = match buf.iter().position(|&b| b == b'\n') {
+            Some(i) => (&buf[..i], true),
+            None => (buf, false),
+        };
+        let consume = chunk.len() + usize::from(saw_newline);
+        total += chunk.len();
+        if total > max {
+            overflowed = true;
+            line.clear();
+        } else if !overflowed {
+            line.push_str(&String::from_utf8_lossy(chunk));
+        }
+        reader.consume(consume);
+        if saw_newline {
+            break;
+        }
+    }
+    if overflowed {
+        return Ok(Some(Err(RequestError::Oversized { len: total, max })));
+    }
+    Ok(Some(Ok(line)))
+}
+
+fn write_response(stream: &mut TcpStream, response: &Json) -> std::io::Result<()> {
+    let mut text = response.to_string_compact();
+    text.push('\n');
+    stream.write_all(text.as_bytes())?;
+    stream.flush()
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    queue: &JobQueue,
+    shutdown: &AtomicBool,
+    opts: &ServeOptions,
+) {
+    let timeout = Some(Duration::from_millis(opts.request_timeout_ms.max(1)));
+    let _ = stream.set_read_timeout(timeout);
+    let _ = stream.set_write_timeout(timeout);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_bounded(&mut reader, opts.max_request_bytes) {
+            Ok(None) => return,          // clean EOF
+            Err(_) => return,            // timeout / reset: drop quietly
+            Ok(Some(Err(oversized))) => {
+                let resp = error_response(oversized.code(), &oversized.message());
+                let _ = write_response(&mut writer, &resp);
+                continue; // the offending line was fully discarded
+            }
+            Ok(Some(Ok(line))) => line,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line, opts.max_request_bytes) {
+            Err(e) => error_response(e.code(), &e.message()),
+            Ok(req) => dispatch(req, queue, shutdown),
+        };
+        if write_response(&mut writer, &response).is_err() {
+            return;
+        }
+    }
+}
+
+/// Answer one validated request against the shared queue.
+fn dispatch(req: Request, queue: &JobQueue, shutdown: &AtomicBool) -> Json {
+    match req {
+        Request::Ping => ok_response("pong", vec![]),
+        Request::SubmitGrid {
+            grid_yaml,
+            streaming,
+        } => {
+            // Validate the grid up front so a bad submission is a named
+            // synchronous error, not a job that fails later.
+            if let Err(e) = SweepGrid::from_yaml(&grid_yaml).and_then(|g| g.expand().map(|_| ()))
+            {
+                return error_response("grid-error", &e);
+            }
+            match queue.submit(grid_yaml, streaming) {
+                Ok(id) => ok_response("job-accepted", vec![("job", id.into())]),
+                Err(e) => error_response(e.code(), &e.message()),
+            }
+        }
+        Request::PollProgress { job } => match queue.status(job) {
+            Some(status) => merge_into(ok_response("progress", vec![]), status.to_json()),
+            None => error_response("unknown-job", "no such job"),
+        },
+        Request::FetchSummary { job } => match queue.summary(job) {
+            Ok(text) => ok_response(
+                "summary",
+                vec![("job", job.into()), ("summary", text.into())],
+            ),
+            Err(e) => error_response(e.code(), &e.message()),
+        },
+        Request::Cancel { job } => {
+            if queue.cancel(job) {
+                ok_response("cancelled", vec![("job", job.into())])
+            } else {
+                error_response("unknown-job", "no such job")
+            }
+        }
+        Request::Shutdown => {
+            queue.drain();
+            shutdown.store(true, Ordering::SeqCst);
+            ok_response("draining", vec![])
+        }
+    }
+}
+
+/// Append every key of `extra` (an object) to the envelope.
+fn merge_into(mut envelope: Json, extra: Json) -> Json {
+    if let Json::Obj(pairs) = extra {
+        for (k, v) in pairs {
+            envelope.set(&k, v);
+        }
+    }
+    envelope
+}
+
+/// The single sweep worker: claims jobs FIFO, executes their cells in
+/// chunks, exits when the queue drains.
+fn worker_loop(queue: &JobQueue, threads: usize, cache: Option<&CellCache>) {
+    while let Some(job) = queue.next_job() {
+        let outcome = run_job(&job, queue, threads, cache);
+        queue.finish(job.id, outcome);
+    }
+}
+
+fn run_job(
+    job: &ClaimedJob,
+    queue: &JobQueue,
+    threads: usize,
+    cache: Option<&CellCache>,
+) -> Result<String, String> {
+    let mut grid = SweepGrid::from_yaml(&job.grid_yaml)?;
+    let streaming = job.streaming.unwrap_or(grid.streaming);
+    grid.streaming = streaming;
+    let cells = grid.expand()?;
+    queue.mark_running(job.id, cells.len());
+    let threads = if threads == 0 {
+        crate::sweep::default_threads()
+    } else {
+        threads
+    };
+    // Chunked execution: big enough to keep every worker thread busy,
+    // small enough that progress moves and cancellation lands promptly.
+    let chunk = (threads.max(1) * 4).max(1);
+    let mut results: Vec<CellResult> = Vec::with_capacity(cells.len());
+    for batch in cells.chunks(chunk) {
+        if queue.is_cancelled(job.id) {
+            return Err("cancelled".into()); // finish() keeps Cancelled
+        }
+        let (mut rs, stats) = run_cells_cached(batch, streaming, threads, cache);
+        let failed = rs.iter().filter(|r| r.outcome.is_err()).count();
+        queue.progress(job.id, batch.len(), stats.executed, stats.cache_hits, failed);
+        results.append(&mut rs);
+    }
+    // Exact single-process bytes: the same constructor and printer
+    // `dsd sweep` uses (the file form appends one trailing newline;
+    // [`crate::serve::GridClient`] restores it when writing to disk).
+    let summary = SweepSummary::new(results, streaming);
+    Ok(summary.to_json().to_string_pretty())
+}

@@ -592,6 +592,7 @@ mod tests {
             time_series: None,
             autoscale: None,
             slo_interactive: None,
+            per_class: None,
         };
         let labels = vec![("rtt_ms".to_string(), "10".to_string())];
         cache.store(&key, &labels, &m).unwrap();
@@ -666,6 +667,7 @@ mod tests {
             time_series: None,
             autoscale: None,
             slo_interactive: None,
+            per_class: None,
         };
         cache.store(&key, &[], &m).unwrap();
         assert!(matches!(cache.load(&key), CacheLookup::Hit(_)));
@@ -726,6 +728,7 @@ mod tests {
             time_series: None,
             autoscale: None,
             slo_interactive: None,
+            per_class: None,
         };
         cache.store(&key, &[], &m).unwrap();
         // Orphans: wrong-name copy, old version tag, stale tmp file, and

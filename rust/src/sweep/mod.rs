@@ -33,6 +33,7 @@
 pub mod cache;
 pub mod grid;
 pub mod runner;
+pub mod shard;
 pub mod summary;
 
 pub use cache::{cell_key, CacheLookup, CellCache, CellKeyer, GcStats, SIM_VERSION_TAG};
@@ -43,5 +44,9 @@ pub use grid::{
 pub use runner::{
     default_threads, run_cells, run_cells_cached, run_grid, run_grid_cached,
     CellMetrics, CellResult, ClassCellMetrics, RunStats,
+};
+pub use shard::{
+    find_manifests, grid_fingerprint, merge_shard_dirs, shard_cells, MergeReport,
+    ShardManifest, ShardSpec,
 };
 pub use summary::SweepSummary;

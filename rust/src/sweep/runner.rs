@@ -493,7 +493,44 @@ pub fn run_cells_cached(
     (results, stats)
 }
 
+/// Sentinel dataset name that makes [`run_cell`] panic on entry — only
+/// honored under `cfg(test)`, where the panic-containment regression
+/// test needs a cell that panics instead of erroring.
+#[cfg(test)]
+pub(crate) const PANIC_INJECTION_DATASET: &str = "__panic_injection__";
+
 fn run_cell(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
+    // Panic containment: `run_cells_cached` workers run on
+    // `std::thread::scope` threads, where an escaped panic aborts the
+    // whole sweep when the scope joins (and would poison the result
+    // slots first). A panicking cell must instead surface exactly like
+    // an erroring cell — as a per-cell `Err` that persists through the
+    // bounded-retry failure-marker path — so one pathological
+    // configuration cannot take down a million-cell run. The closure
+    // only reads `cfg` (cloned inside) and returns an owned value, so
+    // `AssertUnwindSafe` is sound: no shared state survives the unwind.
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_cell_inner(cfg, streaming)
+    })) {
+        Ok(out) => out,
+        Err(payload) => {
+            let why = if let Some(s) = payload.downcast_ref::<&str>() {
+                s.to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(format!("cell panicked: {why}"))
+        }
+    }
+}
+
+fn run_cell_inner(cfg: &SimConfig, streaming: bool) -> Result<CellMetrics, String> {
+    #[cfg(test)]
+    if cfg.workload.dataset == PANIC_INJECTION_DATASET {
+        panic!("injected panic for containment test");
+    }
     // Fallible run variants: a window-policy construction failure (e.g.
     // a bad AWC weights path) must become a per-cell error, not a panic
     // on a scoped worker thread that would abort the whole sweep.
@@ -781,5 +818,59 @@ mod tests {
         }];
         let rs = run_grid(&grid, 2).unwrap();
         assert!(rs.iter().all(|r| r.outcome.is_err()));
+    }
+
+    #[test]
+    fn panicking_cell_becomes_failed_cell_not_aborted_sweep() {
+        // A cell that *panics* (vs returns Err) must be contained: the
+        // sweep completes, every other cell still runs, and the panic
+        // surfaces as that cell's error. Without `catch_unwind` in
+        // `run_cell` this test aborts — the scoped worker's panic
+        // re-raises when `std::thread::scope` joins.
+        let mut grid = tiny_grid();
+        grid.datasets = vec![PANIC_INJECTION_DATASET.into(), "gsm8k".into()];
+        let cells = grid.expand().unwrap();
+        let (rs, stats) = run_cells_cached(&cells, false, 3, None);
+        assert_eq!(rs.len(), cells.len());
+        assert_eq!(stats.executed, cells.len());
+        let (panicked, fine): (Vec<_>, Vec<_>) = rs
+            .iter()
+            .partition(|r| r.label("dataset") == Some(PANIC_INJECTION_DATASET));
+        assert!(!panicked.is_empty() && !fine.is_empty());
+        for r in &panicked {
+            let err = r.outcome.as_ref().unwrap_err();
+            assert!(err.contains("cell panicked"), "{err}");
+            assert!(err.contains("injected panic"), "payload kept: {err}");
+        }
+        // Healthy cells are unaffected by their panicking neighbors.
+        assert!(fine.iter().all(|r| r.outcome.is_ok()));
+    }
+
+    #[test]
+    fn panicking_cell_persists_through_bounded_retry_markers() {
+        use crate::sweep::cache::{CellCache, MAX_FAILED_ATTEMPTS};
+        let dir = std::env::temp_dir().join(format!(
+            "dsd-runner-cache-panic-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = CellCache::open(&dir).unwrap();
+        let mut grid = tiny_grid();
+        grid.datasets = vec![PANIC_INJECTION_DATASET.into()];
+        let cells = grid.expand().unwrap();
+        // Panics ride the same retry-counted failure markers as errors.
+        for _ in 0..MAX_FAILED_ATTEMPTS {
+            let (_, s) = run_cells_cached(&cells, false, 2, Some(&cache));
+            assert_eq!(s.executed, cells.len());
+        }
+        let (rs, s) = run_cells_cached(&cells, false, 2, Some(&cache));
+        assert_eq!(s.executed, 0, "persistent panic markers stop re-execution");
+        assert_eq!(s.failed_hits, cells.len());
+        for r in &rs {
+            let err = r.outcome.as_ref().unwrap_err();
+            assert!(err.contains("persistent failure"), "{err}");
+            assert!(err.contains("cell panicked"), "{err}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

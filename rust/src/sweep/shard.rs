@@ -1,0 +1,690 @@
+//! Deterministic grid sharding and shard-output merging — the
+//! horizontal-scale layer of the sweep subsystem.
+//!
+//! A [`ShardSpec`] (`--shard i/n` on the CLI) partitions a grid's cells
+//! by a **stable function of cell index** — `index % n == i` — never by
+//! hash or expansion order of a subset, so every process that expands
+//! the same grid agrees on the partition without coordination. Each
+//! shard runs its cells through the ordinary cached runner, writing the
+//! same content-addressed `cells/<key>.json` layout into its run
+//! directory (shared or per-shard), plus a [`ShardManifest`]
+//! (`summary-shard-<i>-of-<n>.json`) recording the grid fingerprint,
+//! the shard spec, and execution accounting.
+//!
+//! [`merge_shard_dirs`] (`dsd sweep --merge <dir>,...`) splices shard
+//! outputs back into one summary **byte-identical** to the
+//! single-process `dsd sweep` run: it verifies every manifest agrees on
+//! the grid fingerprint, shard count, metric mode, and filter; rejects
+//! overlapping or missing shards by name; re-expands the grid from the
+//! run directory's `grid.yaml` copy (re-deriving the fingerprint as a
+//! cross-check); and loads every cell from the union of the shard cell
+//! caches, surfacing persisted failure markers exactly the way a
+//! resumed single-process run would.
+
+use super::cache::{CacheLookup, CellCache, CellKeyer, MAX_FAILED_ATTEMPTS, SIM_VERSION_TAG};
+use super::grid::{filter_cells, parse_filter, SweepCell, SweepGrid};
+use super::runner::{CellResult, RunStats};
+use super::summary::SweepSummary;
+use crate::util::hash::content_hash_hex;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One shard of an `n`-way deterministic grid partition.
+///
+/// `index` is 0-based: the valid shards of a 3-way split are `0/3`,
+/// `1/3`, `2/3`. A shard owns exactly the cells whose expansion index
+/// is congruent to `index` mod `count`; because the seed axis is
+/// innermost (replicas of one configuration are adjacent), round-robin
+/// by index also balances seed replicas across shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// 0-based shard index in `[0, count)`.
+    pub index: usize,
+    /// Total number of shards (≥ 1).
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// Parse the CLI form `i/n` (0-based, `0 <= i < n`, `n >= 1`).
+    /// Every malformed input yields a named error, never a panic.
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| format!("shard: expected i/n (e.g. 0/4), got '{s}'"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .map_err(|_| format!("shard: index '{i}' is not a non-negative integer"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| format!("shard: count '{n}' is not a positive integer"))?;
+        if count == 0 {
+            return Err("shard: count must be >= 1".into());
+        }
+        if index >= count {
+            return Err(format!(
+                "shard: index {index} out of range (0-based; valid: 0..{})",
+                count - 1
+            ));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Whether this shard owns the cell at `cell_index` (a pure function
+    /// of the index — the partition is identical in every process).
+    pub fn selects(&self, cell_index: usize) -> bool {
+        cell_index % self.count == self.index
+    }
+
+    /// Human rendering, `i/n`.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.index, self.count)
+    }
+
+    /// Manifest file name for this shard, `summary-shard-<i>-of-<n>.json`.
+    pub fn manifest_name(&self) -> String {
+        format!("summary-shard-{}-of-{}.json", self.index, self.count)
+    }
+}
+
+/// Keep only the cells this shard owns. Original expansion indices are
+/// preserved (they are the merge key), so shard summaries report the
+/// same indices the full grid would. An empty shard (more shards than
+/// cells) is valid and merges cleanly.
+pub fn shard_cells(cells: Vec<SweepCell>, spec: &ShardSpec) -> Vec<SweepCell> {
+    cells
+        .into_iter()
+        .filter(|c| spec.selects(c.index))
+        .collect()
+}
+
+/// Content fingerprint of an expanded (possibly filtered) grid: the
+/// hash of every cell's `(index, content key)` pair in order, plus the
+/// metric mode and [`SIM_VERSION_TAG`]. Two processes that expand the
+/// same grid text under the same simulator version agree on it; any
+/// axis, base-config, filter, or metric-mode difference changes it.
+/// Shard manifests carry it so `--merge` can refuse to splice shards of
+/// different grids.
+pub fn grid_fingerprint(cells: &[SweepCell], streaming: bool) -> String {
+    let mut keyer = CellKeyer::new(streaming);
+    let mut acc = String::with_capacity(64 + cells.len() * 40);
+    acc.push_str(SIM_VERSION_TAG);
+    acc.push_str(if streaming { ";streaming;" } else { ";full;" });
+    for cell in cells {
+        acc.push_str(&cell.index.to_string());
+        acc.push(':');
+        acc.push_str(&keyer.key(&cell.cfg));
+        acc.push(';');
+    }
+    content_hash_hex(acc.as_bytes())
+}
+
+/// Per-shard run manifest, persisted as
+/// `summary-shard-<i>-of-<n>.json` in the shard's run directory (beside
+/// `grid.yaml` and the `cells/` directory, never inside it — `--gc`
+/// walks only `cells/` and cannot touch manifests).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    /// Which shard this run executed.
+    pub shard: ShardSpec,
+    /// [`grid_fingerprint`] of the full (filtered) grid — not of the
+    /// shard subset, so all shards of one grid carry the same value.
+    pub grid_hash: String,
+    /// Metric mode the cells ran (and were keyed) in.
+    pub streaming: bool,
+    /// Canonical `--filter` label when the shard ran a filtered subset.
+    pub filter: Option<String>,
+    /// Cells in the full (filtered) grid across all shards.
+    pub cells_total: usize,
+    /// Cells this shard owns.
+    pub cells_in_shard: usize,
+    /// Shard cells whose outcome was an error (persisted as
+    /// retry-counted failure markers in `cells/`).
+    pub failed_cells: usize,
+    /// Cache accounting of the shard run.
+    pub stats: RunStats,
+}
+
+impl ShardManifest {
+    /// JSON encoding (deterministic key order; no wall-clock fields).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .with("version", SIM_VERSION_TAG.into())
+            .with("grid_hash", self.grid_hash.as_str().into())
+            .with(
+                "shard",
+                Json::obj()
+                    .with("index", (self.shard.index as u64).into())
+                    .with("count", (self.shard.count as u64).into()),
+            )
+            .with("streaming", self.streaming.into());
+        if let Some(f) = &self.filter {
+            j.set("filter", f.as_str().into());
+        }
+        j.with("cells_total", (self.cells_total as u64).into())
+            .with("cells_in_shard", (self.cells_in_shard as u64).into())
+            .with("failed_cells", (self.failed_cells as u64).into())
+            .with(
+                "stats",
+                Json::obj()
+                    .with("executed", (self.stats.executed as u64).into())
+                    .with("cache_hits", (self.stats.cache_hits as u64).into())
+                    .with("corrupt_entries", (self.stats.corrupt_entries as u64).into())
+                    .with("failed_hits", (self.stats.failed_hits as u64).into()),
+            )
+    }
+
+    /// Decode a manifest; `None` on any shape mismatch (the caller turns
+    /// that into a named per-file error).
+    pub fn from_json(j: &Json) -> Option<ShardManifest> {
+        if j.get("version")?.as_str()? != SIM_VERSION_TAG {
+            return None;
+        }
+        let shard = ShardSpec {
+            index: j.path(&["shard", "index"])?.as_usize()?,
+            count: j.path(&["shard", "count"])?.as_usize()?,
+        };
+        if shard.count == 0 || shard.index >= shard.count {
+            return None;
+        }
+        let stats = RunStats {
+            total: j.get("cells_in_shard")?.as_usize()?,
+            executed: j.path(&["stats", "executed"])?.as_usize()?,
+            cache_hits: j.path(&["stats", "cache_hits"])?.as_usize()?,
+            corrupt_entries: j.path(&["stats", "corrupt_entries"])?.as_usize()?,
+            failed_hits: j.path(&["stats", "failed_hits"])?.as_usize()?,
+        };
+        Some(ShardManifest {
+            shard,
+            grid_hash: j.get("grid_hash")?.as_str()?.to_string(),
+            streaming: j.get("streaming")?.as_bool()?,
+            filter: match j.get("filter") {
+                None => None,
+                Some(f) => Some(f.as_str()?.to_string()),
+            },
+            cells_total: j.get("cells_total")?.as_usize()?,
+            cells_in_shard: j.get("cells_in_shard")?.as_usize()?,
+            failed_cells: j.get("failed_cells")?.as_usize()?,
+            stats,
+        })
+    }
+
+    /// Write the manifest into `dir` atomically (tmp + rename), like
+    /// every other sweep artifact: a kill mid-write must never leave a
+    /// half-manifest that later merges garbage.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf, String> {
+        let path = dir.join(self.shard.manifest_name());
+        let tmp = dir.join(format!(
+            "{}.tmp.{}",
+            self.shard.manifest_name(),
+            std::process::id()
+        ));
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(&tmp, &text).map_err(|e| format!("shard: write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("shard: rename to {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load one manifest file.
+    pub fn load(path: &Path) -> Result<ShardManifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("merge: read {}: {e}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| format!("merge: {}: {e}", path.display()))?;
+        ShardManifest::from_json(&doc)
+            .ok_or_else(|| format!("merge: {}: not a valid shard manifest", path.display()))
+    }
+}
+
+/// Scan a run directory for shard manifests
+/// (`summary-shard-<i>-of-<n>.json`), in deterministic name order. A
+/// directory that several shards shared as one `--out-dir` holds
+/// several manifests.
+pub fn find_manifests(dir: &Path) -> Result<Vec<(PathBuf, ShardManifest)>, String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("merge: read {}: {e}", dir.display()))?;
+    let mut names: Vec<String> = rd
+        .filter_map(|e| e.ok().and_then(|e| e.file_name().into_string().ok()))
+        .filter(|n| {
+            n.starts_with("summary-shard-") && n.ends_with(".json") && !n.contains(".tmp.")
+        })
+        .collect();
+    names.sort();
+    let mut out = Vec::with_capacity(names.len());
+    for name in names {
+        let path = dir.join(&name);
+        out.push((path.clone(), ShardManifest::load(&path)?));
+    }
+    Ok(out)
+}
+
+/// Output of a successful merge.
+#[derive(Debug)]
+pub struct MergeReport {
+    /// The spliced full-grid summary — byte-identical (via
+    /// `to_json().to_string_pretty()`) to the single-process run's.
+    pub summary: SweepSummary,
+    /// Shard count the grid was split into.
+    pub shard_count: usize,
+    /// Fingerprint every manifest agreed on.
+    pub grid_hash: String,
+    /// Metric mode of the merged cells.
+    pub streaming: bool,
+    /// Combined cache accounting across the shard runs (as recorded in
+    /// their manifests — the merge itself executes nothing).
+    pub stats: RunStats,
+}
+
+/// Splice the outputs of N shard runs back into the single-process
+/// summary. `dirs` are the shard run directories (one per shard, or one
+/// shared directory holding every manifest; a directory may be listed
+/// once even if it holds several manifests — duplicates are detected as
+/// overlapping shards only when two *different* files claim one shard).
+///
+/// Validation, in order, each with a named error:
+/// 1. every directory holds at least one manifest;
+/// 2. all manifests agree on grid hash, shard count, metric mode, and
+///    filter;
+/// 3. no shard index appears in two manifest files (overlap), and every
+///    index in `0..count` appears (missing shards are listed);
+/// 4. the first directory's `grid.yaml` re-expands to the manifests'
+///    fingerprint (a swapped grid copy cannot silently merge);
+/// 5. every cell loads from the union of the `cells/` caches — a
+///    missing cell names its index and owning shard.
+///
+/// Failed cells surface exactly like a resumed single-process run:
+/// markers at the retry bound render as `persistent failure (N
+/// attempts): <error>`, markers below it surface the stored error
+/// verbatim (what the shard's own summary reported when it executed).
+pub fn merge_shard_dirs(dirs: &[PathBuf]) -> Result<MergeReport, String> {
+    if dirs.is_empty() {
+        return Err("merge: no shard directories given".into());
+    }
+    // 1–3: collect and cross-validate manifests.
+    let mut manifests: Vec<(PathBuf, ShardManifest)> = Vec::new();
+    for dir in dirs {
+        let found = find_manifests(dir)?;
+        if found.is_empty() {
+            return Err(format!(
+                "merge: no shard manifests (summary-shard-*-of-*.json) in {}",
+                dir.display()
+            ));
+        }
+        for (path, m) in found {
+            // The same physical file reached through two -dir arguments
+            // (or a dir listed twice) is not an overlap.
+            if manifests.iter().any(|(p, _)| same_file(p, &path)) {
+                continue;
+            }
+            manifests.push((path, m));
+        }
+    }
+    let (first_path, first) = &manifests[0];
+    for (path, m) in &manifests[1..] {
+        if m.grid_hash != first.grid_hash {
+            return Err(format!(
+                "merge: grid mismatch: {} has grid hash {} but {} has {}",
+                path.display(),
+                m.grid_hash,
+                first_path.display(),
+                first.grid_hash
+            ));
+        }
+        if m.shard.count != first.shard.count {
+            return Err(format!(
+                "merge: shard-count mismatch: {} says {} shards but {} says {}",
+                path.display(),
+                m.shard.count,
+                first_path.display(),
+                first.shard.count
+            ));
+        }
+        if m.streaming != first.streaming {
+            return Err(format!(
+                "merge: metric-mode mismatch: {} is {} but {} is {}",
+                path.display(),
+                mode_name(m.streaming),
+                first_path.display(),
+                mode_name(first.streaming)
+            ));
+        }
+        if m.filter != first.filter {
+            return Err(format!(
+                "merge: filter mismatch: {} ran '{}' but {} ran '{}'",
+                path.display(),
+                m.filter.as_deref().unwrap_or("<none>"),
+                first_path.display(),
+                first.filter.as_deref().unwrap_or("<none>")
+            ));
+        }
+    }
+    let count = first.shard.count;
+    let mut owner_of: Vec<Option<&Path>> = vec![None; count];
+    for (path, m) in &manifests {
+        if let Some(prev) = owner_of[m.shard.index] {
+            return Err(format!(
+                "merge: overlapping shard {}: claimed by both {} and {}",
+                m.shard.label(),
+                prev.display(),
+                path.display()
+            ));
+        }
+        owner_of[m.shard.index] = Some(path.as_path());
+    }
+    let missing: Vec<String> = (0..count)
+        .filter(|&i| owner_of[i].is_none())
+        .map(|i| format!("{i}/{count}"))
+        .collect();
+    if !missing.is_empty() {
+        return Err(format!(
+            "merge: missing shard(s) {} — pass every shard's run directory",
+            missing.join(", ")
+        ));
+    }
+
+    // 4: re-expand the grid from the first directory's grid.yaml copy.
+    let grid_path = dirs[0].join("grid.yaml");
+    let grid_text = std::fs::read_to_string(&grid_path)
+        .map_err(|e| format!("merge: cannot read {} ({e})", grid_path.display()))?;
+    let mut grid = SweepGrid::from_yaml(&grid_text)?;
+    grid.streaming = first.streaming;
+    let mut cells = grid.expand()?;
+    let filter = first.filter.clone();
+    if let Some(f) = &filter {
+        cells = filter_cells(cells, &parse_filter(f)?)?;
+    }
+    let hash = grid_fingerprint(&cells, first.streaming);
+    if hash != first.grid_hash {
+        return Err(format!(
+            "merge: {} expands to grid hash {} but the shard manifests record {} — \
+             the grid copy and the shard outputs disagree",
+            grid_path.display(),
+            hash,
+            first.grid_hash
+        ));
+    }
+    if cells.len() != first.cells_total {
+        return Err(format!(
+            "merge: grid expands to {} cells but manifests record {}",
+            cells.len(),
+            first.cells_total
+        ));
+    }
+
+    // 5: load every cell from the union of the shard caches. The owning
+    // shard's directory is probed first; a shared out-dir means every
+    // probe hits the same cache.
+    let mut caches: Vec<CellCache> = Vec::with_capacity(dirs.len());
+    for dir in dirs {
+        let cells_dir = dir.join("cells");
+        if !cells_dir.is_dir() {
+            return Err(format!("merge: no cells/ directory in {}", dir.display()));
+        }
+        caches.push(CellCache::open(&cells_dir)?);
+    }
+    let dir_of_manifest = |manifest_path: &Path| -> usize {
+        let parent = manifest_path.parent().unwrap_or(Path::new(""));
+        dirs.iter()
+            .position(|d| same_file(d, parent))
+            .unwrap_or(0)
+    };
+    let mut owner_dir: Vec<usize> = vec![0; count];
+    for (path, m) in &manifests {
+        owner_dir[m.shard.index] = dir_of_manifest(path);
+    }
+    let mut keyer = CellKeyer::new(first.streaming);
+    let mut results = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let key = keyer.key(&cell.cfg);
+        let shard_idx = cell.index % count;
+        // Probe the owning shard's cache first, then the rest in order.
+        let mut order: Vec<usize> = Vec::with_capacity(caches.len());
+        order.push(owner_dir[shard_idx]);
+        order.extend((0..caches.len()).filter(|&d| d != owner_dir[shard_idx]));
+        let mut outcome: Option<Result<_, String>> = None;
+        for d in order {
+            match caches[d].load(&key) {
+                CacheLookup::Hit(m) => {
+                    outcome = Some(Ok(m));
+                    break;
+                }
+                CacheLookup::Failed { error, attempts } => {
+                    outcome = Some(Err(if attempts >= MAX_FAILED_ATTEMPTS {
+                        format!("persistent failure ({attempts} attempts): {error}")
+                    } else {
+                        error
+                    }));
+                    break;
+                }
+                CacheLookup::Corrupt(why) => {
+                    eprintln!("[merge] warning: corrupt entry for cell {}: {why}", cell.index);
+                }
+                CacheLookup::Miss => {}
+            }
+        }
+        let outcome = outcome.ok_or_else(|| {
+            format!(
+                "merge: cell {} (shard {}/{count}) missing from every directory — \
+                 that shard run is incomplete; re-run it with --resume, then merge again",
+                cell.index, shard_idx
+            )
+        })?;
+        results.push(CellResult {
+            index: cell.index,
+            labels: cell.labels.clone(),
+            outcome,
+        });
+    }
+    let mut stats = RunStats::default();
+    for (_, m) in &manifests {
+        stats.absorb(m.stats);
+    }
+    let summary = SweepSummary::new(results, first.streaming).with_filter(filter);
+    Ok(MergeReport {
+        summary,
+        shard_count: count,
+        grid_hash: hash,
+        streaming: first.streaming,
+        stats,
+    })
+}
+
+fn mode_name(streaming: bool) -> &'static str {
+    if streaming {
+        "streaming"
+    } else {
+        "full"
+    }
+}
+
+/// Path identity without requiring canonicalization to succeed.
+fn same_file(a: &Path, b: &Path) -> bool {
+    match (std::fs::canonicalize(a), std::fs::canonicalize(b)) {
+        (Ok(ca), Ok(cb)) => ca == cb,
+        _ => a == b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::util::prop::{run_prop, Gen};
+
+    fn tiny_grid() -> SweepGrid {
+        let base = SimConfig::builder()
+            .seed(1)
+            .targets(2)
+            .drafters(8)
+            .requests(10)
+            .rate_per_s(20.0)
+            .build();
+        let mut g = SweepGrid::new(base);
+        g.rtt_ms = vec![5.0, 40.0];
+        g.seeds = vec![1, 2, 3];
+        g
+    }
+
+    #[test]
+    fn parse_accepts_valid_specs() {
+        assert_eq!(ShardSpec::parse("0/1").unwrap(), ShardSpec { index: 0, count: 1 });
+        assert_eq!(ShardSpec::parse("2/3").unwrap(), ShardSpec { index: 2, count: 3 });
+        assert_eq!(ShardSpec::parse(" 1 / 4 ").unwrap(), ShardSpec { index: 1, count: 4 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_with_named_errors() {
+        for bad in ["", "1", "1/", "/2", "a/b", "1/0", "2/2", "5/3", "-1/2", "1/2/3"] {
+            let err = ShardSpec::parse(bad).unwrap_err();
+            assert!(err.starts_with("shard:"), "'{bad}' → {err}");
+        }
+        assert!(ShardSpec::parse("2/2").unwrap_err().contains("out of range"));
+        assert!(ShardSpec::parse("1/0").unwrap_err().contains("positive"));
+    }
+
+    /// ISSUE satellite: every cell lands in exactly one shard, for any
+    /// shard count — the partition is exhaustive and disjoint.
+    #[test]
+    fn prop_every_cell_in_exactly_one_shard() {
+        run_prop("shard partition exhaustive+disjoint", 50, |g: &mut Gen| {
+            let n_cells = g.usize_in(1, 60);
+            let count = g.usize_in(1, 9);
+            let mut seen = vec![0u32; n_cells];
+            for index in 0..count {
+                let spec = ShardSpec { index, count };
+                for (ci, slot) in seen.iter_mut().enumerate() {
+                    if spec.selects(ci) {
+                        *slot += 1;
+                    }
+                }
+            }
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "cells must appear in exactly one shard (counts: {seen:?})"
+            );
+        });
+    }
+
+    #[test]
+    fn one_way_split_is_the_identity() {
+        let grid = tiny_grid();
+        let cells = grid.expand().unwrap();
+        let n = cells.len();
+        let sharded = shard_cells(grid.expand().unwrap(), &ShardSpec { index: 0, count: 1 });
+        assert_eq!(sharded.len(), n);
+        for (a, b) in cells.iter().zip(&sharded) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.labels, b.labels);
+        }
+    }
+
+    #[test]
+    fn shards_preserve_original_indices_and_round_robin() {
+        let grid = tiny_grid();
+        let spec = ShardSpec { index: 1, count: 3 };
+        let cells = shard_cells(grid.expand().unwrap(), &spec);
+        assert!(!cells.is_empty());
+        for c in &cells {
+            assert_eq!(c.index % 3, 1, "shard 1/3 owns indices ≡1 mod 3");
+        }
+        // Seed replicas (innermost axis) spread across shards: the three
+        // seeds of the first configuration land on shards 0, 1, 2.
+        assert_eq!(cells[0].index, 1);
+    }
+
+    #[test]
+    fn empty_shard_is_valid() {
+        let mut grid = tiny_grid();
+        grid.rtt_ms = vec![5.0];
+        grid.seeds = vec![1];
+        // 1 cell, 3 shards: shards 1 and 2 are empty.
+        let cells = grid.expand().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert!(shard_cells(cells.clone(), &ShardSpec { index: 1, count: 3 }).is_empty());
+        assert_eq!(shard_cells(cells, &ShardSpec { index: 0, count: 3 }).len(), 1);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let grid = tiny_grid();
+        let cells = grid.expand().unwrap();
+        let h = grid_fingerprint(&cells, false);
+        assert_eq!(h, grid_fingerprint(&grid.expand().unwrap(), false));
+        assert_eq!(h.len(), 32);
+        // Metric mode is part of the fingerprint.
+        assert_ne!(h, grid_fingerprint(&cells, true));
+        // Any axis change is too.
+        let mut other = tiny_grid();
+        other.seeds = vec![1, 2];
+        assert_ne!(h, grid_fingerprint(&other.expand().unwrap(), false));
+        // A filtered subset fingerprints differently from the full grid.
+        let kept = filter_cells(grid.expand().unwrap(), &parse_filter("seed=1").unwrap()).unwrap();
+        assert_ne!(h, grid_fingerprint(&kept, false));
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_rejects_foreign_versions() {
+        let m = ShardManifest {
+            shard: ShardSpec { index: 1, count: 4 },
+            grid_hash: "ab".repeat(16),
+            streaming: true,
+            filter: Some("rtt_ms=5".into()),
+            cells_total: 24,
+            cells_in_shard: 6,
+            failed_cells: 1,
+            stats: RunStats {
+                total: 6,
+                executed: 5,
+                cache_hits: 1,
+                corrupt_entries: 0,
+                failed_hits: 0,
+            },
+        };
+        let back = ShardManifest::from_json(&m.to_json()).expect("roundtrip");
+        assert_eq!(back, m);
+        // Filter-free manifests omit the key and round-trip too.
+        let mut nf = m.clone();
+        nf.filter = None;
+        assert_eq!(ShardManifest::from_json(&nf.to_json()).unwrap(), nf);
+        // A version-tag mismatch refuses to decode (a manifest written
+        // by a different simulator version must not merge).
+        let mut doc = m.to_json();
+        doc.set("version", "dsd-sim-0".into());
+        assert!(ShardManifest::from_json(&doc).is_none());
+        // Out-of-range shard specs refuse to decode.
+        let mut doc = m.to_json();
+        doc.set(
+            "shard",
+            Json::obj().with("index", 4u64.into()).with("count", 4u64.into()),
+        );
+        assert!(ShardManifest::from_json(&doc).is_none());
+    }
+
+    #[test]
+    fn manifest_write_load_and_scan() {
+        let dir = std::env::temp_dir().join(format!("dsd-shard-manifest-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |index: usize| ShardManifest {
+            shard: ShardSpec { index, count: 2 },
+            grid_hash: "cd".repeat(16),
+            streaming: false,
+            filter: None,
+            cells_total: 8,
+            cells_in_shard: 4,
+            failed_cells: 0,
+            stats: RunStats { total: 4, executed: 4, ..RunStats::default() },
+        };
+        mk(0).write_to(&dir).unwrap();
+        mk(1).write_to(&dir).unwrap();
+        // A stale tmp file and an unrelated file are ignored by the scan.
+        std::fs::write(dir.join("summary-shard-0-of-2.json.tmp.99"), "junk").unwrap();
+        std::fs::write(dir.join("summary.json"), "{}").unwrap();
+        let found = find_manifests(&dir).unwrap();
+        assert_eq!(found.len(), 2);
+        assert_eq!(found[0].1.shard.index, 0);
+        assert_eq!(found[1].1.shard.index, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -164,6 +164,7 @@ mod tests {
             time_series: None,
             autoscale: None,
             slo_interactive: None,
+            per_class: None,
         }
     }
 

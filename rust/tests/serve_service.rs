@@ -1,0 +1,246 @@
+//! End-to-end grid-service tests (ISSUE 9 acceptance criteria): a
+//! round trip through `GridService` — submit a tiny grid, poll until
+//! complete, fetch the summary — must return bytes identical to the
+//! cached single-process run; malformed submissions must be rejected
+//! with named errors while the service keeps serving; cancellation,
+//! backpressure, and graceful drain must all answer by the protocol.
+
+use dsd::serve::{GridClient, GridService, JobState, ServeOptions};
+use dsd::sweep::{run_cells_cached, CellCache, SweepGrid, SweepSummary};
+use std::path::PathBuf;
+
+fn grid_yaml() -> &'static str {
+    "\
+base:
+  workload:
+    requests: 12
+    rate_per_s: 20
+  cluster:
+    targets:
+      - count: 2
+        gpu: a100
+        tp: 4
+        model: llama2-70b
+    drafters:
+      - count: 8
+        gpu: a40
+        model: llama2-7b
+sweep:
+  rtt_ms: [5, 40]
+  execution: [sequential, pipelined]
+  seeds: [1, 2]
+"
+}
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dsd-serve-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The single-process reference: same grid, same cache dir the service
+/// will use, exact pretty text (service form carries no trailing
+/// newline; `dsd submit --out` appends it for the file form).
+fn baseline_text(dir: &PathBuf) -> String {
+    let grid = SweepGrid::from_yaml(grid_yaml()).unwrap();
+    let cells = grid.expand().unwrap();
+    let cache = CellCache::open(&dir.join("cells")).unwrap();
+    let (results, _) = run_cells_cached(&cells, grid.streaming, 3, Some(&cache));
+    let summary = SweepSummary::new(results, grid.streaming);
+    assert_eq!(summary.n_failed(), 0);
+    summary.to_json().to_string_pretty()
+}
+
+fn start_service(cache_dir: Option<PathBuf>) -> GridService {
+    GridService::start(
+        "127.0.0.1:0",
+        ServeOptions {
+            threads: 2,
+            cache_dir,
+            max_jobs: 4,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn round_trip_submit_poll_fetch_is_byte_identical_to_cached_run() {
+    let dir = scratch("roundtrip");
+    let baseline = baseline_text(&dir);
+    let service = start_service(Some(dir.clone()));
+    let addr = service.addr().to_string();
+    let mut client = GridClient::connect(&addr, 10_000).unwrap();
+    client.ping().unwrap();
+
+    let job = client.submit_grid_text(grid_yaml(), None).unwrap();
+    let (state, done, total, failed) = client.wait(job, 20, 60_000).unwrap();
+    assert_eq!(state, JobState::Completed);
+    assert_eq!((done, failed), (total, 0));
+    let grid = SweepGrid::from_yaml(grid_yaml()).unwrap();
+    assert_eq!(total, grid.n_cells());
+
+    // Byte identity with the single-process run — and, because the
+    // baseline warmed the shared cache, the service executed nothing.
+    let fetched = client.fetch_summary(job).unwrap();
+    assert_eq!(fetched, baseline);
+    let mut resp = client
+        .request(&dsd::serve::Request::PollProgress { job })
+        .unwrap();
+    let executed = resp
+        .get("executed")
+        .and_then(dsd::util::json::Json::as_u64)
+        .unwrap();
+    assert_eq!(executed, 0, "warm cache: zero simulator executions");
+    // A second submission of the same grid is another full cache hit.
+    let job2 = client.submit_grid_text(grid_yaml(), None).unwrap();
+    let (state2, ..) = client.wait(job2, 20, 60_000).unwrap();
+    assert_eq!(state2, JobState::Completed);
+    assert_eq!(client.fetch_summary(job2).unwrap(), baseline);
+    resp = client
+        .request(&dsd::serve::Request::PollProgress { job: job2 })
+        .unwrap();
+    assert_eq!(
+        resp.get("cache_hits")
+            .and_then(dsd::util::json::Json::as_u64)
+            .unwrap(),
+        total as u64
+    );
+
+    client.shutdown_server().unwrap();
+    service.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_submissions_get_named_errors_and_service_keeps_serving() {
+    let service = start_service(None);
+    let addr = service.addr().to_string();
+    let mut client = GridClient::connect(&addr, 10_000).unwrap();
+
+    let expect_code = |client: &mut GridClient, line: &str, code: &str| {
+        let resp = client.request_line(line).unwrap();
+        assert_eq!(
+            resp.get("ok").and_then(dsd::util::json::Json::as_bool),
+            Some(false),
+            "{line} → {}",
+            resp.to_string_compact()
+        );
+        assert_eq!(
+            resp.path(&["error", "code"])
+                .and_then(dsd::util::json::Json::as_str),
+            Some(code),
+            "{line}"
+        );
+    };
+    expect_code(&mut client, "this is not json", "malformed-json");
+    expect_code(&mut client, "[1,2]", "not-an-object");
+    expect_code(&mut client, "{\"type\":\"ping\"}", "bad-version");
+    expect_code(&mut client, "{\"v\":1}", "missing-type");
+    expect_code(&mut client, "{\"v\":1,\"type\":\"nope\"}", "unknown-type");
+    expect_code(&mut client, "{\"v\":1,\"type\":\"submit-grid\"}", "missing-field");
+    expect_code(
+        &mut client,
+        "{\"v\":1,\"type\":\"poll-progress\",\"job\":true}",
+        "bad-field",
+    );
+    // A grid that parses as a request but not as a grid is a named
+    // service-level rejection, not a failed job.
+    expect_code(
+        &mut client,
+        "{\"v\":1,\"type\":\"submit-grid\",\"grid\":\"sweep:\\n  bogus_axis: [1]\\n\"}",
+        "grid-error",
+    );
+    // Unknown-job paths.
+    expect_code(&mut client, "{\"v\":1,\"type\":\"poll-progress\",\"job\":99}", "unknown-job");
+    expect_code(&mut client, "{\"v\":1,\"type\":\"fetch-summary\",\"job\":99}", "unknown-job");
+    expect_code(&mut client, "{\"v\":1,\"type\":\"cancel\",\"job\":99}", "unknown-job");
+
+    // After all of that abuse the service still answers — on the same
+    // connection and on a fresh one.
+    client.ping().unwrap();
+    let mut fresh = GridClient::connect(&addr, 10_000).unwrap();
+    fresh.ping().unwrap();
+
+    fresh.shutdown_server().unwrap();
+    service.join();
+}
+
+#[test]
+fn oversized_request_lines_are_rejected_without_buffering() {
+    let service = GridService::start(
+        "127.0.0.1:0",
+        ServeOptions {
+            threads: 1,
+            cache_dir: None,
+            max_jobs: 2,
+            max_request_bytes: 256,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = service.addr().to_string();
+    let mut client = GridClient::connect(&addr, 10_000).unwrap();
+    let huge = format!(
+        "{{\"v\":1,\"type\":\"submit-grid\",\"grid\":\"{}\"}}",
+        "x".repeat(4096)
+    );
+    let resp = client.request_line(&huge).unwrap();
+    assert_eq!(
+        resp.path(&["error", "code"])
+            .and_then(dsd::util::json::Json::as_str),
+        Some("oversized")
+    );
+    // The connection survives the oversized line.
+    client.ping().unwrap();
+    client.shutdown_server().unwrap();
+    service.join();
+}
+
+#[test]
+fn queue_bound_cancellation_and_drain() {
+    let service = GridService::start(
+        "127.0.0.1:0",
+        ServeOptions {
+            threads: 1,
+            cache_dir: None,
+            max_jobs: 2,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = service.addr().to_string();
+    let mut client = GridClient::connect(&addr, 10_000).unwrap();
+
+    // A deliberately slower grid (more requests, one worker thread)
+    // so the first job is still in flight while the bound is probed.
+    let slow = grid_yaml().replace("requests: 12", "requests: 400");
+    // Fill the queue past its bound: the surplus gets backpressure.
+    let a = client.submit_grid_text(&slow, None).unwrap();
+    let b = client.submit_grid_text(&slow, None).unwrap();
+    let err = match client.submit_grid_text(&slow, None) {
+        Err(e) => e,
+        Ok(id) => panic!("third submission must hit the bound, got job {id}"),
+    };
+    assert!(err.starts_with("queue-full"), "{err}");
+
+    // Cancel whichever job is still pending; both terminal states are
+    // acceptable for the one that may already be running.
+    client.cancel(b).unwrap();
+    let (state_b, ..) = client.wait(b, 20, 60_000).unwrap();
+    assert_eq!(state_b, JobState::Cancelled);
+    let (state_a, ..) = client.wait(a, 20, 60_000).unwrap();
+    assert!(matches!(state_a, JobState::Completed | JobState::Cancelled));
+    let err = client.fetch_summary(b).unwrap_err();
+    assert!(err.starts_with("job-cancelled"), "{err}");
+
+    // Drain: new submissions are refused, existing answers still flow.
+    client.shutdown_server().unwrap();
+    let err = match client.submit_grid_text(&slow, None) {
+        Err(e) => e,
+        Ok(id) => panic!("post-drain submission must be refused, got job {id}"),
+    };
+    assert!(err.starts_with("shutting-down"), "{err}");
+    service.join();
+}

@@ -1,0 +1,282 @@
+//! Cluster-scale sweep integration tests (ISSUE 9 acceptance
+//! criteria): merging N deterministic shards of a representative grid
+//! (scenario + classes + execution axes) must yield a summary
+//! byte-identical to the single-process run for N ∈ {1, 2, 3}; shard
+//! runs must be thread-count stable; a killed shard must resume through
+//! the ordinary cell cache; and merge validation must name overlapping,
+//! missing, and foreign-grid shards.
+
+use dsd::sweep::{
+    grid_fingerprint, merge_shard_dirs, run_cells_cached, shard_cells, CellCache, CellKeyer,
+    RunStats, ShardManifest, ShardSpec, SweepGrid, SweepSummary,
+};
+use std::path::{Path, PathBuf};
+
+/// Unique scratch dir per test (no tempfile crate offline).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dsd-shard-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Representative grid per the acceptance criteria: scenario, classes,
+/// and execution axes (plus seeds), with the scenario/classes YAML
+/// written beside the grid so merge-time re-expansion finds them.
+fn fixture_grid_text(fixtures: &Path) -> String {
+    let scenario = fixtures.join("flap.yaml");
+    std::fs::write(
+        &scenario,
+        "\
+name: flap
+events:
+  - at_ms: 200
+    kind: link_degrade
+    rtt_mult: 4
+  - at_ms: 500
+    kind: link_restore
+",
+    )
+    .unwrap();
+    let classes = fixtures.join("tiers.yaml");
+    std::fs::write(
+        &classes,
+        "\
+name: two_tier
+priority_admission: true
+tiers:
+  - name: interactive
+    rate_per_s: 12
+    slo:
+      ttft_ms: 1000
+      tpot_ms: 50
+  - name: batch
+    rate_per_s: 8
+",
+    )
+    .unwrap();
+    format!(
+        "\
+base:
+  workload:
+    requests: 10
+    rate_per_s: 20
+  cluster:
+    targets:
+      - count: 2
+        gpu: a100
+        tp: 4
+        model: llama2-70b
+    drafters:
+      - count: 8
+        gpu: a40
+        model: llama2-7b
+sweep:
+  scenario: [none, {}]
+  classes: [none, {}]
+  execution: [sequential, pipelined]
+  seeds: [1, 2]
+",
+        scenario.display(),
+        classes.display()
+    )
+}
+
+/// Library-level equivalent of one `dsd sweep --shard i/n --out-dir
+/// <dir>` invocation: grid copy, cached shard execution, manifest.
+fn run_shard(run_dir: &Path, grid_text: &str, spec: ShardSpec, threads: usize) -> RunStats {
+    std::fs::create_dir_all(run_dir).unwrap();
+    std::fs::write(run_dir.join("grid.yaml"), grid_text).unwrap();
+    let grid = SweepGrid::from_yaml(grid_text).unwrap();
+    let cells = grid.expand().unwrap();
+    let cells_total = cells.len();
+    let grid_hash = grid_fingerprint(&cells, grid.streaming);
+    let shard = shard_cells(cells, &spec);
+    let cache = CellCache::open(&run_dir.join("cells")).unwrap();
+    let (results, stats) = run_cells_cached(&shard, grid.streaming, threads, Some(&cache));
+    let failed_cells = results.iter().filter(|r| r.outcome.is_err()).count();
+    ShardManifest {
+        shard: spec,
+        grid_hash,
+        streaming: grid.streaming,
+        filter: None,
+        cells_total,
+        cells_in_shard: results.len(),
+        failed_cells,
+        stats,
+    }
+    .write_to(run_dir)
+    .unwrap();
+    stats
+}
+
+/// The single-process baseline: full cached run, file-form bytes.
+fn single_process_bytes(grid_text: &str, dir: &Path) -> String {
+    let grid = SweepGrid::from_yaml(grid_text).unwrap();
+    let cells = grid.expand().unwrap();
+    let cache = CellCache::open(&dir.join("cells")).unwrap();
+    let (results, _) = run_cells_cached(&cells, grid.streaming, 3, Some(&cache));
+    let summary = SweepSummary::new(results, grid.streaming);
+    assert_eq!(summary.n_failed(), 0);
+    let mut text = summary.to_json().to_string_pretty();
+    text.push('\n');
+    text
+}
+
+fn merged_bytes(dirs: &[PathBuf]) -> String {
+    let report = merge_shard_dirs(dirs).unwrap();
+    let mut text = report.summary.to_json().to_string_pretty();
+    text.push('\n');
+    text
+}
+
+#[test]
+fn n_shard_merge_is_byte_identical_to_single_process_for_1_2_3() {
+    let root = scratch("identity");
+    let grid_text = fixture_grid_text(&root);
+    let baseline = single_process_bytes(&grid_text, &root.join("single"));
+    for n in 1..=3usize {
+        let dirs: Vec<PathBuf> = (0..n)
+            .map(|i| {
+                let dir = root.join(format!("n{n}-shard{i}"));
+                let stats = run_shard(
+                    &dir,
+                    &grid_text,
+                    ShardSpec { index: i, count: n },
+                    // Different thread counts per shard: determinism
+                    // must not depend on scheduling.
+                    1 + (i % 3),
+                );
+                assert_eq!(stats.cache_hits, 0, "per-shard dirs start cold");
+                dir
+            })
+            .collect();
+        assert_eq!(
+            merged_bytes(&dirs),
+            baseline,
+            "{n}-shard merge must be byte-identical to the single-process summary"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn shards_sharing_one_out_dir_merge_from_a_single_directory() {
+    let root = scratch("shared");
+    let grid_text = fixture_grid_text(&root);
+    let baseline = single_process_bytes(&grid_text, &root.join("single"));
+    let shared = root.join("shared-run");
+    let s0 = run_shard(&shared, &grid_text, ShardSpec { index: 0, count: 2 }, 2);
+    let s1 = run_shard(&shared, &grid_text, ShardSpec { index: 1, count: 2 }, 3);
+    let grid = SweepGrid::from_yaml(&grid_text).unwrap();
+    let total = grid.n_cells();
+    assert_eq!(s0.executed + s1.executed, total, "disjoint partition");
+    // One directory, two manifests: pass it once.
+    assert_eq!(merged_bytes(&[shared.clone()]), baseline);
+    // Passing the same directory twice is not an overlap (same files).
+    assert_eq!(merged_bytes(&[shared.clone(), shared.clone()]), baseline);
+    // The merged summary also landed as summary.json-compatible bytes
+    // via the CLI path; here assert the cache holds every cell.
+    let cache = CellCache::open(&shared.join("cells")).unwrap();
+    assert_eq!(cache.n_entries(), total);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn killed_shard_resumes_through_the_cell_cache_then_merges_identically() {
+    let root = scratch("resume");
+    let grid_text = fixture_grid_text(&root);
+    let baseline = single_process_bytes(&grid_text, &root.join("single"));
+    let dirs = [root.join("shard0"), root.join("shard1")];
+    run_shard(&dirs[0], &grid_text, ShardSpec { index: 0, count: 2 }, 2);
+    run_shard(&dirs[1], &grid_text, ShardSpec { index: 1, count: 2 }, 2);
+
+    // "Kill" shard 1 partway: delete some of its finished cells (and
+    // its manifest, as a mid-run kill would never have written one).
+    let grid = SweepGrid::from_yaml(&grid_text).unwrap();
+    let cells = grid.expand().unwrap();
+    let spec = ShardSpec { index: 1, count: 2 };
+    let mine = shard_cells(cells, &spec);
+    let cache = CellCache::open(&dirs[1].join("cells")).unwrap();
+    let mut keyer = CellKeyer::new(grid.streaming);
+    for cell in mine.iter().take(3) {
+        std::fs::remove_file(cache.path_for(&keyer.key(&cell.cfg))).unwrap();
+    }
+    std::fs::remove_file(dirs[1].join(spec.manifest_name())).unwrap();
+    // Merging now names the incomplete shard and the resume remedy.
+    let err = merge_shard_dirs(&dirs.to_vec()).unwrap_err();
+    assert!(err.contains("missing shard(s) 1/2"), "{err}");
+
+    // Resume = re-run the same shard against the same directory: only
+    // the deleted cells execute, everything else is a cache hit.
+    let stats = run_shard(&dirs[1], &grid_text, spec, 3);
+    assert_eq!(stats.executed, 3, "resume executes only the killed cells");
+    assert_eq!(stats.cache_hits, mine.len() - 3);
+    assert_eq!(merged_bytes(&dirs.to_vec()), baseline);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn merge_validation_names_overlap_missing_and_foreign_grids() {
+    let root = scratch("validate");
+    let grid_text = fixture_grid_text(&root);
+    let dirs = [root.join("shard0"), root.join("shard1")];
+    run_shard(&dirs[0], &grid_text, ShardSpec { index: 0, count: 2 }, 2);
+    run_shard(&dirs[1], &grid_text, ShardSpec { index: 1, count: 2 }, 2);
+
+    // Missing: only one of two shard dirs.
+    let err = merge_shard_dirs(&[dirs[0].clone()]).unwrap_err();
+    assert!(err.contains("missing shard(s) 1/2"), "{err}");
+
+    // Overlap: a copy of shard 0's manifest claims the same shard from
+    // a different file.
+    let dup = root.join("shard0-copy");
+    std::fs::create_dir_all(dup.join("cells")).unwrap();
+    std::fs::write(dup.join("grid.yaml"), &grid_text).unwrap();
+    std::fs::copy(
+        dirs[0].join("summary-shard-0-of-2.json"),
+        dup.join("summary-shard-0-of-2.json"),
+    )
+    .unwrap();
+    let err = merge_shard_dirs(&[dirs[0].clone(), dup.clone(), dirs[1].clone()]).unwrap_err();
+    assert!(err.contains("overlapping shard 0/2"), "{err}");
+
+    // Foreign grid: a shard of a *different* grid (one more seed) must
+    // be refused on grid-hash grounds.
+    let other_text = grid_text.replace("seeds: [1, 2]", "seeds: [1, 2, 3]");
+    let foreign = root.join("foreign");
+    run_shard(&foreign, &other_text, ShardSpec { index: 1, count: 2 }, 2);
+    let err = merge_shard_dirs(&[dirs[0].clone(), foreign.clone()]).unwrap_err();
+    assert!(err.contains("grid mismatch"), "{err}");
+
+    // Swapped grid copy: manifests agree but the grid.yaml in the first
+    // directory expands to something else.
+    std::fs::write(dirs[0].join("grid.yaml"), &other_text).unwrap();
+    let err = merge_shard_dirs(&dirs.to_vec()).unwrap_err();
+    assert!(err.contains("grid hash"), "{err}");
+    std::fs::write(dirs[0].join("grid.yaml"), &grid_text).unwrap();
+    assert!(merge_shard_dirs(&dirs.to_vec()).is_ok());
+
+    // A directory with no manifests at all is named too.
+    let empty = root.join("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let err = merge_shard_dirs(&[empty]).unwrap_err();
+    assert!(err.contains("no shard manifests"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn shard_runs_are_thread_count_stable() {
+    let root = scratch("threads");
+    let grid_text = fixture_grid_text(&root);
+    let a = root.join("t1");
+    let b = root.join("t3");
+    run_shard(&a, &grid_text, ShardSpec { index: 0, count: 1 }, 1);
+    run_shard(&b, &grid_text, ShardSpec { index: 0, count: 1 }, 3);
+    assert_eq!(
+        merged_bytes(&[a]),
+        merged_bytes(&[b]),
+        "shard output must not depend on worker thread count"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
