@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod hwmodel;
 pub mod metrics;
+pub mod obs;
 pub mod policies;
 pub mod runtime;
 pub mod scenario;

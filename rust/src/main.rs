@@ -6,7 +6,10 @@
 //!                  --autoscale adds an elastic target pool with cost
 //!                  accounting; --classes adds multi-tenant request classes
 //!                  with priority-aware admission; --execution picks the
-//!                  round engine: sequential | pipelined)
+//!                  round engine: sequential | pipelined; --trace-out writes
+//!                  a Chrome trace-event JSON of per-request phase spans)
+//!   trace          inspect a --trace-out file (summarize: per-phase latency
+//!                  breakdown + slowest requests)
 //!   sweep          expand a scenario grid and run every cell in parallel
 //!                  (--shard i/n partitions the grid deterministically across
 //!                  N workers; --merge splices shard run dirs back into the
@@ -18,9 +21,9 @@
 //!   serve          run the real edge-cloud serving path on AOT artifacts;
 //!                  with --listen, run the long-lived grid service instead
 //!                  (line-delimited JSON protocol: submit-grid,
-//!                  poll-progress, fetch-summary, cancel, shutdown)
+//!                  poll-progress, fetch-summary, cancel, stats, shutdown)
 //!   submit         client for a --listen grid service (submit a grid, wait,
-//!                  fetch the summary; also status/cancel/shutdown/ping)
+//!                  fetch the summary; also status/cancel/stats/shutdown/ping)
 //!   awc-eval       compare AWC vs baselines on one configuration
 //!   bench          run a named benchmark suite and write BENCH_<suite>.json
 //!
@@ -31,13 +34,14 @@ use dsd::coordinator::{Coordinator, ServeConfig, ServeRequest, ServeWindow};
 use dsd::experiments::Scale;
 use dsd::sim::Simulator;
 use dsd::util::cli::Command;
+use dsd::log_info;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = args.split_first() else {
         eprintln!(
-            "usage: dsd <simulate|sweep|reproduce|sweep-dataset|trace-gen|serve|submit|awc-eval|\
-             bench> [options]"
+            "usage: dsd <simulate|sweep|reproduce|sweep-dataset|trace|trace-gen|serve|submit|\
+             awc-eval|bench> [options]"
         );
         std::process::exit(2);
     };
@@ -46,6 +50,7 @@ fn main() {
         "sweep" => cmd_sweep(rest),
         "reproduce" => cmd_reproduce(rest),
         "sweep-dataset" => cmd_sweep_dataset(rest),
+        "trace" => cmd_trace(rest),
         "trace-gen" => cmd_trace_gen(rest),
         "serve" => cmd_serve(rest),
         "submit" => cmd_submit(rest),
@@ -91,6 +96,14 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
             None,
         )
         .opt("seed", "override RNG seed", None)
+        .opt(
+            "trace-out",
+            "write a Chrome trace-event JSON file of per-request, per-round phase \
+             spans in simulated time (load in Perfetto, or run `dsd trace \
+             summarize --in <file>`); the printed report stays byte-identical \
+             to an untraced run",
+            None,
+        )
         .flag(
             "streaming",
             "bounded-memory streaming metrics: folded percentiles, per-target and \
@@ -125,8 +138,17 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     if let Some(seed) = a.get_u64("seed").map_err(|e| e.to_string())? {
         cfg.seed = seed;
     }
+    let trace_out = a.get("trace-out");
     if a.flag("streaming") {
-        let report = Simulator::try_new(cfg)?.try_run_streaming()?;
+        let report = match trace_out {
+            Some(path) => {
+                let (report, trace) = Simulator::try_new(cfg)?.try_run_streaming_traced()?;
+                trace.write_chrome_trace(path)?;
+                log_info!("[simulate] wrote trace {path}");
+                report
+            }
+            None => Simulator::try_new(cfg)?.try_run_streaming()?,
+        };
         if a.flag("json") {
             println!("{}", report.to_json().to_string_pretty());
         } else {
@@ -134,13 +156,46 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
         }
         return Ok(());
     }
-    let report = Simulator::try_new(cfg)?.run();
+    let report = match trace_out {
+        Some(path) => {
+            let (report, trace) = Simulator::try_new(cfg)?.try_run_traced()?;
+            trace.write_chrome_trace(path)?;
+            log_info!("[simulate] wrote trace {path}");
+            report
+        }
+        None => Simulator::try_new(cfg)?.run(),
+    };
     if a.flag("json") {
         println!("{}", report.to_json().to_string_pretty());
     } else {
         println!("{}", report.summary());
     }
     Ok(())
+}
+
+/// `dsd trace summarize --in run.trace.json [--top N]`: phase-latency
+/// breakdown and slowest-request timelines from a `--trace-out` file.
+fn cmd_trace(rest: &[String]) -> Result<(), String> {
+    let Some((action, rest)) = rest.split_first() else {
+        return Err("usage: dsd trace summarize --in <run.trace.json> [--top <k>]".into());
+    };
+    match action.as_str() {
+        "summarize" => {
+            let spec = Command::new(
+                "trace summarize",
+                "per-phase latency breakdown + slowest requests from a --trace-out file",
+            )
+            .opt("in", "Chrome trace-event JSON written by `dsd simulate --trace-out`", None)
+            .opt("top", "how many slowest requests to expand with span timelines", Some("5"));
+            let a = spec.parse(rest).map_err(|e| e.to_string())?;
+            let path = a.require("in").map_err(|e| e.to_string())?;
+            let top = a.get_usize("top").map_err(|e| e.to_string())?.unwrap();
+            let doc = dsd::obs::trace::read_chrome_trace(path)?;
+            println!("{}", dsd::obs::trace::summarize_chrome_trace(&doc, top)?);
+            Ok(())
+        }
+        other => Err(format!("unknown trace action '{other}' (known: summarize)")),
+    }
 }
 
 fn cmd_sweep(rest: &[String]) -> Result<(), String> {
@@ -192,9 +247,15 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
              --out-dir (or the single shared directory) and honors --out/--table.",
             None,
         )
+        .opt(
+            "log-level",
+            "stderr log threshold: error|warn|info|debug (overrides DSD_LOG)",
+            None,
+        )
         .flag("table", "print an ASCII table instead of JSON")
         .flag("streaming", "force streaming metrics regardless of the grid file");
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    dsd::obs::log::set_level_str(a.get("log-level").unwrap_or(""))?;
     if let Some(dirs) = a.get("merge") {
         if a.get("grid").is_some()
             || a.get("filter").is_some()
@@ -319,7 +380,7 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     if let Some(spec) = &shard {
         cells = dsd::sweep::shard_cells(cells, spec);
     }
-    eprintln!(
+    log_info!(
         "[sweep] {} cells on {} threads{}{}{} ...",
         cells.len(),
         threads.clamp(1, cells.len().max(1)),
@@ -336,7 +397,7 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
     let (results, stats) =
         dsd::sweep::run_cells_cached(&cells, grid.streaming, threads, cache.as_ref());
     if cache.is_some() {
-        eprintln!("[sweep] {}", stats.describe());
+        log_info!("[sweep] {}", stats.describe());
     }
     if let Some(spec) = shard {
         // Shard runs write their manifest, never summary.json: a shard
@@ -354,7 +415,7 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
             stats,
         };
         let path = manifest.write_to(run_dir.as_ref().expect("--shard requires a run dir"))?;
-        eprintln!("[sweep] wrote {}", path.display());
+        log_info!("[sweep] wrote {}", path.display());
         if n_failed > 0 {
             return Err(format!(
                 "{n_failed} of {} shard cells failed (markers persisted; merge will \
@@ -374,7 +435,7 @@ fn cmd_sweep(rest: &[String]) -> Result<(), String> {
             }
         }
         std::fs::write(path, format!("{json}\n")).map_err(|e| e.to_string())?;
-        eprintln!("[sweep] wrote {}", path.display());
+        log_info!("[sweep] wrote {}", path.display());
         Ok(())
     };
     if let Some(path) = a.get("out") {
@@ -435,7 +496,7 @@ fn cmd_sweep_gc(
         None => None,
     };
     let stats = cache.gc(valid.as_ref());
-    eprintln!("[sweep] gc {}: {}", cells_dir.display(), stats.describe());
+    log_info!("[sweep] gc {}: {}", cells_dir.display(), stats.describe());
     if stats.failed > 0 {
         return Err(format!("gc: {} files could not be removed", stats.failed));
     }
@@ -462,7 +523,7 @@ fn cmd_sweep_merge(
         return Err("merge: no shard directories given".into());
     }
     let report = dsd::sweep::merge_shard_dirs(&dirs)?;
-    eprintln!(
+    log_info!(
         "[sweep] merged {} shards (grid {}): {}",
         report.shard_count,
         report.grid_hash,
@@ -477,7 +538,7 @@ fn cmd_sweep_merge(
             }
         }
         std::fs::write(path, format!("{json}\n")).map_err(|e| e.to_string())?;
-        eprintln!("[sweep] wrote {}", path.display());
+        log_info!("[sweep] wrote {}", path.display());
         Ok(())
     };
     if let Some(path) = out {
@@ -578,14 +639,14 @@ fn cmd_sweep_dataset(rest: &[String]) -> Result<(), String> {
         Some(dir) => Some(dsd::sweep::CellCache::open(std::path::Path::new(dir))?),
         None => None,
     };
-    eprintln!(
+    log_info!(
         "[sweep] {} scenarios x {} probes ...",
         grid.n_scenarios(),
         grid.gammas.len() + 1
     );
     let (rows, stats) = dsd::awc::generate_dataset_cached(&grid, cache.as_ref(), threads);
     if cache.is_some() {
-        eprintln!("[sweep] {}", stats.describe());
+        log_info!("[sweep] {}", stats.describe());
     }
     let path = std::path::Path::new(a.get("out").unwrap());
     if let Some(dir) = path.parent() {
@@ -712,8 +773,14 @@ fn cmd_serve_grid(rest: &[String]) -> Result<(), String> {
              reading, never buffered)",
             Some("4194304"),
         )
-        .opt("timeout-ms", "per-socket read/write timeout, ms", Some("30000"));
+        .opt("timeout-ms", "per-socket read/write timeout, ms", Some("30000"))
+        .opt(
+            "log-level",
+            "stderr log threshold: error|warn|info|debug (overrides DSD_LOG)",
+            None,
+        );
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    dsd::obs::log::set_level_str(a.get("log-level").unwrap_or(""))?;
     let opts = dsd::serve::ServeOptions {
         threads: a.get_usize("threads").map_err(|e| e.to_string())?.unwrap(),
         cache_dir: a.get("cache-dir").map(std::path::PathBuf::from),
@@ -725,6 +792,8 @@ fn cmd_serve_grid(rest: &[String]) -> Result<(), String> {
         request_timeout_ms: a.get_u64("timeout-ms").map_err(|e| e.to_string())?.unwrap(),
     };
     let service = dsd::serve::GridService::start(a.get("listen").unwrap(), opts)?;
+    // The banner stays on raw stderr: scripts (and the CI smoke step)
+    // scrape the bound address from it regardless of log level.
     eprintln!(
         "[serve] grid service listening on {} (protocol v{}; shut down with \
          `dsd submit --addr {} --shutdown`)",
@@ -733,7 +802,7 @@ fn cmd_serve_grid(rest: &[String]) -> Result<(), String> {
         service.addr()
     );
     service.join();
-    eprintln!("[serve] drained; exiting");
+    log_info!("[serve] drained; exiting");
     Ok(())
 }
 
@@ -747,14 +816,25 @@ fn cmd_submit(rest: &[String]) -> Result<(), String> {
         .opt("poll-ms", "poll interval while waiting", Some("500"))
         .opt("wait-ms", "give up waiting after this long", Some("600000"))
         .opt("timeout-ms", "per-request socket timeout, ms", Some("30000"))
+        .opt(
+            "log-level",
+            "stderr log threshold: error|warn|info|debug (overrides DSD_LOG)",
+            None,
+        )
         .flag("streaming", "force streaming metrics regardless of the grid file")
         .flag("no-wait", "submit and print the job id without waiting")
         .flag("status", "poll one job (--job) and print its progress")
         .flag("fetch", "fetch the summary of a completed job (--job)")
         .flag("cancel", "cancel a job (--job)")
+        .flag(
+            "stats",
+            "fetch the service's live introspection snapshot (metrics registry + \
+             per-job phase timings) as pretty JSON",
+        )
         .flag("shutdown", "ask the service to drain and exit")
         .flag("ping", "liveness probe");
     let a = spec.parse(rest).map_err(|e| e.to_string())?;
+    dsd::obs::log::set_level_str(a.get("log-level").unwrap_or(""))?;
     let addr = a.get("addr").unwrap();
     let timeout_ms = a.get_u64("timeout-ms").map_err(|e| e.to_string())?.unwrap();
     let mut client = dsd::serve::GridClient::connect(addr, timeout_ms)?;
@@ -775,7 +855,7 @@ fn cmd_submit(rest: &[String]) -> Result<(), String> {
                 // File form matches `dsd sweep --out` byte-for-byte:
                 // exact summary text plus one trailing newline.
                 std::fs::write(p, format!("{text}\n")).map_err(|e| e.to_string())?;
-                eprintln!("[submit] wrote {}", p.display());
+                log_info!("[submit] wrote {}", p.display());
             }
             None => println!("{text}"),
         }
@@ -784,6 +864,11 @@ fn cmd_submit(rest: &[String]) -> Result<(), String> {
     if a.flag("ping") {
         client.ping()?;
         println!("ok");
+        return Ok(());
+    }
+    if a.flag("stats") {
+        let snapshot = client.fetch_stats()?;
+        println!("{}", snapshot.to_string_pretty());
         return Ok(());
     }
     if a.flag("shutdown") {
@@ -814,7 +899,7 @@ fn cmd_submit(rest: &[String]) -> Result<(), String> {
         .map_err(|e| format!("read {grid_path}: {e}"))?;
     let streaming = if a.flag("streaming") { Some(true) } else { None };
     let id = client.submit_grid_text(&grid_yaml, streaming)?;
-    eprintln!("[submit] job {id} accepted by {addr}");
+    log_info!("[submit] job {id} accepted by {addr}");
     if a.flag("no-wait") {
         println!("{id}");
         return Ok(());
@@ -824,7 +909,7 @@ fn cmd_submit(rest: &[String]) -> Result<(), String> {
     let (state, done, total, failed) = client.wait(id, poll_ms, wait_ms)?;
     match state {
         dsd::serve::JobState::Completed => {
-            eprintln!("[submit] job {id} completed: {done}/{total} cells ({failed} failed)");
+            log_info!("[submit] job {id} completed: {done}/{total} cells ({failed} failed)");
             let text = client.fetch_summary(id)?;
             print_summary(&text)?;
             if failed > 0 {

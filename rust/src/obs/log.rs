@@ -1,0 +1,180 @@
+//! Leveled stderr logging for the wall-clock surfaces (sweep runner,
+//! grid service, CLI) — never for simulated output.
+//!
+//! Levels follow the usual ladder (error < warn < info < debug); the
+//! effective level resolves, in precedence order, from:
+//!
+//! 1. an explicit [`set_level`] / [`set_level_str`] call (the
+//!    `--log-level` CLI flag),
+//! 2. the `DSD_LOG` environment variable (`error|warn|info|debug`),
+//! 3. the default, `info`.
+//!
+//! Each line carries a coarse wall-clock timestamp (seconds since
+//! process start). Simulated-time artifacts — reports, summaries,
+//! traces — must never route through this module: they are
+//! byte-reproducible, and wall-clock timestamps are not.
+
+use std::fmt::Arguments;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or job-terminating conditions.
+    Error = 0,
+    /// Degraded-but-continuing conditions (corrupt cache entries, …).
+    Warn = 1,
+    /// Progress milestones (default level).
+    Info = 2,
+    /// Per-step detail.
+    Debug = 3,
+}
+
+impl Level {
+    /// Fixed-width tag for line alignment.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    /// Parse a level name (case-insensitive).
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(format!(
+                "unknown log level '{other}' (known: error, warn, info, debug)"
+            )),
+        }
+    }
+}
+
+/// Sentinel: level not yet resolved from the environment.
+const UNRESOLVED: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNRESOLVED);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn resolve() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != UNRESOLVED {
+        return cur;
+    }
+    let from_env = std::env::var("DSD_LOG")
+        .ok()
+        .and_then(|v| Level::parse(&v).ok())
+        .unwrap_or(Level::Info) as u8;
+    // Racing resolvers read the same env var; last store wins with the
+    // same value.
+    LEVEL.store(from_env, Ordering::Relaxed);
+    from_env
+}
+
+/// Override the level programmatically (flag beats `DSD_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Parse-and-set for the `--log-level` flag; an empty string keeps the
+/// env/default resolution.
+pub fn set_level_str(s: &str) -> Result<(), String> {
+    if s.is_empty() {
+        return Ok(());
+    }
+    Level::parse(s).map(set_level)
+}
+
+/// Would a message at `level` currently print?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= resolve()
+}
+
+/// Sink for the `log_*!` macros — prints one stderr line with a
+/// seconds-since-start timestamp. Call through the macros, not directly.
+pub fn write(level: Level, args: Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let secs = start.elapsed().as_secs_f64();
+    eprintln!("[{secs:9.3}s {}] {args}", level.tag());
+}
+
+/// Log at error level (always printed unless filtered above `error`).
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Error, format_args!($($t)*))
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+/// Log at info level (the default threshold).
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+/// Log at debug level (hidden unless `DSD_LOG=debug` / `--log-level
+/// debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_levels_case_insensitively() {
+        assert_eq!(Level::parse("ERROR").unwrap(), Level::Error);
+        assert_eq!(Level::parse("Warn").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("warning").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("info").unwrap(), Level::Info);
+        assert_eq!(Level::parse("debug").unwrap(), Level::Debug);
+        assert!(Level::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        // Serialized against itself by the test name; other tests do not
+        // touch the global level.
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        // Restore the default so ordering against other tests in this
+        // binary does not matter.
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn empty_level_string_is_a_noop() {
+        assert!(set_level_str("").is_ok());
+        assert!(set_level_str("nope").is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! Observability: the flight recorder ([`trace`]), the process-global
+//! metrics registry ([`registry`]), and leveled wall-clock logging
+//! ([`log`]).
+//!
+//! Three subsystems, one invariant: **observing never perturbs.** The
+//! simulator's outputs are byte-reproducible, and every instrument here
+//! is designed so that turning observability on or off cannot change a
+//! report, a summary, or a cache key:
+//!
+//! * [`trace::Recorder`] defaults to a `Disabled` variant whose hooks
+//!   are inlined no-ops; active recorders only copy values the
+//!   simulator already computed (never drawing from its RNG streams or
+//!   touching its event queue).
+//! * [`registry`] instruments wall-clock surfaces only (sweep runner,
+//!   grid service) with const-initialized atomics — zero allocation,
+//!   zero locks on the hot path.
+//! * [`log`] writes leveled lines to stderr with wall-clock timestamps;
+//!   simulated-time artifacts never route through it.
+//!
+//! Surfaces: `dsd simulate --trace-out run.trace.json` (Chrome
+//! trace-event JSON, Perfetto-loadable), `dsd trace summarize` (phase
+//! breakdown + slowest requests), the serve protocol's `stats` message
+//! (`dsd submit --stats`), and the `DSD_LOG` / `--log-level` knobs.
+
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use trace::{Recorder, TraceData, Track, NO_REQ};

@@ -1,0 +1,338 @@
+//! Process-global metrics registry: statically registered counters,
+//! gauges, and histograms with lock-free atomic updates.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero allocation on the hot path.** Every instrument is a
+//!    `const`-constructible static; updates are single relaxed atomic
+//!    RMW operations. No lazy registration map, no string formatting,
+//!    no locks.
+//! 2. **Wall-clock only.** Nothing here ever touches simulated time or
+//!    the simulator's RNG streams — instruments measure the *harness*
+//!    (sweep runner, grid service), never the simulation, so simulated
+//!    outputs stay byte-identical whether or not anything reads the
+//!    registry.
+//! 3. **Deterministic snapshots.** [`snapshot`] walks a hand-maintained
+//!    static list in declaration order, so the JSON key order of a
+//!    `stats` response never depends on update order.
+//!
+//! Histograms store integer microsecond sums: integer atomics are
+//! associative, so concurrent `observe` calls from sweep workers fold
+//! into exactly the same total regardless of interleaving (the
+//! concurrency property test below leans on this).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone event counter.
+pub struct Counter {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Const constructor — usable in `static` position.
+    pub const fn new(name: &'static str) -> Counter {
+        Counter {
+            name,
+            v: AtomicU64::new(0),
+        }
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Registered name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Last-value / high-water gauge.
+pub struct Gauge {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// Const constructor — usable in `static` position.
+    pub const fn new(name: &'static str) -> Gauge {
+        Gauge {
+            name,
+            v: AtomicU64::new(0),
+        }
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    /// Raise the value to `n` if it is below (high-water tracking;
+    /// `fetch_max` makes concurrent raises race-free).
+    #[inline]
+    pub fn raise(&self, n: u64) {
+        self.v.fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Registered name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Histogram bucket upper bounds, microseconds (wall-clock durations;
+/// the last bucket is the overflow catch-all).
+const BUCKET_BOUNDS_US: [u64; 8] = [
+    1_000,      // 1 ms
+    5_000,      // 5 ms
+    10_000,     // 10 ms
+    50_000,     // 50 ms
+    100_000,    // 100 ms
+    500_000,    // 500 ms
+    1_000_000,  // 1 s
+    10_000_000, // 10 s
+];
+
+/// Fixed-bucket latency histogram over wall-clock milliseconds.
+/// Sums are integer microseconds so cross-thread folds are exact.
+pub struct Histogram {
+    name: &'static str,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    buckets: [AtomicU64; BUCKET_BOUNDS_US.len() + 1],
+}
+
+impl Histogram {
+    /// Const constructor — usable in `static` position.
+    pub const fn new(name: &'static str) -> Histogram {
+        // `AtomicU64` is not `Copy`; spell the array out.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            count: Z,
+            sum_us: Z,
+            buckets: [Z; BUCKET_BOUNDS_US.len() + 1],
+        }
+    }
+
+    /// Record one duration in milliseconds.
+    #[inline]
+    pub fn observe_ms(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 {
+            (ms * 1000.0) as u64
+        } else {
+            0
+        };
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = BUCKET_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(BUCKET_BOUNDS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of recorded durations, microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Registered name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .with("count", self.count().into())
+            .with("sum_ms", ((self.sum_us() as f64) / 1000.0).into())
+            .with(
+                "bucket_bounds_ms",
+                Json::Arr(
+                    BUCKET_BOUNDS_US
+                        .iter()
+                        .map(|&b| Json::Num(b as f64 / 1000.0))
+                        .collect(),
+                ),
+            )
+            .with(
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|b| Json::Num(b.load(Ordering::Relaxed) as f64))
+                        .collect(),
+                ),
+            )
+    }
+}
+
+// ---- Static instruments -------------------------------------------------
+// Sweep runner (instrumented in `sweep::runner::run_cells_cached`).
+
+/// Cells that actually entered the simulator.
+pub static SWEEP_CELLS_EXECUTED: Counter = Counter::new("sweep.cells_executed");
+/// Cells satisfied from the cell cache.
+pub static SWEEP_CACHE_HITS: Counter = Counter::new("sweep.cache_hits");
+/// Cells that missed the cache (executed fresh).
+pub static SWEEP_CACHE_MISSES: Counter = Counter::new("sweep.cache_misses");
+/// Persisted failure markers surfaced without re-execution.
+pub static SWEEP_CACHE_FAILED_HITS: Counter = Counter::new("sweep.cache_failed_hits");
+/// Corrupt / truncated cache entries that forced re-execution.
+pub static SWEEP_CACHE_CORRUPT: Counter = Counter::new("sweep.cache_corrupt");
+/// Per-cell wall-clock (cache hits excluded — only simulator entries).
+pub static SWEEP_CELL_WALL_MS: Histogram = Histogram::new("sweep.cell_wall_ms");
+/// High-water mark of concurrently busy sweep workers.
+pub static SWEEP_WORKERS_BUSY_HW: Gauge = Gauge::new("sweep.workers_busy_hw");
+
+// Grid service (instrumented in `serve::service` / `serve::job`).
+
+/// Jobs accepted into the queue.
+pub static SERVE_JOBS_ACCEPTED: Counter = Counter::new("serve.jobs_accepted");
+/// Jobs that ran to completion.
+pub static SERVE_JOBS_COMPLETED: Counter = Counter::new("serve.jobs_completed");
+/// Jobs that terminated with an error.
+pub static SERVE_JOBS_FAILED: Counter = Counter::new("serve.jobs_failed");
+/// Jobs cancelled before completion.
+pub static SERVE_JOBS_CANCELLED: Counter = Counter::new("serve.jobs_cancelled");
+/// High-water mark of live (queued + running) jobs.
+pub static SERVE_QUEUE_DEPTH_HW: Gauge = Gauge::new("serve.queue_depth_hw");
+/// Request bytes read off client sockets.
+pub static SERVE_BYTES_IN: Counter = Counter::new("serve.bytes_in");
+/// Response bytes written to client sockets.
+pub static SERVE_BYTES_OUT: Counter = Counter::new("serve.bytes_out");
+
+/// JSON snapshot of every registered instrument, declaration order.
+/// This is the payload behind the serve protocol's `stats` message.
+pub fn snapshot() -> Json {
+    let counters: [&Counter; 9] = [
+        &SWEEP_CELLS_EXECUTED,
+        &SWEEP_CACHE_HITS,
+        &SWEEP_CACHE_MISSES,
+        &SWEEP_CACHE_FAILED_HITS,
+        &SWEEP_CACHE_CORRUPT,
+        &SERVE_JOBS_ACCEPTED,
+        &SERVE_JOBS_COMPLETED,
+        &SERVE_JOBS_FAILED,
+        &SERVE_JOBS_CANCELLED,
+    ];
+    let gauges: [&Gauge; 2] = [&SWEEP_WORKERS_BUSY_HW, &SERVE_QUEUE_DEPTH_HW];
+    let byte_counters: [&Counter; 2] = [&SERVE_BYTES_IN, &SERVE_BYTES_OUT];
+    let mut c = Json::obj();
+    for x in counters.iter().chain(byte_counters.iter()) {
+        c.set(x.name(), x.get().into());
+    }
+    let mut g = Json::obj();
+    for x in &gauges {
+        g.set(x.name(), x.get().into());
+    }
+    let mut h = Json::obj();
+    h.set(SWEEP_CELL_WALL_MS.name(), SWEEP_CELL_WALL_MS.to_json());
+    Json::obj()
+        .with("counters", c)
+        .with("gauges", g)
+        .with("histograms", h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Concurrency property: counts recorded by N threads sum exactly —
+    /// no lost updates, no double counts. Uses function-local statics so
+    /// parallel test binaries / other tests cannot perturb the totals.
+    #[test]
+    fn counts_sum_across_threads() {
+        static C: Counter = Counter::new("test.counter");
+        static G: Gauge = Gauge::new("test.gauge");
+        static H: Histogram = Histogram::new("test.histogram");
+        let threads = 8;
+        let per_thread = 10_000u64;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                scope.spawn(move || {
+                    for i in 0..per_thread {
+                        C.inc();
+                        G.raise(t * per_thread + i + 1);
+                        // 2 ms each → exact 2000 µs integer increments.
+                        H.observe_ms(2.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(C.get(), threads * per_thread);
+        assert_eq!(G.get(), threads * per_thread, "high-water is the max raise");
+        assert_eq!(H.count(), threads * per_thread);
+        assert_eq!(H.sum_us(), threads * per_thread * 2_000);
+    }
+
+    #[test]
+    fn histogram_buckets_partition_observations() {
+        static H: Histogram = Histogram::new("test.buckets");
+        for ms in [0.5, 3.0, 8.0, 40.0, 90.0, 400.0, 900.0, 5_000.0, 60_000.0] {
+            H.observe_ms(ms);
+        }
+        let j = H.to_json();
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        let total: f64 = buckets.iter().filter_map(Json::as_f64_or_nan).sum();
+        assert_eq!(total as u64, H.count());
+        // One observation per bucket by construction, incl. overflow.
+        assert!(buckets.iter().all(|b| b.as_f64_or_nan() == Some(1.0)));
+    }
+
+    #[test]
+    fn non_finite_observations_do_not_poison_sums() {
+        static H: Histogram = Histogram::new("test.nan");
+        H.observe_ms(f64::NAN);
+        H.observe_ms(f64::INFINITY);
+        H.observe_ms(-5.0);
+        assert_eq!(H.count(), 3);
+        assert_eq!(H.sum_us(), 0, "degenerate durations clamp to zero");
+    }
+
+    #[test]
+    fn snapshot_has_stable_shape() {
+        let s = snapshot();
+        for key in ["counters", "gauges", "histograms"] {
+            assert!(s.get(key).is_some(), "snapshot missing {key}");
+        }
+        assert!(s
+            .path(&["counters", "serve.jobs_accepted"])
+            .and_then(Json::as_u64)
+            .is_some());
+        assert!(s
+            .path(&["histograms", "sweep.cell_wall_ms", "count"])
+            .and_then(Json::as_u64)
+            .is_some());
+        // Snapshots are valid canonical JSON (the stats transport).
+        let text = s.to_string_canonical();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

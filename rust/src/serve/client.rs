@@ -129,6 +129,12 @@ impl GridClient {
             .ok_or_else(|| "submit: summary response carries no summary".into())
     }
 
+    /// Fetch the live introspection snapshot: the server's metrics
+    /// registry plus per-job wall-clock phase timings.
+    pub fn fetch_stats(&mut self) -> Result<Json, String> {
+        self.request_ok(&Request::Stats)
+    }
+
     /// Cancel a job.
     pub fn cancel(&mut self, job: u64) -> Result<(), String> {
         self.request_ok(&Request::Cancel { job }).map(|_| ())

@@ -9,9 +9,11 @@
 //! `fetch` requests can still be answered; they don't count against the
 //! bound.
 
+use crate::obs::registry;
 use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// Lifecycle of one submitted grid.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +97,11 @@ struct Job {
     streaming: Option<bool>,
     /// Exact pretty summary text (Completed only).
     summary: Option<String>,
+    /// Wall-clock lifecycle stamps for the `stats` introspection
+    /// surface. Wall-clock only — simulated time never appears here.
+    t_submitted: Instant,
+    t_started: Option<Instant>,
+    t_finished: Option<Instant>,
 }
 
 /// What the worker receives for one unit of work.
@@ -242,8 +249,13 @@ impl JobQueue {
             grid_yaml,
             streaming,
             summary: None,
+            t_submitted: Instant::now(),
+            t_started: None,
+            t_finished: None,
         });
         q.pending.push_back(id);
+        registry::SERVE_JOBS_ACCEPTED.inc();
+        registry::SERVE_QUEUE_DEPTH_HW.raise((live + 1) as u64);
         drop(q);
         self.wake.notify_all();
         Ok(id)
@@ -290,6 +302,8 @@ impl JobQueue {
         match job.status.state {
             JobState::Queued | JobState::Running => {
                 job.status.state = JobState::Cancelled;
+                job.t_finished = Some(Instant::now());
+                registry::SERVE_JOBS_CANCELLED.inc();
                 true
             }
             _ => true,
@@ -322,6 +336,7 @@ impl JobQueue {
                     continue; // cancelled while queued
                 }
                 job.status.state = JobState::Running;
+                job.t_started = Some(Instant::now());
                 return Some(ClaimedJob {
                     id,
                     grid_yaml: job.grid_yaml.clone(),
@@ -376,6 +391,7 @@ impl JobQueue {
         if job.status.state != JobState::Running {
             return; // cancelled while running: keep the Cancelled state
         }
+        job.t_finished = Some(Instant::now());
         match outcome {
             Ok(text) => {
                 job.status.state = JobState::Completed;
@@ -386,6 +402,31 @@ impl JobQueue {
                 job.status.error = Some(why);
             }
         }
+    }
+
+    /// Per-job wall-clock phase timings for the `stats` introspection
+    /// message: how long each job queued and ran (milliseconds;
+    /// still-open phases are measured up to now).
+    pub fn phase_timings(&self) -> Json {
+        let now = Instant::now();
+        let ms = |a: Instant, b: Instant| b.duration_since(a).as_secs_f64() * 1e3;
+        let q = self.lock();
+        Json::Arr(
+            q.jobs
+                .iter()
+                .map(|job| {
+                    let queued_ms = ms(job.t_submitted, job.t_started.unwrap_or(now));
+                    let mut j = Json::obj()
+                        .with("job", job.status.id.into())
+                        .with("state", job.status.state.label().into())
+                        .with("queued_ms", queued_ms.into());
+                    if let Some(started) = job.t_started {
+                        j.set("run_ms", ms(started, job.t_finished.unwrap_or(now)).into());
+                    }
+                    j
+                })
+                .collect(),
+        )
     }
 }
 

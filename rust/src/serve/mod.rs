@@ -4,7 +4,9 @@
 //! `dsd serve --listen <addr>` runs a [`service::GridService`]: a TCP
 //! listener speaking a line-delimited, versioned JSON protocol
 //! ([`protocol`]) over which clients submit sweep grids, poll progress,
-//! fetch finished summaries, and cancel jobs. Execution reuses the
+//! fetch finished summaries, cancel jobs, and pull a live `stats`
+//! introspection snapshot (metrics registry + per-job phase timings,
+//! surfaced by `dsd submit --stats`). Execution reuses the
 //! content-addressed cell cache, so a service pointed at a warm cache
 //! directory answers repeat submissions without re-simulating, and a
 //! grid being chewed by `--shard` workers elsewhere benefits from the

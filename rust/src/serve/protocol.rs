@@ -10,6 +10,7 @@
 //! {"v":1,"type":"poll-progress","job":3}
 //! {"v":1,"type":"fetch-summary","job":3}
 //! {"v":1,"type":"cancel","job":3}
+//! {"v":1,"type":"stats"}
 //! {"v":1,"type":"shutdown"}
 //! ```
 //!
@@ -53,6 +54,10 @@ pub enum Request {
     FetchSummary { job: u64 },
     /// Cancel a queued or running job.
     Cancel { job: u64 },
+    /// Live introspection snapshot: metrics-registry state plus per-job
+    /// phase timings. Answered from the connection thread without
+    /// touching the worker.
+    Stats,
     /// Stop intake, finish the running job, exit.
     Shutdown,
 }
@@ -84,6 +89,7 @@ impl Request {
             Request::Cancel { job } => {
                 base.with("type", "cancel".into()).with("job", (*job).into())
             }
+            Request::Stats => base.with("type", "stats".into()),
             Request::Shutdown => base.with("type", "shutdown".into()),
         }
     }
@@ -150,7 +156,7 @@ impl RequestError {
             RequestError::MissingType => "request has no 'type' key".into(),
             RequestError::UnknownType { got } => format!(
                 "unknown request type '{got}' (known: ping, submit-grid, \
-                 poll-progress, fetch-summary, cancel, shutdown)"
+                 poll-progress, fetch-summary, cancel, stats, shutdown)"
             ),
             RequestError::MissingField { req, field } => {
                 format!("{req} request is missing required field '{field}'")
@@ -248,6 +254,7 @@ pub fn parse_request(line: &str, max_bytes: usize) -> Result<Request, RequestErr
         "cancel" => Ok(Request::Cancel {
             job: job_field("cancel")?,
         }),
+        "stats" => Ok(Request::Stats),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(RequestError::UnknownType { got: other.into() }),
     }
@@ -301,6 +308,7 @@ mod tests {
             Request::PollProgress { job: 0 },
             Request::FetchSummary { job: 42 },
             Request::Cancel { job: 7 },
+            Request::Stats,
             Request::Shutdown,
         ];
         for r in reqs {

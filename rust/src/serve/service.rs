@@ -20,8 +20,10 @@ use super::protocol::{
     error_response, ok_response, parse_request, Request, RequestError,
     DEFAULT_MAX_REQUEST_BYTES, DEFAULT_REQUEST_TIMEOUT_MS,
 };
+use crate::obs::registry;
 use crate::sweep::{run_cells_cached, CellCache, CellResult, SweepGrid, SweepSummary};
 use crate::util::json::Json;
+use crate::{log_error, log_warn};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -161,7 +163,7 @@ fn accept_loop(
                 std::thread::sleep(ACCEPT_POLL);
             }
             Err(e) => {
-                eprintln!("[serve] accept error: {e}");
+                log_warn!("[serve] accept error: {e}");
                 std::thread::sleep(ACCEPT_POLL);
             }
         }
@@ -205,6 +207,7 @@ fn read_line_bounded(
             break;
         }
     }
+    registry::SERVE_BYTES_IN.add(total as u64);
     if overflowed {
         return Ok(Some(Err(RequestError::Oversized { len: total, max })));
     }
@@ -214,6 +217,7 @@ fn read_line_bounded(
 fn write_response(stream: &mut TcpStream, response: &Json) -> std::io::Result<()> {
     let mut text = response.to_string_compact();
     text.push('\n');
+    registry::SERVE_BYTES_OUT.add(text.len() as u64);
     stream.write_all(text.as_bytes())?;
     stream.flush()
 }
@@ -293,6 +297,13 @@ fn dispatch(req: Request, queue: &JobQueue, shutdown: &AtomicBool) -> Json {
                 error_response("unknown-job", "no such job")
             }
         }
+        Request::Stats => ok_response(
+            "stats",
+            vec![
+                ("registry", registry::snapshot()),
+                ("jobs", queue.phase_timings()),
+            ],
+        ),
         Request::Shutdown => {
             queue.drain();
             shutdown.store(true, Ordering::SeqCst);
@@ -316,6 +327,21 @@ fn merge_into(mut envelope: Json, extra: Json) -> Json {
 fn worker_loop(queue: &JobQueue, threads: usize, cache: Option<&CellCache>) {
     while let Some(job) = queue.next_job() {
         let outcome = run_job(&job, queue, threads, cache);
+        // A failure used to surface only to whichever client polled the
+        // job; count and log it server-side too so an unattended service
+        // still shows the error (in `stats` and on stderr, with the same
+        // named code a fetch would return).
+        if queue.is_cancelled(job.id) {
+            // Cancelled mid-run: already counted when the cancel landed.
+        } else {
+            match &outcome {
+                Ok(_) => registry::SERVE_JOBS_COMPLETED.inc(),
+                Err(why) => {
+                    registry::SERVE_JOBS_FAILED.inc();
+                    log_error!("[serve] job {} failed (job-failed): {why}", job.id);
+                }
+            }
+        }
         queue.finish(job.id, outcome);
     }
 }

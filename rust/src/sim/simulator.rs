@@ -30,6 +30,7 @@ use crate::metrics::{
     FullSink, MetricsSink, RequestMetrics, SimReport, StreamingConfig, StreamingReport,
     StreamingSink, SystemMetrics,
 };
+use crate::obs::{Recorder, TraceData, Track as SpanTrack, NO_REQ};
 use crate::policies::window::ExecMode;
 use crate::policies::{
     make_batching, make_routing, make_window, BatchingPolicy, QueuedRequest, RoutingPolicy,
@@ -347,12 +348,55 @@ impl Simulator {
         })
     }
 
+    /// [`Simulator::try_run`] with the flight recorder active: returns
+    /// the identical report plus the recorded [`TraceData`]. The
+    /// recorder only copies values the run already computed, so the
+    /// report bytes match an untraced run exactly (differential-tested).
+    pub fn try_run_traced(self) -> Result<(SimReport, TraceData), String> {
+        let rec = Recorder::active(self.topo.drafters.len(), self.topo.targets.len());
+        let (sink, mut system, rec) = self.run_with_recorder(FullSink::new(), rec)?;
+        let mut requests = sink.into_requests();
+        requests.sort_by_key(|r| r.id);
+        system.throughput_rps = steady_throughput(&requests, system.sim_duration_ms);
+        let data = rec.into_data().expect("recorder was active");
+        Ok((SimReport { requests, system }, data))
+    }
+
+    /// [`Simulator::try_run_streaming`] with the flight recorder active.
+    pub fn try_run_streaming_traced(self) -> Result<(StreamingReport, TraceData), String> {
+        let rec = Recorder::active(self.topo.drafters.len(), self.topo.targets.len());
+        let scfg = StreamingConfig::for_sim(&self.cfg);
+        let (sink, system, rec) = self.run_with_recorder(StreamingSink::new(scfg), rec)?;
+        let data = rec.into_data().expect("recorder was active");
+        Ok((
+            StreamingReport {
+                stream: sink.summary(),
+                system,
+            },
+            data,
+        ))
+    }
+
     /// Run with a caller-provided metrics sink; returns the sink and the
     /// system aggregates (`throughput_rps` left at the naive
     /// completions/duration ratio — [`Simulator::try_run`] refines it
     /// from the full completion-time sample). Errs when the window
     /// policy cannot be constructed.
     pub fn run_with<S: MetricsSink>(self, sink: S) -> Result<(S, SystemMetrics), String> {
+        let (sink, system, _) = self.run_with_recorder(sink, Recorder::Disabled)?;
+        Ok((sink, system))
+    }
+
+    /// [`Simulator::run_with`] plus an optional flight recorder. The
+    /// recorder is a pure observer: it copies times the run already
+    /// computed and never draws randomness or schedules events, so
+    /// passing `Recorder::Disabled` here is bit-identical to the
+    /// pre-recorder engine.
+    fn run_with_recorder<S: MetricsSink>(
+        self,
+        sink: S,
+        rec: Recorder,
+    ) -> Result<(S, SystemMetrics, Recorder), String> {
         // Re-checked here (not only in `try_new`) so traces injected via
         // the infallible `with_trace` face the same class-id gate.
         check_trace_classes(&self.cfg, &self.trace)?;
@@ -361,10 +405,12 @@ impl Simulator {
         let window = make_window(&self.cfg.window)?;
         let mut st = SimState::build(self.cfg, self.topo, self.predictor, self.trace,
                                      routing, batching, window, sink);
+        st.rec = rec;
         st.run_loop();
         st.finalize_autoscale();
         let system = st.system_metrics();
-        Ok((st.sink, system))
+        let rec = std::mem::take(&mut st.rec);
+        Ok((st.sink, system, rec))
     }
 }
 
@@ -468,6 +514,10 @@ struct SimState<S: MetricsSink> {
     feat_sum: [f64; 5],
     feat_n: u64,
     sink: S,
+    /// Flight recorder (`Recorder::Disabled` on plain runs — every hook
+    /// below is then an inlined no-op, keeping the engine bit-identical
+    /// to its pre-recorder trajectory).
+    rec: Recorder,
     /// Whether the sink wants per-request γ-decision vectors retained.
     keep_gammas: bool,
     /// Scratch buffer for routable-target snapshots, refilled before
@@ -653,6 +703,7 @@ impl<S: MetricsSink> SimState<S> {
             feat_sum: [0.0; 5],
             feat_n: 0,
             sink,
+            rec: Recorder::Disabled,
             keep_gammas,
             snap_scratch: Vec::with_capacity(n_targets),
         };
@@ -1122,6 +1173,7 @@ impl<S: MetricsSink> SimState<S> {
         let did = self.requests[rid].drafter;
         let prompt_bytes = self.requests[rid].prompt_length as f64 * TOKEN_BYTES;
         let d = self.link_delay(did, prompt_bytes);
+        self.rec.net("net:prompt-up", rid as u64, now, d);
         self.q.schedule_in(d, Ev::PromptAtTarget(rid));
         if self.fused_only {
             self.requests[rid].edge_prefill_done = true;
@@ -1139,7 +1191,6 @@ impl<S: MetricsSink> SimState<S> {
             self.drafters[did].tasks.push_back(DrafterTask::Prefill(rid));
             self.q.schedule_in(0.0, Ev::DrafterFree(did));
         }
-        let _ = now;
     }
 
     // ---- Drafter servicing ----
@@ -1158,15 +1209,23 @@ impl<S: MetricsSink> SimState<S> {
                 let ms =
                     self.predictor
                         .prefill_ms(dev.model, hw, self.requests[rid].prompt_length, 1);
+                if self.rec.is_active() {
+                    let t0 = self.q.now();
+                    self.rec
+                        .device(SpanTrack::Drafter(did as u32), "edge-prefill", rid as u64, t0, t0 + ms);
+                }
                 self.q.schedule_in(ms, Ev::DrafterTaskDone { req: rid, gamma: 0 });
             }
             DrafterTask::Draft { req, gamma } => {
                 let ctx = self.requests[req].ctx_len();
                 let per_tok = self.predictor.decode_ms(dev.model, hw, 1, ctx);
-                self.q.schedule_in(
-                    per_tok * gamma as f64,
-                    Ev::DrafterTaskDone { req, gamma },
-                );
+                let dur = per_tok * gamma as f64;
+                if self.rec.is_active() {
+                    let t0 = self.q.now();
+                    self.rec
+                        .device(SpanTrack::Drafter(did as u32), "draft", req as u64, t0, t0 + dur);
+                }
+                self.q.schedule_in(dur, Ev::DrafterTaskDone { req, gamma });
             }
         }
     }
@@ -1229,6 +1288,7 @@ impl<S: MetricsSink> SimState<S> {
                 return;
             }
             let d = self.link_delay(did, gamma as f64 * TOKEN_BYTES);
+            self.rec.net("net:uplink", rid as u64, now, d);
             self.q.schedule_in(
                 d,
                 Ev::UplinkArrive { req: rid, gamma, sent_ms: now, spec: false },
@@ -1290,6 +1350,10 @@ impl<S: MetricsSink> SimState<S> {
         });
         // Decision-time fold point, same as the sequential round path.
         self.sink.record_gamma(gamma);
+        if self.rec.is_active() {
+            let t = self.q.now();
+            self.rec.instant("spec-draft", rid as u64, t);
+        }
         self.drafters[did]
             .tasks
             .push_back(DrafterTask::Draft { req: rid, gamma });
@@ -1310,6 +1374,7 @@ impl<S: MetricsSink> SimState<S> {
                 // releases (or invalidates) it.
                 let did = self.requests[rid].drafter;
                 let d = self.link_delay(did, gamma as f64 * TOKEN_BYTES);
+                self.rec.net("net:spec-uplink", rid as u64, now, d);
                 let slot = self.requests[rid].inflight.as_mut().expect("checked above");
                 slot.phase = InflightPhase::Uplink;
                 slot.sent_ms = now;
@@ -1346,6 +1411,10 @@ impl<S: MetricsSink> SimState<S> {
             InflightPhase::Promoted => {
                 // Promoted mid-flight: land it straight in the verify
                 // queue and start drafting the next window.
+                if self.rec.is_active() {
+                    let t = self.q.now();
+                    self.rec.instant("promoted-landed", rid as u64, t);
+                }
                 self.requests[rid].inflight = None;
                 let tid = self.routable_target(rid);
                 self.targets[tid].verify_q.push_back((rid, inf.gamma, self.q.now()));
@@ -1382,6 +1451,10 @@ impl<S: MetricsSink> SimState<S> {
         };
         self.requests[rid].inflight =
             next.map(|phase| Inflight { phase, ..inf });
+        if self.rec.is_active() {
+            let t = self.q.now();
+            self.rec.instant("invalidated", rid as u64, t);
+        }
         self.meter_waste(inf.gamma, uplink);
     }
 
@@ -1425,6 +1498,7 @@ impl<S: MetricsSink> SimState<S> {
                 // joins the verify queue when it lands (the next
                 // speculative window spawns at that point, once the
                 // slot frees — see `on_spec_uplink_arrive`).
+                self.rec.instant("promoted", rid as u64, now);
                 let r = &mut self.requests[rid];
                 r.awaiting_verdict = true;
                 r.uplink_sent_ms = inf.sent_ms;
@@ -1434,7 +1508,10 @@ impl<S: MetricsSink> SimState<S> {
                 // Parked at the cloud: release it into the verify queue
                 // right now — this is the pipelining win, the next
                 // window starts verification with zero drafter/uplink
-                // latency on the critical path.
+                // latency on the critical path. The held span runs from
+                // the window's arrival at the target to this release.
+                self.rec
+                    .inflight("held", rid as u64, inf.sent_ms + inf.uplink_ms, now);
                 self.requests[rid].inflight = None;
                 let r = &mut self.requests[rid];
                 r.awaiting_verdict = true;
@@ -1455,7 +1532,7 @@ impl<S: MetricsSink> SimState<S> {
     }
 
     // ---- Speculation stage: window decision + drafting/migration ----
-    fn start_round(&mut self, _now: f64, rid: usize) {
+    fn start_round(&mut self, now: f64, rid: usize) {
         // Device failure overrides the window policy: with no live
         // drafter the only executable mode is fused. The policy is not
         // consulted (and no feature vector is recorded) — this is a
@@ -1465,6 +1542,7 @@ impl<S: MetricsSink> SimState<S> {
             self.requests[rid].mode = ExecMode::Fused;
             let tid = self.routable_target(rid);
             let d = self.link_delay(did, CTRL_BYTES);
+            self.rec.net("net:ctrl", rid as u64, now, d);
             self.targets[tid].fused_resident.push_back(rid);
             self.q.schedule_in(d, Ev::TargetKick(tid));
             return;
@@ -1484,6 +1562,7 @@ impl<S: MetricsSink> SimState<S> {
                 // target drained while it speculated).
                 let tid = self.routable_target(rid);
                 let d = self.link_delay(did, CTRL_BYTES);
+                self.rec.net("net:ctrl", rid as u64, now, d);
                 self.targets[tid].fused_resident.push_back(rid);
                 self.q.schedule_in(d, Ev::TargetKick(tid));
             }
@@ -1550,9 +1629,14 @@ impl<S: MetricsSink> SimState<S> {
             TargetOp::Prefill(ids) => {
                 self.targets[tid].last_was_prefill = true;
                 let set: std::collections::HashSet<usize> = ids.iter().copied().collect();
+                let trace_q = self.rec.is_active();
+                let mut qitems: Vec<(u64, f64)> = Vec::new();
                 let (mut dsum, mut dn) = (0.0, 0u64);
                 self.targets[tid].prefill_q.retain(|&(r, enq)| {
                     if set.contains(&r) {
+                        if trace_q {
+                            qitems.push((r as u64, enq));
+                        }
                         dsum += now - enq;
                         dn += 1;
                         false
@@ -1562,14 +1646,20 @@ impl<S: MetricsSink> SimState<S> {
                 });
                 self.queue_delays_sum += dsum;
                 self.queue_delays_n += dn;
+                self.rec.queue_batch(now, &qitems);
             }
             TargetOp::Verify(jobs) => {
                 self.targets[tid].last_was_prefill = false;
                 let set: std::collections::HashSet<usize> =
                     jobs.iter().map(|&(r, _)| r).collect();
+                let trace_q = self.rec.is_active();
+                let mut qitems: Vec<(u64, f64)> = Vec::new();
                 let (mut dsum, mut dn) = (0.0, 0u64);
                 self.targets[tid].verify_q.retain(|&(r, _, enq)| {
                     if set.contains(&r) {
+                        if trace_q {
+                            qitems.push((r as u64, enq));
+                        }
                         dsum += now - enq;
                         dn += 1;
                         false
@@ -1579,6 +1669,7 @@ impl<S: MetricsSink> SimState<S> {
                 });
                 self.queue_delays_sum += dsum;
                 self.queue_delays_n += dn;
+                self.rec.queue_batch(now, &qitems);
             }
             TargetOp::FusedDecode(ids) => {
                 self.targets[tid].last_was_prefill = false;
@@ -1589,6 +1680,15 @@ impl<S: MetricsSink> SimState<S> {
             }
         }
         let dur = self.op_duration(tid, &op);
+        if self.rec.is_active() {
+            let phase = match &op {
+                TargetOp::Prefill(_) => "prefill",
+                TargetOp::Verify(_) => "verify",
+                TargetOp::FusedDecode(_) => "fused-decode",
+            };
+            self.rec
+                .device(SpanTrack::Target(tid as u32), phase, NO_REQ, now, now + dur);
+        }
         let t = &mut self.targets[tid];
         t.busy = true;
         t.busy_ms += dur;
@@ -1769,6 +1869,7 @@ impl<S: MetricsSink> SimState<S> {
                 for rid in ids {
                     let did = self.requests[rid].drafter;
                     let d = self.link_delay(did, CTRL_BYTES);
+                    self.rec.net("net:notify", rid as u64, now, d);
                     self.q.schedule_in(d, Ev::PrefillNotify(rid));
                 }
             }
@@ -1808,6 +1909,7 @@ impl<S: MetricsSink> SimState<S> {
                     produced_total += out.produced;
                     // Verify result: acceptance outcome + bonus token.
                     let d = self.link_delay(did, (gamma + 1) as f64 * TOKEN_BYTES);
+                    self.rec.net("net:downlink", rid as u64, now, d);
                     self.q.schedule_in(d, Ev::DownlinkArrive { req: rid, net_ms: d });
                 }
                 if produced_total > 0 {
@@ -1850,6 +1952,7 @@ impl<S: MetricsSink> SimState<S> {
                             self.requests[rid].mode = ExecMode::Distributed;
                             let did = self.requests[rid].drafter;
                             let d = self.link_delay(did, CTRL_BYTES);
+                            self.rec.net("net:migrate", rid as u64, now, d);
                             self.q.schedule_in(d, Ev::MigrateToEdge(rid));
                         }
                     }
@@ -1948,6 +2051,10 @@ impl<S: MetricsSink> SimState<S> {
             };
             self.completed_tokens += out_toks as u64;
             self.sink.record(&m);
+            // Whole-request lifetime span; its duration is the exact
+            // `e2e_ms` expression above, so the trace reconstructs the
+            // report's per-request latencies bit for bit.
+            self.rec.request(m.id as u64, m.arrival_ms, now);
         }
         if !self.class_completed.is_empty() {
             self.class_completed[class] += 1;

@@ -10,11 +10,14 @@ use super::cache::{CacheLookup, CellCache, CellKeyer, MAX_FAILED_ATTEMPTS};
 use super::grid::{SweepCell, SweepGrid};
 use crate::autoscale::AutoscaleMetrics;
 use crate::config::SimConfig;
+use crate::log_warn;
 use crate::metrics::{SimReport, SloSpec, StreamingReport, TimeSeriesConfig, TimeSeriesSummary};
+use crate::obs::registry;
 use crate::sim::Simulator;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Flat per-class reading carried by class-bearing cells: the tier
 /// name plus the numbers the fairness analyses plot (completion count,
@@ -404,6 +407,9 @@ pub fn run_cells_cached(
     let cache_hits = AtomicUsize::new(0);
     let corrupt_entries = AtomicUsize::new(0);
     let failed_hits = AtomicUsize::new(0);
+    // Concurrently-busy workers, for the registry's occupancy high-water
+    // (observability only — RunStats stays the deterministic record).
+    let busy = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<CellResult>>> =
         cells.iter().map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
@@ -419,6 +425,8 @@ pub fn run_cells_cached(
                         break;
                     }
                     let cell = &cells[i];
+                    let now_busy = busy.fetch_add(1, Ordering::Relaxed) + 1;
+                    registry::SWEEP_WORKERS_BUSY_HW.raise(now_busy as u64);
                     let key = cache.map(|_| keyer.key(&cell.cfg));
                     let mut outcome = None;
                     let mut prior_attempts = 0u32;
@@ -426,6 +434,7 @@ pub fn run_cells_cached(
                         match c.load(k) {
                             CacheLookup::Hit(m) => {
                                 cache_hits.fetch_add(1, Ordering::Relaxed);
+                                registry::SWEEP_CACHE_HITS.inc();
                                 outcome = Some(Ok(m));
                             }
                             CacheLookup::Failed { error, attempts }
@@ -435,6 +444,7 @@ pub fn run_cells_cached(
                                 // persisted error instead of re-executing
                                 // forever.
                                 failed_hits.fetch_add(1, Ordering::Relaxed);
+                                registry::SWEEP_CACHE_FAILED_HITS.inc();
                                 outcome = Some(Err(format!(
                                     "persistent failure ({attempts} attempts): {error}"
                                 )));
@@ -444,18 +454,25 @@ pub fn run_cells_cached(
                             }
                             CacheLookup::Corrupt(why) => {
                                 corrupt_entries.fetch_add(1, Ordering::Relaxed);
-                                eprintln!(
-                                    "[sweep] warning: corrupt cache entry for cell {} \
+                                registry::SWEEP_CACHE_CORRUPT.inc();
+                                log_warn!(
+                                    "[sweep] corrupt cache entry for cell {} \
                                      ({why}); re-executing",
                                     cell.index
                                 );
                             }
-                            CacheLookup::Miss => {}
+                            CacheLookup::Miss => {
+                                registry::SWEEP_CACHE_MISSES.inc();
+                            }
                         }
                     }
                     let outcome = outcome.unwrap_or_else(|| {
                         executed.fetch_add(1, Ordering::Relaxed);
+                        registry::SWEEP_CELLS_EXECUTED.inc();
+                        let t0 = Instant::now();
                         let out = run_cell(&cell.cfg, streaming);
+                        registry::SWEEP_CELL_WALL_MS
+                            .observe_ms(t0.elapsed().as_secs_f64() * 1e3);
                         if let (Some(c), Some(k)) = (cache, key.as_deref()) {
                             let stored = match &out {
                                 Ok(m) => c.store(k, &cell.labels, m),
@@ -464,7 +481,7 @@ pub fn run_cells_cached(
                                 }
                             };
                             if let Err(e) = stored {
-                                eprintln!("[sweep] warning: {e}");
+                                log_warn!("[sweep] {e}");
                             }
                         }
                         out
@@ -475,6 +492,7 @@ pub fn run_cells_cached(
                         outcome,
                     };
                     *slots[i].lock().expect("slot lock") = Some(result);
+                    busy.fetch_sub(1, Ordering::Relaxed);
                 }
             });
         }

@@ -1,0 +1,183 @@
+//! ISSUE tentpole (non-negotiable invariant): turning the flight
+//! recorder on must not change a single output byte. For every config in
+//! a small parity grid — sequential, pipelined, classes-bearing, and a
+//! streaming-metrics run — the traced run's report serializes to exactly
+//! the bytes of the untraced run, cache keys are untouched, and sweep
+//! summaries computed before and after traced executions agree.
+//!
+//! The invariant is structural (the `Disabled` recorder is a no-op and
+//! an `Active` one only copies values the simulator already computed,
+//! never drawing from its RNG streams or scheduling events), but this
+//! test is the lock: any future hook that perturbs simulation state
+//! diverges the bytes here.
+
+use dsd::config::{ClassSpec, ClassesConfig, SimConfig};
+use dsd::metrics::SloSpec;
+use dsd::scenario::ArrivalProcess;
+use dsd::sim::Simulator;
+use dsd::specdec::ExecutionMode;
+
+fn base_cfg(seed: u64) -> SimConfig {
+    SimConfig::builder()
+        .seed(seed)
+        .targets(2)
+        .drafters(10)
+        .requests(30)
+        .rate_per_s(40.0)
+        .rtt_ms(12.0)
+        .build()
+}
+
+fn two_tier_classes() -> ClassesConfig {
+    ClassesConfig {
+        name: "two_tier".into(),
+        tiers: vec![
+            ClassSpec {
+                name: "interactive".into(),
+                arrivals: ArrivalProcess::Constant { rate_per_s: 12.0 },
+                slo: SloSpec::INTERACTIVE,
+            },
+            ClassSpec {
+                name: "batch".into(),
+                arrivals: ArrivalProcess::Constant { rate_per_s: 8.0 },
+                slo: SloSpec::RELAXED,
+            },
+        ],
+        priority_admission: true,
+        defer_batch_threshold: None,
+    }
+}
+
+/// The parity grid: ≥4 configs, including one pipelined and one
+/// classes-bearing (each exercises recorder hooks the others don't).
+fn parity_grid() -> Vec<(&'static str, SimConfig)> {
+    vec![
+        ("sequential", base_cfg(7)),
+        (
+            "pipelined",
+            SimConfig::builder()
+                .seed(7)
+                .targets(2)
+                .drafters(10)
+                .requests(30)
+                .rate_per_s(40.0)
+                .rtt_ms(12.0)
+                .execution(ExecutionMode::Pipelined)
+                .build(),
+        ),
+        (
+            "classes",
+            SimConfig::builder()
+                .seed(11)
+                .targets(2)
+                .drafters(10)
+                .requests(30)
+                .rtt_ms(12.0)
+                .classes(two_tier_classes())
+                .build(),
+        ),
+        ("high-rtt", {
+            let mut c = base_cfg(3);
+            c.network.rtt_ms = 60.0;
+            c
+        }),
+    ]
+}
+
+#[test]
+fn traced_full_reports_are_byte_identical_to_untraced() {
+    for (name, cfg) in parity_grid() {
+        let plain = Simulator::try_new(cfg.clone())
+            .unwrap()
+            .try_run()
+            .unwrap();
+        let (traced, trace) = Simulator::try_new(cfg.clone())
+            .unwrap()
+            .try_run_traced()
+            .unwrap();
+        assert!(
+            !trace.spans.is_empty(),
+            "{name}: recorder was on but captured nothing"
+        );
+        assert_eq!(
+            plain.to_json().to_string_pretty(),
+            traced.to_json().to_string_pretty(),
+            "{name}: JSON report diverged under tracing"
+        );
+        assert_eq!(
+            plain.summary(),
+            traced.summary(),
+            "{name}: pretty summary diverged under tracing"
+        );
+    }
+}
+
+#[test]
+fn traced_streaming_reports_are_byte_identical_to_untraced() {
+    for (name, cfg) in parity_grid() {
+        let plain = Simulator::try_new(cfg.clone())
+            .unwrap()
+            .try_run_streaming()
+            .unwrap();
+        let (traced, trace) = Simulator::try_new(cfg.clone())
+            .unwrap()
+            .try_run_streaming_traced()
+            .unwrap();
+        assert!(!trace.spans.is_empty(), "{name}: empty streaming trace");
+        assert_eq!(
+            plain.to_json().to_string_pretty(),
+            traced.to_json().to_string_pretty(),
+            "{name}: streaming JSON report diverged under tracing"
+        );
+        assert_eq!(
+            plain.summary(),
+            traced.summary(),
+            "{name}: streaming summary diverged under tracing"
+        );
+    }
+}
+
+#[test]
+fn cache_keys_and_sweep_summaries_ignore_tracing() {
+    for (name, cfg) in parity_grid() {
+        for streaming in [false, true] {
+            let before = dsd::sweep::cell_key(&cfg, streaming);
+            // A traced run between two keyings must not shift the key
+            // (the recorder never touches the config or any global the
+            // keyer reads).
+            let _ = Simulator::try_new(cfg.clone())
+                .unwrap()
+                .try_run_traced()
+                .unwrap();
+            assert_eq!(
+                before,
+                dsd::sweep::cell_key(&cfg, streaming),
+                "{name}: cell key shifted across a traced run"
+            );
+        }
+    }
+    // Same lock at the sweep-summary level: expand a grid, summarize,
+    // run traced simulations of every cell's config, summarize again.
+    let mut grid = dsd::sweep::SweepGrid::new(base_cfg(1));
+    grid.rtt_ms = vec![5.0, 40.0];
+    grid.seeds = vec![1, 2];
+    let cells = grid.expand().unwrap();
+    let summarize = || {
+        let results = dsd::sweep::run_cells(&cells, false, 2);
+        dsd::sweep::SweepSummary::new(results, false)
+            .to_json()
+            .to_string_pretty()
+    };
+    let before = summarize();
+    for cell in &cells {
+        let _ = Simulator::try_new(cell.cfg.clone())
+            .unwrap()
+            .try_run_traced()
+            .unwrap();
+    }
+    assert_eq!(
+        before,
+        summarize(),
+        "sweep summary bytes shifted across traced runs"
+    );
+}

@@ -1,0 +1,211 @@
+//! ISSUE tentpole acceptance: a `--trace-out` file is (1) well-formed
+//! Chrome trace-event JSON whose spans never overlap within a device
+//! track, and (2) a *lossless* record — the spans reconstruct, bit for
+//! bit, the per-phase latency totals the metrics sinks reported
+//! (network mean, queue mean, and every request's e2e), across the file
+//! write/parse round trip.
+
+use dsd::config::SimConfig;
+use dsd::sim::Simulator;
+use dsd::specdec::ExecutionMode;
+use dsd::util::json::Json;
+
+fn cfg(seed: u64, mode: ExecutionMode) -> SimConfig {
+    SimConfig::builder()
+        .seed(seed)
+        .targets(2)
+        .drafters(10)
+        .requests(30)
+        .rate_per_s(40.0)
+        .rtt_ms(12.0)
+        .execution(mode)
+        .build()
+}
+
+/// Run traced, round-trip the trace through a real file, return
+/// `(report, parsed trace document)`.
+fn traced_doc(
+    c: SimConfig,
+    tag: &str,
+) -> (dsd::metrics::SimReport, Json) {
+    let (report, trace) = Simulator::try_new(c).unwrap().try_run_traced().unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "dsd-obs-trace-{tag}-{}.trace.json",
+        std::process::id()
+    ));
+    let path_s = path.to_str().unwrap().to_string();
+    trace.write_chrome_trace(&path_s).unwrap();
+    let doc = dsd::obs::trace::read_chrome_trace(&path_s).unwrap();
+    let _ = std::fs::remove_file(&path);
+    (report, doc)
+}
+
+fn events(doc: &Json) -> &[Json] {
+    doc.get("traceEvents").unwrap().as_arr().unwrap()
+}
+
+#[test]
+fn every_event_carries_the_required_fields() {
+    let (_, doc) = traced_doc(cfg(5, ExecutionMode::Sequential), "schema");
+    let evs = events(&doc);
+    assert!(evs.len() > 20, "suspiciously small trace: {} events", evs.len());
+    for ev in evs {
+        for key in ["ph", "ts", "pid", "tid", "name"] {
+            assert!(ev.get(key).is_some(), "event missing '{key}': {ev:?}");
+        }
+    }
+}
+
+#[test]
+fn device_track_spans_nest_without_overlap() {
+    let (_, doc) = traced_doc(cfg(5, ExecutionMode::Sequential), "overlap");
+    // Group "X" complete events by tid; within a track, sorted by start,
+    // each span must end (within float dust) before the next begins —
+    // a device executes one task at a time.
+    let mut by_tid: std::collections::HashMap<u64, Vec<(f64, f64)>> =
+        std::collections::HashMap::new();
+    for ev in events(&doc) {
+        if ev.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let tid = ev.get("tid").and_then(Json::as_u64).unwrap();
+        let ts = ev.get("ts").and_then(Json::as_f64_or_nan).unwrap();
+        let dur = ev.get("dur").and_then(Json::as_f64_or_nan).unwrap();
+        by_tid.entry(tid).or_default().push((ts, dur));
+    }
+    assert!(!by_tid.is_empty(), "no device spans recorded");
+    for (tid, spans) in &mut by_tid {
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in spans.windows(2) {
+            let (t0, d0) = w[0];
+            let (t1, _) = w[1];
+            assert!(
+                t1 >= t0 + d0 - 1e-6,
+                "tid {tid}: span at {t1}µs starts inside span [{t0}, {}]µs",
+                t0 + d0
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_reconstructs_sink_latency_totals_bit_for_bit() {
+    for (tag, mode) in [
+        ("seq", ExecutionMode::Sequential),
+        ("pipe", ExecutionMode::Pipelined),
+    ] {
+        let (report, doc) = traced_doc(cfg(9, mode), tag);
+        let evs = events(&doc);
+
+        // Network mean: flat sum over net spans in file order — the
+        // recorder folded durations in the simulator's exact link_delay
+        // call order, and `args.dur_ms` round-trips the f64 losslessly.
+        let (mut net_sum, mut net_n) = (0.0f64, 0u64);
+        for ev in evs {
+            if ev.get("ph").and_then(Json::as_str) == Some("b")
+                && ev.get("cat").and_then(Json::as_str) == Some("net")
+            {
+                net_sum += ev.path(&["args", "dur_ms"]).and_then(Json::as_f64_or_nan).unwrap();
+                net_n += 1;
+            }
+        }
+        assert!(net_n > 0, "{tag}: no net spans");
+        let net_mean = net_sum / net_n as f64;
+        assert_eq!(
+            net_mean.to_bits(),
+            report.system.mean_net_delay_ms.to_bits(),
+            "{tag}: trace net mean {} != report {}",
+            net_mean,
+            report.system.mean_net_delay_ms
+        );
+
+        // Queue mean: replicate the simulator's two-level summation —
+        // batch-local sums (spans sharing args.batch, contiguous in file
+        // order) folded into the global total batch by batch.
+        let (mut q_total, mut q_n) = (0.0f64, 0u64);
+        let mut cur: Option<u64> = None;
+        let mut dsum = 0.0f64;
+        for ev in evs {
+            if ev.get("ph").and_then(Json::as_str) != Some("b")
+                || ev.get("cat").and_then(Json::as_str) != Some("queue")
+            {
+                continue;
+            }
+            let b = ev.path(&["args", "batch"]).and_then(Json::as_u64).unwrap();
+            if cur != Some(b) {
+                if cur.is_some() {
+                    q_total += dsum;
+                }
+                dsum = 0.0;
+                cur = Some(b);
+            }
+            dsum += ev.path(&["args", "dur_ms"]).and_then(Json::as_f64_or_nan).unwrap();
+            q_n += 1;
+        }
+        if cur.is_some() {
+            q_total += dsum;
+        }
+        let q_mean = if q_n == 0 { 0.0 } else { q_total / q_n as f64 };
+        assert_eq!(
+            q_mean.to_bits(),
+            report.system.mean_queue_delay_ms.to_bits(),
+            "{tag}: trace queue mean {} != report {}",
+            q_mean,
+            report.system.mean_queue_delay_ms
+        );
+
+        // Per-request e2e: the lifetime span's duration is the exact
+        // `now - arrival_ms` expression the report records.
+        let mut lifetimes: std::collections::HashMap<u64, f64> =
+            std::collections::HashMap::new();
+        for ev in evs {
+            if ev.get("ph").and_then(Json::as_str) == Some("b")
+                && ev.get("cat").and_then(Json::as_str) == Some("req")
+            {
+                let req = ev.path(&["args", "req"]).and_then(Json::as_u64).unwrap();
+                let dur =
+                    ev.path(&["args", "dur_ms"]).and_then(Json::as_f64_or_nan).unwrap();
+                lifetimes.insert(req, dur);
+            }
+        }
+        assert_eq!(lifetimes.len(), report.requests.len(), "{tag}");
+        for r in &report.requests {
+            let traced = lifetimes[&(r.id as u64)];
+            assert_eq!(
+                traced.to_bits(),
+                r.e2e_ms.to_bits(),
+                "{tag}: request {} trace e2e {} != report {}",
+                r.id,
+                traced,
+                r.e2e_ms
+            );
+        }
+
+        // And the summarizer accepts the file-form document.
+        let rendered = dsd::obs::trace::summarize_chrome_trace(&doc, 3).unwrap();
+        assert!(rendered.contains("per-phase latency breakdown"));
+    }
+}
+
+#[test]
+fn pipelined_runs_record_inflight_phases_and_markers() {
+    let (_, doc) = traced_doc(cfg(13, ExecutionMode::Pipelined), "markers");
+    let evs = events(&doc);
+    let names: std::collections::HashSet<&str> = evs
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    assert!(
+        names.contains("spec-draft"),
+        "pipelined trace carries no speculative-draft markers: {names:?}"
+    );
+    assert!(
+        evs.iter()
+            .any(|e| e.get("ph").and_then(Json::as_str) == Some("i")),
+        "pipelined trace carries no instant events"
+    );
+    assert!(
+        names.contains("net:spec-uplink") || names.contains("held"),
+        "pipelined trace carries no inflight-phase spans: {names:?}"
+    );
+}

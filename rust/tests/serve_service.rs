@@ -4,6 +4,8 @@
 //! cached single-process run; malformed submissions must be rejected
 //! with named errors while the service keeps serving; cancellation,
 //! backpressure, and graceful drain must all answer by the protocol.
+//! The `stats` introspection message (ISSUE 10) must answer with the
+//! live metrics registry and per-job phase timings.
 
 use dsd::serve::{GridClient, GridService, JobState, ServeOptions};
 use dsd::sweep::{run_cells_cached, CellCache, SweepGrid, SweepSummary};
@@ -111,6 +113,52 @@ fn round_trip_submit_poll_fetch_is_byte_identical_to_cached_run() {
     client.shutdown_server().unwrap();
     service.join();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stats_snapshot_reports_registry_and_job_timings() {
+    use dsd::util::json::Json;
+    let service = start_service(None);
+    let addr = service.addr().to_string();
+    let mut client = GridClient::connect(&addr, 10_000).unwrap();
+
+    let job = client.submit_grid_text(grid_yaml(), None).unwrap();
+    let (state, ..) = client.wait(job, 20, 60_000).unwrap();
+    assert_eq!(state, JobState::Completed);
+
+    let stats = client.fetch_stats().unwrap();
+    // The registry is process-global and other tests in this binary bump
+    // the same counters concurrently — assert lower bounds, never exact
+    // values.
+    let counter = |name: &str| {
+        stats
+            .path(&["registry", "counters", name])
+            .and_then(Json::as_u64)
+            .unwrap_or_else(|| panic!("missing counter {name}: {}", stats.to_string_compact()))
+    };
+    assert!(counter("serve.jobs_accepted") >= 1);
+    assert!(counter("serve.jobs_completed") >= 1);
+    assert!(counter("serve.bytes_in") >= 1);
+    assert!(counter("serve.bytes_out") >= 1);
+    for section in ["gauges", "histograms"] {
+        assert!(stats.path(&["registry", section]).is_some(), "{section}");
+    }
+
+    // Our completed job appears in the phase timings with both phases
+    // stamped.
+    let jobs = stats.get("jobs").unwrap().as_arr().unwrap();
+    let mine = jobs
+        .iter()
+        .find(|j| j.get("job").and_then(Json::as_u64) == Some(job))
+        .expect("submitted job missing from stats.jobs");
+    assert_eq!(mine.get("state").and_then(Json::as_str), Some("completed"));
+    let queued = mine.get("queued_ms").and_then(Json::as_f64_or_nan).unwrap();
+    let run = mine.get("run_ms").and_then(Json::as_f64_or_nan).unwrap();
+    assert!(queued >= 0.0 && queued.is_finite(), "queued_ms {queued}");
+    assert!(run >= 0.0 && run.is_finite(), "run_ms {run}");
+
+    client.shutdown_server().unwrap();
+    service.join();
 }
 
 #[test]
